@@ -1,0 +1,78 @@
+//! Convergence comparison (paper Fig. 6 / Tables 1-2 proxy): train the
+//! same model under SGD (dense), RGC, and quantized RGC, and compare the
+//! final quality — the paper's claim is that all three converge alike.
+//!
+//! ```sh
+//! cargo run --release --example convergence            # mlp proxy
+//! cargo run --release --example convergence -- --task lm
+//! ```
+
+use redsync::config::{preset, TrainConfig};
+use redsync::coordinator::train;
+use redsync::simnet::iteration::Strategy;
+use redsync::util::argparse::Args;
+
+fn run(mut cfg: TrainConfig, strategy: Strategy) -> (String, f32, f32, u64) {
+    cfg.strategy = strategy;
+    let r = train(cfg).expect("run");
+    assert!(r.replicas_consistent);
+    (
+        strategy.label().to_string(),
+        r.final_loss,
+        r.final_eval.unwrap_or(f32::NAN),
+        r.bytes,
+    )
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::new("convergence", "SGD vs RGC vs quant-RGC convergence")
+        .opt("task", "mlp", "mlp (accuracy) or lm (perplexity proxy)")
+        .opt("steps", "", "override step count");
+    let parsed = args.parse(&argv).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+
+    let mut cfg = if parsed.get("task") == "lm" {
+        preset("fig6-lm").expect("preset")
+    } else {
+        preset("fig6-mlp").expect("preset")
+    };
+    if !parsed.get("steps").is_empty() {
+        cfg.steps = parsed.usize("steps");
+    }
+
+    println!(
+        "task {} ({} x{} workers, {} steps, density {})",
+        parsed.get("task"),
+        cfg.model,
+        cfg.world,
+        cfg.steps,
+        cfg.density
+    );
+    let metric_name = if parsed.get("task") == "lm" { "held-out loss" } else { "accuracy" };
+    println!("{:>10} {:>12} {:>14} {:>12}", "strategy", "final loss", metric_name, "traffic");
+
+    let mut rows = Vec::new();
+    for s in [Strategy::Dense, Strategy::Rgc, Strategy::QuantRgc] {
+        let (label, loss, eval, bytes) = run(cfg.clone(), s);
+        println!(
+            "{label:>10} {loss:>12.4} {eval:>14.4} {:>12}",
+            redsync::util::fmt_bytes(bytes as usize)
+        );
+        rows.push((label, loss, eval, bytes));
+    }
+
+    // the paper's claim: RGC quality within noise of SGD
+    let sgd_eval = rows[0].2;
+    for (label, _, eval, _) in &rows[1..] {
+        let delta = (eval - sgd_eval).abs();
+        println!("  {label} vs SGD: |Δ {metric_name}| = {delta:.4}");
+    }
+    println!(
+        "  traffic: RGC {:.1}x less, quant-RGC {:.1}x less than dense",
+        rows[0].3 as f64 / rows[1].3 as f64,
+        rows[0].3 as f64 / rows[2].3 as f64
+    );
+}

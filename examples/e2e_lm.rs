@@ -1,0 +1,85 @@
+//! End-to-end driver: full-stack training of a transformer language model
+//! on a synthetic Zipf-Markov corpus through all three layers —
+//! Pallas-kernel selection artifacts (L1), the jax train-step HLO (L2)
+//! executed via PJRT, and the Rust RGC coordinator (L3).
+//!
+//! Defaults to `lm_base` (~5.5M params) for a few hundred steps with
+//! warm-up, momentum correction and local clipping — the configuration of
+//! EXPERIMENTS.md §E2E.  Use `--model lm_med` / `--steps N` to scale up
+//! (build bigger artifacts with `python -m compile.aot --full`).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_lm -- --steps 300
+//! ```
+
+use redsync::config::{preset, TrainConfig};
+use redsync::coordinator::train;
+use redsync::simnet::iteration::Strategy;
+use redsync::util::argparse::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::new("e2e_lm", "end-to-end LM training driver")
+        .opt("model", "lm_base", "artifact model (lm_tiny/lm_small/lm_base/lm_med)")
+        .opt("steps", "300", "optimizer steps")
+        .opt("world", "4", "workers (power of two)")
+        .opt("density", "0.001", "compression density D")
+        .opt("strategy", "rgc", "dense|rgc|quant")
+        .opt("out", "", "write the loss curve as CSV to this path");
+    let parsed = args.parse(&argv).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+
+    let mut cfg: TrainConfig = preset("e2e-lm").expect("preset");
+    cfg.model = parsed.get("model").to_string();
+    cfg.steps = parsed.usize("steps");
+    cfg.world = parsed.usize("world");
+    cfg.density = parsed.f64("density");
+    cfg.strategy = match parsed.get("strategy") {
+        "dense" => Strategy::Dense,
+        "quant" => Strategy::QuantRgc,
+        _ => Strategy::Rgc,
+    };
+    cfg.eval_every = (cfg.steps / 10).max(1);
+    cfg.log_every = (cfg.steps / 50).max(1);
+
+    println!(
+        "e2e: {} x{} [{}] density {} for {} steps",
+        cfg.model,
+        cfg.world,
+        cfg.strategy.label(),
+        cfg.density,
+        cfg.steps
+    );
+    let report = train(cfg).unwrap_or_else(|e| {
+        eprintln!("run failed: {e}");
+        std::process::exit(1);
+    });
+
+    println!("\nloss curve (step, global mean train loss):");
+    for &(s, l) in &report.loss_curve {
+        println!("  {s:>6}  {l:.4}");
+    }
+    println!("\neval curve (step, held-out loss):");
+    for &(s, l) in &report.eval_curve {
+        println!("  {s:>6}  {l:.4}");
+    }
+    print!("\n{}", report.summary());
+
+    if !parsed.get("out").is_empty() {
+        let mut csv = String::from("step,train_loss\n");
+        for &(s, l) in &report.loss_curve {
+            csv.push_str(&format!("{s},{l}\n"));
+        }
+        std::fs::write(parsed.get("out"), csv).expect("write csv");
+        println!("wrote {}", parsed.get("out"));
+    }
+
+    // the run is only a success if training actually worked
+    assert!(report.replicas_consistent, "replica divergence");
+    let first = report.loss_curve.first().unwrap().1;
+    let last = report.loss_curve.last().unwrap().1;
+    assert!(last < first, "no learning: {first} -> {last}");
+    println!("\nOK: loss {first:.3} -> {last:.3}, replicas consistent");
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path for RedSync: L2 jax models + L1 Pallas kernels,
+AOT-lowered to HLO text artifacts consumed by the Rust coordinator.
+
+Nothing in this package is imported at runtime; see DESIGN.md.
+"""

@@ -1,0 +1,187 @@
+"""AOT compiler: lower every L2/L1 entry point to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the Rust coordinator loads the
+text via ``HloModuleProto::from_text_file`` and executes through PJRT.
+
+HLO text — not ``lowered.compile().serialize()`` and not a serialized
+HloModuleProto — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (the version behind the
+published ``xla`` 0.1.6 crate) rejects (``proto.id() <= INT_MAX``).  The
+text parser reassigns ids and round-trips cleanly.
+
+Artifacts are incremental: a source-tree hash is stored in the manifest
+and everything is skipped when unchanged (``--force`` overrides).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import kernels as K
+
+# Fusion-bucket sizes for the compression operators.  The Rust coordinator
+# pads each layer's residual up to the next bucket (mirroring the paper's
+# tensor fusion) so the artifact count stays bounded.
+BUCKETS = [1024, 16384, 65536, 262144, 1048576, 4194304]
+
+DEFAULT_MODELS = ["lm_tiny", "lm_small", "lm_base", "mlp_tiny", "mlp_small", "mlp_wide"]
+FULL_MODELS = DEFAULT_MODELS + ["lm_med", "lm_100m"]
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _source_hash() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        if "__pycache__" in root:
+            continue
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def lower_model(name, out_dir):
+    """Lower one model's train-step (and eval) functions; return manifest entry."""
+    if name.startswith("lm"):
+        cfg = M.LM_CONFIGS[name]
+        specs, in_specs = M.lm_param_specs(cfg), M.lm_input_specs(cfg)
+        step, evalf = M.lm_step_fn(cfg), M.lm_logits_loss_fn(cfg)
+        kind = "lm"
+    else:
+        cfg = M.MLP_CONFIGS[name]
+        specs, in_specs = M.mlp_param_specs(cfg), M.mlp_input_specs(cfg)
+        step, evalf = M.mlp_step_fn(cfg), M.mlp_logits_fn(cfg)
+        kind = "mlp"
+
+    args = [_spec(shape) for _, shape, _ in specs]
+    args += [_spec(shape, _DTYPES[dt]) for _, shape, dt in in_specs]
+
+    t0 = time.time()
+    step_file = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, step_file), "w") as f:
+        f.write(to_hlo_text(jax.jit(step).lower(*args)))
+
+    eval_args = args if kind == "lm" else args[: len(specs)] + [args[len(specs)]]
+    eval_file = f"{name}_eval.hlo.txt"
+    with open(os.path.join(out_dir, eval_file), "w") as f:
+        f.write(to_hlo_text(jax.jit(evalf).lower(*eval_args)))
+    dt = time.time() - t0
+
+    n_params = M.param_count(specs)
+    print(f"  {name}: {n_params:,} params, lowered in {dt:.1f}s", flush=True)
+    return {
+        "kind": kind,
+        "file": step_file,
+        "eval_file": eval_file,
+        "config": cfg,
+        "param_count": n_params,
+        "params": [
+            {"name": n, "shape": list(s), "init": init}
+            for n, s, init in specs
+        ],
+        "inputs": [
+            {"name": n, "shape": list(s), "dtype": dt_}
+            for n, s, dt_ in in_specs
+        ],
+        # step outputs: loss f32[1] followed by one grad per param, in order
+        "outputs": ["loss"] + [n for n, _, _ in specs],
+    }
+
+
+def lower_compress_ops(out_dir):
+    """Lower the per-bucket compression kernels; return manifest entries."""
+    ops = {}
+    j = K.NUM_THRESHOLDS
+    for n in BUCKETS:
+        x = _spec((n,))
+        one = _spec((1,))
+        files = {
+            "abs_stats": (K.abs_stats, [x]),
+            "threshold_count": (K.threshold_count, [x, _spec((j,))]),
+            "compress_mask": (K.compress_mask, [x, one, one]),
+            "sgd_update": (K.sgd_update, [x, x, one]),
+            "momentum_accum": (K.momentum_accum, [x, x, x, one, one]),
+        }
+        t0 = time.time()
+        for opname, (fn, specs) in files.items():
+            fname = f"{opname}_{n}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(to_hlo_text(jax.jit(fn).lower(*specs)))
+            ops.setdefault(opname, {"buckets": {}})["buckets"][str(n)] = fname
+        print(f"  compress ops @ {n}: lowered in {time.time()-t0:.1f}s", flush=True)
+    ops["threshold_count"]["num_thresholds"] = j
+    return ops
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--full", action="store_true", help="also build lm_med / lm_100m")
+    ap.add_argument("--force", action="store_true", help="rebuild even if unchanged")
+    ap.add_argument("--models", nargs="*", help="explicit model list override")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+
+    models = args.models or (FULL_MODELS if args.full else DEFAULT_MODELS)
+    src_hash = _source_hash()
+
+    if not args.force and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        have = set(old.get("models", {}))
+        if old.get("source_hash") == src_hash and set(models) <= have:
+            ok = all(
+                os.path.exists(os.path.join(out_dir, e["file"]))
+                for e in old["models"].values()
+            )
+            if ok:
+                print(f"artifacts up to date (hash {src_hash}); skipping")
+                return
+
+    print(f"lowering artifacts -> {out_dir} (source hash {src_hash})", flush=True)
+    manifest = {
+        "source_hash": src_hash,
+        "jax_version": jax.__version__,
+        "buckets": BUCKETS,
+        "models": {},
+        "compress_ops": {},
+    }
+    print("models:", flush=True)
+    for name in models:
+        manifest["models"][name] = lower_model(name, out_dir)
+    print("compression operators:", flush=True)
+    manifest["compress_ops"] = lower_compress_ops(out_dir)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

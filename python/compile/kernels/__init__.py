@@ -1,0 +1,12 @@
+"""L1 Pallas kernels (selection hot-spot + model-side fused ops)."""
+
+from .selection import (  # noqa: F401
+    DEFAULT_BLOCK,
+    NUM_THRESHOLDS,
+    abs_stats,
+    compress_mask,
+    fused_gelu,
+    momentum_accum,
+    sgd_update,
+    threshold_count,
+)

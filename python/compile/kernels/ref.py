@@ -1,0 +1,47 @@
+"""Pure-jnp correctness oracles for every L1 Pallas kernel.
+
+These define the semantics; ``python/tests/test_kernels.py`` sweeps shapes
+and dtypes with hypothesis and asserts allclose kernel-vs-oracle.
+"""
+
+import jax.numpy as jnp
+
+
+def abs_stats_ref(x):
+    a = jnp.abs(x)
+    return jnp.sum(a).reshape((1,)), jnp.max(a).reshape((1,))
+
+
+def threshold_count_ref(x, thresholds):
+    a = jnp.abs(x)
+    return jnp.sum(
+        (a[None, :] > thresholds[:, None]).astype(jnp.float32), axis=1
+    )
+
+
+def compress_mask_ref(x, threshold, sign_mode):
+    s = sign_mode[0]
+    thr = threshold[0]
+    key = jnp.where(s == 0.0, jnp.abs(x), s * x)
+    mask = (key > thr).astype(jnp.float32)
+    residual = x * (1.0 - mask)
+    sel_sum = jnp.sum(x * mask).reshape((1,))
+    sel_cnt = jnp.sum(mask).reshape((1,))
+    return mask, residual, sel_sum, sel_cnt
+
+
+def sgd_update_ref(w, g, lr):
+    return w - lr[0] * g
+
+
+def gelu_ref(x):
+    c = 0.7978845608028654
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def momentum_accum_ref(v, u, g, momentum, nesterov):
+    """Fused Alg. 4 momentum-correction accumulation (lines 11-19):
+    u' = m*u + g;  v' = v + u' + nesterov*g.  momentum=0 and nesterov=0
+    reduce to plain SGD accumulation v += g."""
+    un = momentum[0] * u + g
+    return v + un + nesterov[0] * g, un

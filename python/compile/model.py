@@ -1,0 +1,259 @@
+"""L2 jax models: the workloads RedSync trains.
+
+Each model exposes
+  - ``*_configs``      named size presets
+  - ``*_param_specs``  ordered (name, shape, init) list — the contract the
+                       Rust coordinator uses to allocate/initialize params
+  - ``*_step_fn``      pure fn(*params, inputs...) -> (loss, *grads) that
+                       aot.py lowers to a single HLO artifact
+
+The step functions are *stateless*: the optimizer, residual-gradient
+compression, synchronization and the weight update all live in the Rust
+L3 coordinator (that separation is the paper's system boundary — gradients
+come off the device, everything after is RedSync).
+
+The transformer MLP block routes through the Pallas ``fused_gelu`` kernel
+so an L1 kernel lowers into the model HLO as well as the compression ops.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_gelu
+
+# --------------------------------------------------------------------------
+# Transformer language model (decoder-only, pre-LN, learned positions)
+# --------------------------------------------------------------------------
+
+LM_CONFIGS = {
+    # unit tests / CI
+    "lm_tiny": dict(vocab=64, d_model=32, n_layers=1, n_heads=2, seq=16, batch=4),
+    # convergence experiments (thousands of steps feasible on 1 CPU core)
+    "lm_small": dict(vocab=512, d_model=128, n_layers=2, n_heads=4, seq=32, batch=8),
+    # e2e driver default (~5.5M params)
+    "lm_base": dict(vocab=4096, d_model=256, n_layers=4, n_heads=8, seq=64, batch=8),
+    # mid-scale e2e (~27M params)
+    "lm_med": dict(vocab=8192, d_model=512, n_layers=6, n_heads=8, seq=64, batch=4),
+    # 100M-class config (built with --full; see EXPERIMENTS.md for what the
+    # 1-core testbed can actually step through)
+    "lm_100m": dict(vocab=32768, d_model=768, n_layers=8, n_heads=12, seq=128, batch=4),
+}
+
+
+def lm_param_specs(cfg):
+    """Ordered parameter contract: (name, shape, init-spec)."""
+    v, d, l = cfg["vocab"], cfg["d_model"], cfg["n_layers"]
+    h = 4 * d
+    specs = [
+        ("embed", (v, d), {"kind": "normal", "std": 0.02}),
+        ("pos", (cfg["seq"], d), {"kind": "normal", "std": 0.01}),
+    ]
+    for i in range(l):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1.scale", (d,), {"kind": "ones"}),
+            (p + "ln1.bias", (d,), {"kind": "zeros"}),
+            (p + "attn.wq", (d, d), {"kind": "normal", "std": 0.02}),
+            (p + "attn.wk", (d, d), {"kind": "normal", "std": 0.02}),
+            (p + "attn.wv", (d, d), {"kind": "normal", "std": 0.02}),
+            (p + "attn.wo", (d, d), {"kind": "residual", "std": 0.02, "layers": l}),
+            (p + "ln2.scale", (d,), {"kind": "ones"}),
+            (p + "ln2.bias", (d,), {"kind": "zeros"}),
+            (p + "mlp.w1", (d, h), {"kind": "normal", "std": 0.02}),
+            (p + "mlp.b1", (h,), {"kind": "zeros"}),
+            (p + "mlp.w2", (h, d), {"kind": "residual", "std": 0.02, "layers": l}),
+            (p + "mlp.b2", (d,), {"kind": "zeros"}),
+        ]
+    specs += [
+        ("ln_f.scale", (d,), {"kind": "ones"}),
+        ("ln_f.bias", (d,), {"kind": "zeros"}),
+        ("head", (d, v), {"kind": "normal", "std": 0.02}),
+    ]
+    return specs
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _attention(x, wq, wk, wv, wo, n_heads):
+    b, s, d = x.shape
+    hd = d // n_heads
+
+    def split(t):
+        return t.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(x @ wq), split(x @ wk), split(x @ wv)
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    att = jnp.where(causal[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ wo
+
+
+def lm_loss(params, tokens, targets, cfg):
+    """Mean token cross-entropy of the decoder-only LM."""
+    specs = lm_param_specs(cfg)
+    p = {name: arr for (name, _, _), arr in zip(specs, params)}
+    l, nh = cfg["n_layers"], cfg["n_heads"]
+
+    x = p["embed"][tokens] + p["pos"][None, : tokens.shape[1]]
+    for i in range(l):
+        pre = f"layer{i}."
+        h = _layer_norm(x, p[pre + "ln1.scale"], p[pre + "ln1.bias"])
+        x = x + _attention(
+            h, p[pre + "attn.wq"], p[pre + "attn.wk"], p[pre + "attn.wv"],
+            p[pre + "attn.wo"], nh,
+        )
+        h = _layer_norm(x, p[pre + "ln2.scale"], p[pre + "ln2.bias"])
+        h = fused_gelu(h @ p[pre + "mlp.w1"] + p[pre + "mlp.b1"])
+        x = x + h @ p[pre + "mlp.w2"] + p[pre + "mlp.b2"]
+    x = _layer_norm(x, p["ln_f.scale"], p["ln_f.bias"])
+    logits = x @ p["head"]
+
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def lm_step_fn(cfg):
+    """fn(*params, tokens, targets) -> (loss, *grads), lowered by aot.py."""
+    n_params = len(lm_param_specs(cfg))
+
+    def step(*args):
+        params = list(args[:n_params])
+        tokens, targets = args[n_params], args[n_params + 1]
+        loss, grads = jax.value_and_grad(
+            lambda ps: lm_loss(ps, tokens, targets, cfg)
+        )(params)
+        return (loss.reshape((1,)), *grads)
+
+    return step
+
+
+def lm_input_specs(cfg):
+    b, s = cfg["batch"], cfg["seq"]
+    return [
+        ("tokens", (b, s), "i32"),
+        ("targets", (b, s), "i32"),
+    ]
+
+
+# --------------------------------------------------------------------------
+# MLP classifier — the fast proxy for the accuracy experiments (Fig 6,
+# Tables 1-2): thousands of optimizer steps per second on one core.
+# --------------------------------------------------------------------------
+
+MLP_CONFIGS = {
+    "mlp_tiny": dict(in_dim=16, hidden=32, depth=1, classes=4, batch=16),
+    "mlp_small": dict(in_dim=64, hidden=256, depth=2, classes=10, batch=64),
+    # wide variant: one large fc layer dominating the message-size mix the
+    # way VGG16's fc6 does — exercises the binary-search policy branch.
+    "mlp_wide": dict(in_dim=64, hidden=1024, depth=2, classes=10, batch=64),
+}
+
+
+def mlp_param_specs(cfg):
+    dims = [cfg["in_dim"]] + [cfg["hidden"]] * cfg["depth"] + [cfg["classes"]]
+    specs = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        specs.append((f"fc{i}.w", (a, b), {"kind": "he", "fan_in": a}))
+        specs.append((f"fc{i}.b", (b,), {"kind": "zeros"}))
+    return specs
+
+
+def mlp_loss(params, x, y, cfg):
+    n_fc = cfg["depth"] + 1
+    h = x
+    for i in range(n_fc):
+        w, b = params[2 * i], params[2 * i + 1]
+        h = h @ w + b
+        if i < n_fc - 1:
+            h = fused_gelu(h)
+    logz = jax.scipy.special.logsumexp(h, axis=-1)
+    gold = jnp.take_along_axis(h, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def mlp_step_fn(cfg):
+    n_params = len(mlp_param_specs(cfg))
+
+    def step(*args):
+        params = list(args[:n_params])
+        x, y = args[n_params], args[n_params + 1]
+        loss, grads = jax.value_and_grad(
+            lambda ps: mlp_loss(ps, x, y, cfg)
+        )(params)
+        return (loss.reshape((1,)), *grads)
+
+    return step
+
+
+def mlp_input_specs(cfg):
+    return [
+        ("x", (cfg["batch"], cfg["in_dim"]), "f32"),
+        ("y", (cfg["batch"],), "i32"),
+    ]
+
+
+# --------------------------------------------------------------------------
+# Inference helpers (accuracy eval artifacts): logits only, no grads.
+# --------------------------------------------------------------------------
+
+def mlp_logits_fn(cfg):
+    n_params = len(mlp_param_specs(cfg))
+    n_fc = cfg["depth"] + 1
+
+    def fwd(*args):
+        params = list(args[:n_params])
+        x = args[n_params]
+        h = x
+        for i in range(n_fc):
+            w, b = params[2 * i], params[2 * i + 1]
+            h = h @ w + b
+            if i < n_fc - 1:
+                h = fused_gelu(h)
+        return (h,)
+
+    return fwd
+
+
+def lm_logits_loss_fn(cfg):
+    """Eval-only artifact: (loss,) on a held-out batch."""
+    n_params = len(lm_param_specs(cfg))
+
+    def fwd(*args):
+        params = list(args[:n_params])
+        tokens, targets = args[n_params], args[n_params + 1]
+        return (lm_loss(params, tokens, targets, cfg).reshape((1,)),)
+
+    return fwd
+
+
+def param_count(specs):
+    n = 0
+    for _, shape, _ in specs:
+        size = 1
+        for s in shape:
+            size *= s
+        n += size
+    return n
+
+
+@functools.lru_cache(maxsize=None)
+def summary():
+    lines = []
+    for name, cfg in LM_CONFIGS.items():
+        lines.append(f"{name}: {param_count(lm_param_specs(cfg)):,} params")
+    for name, cfg in MLP_CONFIGS.items():
+        lines.append(f"{name}: {param_count(mlp_param_specs(cfg)):,} params")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(summary())

@@ -1,0 +1,101 @@
+"""AOT pipeline tests: manifest integrity + HLO text loadability."""
+
+import json
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_models_have_files():
+    m = manifest()
+    assert m["models"], "no models in manifest"
+    for name, entry in m["models"].items():
+        assert os.path.exists(os.path.join(ART, entry["file"])), name
+        assert os.path.exists(os.path.join(ART, entry["eval_file"])), name
+
+
+def test_manifest_param_specs_consistent():
+    from compile import model as M
+
+    m = manifest()
+    for name, entry in m["models"].items():
+        specs = (
+            M.lm_param_specs(entry["config"])
+            if entry["kind"] == "lm"
+            else M.mlp_param_specs(entry["config"])
+        )
+        assert [p["name"] for p in entry["params"]] == [n for n, _, _ in specs]
+        assert entry["param_count"] == M.param_count(specs)
+        assert entry["outputs"][0] == "loss"
+        assert entry["outputs"][1:] == [p["name"] for p in entry["params"]]
+
+
+def test_manifest_compress_buckets_complete():
+    m = manifest()
+    for op in ["abs_stats", "threshold_count", "compress_mask", "sgd_update"]:
+        assert op in m["compress_ops"]
+        buckets = m["compress_ops"][op]["buckets"]
+        assert set(map(int, buckets)) == set(m["buckets"])
+        for f in buckets.values():
+            assert os.path.exists(os.path.join(ART, f)), f
+
+
+def test_hlo_text_is_parseable_hlo():
+    """Every artifact must start with an HloModule header (text format)."""
+    m = manifest()
+    files = [e["file"] for e in m["models"].values()]
+    for op in m["compress_ops"].values():
+        files += list(op["buckets"].values())
+    for f in files:
+        with open(os.path.join(ART, f)) as fh:
+            head = fh.read(64)
+        assert head.startswith("HloModule"), f
+
+
+def test_hlo_entry_has_expected_arity():
+    """lm_tiny step: n_params + 2 inputs, 1 + n_params outputs (tuple)."""
+    m = manifest()
+    entry = m["models"].get("lm_tiny")
+    if entry is None:
+        pytest.skip("lm_tiny not built")
+    n = len(entry["params"])
+    with open(os.path.join(ART, entry["file"])) as fh:
+        text = fh.read()
+    # count parameter(k) declarations in ENTRY computation
+    import re
+
+    entry_sig = re.search(r"ENTRY .*?\{(.*?)\n\}", text, re.S)
+    assert entry_sig is not None
+    params = re.findall(r"parameter\((\d+)\)", entry_sig.group(1))
+    assert len(params) == n + 2
+
+
+def test_aot_is_incremental():
+    """Second run with unchanged sources must skip (prints 'up to date')."""
+    env = dict(os.environ)
+    out = subprocess.run(
+        [sys.executable, "-m", "compile.aot"],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr
+    assert "up to date" in out.stdout, out.stdout

@@ -1,0 +1,250 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Each Pallas kernel (interpret mode) is checked against the pure-jnp oracle
+in ``kernels/ref.py`` over hypothesis-driven shape/value sweeps.
+"""
+
+import sys, os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref as R
+
+SIZES = [128, 1024, 4096, 65536, 262144]
+
+
+def rnd(n, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(n).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------- abs_stats
+
+@pytest.mark.parametrize("n", SIZES)
+def test_abs_stats_matches_ref(n):
+    x = rnd(n, seed=n)
+    s, m = K.abs_stats(x)
+    rs, rm = R.abs_stats_ref(x)
+    np.testing.assert_allclose(s, rs, rtol=1e-5)
+    np.testing.assert_allclose(m, rm, rtol=1e-6)
+
+
+def test_abs_stats_all_negative():
+    x = -jnp.abs(rnd(2048, seed=3)) - 0.5
+    s, m = K.abs_stats(x)
+    assert float(m[0]) > 0.5
+    np.testing.assert_allclose(s, R.abs_stats_ref(x)[0], rtol=1e-5)
+
+
+def test_abs_stats_zeros():
+    x = jnp.zeros((1024,), jnp.float32)
+    s, m = K.abs_stats(x)
+    assert float(s[0]) == 0.0 and float(m[0]) == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    logn=st.integers(min_value=5, max_value=14),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.floats(min_value=1e-3, max_value=1e3),
+)
+def test_abs_stats_hypothesis(logn, seed, scale):
+    x = rnd(2**logn, seed=seed, scale=scale)
+    s, m = K.abs_stats(x)
+    rs, rm = R.abs_stats_ref(x)
+    np.testing.assert_allclose(s, rs, rtol=2e-5)
+    np.testing.assert_allclose(m, rm, rtol=1e-6)
+
+
+# ---------------------------------------------------------- threshold_count
+
+@pytest.mark.parametrize("n", SIZES)
+def test_threshold_count_matches_ref(n):
+    x = rnd(n, seed=n + 1)
+    t = jnp.linspace(0.0, 3.0, K.NUM_THRESHOLDS).astype(jnp.float32)
+    c = K.threshold_count(x, t)
+    rc = R.threshold_count_ref(x, t)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(rc))
+
+
+def test_threshold_count_monotone_nonincreasing():
+    x = rnd(65536, seed=7)
+    t = jnp.linspace(0.0, 4.0, K.NUM_THRESHOLDS).astype(jnp.float32)
+    c = np.asarray(K.threshold_count(x, t))
+    assert (np.diff(c) <= 0).all(), "counts must not increase with threshold"
+
+
+def test_threshold_count_zero_threshold_counts_nonzeros():
+    x = jnp.concatenate([jnp.zeros((512,)), jnp.ones((512,))]).astype(jnp.float32)
+    t = jnp.zeros((K.NUM_THRESHOLDS,), jnp.float32)
+    c = np.asarray(K.threshold_count(x, t))
+    assert (c == 512).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    logn=st.integers(min_value=7, max_value=14),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_threshold_count_hypothesis(logn, seed, ):
+    x = rnd(2**logn, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    t = jnp.asarray(np.sort(rng.uniform(0, 3, K.NUM_THRESHOLDS)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(K.threshold_count(x, t)),
+        np.asarray(R.threshold_count_ref(x, t)),
+    )
+
+
+# ------------------------------------------------------------ compress_mask
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("mode", [0.0, 1.0, -1.0])
+def test_compress_mask_matches_ref(n, mode):
+    x = rnd(n, seed=n + 17)
+    thr = jnp.asarray([0.8], jnp.float32)
+    s = jnp.asarray([mode], jnp.float32)
+    out = K.compress_mask(x, thr, s)
+    ref = R.compress_mask_ref(x, thr, s)
+    for a, b in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_compress_mask_residual_conservation():
+    """mask*x + residual == x exactly (selection moves mass, never loses it)."""
+    x = rnd(65536, seed=23)
+    thr = jnp.asarray([0.5], jnp.float32)
+    s = jnp.asarray([0.0], jnp.float32)
+    mask, res, _, _ = K.compress_mask(x, thr, s)
+    np.testing.assert_array_equal(
+        np.asarray(mask * x + res), np.asarray(x)
+    )
+
+
+def test_compress_mask_sign_modes_partition():
+    """top-k mode selects only positives, bottom-k only negatives."""
+    x = rnd(4096, seed=5)
+    thr = jnp.asarray([0.3], jnp.float32)
+    mp, _, sp, cp = K.compress_mask(x, thr, jnp.asarray([1.0], jnp.float32))
+    mn, _, sn, cn = K.compress_mask(x, thr, jnp.asarray([-1.0], jnp.float32))
+    xs = np.asarray(x)
+    assert (xs[np.asarray(mp) > 0] > 0).all()
+    assert (xs[np.asarray(mn) > 0] < 0).all()
+    assert float(sp[0]) > 0 and float(sn[0]) < 0
+    # quant means have the right sign
+    if float(cp[0]) > 0:
+        assert float(sp[0]) / float(cp[0]) > float(thr[0])
+    if float(cn[0]) > 0:
+        assert float(sn[0]) / float(cn[0]) < -float(thr[0])
+
+
+def test_compress_mask_huge_threshold_selects_nothing():
+    x = rnd(1024, seed=9)
+    thr = jnp.asarray([1e9], jnp.float32)
+    mask, res, ssum, scnt = K.compress_mask(x, thr, jnp.asarray([0.0], jnp.float32))
+    assert float(scnt[0]) == 0.0 and float(ssum[0]) == 0.0
+    np.testing.assert_array_equal(np.asarray(res), np.asarray(x))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    logn=st.integers(min_value=7, max_value=13),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    thr=st.floats(min_value=0.0, max_value=3.0),
+    mode=st.sampled_from([0.0, 1.0, -1.0]),
+)
+def test_compress_mask_hypothesis(logn, seed, thr, mode):
+    x = rnd(2**logn, seed=seed)
+    t = jnp.asarray([thr], jnp.float32)
+    s = jnp.asarray([mode], jnp.float32)
+    out = K.compress_mask(x, t, s)
+    ref = R.compress_mask_ref(x, t, s)
+    for a, b in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------- sgd_update
+
+@pytest.mark.parametrize("n", SIZES)
+def test_sgd_update_matches_ref(n):
+    w, g = rnd(n, seed=1), rnd(n, seed=2)
+    lr = jnp.asarray([0.05], jnp.float32)
+    # rtol/atol: the pallas lowering fuses w - lr*g into an FMA while the
+    # jnp oracle rounds the product first; near-cancellation elements differ
+    # in the last ulp.
+    np.testing.assert_allclose(
+        np.asarray(K.sgd_update(w, g, lr)),
+        np.asarray(R.sgd_update_ref(w, g, lr)),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+def test_sgd_update_zero_lr_is_identity():
+    w, g = rnd(2048, seed=4), rnd(2048, seed=6)
+    out = K.sgd_update(w, g, jnp.asarray([0.0], jnp.float32))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(w))
+
+
+# --------------------------------------------------------------- fused_gelu
+
+@pytest.mark.parametrize("shape", [(128,), (8, 64), (4, 16, 32)])
+def test_gelu_matches_ref(shape):
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal(shape).astype(np.float32) * 2)
+    np.testing.assert_allclose(
+        np.asarray(K.fused_gelu(x)), np.asarray(R.gelu_ref(x)), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_gelu_grad_matches_numeric():
+    x = jnp.asarray(np.linspace(-3, 3, 64, dtype=np.float32))
+    g = jax.grad(lambda v: jnp.sum(K.fused_gelu(v)))(x)
+    eps = 1e-3
+    num = (np.asarray(R.gelu_ref(x + eps)) - np.asarray(R.gelu_ref(x - eps))) / (2 * eps)
+    np.testing.assert_allclose(np.asarray(g), num, rtol=2e-3, atol=2e-3)
+
+
+# ----------------------------------------------------------- momentum_accum
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("m,nv", [(0.0, 0.0), (0.9, 0.0), (0.9, 1.0)])
+def test_momentum_accum_matches_ref(n, m, nv):
+    v, u, g = rnd(n, seed=21), rnd(n, seed=22), rnd(n, seed=23)
+    mm = jnp.asarray([m], jnp.float32)
+    nn = jnp.asarray([nv], jnp.float32)
+    got_v, got_u = K.momentum_accum(v, u, g, mm, nn)
+    ref_v, ref_u = R.momentum_accum_ref(v, u, g, mm, nn)
+    np.testing.assert_allclose(np.asarray(got_v), np.asarray(ref_v), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_u), np.asarray(ref_u), rtol=1e-5, atol=1e-6)
+
+
+def test_momentum_accum_sgd_degenerates_to_plain_sum():
+    v, g = rnd(1024, seed=31), rnd(1024, seed=32)
+    u = jnp.zeros_like(v)
+    zero = jnp.asarray([0.0], jnp.float32)
+    got_v, got_u = K.momentum_accum(v, u, g, zero, zero)
+    np.testing.assert_allclose(np.asarray(got_v), np.asarray(v + g), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got_u), np.asarray(g))
+
+
+def test_momentum_accum_velocity_recurrence():
+    # two fused steps == the hand-rolled u recurrence
+    v = jnp.zeros((512,), jnp.float32)
+    u = jnp.zeros_like(v)
+    g1, g2 = rnd(512, seed=41), rnd(512, seed=42)
+    m = jnp.asarray([0.9], jnp.float32)
+    z = jnp.asarray([0.0], jnp.float32)
+    v, u = K.momentum_accum(v, u, g1, m, z)
+    v, u = K.momentum_accum(v, u, g2, m, z)
+    np.testing.assert_allclose(np.asarray(u), np.asarray(0.9 * g1 + g2), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(v), np.asarray(g1 + 0.9 * g1 + g2), rtol=1e-5, atol=1e-6
+    )

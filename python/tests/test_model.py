@@ -1,0 +1,170 @@
+"""L2 model tests: shapes, loss sanity, grad flow, trainability."""
+
+import sys, os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def init_params(specs, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _, shape, init in specs:
+        if init["kind"] == "zeros":
+            arr = np.zeros(shape, np.float32)
+        elif init["kind"] == "ones":
+            arr = np.ones(shape, np.float32)
+        elif init["kind"] == "he":
+            arr = rng.standard_normal(shape).astype(np.float32) * np.sqrt(
+                2.0 / init["fan_in"]
+            )
+        elif init["kind"] == "residual":
+            arr = rng.standard_normal(shape).astype(np.float32) * (
+                init["std"] / np.sqrt(2.0 * init["layers"])
+            )
+        else:
+            arr = rng.standard_normal(shape).astype(np.float32) * init["std"]
+        out.append(jnp.asarray(arr))
+    return out
+
+
+# ------------------------------------------------------------------- LM
+
+CFG = M.LM_CONFIGS["lm_tiny"]
+
+
+def lm_batch(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg["vocab"], (cfg["batch"], cfg["seq"]))
+    tgts = rng.integers(0, cfg["vocab"], (cfg["batch"], cfg["seq"]))
+    return jnp.asarray(toks, jnp.int32), jnp.asarray(tgts, jnp.int32)
+
+
+def test_lm_loss_near_uniform_at_init():
+    """With tiny init the LM should predict ~uniform: loss ~= ln(vocab)."""
+    params = init_params(M.lm_param_specs(CFG))
+    toks, tgts = lm_batch(CFG)
+    loss = M.lm_loss(params, toks, tgts, CFG)
+    assert abs(float(loss) - np.log(CFG["vocab"])) < 0.5
+
+
+def test_lm_step_output_arity_and_shapes():
+    specs = M.lm_param_specs(CFG)
+    params = init_params(specs)
+    toks, tgts = lm_batch(CFG)
+    out = M.lm_step_fn(CFG)(*params, toks, tgts)
+    assert len(out) == 1 + len(specs)
+    assert out[0].shape == (1,)
+    for (name, shape, _), g in zip(specs, out[1:]):
+        assert g.shape == tuple(shape), name
+
+
+def test_lm_grads_nonzero_everywhere():
+    specs = M.lm_param_specs(CFG)
+    params = init_params(specs)
+    toks, tgts = lm_batch(CFG)
+    out = M.lm_step_fn(CFG)(*params, toks, tgts)
+    for (name, _, _), g in zip(specs, out[1:]):
+        assert float(jnp.max(jnp.abs(g))) > 0, f"dead gradient for {name}"
+
+
+def test_lm_few_sgd_steps_reduce_loss():
+    """The step artifact's (loss, grads) must be usable for real training."""
+    specs = M.lm_param_specs(CFG)
+    params = init_params(specs)
+    step = jax.jit(M.lm_step_fn(CFG))
+    toks, tgts = lm_batch(CFG, seed=1)
+    first = None
+    for it in range(30):
+        out = step(*params, toks, tgts)
+        loss, grads = float(out[0][0]), out[1:]
+        if first is None:
+            first = loss
+        params = [p - 0.5 * g for p, g in zip(params, grads)]
+    assert loss < first - 0.3, f"no learning: {first} -> {loss}"
+
+
+def test_lm_param_count_matches_formula():
+    for name, cfg in M.LM_CONFIGS.items():
+        v, d, l, s = cfg["vocab"], cfg["d_model"], cfg["n_layers"], cfg["seq"]
+        # per layer: 4 attn mats (4d^2) + mlp (8d^2) + ln1/ln2 (4d) + b1 (4d) + b2 (d)
+        expect = v * d + s * d + l * (12 * d * d + 9 * d) + 2 * d + d * v
+        got = M.param_count(M.lm_param_specs(cfg))
+        assert got == expect, name
+
+
+def test_lm_eval_fn_matches_loss():
+    specs = M.lm_param_specs(CFG)
+    params = init_params(specs)
+    toks, tgts = lm_batch(CFG)
+    (l1,) = M.lm_logits_loss_fn(CFG)(*params, toks, tgts)
+    l2 = M.lm_loss(params, toks, tgts, CFG)
+    np.testing.assert_allclose(np.asarray(l1)[0], float(l2), rtol=1e-6)
+
+
+# ------------------------------------------------------------------- MLP
+
+MCFG = M.MLP_CONFIGS["mlp_tiny"]
+
+
+def mlp_batch(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((cfg["batch"], cfg["in_dim"])).astype(np.float32)
+    y = rng.integers(0, cfg["classes"], (cfg["batch"],))
+    return jnp.asarray(x), jnp.asarray(y, jnp.int32)
+
+
+def test_mlp_step_shapes():
+    specs = M.mlp_param_specs(MCFG)
+    params = init_params(specs)
+    x, y = mlp_batch(MCFG)
+    out = M.mlp_step_fn(MCFG)(*params, x, y)
+    assert len(out) == 1 + len(specs)
+    for (name, shape, _), g in zip(specs, out[1:]):
+        assert g.shape == tuple(shape), name
+
+
+def test_mlp_loss_at_init_near_log_classes():
+    specs = M.mlp_param_specs(MCFG)
+    params = init_params(specs)
+    x, y = mlp_batch(MCFG)
+    loss = M.mlp_loss(params, x, y, MCFG)
+    assert abs(float(loss) - np.log(MCFG["classes"])) < 1.0
+
+
+def test_mlp_learns_separable_data():
+    specs = M.mlp_param_specs(MCFG)
+    params = init_params(specs)
+    rng = np.random.default_rng(3)
+    # linearly separable clusters
+    centers = rng.standard_normal((MCFG["classes"], MCFG["in_dim"])) * 3
+    y = rng.integers(0, MCFG["classes"], (MCFG["batch"],))
+    x = centers[y] + rng.standard_normal((MCFG["batch"], MCFG["in_dim"])) * 0.1
+    x, y = jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.int32)
+    step = jax.jit(M.mlp_step_fn(MCFG))
+    for _ in range(60):
+        out = step(*params, x, y)
+        params = [p - 0.1 * g for p, g in zip(params, out[1:])]
+    assert float(out[0][0]) < 0.2
+
+
+def test_mlp_logits_fn_shape():
+    specs = M.mlp_param_specs(MCFG)
+    params = init_params(specs)
+    x, _ = mlp_batch(MCFG)
+    (logits,) = M.mlp_logits_fn(MCFG)(*params, x)
+    assert logits.shape == (MCFG["batch"], MCFG["classes"])
+
+
+@pytest.mark.parametrize("name", list(M.MLP_CONFIGS))
+def test_mlp_spec_sizes_positive(name):
+    cfg = M.MLP_CONFIGS[name]
+    specs = M.mlp_param_specs(cfg)
+    assert len(specs) == 2 * (cfg["depth"] + 1)
+    assert M.param_count(specs) > 0

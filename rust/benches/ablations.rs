@@ -1,0 +1,138 @@
+//! Ablation studies for the design choices DESIGN.md calls out — beyond
+//! the paper's own tables:
+//!
+//! 1. selection method (exact / trimmed / binary-search) end-to-end,
+//! 2. threshold-reuse interval for the sampled binary search (§5.2.2),
+//! 3. tensor fusion cap (§5.3),
+//! 4. density sweep (traffic vs quality),
+//! 5. §5.5 policy thresholds vs everything-one-method.
+//!
+//! ```sh
+//! make artifacts && cargo bench --bench ablations
+//! ```
+
+use redsync::compression::{
+    threshold_binary_search, BinarySearchParams, CachedThresholdSelector, PolicyThresholds,
+};
+use redsync::config::TrainConfig;
+use redsync::coordinator::train;
+use redsync::simnet::iteration::Strategy;
+use redsync::util::rng::Pcg32;
+use redsync::util::timer::bench;
+
+fn base() -> TrainConfig {
+    TrainConfig {
+        model: "lm_tiny".into(),
+        world: 2,
+        steps: 20,
+        strategy: Strategy::Rgc,
+        density: 0.02,
+        thresholds: PolicyThresholds { thsd1: 512, thsd2: 8 * 1024 },
+        log_every: 20,
+        eval_every: 0,
+        ..TrainConfig::default()
+    }
+}
+
+fn main() {
+    if redsync::models::schema::Manifest::load(
+        redsync::models::schema::Manifest::default_dir(),
+    )
+    .is_err()
+    {
+        eprintln!("artifacts not built; run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // ---- 1. per-layer policy vs single-method (thsd sweep) ----
+    println!("# ablation: §5.5 policy thresholds (lm_tiny x2, 20 steps)");
+    println!("{:>28} {:>12} {:>12} {:>10}", "policy", "final loss", "traffic", "msgs");
+    for (label, thsd1, thsd2) in [
+        ("all dense (thsd1=inf)", usize::MAX, usize::MAX),
+        ("all trimmed (1B/inf)", 1, usize::MAX),
+        ("all binary-search (1B/1B)", 1, 1),
+        ("paper-style mix (512/8K)", 512, 8 * 1024),
+    ] {
+        let cfg = TrainConfig {
+            thresholds: PolicyThresholds { thsd1, thsd2 },
+            ..base()
+        };
+        let r = train(cfg).expect("run");
+        assert!(r.replicas_consistent);
+        println!(
+            "{label:>28} {:>12.4} {:>12} {:>10}",
+            r.final_loss,
+            redsync::util::fmt_bytes(r.bytes as usize),
+            r.messages
+        );
+    }
+
+    // ---- 2. density sweep: traffic vs quality ----
+    println!("\n# ablation: density sweep (lm_tiny x2, 30 steps)");
+    println!("{:>10} {:>12} {:>12} {:>14}", "density", "final loss", "traffic", "KB/step/rank");
+    for density in [0.1, 0.02, 0.005, 0.001] {
+        let cfg = TrainConfig { density, steps: 30, ..base() };
+        let r = train(cfg).expect("run");
+        println!(
+            "{density:>10} {:>12.4} {:>12} {:>14.1}",
+            r.final_loss,
+            redsync::util::fmt_bytes(r.bytes as usize),
+            r.bytes_per_step_per_rank() / 1024.0
+        );
+    }
+
+    // ---- 3. fusion cap ----
+    println!("\n# ablation: tensor fusion cap (messages/collectives per run)");
+    println!("{:>14} {:>10} {:>12} {:>12}", "cap (elems)", "msgs", "traffic", "final loss");
+    for cap in [0usize, 1 << 12, 1 << 16, 1 << 22] {
+        let cfg = TrainConfig { fusion_cap_elems: cap, ..base() };
+        let r = train(cfg).expect("run");
+        println!(
+            "{:>14} {:>10} {:>12} {:>12.4}",
+            if cap == 0 { "off".to_string() } else { cap.to_string() },
+            r.messages,
+            redsync::util::fmt_bytes(r.bytes as usize),
+            r.final_loss
+        );
+    }
+
+    // ---- 4. threshold-reuse interval (§5.2.2) ----
+    println!("\n# ablation: sampled binary-search reuse interval (1M elems, drifting data)");
+    println!("{:>10} {:>12} {:>14}", "interval", "time (ms)", "mean |set|/k");
+    let n = 1 << 20;
+    let k = (n as f64 * 0.001) as usize;
+    for interval in [1usize, 2, 5, 10] {
+        let mut sel = CachedThresholdSelector::new(interval, BinarySearchParams::default());
+        let mut rng = Pcg32::seeded(7);
+        let mut x = vec![0f32; n];
+        rng.fill_normal(&mut x, 1.0);
+        let mut sizes = Vec::new();
+        let stats = bench(10, || {
+            // drift the distribution between calls (residual dynamics)
+            for v in x.iter_mut().take(n / 64) {
+                *v *= 1.01;
+            }
+            let s = sel.select(&x, k, None);
+            sizes.push(s.sparse.len() as f64 / k as f64);
+        });
+        let mean_ratio = sizes.iter().sum::<f64>() / sizes.len() as f64;
+        println!("{interval:>10} {:>12.3} {:>14.2}", stats.median * 1e3, mean_ratio);
+    }
+
+    // ---- 5. binary-search probes (J-way §Perf parameter) ----
+    println!("\n# ablation: J-way bisection probes (16Mi elems, fallback path)");
+    println!("{:>8} {:>12}", "probes", "time (ms)");
+    let n = 1 << 24;
+    let mut rng = Pcg32::seeded(9);
+    // heavy-tie distribution defeats the sampling fast path -> exercises
+    // the J-way ladder
+    let x: Vec<f32> = (0..n).map(|_| (rng.next_f32() * 8.0).floor() / 8.0).collect();
+    let k = (n as f64 * 0.001) as usize;
+    for probes in [1usize, 3, 7, 15] {
+        let p = BinarySearchParams { probes, ..Default::default() };
+        let stats = bench(3, || threshold_binary_search(&x, k, p, None));
+        println!("{probes:>8} {:>12.2}", stats.median * 1e3);
+    }
+
+    println!("\nablations complete");
+}

@@ -1,0 +1,70 @@
+//! End-to-end throughput of the *real* three-layer stack: steps/sec of
+//! the Rust trainer on this host for dense vs RGC vs quantized RGC, and
+//! the traffic each moves — the testbed-scale counterpart of the Figs.
+//! 7-9 wall-clock claims (§Perf in EXPERIMENTS.md tracks this table).
+//!
+//! On a 1-core CPU testbed compute dominates (like ResNet50 in the
+//! paper); the *traffic* columns carry the reproduction claim, and the
+//! phase split shows where the time goes.
+//!
+//! ```sh
+//! make artifacts && cargo bench --bench e2e_throughput
+//! ```
+
+use redsync::config::{preset, TrainConfig};
+use redsync::coordinator::metrics::phase;
+use redsync::coordinator::train;
+use redsync::simnet::iteration::Strategy;
+
+fn bench_model(model: &str, world: usize, steps: usize) {
+    println!("\n## {model} x{world}, {steps} steps");
+    println!(
+        "{:>10} {:>10} {:>12} {:>12} {:>9} {:>9} {:>9}",
+        "strategy", "steps/s", "traffic", "KB/step/rk", "compute%", "comm%", "sync%"
+    );
+    let mut base = TrainConfig {
+        model: model.into(),
+        world,
+        steps,
+        thresholds: redsync::config::presets::proxy_thresholds(),
+        density: 1e-3,
+        log_every: steps.max(1),
+        eval_every: 0,
+        ..preset("smoke").unwrap()
+    };
+    for s in [Strategy::Dense, Strategy::Rgc, Strategy::QuantRgc] {
+        base.strategy = s;
+        let r = train(base.clone()).expect("run");
+        assert!(r.replicas_consistent);
+        let comm = r.phase_fraction(phase::COMM_DENSE) + r.phase_fraction(phase::COMM_SPARSE);
+        let sync = comm
+            + r.phase_fraction(phase::SELECT)
+            + r.phase_fraction(phase::MASK)
+            + r.phase_fraction(phase::PACK)
+            + r.phase_fraction(phase::UNPACK);
+        println!(
+            "{:>10} {:>10.2} {:>12} {:>12.1} {:>8.1}% {:>8.1}% {:>8.1}%",
+            s.label(),
+            steps as f64 / r.wall_secs,
+            redsync::util::fmt_bytes(r.bytes as usize),
+            r.bytes_per_step_per_rank() / 1024.0,
+            100.0 * r.phase_fraction(phase::COMPUTE),
+            100.0 * comm,
+            100.0 * sync,
+        );
+    }
+}
+
+fn main() {
+    if redsync::models::schema::Manifest::load(
+        redsync::models::schema::Manifest::default_dir(),
+    )
+    .is_err()
+    {
+        eprintln!("artifacts not built; run `make artifacts` first");
+        std::process::exit(1);
+    }
+    bench_model("lm_tiny", 2, 40);
+    bench_model("lm_small", 4, 20);
+    bench_model("mlp_wide", 4, 30);
+}

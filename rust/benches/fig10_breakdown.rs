@@ -1,0 +1,107 @@
+//! Fig. 10 reproduction: per-phase time decomposition of RedSync on Piz
+//! Daint while scaling to 128 nodes — mask / select / pack / comm /
+//! unpack / compute proportions for RGC and quantized RGC.
+//!
+//! Paper headline: for ResNet50 at 128 GPUs most of the iteration is
+//! spent in *unpack* (69% RGC / 67% quant-RGC of the sync path), because
+//! decompression cost grows linearly with p (Eq. 1's p·γ₁ term).
+//!
+//! Also cross-checks the breakdown of a *real* in-process training run
+//! (lm_tiny) against the simulated phase vocabulary.
+//!
+//! ```sh
+//! cargo bench --bench fig10_breakdown
+//! ```
+
+use redsync::models::zoo;
+use redsync::simnet::iteration::{simulate_iteration, SimConfig, Strategy};
+use redsync::simnet::Machine;
+
+fn row(model: &str, p: usize, strategy: Strategy, cfg: &SimConfig) -> [f64; 6] {
+    let m = zoo::by_name(model).unwrap();
+    let machine = Machine::piz_daint();
+    let b = simulate_iteration(&m, &machine, p, strategy, cfg);
+    let sum = b.component_sum();
+    [
+        b.compute / sum,
+        b.mask / sum,
+        b.select / sum,
+        b.pack / sum,
+        b.comm / sum,
+        b.unpack / sum,
+    ]
+}
+
+fn main() {
+    let cfg = SimConfig::default();
+    println!("# Fig. 10 — phase decomposition on Piz Daint (fractions of component sum)");
+    for model in ["resnet50", "vgg16", "alexnet", "lstm-ptb"] {
+        println!("\n## {model}");
+        println!(
+            "{:>5} {:>10} {:>9} {:>7} {:>8} {:>7} {:>7} {:>8}",
+            "gpus", "strategy", "compute", "mask", "select", "pack", "comm", "unpack"
+        );
+        for p in [16usize, 32, 64, 128] {
+            for s in [Strategy::Rgc, Strategy::QuantRgc] {
+                let r = row(model, p, s, &cfg);
+                println!(
+                    "{:>5} {:>10} {:>8.1}% {:>6.1}% {:>7.1}% {:>6.1}% {:>6.1}% {:>7.1}%",
+                    p,
+                    s.label(),
+                    100.0 * r[0],
+                    100.0 * r[1],
+                    100.0 * r[2],
+                    100.0 * r[3],
+                    100.0 * r[4],
+                    100.0 * r[5]
+                );
+            }
+        }
+    }
+
+    // paper's headline: ResNet50 @128, unpack dominates the sync path
+    let r128 = row("resnet50", 128, Strategy::Rgc, &cfg);
+    let q128 = row("resnet50", 128, Strategy::QuantRgc, &cfg);
+    let sync_frac =
+        |r: &[f64; 6]| r[5] / (r[1] + r[2] + r[3] + r[4] + r[5]).max(f64::EPSILON);
+    println!(
+        "\n# resnet50 @128: unpack share of sync path — RGC {:.0}% (paper 69%), quant {:.0}% (paper 67%)",
+        100.0 * sync_frac(&r128),
+        100.0 * sync_frac(&q128)
+    );
+    assert!(
+        sync_frac(&r128) > 0.4,
+        "unpack must dominate resnet50's sync path at 128 GPUs"
+    );
+
+    // unpack grows linearly with p (Eq. 1 p·γ₁): 32 -> 128 should be ~4x
+    let m = zoo::by_name("resnet50").unwrap();
+    let machine = Machine::piz_daint();
+    let u32x = simulate_iteration(&m, &machine, 32, Strategy::Rgc, &cfg).unpack;
+    let u128x = simulate_iteration(&m, &machine, 128, Strategy::Rgc, &cfg).unpack;
+    println!("# unpack 32->128 GPUs: {:.2}x (model predicts 4.0x)", u128x / u32x);
+    assert!((u128x / u32x - 4.0).abs() < 0.2);
+
+    // real-run cross-check: the trainer's phase timers use the same
+    // vocabulary; RGC must show select+pack+unpack > 0 and dense must not
+    if let Ok(manifest) =
+        redsync::models::schema::Manifest::load(redsync::models::schema::Manifest::default_dir())
+    {
+        use redsync::config::preset;
+        use redsync::coordinator::metrics::phase;
+        use redsync::coordinator::Trainer;
+        let mut cfg = preset("smoke").unwrap();
+        cfg.steps = 10;
+        let r = Trainer::new(&manifest, cfg).unwrap().run().unwrap();
+        println!("\n# real lm_tiny x2 run — measured phase fractions:");
+        for &p in phase::ALL {
+            let f = r.phase_fraction(p);
+            if f > 0.0 {
+                println!("  {p:<12} {:>5.1}%", 100.0 * f);
+            }
+        }
+        assert!(r.phases.total(phase::UNPACK) > 0.0);
+    } else {
+        println!("\n(artifacts not built; skipping the real-run cross-check)");
+    }
+}

@@ -1,0 +1,75 @@
+//! Fig. 3 reproduction: communication-set selection time vs parameter
+//! size for the four methods — exact top-k (the radixSelect baseline),
+//! trimmed top-k (Alg. 2), threshold binary search (Alg. 3) and the
+//! estimated synchronization time of the same data over a 3.5 GB/s link.
+//!
+//! Paper shape: exact selection grows linearly and crosses the comm time;
+//! trimmed is ~38x and binary search ~16x faster at 64 MB.
+//!
+//! ```sh
+//! cargo bench --bench fig3_selection
+//! ```
+
+use redsync::compression::{
+    exact_topk, threshold_binary_search, trimmed_topk, BinarySearchParams,
+};
+use redsync::simnet::{allreduce_time, Machine};
+use redsync::util::rng::Pcg32;
+use redsync::util::timer::bench;
+
+fn main() {
+    let density = 1e-3;
+    let reps = 7;
+    let machine = Machine::muradin();
+
+    println!("# Fig. 3 — selection time vs parameter size (uniform random data)");
+    println!("# density {density}, median of {reps} reps; comm = 8-GPU allreduce @3.5GB/s");
+    println!(
+        "{:>12} {:>10} {:>11} {:>11} {:>11} {:>11} {:>8} {:>8}",
+        "elems", "bytes", "exact(ms)", "trim(ms)", "bs(ms)", "comm(ms)", "x-trim", "x-bs"
+    );
+
+    let mut speedup_at_16m = (0.0, 0.0);
+    for log2 in [14usize, 16, 18, 20, 22, 24] {
+        let n = 1usize << log2;
+        let mut rng = Pcg32::seeded(log2 as u64);
+        // paper: standard uniform distribution
+        let x: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let k = ((n as f64 * density).ceil() as usize).max(1);
+
+        let te = bench(reps, || exact_topk(&x, k, None)).median;
+        let tt = bench(reps, || trimmed_topk(&x, k, 0.2, None)).median;
+        let tb = bench(reps, || {
+            threshold_binary_search(&x, k, BinarySearchParams::default(), None)
+        })
+        .median;
+        let comm = allreduce_time(&machine, 8, (n * 4) as f64);
+
+        println!(
+            "{:>12} {:>10} {:>11.3} {:>11.3} {:>11.3} {:>11.3} {:>7.1}x {:>7.1}x",
+            n,
+            redsync::util::fmt_bytes(n * 4),
+            te * 1e3,
+            tt * 1e3,
+            tb * 1e3,
+            comm * 1e3,
+            te / tt,
+            te / tb
+        );
+        if log2 == 24 {
+            speedup_at_16m = (te / tt, te / tb);
+        }
+    }
+
+    println!(
+        "\n# paper @64MB(16Mi elems): trimmed 38.1x, binary-search 16.2x vs radixSelect"
+    );
+    println!(
+        "# here  @64MB(16Mi elems): trimmed {:.1}x, binary-search {:.1}x vs exact top-k",
+        speedup_at_16m.0, speedup_at_16m.1
+    );
+    assert!(
+        speedup_at_16m.0 > 2.0 && speedup_at_16m.1 > 2.0,
+        "selection speedup shape lost"
+    );
+}

@@ -1,0 +1,80 @@
+//! Fig. 5 reproduction: effective device-to-device allreduce bandwidth
+//! vs message size on both machine presets, computed the way the paper
+//! measures it — `S/t · 2(n-1)/n` — plus a *real* measurement over the
+//! in-process fabric (bytes moved / wall time) as a sanity check of the
+//! collective implementations.
+//!
+//! Paper shape: Piz Daint saturates ~1.5 GB/s, Muradin ~3.5 GB/s; small
+//! messages are latency-bound.
+//!
+//! ```sh
+//! cargo bench --bench fig5_bandwidth
+//! ```
+
+use redsync::collectives::{allreduce_mean, LocalFabric};
+use redsync::simnet::{allreduce_bandwidth, Machine};
+use std::thread;
+use std::time::Instant;
+
+fn measured_fabric_bandwidth(world: usize, elems: usize) -> f64 {
+    let mut fabric = LocalFabric::new(world);
+    let start = Instant::now();
+    let reps = 3;
+    let handles: Vec<_> = fabric
+        .take_all()
+        .into_iter()
+        .map(|t| {
+            thread::spawn(move || {
+                let mut x = vec![1.0f32; elems];
+                for _ in 0..reps {
+                    allreduce_mean(&t, &mut x);
+                }
+                assert!((x[0] - 1.0).abs() < 1e-6);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let t = start.elapsed().as_secs_f64() / reps as f64;
+    let s = (elems * 4) as f64;
+    (s / t) * 2.0 * (world as f64 - 1.0) / world as f64
+}
+
+fn main() {
+    println!("# Fig. 5 — allreduce bandwidth vs data size (model, per machine preset)");
+    println!(
+        "{:>12} {:>14} {:>14} {:>14} {:>14}",
+        "bytes", "daint p=8", "daint p=64", "muradin p=4", "muradin p=8"
+    );
+    let daint = Machine::piz_daint();
+    let muradin = Machine::muradin();
+    for log2 in [12usize, 14, 16, 18, 20, 22, 24, 26] {
+        let bytes = (1usize << log2) as f64;
+        println!(
+            "{:>12} {:>12.2}GB {:>12.2}GB {:>12.2}GB {:>12.2}GB",
+            redsync::util::fmt_bytes(bytes as usize),
+            allreduce_bandwidth(&daint, 8, bytes) / 1e9,
+            allreduce_bandwidth(&daint, 64, bytes) / 1e9,
+            allreduce_bandwidth(&muradin, 4, bytes) / 1e9,
+            allreduce_bandwidth(&muradin, 8, bytes) / 1e9,
+        );
+    }
+    // shape assertions: saturation near link rate, latency-bound smalls
+    let big = allreduce_bandwidth(&muradin, 8, 256e6);
+    let small = allreduce_bandwidth(&muradin, 8, 4096.0);
+    assert!(big > 3.0e9 && big < 3.6e9, "muradin saturation {big:e}");
+    assert!(small < big / 2.0, "small messages should be latency-bound");
+
+    println!("\n# measured in-process fabric (real threads, Rabenseifner):");
+    println!("{:>12} {:>8} {:>14}", "bytes", "world", "eff. bw");
+    for (world, elems) in [(4usize, 1usize << 20), (8, 1 << 20), (8, 1 << 22)] {
+        let bw = measured_fabric_bandwidth(world, elems);
+        println!(
+            "{:>12} {:>8} {:>12.2}GB",
+            redsync::util::fmt_bytes(elems * 4),
+            world,
+            bw / 1e9
+        );
+    }
+}

@@ -1,0 +1,120 @@
+//! Figs. 7-9 reproduction: speedup of dense baseline vs RGC vs quantized
+//! RGC for the paper's DNN zoo, weak scaling.
+//!
+//! * Fig. 7 — Piz Daint, 2..128 GPUs: VGG16 / AlexNet / ResNet50 / LSTM
+//! * Fig. 8 — Muradin, 2..8 GPUs: ImageNet CNNs
+//! * Fig. 9 — Muradin: LSTM PTB / Wiki2, VGG16-Cifar
+//!
+//! Prints the paper's headline ratios next to ours; asserts the *shape*
+//! (who wins, roughly by how much, concavity) rather than absolutes.
+//!
+//! ```sh
+//! cargo bench --bench fig7_9_scalability
+//! ```
+
+use redsync::models::zoo;
+use redsync::simnet::iteration::{speedup, SimConfig, Strategy};
+use redsync::simnet::Machine;
+
+struct Claim {
+    fig: &'static str,
+    model: &'static str,
+    machine: &'static str,
+    p: usize,
+    /// paper speedup ratio vs baseline (RGC, quant-RGC)
+    paper: (f64, f64),
+}
+
+const CLAIMS: &[Claim] = &[
+    Claim { fig: "7", model: "vgg16", machine: "piz-daint", p: 128, paper: (1.42, 1.71) },
+    Claim { fig: "7", model: "alexnet", machine: "piz-daint", p: 128, paper: (0.94, 1.17) },
+    Claim { fig: "7", model: "lstm-ptb", machine: "piz-daint", p: 32, paper: (1.47, 1.76) },
+    Claim { fig: "8", model: "vgg16", machine: "muradin", p: 8, paper: (1.55, 1.64) },
+    Claim { fig: "8", model: "alexnet", machine: "muradin", p: 8, paper: (1.96, 2.26) },
+    Claim { fig: "8", model: "resnet50", machine: "muradin", p: 8, paper: (0.83, 0.85) },
+    Claim { fig: "9", model: "vgg16-cifar", machine: "muradin", p: 8, paper: (1.16, 1.24) },
+    Claim { fig: "9", model: "lstm-ptb", machine: "muradin", p: 8, paper: (2.11, 2.06) },
+];
+
+fn main() {
+    let cfg = SimConfig::default();
+
+    for (fig, machine, models, gpus) in [
+        (
+            "Fig. 7 — Piz Daint",
+            Machine::piz_daint(),
+            vec!["vgg16", "alexnet", "resnet50", "lstm-ptb"],
+            vec![2usize, 4, 8, 16, 32, 64, 128],
+        ),
+        (
+            "Fig. 8 — Muradin CNNs",
+            Machine::muradin(),
+            vec!["alexnet", "vgg16", "resnet50"],
+            vec![2, 4, 8],
+        ),
+        (
+            "Fig. 9 — Muradin LSTM + VGG16-Cifar",
+            Machine::muradin(),
+            vec!["lstm-ptb", "lstm-wiki2", "vgg16-cifar"],
+            vec![2, 4, 8],
+        ),
+    ] {
+        println!("# {fig}");
+        for name in &models {
+            let model = zoo::by_name(name).unwrap();
+            println!("  {} ({}):", model.name, redsync::util::fmt_bytes(model.model_bytes()));
+            println!(
+                "  {:>5} {:>10} {:>10} {:>10} {:>8} {:>8}",
+                "gpus", "baseline", "RGC", "quantRGC", "R/base", "Q/base"
+            );
+            for &p in &gpus {
+                let d = speedup(&model, &machine, p, Strategy::Dense, &cfg);
+                let r = speedup(&model, &machine, p, Strategy::Rgc, &cfg);
+                let q = speedup(&model, &machine, p, Strategy::QuantRgc, &cfg);
+                println!(
+                    "  {p:>5} {d:>10.2} {r:>10.2} {q:>10.2} {:>8.2} {:>8.2}",
+                    r / d,
+                    q / d
+                );
+            }
+        }
+        println!();
+    }
+
+    println!("# paper-vs-measured at the headline points (ratio vs dense baseline):");
+    println!(
+        "{:>4} {:>12} {:>10} {:>5} {:>14} {:>14} {:>6}",
+        "fig", "model", "machine", "p", "paper (R, Q)", "ours (R, Q)", "shape"
+    );
+    let mut shape_ok = true;
+    for c in CLAIMS {
+        let model = zoo::by_name(c.model).unwrap();
+        let machine = Machine::by_name(c.machine).unwrap();
+        let d = speedup(&model, &machine, c.p, Strategy::Dense, &cfg);
+        let r = speedup(&model, &machine, c.p, Strategy::Rgc, &cfg) / d;
+        let q = speedup(&model, &machine, c.p, Strategy::QuantRgc, &cfg) / d;
+        // shape: agree on which side of ~1.0 each ratio falls; and quant
+        // must track plain within 15% (the paper itself sees quant-vs-
+        // plain flip at small scale when binary-search re-search cost
+        // outweighs the halved messages — §6.4's LSTM observation, which
+        // our sim reproduces for bs-heavy models at p=8)
+        let win_shape = (c.paper.0 > 1.05) == (r > 1.0) || (c.paper.0 - 1.0).abs() < 0.2;
+        let quant_shape = q >= r * 0.85 || (c.paper.1 >= c.paper.0) == (q >= r);
+        let ok = win_shape && quant_shape;
+        shape_ok &= ok;
+        println!(
+            "{:>4} {:>12} {:>10} {:>5} ({:>5.2},{:>5.2}) ({:>5.2},{:>5.2}) {:>6}",
+            c.fig,
+            c.model,
+            c.machine,
+            c.p,
+            c.paper.0,
+            c.paper.1,
+            r,
+            q,
+            if ok { "OK" } else { "MISS" }
+        );
+    }
+    assert!(shape_ok, "scalability shape differs from the paper");
+    println!("\nall headline shapes hold");
+}

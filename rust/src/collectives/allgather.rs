@@ -1,0 +1,220 @@
+//! Allgather — the sparse-synchronization primitive (§5.3, Appendix B).
+//!
+//! Recursive doubling for power-of-two worlds (lg p steps, (p-1)·m bytes
+//! per rank — the schedule Eq. 1 charges), ring allgather as the general
+//! fallback.  Both support *variable-length* contributions: with threshold
+//! binary search each rank's compressed residual differs in length, so
+//! blocks travel with `[rank, len]` headers and are reassembled in rank
+//! order at the end.
+
+use super::transport::Transport;
+
+/// Gather each rank's `msg`; returns all contributions indexed by rank.
+/// Dispatches to recursive doubling when `world` is a power of two.
+pub fn allgather<T: Transport>(t: &T, msg: Vec<u32>) -> Vec<Vec<u32>> {
+    if t.world().is_power_of_two() {
+        allgather_recursive_doubling(t, msg)
+    } else {
+        allgather_ring(t, msg)
+    }
+}
+
+/// Serialize a set of (rank, payload) blocks:
+/// `[count][rank_0, len_0]...[rank_{c-1}, len_{c-1}][payload_0 ...]`.
+fn pack_blocks(blocks: &[(u32, Vec<u32>)]) -> Vec<u32> {
+    let payload: usize = blocks.iter().map(|(_, p)| p.len()).sum();
+    let mut out = Vec::with_capacity(1 + 2 * blocks.len() + payload);
+    out.push(blocks.len() as u32);
+    for (r, p) in blocks {
+        out.push(*r);
+        out.push(p.len() as u32);
+    }
+    for (_, p) in blocks {
+        out.extend_from_slice(p);
+    }
+    out
+}
+
+fn unpack_blocks(buf: &[u32]) -> Vec<(u32, Vec<u32>)> {
+    let count = buf[0] as usize;
+    let mut headers = Vec::with_capacity(count);
+    for i in 0..count {
+        headers.push((buf[1 + 2 * i], buf[2 + 2 * i] as usize));
+    }
+    let mut off = 1 + 2 * count;
+    let mut out = Vec::with_capacity(count);
+    for (rank, len) in headers {
+        out.push((rank, buf[off..off + len].to_vec()));
+        off += len;
+    }
+    out
+}
+
+/// Recursive doubling: at step s, exchange all accumulated blocks with the
+/// partner at distance 2^s.  Exactly lg(p) rounds.
+pub fn allgather_recursive_doubling<T: Transport>(t: &T, msg: Vec<u32>) -> Vec<Vec<u32>> {
+    let (rank, world) = (t.rank(), t.world());
+    assert!(world.is_power_of_two(), "recursive doubling needs 2^k ranks");
+    let mut blocks: Vec<(u32, Vec<u32>)> = vec![(rank as u32, msg)];
+    let mut dist = 1;
+    while dist < world {
+        let peer = rank ^ dist;
+        let received = t.exchange(peer, pack_blocks(&blocks));
+        blocks.extend(unpack_blocks(&received));
+        dist <<= 1;
+    }
+    finish(blocks, world)
+}
+
+/// Ring allgather: p-1 steps, each forwarding the block received last
+/// round.  Works for any world size.
+pub fn allgather_ring<T: Transport>(t: &T, msg: Vec<u32>) -> Vec<Vec<u32>> {
+    let (rank, world) = (t.rank(), t.world());
+    let next = (rank + 1) % world;
+    let prev = (rank + world - 1) % world;
+    let mut blocks: Vec<(u32, Vec<u32>)> = vec![(rank as u32, msg)];
+    let mut forward = pack_blocks(&blocks);
+    for _ in 0..world.saturating_sub(1) {
+        t.send(next, forward);
+        let received = t.recv(prev);
+        let got = unpack_blocks(&received);
+        blocks.extend(got.clone());
+        forward = pack_blocks(&got);
+    }
+    finish(blocks, world)
+}
+
+fn finish(blocks: Vec<(u32, Vec<u32>)>, world: usize) -> Vec<Vec<u32>> {
+    let mut out: Vec<Option<Vec<u32>>> = vec![None; world];
+    for (r, p) in blocks {
+        let slot = &mut out[r as usize];
+        assert!(slot.is_none(), "duplicate block for rank {r}");
+        *slot = Some(p);
+    }
+    out.into_iter()
+        .enumerate()
+        .map(|(r, p)| p.unwrap_or_else(|| panic!("missing block for rank {r}")))
+        .collect()
+}
+
+/// Flatten an allgather result into one buffer (rank order) — the §5.4
+/// decompression input.
+pub fn concat(parts: Vec<Vec<u32>>) -> Vec<u32> {
+    let total: usize = parts.iter().map(|p| p.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    for p in parts {
+        out.extend(p);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::transport::LocalFabric;
+    use std::thread;
+
+    fn run_world(
+        world: usize,
+        f: impl Fn(crate::collectives::transport::LocalTransport) -> Vec<Vec<u32>>
+            + Send
+            + Sync
+            + 'static,
+    ) -> Vec<Vec<Vec<u32>>> {
+        let mut fabric = LocalFabric::new(world);
+        let f = std::sync::Arc::new(f);
+        let handles: Vec<_> = fabric
+            .take_all()
+            .into_iter()
+            .map(|t| {
+                let f = std::sync::Arc::clone(&f);
+                thread::spawn(move || f(t))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    fn rank_msg(rank: usize, len: usize) -> Vec<u32> {
+        (0..len).map(|i| (rank * 1000 + i) as u32).collect()
+    }
+
+    #[test]
+    fn recursive_doubling_pow2_worlds() {
+        for world in [1usize, 2, 4, 8] {
+            let results = run_world(world, move |t| {
+                let msg = rank_msg(t.rank(), 3);
+                allgather_recursive_doubling(&t, msg)
+            });
+            for got in &results {
+                assert_eq!(got.len(), world);
+                for (r, part) in got.iter().enumerate() {
+                    assert_eq!(part, &rank_msg(r, 3), "world={world}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_any_world() {
+        for world in [1usize, 2, 3, 5, 6, 8] {
+            let results = run_world(world, move |t| {
+                let msg = rank_msg(t.rank(), 2);
+                allgather_ring(&t, msg)
+            });
+            for got in &results {
+                for (r, part) in got.iter().enumerate() {
+                    assert_eq!(part, &rank_msg(r, 2), "world={world}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn variable_length_contributions() {
+        let results = run_world(4, |t| {
+            // rank r contributes r+1 words
+            let msg = rank_msg(t.rank(), t.rank() + 1);
+            allgather(&t, msg)
+        });
+        for got in &results {
+            for (r, part) in got.iter().enumerate() {
+                assert_eq!(part.len(), r + 1);
+                assert_eq!(part, &rank_msg(r, r + 1));
+            }
+        }
+    }
+
+    #[test]
+    fn empty_contributions_ok() {
+        let results = run_world(4, |t| {
+            let msg = if t.rank() % 2 == 0 { vec![] } else { vec![t.rank() as u32] };
+            allgather(&t, msg)
+        });
+        for got in &results {
+            assert!(got[0].is_empty() && got[2].is_empty());
+            assert_eq!(got[1], vec![1]);
+            assert_eq!(got[3], vec![3]);
+        }
+    }
+
+    #[test]
+    fn dispatch_picks_rd_for_pow2() {
+        // indirect: non-pow2 world must still work through dispatch
+        let results = run_world(3, |t| allgather(&t, vec![t.rank() as u32]));
+        for got in &results {
+            assert_eq!(got.len(), 3);
+        }
+    }
+
+    #[test]
+    fn concat_flattens_in_rank_order() {
+        let parts = vec![vec![1, 2], vec![], vec![3]];
+        assert_eq!(concat(parts), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn block_pack_roundtrip() {
+        let blocks = vec![(0u32, vec![1, 2]), (3u32, vec![]), (2u32, vec![9, 9, 9])];
+        assert_eq!(unpack_blocks(&pack_blocks(&blocks)), blocks);
+    }
+}

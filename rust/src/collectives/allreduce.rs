@@ -1,0 +1,241 @@
+//! Allreduce — the dense-baseline synchronization (§2.2, Appendix B).
+//!
+//! Rabenseifner's algorithm (reduce-scatter by recursive halving, then
+//! allgather by recursive doubling): 2·lg(p) latency terms and
+//! 2·((p-1)/p)·M bandwidth — exactly the schedule Eq. 2 charges.  A ring
+//! allreduce covers non-power-of-two worlds and serves as an ablation
+//! comparator.
+
+use super::transport::{f32s_to_words, words_to_f32s, Transport};
+
+/// Sum-allreduce of `x` across all ranks (in place).  Dispatches to
+/// Rabenseifner for power-of-two worlds, ring otherwise.
+pub fn allreduce_sum<T: Transport>(t: &T, x: &mut [f32]) {
+    if t.world() == 1 {
+        return;
+    }
+    if t.world().is_power_of_two() {
+        allreduce_rabenseifner(t, x)
+    } else {
+        allreduce_ring(t, x)
+    }
+}
+
+/// Average-allreduce: sum then scale by 1/p.
+pub fn allreduce_mean<T: Transport>(t: &T, x: &mut [f32]) {
+    allreduce_sum(t, x);
+    let inv = 1.0 / t.world() as f32;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Contiguous chunk boundaries splitting `n` into `p` near-equal parts.
+fn chunk_bounds(n: usize, p: usize) -> Vec<(usize, usize)> {
+    let base = n / p;
+    let rem = n % p;
+    let mut out = Vec::with_capacity(p);
+    let mut start = 0;
+    for i in 0..p {
+        let len = base + usize::from(i < rem);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// Rabenseifner: recursive-halving reduce-scatter + recursive-doubling
+/// allgather over contiguous chunks.
+///
+/// Chunk-space invariants (chunks indexed 0..world):
+/// * reduce-scatter, step `dist` (world/2 → 1): rank's live group is the
+///   2·dist-aligned block containing it; it keeps the half containing
+///   itself and gives the other half to `rank ^ dist`.  After the loop it
+///   owns exactly chunk `rank`, fully reduced.
+/// * allgather, step `dist` (1 → world/2): rank owns the dist-aligned
+///   block `[rank & !(dist-1), +dist)`; peer `rank ^ dist` owns the
+///   mirrored block; after exchange both own the 2·dist block.
+pub fn allreduce_rabenseifner<T: Transport>(t: &T, x: &mut [f32]) {
+    let (rank, world) = (t.rank(), t.world());
+    assert!(world.is_power_of_two());
+    let bounds = chunk_bounds(x.len(), world);
+    let range = |clo: usize, chi: usize| bounds[clo].0..bounds[chi - 1].1;
+
+    // --- reduce-scatter (recursive halving) ---
+    let mut dist = world / 2;
+    while dist >= 1 {
+        let peer = rank ^ dist;
+        let lo = rank & !(2 * dist - 1); // group base (chunk index)
+        let (keep_lo, give_lo) =
+            if rank & dist == 0 { (lo, lo + dist) } else { (lo + dist, lo) };
+        t.send(peer, f32s_to_words(&x[range(give_lo, give_lo + dist)]));
+        let received = words_to_f32s(&t.recv(peer));
+        let recv_range = range(keep_lo, keep_lo + dist);
+        assert_eq!(received.len(), recv_range.len());
+        for (xi, ri) in x[recv_range].iter_mut().zip(&received) {
+            *xi += ri;
+        }
+        dist /= 2;
+    }
+
+    // --- allgather (recursive doubling) over owned chunks ---
+    let mut dist = 1;
+    while dist < world {
+        let peer = rank ^ dist;
+        let base = rank & !(dist - 1);
+        let peer_base = base ^ dist;
+        t.send(peer, f32s_to_words(&x[range(base, base + dist)]));
+        let received = words_to_f32s(&t.recv(peer));
+        let recv_range = range(peer_base, peer_base + dist);
+        assert_eq!(received.len(), recv_range.len());
+        x[recv_range].copy_from_slice(&received);
+        dist <<= 1;
+    }
+}
+
+/// Ring allreduce: reduce-scatter ring then allgather ring (2(p-1) steps,
+/// 2·((p-1)/p)·M bytes — same bandwidth as Rabenseifner, more latency).
+pub fn allreduce_ring<T: Transport>(t: &T, x: &mut [f32]) {
+    let (rank, world) = (t.rank(), t.world());
+    if world == 1 {
+        return;
+    }
+    let bounds = chunk_bounds(x.len(), world);
+    let next = (rank + 1) % world;
+    let prev = (rank + world - 1) % world;
+
+    // reduce-scatter: after p-1 steps, rank owns chunk (rank+1) % p
+    for step in 0..world - 1 {
+        let send_chunk = (rank + world - step) % world;
+        let recv_chunk = (rank + world - step - 1) % world;
+        let (s0, s1) = bounds[send_chunk];
+        t.send(next, f32s_to_words(&x[s0..s1]));
+        let received = words_to_f32s(&t.recv(prev));
+        let (r0, r1) = bounds[recv_chunk];
+        for (xi, ri) in x[r0..r1].iter_mut().zip(&received) {
+            *xi += ri;
+        }
+    }
+    // allgather ring
+    for step in 0..world - 1 {
+        let send_chunk = (rank + 1 + world - step) % world;
+        let recv_chunk = (rank + world - step) % world;
+        let (s0, s1) = bounds[send_chunk];
+        t.send(next, f32s_to_words(&x[s0..s1]));
+        let received = words_to_f32s(&t.recv(prev));
+        let (r0, r1) = bounds[recv_chunk];
+        x[r0..r1].copy_from_slice(&received);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::transport::LocalFabric;
+    use std::thread;
+
+    /// Run `world` ranks, each contributing vec = rank-dependent data, and
+    /// check every rank ends with the elementwise sum.
+    fn check_allreduce(world: usize, n: usize, ring: bool) {
+        let mut fabric = LocalFabric::new(world);
+        let handles: Vec<_> = fabric
+            .take_all()
+            .into_iter()
+            .map(|t| {
+                thread::spawn(move || {
+                    let mut x: Vec<f32> =
+                        (0..n).map(|i| (t.rank() + 1) as f32 * (i as f32 + 1.0)).collect();
+                    if ring {
+                        allreduce_ring(&t, &mut x);
+                    } else {
+                        allreduce_sum(&t, &mut x);
+                    }
+                    x
+                })
+            })
+            .collect();
+        let results: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let rank_sum: f32 = (1..=world).map(|r| r as f32).sum();
+        for got in &results {
+            for (i, &v) in got.iter().enumerate() {
+                let expect = rank_sum * (i as f32 + 1.0);
+                assert!(
+                    (v - expect).abs() < 1e-3 * expect.abs().max(1.0),
+                    "world={world} n={n} i={i}: {v} != {expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rabenseifner_pow2_worlds() {
+        for world in [2usize, 4, 8] {
+            for n in [8usize, 17, 64, 1000] {
+                check_allreduce(world, n, false);
+            }
+        }
+    }
+
+    #[test]
+    fn ring_all_worlds() {
+        for world in [2usize, 3, 4, 5, 7, 8] {
+            for n in [16usize, 33, 256] {
+                check_allreduce(world, n, true);
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_handles_non_pow2() {
+        check_allreduce(6, 100, false);
+    }
+
+    #[test]
+    fn world_one_is_identity() {
+        let mut fabric = LocalFabric::new(1);
+        let t = fabric.take(0);
+        let mut x = vec![1.0, 2.0];
+        allreduce_sum(&t, &mut x);
+        assert_eq!(x, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn mean_divides_by_world() {
+        let mut fabric = LocalFabric::new(4);
+        let handles: Vec<_> = fabric
+            .take_all()
+            .into_iter()
+            .map(|t| {
+                thread::spawn(move || {
+                    let mut x = vec![4.0f32; 8];
+                    allreduce_mean(&t, &mut x);
+                    x
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), vec![4.0f32; 8]);
+        }
+    }
+
+    #[test]
+    fn chunk_bounds_cover_everything() {
+        for n in [0usize, 1, 7, 8, 100] {
+            for p in [1usize, 2, 4, 8] {
+                let b = chunk_bounds(n, p);
+                assert_eq!(b.len(), p);
+                assert_eq!(b[0].0, 0);
+                assert_eq!(b[p - 1].1, n);
+                for w in b.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rabenseifner_small_vectors() {
+        // n < world: some chunks empty — must still work
+        check_allreduce(8, 3, false);
+    }
+}

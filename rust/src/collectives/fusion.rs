@@ -1,0 +1,143 @@
+//! Tensor fusion (§5.3): batch many small per-layer messages into few
+//! large ones to amortize the per-message latency α and raise effective
+//! bandwidth.  Used for the dense-allreduce layers (below `thsd1`) and for
+//! batching small allgathers.
+
+/// A fusion plan: which layer indices go into which bucket, preserving
+/// layer order inside a bucket.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FusionPlan {
+    pub buckets: Vec<Bucket>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bucket {
+    /// (layer index, element count) in order.
+    pub layers: Vec<(usize, usize)>,
+    pub total_elems: usize,
+}
+
+impl FusionPlan {
+    /// Greedy first-fit in layer order: close a bucket when adding the
+    /// next layer would exceed `cap_elems` (a single layer larger than the
+    /// cap gets its own bucket).
+    pub fn greedy(layer_sizes: &[usize], cap_elems: usize) -> FusionPlan {
+        assert!(cap_elems > 0);
+        let mut buckets = Vec::new();
+        let mut cur = Bucket { layers: Vec::new(), total_elems: 0 };
+        for (i, &n) in layer_sizes.iter().enumerate() {
+            if !cur.layers.is_empty() && cur.total_elems + n > cap_elems {
+                buckets.push(std::mem::replace(
+                    &mut cur,
+                    Bucket { layers: Vec::new(), total_elems: 0 },
+                ));
+            }
+            cur.layers.push((i, n));
+            cur.total_elems += n;
+        }
+        if !cur.layers.is_empty() {
+            buckets.push(cur);
+        }
+        FusionPlan { buckets }
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+}
+
+impl Bucket {
+    /// Flatten the bucket's layers (slices indexed by layer id) into one
+    /// contiguous buffer.
+    pub fn gather<'a>(&self, layers: impl Fn(usize) -> &'a [f32]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.total_elems);
+        for &(idx, n) in &self.layers {
+            let src = layers(idx);
+            assert_eq!(src.len(), n, "layer {idx} size changed");
+            out.extend_from_slice(src);
+        }
+        out
+    }
+
+    /// Scatter a fused buffer back out to the per-layer slices.
+    pub fn scatter(&self, fused: &[f32], mut layer_mut: impl FnMut(usize) -> *mut f32) {
+        assert_eq!(fused.len(), self.total_elems);
+        let mut off = 0;
+        for &(idx, n) in &self.layers {
+            let dst = layer_mut(idx);
+            // SAFETY: callers hand out disjoint per-layer buffers of length n.
+            unsafe {
+                std::ptr::copy_nonoverlapping(fused[off..].as_ptr(), dst, n);
+            }
+            off += n;
+        }
+    }
+
+    /// Safe scatter into a Vec-of-Vecs layer store.
+    pub fn scatter_into(&self, fused: &[f32], layers: &mut [Vec<f32>]) {
+        assert_eq!(fused.len(), self.total_elems);
+        let mut off = 0;
+        for &(idx, n) in &self.layers {
+            layers[idx].copy_from_slice(&fused[off..off + n]);
+            off += n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_respects_cap() {
+        let plan = FusionPlan::greedy(&[10, 20, 30, 40], 50);
+        // [10,20] -> 30; +30 would be 60 > 50 -> new bucket [30]; +40 > 50 -> [40]
+        assert_eq!(plan.n_buckets(), 3);
+        assert_eq!(plan.buckets[0].layers, vec![(0, 10), (1, 20)]);
+        assert_eq!(plan.buckets[1].layers, vec![(2, 30)]);
+        assert_eq!(plan.buckets[2].layers, vec![(3, 40)]);
+    }
+
+    #[test]
+    fn oversized_layer_gets_own_bucket() {
+        let plan = FusionPlan::greedy(&[100, 5], 10);
+        assert_eq!(plan.n_buckets(), 2);
+        assert_eq!(plan.buckets[0].total_elems, 100);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert_eq!(FusionPlan::greedy(&[], 10).n_buckets(), 0);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let layers = vec![vec![1.0f32, 2.0], vec![3.0], vec![4.0, 5.0, 6.0]];
+        let plan = FusionPlan::greedy(&[2, 1, 3], 100);
+        assert_eq!(plan.n_buckets(), 1);
+        let b = &plan.buckets[0];
+        let fused = b.gather(|i| layers[i].as_slice());
+        assert_eq!(fused, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let mut out = vec![vec![0.0f32; 2], vec![0.0], vec![0.0; 3]];
+        b.scatter_into(&fused, &mut out);
+        assert_eq!(out, layers);
+    }
+
+    #[test]
+    fn all_layers_covered_exactly_once() {
+        let sizes = [3usize, 7, 1, 9, 2, 8];
+        let plan = FusionPlan::greedy(&sizes, 10);
+        let mut seen = vec![false; sizes.len()];
+        for b in &plan.buckets {
+            let mut sum = 0;
+            for &(i, n) in &b.layers {
+                assert!(!seen[i]);
+                seen[i] = true;
+                assert_eq!(n, sizes[i]);
+                sum += n;
+            }
+            assert_eq!(sum, b.total_elems);
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,226 @@
+//! Point-to-point transport abstraction under the collectives.
+//!
+//! [`LocalTransport`] is the in-process fabric: one unbounded channel per
+//! ordered rank pair, real data movement, real numerics — the substitute
+//! for the paper's CUDA-aware MPI (DESIGN.md §Substitutions).  Worker
+//! threads each own one endpoint.
+//!
+//! The message unit is `Vec<u32>` words: gradients travel as bit-cast f32,
+//! compressed residuals in their §5.3 wire format.  Byte accounting for
+//! the cost model is `4 * words`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// Point-to-point message transport between ranks.
+pub trait Transport {
+    fn rank(&self) -> usize;
+    fn world(&self) -> usize;
+    /// Send `msg` to rank `to`.  Non-blocking (buffered fabric).
+    fn send(&self, to: usize, msg: Vec<u32>);
+    /// Blocking receive of the next message from rank `from`.
+    fn recv(&self, from: usize) -> Vec<u32>;
+
+    /// Symmetric exchange (both sides call with each other's rank).
+    fn exchange(&self, peer: usize, msg: Vec<u32>) -> Vec<u32> {
+        self.send(peer, msg);
+        self.recv(peer)
+    }
+}
+
+/// Traffic counters shared by all endpoints of a fabric (for tests and
+/// the bandwidth bench).
+#[derive(Default, Debug)]
+pub struct TrafficStats {
+    pub messages: AtomicU64,
+    pub words: AtomicU64,
+}
+
+impl TrafficStats {
+    pub fn bytes(&self) -> u64 {
+        self.words.load(Ordering::Relaxed) * 4
+    }
+
+    pub fn message_count(&self) -> u64 {
+        self.messages.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.messages.store(0, Ordering::Relaxed);
+        self.words.store(0, Ordering::Relaxed);
+    }
+}
+
+/// In-process fabric: build once, split into per-rank endpoints.
+pub struct LocalFabric {
+    endpoints: Vec<Option<LocalTransport>>,
+    pub stats: Arc<TrafficStats>,
+}
+
+impl LocalFabric {
+    pub fn new(world: usize) -> Self {
+        assert!(world >= 1);
+        let stats = Arc::new(TrafficStats::default());
+        // txs[from][to], rxs[to][from]
+        let mut txs: Vec<Vec<Option<Sender<Vec<u32>>>>> =
+            (0..world).map(|_| (0..world).map(|_| None).collect()).collect();
+        let mut rxs: Vec<Vec<Option<Receiver<Vec<u32>>>>> =
+            (0..world).map(|_| (0..world).map(|_| None).collect()).collect();
+        for from in 0..world {
+            for to in 0..world {
+                let (tx, rx) = channel();
+                txs[from][to] = Some(tx);
+                rxs[to][from] = Some(rx);
+            }
+        }
+        let mut endpoints = Vec::with_capacity(world);
+        for (rank, rx_row) in rxs.into_iter().enumerate() {
+            let senders: Vec<Sender<Vec<u32>>> = (0..world)
+                .map(|to| txs[rank][to].take().expect("sender taken twice"))
+                .collect();
+            let receivers: Vec<Receiver<Vec<u32>>> =
+                rx_row.into_iter().map(|r| r.expect("receiver missing")).collect();
+            endpoints.push(Some(LocalTransport {
+                rank,
+                world,
+                senders,
+                receivers,
+                stats: Arc::clone(&stats),
+            }));
+        }
+        LocalFabric { endpoints, stats }
+    }
+
+    /// Take the endpoint for `rank` (each may be taken once, then moved
+    /// into its worker thread).
+    pub fn take(&mut self, rank: usize) -> LocalTransport {
+        self.endpoints[rank].take().expect("endpoint already taken")
+    }
+
+    /// Take all endpoints in rank order.
+    pub fn take_all(&mut self) -> Vec<LocalTransport> {
+        (0..self.endpoints.len()).map(|r| self.take(r)).collect()
+    }
+}
+
+/// One rank's view of the [`LocalFabric`].
+pub struct LocalTransport {
+    rank: usize,
+    world: usize,
+    senders: Vec<Sender<Vec<u32>>>,
+    receivers: Vec<Receiver<Vec<u32>>>,
+    stats: Arc<TrafficStats>,
+}
+
+impl Transport for LocalTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send(&self, to: usize, msg: Vec<u32>) {
+        self.stats.messages.fetch_add(1, Ordering::Relaxed);
+        self.stats.words.fetch_add(msg.len() as u64, Ordering::Relaxed);
+        self.senders[to].send(msg).expect("peer endpoint dropped");
+    }
+
+    fn recv(&self, from: usize) -> Vec<u32> {
+        self.receivers[from].recv().expect("peer endpoint dropped")
+    }
+}
+
+/// Bit-cast helpers between the f32 world and the u32 wire.
+pub fn f32s_to_words(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+pub fn words_to_f32s(ws: &[u32]) -> Vec<f32> {
+    ws.iter().map(|&w| f32::from_bits(w)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn send_recv_pair() {
+        let mut fabric = LocalFabric::new(2);
+        let a = fabric.take(0);
+        let b = fabric.take(1);
+        let h = thread::spawn(move || {
+            b.send(0, vec![1, 2, 3]);
+            b.recv(0)
+        });
+        assert_eq!(a.recv(1), vec![1, 2, 3]);
+        a.send(1, vec![9]);
+        assert_eq!(h.join().unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn exchange_is_symmetric() {
+        let mut fabric = LocalFabric::new(2);
+        let a = fabric.take(0);
+        let b = fabric.take(1);
+        let h = thread::spawn(move || b.exchange(0, vec![20]));
+        let got_a = a.exchange(1, vec![10]);
+        assert_eq!(got_a, vec![20]);
+        assert_eq!(h.join().unwrap(), vec![10]);
+    }
+
+    #[test]
+    fn self_send_works() {
+        let mut fabric = LocalFabric::new(1);
+        let a = fabric.take(0);
+        a.send(0, vec![7]);
+        assert_eq!(a.recv(0), vec![7]);
+    }
+
+    #[test]
+    fn messages_ordered_per_pair() {
+        let mut fabric = LocalFabric::new(2);
+        let a = fabric.take(0);
+        let b = fabric.take(1);
+        for i in 0..100u32 {
+            a.send(1, vec![i]);
+        }
+        for i in 0..100u32 {
+            assert_eq!(b.recv(0), vec![i]);
+        }
+    }
+
+    #[test]
+    fn stats_count_traffic() {
+        let mut fabric = LocalFabric::new(2);
+        let stats = Arc::clone(&fabric.stats);
+        let a = fabric.take(0);
+        let b = fabric.take(1);
+        a.send(1, vec![0; 10]);
+        b.recv(0);
+        assert_eq!(stats.message_count(), 1);
+        assert_eq!(stats.bytes(), 40);
+        stats.reset();
+        assert_eq!(stats.bytes(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "endpoint already taken")]
+    fn endpoint_single_ownership() {
+        let mut fabric = LocalFabric::new(2);
+        let _a = fabric.take(0);
+        let _again = fabric.take(0);
+    }
+
+    #[test]
+    fn word_casts_roundtrip() {
+        let xs = vec![1.5f32, -0.0, f32::MIN_POSITIVE];
+        let back = words_to_f32s(&f32s_to_words(&xs));
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! Baseline compression schemes from the paper's related work (§3),
+//! implemented for comparison benches and ablations:
+//!
+//! * [`strom_threshold`] — Strom (2015): fixed constant threshold, 1-bit
+//!   sign quantization of the sent values (the paper's §5.2.3 notes
+//!   RedSync's same-sign scheme saves that sign bit).
+//! * [`AdaCompressor`] — AdaComp (Chen et al. 2017): bin-based selection
+//!   with a locally adaptive threshold per bin.
+//! * [`delta_encode_indices`] / [`delta_decode_indices`] — DGC's
+//!   index-distance encoding (Lin et al. 2017 §5.3 discussion): RedSync
+//!   deliberately does *not* use it (hard to parallelize on GPU); here it
+//!   quantifies the wire-size trade-off as an ablation.
+
+use crate::tensor::SparseTensor;
+
+/// Strom (2015): transmit every element with |x| above a fixed constant
+/// threshold, quantized to ±τ (1 sign bit + shared magnitude).  Returns
+/// the selected set with ±τ values and leaves the residual handling to
+/// the caller (same masking flow as RedSync).
+pub fn strom_threshold(x: &[f32], tau: f32) -> SparseTensor {
+    let mut s = SparseTensor::default();
+    for (i, &v) in x.iter().enumerate() {
+        if v > tau {
+            s.push(i as u32, tau);
+        } else if v < -tau {
+            s.push(i as u32, -tau);
+        }
+    }
+    s
+}
+
+/// Wire size (u32 words) of a Strom message: len + indices + packed sign
+/// bits + one magnitude.  (Sign bits packed 32/word.)
+pub fn strom_words(k: usize) -> usize {
+    1 + k + k.div_ceil(32) + 1
+}
+
+/// AdaComp (Chen et al. 2017): split the residual into fixed-size bins;
+/// within each bin select every element whose |value| exceeds the bin's
+/// local maximum scaled by `ratio` — a locally-adaptive threshold that
+/// self-adjusts across layers and minibatches.
+pub struct AdaCompressor {
+    pub bin_size: usize,
+    /// Fraction of the bin maximum above which elements are sent
+    /// (AdaComp's g·max heuristic; their default keeps |bin| ≈ 1 extra).
+    pub ratio: f32,
+}
+
+impl Default for AdaCompressor {
+    fn default() -> Self {
+        AdaCompressor { bin_size: 512, ratio: 0.999 }
+    }
+}
+
+impl AdaCompressor {
+    /// Select the communication-set.  Every bin contributes at least its
+    /// maximum element (AdaComp always sends the bin max).
+    pub fn select(&self, x: &[f32]) -> SparseTensor {
+        let mut out = SparseTensor::default();
+        for (b, bin) in x.chunks(self.bin_size).enumerate() {
+            let base = b * self.bin_size;
+            let mut max = 0f32;
+            for &v in bin {
+                let a = v.abs();
+                if a > max {
+                    max = a;
+                }
+            }
+            if max == 0.0 {
+                continue;
+            }
+            let thr = max * self.ratio;
+            for (i, &v) in bin.iter().enumerate() {
+                if v.abs() >= thr {
+                    out.push((base + i) as u32, v);
+                }
+            }
+        }
+        out
+    }
+
+    /// Mean selected density over a buffer (for comparison tables).
+    pub fn density(&self, x: &[f32]) -> f64 {
+        if x.is_empty() {
+            return 0.0;
+        }
+        self.select(x).len() as f64 / x.len() as f64
+    }
+}
+
+/// DGC-style index compression: ascending indices → gap-1 deltas,
+/// varint-encoded into bytes (LEB128), then packed into u32 words.
+/// Returns the encoded words.
+pub fn delta_encode_indices(indices: &[u32]) -> Vec<u32> {
+    let mut bytes: Vec<u8> = Vec::with_capacity(indices.len());
+    let mut prev = 0u32;
+    for (pos, &i) in indices.iter().enumerate() {
+        debug_assert!(pos == 0 || i > prev, "indices must ascend");
+        let mut gap = if pos == 0 { i } else { i - prev - 1 };
+        prev = i;
+        loop {
+            let b = (gap & 0x7f) as u8;
+            gap >>= 7;
+            if gap == 0 {
+                bytes.push(b);
+                break;
+            }
+            bytes.push(b | 0x80);
+        }
+    }
+    // prefix with the byte count, pack LE into words
+    let mut words = Vec::with_capacity(2 + bytes.len() / 4);
+    words.push(indices.len() as u32);
+    words.push(bytes.len() as u32);
+    for chunk in bytes.chunks(4) {
+        let mut w = 0u32;
+        for (j, &b) in chunk.iter().enumerate() {
+            w |= (b as u32) << (8 * j);
+        }
+        words.push(w);
+    }
+    words
+}
+
+/// Inverse of [`delta_encode_indices`].
+pub fn delta_decode_indices(words: &[u32]) -> Option<Vec<u32>> {
+    let n = *words.first()? as usize;
+    let n_bytes = *words.get(1)? as usize;
+    let payload = &words[2..];
+    if payload.len() * 4 < n_bytes {
+        return None;
+    }
+    let byte_at = |i: usize| ((payload[i / 4] >> (8 * (i % 4))) & 0xff) as u8;
+    let mut out = Vec::with_capacity(n);
+    let mut pos = 0usize;
+    let mut prev = 0u32;
+    for count in 0..n {
+        let mut gap = 0u32;
+        let mut shift = 0;
+        loop {
+            if pos >= n_bytes {
+                return None;
+            }
+            let b = byte_at(pos);
+            pos += 1;
+            gap |= ((b & 0x7f) as u32) << shift;
+            if b & 0x80 == 0 {
+                break;
+            }
+            shift += 7;
+        }
+        let i = if count == 0 { gap } else { prev + 1 + gap };
+        out.push(i);
+        prev = i;
+    }
+    Some(out)
+}
+
+/// Encoded index words under delta-varint (for wire-size comparisons).
+pub fn delta_index_words(indices: &[u32]) -> usize {
+    delta_encode_indices(indices).len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure};
+
+    #[test]
+    fn strom_selects_both_signs_at_tau() {
+        let x = vec![0.5, -2.0, 1.5, 0.0, -0.4];
+        let s = strom_threshold(&x, 1.0);
+        assert_eq!(s.indices, vec![1, 2]);
+        assert_eq!(s.values, vec![-1.0, 1.0]);
+    }
+
+    #[test]
+    fn strom_wire_smaller_than_plain_but_larger_than_redsync_quant() {
+        // k indices + k sign bits + 1 magnitude vs RedSync's k indices + 1
+        // mean — the §5.2.3 "we save the sign bit" comparison
+        let k = 1024;
+        let strom = strom_words(k);
+        let plain = crate::compression::message::plain_words(k);
+        let quant = crate::compression::message::quant_words(k);
+        assert!(strom < plain);
+        assert!(strom > quant);
+        assert_eq!(strom - quant, k / 32); // exactly the packed sign bits
+    }
+
+    #[test]
+    fn adacomp_every_nonzero_bin_contributes() {
+        let mut x = vec![0f32; 2048];
+        x[10] = 1.0;
+        x[600] = -3.0;
+        x[1999] = 0.25;
+        let c = AdaCompressor { bin_size: 512, ratio: 0.999 };
+        let s = c.select(&x);
+        assert_eq!(s.indices, vec![10, 600, 1999]);
+    }
+
+    #[test]
+    fn adacomp_ratio_controls_density() {
+        let mut g = crate::util::proptest::Gen::new(5);
+        let x = g.vec_normal(8192, 1.0);
+        let tight = AdaCompressor { bin_size: 256, ratio: 0.999 };
+        let loose = AdaCompressor { bin_size: 256, ratio: 0.5 };
+        assert!(loose.density(&x) > tight.density(&x));
+        // tight keeps ~1 per bin
+        let d = tight.density(&x);
+        assert!((d - 1.0 / 256.0).abs() < 1.0 / 256.0, "density {d}");
+    }
+
+    #[test]
+    fn adacomp_misses_global_topk_sometimes() {
+        // the paper's §5.2.2 criticism: bin-local thresholds can miss
+        // globally important elements.  Construct a bin holding the 2nd
+        // and 3rd largest elements: only its max survives.
+        let mut x = vec![0.01f32; 1024];
+        x[0] = 10.0; // bin 0 max
+        x[600] = 9.0; // bin 1 max
+        x[601] = 8.9; // bin 1 runner-up: globally 3rd, locally cut
+        let c = AdaCompressor { bin_size: 512, ratio: 0.999 };
+        let s = c.select(&x);
+        assert!(s.indices.contains(&0) && s.indices.contains(&600));
+        assert!(!s.indices.contains(&601), "bin-local threshold should cut it");
+        // while global top-3 keeps it
+        let g = crate::compression::exact_topk(&x, 3, None);
+        assert!(g.sparse.indices.contains(&601));
+    }
+
+    #[test]
+    fn delta_roundtrip() {
+        let idx = vec![0u32, 1, 5, 130, 131, 1_000_000];
+        let enc = delta_encode_indices(&idx);
+        assert_eq!(delta_decode_indices(&enc).unwrap(), idx);
+    }
+
+    #[test]
+    fn prop_delta_roundtrip_and_compression() {
+        check(40, |g| {
+            let n = g.size(1..4000);
+            let mut idx: Vec<u32> = (0..(n * 8) as u32).collect();
+            g.rng().shuffle(&mut idx);
+            idx.truncate(n);
+            idx.sort_unstable();
+            let enc = delta_encode_indices(&idx);
+            let dec = delta_decode_indices(&enc).ok_or("decode failed")?;
+            ensure(dec == idx, "roundtrip")?;
+            // dense index sets compress below 1 word/index
+            ensure(enc.len() <= idx.len() + 2, "never expands past raw")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn delta_compresses_dense_top1pct_indices() {
+        // density 1% -> mean gap 100 -> 1 varint byte each -> ~4x smaller
+        let mut g = crate::util::proptest::Gen::new(9);
+        let n = 100_000;
+        let x = g.vec_normal(n, 1.0);
+        let sel = crate::compression::exact_topk(&x, n / 100, None);
+        let raw_words = sel.sparse.len();
+        let enc_words = delta_index_words(&sel.sparse.indices) - 2;
+        assert!(
+            (enc_words as f64) < 0.33 * raw_words as f64,
+            "delta {enc_words} vs raw {raw_words}"
+        );
+    }
+
+    #[test]
+    fn delta_decode_rejects_truncation() {
+        let idx: Vec<u32> = (0..100).map(|i| i * 1000).collect();
+        let enc = delta_encode_indices(&idx);
+        assert!(delta_decode_indices(&enc[..enc.len() - 1]).is_none());
+        assert!(delta_decode_indices(&[]).is_none());
+    }
+}

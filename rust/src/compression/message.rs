@@ -1,0 +1,227 @@
+//! Wire format for compressed residuals (§5.3).
+//!
+//! Indices and values are packaged into a *single* message (one allgather,
+//! not two) with a leading length word, exactly as the paper describes:
+//!
+//! ```text
+//! plain RGC:      [len][idx_0 .. idx_{len-1}][bits(val_0) .. bits(val_{len-1})]
+//! quantized RGC:  [len][idx_0 .. idx_{len-1}][bits(mean)]
+//! ```
+//!
+//! Everything is a `u32` word; values are bit-cast f32 (no precision loss,
+//! no endianness games inside one process).  The leading length makes
+//! variable-length messages (threshold binary search) self-describing when
+//! ranks' messages are concatenated by the allgather.
+
+use super::quant::QuantizedSet;
+use crate::tensor::SparseTensor;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum WireError {
+    #[error("message truncated: need {need} words, have {have}")]
+    Truncated { need: usize, have: usize },
+    #[error("empty buffer")]
+    Empty,
+}
+
+/// Words required to encode a plain message of k elements.
+pub fn plain_words(k: usize) -> usize {
+    1 + 2 * k
+}
+
+/// Words required to encode a quantized message of k elements.
+pub fn quant_words(k: usize) -> usize {
+    1 + k + 1
+}
+
+/// Encode a plain (index, value) message.
+pub fn pack_plain(s: &SparseTensor) -> Vec<u32> {
+    let mut out = Vec::with_capacity(plain_words(s.len()));
+    out.push(s.len() as u32);
+    out.extend_from_slice(&s.indices);
+    out.extend(s.values.iter().map(|v| v.to_bits()));
+    out
+}
+
+/// Encode a quantized (indices + mean) message.
+pub fn pack_quant(q: &QuantizedSet) -> Vec<u32> {
+    let mut out = Vec::with_capacity(quant_words(q.len()));
+    out.push(q.indices.len() as u32);
+    out.extend_from_slice(&q.indices);
+    out.push(q.mean.to_bits());
+    out
+}
+
+/// Decode one plain message from the front of `buf`; returns (tensor,
+/// words consumed).
+pub fn unpack_plain(buf: &[u32]) -> Result<(SparseTensor, usize), WireError> {
+    let &len = buf.first().ok_or(WireError::Empty)?;
+    let len = len as usize;
+    let need = plain_words(len);
+    if buf.len() < need {
+        return Err(WireError::Truncated { need, have: buf.len() });
+    }
+    let indices = buf[1..1 + len].to_vec();
+    let values = buf[1 + len..need].iter().map(|&b| f32::from_bits(b)).collect();
+    Ok((SparseTensor::new(indices, values), need))
+}
+
+/// Decode one quantized message from the front of `buf`.
+pub fn unpack_quant(buf: &[u32]) -> Result<(QuantizedSet, usize), WireError> {
+    let &len = buf.first().ok_or(WireError::Empty)?;
+    let len = len as usize;
+    let need = quant_words(len);
+    if buf.len() < need {
+        return Err(WireError::Truncated { need, have: buf.len() });
+    }
+    let indices = buf[1..1 + len].to_vec();
+    let mean = f32::from_bits(buf[need - 1]);
+    Ok((QuantizedSet { indices, mean }, need))
+}
+
+/// Decode a concatenation of `n_ranks` plain messages (an allgather
+/// result), scatter-adding each into `dense` with `scale` — the §5.4
+/// decompression loop.  Returns the number of (index, value) pairs applied.
+pub fn apply_gathered_plain(
+    buf: &[u32],
+    n_ranks: usize,
+    dense: &mut [f32],
+    scale: f32,
+) -> Result<usize, WireError> {
+    let mut off = 0;
+    let mut applied = 0;
+    for _ in 0..n_ranks {
+        let (s, used) = unpack_plain(&buf[off..])?;
+        s.scatter_add(dense, scale);
+        applied += s.len();
+        off += used;
+    }
+    Ok(applied)
+}
+
+/// Quantized variant of [`apply_gathered_plain`]: each rank contributes
+/// indices + one mean.
+pub fn apply_gathered_quant(
+    buf: &[u32],
+    n_ranks: usize,
+    dense: &mut [f32],
+    scale: f32,
+) -> Result<usize, WireError> {
+    let mut off = 0;
+    let mut applied = 0;
+    for _ in 0..n_ranks {
+        let (q, used) = unpack_quant(&buf[off..])?;
+        let add = q.mean * scale;
+        for &i in &q.indices {
+            dense[i as usize] += add;
+        }
+        applied += q.len();
+        off += used;
+    }
+    Ok(applied)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure};
+
+    fn sample() -> SparseTensor {
+        SparseTensor::new(vec![3, 17, 42], vec![-1.5, 2.25, 1e-20])
+    }
+
+    #[test]
+    fn plain_roundtrip() {
+        let s = sample();
+        let buf = pack_plain(&s);
+        assert_eq!(buf.len(), plain_words(3));
+        let (t, used) = unpack_plain(&buf).unwrap();
+        assert_eq!(used, buf.len());
+        assert_eq!(t, s);
+    }
+
+    #[test]
+    fn plain_roundtrip_bitexact_specials() {
+        let s = SparseTensor::new(vec![0, 1, 2], vec![f32::MIN_POSITIVE, -0.0, 1e38]);
+        let (t, _) = unpack_plain(&pack_plain(&s)).unwrap();
+        assert_eq!(t.values[0].to_bits(), f32::MIN_POSITIVE.to_bits());
+        assert_eq!(t.values[1].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn quant_roundtrip() {
+        let q = QuantizedSet { indices: vec![1, 9], mean: 0.125 };
+        let buf = pack_quant(&q);
+        assert_eq!(buf.len(), quant_words(2));
+        let (r, used) = unpack_quant(&buf).unwrap();
+        assert_eq!(used, buf.len());
+        assert_eq!(r, q);
+    }
+
+    #[test]
+    fn empty_messages() {
+        let s = SparseTensor::default();
+        let (t, used) = unpack_plain(&pack_plain(&s)).unwrap();
+        assert_eq!(used, 1);
+        assert!(t.is_empty());
+        let q = QuantizedSet { indices: vec![], mean: 0.5 };
+        let (r, used) = unpack_quant(&pack_quant(&q)).unwrap();
+        assert_eq!(used, 2);
+        assert!(r.is_empty());
+        assert_eq!(r.mean, 0.5);
+    }
+
+    #[test]
+    fn truncated_detected() {
+        let mut buf = pack_plain(&sample());
+        buf.pop();
+        assert!(matches!(unpack_plain(&buf), Err(WireError::Truncated { .. })));
+        assert_eq!(unpack_plain(&[]), Err(WireError::Empty));
+    }
+
+    #[test]
+    fn quantized_message_halves_bandwidth() {
+        // the paper's bandwidth claim: quant message ~ half of plain for
+        // the same k (k idx + 1 val vs k idx + k val)
+        let k = 1000;
+        assert!(quant_words(k) * 2 <= plain_words(k) + 3);
+    }
+
+    #[test]
+    fn gathered_apply_averages_ranks() {
+        // two ranks contribute overlapping indices; scale = 1/2 averages
+        let a = SparseTensor::new(vec![0, 2], vec![2.0, 4.0]);
+        let b = SparseTensor::new(vec![2, 3], vec![6.0, 8.0]);
+        let mut buf = pack_plain(&a);
+        buf.extend(pack_plain(&b));
+        let mut dense = vec![0f32; 4];
+        let n = apply_gathered_plain(&buf, 2, &mut dense, 0.5).unwrap();
+        assert_eq!(n, 4);
+        assert_eq!(dense, vec![1.0, 0.0, 5.0, 4.0]);
+    }
+
+    #[test]
+    fn gathered_apply_quant() {
+        let qa = QuantizedSet { indices: vec![0, 1], mean: 2.0 };
+        let qb = QuantizedSet { indices: vec![1], mean: -4.0 };
+        let mut buf = pack_quant(&qa);
+        buf.extend(pack_quant(&qb));
+        let mut dense = vec![0f32; 2];
+        apply_gathered_quant(&buf, 2, &mut dense, 0.5).unwrap();
+        assert_eq!(dense, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn prop_roundtrip_any_message() {
+        check(60, |g| {
+            let n = g.size(0..500);
+            let mut s = SparseTensor::default();
+            for i in 0..n {
+                s.push(i as u32 * 3, g.f32(-100.0..100.0));
+            }
+            let (t, used) = unpack_plain(&pack_plain(&s)).map_err(|e| e.to_string())?;
+            ensure(used == plain_words(n), "length")?;
+            ensure(t == s, "roundtrip mismatch")
+        });
+    }
+}

@@ -1,0 +1,302 @@
+//! Residual Gradient Compression — the paper's core machinery.
+//!
+//! * [`select`]   — communication-set selection (Alg. 2/3 + exact baseline)
+//! * [`quant`]    — same-sign mean quantization (§5.2.3)
+//! * [`message`]  — single-message wire format `(len, idx…, val…)` (§5.3)
+//! * [`residual`] — residual store + momentum correction/masking (Alg. 4)
+//!
+//! [`LayerCompressor`] ties them together as the per-layer pipeline the
+//! coordinator drives: accumulate → select → (quantize) → pack, plus the
+//! §5.5 size-based method policy in [`Method::for_size`].
+
+pub mod baselines;
+pub mod message;
+pub mod quant;
+pub mod residual;
+pub mod select;
+
+pub use quant::{QuantizedSet, SignAlternator};
+pub use residual::{Accumulation, ResidualState};
+pub use select::{
+    exact_topk, threshold_binary_search, trimmed_topk, BinarySearchParams,
+    CachedThresholdSelector, Selection,
+};
+
+use crate::tensor::SparseTensor;
+
+/// Selection method per layer (Alg. 5 dispatch).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Parameter too small to be worth compressing: dense allreduce.
+    Dense,
+    /// Exact top-k (the radixSelect-baseline; not chosen by the policy but
+    /// selectable for ablations).
+    ExactTopk,
+    /// Algorithm 2 — sizes in [thsd1, thsd2).
+    TrimmedTopk,
+    /// Algorithm 3 with threshold caching — sizes >= thsd2.
+    SampledBinarySearch,
+}
+
+/// §5.5 policy thresholds, in *bytes* of layer parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyThresholds {
+    /// Below this: dense allreduce (default 128 KB).
+    pub thsd1: usize,
+    /// Above this: sampled threshold binary search (default 4 MB).
+    pub thsd2: usize,
+}
+
+impl Default for PolicyThresholds {
+    fn default() -> Self {
+        PolicyThresholds { thsd1: 128 * 1024, thsd2: 4 * 1024 * 1024 }
+    }
+}
+
+impl Method {
+    /// The paper's rule: dense < 128 KB <= trimmed < 4 MB <= binary search.
+    pub fn for_size(param_bytes: usize, t: PolicyThresholds) -> Method {
+        if param_bytes < t.thsd1 {
+            Method::Dense
+        } else if param_bytes < t.thsd2 {
+            Method::TrimmedTopk
+        } else {
+            Method::SampledBinarySearch
+        }
+    }
+}
+
+/// Tunables for one compression pipeline instance.
+#[derive(Clone, Copy, Debug)]
+pub struct CompressorConfig {
+    /// Density D: fraction of elements selected (paper default 1e-3).
+    pub density: f64,
+    /// Trim ratio decrement ε for Algorithm 2.
+    pub trim_eps: f32,
+    /// Binary-search parameters for Algorithm 3.
+    pub bs: BinarySearchParams,
+    /// Threshold-reuse interval for the sampled variant (paper: 5).
+    pub interval: usize,
+    /// Quantize the communication-set (§5.2.3).  Incompatible with
+    /// threshold caching — quantized layers re-search every iteration, as
+    /// the paper notes.
+    pub quantize: bool,
+}
+
+impl Default for CompressorConfig {
+    fn default() -> Self {
+        CompressorConfig {
+            density: 1e-3,
+            trim_eps: 0.2,
+            bs: BinarySearchParams::default(),
+            interval: 5,
+            quantize: false,
+        }
+    }
+}
+
+impl CompressorConfig {
+    /// Communication-set size for a layer of n elements (>= 1).
+    pub fn k_for(&self, n: usize) -> usize {
+        ((n as f64 * self.density).ceil() as usize).clamp(1, n)
+    }
+}
+
+/// The compressed product of one layer-iteration, ready for allgather.
+#[derive(Clone, Debug)]
+pub enum CompressedMessage {
+    Plain(SparseTensor),
+    Quantized(QuantizedSet),
+}
+
+impl CompressedMessage {
+    pub fn n_selected(&self) -> usize {
+        match self {
+            CompressedMessage::Plain(s) => s.len(),
+            CompressedMessage::Quantized(q) => q.len(),
+        }
+    }
+
+    /// Encoded size in u32 words.
+    pub fn wire_words(&self) -> usize {
+        match self {
+            CompressedMessage::Plain(s) => message::plain_words(s.len()),
+            CompressedMessage::Quantized(q) => message::quant_words(q.len()),
+        }
+    }
+
+    pub fn pack(&self) -> Vec<u32> {
+        match self {
+            CompressedMessage::Plain(s) => message::pack_plain(s),
+            CompressedMessage::Quantized(q) => message::pack_quant(q),
+        }
+    }
+}
+
+/// Per-layer compression pipeline: residual state + selection method +
+/// quantization alternator + threshold cache.
+#[derive(Clone, Debug)]
+pub struct LayerCompressor {
+    pub method: Method,
+    pub cfg: CompressorConfig,
+    pub residual: ResidualState,
+    alternator: SignAlternator,
+    cached: CachedThresholdSelector,
+}
+
+impl LayerCompressor {
+    pub fn new(n: usize, method: Method, accumulation: Accumulation, cfg: CompressorConfig) -> Self {
+        LayerCompressor {
+            method,
+            cfg,
+            residual: ResidualState::new(n, accumulation),
+            alternator: SignAlternator::new(),
+            cached: CachedThresholdSelector::new(cfg.interval, cfg.bs),
+        }
+    }
+
+    /// Accumulate this iteration's gradient into the residual.
+    pub fn accumulate(&mut self, grad: &[f32]) {
+        self.residual.accumulate(grad);
+    }
+
+    /// Select + (quantize) + mask.  Returns the message to allgather.
+    pub fn compress(&mut self) -> CompressedMessage {
+        let n = self.residual.len();
+        let k = self.cfg.k_for(n);
+        let sign = if self.cfg.quantize { Some(self.alternator.next_sign()) } else { None };
+
+        let sel = match self.method {
+            Method::Dense => {
+                // callers shouldn't compress Dense layers; degrade gracefully
+                exact_topk(self.residual.residual(), k, sign)
+            }
+            Method::ExactTopk => exact_topk(self.residual.residual(), k, sign),
+            Method::TrimmedTopk => {
+                trimmed_topk(self.residual.residual(), k, self.cfg.trim_eps, sign)
+            }
+            Method::SampledBinarySearch => {
+                if self.cfg.quantize {
+                    // §6.4: threshold sharing is incompatible with
+                    // quantization (sign alternates) — search every time.
+                    threshold_binary_search(self.residual.residual(), k, self.cfg.bs, sign)
+                } else {
+                    self.cached.select(self.residual.residual(), k, sign)
+                }
+            }
+        };
+
+        self.residual.mask(&sel.sparse);
+        if self.cfg.quantize {
+            CompressedMessage::Quantized(QuantizedSet::from_sparse(&sel.sparse))
+        } else {
+            CompressedMessage::Plain(sel.sparse)
+        }
+    }
+
+    pub fn reset(&mut self) {
+        let n = self.residual.len();
+        self.residual = ResidualState::new(n, self.residual.accumulation);
+        self.alternator = SignAlternator::new();
+        self.cached.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure};
+
+    #[test]
+    fn policy_matches_paper_rules() {
+        let t = PolicyThresholds::default();
+        assert_eq!(Method::for_size(64 * 1024, t), Method::Dense);
+        assert_eq!(Method::for_size(128 * 1024, t), Method::TrimmedTopk);
+        assert_eq!(Method::for_size(1024 * 1024, t), Method::TrimmedTopk);
+        assert_eq!(Method::for_size(4 * 1024 * 1024, t), Method::SampledBinarySearch);
+        assert_eq!(Method::for_size(64 << 20, t), Method::SampledBinarySearch);
+    }
+
+    #[test]
+    fn k_for_density() {
+        let cfg = CompressorConfig { density: 1e-3, ..Default::default() };
+        assert_eq!(cfg.k_for(1_000_000), 1000);
+        assert_eq!(cfg.k_for(10), 1); // clamped to >= 1
+        assert_eq!(cfg.k_for(500), 1);
+    }
+
+    #[test]
+    fn compress_trimmed_returns_exactly_k() {
+        let cfg = CompressorConfig { density: 0.01, ..Default::default() };
+        let mut lc = LayerCompressor::new(10_000, Method::TrimmedTopk, Accumulation::Sgd, cfg);
+        let mut g = crate::util::proptest::Gen::new(1);
+        lc.accumulate(&g.vec_normal(10_000, 1.0));
+        let msg = lc.compress();
+        assert_eq!(msg.n_selected(), 100);
+    }
+
+    #[test]
+    fn compress_masks_residual() {
+        let cfg = CompressorConfig { density: 0.1, ..Default::default() };
+        let mut lc = LayerCompressor::new(1000, Method::ExactTopk, Accumulation::Sgd, cfg);
+        let mut g = crate::util::proptest::Gen::new(2);
+        lc.accumulate(&g.vec_normal(1000, 1.0));
+        let msg = lc.compress();
+        if let CompressedMessage::Plain(s) = &msg {
+            for &i in &s.indices {
+                assert_eq!(lc.residual.residual()[i as usize], 0.0);
+            }
+        } else {
+            panic!("expected plain");
+        }
+    }
+
+    #[test]
+    fn quantized_alternates_sign() {
+        let cfg = CompressorConfig { density: 0.01, quantize: true, ..Default::default() };
+        let mut lc = LayerCompressor::new(5000, Method::TrimmedTopk, Accumulation::Sgd, cfg);
+        let mut g = crate::util::proptest::Gen::new(3);
+        let grad = g.vec_normal(5000, 1.0);
+        lc.accumulate(&grad);
+        let m1 = lc.compress();
+        lc.accumulate(&grad);
+        let m2 = lc.compress();
+        match (m1, m2) {
+            (CompressedMessage::Quantized(a), CompressedMessage::Quantized(b)) => {
+                assert!(a.mean > 0.0, "first = top-k (positive)");
+                assert!(b.mean < 0.0, "second = bottom-k (negative)");
+            }
+            _ => panic!("expected quantized"),
+        }
+    }
+
+    #[test]
+    fn wire_words_accounting() {
+        let s = SparseTensor::new(vec![1, 2], vec![1.0, 2.0]);
+        assert_eq!(CompressedMessage::Plain(s.clone()).wire_words(), 5);
+        let q = QuantizedSet::from_sparse(&s);
+        assert_eq!(CompressedMessage::Quantized(q).wire_words(), 4);
+    }
+
+    #[test]
+    fn prop_compress_never_selects_more_than_2k_bs() {
+        check(25, |g| {
+            let n = g.usize_pow2(10, 15);
+            let cfg = CompressorConfig { density: 0.01, ..Default::default() };
+            let mut lc =
+                LayerCompressor::new(n, Method::SampledBinarySearch, Accumulation::Sgd, cfg);
+            for _ in 0..3 {
+                lc.accumulate(&g.vec_normal(n, 1.0));
+                let k = cfg.k_for(n);
+                let msg = lc.compress();
+                // binary search may exceed 2k slightly in cached iterations
+                // (threshold drift) but must stay near the target
+                ensure(
+                    msg.n_selected() >= 1 && msg.n_selected() <= 8 * k.max(1),
+                    format!("selected {} for k={k}", msg.n_selected()),
+                )?;
+            }
+            Ok(())
+        });
+    }
+}

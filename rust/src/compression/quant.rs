@@ -1,0 +1,143 @@
+//! Quantization of compressed residuals (§5.2.3).
+//!
+//! All elements of the communication-set share one sign (the selector runs
+//! in signed mode, alternating top-k / bottom-k per iteration), so the
+//! message carries only the indices plus a *single* f32 — the mean of the
+//! selected values — halving bandwidth vs (index, value) pairs.
+//!
+//! The paper never quantizes the model's output/softmax layer; that policy
+//! lives in `coordinator::policy`.
+
+use crate::tensor::SparseTensor;
+
+/// Per-layer alternation state: top-k on even calls, bottom-k on odd.
+#[derive(Clone, Debug, Default)]
+pub struct SignAlternator {
+    flip: bool,
+}
+
+impl SignAlternator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Sign for the *next* selection (+1 = top-k, -1 = bottom-k), advancing
+    /// the state.
+    pub fn next_sign(&mut self) -> f32 {
+        let s = if self.flip { -1.0 } else { 1.0 };
+        self.flip = !self.flip;
+        s
+    }
+
+    /// Peek without advancing.
+    pub fn peek_sign(&self) -> f32 {
+        if self.flip {
+            -1.0
+        } else {
+            1.0
+        }
+    }
+}
+
+/// A quantized communication-set: indices + one mean value.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedSet {
+    pub indices: Vec<u32>,
+    pub mean: f32,
+}
+
+impl QuantizedSet {
+    /// Quantize a (single-signed) selection: mean of its values.
+    pub fn from_sparse(s: &SparseTensor) -> Self {
+        let mean = if s.is_empty() { 0.0 } else { s.value_sum() / s.len() as f32 };
+        QuantizedSet { indices: s.indices.clone(), mean }
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Reconstruct the sparse tensor the receivers apply.
+    pub fn dequantize(&self) -> SparseTensor {
+        SparseTensor::with_constant_values(self.indices.clone(), self.mean)
+    }
+
+    /// Quantization error vs the original selection (L2 of value - mean).
+    pub fn error(&self, original: &SparseTensor) -> f32 {
+        original
+            .values
+            .iter()
+            .map(|&v| {
+                let d = (v - self.mean) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::select::exact_topk;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn alternator_flips() {
+        let mut a = SignAlternator::new();
+        assert_eq!(a.next_sign(), 1.0);
+        assert_eq!(a.next_sign(), -1.0);
+        assert_eq!(a.next_sign(), 1.0);
+        assert_eq!(a.peek_sign(), -1.0);
+        assert_eq!(a.peek_sign(), -1.0); // peek does not advance
+    }
+
+    #[test]
+    fn quantize_mean_of_values() {
+        let s = SparseTensor::new(vec![1, 5, 9], vec![2.0, 4.0, 6.0]);
+        let q = QuantizedSet::from_sparse(&s);
+        assert_eq!(q.mean, 4.0);
+        assert_eq!(q.dequantize().values, vec![4.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn quantize_empty() {
+        let q = QuantizedSet::from_sparse(&SparseTensor::default());
+        assert_eq!(q.mean, 0.0);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn quantized_mass_preserved() {
+        // sum(dequantized) == sum(original): mean * n == sum
+        let mut r = Pcg32::seeded(3);
+        let mut x = vec![0f32; 4096];
+        r.fill_normal(&mut x, 1.0);
+        let sel = exact_topk(&x, 64, Some(1.0));
+        let q = QuantizedSet::from_sparse(&sel.sparse);
+        let sum_q: f32 = q.dequantize().values.iter().sum();
+        assert!((sum_q - sel.sparse.value_sum()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn single_sign_selection_quantizes_with_right_sign() {
+        let mut r = Pcg32::seeded(7);
+        let mut x = vec![0f32; 2048];
+        r.fill_normal(&mut x, 1.0);
+        let pos = exact_topk(&x, 32, Some(1.0));
+        assert!(QuantizedSet::from_sparse(&pos.sparse).mean > 0.0);
+        let neg = exact_topk(&x, 32, Some(-1.0));
+        assert!(QuantizedSet::from_sparse(&neg.sparse).mean < 0.0);
+    }
+
+    #[test]
+    fn error_zero_for_constant_values() {
+        let s = SparseTensor::new(vec![0, 1], vec![3.0, 3.0]);
+        let q = QuantizedSet::from_sparse(&s);
+        assert_eq!(q.error(&s), 0.0);
+    }
+}

@@ -1,0 +1,199 @@
+//! Per-layer residual state with momentum correction and momentum factor
+//! masking (§5.7 / Algorithm 4, adopted from Deep Gradient Compression).
+//!
+//! Plain RGC accumulates raw gradients into the residual `V`.  Under
+//! momentum SGD that is wrong — the paper integrates DGC's *momentum
+//! correction*: the momentum buffer `U` is updated locally and `V`
+//! accumulates `U` (velocity), so delayed elements carry their momentum
+//! history.  *Momentum factor masking* zeroes both `V` and `U` at
+//! transmitted positions to stop stale momentum from re-applying.
+
+use crate::tensor::{axpy, SparseTensor};
+
+/// Optimizer flavor driving the accumulation rule (Alg. 4 lines 11-19).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Accumulation {
+    /// V += g
+    Sgd,
+    /// U = m U + g;  V += U
+    Momentum { momentum: f32 },
+    /// U = m U + g;  V += U + g
+    Nesterov { momentum: f32 },
+}
+
+/// Residual + momentum buffers for one compressed layer.
+#[derive(Clone, Debug)]
+pub struct ResidualState {
+    v: Vec<f32>,
+    u: Vec<f32>,
+    pub accumulation: Accumulation,
+}
+
+impl ResidualState {
+    pub fn new(n: usize, accumulation: Accumulation) -> Self {
+        ResidualState { v: vec![0.0; n], u: vec![0.0; n], accumulation }
+    }
+
+    pub fn len(&self) -> usize {
+        self.v.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.v.is_empty()
+    }
+
+    pub fn residual(&self) -> &[f32] {
+        &self.v
+    }
+
+    pub fn residual_mut(&mut self) -> &mut [f32] {
+        &mut self.v
+    }
+
+    pub fn momentum_buf(&self) -> &[f32] {
+        &self.u
+    }
+
+    /// Accumulate a (possibly weight-decayed, possibly clipped) gradient.
+    pub fn accumulate(&mut self, grad: &[f32]) {
+        assert_eq!(grad.len(), self.v.len());
+        match self.accumulation {
+            Accumulation::Sgd => axpy(&mut self.v, 1.0, grad),
+            Accumulation::Momentum { momentum } => {
+                for i in 0..grad.len() {
+                    self.u[i] = momentum * self.u[i] + grad[i];
+                    self.v[i] += self.u[i];
+                }
+            }
+            Accumulation::Nesterov { momentum } => {
+                for i in 0..grad.len() {
+                    self.u[i] = momentum * self.u[i] + grad[i];
+                    self.v[i] += self.u[i] + grad[i];
+                }
+            }
+        }
+    }
+
+    /// Momentum factor masking: zero V and U at the transmitted indices
+    /// (Alg. 4 lines 21-23).
+    pub fn mask(&mut self, sent: &SparseTensor) {
+        sent.zero_at(&mut self.v);
+        if !matches!(self.accumulation, Accumulation::Sgd) {
+            sent.zero_at(&mut self.u);
+        }
+    }
+
+    /// Overwrite the residual from a device-computed buffer (when the
+    /// Pallas `compress_mask` kernel already produced V*(1-mask)).
+    pub fn set_residual(&mut self, new_v: Vec<f32>) {
+        assert_eq!(new_v.len(), self.v.len());
+        self.v = new_v;
+    }
+
+    /// Replace both buffers with device-computed accumulation results
+    /// (the fused `momentum_accum` kernel, Alg. 4 lines 11-19).
+    pub fn set_buffers(&mut self, new_v: Vec<f32>, new_u: Vec<f32>) {
+        assert_eq!(new_v.len(), self.v.len());
+        assert_eq!(new_u.len(), self.u.len());
+        self.v = new_v;
+        self.u = new_u;
+    }
+
+    /// Total residual mass (diagnostics / conservation tests).
+    pub fn mass(&self) -> f64 {
+        self.v.iter().map(|&x| x as f64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::select::exact_topk;
+    use crate::util::proptest::{check, ensure, ensure_close};
+
+    #[test]
+    fn sgd_accumulation_adds() {
+        let mut r = ResidualState::new(3, Accumulation::Sgd);
+        r.accumulate(&[1.0, 2.0, 3.0]);
+        r.accumulate(&[1.0, 0.0, -1.0]);
+        assert_eq!(r.residual(), &[2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn momentum_correction_matches_manual() {
+        let m = 0.9f32;
+        let mut r = ResidualState::new(1, Accumulation::Momentum { momentum: m });
+        r.accumulate(&[1.0]); // u=1, v=1
+        r.accumulate(&[1.0]); // u=1.9, v=2.9
+        assert!((r.residual()[0] - 2.9).abs() < 1e-6);
+        assert!((r.momentum_buf()[0] - 1.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nesterov_adds_extra_gradient() {
+        let m = 0.5f32;
+        let mut r = ResidualState::new(1, Accumulation::Nesterov { momentum: m });
+        r.accumulate(&[2.0]); // u=2, v=u+g=4
+        assert_eq!(r.residual()[0], 4.0);
+    }
+
+    #[test]
+    fn masking_zeroes_both_buffers() {
+        let mut r = ResidualState::new(4, Accumulation::Momentum { momentum: 0.9 });
+        r.accumulate(&[1.0, 2.0, 3.0, 4.0]);
+        let sel = exact_topk(r.residual(), 2, None);
+        r.mask(&sel.sparse);
+        assert_eq!(r.residual()[2], 0.0);
+        assert_eq!(r.residual()[3], 0.0);
+        assert_eq!(r.momentum_buf()[3], 0.0);
+        assert!(r.residual()[0] != 0.0 && r.momentum_buf()[0] != 0.0);
+    }
+
+    #[test]
+    fn sgd_mask_leaves_u_untouched() {
+        let mut r = ResidualState::new(2, Accumulation::Sgd);
+        r.accumulate(&[5.0, 1.0]);
+        let sel = exact_topk(r.residual(), 1, None);
+        r.mask(&sel.sparse);
+        assert_eq!(r.residual(), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn prop_sgd_mass_conservation() {
+        // For plain-SGD accumulation: transmitted mass + remaining residual
+        // mass == total injected gradient mass, every iteration.
+        check(30, |g| {
+            let n = g.size(8..2048);
+            let mut r = ResidualState::new(n, Accumulation::Sgd);
+            let mut injected = 0f64;
+            let mut transmitted = 0f64;
+            for _ in 0..5 {
+                let grad = g.vec_normal(n, 1.0);
+                injected += grad.iter().map(|&x| x as f64).sum::<f64>();
+                r.accumulate(&grad);
+                let k = (n / 10).max(1);
+                let sel = exact_topk(r.residual(), k, None);
+                transmitted += sel.sparse.values.iter().map(|&x| x as f64).sum::<f64>();
+                r.mask(&sel.sparse);
+            }
+            ensure_close(injected, transmitted + r.mass(), 1e-4, "mass conservation")
+        });
+    }
+
+    #[test]
+    fn prop_masked_positions_are_zero() {
+        check(30, |g| {
+            let n = g.size(8..1024);
+            let mut r = ResidualState::new(n, Accumulation::Momentum { momentum: 0.9 });
+            r.accumulate(&g.vec_normal(n, 1.0));
+            let k = g.size(1..n.max(2));
+            let sel = exact_topk(r.residual(), k, None);
+            r.mask(&sel.sparse);
+            for &i in &sel.sparse.indices {
+                ensure(r.residual()[i as usize] == 0.0, "v not zeroed")?;
+                ensure(r.momentum_buf()[i as usize] == 0.0, "u not zeroed")?;
+            }
+            Ok(())
+        });
+    }
+}

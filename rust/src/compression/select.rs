@@ -1,0 +1,598 @@
+//! Communication-set selection — the paper's §5.2, the compute hot-spot.
+//!
+//! Three selectors, exactly mirroring the paper:
+//!
+//! * [`exact_topk`] — exact top-k via quickselect.  This is the repo's
+//!   stand-in for the paper's GPU radixSelect *baseline* (both are exact
+//!   selectors whose cost grows with the full array size; Fig. 3 compares
+//!   everything against it).
+//! * [`trimmed_topk`] — Algorithm 2: use (mean, max) of |x| to trim the
+//!   candidate set with a descending-ratio threshold, then run the exact
+//!   selector on the (tiny) remainder.  Always returns exactly `k`.
+//! * [`threshold_binary_search`] — Algorithm 3: bisect a threshold whose
+//!   count lands in [k, 2k]; returns *at least* k elements and never
+//!   touches an exact selector.  [`CachedThresholdSelector`] adds the
+//!   paper's "reuse the threshold for the next `interval` iterations"
+//!   optimization (§5.2.2, interval = 5).
+//!
+//! All selectors come in magnitude (`sign = None`) and signed
+//! (`sign = Some(±1.0)`) flavors; the signed ones power quantized RGC
+//! (§5.2.3) where the communication-set must be single-signed.
+
+use crate::tensor::{abs_mean_max, SparseTensor};
+
+/// Result of a selection pass.
+#[derive(Clone, Debug)]
+pub struct Selection {
+    pub sparse: SparseTensor,
+    /// The threshold that produced the set (for threshold reuse).
+    pub threshold: f32,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BinarySearchParams {
+    /// Termination width on the ratio interval (paper's ε).
+    pub eps: f32,
+    /// Hard cap on total probe evaluations.
+    pub max_iters: usize,
+    /// Probes per counting pass (J-way bisection, §Perf).  1 = the
+    /// paper's scalar bisection; 15 shrinks the bracket 16x per pass.
+    pub probes: usize,
+}
+
+impl Default for BinarySearchParams {
+    fn default() -> Self {
+        BinarySearchParams { eps: 1e-3, max_iters: 64, probes: 15 }
+    }
+}
+
+#[inline]
+fn key_of(v: f32, sign: Option<f32>) -> f32 {
+    match sign {
+        None => v.abs(),
+        Some(s) => s * v,
+    }
+}
+
+fn compact(x: &[f32], thr: f32, sign: Option<f32>) -> SparseTensor {
+    match sign {
+        None => SparseTensor::compact_above(x, thr),
+        Some(s) => SparseTensor::compact_above_signed(x, thr, s),
+    }
+}
+
+fn count(x: &[f32], thr: f32, sign: Option<f32>) -> usize {
+    match sign {
+        None => crate::tensor::count_above(x, thr),
+        Some(s) => crate::tensor::count_above_signed(x, thr, s),
+    }
+}
+
+/// Signed-aware (mean, max) of selection keys.  For magnitude mode this is
+/// (mean|x|, max|x|); for signed mode, stats of max(s*x, 0) so the
+/// threshold interpolation stays in the meaningful range.
+fn key_stats(x: &[f32], sign: Option<f32>) -> (f32, f32) {
+    match sign {
+        None => abs_mean_max(x),
+        Some(s) => {
+            if x.is_empty() {
+                return (0.0, 0.0);
+            }
+            let mut sum = 0f64;
+            let mut max = 0f32;
+            for &v in x {
+                let k = (s * v).max(0.0);
+                sum += k as f64;
+                if k > max {
+                    max = k;
+                }
+            }
+            ((sum / x.len() as f64) as f32, max)
+        }
+    }
+}
+
+/// Strided sample of selection keys (§Perf).
+fn sample_keys(x: &[f32], stride: usize, sign: Option<f32>) -> Vec<f32> {
+    match sign {
+        None => x.iter().step_by(stride).map(|v| v.abs()).collect(),
+        Some(s) => x.iter().step_by(stride).map(|v| v * s).collect(),
+    }
+}
+
+/// Sampling stride for a top-k estimate: keep the target rank's sample
+/// count >= ~32 so the quantile noise (~rank^-1/2) stays well inside the
+/// 2x safety margin.
+fn sample_stride(n: usize, k: usize) -> usize {
+    (n / 65_536).min(k / 32).max(1)
+}
+
+/// Trim threshold from a strided-sample quantile at twice the target
+/// rank: ≥ k survivors w.h.p., ~2k expected.  `None` when the sample's
+/// quantile is non-positive (degenerate distribution) — callers fall back
+/// to the exact selector.
+fn sample_trim_threshold(x: &[f32], k: usize, sign: Option<f32>) -> Option<f32> {
+    let stride = sample_stride(x.len(), k);
+    let mut keys = sample_keys(x, stride, sign);
+    if keys.is_empty() {
+        return None;
+    }
+    let rank = (2 * k / stride).min(keys.len() - 1);
+    let (_, kth, _) =
+        keys.select_nth_unstable_by(rank, |a, b| b.partial_cmp(a).unwrap());
+    let thr = *kth;
+    (thr > 0.0).then_some(thr)
+}
+
+/// Exact top-k selection by quickselect (`select_nth_unstable_by`), the
+/// radixSelect-baseline of Fig. 3.  Returns exactly `min(k, n)` elements
+/// with ascending indices.
+pub fn exact_topk(x: &[f32], k: usize, sign: Option<f32>) -> Selection {
+    let n = x.len();
+    if k == 0 || n == 0 {
+        return Selection { sparse: SparseTensor::default(), threshold: f32::INFINITY };
+    }
+    if k >= n {
+        let mut s = SparseTensor::with_capacity(n);
+        for (i, &v) in x.iter().enumerate() {
+            s.push(i as u32, v);
+        }
+        return Selection { sparse: s, threshold: f32::NEG_INFINITY };
+    }
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    // descending by key: element k-1 is the kth largest after the call
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        key_of(x[b as usize], sign)
+            .partial_cmp(&key_of(x[a as usize], sign))
+            .unwrap()
+    });
+    let threshold = key_of(x[idx[k - 1] as usize], sign);
+    let mut top: Vec<u32> = idx[..k].to_vec();
+    top.sort_unstable();
+    let values = top.iter().map(|&i| x[i as usize]).collect();
+    Selection { sparse: SparseTensor::new(top, values), threshold }
+}
+
+/// Algorithm 2: trimmed top-k.  One stats pass, a descending-ratio scan to
+/// find a trim threshold with >= k survivors, then exact top-k on the
+/// survivors only.  `eps` is the paper's ratio decrement (0.2).
+pub fn trimmed_topk(x: &[f32], k: usize, eps: f32, sign: Option<f32>) -> Selection {
+    let n = x.len();
+    if k == 0 || n == 0 {
+        return Selection { sparse: SparseTensor::default(), threshold: f32::INFINITY };
+    }
+    if k >= n {
+        return exact_topk(x, k, sign);
+    }
+    let _ = eps; // ratio decrement of the paper's GPU ladder; the host
+                 // trim statistic is a sample quantile instead (§Perf)
+    // Statistical trim (Alg. 2's essence — a cheap statistic removes the
+    // mass of small elements before the exact selector).  The paper's GPU
+    // statistic is a mean/max ratio ladder (each rung = one counting
+    // kernel); on the host every extra full pass costs as much as the
+    // exact selector on ~1M elements, so the trim threshold comes from a
+    // strided-sample quantile at twice the target rank: ≥ k survivors
+    // w.h.p., ~2k in expectation, verified by the compaction pass.
+    let Some(thr) = sample_trim_threshold(x, k, sign) else {
+        // degenerate (constant / all-zero / wrong-signed) distribution
+        return exact_topk(x, k, sign);
+    };
+    // Trim: gather candidate (index, value) pairs, then exact top-k on
+    // the candidates (the paper's "radixSelect on the remaining").
+    let mut cand = compact(x, thr, sign);
+    if cand.len() < k {
+        // sampling undershot (rare; heavy ties or tiny k): fall back to a
+        // trim at the sample's low quantile, then to the full array
+        cand = compact(x, 0.0, sign);
+        if cand.len() < k {
+            return exact_topk(x, k, sign);
+        }
+    }
+    let sel = exact_topk(&cand.values, k, sign);
+    let mut indices: Vec<u32> =
+        sel.sparse.indices.iter().map(|&i| cand.indices[i as usize]).collect();
+    let mut values = sel.sparse.values.clone();
+    // indices of candidates are ascending, and exact_topk returns ascending
+    // positions within candidates, so this is already ascending; keep it
+    // defensive anyway.
+    if !indices.windows(2).all(|w| w[0] < w[1]) {
+        let mut pairs: Vec<(u32, f32)> =
+            indices.iter().copied().zip(values.iter().copied()).collect();
+        pairs.sort_unstable_by_key(|p| p.0);
+        indices = pairs.iter().map(|p| p.0).collect();
+        values = pairs.iter().map(|p| p.1).collect();
+    }
+    Selection { sparse: SparseTensor::new(indices, values), threshold: sel.threshold }
+}
+
+/// Algorithm 3: threshold binary search.  Bisects `ratio ∈ [0, 1]` over
+/// `thr = mean + ratio (max - mean)` until `k <= nnz <= 2k` (or the
+/// interval collapses to `eps`), then compacts everything above the
+/// threshold.  Returns between k and 2k elements in the regular case —
+/// never exactly-k, by design (the paper trades set-size slack for never
+/// running an exact selector).
+pub fn threshold_binary_search(
+    x: &[f32],
+    k: usize,
+    p: BinarySearchParams,
+    sign: Option<f32>,
+) -> Selection {
+    let n = x.len();
+    if k == 0 || n == 0 {
+        return Selection { sparse: SparseTensor::default(), threshold: f32::INFINITY };
+    }
+    if k >= n {
+        return exact_topk(x, k, sign);
+    }
+    // Fast path (§Perf): sample-guided threshold estimation — candidate
+    // thresholds from the strided sample at ranks spanning (k, 2k), all
+    // verified with ONE sparse counting pass; take the highest whose
+    // exact count lands in [k, 2k].
+    if let Some(sel) = sample_guided_threshold(x, k, sign) {
+        return sel;
+    }
+    let (mean, max) = key_stats(x, sign);
+    if max == 0.0 {
+        return Selection { sparse: SparseTensor::default(), threshold: 0.0 };
+    }
+    // Fallback: J-way bisection — each counting pass probes `p.probes`
+    // interior ratios at once, shrinking the bracket by (probes+1)x per
+    // pass — log_{J+1}(1/eps) passes instead of log_2(1/eps).  This is
+    // the host-side mirror of the vectorized `threshold_count` kernel,
+    // and handles the heavy-tie distributions sampling cannot.
+    let probes = p.probes.max(1);
+    let (mut l, mut r) = (0.0f32, 1.0f32);
+    let mut thr = mean; // ratio-0 fallback: guaranteed >= k survivors for
+                        // any non-degenerate distribution (checked below)
+    let mut passes = 0;
+    'outer: while r - l > p.eps && passes * probes < p.max_iters {
+        passes += 1;
+        // descending thresholds = ascending ratios reversed
+        let ladder: Vec<f32> = (0..probes)
+            .map(|i| {
+                let ratio = r - (r - l) * (i + 1) as f32 / (probes + 1) as f32;
+                mean + ratio * (max - mean)
+            })
+            .collect();
+        let counts = crate::tensor::count_above_multi(x, &ladder, sign);
+        for (i, &c) in counts.iter().enumerate() {
+            if c >= k && c <= 2 * k {
+                thr = ladder[i];
+                break 'outer;
+            }
+        }
+        // no direct hit: bracket between the last undershoot (< k) and the
+        // first overshoot (> 2k)
+        let mut new_r = r;
+        let mut new_l = l;
+        for (i, &c) in counts.iter().enumerate() {
+            let ratio = r - (r - l) * (i + 1) as f32 / (probes + 1) as f32;
+            if c < k {
+                new_r = ratio;
+            } else {
+                // c > 2k (c in [k,2k] already returned)
+                new_l = ratio;
+                break;
+            }
+        }
+        if new_r <= new_l {
+            thr = mean + new_l * (max - mean);
+            break;
+        }
+        r = new_r;
+        l = new_l;
+        thr = mean + l * (max - mean);
+    }
+    if count(x, thr, sign) < k {
+        // interval collapsed on the high side: take the low bound
+        let thr_low = mean + l * (max - mean);
+        thr = if count(x, thr_low, sign) >= k { thr_low } else { mean };
+    }
+    let sparse = compact(x, thr, sign);
+    if sparse.is_empty() {
+        // pathological (e.g. all values equal mean=max): fall back
+        return exact_topk(x, k, sign);
+    }
+    Selection { sparse, threshold: thr }
+}
+
+/// Sample-guided Alg. 3 fast path: estimate J candidate thresholds at
+/// sample ranks spanning (k, 2k), verify all of them exactly in one
+/// sparse counting pass, return the compaction at the best one.  `None`
+/// when k is too small for reliable sampling or no candidate lands in
+/// [k, 2k] (heavy ties) — the caller bisects instead.
+fn sample_guided_threshold(x: &[f32], k: usize, sign: Option<f32>) -> Option<Selection> {
+    let n = x.len();
+    if k < 64 || n < 8_192 {
+        return None;
+    }
+    let stride = sample_stride(n, k);
+    let mut keys = sample_keys(x, stride, sign);
+    let m = keys.len();
+    // top (2.4k/stride) sample keys, sorted descending: rank r in this
+    // prefix estimates a threshold with ~r·stride true survivors
+    let prefix = ((24 * k / stride) / 10 + 1).min(m - 1);
+    keys.select_nth_unstable_by(prefix, |a, b| b.partial_cmp(a).unwrap());
+    keys.truncate(prefix + 1);
+    keys.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    const J: usize = 8;
+    let mut thrs = Vec::with_capacity(J);
+    for i in 0..J {
+        // expected counts from ~1.1k up to ~1.9k
+        let target = (1.1 + 0.8 * i as f64 / (J - 1) as f64) * k as f64;
+        let r = ((target / stride as f64) as usize).min(keys.len() - 1);
+        let t = keys[r];
+        if t <= 0.0 {
+            break;
+        }
+        if thrs.last() != Some(&t) {
+            thrs.push(t);
+        }
+    }
+    if thrs.is_empty() {
+        return None;
+    }
+    let counts = crate::tensor::count_above_multi_sparse(x, &thrs, sign);
+    let pick = counts.iter().position(|&c| c >= k && c <= 2 * k)?;
+    let thr = thrs[pick];
+    let sparse = compact(x, thr, sign);
+    debug_assert_eq!(sparse.len(), counts[pick]);
+    Some(Selection { sparse, threshold: thr })
+}
+
+/// §5.2.2 sampled-threshold optimization: run the binary search only every
+/// `interval` calls and reuse the cached threshold in between (one
+/// compaction pass, zero count_nonzero passes).  Per-layer state.
+#[derive(Clone, Debug)]
+pub struct CachedThresholdSelector {
+    pub interval: usize,
+    pub params: BinarySearchParams,
+    counter: usize,
+    cached_thr: Option<f32>,
+}
+
+impl CachedThresholdSelector {
+    pub fn new(interval: usize, params: BinarySearchParams) -> Self {
+        assert!(interval >= 1);
+        CachedThresholdSelector { interval, params, counter: 0, cached_thr: None }
+    }
+
+    /// True if the next call will run a full binary search.
+    pub fn will_search(&self) -> bool {
+        self.counter == 0 || self.cached_thr.is_none()
+    }
+
+    pub fn select(&mut self, x: &[f32], k: usize, sign: Option<f32>) -> Selection {
+        let out = if self.will_search() {
+            let sel = threshold_binary_search(x, k, self.params, sign);
+            self.cached_thr = Some(sel.threshold);
+            sel
+        } else {
+            let thr = self.cached_thr.unwrap();
+            let sparse = compact(x, thr, sign);
+            if sparse.is_empty() || sparse.len() > 4 * k {
+                // distribution drifted under the cached threshold (the
+                // paper's "far more than expected" case): re-search
+                let sel = threshold_binary_search(x, k, self.params, sign);
+                self.cached_thr = Some(sel.threshold);
+                self.counter = 0;
+                sel
+            } else {
+                Selection { sparse, threshold: thr }
+            }
+        };
+        self.counter = (self.counter + 1) % self.interval;
+        out
+    }
+
+    pub fn reset(&mut self) {
+        self.counter = 0;
+        self.cached_thr = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure};
+    use crate::util::rng::Pcg32;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Pcg32::seeded(seed);
+        let mut v = vec![0f32; n];
+        r.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    fn brute_topk_keys(x: &[f32], k: usize) -> Vec<f32> {
+        let mut keys: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+        keys.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        keys[..k.min(keys.len())].to_vec()
+    }
+
+    #[test]
+    fn exact_topk_matches_brute_force() {
+        let x = randn(1000, 1);
+        let k = 10;
+        let sel = exact_topk(&x, k, None);
+        let mut got: Vec<f32> = sel.sparse.values.iter().map(|v| v.abs()).collect();
+        got.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        assert_eq!(got, brute_topk_keys(&x, k));
+    }
+
+    #[test]
+    fn exact_topk_k_geq_n_returns_all() {
+        let x = [1.0, -2.0];
+        let sel = exact_topk(&x, 5, None);
+        assert_eq!(sel.sparse.len(), 2);
+    }
+
+    #[test]
+    fn exact_topk_k_zero() {
+        assert_eq!(exact_topk(&[1.0], 0, None).sparse.len(), 0);
+    }
+
+    #[test]
+    fn exact_topk_indices_ascending() {
+        let x = randn(512, 2);
+        let sel = exact_topk(&x, 32, None);
+        assert!(sel.sparse.indices.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn exact_topk_signed_selects_one_sign() {
+        let x = randn(1024, 3);
+        let pos = exact_topk(&x, 16, Some(1.0));
+        assert!(pos.sparse.values.iter().all(|&v| v > 0.0));
+        let neg = exact_topk(&x, 16, Some(-1.0));
+        assert!(neg.sparse.values.iter().all(|&v| v < 0.0));
+    }
+
+    #[test]
+    fn trimmed_topk_equals_exact_topk_as_set() {
+        let x = randn(4096, 4);
+        let k = 40;
+        let a = exact_topk(&x, k, None);
+        let b = trimmed_topk(&x, k, 0.2, None);
+        assert_eq!(b.sparse.len(), k);
+        // same multiset of |values| (ties may swap indices)
+        let mut ka: Vec<f32> = a.sparse.values.iter().map(|v| v.abs()).collect();
+        let mut kb: Vec<f32> = b.sparse.values.iter().map(|v| v.abs()).collect();
+        ka.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        kb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert_eq!(ka, kb);
+    }
+
+    #[test]
+    fn trimmed_topk_constant_array_falls_back() {
+        let x = vec![0.5f32; 256];
+        let sel = trimmed_topk(&x, 16, 0.2, None);
+        assert_eq!(sel.sparse.len(), 16);
+    }
+
+    #[test]
+    fn trimmed_topk_zeros() {
+        let x = vec![0f32; 256];
+        let sel = trimmed_topk(&x, 16, 0.2, None);
+        assert_eq!(sel.sparse.len(), 16); // exact fallback picks zeros
+    }
+
+    #[test]
+    fn binary_search_returns_between_k_and_2k_typically() {
+        let x = randn(65536, 5);
+        let k = 64;
+        let sel = threshold_binary_search(&x, k, BinarySearchParams::default(), None);
+        assert!(
+            sel.sparse.len() >= k && sel.sparse.len() <= 2 * k,
+            "got {}",
+            sel.sparse.len()
+        );
+    }
+
+    #[test]
+    fn binary_search_never_returns_empty_on_nonzero_input() {
+        let x = randn(1024, 6);
+        for k in [1usize, 3, 17, 100] {
+            let sel = threshold_binary_search(&x, k, BinarySearchParams::default(), None);
+            assert!(sel.sparse.len() >= k.min(x.len()), "k={k} got {}", sel.sparse.len());
+        }
+    }
+
+    #[test]
+    fn binary_search_signed_mode() {
+        let x = randn(8192, 7);
+        let sel =
+            threshold_binary_search(&x, 32, BinarySearchParams::default(), Some(-1.0));
+        assert!(sel.sparse.len() >= 32);
+        assert!(sel.sparse.values.iter().all(|&v| v < 0.0));
+    }
+
+    #[test]
+    fn cached_selector_reuses_threshold() {
+        let mut sel = CachedThresholdSelector::new(5, BinarySearchParams::default());
+        let x = randn(4096, 8);
+        assert!(sel.will_search());
+        let a = sel.select(&x, 16, None);
+        assert!(!sel.will_search());
+        let b = sel.select(&x, 16, None);
+        assert_eq!(a.threshold, b.threshold);
+        // after interval calls, searches again
+        for _ in 0..3 {
+            sel.select(&x, 16, None);
+        }
+        assert!(sel.will_search());
+    }
+
+    #[test]
+    fn cached_selector_recovers_from_drift() {
+        let mut sel = CachedThresholdSelector::new(5, BinarySearchParams::default());
+        let x = randn(1024, 9);
+        sel.select(&x, 16, None);
+        // residual collapses to tiny values: cached threshold selects none
+        let y = vec![1e-12f32; 1024];
+        let out = sel.select(&y, 16, None);
+        assert!(out.sparse.len() >= 16);
+    }
+
+    // ---------------------------------------------------------- properties
+
+    #[test]
+    fn prop_exact_topk_is_exact() {
+        check(60, |g| {
+            let n = g.size(1..4000);
+            let k = g.size(1..n.max(2));
+            let x = g.vec_normal(n, 1.0);
+            let sel = exact_topk(&x, k, None);
+            ensure(sel.sparse.len() == k.min(n), "wrong size")?;
+            // every selected key >= every unselected key
+            let min_sel = sel
+                .sparse
+                .values
+                .iter()
+                .map(|v| v.abs())
+                .fold(f32::INFINITY, f32::min);
+            let selset: std::collections::HashSet<u32> =
+                sel.sparse.indices.iter().copied().collect();
+            for (i, v) in x.iter().enumerate() {
+                if !selset.contains(&(i as u32)) {
+                    ensure(
+                        v.abs() <= min_sel + 1e-6,
+                        format!("unselected {} > min selected {}", v.abs(), min_sel),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_trimmed_matches_exact_keys() {
+        check(40, |g| {
+            let n = g.size(16..20000);
+            let k = g.size(1..(n / 4).max(2));
+            let x = g.vec_normal(n, 2.0);
+            let a = exact_topk(&x, k, None);
+            let b = trimmed_topk(&x, k, 0.2, None);
+            ensure(b.sparse.len() == k, format!("trimmed len {} != {k}", b.sparse.len()))?;
+            let sum_a: f64 = a.sparse.values.iter().map(|v| v.abs() as f64).sum();
+            let sum_b: f64 = b.sparse.values.iter().map(|v| v.abs() as f64).sum();
+            crate::util::proptest::ensure_close(sum_a, sum_b, 1e-5, "topk key mass")
+        });
+    }
+
+    #[test]
+    fn prop_binary_search_superset_of_topk_threshold() {
+        check(40, |g| {
+            let n = g.size(64..30000);
+            let k = g.size(1..(n / 8).max(2));
+            let x = g.vec_normal(n, 1.0);
+            let sel = threshold_binary_search(&x, k, BinarySearchParams::default(), None);
+            // all returned satisfy |v| > thr, and count >= k
+            ensure(sel.sparse.len() >= k, format!("{} < k={k}", sel.sparse.len()))?;
+            for &v in &sel.sparse.values {
+                ensure(v.abs() > sel.threshold, "value below threshold")?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,348 @@
+//! Configuration system: typed run configs, JSON config files, CLI
+//! overrides and named experiment presets.
+//!
+//! Resolution order (later wins): preset defaults → `--config file.json`
+//! → individual `--key value` CLI overrides.
+
+pub mod presets;
+
+pub use presets::preset;
+
+use crate::compression::PolicyThresholds;
+use crate::optim::{LrSchedule, Optimizer, WarmupSchedule};
+use crate::simnet::iteration::Strategy;
+use crate::util::json::{self, Value};
+
+/// Warm-up flavor; resolved against the run's target density by
+/// [`TrainConfig::warmup_schedule`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WarmupKind {
+    /// Target density from step one.
+    None,
+    /// RedSync §5.7: dense allreduce for the first N epochs.
+    DenseEpochs(usize),
+    /// DGC ablation: exponential density decay 25% → target.
+    Dgc,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("config io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("config parse: {0}")]
+    Parse(#[from] crate::util::json::ParseError),
+    #[error("config invalid: {0}")]
+    Invalid(String),
+}
+
+/// Full specification of one training run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Model name in the artifact manifest (`lm_tiny`, `mlp_small`, ...).
+    pub model: String,
+    /// Number of data-parallel workers (threads; one per simulated GPU).
+    pub world: usize,
+    /// Optimizer steps to run.
+    pub steps: usize,
+    /// Synchronization strategy.
+    pub strategy: Strategy,
+    /// Compression density D (fraction of elements transmitted).
+    pub density: f64,
+    /// §5.5 per-layer policy thresholds (bytes).
+    pub thresholds: PolicyThresholds,
+    /// Optimizer flavor.
+    pub optimizer: Optimizer,
+    /// Learning-rate schedule.
+    pub lr: LrSchedule,
+    /// DGC local gradient clipping max-norm (None = off; paper: on for
+    /// RNN/LSTM, off for CNN §5.6).
+    pub clip: Option<f32>,
+    /// Warm-up schedule (paper §5.7).
+    pub warmup: WarmupKind,
+    /// Steps per "epoch" for the warm-up schedule.
+    pub steps_per_epoch: usize,
+    /// Route selection through the L1 device kernels instead of host
+    /// selection (slower per call under CPU-PJRT; exercises the full
+    /// three-layer path).
+    pub device_select: bool,
+    /// Record the (global mean) train loss every this many steps.
+    pub log_every: usize,
+    /// Run held-out eval every this many steps (0 = never).
+    pub eval_every: usize,
+    /// RNG seed (params, data).
+    pub seed: u64,
+    /// Fuse small compressed layers into shared allgather buckets (§5.3);
+    /// 0 disables fusion.
+    pub fusion_cap_elems: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "lm_tiny".into(),
+            world: 4,
+            steps: 100,
+            strategy: Strategy::Rgc,
+            density: 1e-3,
+            thresholds: PolicyThresholds::default(),
+            optimizer: Optimizer::Momentum { momentum: 0.9 },
+            lr: LrSchedule::Constant { lr: 0.1 },
+            clip: None,
+            warmup: WarmupKind::None,
+            steps_per_epoch: 100,
+            device_select: false,
+            log_every: 10,
+            eval_every: 0,
+            seed: 42,
+            fusion_cap_elems: 0,
+        }
+    }
+}
+
+fn parse_strategy(s: &str) -> Result<Strategy, ConfigError> {
+    match s {
+        "dense" | "baseline" | "sgd" => Ok(Strategy::Dense),
+        "rgc" => Ok(Strategy::Rgc),
+        "quant" | "quant-rgc" | "quant_rgc" => Ok(Strategy::QuantRgc),
+        other => Err(ConfigError::Invalid(format!("unknown strategy '{other}'"))),
+    }
+}
+
+fn parse_optimizer(s: &str, momentum: f32) -> Result<Optimizer, ConfigError> {
+    match s {
+        "sgd" => Ok(Optimizer::Sgd),
+        "momentum" => Ok(Optimizer::Momentum { momentum }),
+        "nesterov" => Ok(Optimizer::Nesterov { momentum }),
+        other => Err(ConfigError::Invalid(format!("unknown optimizer '{other}'"))),
+    }
+}
+
+impl TrainConfig {
+    pub fn strategy_label(&self) -> &'static str {
+        self.strategy.label()
+    }
+
+    /// Resolve the warm-up kind against this run's target density.
+    pub fn warmup_schedule(&self) -> WarmupSchedule {
+        match self.warmup {
+            WarmupKind::None => WarmupSchedule::None { density: self.density },
+            WarmupKind::DenseEpochs(epochs) => {
+                WarmupSchedule::DenseEpochs { epochs, density: self.density }
+            }
+            WarmupKind::Dgc => {
+                WarmupSchedule::Exponential { start: 0.25, factor: 0.25, density: self.density }
+            }
+        }
+    }
+
+    /// Apply keys from a parsed JSON object onto `self`.
+    pub fn apply_json(&mut self, v: &Value) -> Result<(), ConfigError> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| ConfigError::Invalid("config root must be an object".into()))?;
+        for (key, val) in obj.iter() {
+            self.apply_kv(key, val)?;
+        }
+        Ok(())
+    }
+
+    fn apply_kv(&mut self, key: &str, val: &Value) -> Result<(), ConfigError> {
+        let as_usize = || {
+            val.as_usize().ok_or_else(|| ConfigError::Invalid(format!("{key}: expected integer")))
+        };
+        let as_f64 = || {
+            val.as_f64().ok_or_else(|| ConfigError::Invalid(format!("{key}: expected number")))
+        };
+        let as_str = || {
+            val.as_str().ok_or_else(|| ConfigError::Invalid(format!("{key}: expected string")))
+        };
+        match key {
+            "model" => self.model = as_str()?.to_string(),
+            "world" => self.world = as_usize()?,
+            "steps" => self.steps = as_usize()?,
+            "strategy" => self.strategy = parse_strategy(as_str()?)?,
+            "density" => self.density = as_f64()?,
+            "thsd1" => self.thresholds.thsd1 = as_usize()?,
+            "thsd2" => self.thresholds.thsd2 = as_usize()?,
+            "optimizer" => {
+                self.optimizer = parse_optimizer(as_str()?, self.optimizer.momentum())?
+            }
+            "momentum" => {
+                let m = as_f64()? as f32;
+                self.optimizer = match self.optimizer {
+                    Optimizer::Sgd => Optimizer::Momentum { momentum: m },
+                    Optimizer::Momentum { .. } => Optimizer::Momentum { momentum: m },
+                    Optimizer::Nesterov { .. } => Optimizer::Nesterov { momentum: m },
+                };
+            }
+            "lr" => self.lr = LrSchedule::Constant { lr: as_f64()? as f32 },
+            "lr_decay_every" => {
+                let lr = self.lr.lr_at(0);
+                self.lr = LrSchedule::StepDecay { lr, factor: 0.5, every: as_usize()? };
+            }
+            "clip" => {
+                let c = as_f64()? as f32;
+                self.clip = if c > 0.0 { Some(c) } else { None };
+            }
+            "warmup_dense_epochs" => self.warmup = WarmupKind::DenseEpochs(as_usize()?),
+            "warmup_dgc" => {
+                if val.as_bool().unwrap_or(false) {
+                    self.warmup = WarmupKind::Dgc;
+                }
+            }
+            "steps_per_epoch" => self.steps_per_epoch = as_usize()?.max(1),
+            "device_select" => {
+                self.device_select = val
+                    .as_bool()
+                    .ok_or_else(|| ConfigError::Invalid("device_select: expected bool".into()))?
+            }
+            "log_every" => self.log_every = as_usize()?.max(1),
+            "eval_every" => self.eval_every = as_usize()?,
+            "seed" => self.seed = as_usize()? as u64,
+            "fusion_cap_elems" => self.fusion_cap_elems = as_usize()?,
+            other => return Err(ConfigError::Invalid(format!("unknown config key '{other}'"))),
+        }
+        Ok(())
+    }
+
+    /// Load and apply a JSON config file.
+    pub fn apply_file(&mut self, path: &str) -> Result<(), ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        let v = Value::parse(&text)?;
+        self.apply_json(&v)
+    }
+
+    /// Apply `key=value` CLI override strings.
+    pub fn apply_overrides(&mut self, overrides: &[String]) -> Result<(), ConfigError> {
+        for ov in overrides {
+            let (key, value) = ov
+                .split_once('=')
+                .ok_or_else(|| ConfigError::Invalid(format!("override '{ov}' is not key=value")))?;
+            // parse the value as JSON (numbers/bools), fall back to string
+            let v = Value::parse(value).unwrap_or_else(|_| json::s(value));
+            self.apply_kv(key, &v)?;
+        }
+        Ok(())
+    }
+
+    /// Serialize the resolved config (for run logs / reproducibility).
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("model", json::s(self.model.clone())),
+            ("world", json::num(self.world as f64)),
+            ("steps", json::num(self.steps as f64)),
+            ("strategy", json::s(self.strategy.label())),
+            ("density", json::num(self.density)),
+            ("thsd1", json::num(self.thresholds.thsd1 as f64)),
+            ("thsd2", json::num(self.thresholds.thsd2 as f64)),
+            (
+                "optimizer",
+                json::s(match self.optimizer {
+                    Optimizer::Sgd => "sgd",
+                    Optimizer::Momentum { .. } => "momentum",
+                    Optimizer::Nesterov { .. } => "nesterov",
+                }),
+            ),
+            ("momentum", json::num(self.optimizer.momentum() as f64)),
+            ("lr", json::num(self.lr.lr_at(0) as f64)),
+            ("clip", json::num(self.clip.unwrap_or(0.0) as f64)),
+            ("steps_per_epoch", json::num(self.steps_per_epoch as f64)),
+            ("device_select", Value::Bool(self.device_select)),
+            ("log_every", json::num(self.log_every as f64)),
+            ("eval_every", json::num(self.eval_every as f64)),
+            ("seed", json::num(self.seed as f64)),
+            ("fusion_cap_elems", json::num(self.fusion_cap_elems as f64)),
+        ])
+    }
+
+    /// Sanity checks before launching a run.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.world == 0 {
+            return Err(ConfigError::Invalid("world must be >= 1".into()));
+        }
+        if !self.world.is_power_of_two() {
+            return Err(ConfigError::Invalid(format!(
+                "world {} must be a power of two (recursive-doubling collectives)",
+                self.world
+            )));
+        }
+        if !(self.density > 0.0 && self.density <= 1.0) {
+            return Err(ConfigError::Invalid(format!("density {} out of (0,1]", self.density)));
+        }
+        if self.thresholds.thsd1 > self.thresholds.thsd2 {
+            return Err(ConfigError::Invalid("thsd1 > thsd2".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_applies() {
+        let mut cfg = TrainConfig::default();
+        let v = Value::parse(
+            r#"{"model":"mlp_small","world":8,"strategy":"quant-rgc","density":0.01,
+                "optimizer":"nesterov","momentum":0.8,"lr":0.05,"clip":1.0,
+                "warmup_dense_epochs":2,"steps_per_epoch":50,"seed":7}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&v).unwrap();
+        assert_eq!(cfg.model, "mlp_small");
+        assert_eq!(cfg.world, 8);
+        assert_eq!(cfg.strategy, Strategy::QuantRgc);
+        assert_eq!(cfg.density, 0.01);
+        assert_eq!(cfg.optimizer, Optimizer::Nesterov { momentum: 0.8 });
+        assert_eq!(cfg.clip, Some(1.0));
+        assert_eq!(cfg.warmup, WarmupKind::DenseEpochs(2));
+        assert!(matches!(
+            cfg.warmup_schedule(),
+            WarmupSchedule::DenseEpochs { epochs: 2, .. }
+        ));
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut cfg = TrainConfig::default();
+        cfg.apply_overrides(&[
+            "world=2".into(),
+            "strategy=dense".into(),
+            "lr=0.3".into(),
+            "model=lm_small".into(),
+        ])
+        .unwrap();
+        assert_eq!(cfg.world, 2);
+        assert_eq!(cfg.strategy, Strategy::Dense);
+        assert!((cfg.lr.lr_at(0) - 0.3).abs() < 1e-6);
+        assert_eq!(cfg.model, "lm_small");
+    }
+
+    #[test]
+    fn bad_inputs_rejected() {
+        let mut cfg = TrainConfig::default();
+        assert!(cfg.apply_overrides(&["nope=1".into()]).is_err());
+        assert!(cfg.apply_overrides(&["strategy=xyz".into()]).is_err());
+        assert!(cfg.apply_overrides(&["broken".into()]).is_err());
+        cfg.world = 3;
+        assert!(cfg.validate().is_err());
+        cfg.world = 4;
+        cfg.density = 0.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn to_json_contains_strategy() {
+        let cfg = TrainConfig::default();
+        let s = cfg.to_json().to_json();
+        assert!(s.contains("\"strategy\""));
+        assert!(s.contains("RGC"));
+    }
+}

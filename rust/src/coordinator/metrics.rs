@@ -1,0 +1,200 @@
+//! Run metrics: per-phase timing (the Fig. 10 decomposition), loss and
+//! eval curves, traffic accounting and the final run report.
+
+use crate::util::timer::PhaseTimer;
+
+/// Phase names used by the workers (Fig. 10 vocabulary).
+pub mod phase {
+    /// Forward+backward device step.
+    pub const COMPUTE: &str = "compute";
+    /// Momentum correction + factor masking + residual accumulate.
+    pub const MASK: &str = "mask";
+    /// Communication-set selection.
+    pub const SELECT: &str = "select";
+    /// Message packing (§5.3).
+    pub const PACK: &str = "pack";
+    /// Sparse allgather.
+    pub const COMM_SPARSE: &str = "comm_sparse";
+    /// Dense allreduce (baseline + small layers + warm-up epochs).
+    pub const COMM_DENSE: &str = "comm_dense";
+    /// Decompress + apply gathered messages.
+    pub const UNPACK: &str = "unpack";
+    /// Weight update (dense path optimizer).
+    pub const UPDATE: &str = "update";
+    /// Held-out evaluation.
+    pub const EVAL: &str = "eval";
+
+    /// The Fig. 10 column order.
+    pub const ALL: &[&str] =
+        &[COMPUTE, MASK, SELECT, PACK, COMM_SPARSE, COMM_DENSE, UNPACK, UPDATE];
+}
+
+/// What one worker hands back after its training loop.
+#[derive(Debug)]
+pub struct WorkerResult {
+    pub rank: usize,
+    pub timer: PhaseTimer,
+    /// (step, global mean train loss) — populated on rank 0 only.
+    pub loss_curve: Vec<(usize, f32)>,
+    /// (step, eval metric) — rank 0 only. LM: held-out loss; MLP: accuracy.
+    pub eval_curve: Vec<(usize, f32)>,
+    /// (step, union density of the synchronized residual across ranks) —
+    /// the paper's "1.55% from 0.1%·16 workers" §5.3 observation.
+    pub union_density: Vec<(usize, f64)>,
+    /// (step, mean per-rank selected density across compressed layers).
+    pub sent_density: Vec<(usize, f64)>,
+    /// FNV-1a hash over the final parameter bits (replica-consistency check).
+    pub param_hash: u64,
+    pub final_loss: f32,
+}
+
+/// FNV-1a over f32 bit patterns.
+pub fn param_hash(params: &[Vec<f32>]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for p in params {
+        for &v in p {
+            for b in v.to_bits().to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        }
+    }
+    h
+}
+
+/// Aggregated result of a training run.
+#[derive(Debug)]
+pub struct TrainReport {
+    pub model: String,
+    pub world: usize,
+    pub steps: usize,
+    pub strategy: &'static str,
+    /// (step, global mean train loss).
+    pub loss_curve: Vec<(usize, f32)>,
+    /// (step, eval metric).
+    pub eval_curve: Vec<(usize, f32)>,
+    pub union_density: Vec<(usize, f64)>,
+    pub sent_density: Vec<(usize, f64)>,
+    /// Per-phase seconds, merged over all workers.
+    pub phases: PhaseTimer,
+    /// Total fabric traffic (bytes / messages) over the whole run.
+    pub bytes: u64,
+    pub messages: u64,
+    /// Wall-clock of the whole run (leader side).
+    pub wall_secs: f64,
+    pub final_loss: f32,
+    pub final_eval: Option<f32>,
+    /// All ranks ended with bit-identical parameters.
+    pub replicas_consistent: bool,
+}
+
+impl TrainReport {
+    /// Mean traffic bytes per step per rank.
+    pub fn bytes_per_step_per_rank(&self) -> f64 {
+        self.bytes as f64 / (self.steps.max(1) * self.world) as f64
+    }
+
+    /// Fraction of merged phase time in `name` (Fig. 10 columns).
+    pub fn phase_fraction(&self, name: &str) -> f64 {
+        let total = self.phases.grand_total();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.phases.total(name) / total
+    }
+
+    /// Render a compact human-readable summary.
+    pub fn summary(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "{} x{} [{}]: {} steps in {:.1}s wall",
+            self.model, self.world, self.strategy, self.steps, self.wall_secs
+        );
+        let _ = writeln!(
+            s,
+            "  loss {:.4} -> {:.4}   eval {}",
+            self.loss_curve.first().map(|&(_, l)| l).unwrap_or(f32::NAN),
+            self.final_loss,
+            self.final_eval.map(|e| format!("{e:.4}")).unwrap_or_else(|| "-".into()),
+        );
+        let _ = writeln!(
+            s,
+            "  traffic {} total, {:.1} KB/step/rank, {} msgs, replicas_consistent={}",
+            crate::util::fmt_bytes(self.bytes as usize),
+            self.bytes_per_step_per_rank() / 1024.0,
+            self.messages,
+            self.replicas_consistent
+        );
+        let mut parts: Vec<String> = Vec::new();
+        for &p in phase::ALL {
+            let t = self.phases.total(p);
+            if t > 0.0 {
+                parts.push(format!("{p} {:.0}%", 100.0 * self.phase_fraction(p)));
+            }
+        }
+        let _ = writeln!(s, "  phases: {}", parts.join("  "));
+        if let Some(&(_, d)) = self.union_density.last() {
+            let _ = writeln!(s, "  union density of synced residual: {:.3}%", d * 100.0);
+        }
+        s
+    }
+
+    /// One-line CSV row (for the bench harnesses).
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{:.6},{},{},{:.3}",
+            self.model,
+            self.world,
+            self.strategy,
+            self.steps,
+            self.final_loss,
+            self.bytes,
+            self.messages,
+            self.wall_secs
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_hash_sensitive_and_stable() {
+        let a = vec![vec![1.0f32, 2.0], vec![3.0]];
+        let b = vec![vec![1.0f32, 2.0], vec![3.0]];
+        let c = vec![vec![1.0f32, 2.0], vec![3.01]];
+        assert_eq!(param_hash(&a), param_hash(&b));
+        assert_ne!(param_hash(&a), param_hash(&c));
+    }
+
+    #[test]
+    fn report_fractions() {
+        let mut phases = PhaseTimer::new();
+        phases.add(phase::COMPUTE, 3.0);
+        phases.add(phase::COMM_SPARSE, 1.0);
+        let r = TrainReport {
+            model: "m".into(),
+            world: 2,
+            steps: 10,
+            strategy: "RGC",
+            loss_curve: vec![(0, 2.0)],
+            eval_curve: vec![],
+            union_density: vec![(9, 0.015)],
+            sent_density: vec![],
+            phases,
+            bytes: 4096,
+            messages: 10,
+            wall_secs: 1.0,
+            final_loss: 1.0,
+            final_eval: None,
+            replicas_consistent: true,
+        };
+        assert!((r.phase_fraction(phase::COMPUTE) - 0.75).abs() < 1e-12);
+        assert_eq!(r.bytes_per_step_per_rank(), 4096.0 / 20.0);
+        let s = r.summary();
+        assert!(s.contains("RGC") && s.contains("union density"));
+    }
+}

@@ -1,0 +1,242 @@
+//! The RedSync coordinator: data-parallel training with residual gradient
+//! compression over the in-process fabric — the paper's system
+//! contribution, as the L3 layer of the stack.
+//!
+//! [`Trainer`] spawns one worker thread per rank (the paper's
+//! one-process-per-GPU deployment); each worker owns a PJRT runtime and a
+//! model replica, executes forward/backward through the AOT artifacts and
+//! synchronizes per-layer by the §5.5 policy: dense allreduce for small
+//! layers, sparse allgather of compressed residuals (Alg. 4/5) otherwise.
+
+pub mod checkpoint;
+pub mod metrics;
+pub mod worker;
+
+pub use checkpoint::{Checkpoint, LayerState};
+pub use metrics::{TrainReport, WorkerResult};
+
+use crate::collectives::LocalFabric;
+use crate::config::TrainConfig;
+use crate::models::schema::{Manifest, ModelSchema};
+use crate::util::timer::PhaseTimer;
+use std::thread;
+use std::time::Instant;
+
+#[derive(Debug, thiserror::Error)]
+pub enum TrainError {
+    #[error("unknown model '{0}' (run `make artifacts`?)")]
+    UnknownModel(String),
+    #[error("config: {0}")]
+    Config(#[from] crate::config::ConfigError),
+    #[error("worker failed: {0}")]
+    Worker(String),
+    #[error("worker panicked")]
+    Panic,
+}
+
+/// Data-parallel trainer: resolves the model schema, spawns the worker
+/// fleet and aggregates the run report.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub schema: ModelSchema,
+}
+
+impl Trainer {
+    pub fn new(manifest: &Manifest, cfg: TrainConfig) -> Result<Trainer, TrainError> {
+        cfg.validate()?;
+        let schema = manifest
+            .models
+            .get(&cfg.model)
+            .cloned()
+            .ok_or_else(|| TrainError::UnknownModel(cfg.model.clone()))?;
+        Ok(Trainer { cfg, schema })
+    }
+
+    /// Run the full training job; blocks until all workers finish.
+    pub fn run(&self) -> Result<TrainReport, TrainError> {
+        let world = self.cfg.world;
+        let mut fabric = LocalFabric::new(world);
+        let stats = std::sync::Arc::clone(&fabric.stats);
+        let start = Instant::now();
+
+        let results: Vec<WorkerResult> = thread::scope(|s| {
+            let handles: Vec<_> = fabric
+                .take_all()
+                .into_iter()
+                .map(|t| {
+                    let cfg = &self.cfg;
+                    let schema = &self.schema;
+                    s.spawn(move || worker::run_worker(cfg, schema, t))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().map_err(|_| TrainError::Panic)?.map_err(TrainError::Worker))
+                .collect::<Result<Vec<_>, TrainError>>()
+        })?;
+        let wall_secs = start.elapsed().as_secs_f64();
+
+        let mut phases = PhaseTimer::new();
+        for r in &results {
+            phases.merge(&r.timer);
+        }
+        let h0 = results[0].param_hash;
+        let replicas_consistent = results.iter().all(|r| r.param_hash == h0);
+        let rank0 = results
+            .into_iter()
+            .find(|r| r.rank == 0)
+            .expect("rank 0 result");
+
+        Ok(TrainReport {
+            model: self.cfg.model.clone(),
+            world,
+            steps: self.cfg.steps,
+            strategy: self.cfg.strategy.label(),
+            final_loss: rank0.final_loss,
+            final_eval: rank0.eval_curve.last().map(|&(_, e)| e),
+            loss_curve: rank0.loss_curve,
+            eval_curve: rank0.eval_curve,
+            union_density: rank0.union_density,
+            sent_density: rank0.sent_density,
+            phases,
+            bytes: stats.bytes(),
+            messages: stats.message_count(),
+            wall_secs,
+            replicas_consistent,
+        })
+    }
+}
+
+/// Convenience: run a config against the default artifact directory.
+pub fn train(cfg: TrainConfig) -> Result<TrainReport, TrainError> {
+    let manifest = Manifest::load(Manifest::default_dir())
+        .map_err(|e| TrainError::Worker(format!("manifest: {e}")))?;
+    Trainer::new(&manifest, cfg)?.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::proxy_thresholds;
+    use crate::simnet::iteration::Strategy;
+    use std::path::PathBuf;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return None;
+        }
+        Some(Manifest::load(dir).unwrap())
+    }
+
+    fn smoke_cfg(strategy: Strategy) -> TrainConfig {
+        TrainConfig {
+            model: "lm_tiny".into(),
+            world: 2,
+            steps: 8,
+            strategy,
+            density: 0.05,
+            thresholds: crate::compression::PolicyThresholds { thsd1: 512, thsd2: 8 * 1024 },
+            log_every: 2,
+            eval_every: 4,
+            ..TrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn dense_baseline_trains_and_replicas_agree() {
+        let Some(m) = manifest() else { return };
+        let r = Trainer::new(&m, smoke_cfg(Strategy::Dense)).unwrap().run().unwrap();
+        assert!(r.replicas_consistent);
+        assert!(r.final_loss.is_finite());
+        assert!(!r.loss_curve.is_empty());
+        // dense: all traffic through allreduce, no sparse phases
+        assert_eq!(r.phases.total(metrics::phase::SELECT), 0.0);
+        assert!(r.phases.total(metrics::phase::COMM_DENSE) > 0.0);
+    }
+
+    #[test]
+    fn rgc_trains_replicas_agree_and_loss_drops() {
+        let Some(m) = manifest() else { return };
+        let mut cfg = smoke_cfg(Strategy::Rgc);
+        cfg.steps = 30;
+        cfg.lr = crate::optim::LrSchedule::Constant { lr: 0.3 };
+        let r = Trainer::new(&m, cfg).unwrap().run().unwrap();
+        assert!(r.replicas_consistent, "replica drift under RGC");
+        let first = r.loss_curve.first().unwrap().1;
+        let last = r.loss_curve.last().unwrap().1;
+        assert!(last < first, "loss did not drop: {first} -> {last}");
+        assert!(r.phases.total(metrics::phase::SELECT) > 0.0);
+        assert!(r.phases.total(metrics::phase::COMM_SPARSE) > 0.0);
+    }
+
+    #[test]
+    fn quant_rgc_trains() {
+        let Some(m) = manifest() else { return };
+        let r = Trainer::new(&m, smoke_cfg(Strategy::QuantRgc)).unwrap().run().unwrap();
+        assert!(r.replicas_consistent);
+        assert!(r.final_loss.is_finite());
+    }
+
+    #[test]
+    fn rgc_moves_less_traffic_than_dense() {
+        let Some(m) = manifest() else { return };
+        let mut dense_cfg = smoke_cfg(Strategy::Dense);
+        let mut rgc_cfg = smoke_cfg(Strategy::Rgc);
+        dense_cfg.eval_every = 0;
+        rgc_cfg.eval_every = 0;
+        rgc_cfg.density = 0.01;
+        let dense = Trainer::new(&m, dense_cfg).unwrap().run().unwrap();
+        let rgc = Trainer::new(&m, rgc_cfg).unwrap().run().unwrap();
+        assert!(
+            (rgc.bytes as f64) < 0.7 * dense.bytes as f64,
+            "rgc {} !< dense {}",
+            rgc.bytes,
+            dense.bytes
+        );
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let Some(m) = manifest() else { return };
+        let cfg = TrainConfig { model: "nope".into(), ..TrainConfig::default() };
+        assert!(matches!(Trainer::new(&m, cfg), Err(TrainError::UnknownModel(_))));
+    }
+
+    #[test]
+    fn mlp_accuracy_improves_under_rgc() {
+        let Some(m) = manifest() else { return };
+        let cfg = TrainConfig {
+            model: "mlp_tiny".into(),
+            world: 2,
+            steps: 80,
+            strategy: Strategy::Rgc,
+            density: 0.05,
+            thresholds: crate::compression::PolicyThresholds { thsd1: 256, thsd2: 4 * 1024 },
+            optimizer: crate::optim::Optimizer::Nesterov { momentum: 0.9 },
+            lr: crate::optim::LrSchedule::Constant { lr: 0.1 },
+            log_every: 20,
+            eval_every: 79,
+            ..TrainConfig::default()
+        };
+        let r = Trainer::new(&m, cfg).unwrap().run().unwrap();
+        assert!(r.replicas_consistent);
+        let acc = r.final_eval.unwrap();
+        assert!(acc > 0.5, "accuracy {acc}");
+    }
+
+    #[test]
+    fn warmup_dense_epochs_reduce_select_time() {
+        let Some(m) = manifest() else { return };
+        let mut cfg = smoke_cfg(Strategy::Rgc);
+        cfg.eval_every = 0;
+        cfg.steps = 8;
+        cfg.steps_per_epoch = 4;
+        cfg.warmup = crate::config::WarmupKind::DenseEpochs(2);
+        // entire run inside warm-up: no sparse sync at all
+        let r = Trainer::new(&m, cfg).unwrap().run().unwrap();
+        assert_eq!(r.phases.total(metrics::phase::SELECT), 0.0);
+        let _ = proxy_thresholds();
+    }
+}

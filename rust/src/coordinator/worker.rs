@@ -1,0 +1,489 @@
+//! One data-parallel worker: owns a PJRT runtime, a model replica, the
+//! per-layer compression pipelines and one fabric endpoint.  Executes the
+//! RGC training loop of Algorithm 4.
+
+use super::metrics::{param_hash, phase, WorkerResult};
+use crate::collectives::{allgather, allreduce_mean, LocalTransport, Transport};
+use crate::compression::message::{pack_plain, pack_quant, unpack_plain, unpack_quant};
+use crate::compression::{
+    CompressorConfig, Method, QuantizedSet, ResidualState, SignAlternator,
+};
+use crate::config::TrainConfig;
+use crate::data::{ClusterDataset, ZipfMarkovCorpus};
+use crate::models::schema::ModelSchema;
+use crate::optim::{clip_by_global_norm, local_clip_factor, DenseOptState};
+use crate::runtime::step::{Batch, StepRunner};
+use crate::runtime::{CompressOps, DeviceSelector, Runtime};
+use crate::simnet::iteration::Strategy;
+use crate::tensor::SparseTensor;
+use crate::util::timer::PhaseTimer;
+
+/// Per-layer synchronization plan (Alg. 5 dispatch, decided once).
+struct LayerPlan {
+    method: Method,
+    /// Quantize this layer's messages (§5.2.3; never the output layer).
+    quantize: bool,
+    /// Residual + momentum state (compressed layers only).
+    residual: Option<ResidualState>,
+    /// Sign alternation for quantized layers.
+    alternator: SignAlternator,
+    /// Cached binary-search threshold (+ age) for the sampled variant.
+    cached_thr: Option<(f32, usize)>,
+    /// Dense-path optimizer state (used for Dense layers and during
+    /// dense warm-up epochs).
+    dense_state: DenseOptState,
+}
+
+/// Training data source, constructed identically on every rank and
+/// sharded by (rank, step).
+enum DataSource {
+    Lm(ZipfMarkovCorpus),
+    Mlp(ClusterDataset),
+}
+
+impl DataSource {
+    fn for_model(schema: &ModelSchema, seed: u64) -> DataSource {
+        match schema.kind.as_str() {
+            "lm" => DataSource::Lm(ZipfMarkovCorpus::new(
+                schema.cfg("vocab").expect("lm vocab"),
+                seed ^ 0xDA7A,
+                1.1,
+            )),
+            // dimension-aware margin: center separation grows ~ √dim, so
+            // margin ∝ dim^-1/2 keeps the Bayes error well above zero and
+            // strategy-quality differences measurable — no ceiling effect
+            _ => {
+                let dim = schema.cfg("in_dim").expect("mlp in_dim");
+                DataSource::Mlp(ClusterDataset::new(
+                    5120,
+                    dim,
+                    schema.cfg("classes").expect("mlp classes"),
+                    1.6 / (dim as f32).sqrt(),
+                    seed ^ 0xDA7A,
+                ))
+            }
+        }
+    }
+
+    fn batch(&self, schema: &ModelSchema, rank: usize, world: usize, step: usize) -> Batch {
+        match self {
+            DataSource::Lm(corpus) => {
+                let (tokens, targets) = corpus.batch(
+                    rank,
+                    step,
+                    schema.cfg("batch").unwrap(),
+                    schema.cfg("seq").unwrap(),
+                );
+                Batch::Lm { tokens, targets }
+            }
+            DataSource::Mlp(ds) => {
+                let (x, y) = ds.batch(rank, world, step, schema.cfg("batch").unwrap());
+                Batch::Mlp { x, y }
+            }
+        }
+    }
+
+}
+
+/// Step id of the fixed held-out LM eval batch (rank id `world + 1` keeps
+/// it disjoint from every training shard).
+const EVAL_STEP: usize = 0x7E0A;
+
+/// Run one worker to completion.  Called on its own thread by the
+/// [`super::Trainer`]; panics propagate to the join and become errors.
+pub fn run_worker(
+    cfg: &TrainConfig,
+    schema: &ModelSchema,
+    transport: LocalTransport,
+) -> Result<WorkerResult, String> {
+    let rank = transport.rank();
+    let world = transport.world();
+    let rt = Runtime::new().map_err(|e| format!("rank {rank}: runtime: {e}"))?;
+    let runner = StepRunner::new(&rt, schema).map_err(|e| format!("rank {rank}: load: {e}"))?;
+
+    // the device-selection path needs the compression-op artifacts
+    let manifest;
+    let device = if cfg.device_select {
+        manifest = crate::models::schema::Manifest::load(
+            schema.file.parent().expect("artifact dir"),
+        )
+        .map_err(|e| format!("rank {rank}: manifest: {e}"))?;
+        Some(DeviceSelector::new(
+            CompressOps::new(&rt, &manifest).map_err(|e| format!("rank {rank}: ops: {e}"))?,
+        ))
+    } else {
+        None
+    };
+
+    let mut params = schema.init_params(cfg.seed);
+    let mut plans = build_plans(cfg, schema);
+    let data = DataSource::for_model(schema, cfg.seed);
+    let warmup = cfg.warmup_schedule();
+
+    // §5.3 tensor fusion: batch compressed layers (in backprop order)
+    // into shared allgather groups; singleton groups when fusion is off
+    let comp_order: Vec<usize> =
+        (0..schema.params.len()).rev().filter(|&i| plans[i].method != Method::Dense).collect();
+    let fusion_groups: Vec<Vec<usize>> = if cfg.fusion_cap_elems > 0 && !comp_order.is_empty() {
+        let sizes: Vec<usize> =
+            comp_order.iter().map(|&i| schema.params[i].size()).collect();
+        crate::collectives::FusionPlan::greedy(&sizes, cfg.fusion_cap_elems)
+            .buckets
+            .into_iter()
+            .map(|b| b.layers.into_iter().map(|(pos, _)| comp_order[pos]).collect())
+            .collect()
+    } else {
+        comp_order.into_iter().map(|i| vec![i]).collect()
+    };
+
+    let mut timer = PhaseTimer::new();
+    let mut loss_curve = Vec::new();
+    let mut eval_curve = Vec::new();
+    let mut union_density = Vec::new();
+    let mut sent_density = Vec::new();
+    let mut final_loss = f32::NAN;
+
+    // scratch for union-density measurement (largest layer)
+    let max_layer = schema.params.iter().map(|p| p.size()).max().unwrap_or(0);
+    let mut seen = vec![false; max_layer];
+
+    for step in 0..cfg.steps {
+        let epoch = step / cfg.steps_per_epoch;
+        let density = warmup.density_at(epoch);
+        let dense_step = cfg.strategy == Strategy::Dense || warmup.is_dense_at(epoch);
+        let lr = cfg.lr.lr_at(step);
+        let log_step = step % cfg.log_every == 0 || step + 1 == cfg.steps;
+
+        let batch = data.batch(schema, rank, world, step);
+        let (loss, mut grads) = timer.time(phase::COMPUTE, || runner.step(&rt, &params, &batch))
+            .map_err(|e| format!("rank {rank} step {step}: {e}"))?;
+
+        // DGC local clipping (before residual accumulation)
+        if let Some(max_norm) = cfg.clip {
+            let limit =
+                if dense_step { max_norm } else { local_clip_factor(max_norm, world) };
+            let mut refs: Vec<&mut [f32]> = grads.iter_mut().map(|g| g.as_mut_slice()).collect();
+            clip_by_global_norm(&mut refs, limit);
+        }
+
+        let mut selected_elems = 0usize;
+        let mut sparse_elems = 0usize;
+        let mut union_elems = 0usize;
+        let scale = -lr / world as f32;
+
+        // backprop order: last layer first, as the paper's overlap scheme
+        // initiates communication for deeper layers first.  Dense layers
+        // allreduce inline; compressed layers are handled per fusion
+        // group (a group of one when fusion is off, §5.3 batching when
+        // `fusion_cap_elems` > 0).
+        if dense_step {
+            for li in (0..params.len()).rev() {
+                timer.time(phase::COMM_DENSE, || allreduce_mean(&transport, &mut grads[li]));
+                timer.time(phase::UPDATE, || {
+                    plans[li].dense_state.apply(cfg.optimizer, &mut params[li], &grads[li], lr)
+                });
+            }
+        } else {
+            for li in (0..params.len()).rev() {
+                if plans[li].method != Method::Dense {
+                    continue;
+                }
+                timer.time(phase::COMM_DENSE, || allreduce_mean(&transport, &mut grads[li]));
+                timer.time(phase::UPDATE, || {
+                    plans[li].dense_state.apply(cfg.optimizer, &mut params[li], &grads[li], lr)
+                });
+            }
+            for group in &fusion_groups {
+                // --- compressed path (Alg. 4): select + pack per layer,
+                // one allgather per fusion group ---
+                let mut blob: Vec<u32> = Vec::new();
+                for &li in group {
+                    let plan = &mut plans[li];
+                    let n = params[li].len();
+                    let residual =
+                        plan.residual.as_mut().expect("compressed layer has residual");
+                    // momentum correction (Alg. 4 lines 11-19): via the
+                    // fused L1 kernel on the device path, host otherwise
+                    let dev_accum = device
+                        .as_ref()
+                        .filter(|d| d.ops.has_momentum_accum())
+                        .map(|d| &d.ops);
+                    timer.time(phase::MASK, || -> Result<(), String> {
+                        if let Some(ops) = dev_accum {
+                            let (momentum, nesterov) = match residual.accumulation {
+                                crate::compression::Accumulation::Sgd => (0.0, false),
+                                crate::compression::Accumulation::Momentum { momentum } => {
+                                    (momentum, false)
+                                }
+                                crate::compression::Accumulation::Nesterov { momentum } => {
+                                    (momentum, true)
+                                }
+                            };
+                            let (v, u) = ops
+                                .momentum_accum(
+                                    residual.residual(),
+                                    residual.momentum_buf(),
+                                    &grads[li],
+                                    momentum,
+                                    nesterov,
+                                )
+                                .map_err(|e| format!("momentum_accum: {e}"))?;
+                            residual.set_buffers(v, u);
+                        } else {
+                            residual.accumulate(&grads[li]);
+                        }
+                        Ok(())
+                    })?;
+
+                    let k = k_for(n, density);
+                    let sign =
+                        if plan.quantize { Some(plan.alternator.next_sign()) } else { None };
+                    let sel = timer.time(phase::SELECT, || {
+                        select_layer(plan, device.as_ref(), k, sign, cfg)
+                    })?;
+                    timer.time(phase::MASK, || {
+                        plan.residual.as_mut().unwrap().mask(&sel);
+                    });
+                    selected_elems += sel.len();
+                    sparse_elems += n;
+
+                    timer.time(phase::PACK, || {
+                        if plan.quantize {
+                            blob.extend(pack_quant(&QuantizedSet::from_sparse(&sel)))
+                        } else {
+                            blob.extend(pack_plain(&sel))
+                        }
+                    });
+                }
+
+                let gathered =
+                    timer.time(phase::COMM_SPARSE, || allgather(&transport, blob));
+
+                // §5.4 decompression: walk each rank's blob, scatter-add
+                // every layer's set scaled by -lr/N
+                timer
+                    .time(phase::UNPACK, || -> Result<(), String> {
+                        for rank_blob in &gathered {
+                            let mut off = 0usize;
+                            for &li in group {
+                                if plans[li].quantize {
+                                    let (q, used) = unpack_quant(&rank_blob[off..])
+                                        .map_err(|e| format!("layer {li}: {e}"))?;
+                                    let add = q.mean * scale;
+                                    for &i in &q.indices {
+                                        params[li][i as usize] += add;
+                                    }
+                                    off += used;
+                                } else {
+                                    let (s, used) = unpack_plain(&rank_blob[off..])
+                                        .map_err(|e| format!("layer {li}: {e}"))?;
+                                    s.scatter_add(&mut params[li], scale);
+                                    off += used;
+                                }
+                            }
+                        }
+                        Ok(())
+                    })
+                    .map_err(|e| format!("rank {rank} step {step}: wire: {e}"))?;
+
+                // union-density measurement (log steps): distinct indices
+                // across all ranks / layer size — the §5.3 observation
+                if log_step {
+                    union_elems += count_union_fused(&gathered, group, &plans, &mut seen);
+                }
+            }
+        }
+
+        final_loss = loss;
+        if log_step {
+            // global mean loss (collective: all ranks participate)
+            let mut l = [loss];
+            allreduce_mean(&transport, &mut l);
+            if rank == 0 {
+                loss_curve.push((step, l[0]));
+                if sparse_elems > 0 {
+                    sent_density
+                        .push((step, selected_elems as f64 / sparse_elems as f64));
+                    union_density.push((step, union_elems as f64 / sparse_elems as f64));
+                }
+            }
+        }
+
+        if cfg.eval_every > 0 && (step % cfg.eval_every == 0 || step + 1 == cfg.steps) && rank == 0
+        {
+            let metric = timer
+                .time(phase::EVAL, || eval_metric(&rt, &runner, schema, &params, &data, world))
+                .map_err(|e| format!("rank {rank} eval: {e}"))?;
+            eval_curve.push((step, metric));
+        }
+    }
+
+    Ok(WorkerResult {
+        rank,
+        timer,
+        loss_curve,
+        eval_curve,
+        union_density,
+        sent_density,
+        param_hash: param_hash(&params),
+        final_loss,
+    })
+}
+
+fn k_for(n: usize, density: f64) -> usize {
+    ((n as f64 * density).ceil() as usize).clamp(1, n)
+}
+
+fn build_plans(cfg: &TrainConfig, schema: &ModelSchema) -> Vec<LayerPlan> {
+    schema
+        .params
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let method = if cfg.strategy == Strategy::Dense {
+                Method::Dense
+            } else {
+                Method::for_size(p.bytes(), cfg.thresholds)
+            };
+            let compressed = method != Method::Dense;
+            let quantize = cfg.strategy == Strategy::QuantRgc
+                && compressed
+                && !schema.is_output_param(i);
+            LayerPlan {
+                method,
+                quantize,
+                residual: compressed
+                    .then(|| ResidualState::new(p.size(), cfg.optimizer.accumulation())),
+                alternator: SignAlternator::new(),
+                cached_thr: None,
+                dense_state: DenseOptState::new(p.size(), cfg.optimizer),
+            }
+        })
+        .collect()
+}
+
+/// Communication-set selection for one layer, host or device flavor.
+fn select_layer(
+    plan: &mut LayerPlan,
+    device: Option<&DeviceSelector>,
+    k: usize,
+    sign: Option<f32>,
+    cfg: &TrainConfig,
+) -> Result<SparseTensor, String> {
+    let cc = CompressorConfig { density: cfg.density, ..Default::default() };
+    let residual = plan.residual.as_mut().expect("residual");
+
+    if let Some(dev) = device {
+        // L1-kernel path
+        let d = match plan.method {
+            Method::TrimmedTopk | Method::ExactTopk => {
+                dev.trimmed_topk(residual.residual(), k, cc.trim_eps, sign)
+            }
+            Method::SampledBinarySearch => dev
+                .threshold_binary_search(residual.residual(), k, cc.bs.eps, cc.bs.max_iters, sign),
+            Method::Dense => unreachable!("dense layers never select"),
+        }
+        .map_err(|e| format!("device select: {e}"))?;
+        return Ok(d.sparse);
+    }
+
+    // host path (mirrors LayerCompressor but with the per-step density and
+    // the worker-owned threshold cache)
+    let v = residual.residual();
+    let sel = match plan.method {
+        Method::ExactTopk => crate::compression::exact_topk(v, k, sign),
+        Method::TrimmedTopk => crate::compression::trimmed_topk(v, k, cc.trim_eps, sign),
+        Method::SampledBinarySearch => {
+            // §6.4: threshold reuse is incompatible with sign alternation
+            if sign.is_none() {
+                if let Some((thr, age)) = plan.cached_thr {
+                    if age < cc.interval {
+                        let s = SparseTensor::compact_above(v, thr);
+                        // cache is valid unless the residual drifted far
+                        // from the threshold (the paper's re-select rule)
+                        if !s.is_empty() && s.len() <= 4 * k {
+                            plan.cached_thr = Some((thr, age + 1));
+                            return Ok(s);
+                        }
+                        // fall through to a fresh search
+                    }
+                }
+            }
+            let sel = crate::compression::threshold_binary_search(v, k, cc.bs, sign);
+            if sign.is_none() {
+                plan.cached_thr = Some((sel.threshold, 1));
+            }
+            sel
+        }
+        Method::Dense => unreachable!(),
+    };
+    Ok(sel.sparse)
+}
+
+/// Count the distinct indices each layer of a fusion group received
+/// across all ranks' blobs, using (and clearing) the `seen` scratch.
+fn count_union_fused(
+    gathered: &[Vec<u32>],
+    group: &[usize],
+    plans: &[LayerPlan],
+    seen: &mut [bool],
+) -> usize {
+    let mut cursors = vec![0usize; gathered.len()];
+    let mut total = 0usize;
+    for &li in group {
+        let quantized = plans[li].quantize;
+        let mut marked: Vec<u32> = Vec::new();
+        for (r, blob) in gathered.iter().enumerate() {
+            if quantized {
+                if let Ok((q, used)) = unpack_quant(&blob[cursors[r]..]) {
+                    for &i in &q.indices {
+                        if !seen[i as usize] {
+                            seen[i as usize] = true;
+                            marked.push(i);
+                        }
+                    }
+                    cursors[r] += used;
+                }
+            } else if let Ok((s, used)) = unpack_plain(&blob[cursors[r]..]) {
+                for &i in &s.indices {
+                    if !seen[i as usize] {
+                        seen[i as usize] = true;
+                        marked.push(i);
+                    }
+                }
+                cursors[r] += used;
+            }
+        }
+        total += marked.len();
+        for i in marked {
+            seen[i as usize] = false;
+        }
+    }
+    total
+}
+
+fn eval_metric(
+    rt: &Runtime,
+    runner: &StepRunner,
+    schema: &ModelSchema,
+    params: &[Vec<f32>],
+    data: &DataSource,
+    world: usize,
+) -> crate::runtime::Result<f32> {
+    match data {
+        DataSource::Lm(corpus) => {
+            let (tokens, targets) = corpus.batch(
+                world + 1,
+                EVAL_STEP,
+                schema.cfg("batch").unwrap(),
+                schema.cfg("seq").unwrap(),
+            );
+            runner.eval_lm(rt, params, &Batch::Lm { tokens, targets })
+        }
+        DataSource::Mlp(ds) => {
+            // generalization accuracy on the held-out split
+            let (xs, ys) = ds.eval_split();
+            runner.eval_mlp_accuracy(rt, params, xs, ys)
+        }
+    }
+}

@@ -1,0 +1,252 @@
+//! Closed-form communication cost model (§5.5, Appendix B).
+//!
+//! ```text
+//! T_sparse = T_select + lg(p)·α + (p-1)·(M·D·w)·β + p·(M·D)·γ₁      (Eq. 1)
+//! T_dense  = 2·lg(p)·α + 2·((p-1)/p)·(4M)·β + ((p-1)/p)·M·γ₂       (Eq. 2)
+//! ```
+//!
+//! with `M` in elements, `w` the wire bytes per selected element (8 for
+//! plain `(idx, val)` pairs, 4 for the quantized index-only format), and
+//! γ in seconds/element.  The property tests in this module cross-check
+//! the closed forms against the step-walked [`crate::simnet`] schedules —
+//! the "cost-model validity" row of the experiment index.
+//!
+//! The paper's §5.5 observations fall out of these functions:
+//! * bandwidth compression ≠ model compression: the sparse/dense byte
+//!   ratio is `p·D·w/8` — at p = 128, D = 0.1%, plain RGC needs 12.8% of
+//!   dense bandwidth, not 0.1% ([`bandwidth_ratio`]).
+//! * decompression (`p·γ₁·M·D`) grows linearly with p and becomes the
+//!   bottleneck at scale ([`decompress_fraction`]).
+
+use crate::simnet::Machine;
+
+/// Wire bytes per selected element.
+pub const PLAIN_WIRE_BYTES: f64 = 8.0;
+pub const QUANT_WIRE_BYTES: f64 = 4.0;
+
+/// Eq. 1 — sparse synchronization cost (seconds).
+///
+/// * `t_select`: communication-set identification time for this layer
+/// * `m_elems`: layer size M in elements
+/// * `density`: D
+/// * `wire_bytes`: 8.0 plain / 4.0 quantized
+pub fn t_sparse(
+    machine: &Machine,
+    p: usize,
+    m_elems: f64,
+    density: f64,
+    t_select: f64,
+    wire_bytes: f64,
+) -> f64 {
+    if p <= 1 {
+        return t_select;
+    }
+    let pf = p as f64;
+    let md = m_elems * density;
+    t_select
+        + pf.log2() * machine.alpha
+        + (pf - 1.0) * md * wire_bytes * machine.beta
+        + pf * md * machine.gamma_decompress
+}
+
+/// Eq. 2 — dense allreduce cost (seconds); 4 bytes per element.
+pub fn t_dense(machine: &Machine, p: usize, m_elems: f64) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let pf = p as f64;
+    2.0 * pf.log2() * machine.alpha
+        + 2.0 * (pf - 1.0) / pf * (4.0 * m_elems) * machine.beta
+        + (pf - 1.0) / pf * m_elems * machine.gamma_reduce
+}
+
+/// Sparse/dense *bandwidth* ratio: `(p-1)·D·w / (2·(p-1)/p · 4)` =
+/// `p·D·w/8`.  The §5.5 "12.8% not 0.1%" observation (the paper quotes
+/// p·D; the factor the two conventions differ by is dense allreduce's
+/// `2(p-1)/p ≈ 2`, which we keep).
+pub fn bandwidth_ratio(p: usize, density: f64, wire_bytes: f64) -> f64 {
+    let pf = p as f64;
+    ((pf - 1.0) * density * wire_bytes) / (2.0 * (pf - 1.0) / pf * 4.0)
+}
+
+/// Fraction of Eq. 1 spent in decompression (the scaling bottleneck).
+pub fn decompress_fraction(
+    machine: &Machine,
+    p: usize,
+    m_elems: f64,
+    density: f64,
+    t_select: f64,
+    wire_bytes: f64,
+) -> f64 {
+    let total = t_sparse(machine, p, m_elems, density, t_select, wire_bytes);
+    let pf = p as f64;
+    pf * m_elems * density * machine.gamma_decompress / total
+}
+
+/// Largest density at which sparse sync still beats dense for a layer of
+/// `m_elems` at world size `p` (bisection on D; returns None if even
+/// D → 0 loses, i.e. select cost alone exceeds dense).
+pub fn crossover_density(
+    machine: &Machine,
+    p: usize,
+    m_elems: f64,
+    t_select: f64,
+    wire_bytes: f64,
+) -> Option<f64> {
+    let dense = t_dense(machine, p, m_elems);
+    if t_sparse(machine, p, m_elems, 0.0, t_select, wire_bytes) >= dense {
+        return None;
+    }
+    let (mut lo, mut hi) = (0.0f64, 1.0f64);
+    for _ in 0..64 {
+        let mid = 0.5 * (lo + hi);
+        if t_sparse(machine, p, m_elems, mid, t_select, wire_bytes) < dense {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Some(lo)
+}
+
+/// §5.5 policy decision: is sparse sync worthwhile for this layer?
+/// (The static thresholds in [`crate::compression::PolicyThresholds`] are
+/// the paper's tuned defaults; this is the model-driven version used for
+/// ablations.)
+pub fn sparse_wins(
+    machine: &Machine,
+    p: usize,
+    m_elems: f64,
+    density: f64,
+    t_select: f64,
+    wire_bytes: f64,
+) -> bool {
+    t_sparse(machine, p, m_elems, density, t_select, wire_bytes)
+        < t_dense(machine, p, m_elems)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::{allgather_time, allreduce_time};
+    use crate::util::proptest::{check, ensure, ensure_close};
+
+    #[test]
+    fn eq1_matches_simnet_allgather_walk() {
+        // Eq 1 transfer terms == walked recursive-doubling schedule +
+        // select + decompress addenda
+        let m = Machine::muradin();
+        check(40, |g| {
+            let p = 1usize << g.size(1..8);
+            let elems = g.size(1024..4_000_000) as f64;
+            let d = g.f32(0.0001..0.02) as f64;
+            let closed = t_sparse(&m, p, elems, d, 0.0, PLAIN_WIRE_BYTES)
+                - p as f64 * elems * d * m.gamma_decompress;
+            let walked = allgather_time(&m, p, elems * d * PLAIN_WIRE_BYTES);
+            ensure_close(closed, walked, 1e-9, "Eq1 vs schedule")
+        });
+    }
+
+    #[test]
+    fn eq2_matches_simnet_allreduce_walk() {
+        let m = Machine::piz_daint();
+        check(40, |g| {
+            let p = 1usize << g.size(1..8);
+            let elems = g.size(1024..8_000_000) as f64;
+            let closed = t_dense(&m, p, elems);
+            let walked = allreduce_time(&m, p, elems * 4.0);
+            ensure_close(closed, walked, 1e-9, "Eq2 vs schedule")
+        });
+    }
+
+    #[test]
+    fn paper_bandwidth_observation() {
+        // p=128, D=0.1%, plain (8B/elem): 12.8% of dense bandwidth
+        let r = bandwidth_ratio(128, 1e-3, PLAIN_WIRE_BYTES);
+        assert!((r - 0.128).abs() < 1e-6, "{r}");
+        // quantized halves it
+        let rq = bandwidth_ratio(128, 1e-3, QUANT_WIRE_BYTES);
+        assert!((rq - 0.064).abs() < 1e-6, "{rq}");
+    }
+
+    #[test]
+    fn decompression_becomes_bottleneck_at_scale() {
+        // with the (p-independent) select cost in the denominator, the
+        // p·γ₁ term's share of Eq. 1 grows with p — Fig. 10's story
+        let m = Machine::piz_daint();
+        let elems = 25.6e6; // resnet50-ish
+        let t_sel = m.sel_launch + elems * m.sel_trimmed_per_elem;
+        let f16 = decompress_fraction(&m, 16, elems, 1e-3, t_sel, PLAIN_WIRE_BYTES);
+        let f128 = decompress_fraction(&m, 128, elems, 1e-3, t_sel, PLAIN_WIRE_BYTES);
+        assert!(f128 > f16, "fraction must grow with p: {f16} -> {f128}");
+    }
+
+    #[test]
+    fn small_layers_prefer_dense() {
+        // §5.5: below ~128KB the compression overhead (dominated by the
+        // fixed selection launch cost) exceeds the bandwidth saving
+        let m = Machine::muradin();
+        let elems = 16_384.0; // 64 KB
+        let t_sel = m.sel_launch + elems * m.sel_trimmed_per_elem;
+        assert!(!sparse_wins(&m, 8, elems, 1e-3, t_sel, PLAIN_WIRE_BYTES) ||
+                t_sparse(&m, 8, elems, 1e-3, t_sel, PLAIN_WIRE_BYTES) * 2.0
+                    > t_dense(&m, 8, elems),
+                "64KB layer should be (near) dense-preferred");
+    }
+
+    #[test]
+    fn big_layers_prefer_sparse() {
+        let m = Machine::muradin();
+        let elems = 37.7e6; // alexnet fc6
+        let t_sel = elems * m.sel_bs_per_elem;
+        assert!(sparse_wins(&m, 8, elems, 1e-3, t_sel, PLAIN_WIRE_BYTES));
+    }
+
+    #[test]
+    fn crossover_density_is_meaningful() {
+        let m = Machine::piz_daint();
+        let elems = 16e6;
+        let d = crossover_density(&m, 64, elems, 0.0, PLAIN_WIRE_BYTES).unwrap();
+        assert!(d > 1e-3 && d < 1.0, "crossover {d}");
+        // denser than crossover loses, sparser wins
+        assert!(sparse_wins(&m, 64, elems, d * 0.5, 0.0, PLAIN_WIRE_BYTES));
+        assert!(!sparse_wins(&m, 64, elems, (d * 2.0).min(1.0), 0.0, PLAIN_WIRE_BYTES));
+    }
+
+    #[test]
+    fn crossover_none_when_select_too_expensive() {
+        let m = Machine::muradin();
+        // tiny layer, huge select cost
+        assert!(crossover_density(&m, 8, 1024.0, 1.0, PLAIN_WIRE_BYTES).is_none());
+    }
+
+    #[test]
+    fn warmup_density_needs_full_bandwidth_at_64() {
+        // §5.7: at 64 GPUs, D = 1.5625% quantized already needs ~100% of
+        // dense allreduce bandwidth — warm-up should use dense allreduce
+        let r = bandwidth_ratio(64, 0.015625, QUANT_WIRE_BYTES);
+        assert!(r > 0.45, "quantized warm-up bandwidth ratio {r}");
+        let rp = bandwidth_ratio(64, 0.015625, PLAIN_WIRE_BYTES);
+        assert!(rp > 0.9, "plain warm-up bandwidth ratio {rp}");
+    }
+
+    #[test]
+    fn prop_sparse_monotone_in_density_and_p() {
+        let m = Machine::piz_daint();
+        check(40, |g| {
+            let p = 1usize << g.size(1..7);
+            let elems = g.size(100_000..50_000_000) as f64;
+            let d1 = g.f32(0.0001..0.01) as f64;
+            let d2 = d1 * 2.0;
+            ensure(
+                t_sparse(&m, p, elems, d1, 0.0, 8.0) < t_sparse(&m, p, elems, d2, 0.0, 8.0),
+                "monotone in D",
+            )?;
+            ensure(
+                t_sparse(&m, p, elems, d1, 0.0, 8.0)
+                    < t_sparse(&m, 2 * p, elems, d1, 0.0, 8.0),
+                "monotone in p",
+            )
+        });
+    }
+}

@@ -1,0 +1,265 @@
+//! Synthetic datasets (DESIGN.md §Substitutions: stand-ins for Cifar10 /
+//! ImageNet / PTB / Wiki2 on a no-dataset testbed).
+//!
+//! * [`ZipfMarkovCorpus`] — token streams with Zipfian unigram mass and
+//!   first-order Markov structure: enough signal for a language model to
+//!   reduce loss well below the unigram entropy, deterministic per seed.
+//! * [`ClusterDataset`] — Gaussian-cluster classification with controllable
+//!   margin: the proxy task for the accuracy experiments (Fig. 6,
+//!   Tables 1-2).
+//!
+//! Each worker shards the stream by `(seed, rank)` so data parallelism
+//! sees disjoint data, mirroring the paper's per-node dataset shards.
+
+use crate::util::rng::Pcg32;
+
+/// Zipf-Markov synthetic LM corpus.
+pub struct ZipfMarkovCorpus {
+    vocab: usize,
+    /// per-state cumulative transition distributions (`states x vocab`)
+    cdfs: Vec<Vec<f32>>,
+    n_states: usize,
+}
+
+impl ZipfMarkovCorpus {
+    /// Build a corpus model with `n_states` Markov states over `vocab`
+    /// tokens, Zipf exponent `s` (≈1.0 natural).
+    pub fn new(vocab: usize, seed: u64, s: f64) -> Self {
+        assert!(vocab >= 4);
+        let n_states = 16.min(vocab);
+        let mut rng = Pcg32::new(seed, 0x2157);
+        let mut cdfs = Vec::with_capacity(n_states);
+        for _ in 0..n_states {
+            // Zipf base mass with a random permutation + multiplicative
+            // noise per state -> distinct transition rows
+            let mut weights: Vec<f32> = (0..vocab)
+                .map(|i| (1.0 / ((i + 1) as f64).powf(s)) as f32)
+                .collect();
+            rng.shuffle(&mut weights);
+            for w in weights.iter_mut() {
+                *w *= 0.5 + rng.next_f32();
+            }
+            let mut cdf = Vec::with_capacity(vocab);
+            let mut acc = 0.0f32;
+            for w in &weights {
+                acc += w;
+                cdf.push(acc);
+            }
+            cdfs.push(cdf);
+        }
+        ZipfMarkovCorpus { vocab, cdfs, n_states }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Sample a `(tokens, targets)` LM batch for `rank`: targets are the
+    /// next tokens.  Deterministic in (seed-of-self, rank, step).
+    pub fn batch(
+        &self,
+        rank: usize,
+        step: usize,
+        batch: usize,
+        seq: usize,
+    ) -> (Vec<i32>, Vec<i32>) {
+        let mut rng = Pcg32::new((step as u64) << 16 | rank as u64, 0xBA7C);
+        let mut tokens = Vec::with_capacity(batch * seq);
+        let mut targets = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            let mut tok = rng.below(self.vocab as u32) as usize;
+            for _ in 0..seq {
+                let state = tok % self.n_states;
+                let next = rng.categorical(&self.cdfs[state]);
+                tokens.push(tok as i32);
+                targets.push(next as i32);
+                tok = next;
+            }
+        }
+        (tokens, targets)
+    }
+}
+
+/// Gaussian-cluster classification dataset (fixed finite set, so train
+/// accuracy is measurable and overfitting observable).
+pub struct ClusterDataset {
+    pub dim: usize,
+    pub classes: usize,
+    xs: Vec<f32>,
+    ys: Vec<i32>,
+    n: usize,
+}
+
+impl ClusterDataset {
+    /// `margin` scales cluster-center separation relative to the noise
+    /// std (1.0): ≈3 is comfortably separable, ≈1 is hard.
+    pub fn new(n: usize, dim: usize, classes: usize, margin: f32, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed, 0xC1A5);
+        let mut centers = vec![0f32; classes * dim];
+        rng.fill_normal(&mut centers, margin);
+        let mut xs = vec![0f32; n * dim];
+        let mut ys = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = rng.below(classes as u32) as usize;
+            ys.push(c as i32);
+            for d in 0..dim {
+                xs[i * dim + d] = centers[c * dim + d] + rng.normal();
+            }
+        }
+        ClusterDataset { dim, classes, xs, ys, n }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Size of the training split (the leading 80%); the tail 20% is the
+    /// held-out split returned by [`Self::eval_split`].
+    pub fn train_len(&self) -> usize {
+        (self.n * 4 / 5).max(1)
+    }
+
+    /// Deterministic batch for `(rank, step)`: samples with replacement
+    /// from this worker's shard (disjoint contiguous shards per rank) of
+    /// the *training* split.
+    pub fn batch(
+        &self,
+        rank: usize,
+        world: usize,
+        step: usize,
+        batch: usize,
+    ) -> (Vec<f32>, Vec<i32>) {
+        let n = self.train_len();
+        let shard = n / world;
+        let lo = rank * shard;
+        let hi = if rank == world - 1 { n } else { lo + shard };
+        let mut rng = Pcg32::new((step as u64) << 16 | rank as u64, 0xBA7C + 1);
+        let mut xs = Vec::with_capacity(batch * self.dim);
+        let mut ys = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let i = lo + rng.below((hi - lo) as u32) as usize;
+            xs.extend_from_slice(&self.xs[i * self.dim..(i + 1) * self.dim]);
+            ys.push(self.ys[i]);
+        }
+        (xs, ys)
+    }
+
+    /// The full dataset.
+    pub fn all(&self) -> (&[f32], &[i32]) {
+        (&self.xs, &self.ys)
+    }
+
+    /// The held-out split (tail 20%) — never sampled by [`Self::batch`].
+    pub fn eval_split(&self) -> (&[f32], &[i32]) {
+        let lo = self.train_len();
+        (&self.xs[lo * self.dim..], &self.ys[lo..])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_batches_deterministic() {
+        let c = ZipfMarkovCorpus::new(64, 7, 1.0);
+        let (t1, g1) = c.batch(0, 3, 4, 16);
+        let (t2, g2) = c.batch(0, 3, 4, 16);
+        assert_eq!(t1, t2);
+        assert_eq!(g1, g2);
+        assert_eq!(t1.len(), 64);
+    }
+
+    #[test]
+    fn corpus_ranks_differ() {
+        let c = ZipfMarkovCorpus::new(64, 7, 1.0);
+        assert_ne!(c.batch(0, 0, 4, 16).0, c.batch(1, 0, 4, 16).0);
+    }
+
+    #[test]
+    fn corpus_tokens_in_vocab() {
+        let c = ZipfMarkovCorpus::new(32, 1, 1.0);
+        let (t, g) = c.batch(0, 0, 8, 32);
+        assert!(t.iter().chain(&g).all(|&x| (0..32).contains(&x)));
+    }
+
+    #[test]
+    fn corpus_is_predictable_markov() {
+        // Given the state, the top transition should be much more likely
+        // than uniform: measure empirical max-transition frequency
+        let c = ZipfMarkovCorpus::new(64, 3, 1.0);
+        let (t, g) = c.batch(0, 0, 64, 64);
+        // count most-common target per source state
+        let mut counts = std::collections::HashMap::new();
+        for (a, b) in t.iter().zip(&g) {
+            *counts.entry((a % 16, *b)).or_insert(0usize) += 1;
+        }
+        let best = counts.values().max().copied().unwrap_or(0);
+        assert!(best > t.len() / 64, "markov structure too weak");
+    }
+
+    #[test]
+    fn clusters_shapes_and_labels() {
+        let d = ClusterDataset::new(1000, 16, 4, 3.0, 5);
+        assert_eq!(d.len(), 1000);
+        let (xs, ys) = d.batch(0, 4, 0, 32);
+        assert_eq!(xs.len(), 32 * 16);
+        assert!(ys.iter().all(|&y| (0..4).contains(&y)));
+    }
+
+    #[test]
+    fn cluster_shards_disjoint_sources() {
+        let d = ClusterDataset::new(100, 4, 2, 3.0, 5);
+        // ranks draw from different shards: batches differ
+        let (x0, _) = d.batch(0, 4, 0, 16);
+        let (x3, _) = d.batch(3, 4, 0, 16);
+        assert_ne!(x0, x3);
+    }
+
+    #[test]
+    fn clusters_separable_at_high_margin() {
+        // nearest-center classification should get most right at margin 4
+        let classes = 4;
+        let dim = 8;
+        let d = ClusterDataset::new(400, dim, classes, 4.0, 9);
+        let (xs, ys) = d.all();
+        // recover centers by class means
+        let mut centers = vec![0f32; classes * dim];
+        let mut n = vec![0f32; classes];
+        for i in 0..d.len() {
+            let c = ys[i] as usize;
+            n[c] += 1.0;
+            for k in 0..dim {
+                centers[c * dim + k] += xs[i * dim + k];
+            }
+        }
+        for c in 0..classes {
+            for k in 0..dim {
+                centers[c * dim + k] /= n[c].max(1.0);
+            }
+        }
+        let mut correct = 0;
+        for i in 0..d.len() {
+            let mut best = (f32::INFINITY, 0usize);
+            for c in 0..classes {
+                let dist: f32 = (0..dim)
+                    .map(|k| {
+                        let diff = xs[i * dim + k] - centers[c * dim + k];
+                        diff * diff
+                    })
+                    .sum();
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            if best.1 == ys[i] as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct as f64 / d.len() as f64 > 0.9);
+    }
+}

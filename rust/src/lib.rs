@@ -1,0 +1,33 @@
+//! # RedSync
+//!
+//! Reproduction of *"RedSync: Reducing Synchronization Traffic for
+//! Distributed Deep Learning"* (Fang, Fu, Yang, Hsieh; JPDC 2019) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the distributed data-parallel coordinator:
+//!   residual gradient compression, sparse allgather synchronization,
+//!   cost-model-driven per-layer policy, worker orchestration.
+//! * **L2 (python/compile/model.py)** — jax train-step graphs, AOT-lowered
+//!   to HLO text under `artifacts/`.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the selection
+//!   hot-spot, lowered into the same artifacts.
+//!
+//! Python never runs at training time: [`runtime`] loads the artifacts via
+//! PJRT (xla crate) and the coordinator drives everything from Rust.
+//!
+//! See DESIGN.md for the full system inventory and the experiment index
+//! mapping every figure/table of the paper to a bench target.
+
+pub mod collectives;
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod models;
+pub mod optim;
+pub mod ps;
+pub mod runtime;
+pub mod simnet;
+pub mod tensor;
+pub mod util;

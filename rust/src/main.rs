@@ -1,0 +1,333 @@
+//! RedSync leader binary.
+//!
+//! Subcommands:
+//!   train       run a data-parallel training job (real execution)
+//!   simulate    virtual-time scalability simulation (Figs. 7-10)
+//!   costmodel   evaluate the §5.5 analytic cost model (Eq. 1/2)
+//!   select      micro-benchmark the selection algorithms (Fig. 3)
+//!   info        list artifacts, models, machine presets
+
+use redsync::config::{preset, presets::preset_names};
+use redsync::coordinator::Trainer;
+use redsync::models::schema::Manifest;
+use redsync::models::zoo;
+use redsync::simnet::iteration::{simulate_iteration, speedup, SimConfig, Strategy};
+use redsync::simnet::Machine;
+use redsync::util::argparse::Args;
+use redsync::util::{fmt_bytes, logging};
+
+fn main() {
+    logging::init(None);
+    let argv: Vec<String> = std::env::args().collect();
+    let code = match argv.get(1).map(String::as_str) {
+        Some("train") => cmd_train(&argv[2..]),
+        Some("simulate") => cmd_simulate(&argv[2..]),
+        Some("costmodel") => cmd_costmodel(&argv[2..]),
+        Some("select") => cmd_select(&argv[2..]),
+        Some("info") => cmd_info(),
+        Some("-h") | Some("--help") | None => {
+            print_usage();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    eprintln!(
+        "redsync — Residual Gradient Compression for data-parallel training
+
+USAGE: redsync <subcommand> [flags]
+
+SUBCOMMANDS:
+  train      run a training job on the in-process fabric
+  simulate   virtual-time scalability simulation (paper Figs. 7-10)
+  costmodel  evaluate the Eq. 1/2 analytic model for a layer size
+  select     micro-benchmark selection algorithms (paper Fig. 3)
+  info       list models, artifacts and machine presets
+
+Presets for train: {}",
+        preset_names().join(", ")
+    );
+}
+
+fn cmd_train(argv: &[String]) -> i32 {
+    let args = Args::new("redsync train", "run a data-parallel RGC training job")
+        .opt("preset", "smoke", "named preset (see `redsync info`)")
+        .opt("config", "", "JSON config file applied over the preset")
+        .opt("set", "", "comma-separated key=value overrides")
+        .flag("csv", "print a CSV row instead of the summary");
+    let parsed = match args.parse(argv) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+
+    let mut cfg = match preset(parsed.get("preset")) {
+        Some(c) => c,
+        None => {
+            eprintln!("unknown preset '{}' (have: {})", parsed.get("preset"), preset_names().join(", "));
+            return 2;
+        }
+    };
+    if !parsed.get("config").is_empty() {
+        if let Err(e) = cfg.apply_file(parsed.get("config")) {
+            eprintln!("{e}");
+            return 2;
+        }
+    }
+    if !parsed.get("set").is_empty() {
+        let overrides: Vec<String> =
+            parsed.get("set").split(',').map(str::to_string).collect();
+        if let Err(e) = cfg.apply_overrides(&overrides) {
+            eprintln!("{e}");
+            return 2;
+        }
+    }
+
+    let manifest = match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("cannot load artifacts ({e}); run `make artifacts` first");
+            return 1;
+        }
+    };
+    println!("config: {}", cfg.to_json().to_json());
+    let trainer = match Trainer::new(&manifest, cfg) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    match trainer.run() {
+        Ok(report) => {
+            if parsed.get_flag("csv") {
+                println!("{}", report.csv_row());
+            } else {
+                print!("{}", report.summary());
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("training failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_simulate(argv: &[String]) -> i32 {
+    let args = Args::new("redsync simulate", "virtual-time scalability simulation")
+        .opt("model", "vgg16", "profile: alexnet|vgg16|vgg16-cifar|resnet50|resnet44|lstm-ptb|lstm-wiki2")
+        .opt("machine", "piz-daint", "machine preset: muradin|piz-daint")
+        .opt("gpus", "2,4,8,16,32,64,128", "comma-separated world sizes")
+        .opt("density", "0.001", "compression density D")
+        .opt("batch", "32", "per-GPU batch size")
+        .flag("breakdown", "print the Fig. 10 phase decomposition");
+    let parsed = match args.parse(argv) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let Some(model) = zoo::by_name(parsed.get("model")) else {
+        eprintln!("unknown model profile '{}'", parsed.get("model"));
+        return 2;
+    };
+    let Some(machine) = Machine::by_name(parsed.get("machine")) else {
+        eprintln!("unknown machine '{}'", parsed.get("machine"));
+        return 2;
+    };
+    let cfg = SimConfig {
+        density: parsed.f64("density"),
+        batch_per_gpu: parsed.usize("batch"),
+        ..SimConfig::default()
+    };
+    let gpus: Vec<usize> = parsed
+        .get("gpus")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+
+    println!(
+        "# {} on {} (density {}, batch/gpu {})",
+        model.name, machine.name, cfg.density, cfg.batch_per_gpu
+    );
+    if parsed.get_flag("breakdown") {
+        println!("{:>5} {:>10} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>10}",
+            "gpus", "strategy", "compute", "select", "mask", "pack", "comm", "unpack", "iter(ms)");
+        for &p in &gpus {
+            for strat in [Strategy::Dense, Strategy::Rgc, Strategy::QuantRgc] {
+                let b = simulate_iteration(&model, &machine, p, strat, &cfg);
+                println!(
+                    "{:>5} {:>10} {:>8.1}% {:>8.1}% {:>8.1}% {:>8.1}% {:>8.1}% {:>8.1}% {:>10.2}",
+                    p,
+                    strat.label(),
+                    100.0 * b.compute / b.component_sum(),
+                    100.0 * b.select / b.component_sum(),
+                    100.0 * b.mask / b.component_sum(),
+                    100.0 * b.pack / b.component_sum(),
+                    100.0 * b.comm / b.component_sum(),
+                    100.0 * b.unpack / b.component_sum(),
+                    b.total * 1e3,
+                );
+            }
+        }
+    } else {
+        println!("{:>5} {:>12} {:>12} {:>12}", "gpus", "baseline", "RGC", "quant-RGC");
+        for &p in &gpus {
+            let d = speedup(&model, &machine, p, Strategy::Dense, &cfg);
+            let r = speedup(&model, &machine, p, Strategy::Rgc, &cfg);
+            let q = speedup(&model, &machine, p, Strategy::QuantRgc, &cfg);
+            println!("{p:>5} {d:>12.2} {r:>12.2} {q:>12.2}");
+        }
+    }
+    0
+}
+
+fn cmd_costmodel(argv: &[String]) -> i32 {
+    let args = Args::new("redsync costmodel", "evaluate Eq. 1 / Eq. 2 for a layer")
+        .opt("machine", "muradin", "machine preset")
+        .opt("elems", "16777216", "layer size in elements (64 MB default)")
+        .opt("density", "0.001", "density D")
+        .opt("gpus", "2,4,8,16,32,64,128", "world sizes");
+    let parsed = match args.parse(argv) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let Some(machine) = Machine::by_name(parsed.get("machine")) else {
+        eprintln!("unknown machine");
+        return 2;
+    };
+    let m = parsed.f64("elems");
+    let d = parsed.f64("density");
+    println!(
+        "# Eq.1 vs Eq.2: layer {} ({}) density {} on {}",
+        m,
+        fmt_bytes((m as usize) * 4),
+        d,
+        machine.name
+    );
+    println!(
+        "{:>5} {:>12} {:>12} {:>12} {:>10} {:>10}",
+        "p", "sparse(ms)", "quant(ms)", "dense(ms)", "bw-ratio", "crossover-D"
+    );
+    for p in parsed.get("gpus").split(',').filter_map(|s| s.trim().parse::<usize>().ok()) {
+        use redsync::costmodel::*;
+        let ts = t_sparse(&machine, p, m, d, 0.0, PLAIN_WIRE_BYTES);
+        let tq = t_sparse(&machine, p, m, d, 0.0, QUANT_WIRE_BYTES);
+        let td = t_dense(&machine, p, m);
+        let bw = bandwidth_ratio(p, d, PLAIN_WIRE_BYTES);
+        let cd = crossover_density(&machine, p, m, 0.0, PLAIN_WIRE_BYTES);
+        println!(
+            "{:>5} {:>12.3} {:>12.3} {:>12.3} {:>9.1}% {:>10}",
+            p,
+            ts * 1e3,
+            tq * 1e3,
+            td * 1e3,
+            bw * 100.0,
+            cd.map(|v| format!("{v:.2e}")).unwrap_or_else(|| "-".into())
+        );
+    }
+    0
+}
+
+fn cmd_select(argv: &[String]) -> i32 {
+    let args = Args::new("redsync select", "selection micro-benchmark (Fig. 3)")
+        .opt("sizes", "16384,65536,262144,1048576,4194304,16777216", "element counts")
+        .opt("density", "0.001", "density D")
+        .opt("reps", "5", "repetitions per point");
+    let parsed = match args.parse(argv) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let density = parsed.f64("density");
+    let reps = parsed.usize("reps");
+    use redsync::compression::{exact_topk, threshold_binary_search, trimmed_topk, BinarySearchParams};
+    use redsync::util::rng::Pcg32;
+    use redsync::util::timer::bench;
+
+    println!("# selection time (ms), density {density}, median of {reps}");
+    println!(
+        "{:>10} {:>12} {:>12} {:>12} {:>10} {:>10}",
+        "elems", "exact", "trimmed", "binsearch", "x-trim", "x-bs"
+    );
+    for size in parsed.get("sizes").split(',').filter_map(|s| s.trim().parse::<usize>().ok()) {
+        let mut rng = Pcg32::seeded(size as u64);
+        let mut x = vec![0f32; size];
+        rng.fill_normal(&mut x, 1.0);
+        let k = ((size as f64 * density).ceil() as usize).max(1);
+        let te = bench(reps, || exact_topk(&x, k, None)).median;
+        let tt = bench(reps, || trimmed_topk(&x, k, 0.2, None)).median;
+        let tb =
+            bench(reps, || threshold_binary_search(&x, k, BinarySearchParams::default(), None))
+                .median;
+        println!(
+            "{:>10} {:>12.3} {:>12.3} {:>12.3} {:>9.1}x {:>9.1}x",
+            size,
+            te * 1e3,
+            tt * 1e3,
+            tb * 1e3,
+            te / tt,
+            te / tb
+        );
+    }
+    0
+}
+
+fn cmd_info() -> i32 {
+    println!("machine presets:");
+    for m in [Machine::muradin(), Machine::piz_daint()] {
+        println!(
+            "  {:<10} alpha {:.0}us  bw {:.1} GB/s  max ranks {}",
+            m.name,
+            m.alpha * 1e6,
+            1e-9 / m.beta,
+            m.max_ranks
+        );
+    }
+    println!("\nmodel profiles (simulation):");
+    for p in zoo::all_profiles() {
+        println!(
+            "  {:<12} {:>8} params ({})  {:.2} GFlop/sample  {} layers{}",
+            p.name,
+            p.total_elems(),
+            fmt_bytes(p.model_bytes()),
+            p.fwd_gflops_per_sample,
+            p.layers.len(),
+            if p.is_rnn { "  [RNN]" } else { "" }
+        );
+    }
+    println!("\ntrain presets: {}", preset_names().join(", "));
+    match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => {
+            println!("\nartifacts ({}):", m.dir.display());
+            for (name, schema) in &m.models {
+                println!(
+                    "  {:<10} {:<4} {:>10} params  file {}",
+                    name,
+                    schema.kind,
+                    schema.param_count,
+                    schema.file.file_name().unwrap().to_string_lossy()
+                );
+            }
+            println!("  compression-op buckets: {:?}", m.buckets);
+        }
+        Err(e) => println!("\nartifacts: not built ({e}); run `make artifacts`"),
+    }
+    0
+}

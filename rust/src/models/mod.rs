@@ -1,0 +1,9 @@
+//! Model descriptions: paper DNN layer profiles for simulation ([`zoo`])
+//! and manifest-driven schemas for the real AOT-compiled models
+//! ([`schema`]).
+
+pub mod schema;
+pub mod zoo;
+
+pub use schema::{InitSpec, ModelSchema, ParamSpec};
+pub use zoo::{ModelProfile, LayerSpec};

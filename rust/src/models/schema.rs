@@ -1,0 +1,365 @@
+//! Manifest-driven model schemas: the contract between `aot.py` and the
+//! Rust coordinator.  Parses `artifacts/manifest.json` into typed specs
+//! the trainer uses to allocate, initialize and shard parameters.
+
+use crate::util::json::Value;
+use crate::util::rng::Pcg32;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, thiserror::Error)]
+pub enum SchemaError {
+    #[error("manifest io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("manifest parse: {0}")]
+    Parse(#[from] crate::util::json::ParseError),
+    #[error("manifest malformed: {0}")]
+    Malformed(String),
+}
+
+/// Parameter initialization recipe (mirrors model.py's init specs).
+#[derive(Clone, Debug, PartialEq)]
+pub enum InitSpec {
+    Zeros,
+    Ones,
+    Normal { std: f32 },
+    He { fan_in: usize },
+    Residual { std: f32, layers: usize },
+}
+
+impl InitSpec {
+    fn from_json(v: &Value) -> Result<InitSpec, SchemaError> {
+        let kind = v
+            .at(&["kind"])
+            .and_then(Value::as_str)
+            .ok_or_else(|| SchemaError::Malformed("init.kind missing".into()))?;
+        Ok(match kind {
+            "zeros" => InitSpec::Zeros,
+            "ones" => InitSpec::Ones,
+            "normal" => InitSpec::Normal {
+                std: v.at(&["std"]).and_then(Value::as_f64).unwrap_or(0.02) as f32,
+            },
+            "he" => InitSpec::He {
+                fan_in: v
+                    .at(&["fan_in"])
+                    .and_then(Value::as_usize)
+                    .ok_or_else(|| SchemaError::Malformed("he init needs fan_in".into()))?,
+            },
+            "residual" => InitSpec::Residual {
+                std: v.at(&["std"]).and_then(Value::as_f64).unwrap_or(0.02) as f32,
+                layers: v.at(&["layers"]).and_then(Value::as_usize).unwrap_or(1),
+            },
+            other => return Err(SchemaError::Malformed(format!("unknown init '{other}'"))),
+        })
+    }
+
+    /// Materialize an initialized buffer of `n` elements.
+    pub fn init(&self, n: usize, rng: &mut Pcg32) -> Vec<f32> {
+        let mut out = vec![0f32; n];
+        match self {
+            InitSpec::Zeros => {}
+            InitSpec::Ones => out.iter_mut().for_each(|v| *v = 1.0),
+            InitSpec::Normal { std } => rng.fill_normal(&mut out, *std),
+            InitSpec::He { fan_in } => {
+                rng.fill_normal(&mut out, (2.0 / *fan_in as f32).sqrt())
+            }
+            InitSpec::Residual { std, layers } => {
+                rng.fill_normal(&mut out, std / (2.0 * *layers as f32).sqrt())
+            }
+        }
+        out
+    }
+}
+
+/// One parameter tensor of a model.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: InitSpec,
+}
+
+impl ParamSpec {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.size() * 4
+    }
+}
+
+/// One model input (data batch tensor).
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// A train-step model loaded from the manifest.
+#[derive(Clone, Debug)]
+pub struct ModelSchema {
+    pub name: String,
+    pub kind: String,
+    pub file: PathBuf,
+    pub eval_file: PathBuf,
+    pub params: Vec<ParamSpec>,
+    pub inputs: Vec<InputSpec>,
+    pub param_count: usize,
+    /// raw config numbers (batch, seq, vocab, ...)
+    pub config: BTreeMap<String, f64>,
+}
+
+impl ModelSchema {
+    pub fn cfg(&self, key: &str) -> Option<usize> {
+        self.config.get(key).map(|&v| v as usize)
+    }
+
+    /// Initialize all parameters deterministically from `seed`.
+    pub fn init_params(&self, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg32::new(seed, 0x1217);
+        self.params.iter().map(|p| p.init.init(p.size(), &mut rng)).collect()
+    }
+
+    /// Output/classifier parameters are never quantized (§5.2.3): the LM
+    /// head, or the MLP's final fc weight+bias.
+    pub fn is_output_param(&self, idx: usize) -> bool {
+        if self.kind == "lm" {
+            self.params[idx].name == "head"
+        } else {
+            idx + 2 >= self.params.len()
+        }
+    }
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelSchema>,
+    /// op name -> bucket size -> artifact file
+    pub compress_ops: BTreeMap<String, BTreeMap<usize, PathBuf>>,
+    pub buckets: Vec<usize>,
+    pub num_thresholds: usize,
+    pub source_hash: String,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, SchemaError> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let v = Value::parse(&text)?;
+
+        let mut models = BTreeMap::new();
+        let obj = v
+            .at(&["models"])
+            .and_then(Value::as_obj)
+            .ok_or_else(|| SchemaError::Malformed("models missing".into()))?;
+        for (name, entry) in obj.iter() {
+            models.insert(name.clone(), parse_model(&dir, name, entry)?);
+        }
+
+        let mut compress_ops = BTreeMap::new();
+        let ops = v
+            .at(&["compress_ops"])
+            .and_then(Value::as_obj)
+            .ok_or_else(|| SchemaError::Malformed("compress_ops missing".into()))?;
+        for (op, entry) in ops.iter() {
+            let mut buckets = BTreeMap::new();
+            let bm = entry
+                .at(&["buckets"])
+                .and_then(Value::as_obj)
+                .ok_or_else(|| SchemaError::Malformed(format!("{op}.buckets missing")))?;
+            for (size, file) in bm.iter() {
+                let n: usize = size
+                    .parse()
+                    .map_err(|_| SchemaError::Malformed(format!("bad bucket '{size}'")))?;
+                let f = file
+                    .as_str()
+                    .ok_or_else(|| SchemaError::Malformed("bucket file not str".into()))?;
+                buckets.insert(n, dir.join(f));
+            }
+            compress_ops.insert(op.clone(), buckets);
+        }
+
+        let buckets = v
+            .at(&["buckets"])
+            .and_then(Value::as_arr)
+            .map(|a| a.iter().filter_map(Value::as_usize).collect())
+            .unwrap_or_default();
+        let num_thresholds = v
+            .at(&["compress_ops", "threshold_count", "num_thresholds"])
+            .and_then(Value::as_usize)
+            .unwrap_or(16);
+        let source_hash = v
+            .at(&["source_hash"])
+            .and_then(Value::as_str)
+            .unwrap_or("")
+            .to_string();
+
+        Ok(Manifest { dir, models, compress_ops, buckets, num_thresholds, source_hash })
+    }
+
+    /// Default artifact location: `$REDSYNC_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("REDSYNC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Smallest bucket >= n, if any.
+    pub fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.buckets.iter().copied().filter(|&b| b >= n).min()
+    }
+}
+
+fn parse_model(dir: &Path, name: &str, entry: &Value) -> Result<ModelSchema, SchemaError> {
+    let get_str = |key: &str| {
+        entry
+            .at(&[key])
+            .and_then(Value::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| SchemaError::Malformed(format!("{name}.{key} missing")))
+    };
+    let mut params = Vec::new();
+    for p in entry
+        .at(&["params"])
+        .and_then(Value::as_arr)
+        .ok_or_else(|| SchemaError::Malformed(format!("{name}.params missing")))?
+    {
+        let pname = p
+            .at(&["name"])
+            .and_then(Value::as_str)
+            .ok_or_else(|| SchemaError::Malformed("param.name".into()))?;
+        let shape = p
+            .at(&["shape"])
+            .and_then(Value::as_arr)
+            .ok_or_else(|| SchemaError::Malformed("param.shape".into()))?
+            .iter()
+            .filter_map(Value::as_usize)
+            .collect();
+        let init = InitSpec::from_json(
+            p.at(&["init"]).ok_or_else(|| SchemaError::Malformed("param.init".into()))?,
+        )?;
+        params.push(ParamSpec { name: pname.to_string(), shape, init });
+    }
+    let mut inputs = Vec::new();
+    for i in entry
+        .at(&["inputs"])
+        .and_then(Value::as_arr)
+        .ok_or_else(|| SchemaError::Malformed(format!("{name}.inputs missing")))?
+    {
+        inputs.push(InputSpec {
+            name: i.at(&["name"]).and_then(Value::as_str).unwrap_or("").to_string(),
+            shape: i
+                .at(&["shape"])
+                .and_then(Value::as_arr)
+                .map(|a| a.iter().filter_map(Value::as_usize).collect())
+                .unwrap_or_default(),
+            dtype: i.at(&["dtype"]).and_then(Value::as_str).unwrap_or("f32").to_string(),
+        });
+    }
+    let mut config = BTreeMap::new();
+    if let Some(cfg) = entry.at(&["config"]).and_then(Value::as_obj) {
+        for (k, v) in cfg.iter() {
+            if let Some(n) = v.as_f64() {
+                config.insert(k.clone(), n);
+            }
+        }
+    }
+    Ok(ModelSchema {
+        name: name.to_string(),
+        kind: get_str("kind")?,
+        file: dir.join(get_str("file")?),
+        eval_file: dir.join(get_str("eval_file")?),
+        param_count: entry.at(&["param_count"]).and_then(Value::as_usize).unwrap_or(0),
+        params,
+        inputs,
+        config,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> PathBuf {
+        // repo root relative to CARGO_MANIFEST_DIR
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        manifest_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(manifest_dir()).unwrap();
+        assert!(m.models.contains_key("lm_tiny"));
+        assert!(m.compress_ops.contains_key("abs_stats"));
+        assert!(!m.buckets.is_empty());
+        let lm = &m.models["lm_tiny"];
+        assert_eq!(lm.kind, "lm");
+        assert!(lm.file.exists());
+        assert_eq!(
+            lm.param_count,
+            lm.params.iter().map(ParamSpec::size).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn init_params_deterministic_and_shaped() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(manifest_dir()).unwrap();
+        let lm = &m.models["lm_tiny"];
+        let a = lm.init_params(42);
+        let b = lm.init_params(42);
+        assert_eq!(a, b);
+        for (p, buf) in lm.params.iter().zip(&a) {
+            assert_eq!(buf.len(), p.size(), "{}", p.name);
+        }
+        // ln scales init to ones
+        let ln = lm.params.iter().position(|p| p.name.contains("ln1.scale")).unwrap();
+        assert!(a[ln].iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn bucket_for_rounds_up() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(manifest_dir()).unwrap();
+        assert_eq!(m.bucket_for(1), Some(1024));
+        assert_eq!(m.bucket_for(1024), Some(1024));
+        assert_eq!(m.bucket_for(1025), Some(16384));
+        assert_eq!(m.bucket_for(usize::MAX), None);
+    }
+
+    #[test]
+    fn init_specs_behave() {
+        let mut rng = Pcg32::seeded(1);
+        assert!(InitSpec::Zeros.init(4, &mut rng).iter().all(|&v| v == 0.0));
+        assert!(InitSpec::Ones.init(4, &mut rng).iter().all(|&v| v == 1.0));
+        let h = InitSpec::He { fan_in: 100 }.init(10_000, &mut rng);
+        let var: f32 = h.iter().map(|v| v * v).sum::<f32>() / 10_000.0;
+        assert!((var - 0.02).abs() < 0.005, "he var {var}");
+    }
+
+    #[test]
+    fn malformed_manifest_rejected() {
+        let dir = std::env::temp_dir().join(format!("redsync_schema_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{\"models\": 3}").unwrap();
+        assert!(matches!(Manifest::load(&dir), Err(SchemaError::Malformed(_))));
+        std::fs::write(dir.join("manifest.json"), "not json").unwrap();
+        assert!(matches!(Manifest::load(&dir), Err(SchemaError::Parse(_))));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,280 @@
+//! Paper DNN layer profiles — the workloads of Figs. 7-10 and Table 1.
+//!
+//! Each profile lists per-layer parameter counts (elements) and the
+//! forward GFlops per sample from Table 1.  The scalability simulations
+//! are functions of exactly this data (per-layer bytes × network model ×
+//! compression policy), so published architecture shapes + Table 1 model
+//! sizes are sufficient to reproduce the figures' shapes — see DESIGN.md
+//! §Substitutions.
+
+/// One weight tensor (fused with its bias for profile purposes).
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    pub name: String,
+    /// Parameter elements (f32).
+    pub elems: usize,
+    /// True for the model's output/classifier layer — never quantized
+    /// (§5.2.3).
+    pub is_output: bool,
+}
+
+/// A model profile for simulation.
+#[derive(Clone, Debug)]
+pub struct ModelProfile {
+    pub name: String,
+    pub layers: Vec<LayerSpec>,
+    /// Forward GFlops for a single sample (Table 1 "Compt. Amount").
+    pub fwd_gflops_per_sample: f64,
+    /// RNNs synchronize only after full BPTT (§5.6 scheme B).
+    pub is_rnn: bool,
+}
+
+impl ModelProfile {
+    pub fn total_elems(&self) -> usize {
+        self.layers.iter().map(|l| l.elems).sum()
+    }
+
+    pub fn model_bytes(&self) -> usize {
+        self.total_elems() * 4
+    }
+
+    fn layer(name: &str, elems: usize) -> LayerSpec {
+        LayerSpec { name: name.to_string(), elems, is_output: false }
+    }
+
+    fn output(name: &str, elems: usize) -> LayerSpec {
+        LayerSpec { name: name.to_string(), elems, is_output: true }
+    }
+}
+
+/// AlexNet on ImageNet: 61M params (233 MB), fwd 0.72 GFlop.  fc6/fc7
+/// dominate the byte mix — the communication-bound case of Fig. 7/8.
+pub fn alexnet() -> ModelProfile {
+    let l = ModelProfile::layer;
+    ModelProfile {
+        name: "alexnet".into(),
+        layers: vec![
+            l("conv1", 34_944),
+            l("conv2", 307_456),
+            l("conv3", 885_120),
+            l("conv4", 663_936),
+            l("conv5", 442_624),
+            l("fc6", 37_752_832),
+            l("fc7", 16_781_312),
+            ModelProfile::output("fc8", 4_097_000),
+        ],
+        fwd_gflops_per_sample: 0.72,
+        is_rnn: false,
+    }
+}
+
+/// VGG16 on ImageNet: 138M params (528 MB), fwd 15.5 GFlop.
+pub fn vgg16() -> ModelProfile {
+    let l = ModelProfile::layer;
+    let conv_sizes = [
+        1_792usize, 36_928, 73_856, 147_584, 295_168, 590_080, 590_080, 1_180_160,
+        2_359_808, 2_359_808, 2_359_808, 2_359_808, 2_359_808,
+    ];
+    let mut layers: Vec<LayerSpec> = conv_sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| l(&format!("conv{}", i + 1), n))
+        .collect();
+    layers.push(l("fc6", 102_764_544));
+    layers.push(l("fc7", 16_781_312));
+    layers.push(ModelProfile::output("fc8", 4_097_000));
+    ModelProfile {
+        name: "vgg16".into(),
+        layers,
+        fwd_gflops_per_sample: 15.5,
+        is_rnn: false,
+    }
+}
+
+/// VGG16 adapted to Cifar10: 14.7M params (58.9 MB), fwd 0.31 GFlop.
+pub fn vgg16_cifar() -> ModelProfile {
+    let l = ModelProfile::layer;
+    let conv_sizes = [
+        1_792usize, 36_928, 73_856, 147_584, 295_168, 590_080, 590_080, 1_180_160,
+        2_359_808, 2_359_808, 2_359_808, 2_359_808, 2_359_808,
+    ];
+    let mut layers: Vec<LayerSpec> = conv_sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| l(&format!("conv{}", i + 1), n))
+        .collect();
+    layers.push(l("fc1", 262_656));
+    layers.push(ModelProfile::output("fc2", 5_130));
+    ModelProfile {
+        name: "vgg16-cifar".into(),
+        layers,
+        fwd_gflops_per_sample: 0.31,
+        is_rnn: false,
+    }
+}
+
+/// ResNet-50 on ImageNet: 25.6M params (103 MB), fwd 8.22 GFlop.  Many
+/// small layers + high compute/communication ratio: the case where
+/// RedSync shows *no* gain (Fig. 7/8, Fig. 10 unpack-dominance).
+pub fn resnet50() -> ModelProfile {
+    let mut layers =
+        vec![ModelProfile::layer("conv1", 9_408), ModelProfile::layer("bn1", 128)];
+    // (mid, out, blocks); in = previous out
+    let stages: [(usize, usize, usize); 4] =
+        [(64, 256, 3), (128, 512, 4), (256, 1024, 6), (512, 2048, 3)];
+    let mut input = 64usize;
+    for (s, &(mid, out, blocks)) in stages.iter().enumerate() {
+        for b in 0..blocks {
+            let pre = format!("s{}b{}", s + 1, b);
+            layers.push(ModelProfile::layer(&format!("{pre}.conv1"), input * mid));
+            layers.push(ModelProfile::layer(&format!("{pre}.bn1"), 2 * mid));
+            layers.push(ModelProfile::layer(&format!("{pre}.conv2"), mid * mid * 9));
+            layers.push(ModelProfile::layer(&format!("{pre}.bn2"), 2 * mid));
+            layers.push(ModelProfile::layer(&format!("{pre}.conv3"), mid * out));
+            layers.push(ModelProfile::layer(&format!("{pre}.bn3"), 2 * out));
+            if b == 0 {
+                layers.push(ModelProfile::layer(&format!("{pre}.down"), input * out));
+                layers.push(ModelProfile::layer(&format!("{pre}.bn_down"), 2 * out));
+            }
+            input = out;
+        }
+    }
+    layers.push(ModelProfile::output("fc", 2_048 * 1_000 + 1_000));
+    ModelProfile {
+        name: "resnet50".into(),
+        layers,
+        fwd_gflops_per_sample: 8.22,
+        is_rnn: false,
+    }
+}
+
+/// ResNet-44 on Cifar10: 0.66M params (2.65 MB), fwd 0.20 GFlop.
+pub fn resnet44() -> ModelProfile {
+    let mut layers = vec![ModelProfile::layer("conv1", 16 * 9 * 3)];
+    let stages: [(usize, usize); 3] = [(16, 7), (32, 7), (64, 7)];
+    let mut input = 16usize;
+    for (s, &(ch, blocks)) in stages.iter().enumerate() {
+        for b in 0..blocks {
+            let pre = format!("s{}b{}", s + 1, b);
+            layers.push(ModelProfile::layer(&format!("{pre}.conv1"), input * ch * 9));
+            layers.push(ModelProfile::layer(&format!("{pre}.conv2"), ch * ch * 9));
+            input = ch;
+        }
+    }
+    layers.push(ModelProfile::output("fc", 64 * 10 + 10));
+    ModelProfile {
+        name: "resnet44".into(),
+        layers,
+        fwd_gflops_per_sample: 0.20,
+        is_rnn: false,
+    }
+}
+
+/// 2-layer LSTM LM, 1500 hidden, PTB vocab (10k): 66M params (264 MB),
+/// fwd 2.52 GFlop.  Giant embedding/softmax layers + BPTT scheme: the
+/// RNN case of Fig. 7/9.
+pub fn lstm_ptb() -> ModelProfile {
+    lstm_lm("lstm-ptb", 10_000, 1_500)
+}
+
+/// Same LSTM on WikiText-2 (33k vocab): 136M params (543 MB).
+pub fn lstm_wiki2() -> ModelProfile {
+    lstm_lm("lstm-wiki2", 33_278, 1_500)
+}
+
+fn lstm_lm(name: &str, vocab: usize, hidden: usize) -> ModelProfile {
+    ModelProfile {
+        name: name.into(),
+        layers: vec![
+            ModelProfile::layer("embed", vocab * hidden),
+            ModelProfile::layer("lstm1", 4 * hidden * (2 * hidden)),
+            ModelProfile::layer("lstm2", 4 * hidden * (2 * hidden)),
+            ModelProfile::output("softmax", hidden * vocab + vocab),
+        ],
+        fwd_gflops_per_sample: 2.52,
+        is_rnn: true,
+    }
+}
+
+/// Every profile used in the evaluation section.
+pub fn all_profiles() -> Vec<ModelProfile> {
+    vec![
+        alexnet(),
+        vgg16(),
+        vgg16_cifar(),
+        resnet50(),
+        resnet44(),
+        lstm_ptb(),
+        lstm_wiki2(),
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<ModelProfile> {
+    all_profiles().into_iter().find(|m| m.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 1 model sizes (MB) within ~6% of the paper's numbers.
+    #[test]
+    fn model_sizes_match_table1() {
+        let cases = [
+            ("alexnet", 233.0),
+            ("vgg16", 528.0),
+            ("vgg16-cifar", 58.91),
+            ("resnet50", 103.0),
+            ("resnet44", 2.65),
+            ("lstm-ptb", 264.0),
+            ("lstm-wiki2", 543.0),
+        ];
+        for (name, mb) in cases {
+            let m = by_name(name).unwrap();
+            let got = m.model_bytes() as f64 / 1e6;
+            let got_mib = m.model_bytes() as f64 / (1024.0 * 1024.0);
+            // accept either MB or MiB convention within 8%
+            let ok = (got - mb).abs() / mb < 0.08 || (got_mib - mb).abs() / mb < 0.08;
+            assert!(ok, "{name}: paper {mb} MB, profile {got:.1} MB / {got_mib:.1} MiB");
+        }
+    }
+
+    #[test]
+    fn resnet50_has_many_small_layers() {
+        let m = resnet50();
+        assert!(m.layers.len() > 50);
+        let small = m.layers.iter().filter(|l| l.elems * 4 < 128 * 1024).count();
+        assert!(small > 10, "resnet50 should have many sub-128KB layers");
+    }
+
+    #[test]
+    fn alexnet_fc_dominates() {
+        let m = alexnet();
+        let fc: usize = m
+            .layers
+            .iter()
+            .filter(|l| l.name.starts_with("fc"))
+            .map(|l| l.elems)
+            .sum();
+        assert!(fc as f64 / m.total_elems() as f64 > 0.9);
+    }
+
+    #[test]
+    fn output_layers_marked() {
+        for m in all_profiles() {
+            assert_eq!(m.layers.iter().filter(|l| l.is_output).count(), 1, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn rnn_flag() {
+        assert!(lstm_ptb().is_rnn);
+        assert!(!vgg16().is_rnn);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("alexnet").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,90 @@
+//! Gradient clipping (§5.6).
+//!
+//! Dense data parallelism clips the *aggregated* gradient by global norm.
+//! Under RGC no aggregated gradient exists before synchronization, so the
+//! paper adopts DGC's *local clipping*: each worker clips its local
+//! gradient with the threshold scaled by N^{-1/2} before accumulating
+//! into the residual.
+
+use crate::tensor::l2_norm;
+
+/// Global-norm clip across a set of gradient buffers; returns the scale
+/// factor applied (1.0 when under the threshold).
+pub fn clip_by_global_norm(grads: &mut [&mut [f32]], max_norm: f32) -> f32 {
+    let total: f64 = grads
+        .iter()
+        .map(|g| {
+            let n = l2_norm(g) as f64;
+            n * n
+        })
+        .sum();
+    let norm = total.sqrt() as f32;
+    if norm <= max_norm || norm == 0.0 {
+        return 1.0;
+    }
+    let scale = max_norm / norm;
+    for g in grads.iter_mut() {
+        for v in g.iter_mut() {
+            *v *= scale;
+        }
+    }
+    scale
+}
+
+/// DGC local clipping threshold: `max_norm · N^{-1/2}` for N workers.
+pub fn local_clip_factor(max_norm: f32, n_workers: usize) -> f32 {
+    max_norm / (n_workers as f32).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_clip_under_threshold() {
+        let mut a = vec![0.3f32, 0.4]; // norm 0.5
+        let scale = clip_by_global_norm(&mut [&mut a], 1.0);
+        assert_eq!(scale, 1.0);
+        assert_eq!(a, vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn clips_to_max_norm() {
+        let mut a = vec![3.0f32];
+        let mut b = vec![4.0f32]; // global norm 5
+        let scale = clip_by_global_norm(&mut [&mut a, &mut b], 1.0);
+        assert!((scale - 0.2).abs() < 1e-6);
+        let norm = ((a[0] * a[0] + b[0] * b[0]) as f64).sqrt();
+        assert!((norm - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_gradient_safe() {
+        let mut a = vec![0.0f32; 4];
+        assert_eq!(clip_by_global_norm(&mut [&mut a], 1.0), 1.0);
+    }
+
+    #[test]
+    fn local_factor_scaling() {
+        assert_eq!(local_clip_factor(1.0, 1), 1.0);
+        assert!((local_clip_factor(1.0, 4) - 0.5).abs() < 1e-7);
+        assert!((local_clip_factor(2.0, 16) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn local_clipping_bounds_aggregate() {
+        // N workers each clipped to max/sqrt(N): aggregate mean norm is
+        // bounded by max (triangle inequality / sqrt concentration)
+        let n = 4usize;
+        let thr = local_clip_factor(1.0, n);
+        let mut agg = vec![0.0f32; 8];
+        for w in 0..n {
+            let mut g: Vec<f32> = (0..8).map(|i| (w + i) as f32).collect();
+            clip_by_global_norm(&mut [&mut g], thr);
+            for (a, v) in agg.iter_mut().zip(&g) {
+                *a += v / n as f32;
+            }
+        }
+        assert!(l2_norm(&agg) <= 1.0 + 1e-5);
+    }
+}

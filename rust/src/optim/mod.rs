@@ -1,0 +1,210 @@
+//! Optimizers and training-correctness machinery (§5.7 / Alg. 4):
+//! SGD/momentum/Nesterov, gradient clipping (global + DGC local N^{-1/2}),
+//! and the warm-up density schedule.
+
+pub mod clip;
+pub mod warmup;
+
+pub use clip::{clip_by_global_norm, local_clip_factor};
+pub use warmup::WarmupSchedule;
+
+use crate::tensor::axpy;
+
+/// Optimizer flavor (mirrors `compression::Accumulation` for the
+/// *uncompressed* / dense path).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Optimizer {
+    Sgd,
+    Momentum { momentum: f32 },
+    Nesterov { momentum: f32 },
+}
+
+impl Optimizer {
+    pub fn momentum(&self) -> f32 {
+        match self {
+            Optimizer::Sgd => 0.0,
+            Optimizer::Momentum { momentum } | Optimizer::Nesterov { momentum } => *momentum,
+        }
+    }
+
+    pub fn accumulation(&self) -> crate::compression::Accumulation {
+        match *self {
+            Optimizer::Sgd => crate::compression::Accumulation::Sgd,
+            Optimizer::Momentum { momentum } => {
+                crate::compression::Accumulation::Momentum { momentum }
+            }
+            Optimizer::Nesterov { momentum } => {
+                crate::compression::Accumulation::Nesterov { momentum }
+            }
+        }
+    }
+}
+
+/// Per-parameter optimizer state for the *dense* (uncompressed) path.
+/// Compressed layers keep their velocity inside
+/// [`crate::compression::ResidualState`] instead (momentum correction).
+#[derive(Clone, Debug)]
+pub struct DenseOptState {
+    velocity: Option<Vec<f32>>,
+}
+
+impl DenseOptState {
+    pub fn new(n: usize, opt: Optimizer) -> Self {
+        let velocity = match opt {
+            Optimizer::Sgd => None,
+            _ => Some(vec![0.0; n]),
+        };
+        DenseOptState { velocity }
+    }
+
+    /// w -= lr * step(g) under the chosen optimizer.
+    pub fn apply(&mut self, opt: Optimizer, w: &mut [f32], g: &[f32], lr: f32) {
+        match opt {
+            Optimizer::Sgd => axpy(w, -lr, g),
+            Optimizer::Momentum { momentum } => {
+                let v = self.velocity.as_mut().expect("velocity state");
+                for i in 0..g.len() {
+                    v[i] = momentum * v[i] + g[i];
+                    w[i] -= lr * v[i];
+                }
+            }
+            Optimizer::Nesterov { momentum } => {
+                let v = self.velocity.as_mut().expect("velocity state");
+                for i in 0..g.len() {
+                    v[i] = momentum * v[i] + g[i];
+                    w[i] -= lr * (momentum * v[i] + g[i]);
+                }
+            }
+        }
+    }
+}
+
+/// Learning-rate schedule: constant, step decay, or decay-on-plateau
+/// (the paper decays when validation loss stops improving).
+#[derive(Clone, Debug)]
+pub enum LrSchedule {
+    Constant { lr: f32 },
+    /// lr * factor^(floor(step / every))
+    StepDecay { lr: f32, factor: f32, every: usize },
+    /// multiply by factor whenever `report_plateau` is signaled
+    Plateau { lr: f32, factor: f32 },
+}
+
+impl LrSchedule {
+    pub fn lr_at(&self, step: usize) -> f32 {
+        match self {
+            LrSchedule::Constant { lr } => *lr,
+            LrSchedule::StepDecay { lr, factor, every } => {
+                lr * factor.powi((step / every) as i32)
+            }
+            LrSchedule::Plateau { lr, .. } => *lr,
+        }
+    }
+
+    /// Signal a validation plateau (only meaningful for `Plateau`).
+    pub fn report_plateau(&mut self) {
+        if let LrSchedule::Plateau { lr, factor } = self {
+            *lr *= *factor;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_step() {
+        let mut st = DenseOptState::new(2, Optimizer::Sgd);
+        let mut w = vec![1.0f32, 1.0];
+        st.apply(Optimizer::Sgd, &mut w, &[1.0, -2.0], 0.1);
+        assert_eq!(w, vec![0.9, 1.2]);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let opt = Optimizer::Momentum { momentum: 0.9 };
+        let mut st = DenseOptState::new(1, opt);
+        let mut w = vec![0.0f32];
+        st.apply(opt, &mut w, &[1.0], 1.0); // v=1, w=-1
+        st.apply(opt, &mut w, &[1.0], 1.0); // v=1.9, w=-2.9
+        assert!((w[0] + 2.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nesterov_lookahead() {
+        let opt = Optimizer::Nesterov { momentum: 0.5 };
+        let mut st = DenseOptState::new(1, opt);
+        let mut w = vec![0.0f32];
+        st.apply(opt, &mut w, &[1.0], 1.0); // v=1, w -= 0.5*1+1 = 1.5
+        assert!((w[0] + 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_correction_matches_delayed_dense_update() {
+        // DGC momentum correction semantics: if nothing is transmitted at
+        // step 1 and everything at step 2, the transmitted residual must
+        // equal the *sum of the two dense momentum updates* — the
+        // accumulated v₁ + v₂ a dense momentum-SGD would have applied.
+        use crate::compression::{Accumulation, ResidualState};
+        let opt = Optimizer::Momentum { momentum: 0.9 };
+        let mut dense_w = vec![0.0f32; 4];
+        let mut st = DenseOptState::new(4, opt);
+        let mut res = ResidualState::new(4, Accumulation::Momentum { momentum: 0.9 });
+        let grads = [[1.0f32, -1.0, 0.5, 2.0], [0.3, 0.6, -0.2, 1.0]];
+        for g in &grads {
+            st.apply(opt, &mut dense_w, g, 0.1);
+            res.accumulate(g); // nothing transmitted yet
+        }
+        let mut comp_w = vec![0.0f32; 4];
+        let sel = crate::compression::exact_topk(res.residual(), 4, None);
+        for (&i, &v) in sel.sparse.indices.iter().zip(&sel.sparse.values) {
+            comp_w[i as usize] -= 0.1 * v;
+        }
+        res.mask(&sel.sparse);
+        for (a, b) in dense_w.iter().zip(&comp_w) {
+            assert!((a - b).abs() < 1e-6, "{dense_w:?} vs {comp_w:?}");
+        }
+        assert!(res.residual().iter().all(|&v| v == 0.0));
+        // momentum *factor masking*: the velocity buffer is cleared at the
+        // transmitted indices too (Alg. 4 line 23)
+        assert!(res.momentum_buf().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn full_density_every_step_reduces_to_plain_sgd() {
+        // with density 1 and factor masking every step, the momentum
+        // buffers are cleared each iteration: DGC degrades to vanilla SGD
+        // (why warm-up uses the *dense* optimizer path instead, §5.7)
+        use crate::compression::{Accumulation, ResidualState};
+        let mut res = ResidualState::new(2, Accumulation::Momentum { momentum: 0.9 });
+        let mut w = vec![0.0f32; 2];
+        let grads = [[1.0f32, -2.0], [0.5, 0.5], [1.0, 1.0]];
+        for g in &grads {
+            res.accumulate(g);
+            let sel = crate::compression::exact_topk(res.residual(), 2, None);
+            for (&i, &v) in sel.sparse.indices.iter().zip(&sel.sparse.values) {
+                w[i as usize] -= 0.1 * v;
+            }
+            res.mask(&sel.sparse);
+        }
+        let sgd: Vec<f32> = (0..2)
+            .map(|i| -0.1 * grads.iter().map(|g| g[i]).sum::<f32>())
+            .collect();
+        for (a, b) in w.iter().zip(&sgd) {
+            assert!((a - b).abs() < 1e-6, "{w:?} vs {sgd:?}");
+        }
+    }
+
+    #[test]
+    fn lr_schedules() {
+        assert_eq!(LrSchedule::Constant { lr: 0.1 }.lr_at(100), 0.1);
+        let s = LrSchedule::StepDecay { lr: 1.0, factor: 0.5, every: 10 };
+        assert_eq!(s.lr_at(0), 1.0);
+        assert_eq!(s.lr_at(10), 0.5);
+        assert_eq!(s.lr_at(25), 0.25);
+        let mut p = LrSchedule::Plateau { lr: 1.0, factor: 0.1 };
+        p.report_plateau();
+        assert!((p.lr_at(0) - 0.1).abs() < 1e-7);
+    }
+}

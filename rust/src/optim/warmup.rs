@@ -1,0 +1,92 @@
+//! Warm-up schedule (§5.7).
+//!
+//! DGC warms up by exponentially decaying the density (25%, 6.25%, …,
+//! 0.1%) over the first epochs.  RedSync observes that on large clusters
+//! even 1.5625% density already needs ≥ dense bandwidth, so it instead
+//! runs *dense allreduce* for the warm-up epochs and switches to the
+//! target density afterwards.  Both schedules are provided (the DGC one
+//! serves as an ablation).
+
+/// Density schedule across training epochs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WarmupSchedule {
+    /// No warm-up: target density from step one.
+    None { density: f64 },
+    /// RedSync: dense allreduce (density = 1) for `epochs`, then target.
+    DenseEpochs { epochs: usize, density: f64 },
+    /// DGC: exponential decay from `start` by `factor` per epoch until
+    /// reaching `density`.
+    Exponential { start: f64, factor: f64, density: f64 },
+}
+
+impl WarmupSchedule {
+    /// Density to use at `epoch` (0-based).
+    pub fn density_at(&self, epoch: usize) -> f64 {
+        match self {
+            WarmupSchedule::None { density } => *density,
+            WarmupSchedule::DenseEpochs { epochs, density } => {
+                if epoch < *epochs {
+                    1.0
+                } else {
+                    *density
+                }
+            }
+            WarmupSchedule::Exponential { start, factor, density } => {
+                (start * factor.powi(epoch as i32)).max(*density)
+            }
+        }
+    }
+
+    /// True if this epoch should bypass compression entirely (dense sync).
+    pub fn is_dense_at(&self, epoch: usize) -> bool {
+        self.density_at(epoch) >= 1.0
+    }
+
+    /// The paper's recommended DGC-style decay: 25%, 6.25%, 1.5625%,
+    /// 0.4%, 0.1%.
+    pub fn dgc_default() -> WarmupSchedule {
+        WarmupSchedule::Exponential { start: 0.25, factor: 0.25, density: 1e-3 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_flat() {
+        let s = WarmupSchedule::None { density: 1e-3 };
+        assert_eq!(s.density_at(0), 1e-3);
+        assert_eq!(s.density_at(99), 1e-3);
+        assert!(!s.is_dense_at(0));
+    }
+
+    #[test]
+    fn dense_epochs_switch() {
+        let s = WarmupSchedule::DenseEpochs { epochs: 5, density: 1e-3 };
+        assert!(s.is_dense_at(0) && s.is_dense_at(4));
+        assert!(!s.is_dense_at(5));
+        assert_eq!(s.density_at(5), 1e-3);
+    }
+
+    #[test]
+    fn dgc_sequence_matches_paper() {
+        let s = WarmupSchedule::dgc_default();
+        let expect = [0.25, 0.0625, 0.015625];
+        for (e, &d) in expect.iter().enumerate() {
+            assert!((s.density_at(e) - d).abs() < 1e-12, "epoch {e}");
+        }
+        // paper's listed step 4 is 0.4% ~ 0.39% from exact decay
+        assert!((s.density_at(3) - 0.00390625).abs() < 1e-12);
+        assert_eq!(s.density_at(4), 1e-3); // floored at target
+        assert_eq!(s.density_at(10), 1e-3);
+    }
+
+    #[test]
+    fn exponential_never_below_target() {
+        let s = WarmupSchedule::Exponential { start: 0.5, factor: 0.1, density: 0.01 };
+        for e in 0..20 {
+            assert!(s.density_at(e) >= 0.01);
+        }
+    }
+}

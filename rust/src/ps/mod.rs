@@ -1,0 +1,378 @@
+//! Parameter-server synchronization — the paper's §2.2 alternative
+//! distributed implementation (Fig. 1, right).
+//!
+//! Two deployments, both built on the same in-process fabric as the
+//! allreduce path so they are directly comparable:
+//!
+//! * [`sharded_push_pull`] — the PS sharded across the workers: push is a
+//!   reduce-scatter (each rank owns a contiguous shard and sums what the
+//!   others send), pull is an allgather.  The paper notes this degenerates
+//!   to an allreduce; the property tests verify numerical equivalence to
+//!   [`crate::collectives::allreduce_mean`], and the cost model shows the
+//!   naive push/pull message pattern pays p× the latency.
+//! * [`CentralServer`] — a dedicated server endpoint holding the
+//!   parameters.  Synchronous mode gathers all p gradients before
+//!   updating (replicas stay consistent); asynchronous mode updates on
+//!   arrival (Hogwild-style stale gradients — the paper's "may not reach
+//!   the same accuracy and results vary" §2.2 caveat, observable in the
+//!   tests).
+//!
+//! The serving rationale of RedSync — quantized formats cannot ride an
+//! allreduce because bit-packed values don't reduce on the fly, so
+//! quantization papers target PS systems (§3) — is exercised by the
+//! comparison bench `ps_vs_allreduce`.
+
+use crate::collectives::{allgather, concat, Transport};
+use crate::simnet::Machine;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread;
+
+/// Contiguous shard bounds for `n` elements over `p` owners.
+pub fn shard_bounds(n: usize, p: usize) -> Vec<(usize, usize)> {
+    let base = n / p;
+    let rem = n % p;
+    let mut out = Vec::with_capacity(p);
+    let mut start = 0;
+    for i in 0..p {
+        let len = base + usize::from(i < rem);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// Sharded-PS synchronization: push gradients to shard owners (each rank
+/// sums its own shard), pull via allgather.  In-place mean over all
+/// ranks' `x`.  Numerically equivalent to `allreduce_mean`, but with the
+/// PS message pattern: every rank sends p-1 shard messages (scatter) and
+/// receives p-1 (gather) — 2(p-1) messages per rank vs Rabenseifner's
+/// 2·lg(p).
+pub fn sharded_push_pull<T: Transport>(t: &T, x: &mut [f32]) {
+    let (rank, world) = (t.rank(), t.world());
+    if world == 1 {
+        return;
+    }
+    let bounds = shard_bounds(x.len(), world);
+
+    // push: send every foreign shard to its owner
+    for peer in 0..world {
+        if peer == rank {
+            continue;
+        }
+        let (lo, hi) = bounds[peer];
+        t.send(peer, crate::collectives::transport::f32s_to_words(&x[lo..hi]));
+    }
+    // own shard: reduce the p-1 incoming contributions
+    let (lo, hi) = bounds[rank];
+    let mut own: Vec<f32> = x[lo..hi].to_vec();
+    for peer in 0..world {
+        if peer == rank {
+            continue;
+        }
+        let msg = t.recv(peer);
+        let vals = crate::collectives::transport::words_to_f32s(&msg);
+        for (o, v) in own.iter_mut().zip(vals) {
+            *o += v;
+        }
+    }
+    let inv = 1.0 / world as f32;
+    for o in own.iter_mut() {
+        *o *= inv;
+    }
+
+    // pull: allgather the reduced shards
+    let gathered = concat(allgather(t, crate::collectives::transport::f32s_to_words(&own)));
+    let vals = crate::collectives::transport::words_to_f32s(&gathered);
+    x.copy_from_slice(&vals[..x.len()]);
+}
+
+/// Messages between workers and the central server.
+enum PsMsg {
+    /// (worker rank, local gradient)
+    Push(usize, Vec<f32>),
+    /// worker disconnects
+    Done,
+}
+
+/// Central-server deployment: one server thread owns the parameters;
+/// workers push gradients and receive the (possibly stale) parameters in
+/// return.
+pub struct CentralServer {
+    to_server: Sender<PsMsg>,
+    handle: Option<thread::JoinHandle<Vec<f32>>>,
+    replies: Vec<Option<Receiver<Vec<f32>>>>,
+}
+
+/// Synchronization discipline of the central server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PsMode {
+    /// Barrier: collect all p gradients, apply the average, answer all.
+    Sync,
+    /// Update-on-arrival (asynchronous SGD): every push is applied
+    /// immediately and answered with the current parameters.
+    Async,
+}
+
+/// One worker's endpoint to a [`CentralServer`].
+pub struct PsWorker {
+    rank: usize,
+    to_server: Sender<PsMsg>,
+    reply: Receiver<Vec<f32>>,
+}
+
+impl PsWorker {
+    /// Push a gradient; returns the parameters the server answers with.
+    pub fn push_pull(&self, grad: Vec<f32>) -> Vec<f32> {
+        self.to_server
+            .send(PsMsg::Push(self.rank, grad))
+            .expect("server alive");
+        self.reply.recv().expect("server reply")
+    }
+}
+
+impl CentralServer {
+    /// Spawn a server owning `params`, applying SGD with `lr` per
+    /// (averaged) push, serving `world` workers in `mode`.
+    pub fn spawn(params: Vec<f32>, lr: f32, world: usize, mode: PsMode) -> CentralServer {
+        let (to_server, inbox) = channel::<PsMsg>();
+        let mut reply_txs: Vec<Sender<Vec<f32>>> = Vec::with_capacity(world);
+        let mut replies = Vec::with_capacity(world);
+        for _ in 0..world {
+            let (tx, rx) = channel();
+            reply_txs.push(tx);
+            replies.push(Some(rx));
+        }
+        let handle = thread::spawn(move || {
+            server_loop(params, lr, world, mode, inbox, reply_txs)
+        });
+        CentralServer { to_server, handle: Some(handle), replies }
+    }
+
+    /// Take worker `rank`'s endpoint (once).
+    pub fn worker(&mut self, rank: usize) -> PsWorker {
+        PsWorker {
+            rank,
+            to_server: self.to_server.clone(),
+            reply: self.replies[rank].take().expect("endpoint already taken"),
+        }
+    }
+
+    /// Stop the server and return the final parameters.
+    pub fn shutdown(mut self) -> Vec<f32> {
+        let _ = self.to_server.send(PsMsg::Done);
+        self.handle.take().expect("running").join().expect("server thread")
+    }
+}
+
+fn server_loop(
+    mut params: Vec<f32>,
+    lr: f32,
+    world: usize,
+    mode: PsMode,
+    inbox: Receiver<PsMsg>,
+    replies: Vec<Sender<Vec<f32>>>,
+) -> Vec<f32> {
+    let mut pending: Vec<(usize, Vec<f32>)> = Vec::with_capacity(world);
+    loop {
+        match inbox.recv() {
+            Ok(PsMsg::Push(rank, grad)) => match mode {
+                PsMode::Async => {
+                    // §2.2: apply immediately; the replying params already
+                    // contain this worker's update but maybe not others'
+                    crate::tensor::axpy(&mut params, -lr, &grad);
+                    let _ = replies[rank].send(params.clone());
+                }
+                PsMode::Sync => {
+                    pending.push((rank, grad));
+                    if pending.len() == world {
+                        let scale = -lr / world as f32;
+                        for (_, g) in &pending {
+                            crate::tensor::axpy(&mut params, scale, g);
+                        }
+                        for (rank, _) in pending.drain(..) {
+                            let _ = replies[rank].send(params.clone());
+                        }
+                    }
+                }
+            },
+            Ok(PsMsg::Done) | Err(_) => return params,
+        }
+    }
+}
+
+/// Cost-model comparison (the §2.2 bottleneck argument): per-iteration
+/// synchronization time of a single-ported central server vs the
+/// Rabenseifner allreduce, for `m_elems` parameters and `p` workers.
+/// The server must serially receive p gradients and send p parameter
+/// copies: `2p(α + 4Mβ)` — linear in p where allreduce is ~constant.
+pub fn central_ps_time(machine: &Machine, p: usize, m_elems: f64) -> f64 {
+    2.0 * p as f64 * (machine.alpha + 4.0 * m_elems * machine.beta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{allreduce_mean, LocalFabric};
+    use crate::simnet::allreduce_time;
+    use crate::util::proptest::{check, ensure};
+
+    #[test]
+    fn shard_bounds_cover_exactly() {
+        for (n, p) in [(10usize, 3usize), (7, 8), (64, 4), (1, 1)] {
+            let b = shard_bounds(n, p);
+            assert_eq!(b.len(), p);
+            assert_eq!(b[0].0, 0);
+            assert_eq!(b[p - 1].1, n);
+            for w in b.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_sharded_ps_equals_allreduce_mean() {
+        check(8, |g| {
+            let world = *g.pick(&[2usize, 4, 8]);
+            let n = g.size(1..1500);
+            let data: Vec<Vec<f32>> = (0..world).map(|_| g.vec_normal(n, 1.0)).collect();
+
+            let mut fabric_a = LocalFabric::new(world);
+            let ps: Vec<Vec<f32>> = std::thread::scope(|s| {
+                fabric_a
+                    .take_all()
+                    .into_iter()
+                    .map(|t| {
+                        let mut x = data[t.rank()].clone();
+                        s.spawn(move || {
+                            sharded_push_pull(&t, &mut x);
+                            x
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect()
+            });
+            let mut fabric_b = LocalFabric::new(world);
+            let ar: Vec<Vec<f32>> = std::thread::scope(|s| {
+                fabric_b
+                    .take_all()
+                    .into_iter()
+                    .map(|t| {
+                        let mut x = data[t.rank()].clone();
+                        s.spawn(move || {
+                            allreduce_mean(&t, &mut x);
+                            x
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect()
+            });
+            for r in 1..world {
+                ensure(ps[r] == ps[0], "ps ranks disagree")?;
+            }
+            for (a, b) in ps[0].iter().zip(&ar[0]) {
+                ensure((a - b).abs() <= 1e-5 * a.abs().max(1.0), "ps != allreduce")?;
+            }
+            Ok(())
+        });
+    }
+
+    /// Quadratic bowl: grad = params - target.
+    fn bowl_grad(params: &[f32], target: &[f32]) -> Vec<f32> {
+        params.iter().zip(target).map(|(p, t)| p - t).collect()
+    }
+
+    #[test]
+    fn central_sync_ps_converges_and_replicas_agree() {
+        let n = 32;
+        let world = 4;
+        let target: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut server = CentralServer::spawn(vec![0.0; n], 0.5, world, PsMode::Sync);
+        let workers: Vec<PsWorker> = (0..world).map(|r| server.worker(r)).collect();
+        let finals: Vec<Vec<f32>> = std::thread::scope(|s| {
+            workers
+                .into_iter()
+                .map(|w| {
+                    let target = target.clone();
+                    s.spawn(move || {
+                        let mut params = vec![0.0f32; n];
+                        for _ in 0..40 {
+                            let g = bowl_grad(&params, &target);
+                            params = w.push_pull(g);
+                        }
+                        params
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        let final_params = server.shutdown();
+        for f in &finals {
+            assert_eq!(f, &finals[0], "sync PS replicas must agree");
+        }
+        let err: f32 = final_params
+            .iter()
+            .zip(&target)
+            .map(|(p, t)| (p - t).abs())
+            .fold(0.0, f32::max);
+        assert!(err < 0.01, "did not converge: {err}");
+    }
+
+    #[test]
+    fn central_async_ps_converges_on_convex_problem() {
+        let n = 16;
+        let world = 4;
+        let target: Vec<f32> = (0..n).map(|i| (i as f32 * 0.61).cos()).collect();
+        let mut server = CentralServer::spawn(vec![0.0; n], 0.2, world, PsMode::Async);
+        let workers: Vec<PsWorker> = (0..world).map(|r| server.worker(r)).collect();
+        std::thread::scope(|s| {
+            for w in workers {
+                let target = target.clone();
+                s.spawn(move || {
+                    let mut params = vec![0.0f32; n];
+                    for _ in 0..80 {
+                        let g = bowl_grad(&params, &target);
+                        params = w.push_pull(g);
+                    }
+                });
+            }
+        });
+        let final_params = server.shutdown();
+        let err: f32 = final_params
+            .iter()
+            .zip(&target)
+            .map(|(p, t)| (p - t).abs())
+            .fold(0.0, f32::max);
+        // stale gradients still converge on a convex bowl, just noisier
+        assert!(err < 0.1, "async PS diverged: {err}");
+    }
+
+    #[test]
+    fn central_ps_scales_worse_than_allreduce() {
+        // the §2.2 claim: an independent-node PS is the bottleneck
+        let m = Machine::piz_daint();
+        let elems = 25e6;
+        let ps8 = central_ps_time(&m, 8, elems);
+        let ar8 = allreduce_time(&m, 8, elems * 4.0);
+        let ps128 = central_ps_time(&m, 128, elems);
+        let ar128 = allreduce_time(&m, 128, elems * 4.0);
+        assert!(ps8 > ar8, "ps {ps8} vs allreduce {ar8}");
+        // PS grows ~linearly with p; allreduce stays ~flat
+        assert!(ps128 / ps8 > 10.0);
+        assert!(ar128 / ar8 < 1.5);
+    }
+
+    #[test]
+    fn worker_endpoint_taken_once() {
+        let mut server = CentralServer::spawn(vec![0.0; 4], 0.1, 2, PsMode::Sync);
+        let _w0 = server.worker(0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| server.worker(0)));
+        assert!(result.is_err(), "double take must panic");
+        // do not shutdown: a worker endpoint is live; just drop everything
+    }
+}

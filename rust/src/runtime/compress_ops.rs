@@ -1,0 +1,341 @@
+//! Device-side compression operators: the L1 Pallas kernels, executed
+//! through their per-bucket HLO artifacts.
+//!
+//! Layers are padded with zeros up to the next bucket size (the tensor-
+//! fusion analogue that keeps the artifact count bounded).  Zero padding
+//! is invisible to every op: |0| is never `> thr` for the non-negative
+//! thresholds the selection pipeline produces, and stats/counters ignore
+//! zeros by construction.
+
+use super::{Input, Result, Runtime, RuntimeError};
+use crate::models::schema::Manifest;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Handle to the per-bucket compression artifacts for one runtime thread.
+pub struct CompressOps<'rt> {
+    rt: &'rt Runtime,
+    abs_stats: BTreeMap<usize, PathBuf>,
+    threshold_count: BTreeMap<usize, PathBuf>,
+    compress_mask: BTreeMap<usize, PathBuf>,
+    sgd_update: BTreeMap<usize, PathBuf>,
+    /// Optional: artifacts built before the op existed still load.
+    momentum_accum: Option<BTreeMap<usize, PathBuf>>,
+    pub num_thresholds: usize,
+    /// reusable padding buffer
+    scratch: std::cell::RefCell<Vec<f32>>,
+}
+
+impl<'rt> CompressOps<'rt> {
+    pub fn new(rt: &'rt Runtime, manifest: &Manifest) -> Result<Self> {
+        let get = |op: &str| -> Result<BTreeMap<usize, PathBuf>> {
+            manifest
+                .compress_ops
+                .get(op)
+                .cloned()
+                .ok_or_else(|| RuntimeError::MissingArtifact(PathBuf::from(op)))
+        };
+        Ok(CompressOps {
+            rt,
+            abs_stats: get("abs_stats")?,
+            threshold_count: get("threshold_count")?,
+            compress_mask: get("compress_mask")?,
+            sgd_update: get("sgd_update")?,
+            momentum_accum: manifest.compress_ops.get("momentum_accum").cloned(),
+            num_thresholds: manifest.num_thresholds,
+            scratch: std::cell::RefCell::new(Vec::new()),
+        })
+    }
+
+    /// True when the fused momentum-correction artifacts are available.
+    pub fn has_momentum_accum(&self) -> bool {
+        self.momentum_accum.is_some()
+    }
+
+    /// Device fused momentum-correction accumulation (Alg. 4 lines
+    /// 11-19): returns `(v', u')` where `u' = momentum·u + g` and
+    /// `v' = v + u' + nesterov·g`.
+    pub fn momentum_accum(
+        &self,
+        v: &[f32],
+        u: &[f32],
+        g: &[f32],
+        momentum: f32,
+        nesterov: bool,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        assert_eq!(v.len(), u.len());
+        assert_eq!(v.len(), g.len());
+        let map = self
+            .momentum_accum
+            .as_ref()
+            .ok_or_else(|| RuntimeError::MissingArtifact(PathBuf::from("momentum_accum")))?;
+        let (bucket, path) = Self::bucket(map, v.len())?;
+        let exe = self.rt.load(path)?;
+        let pad = |x: &[f32]| {
+            let mut p = x.to_vec();
+            p.resize(bucket, 0.0);
+            p
+        };
+        let (vp, up, gp) = (pad(v), pad(u), pad(g));
+        let out = self.rt.execute_expect(
+            &exe,
+            &[
+                Input::F32(&vp, &[bucket]),
+                Input::F32(&up, &[bucket]),
+                Input::F32(&gp, &[bucket]),
+                Input::F32(&[momentum], &[1]),
+                Input::F32(&[if nesterov { 1.0 } else { 0.0 }], &[1]),
+            ],
+            2,
+        )?;
+        let mut new_v = out[0].clone();
+        new_v.truncate(v.len());
+        let mut new_u = out[1].clone();
+        new_u.truncate(u.len());
+        Ok((new_v, new_u))
+    }
+
+    fn bucket(map: &BTreeMap<usize, PathBuf>, n: usize) -> Result<(usize, &PathBuf)> {
+        map.range(n..)
+            .next()
+            .map(|(&b, p)| (b, p))
+            .ok_or_else(|| RuntimeError::MissingArtifact(PathBuf::from(format!("bucket>={n}"))))
+    }
+
+    /// Largest supported tensor size.
+    pub fn max_bucket(&self) -> usize {
+        self.abs_stats.keys().max().copied().unwrap_or(0)
+    }
+
+    fn padded(&self, x: &[f32], bucket: usize) -> std::cell::Ref<'_, Vec<f32>> {
+        {
+            let mut s = self.scratch.borrow_mut();
+            s.clear();
+            s.extend_from_slice(x);
+            s.resize(bucket, 0.0);
+        }
+        self.scratch.borrow()
+    }
+
+    /// Device `abs_stats`: (mean |x|, max |x|).  Mean uses the *real*
+    /// element count, not the padded bucket size.
+    pub fn abs_stats(&self, x: &[f32]) -> Result<(f32, f32)> {
+        let (bucket, path) = Self::bucket(&self.abs_stats, x.len())?;
+        let exe = self.rt.load(path)?;
+        let padded = self.padded(x, bucket);
+        let out = self.rt.execute_expect(&exe, &[Input::F32(&padded, &[bucket])], 2)?;
+        drop(padded);
+        Ok((out[0][0] / x.len() as f32, out[1][0]))
+    }
+
+    /// Device `threshold_count`: counts of |x| > t_j for J thresholds in a
+    /// single pass.
+    pub fn threshold_count(&self, x: &[f32], thresholds: &[f32]) -> Result<Vec<usize>> {
+        assert_eq!(thresholds.len(), self.num_thresholds, "J mismatch with artifact");
+        let (bucket, path) = Self::bucket(&self.threshold_count, x.len())?;
+        let exe = self.rt.load(path)?;
+        let padded = self.padded(x, bucket);
+        let out = self.rt.execute_expect(
+            &exe,
+            &[
+                Input::F32(&padded, &[bucket]),
+                Input::F32(thresholds, &[thresholds.len()]),
+            ],
+            1,
+        )?;
+        drop(padded);
+        Ok(out[0].iter().map(|&c| c as usize).collect())
+    }
+
+    /// Device `compress_mask`: returns (mask, residual, sel_sum, sel_cnt),
+    /// truncated back to the real length.
+    /// `sign_mode`: 0.0 magnitude / ±1.0 signed (quantized RGC).
+    pub fn compress_mask(
+        &self,
+        x: &[f32],
+        threshold: f32,
+        sign_mode: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32, f32)> {
+        let (bucket, path) = Self::bucket(&self.compress_mask, x.len())?;
+        let exe = self.rt.load(path)?;
+        let padded = self.padded(x, bucket);
+        let out = self.rt.execute_expect(
+            &exe,
+            &[
+                Input::F32(&padded, &[bucket]),
+                Input::F32(&[threshold], &[1]),
+                Input::F32(&[sign_mode], &[1]),
+            ],
+            4,
+        )?;
+        drop(padded);
+        let mut mask = out[0].clone();
+        mask.truncate(x.len());
+        let mut residual = out[1].clone();
+        residual.truncate(x.len());
+        Ok((mask, residual, out[2][0], out[3][0]))
+    }
+
+    /// Device fused dense SGD step: w - lr·g.
+    pub fn sgd_update(&self, w: &[f32], g: &[f32], lr: f32) -> Result<Vec<f32>> {
+        assert_eq!(w.len(), g.len());
+        let (bucket, path) = Self::bucket(&self.sgd_update, w.len())?;
+        let exe = self.rt.load(path)?;
+        let mut wp = w.to_vec();
+        wp.resize(bucket, 0.0);
+        let mut gp = g.to_vec();
+        gp.resize(bucket, 0.0);
+        let out = self.rt.execute_expect(
+            &exe,
+            &[
+                Input::F32(&wp, &[bucket]),
+                Input::F32(&gp, &[bucket]),
+                Input::F32(&[lr], &[1]),
+            ],
+            1,
+        )?;
+        let mut new_w = out[0].clone();
+        new_w.truncate(w.len());
+        Ok(new_w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn setup() -> Option<(Runtime, Manifest)> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return None;
+        }
+        Some((Runtime::new().unwrap(), Manifest::load(dir).unwrap()))
+    }
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Pcg32::seeded(seed);
+        let mut v = vec![0f32; n];
+        r.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn abs_stats_with_padding() {
+        let Some((rt, m)) = setup() else { return };
+        let ops = CompressOps::new(&rt, &m).unwrap();
+        // 700 elements -> padded to 1024 bucket
+        let x = randn(700, 1);
+        let (mean, max) = ops.abs_stats(&x).unwrap();
+        let (hm, hx) = crate::tensor::abs_mean_max(&x);
+        assert!((mean - hm).abs() / hm < 1e-4, "{mean} vs {hm}");
+        assert!((max - hx).abs() < 1e-6);
+    }
+
+    #[test]
+    fn threshold_count_ignores_padding() {
+        let Some((rt, m)) = setup() else { return };
+        let ops = CompressOps::new(&rt, &m).unwrap();
+        let x = randn(900, 2);
+        let thresholds: Vec<f32> =
+            (0..ops.num_thresholds).map(|i| i as f32 * 0.2).collect();
+        let counts = ops.threshold_count(&x, &thresholds).unwrap();
+        for (c, t) in counts.iter().zip(&thresholds) {
+            assert_eq!(*c, crate::tensor::count_above(&x, *t), "t={t}");
+        }
+    }
+
+    #[test]
+    fn compress_mask_roundtrip() {
+        let Some((rt, m)) = setup() else { return };
+        let ops = CompressOps::new(&rt, &m).unwrap();
+        let x = randn(1000, 3);
+        let (mask, residual, sum, cnt) = ops.compress_mask(&x, 0.8, 0.0).unwrap();
+        assert_eq!(mask.len(), 1000);
+        let host_cnt = crate::tensor::count_above(&x, 0.8);
+        assert_eq!(cnt as usize, host_cnt);
+        // mask*x + residual == x
+        for i in 0..1000 {
+            assert!((mask[i] * x[i] + residual[i] - x[i]).abs() < 1e-6);
+        }
+        let host_sum: f32 = x.iter().filter(|v| v.abs() > 0.8).sum();
+        assert!((sum - host_sum).abs() < 1e-3);
+    }
+
+    #[test]
+    fn compress_mask_signed() {
+        let Some((rt, m)) = setup() else { return };
+        let ops = CompressOps::new(&rt, &m).unwrap();
+        let x = randn(512, 4);
+        let (mask, _, sum, cnt) = ops.compress_mask(&x, 0.5, -1.0).unwrap();
+        for (i, &mk) in mask.iter().enumerate() {
+            if mk > 0.5 {
+                assert!(x[i] < -0.5);
+            }
+        }
+        assert!(cnt > 0.0 && sum < 0.0);
+    }
+
+    #[test]
+    fn sgd_update_matches_host() {
+        let Some((rt, m)) = setup() else { return };
+        let ops = CompressOps::new(&rt, &m).unwrap();
+        let w = randn(300, 5);
+        let g = randn(300, 6);
+        let out = ops.sgd_update(&w, &g, 0.01).unwrap();
+        for i in 0..300 {
+            assert!((out[i] - (w[i] - 0.01 * g[i])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn momentum_accum_matches_host_residual() {
+        let Some((rt, m)) = setup() else { return };
+        let ops = CompressOps::new(&rt, &m).unwrap();
+        if !ops.has_momentum_accum() {
+            eprintln!("skipping: artifacts predate momentum_accum");
+            return;
+        }
+        use crate::compression::{Accumulation, ResidualState};
+        for (acc, momentum, nesterov) in [
+            (Accumulation::Sgd, 0.0f32, false),
+            (Accumulation::Momentum { momentum: 0.9 }, 0.9, false),
+            (Accumulation::Nesterov { momentum: 0.9 }, 0.9, true),
+        ] {
+            let mut host = ResidualState::new(700, acc);
+            let mut dv = vec![0f32; 700];
+            let mut du = vec![0f32; 700];
+            for step in 0..3 {
+                let g = randn(700, 40 + step);
+                host.accumulate(&g);
+                let (v, u) = ops.momentum_accum(&dv, &du, &g, momentum, nesterov).unwrap();
+                dv = v;
+                du = u;
+            }
+            for i in 0..700 {
+                assert!(
+                    (dv[i] - host.residual()[i]).abs() < 1e-4,
+                    "{acc:?} v[{i}]: {} vs {}",
+                    dv[i],
+                    host.residual()[i]
+                );
+                // u is unused (and not maintained host-side) under Sgd
+                if momentum != 0.0 {
+                    assert!(
+                        (du[i] - host.momentum_buf()[i]).abs() < 1e-4,
+                        "{acc:?} u[{i}]"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_tensor_rejected() {
+        let Some((rt, m)) = setup() else { return };
+        let ops = CompressOps::new(&rt, &m).unwrap();
+        let x = vec![1.0f32; ops.max_bucket() + 1];
+        assert!(ops.abs_stats(&x).is_err());
+    }
+}

@@ -1,0 +1,314 @@
+//! Device-side communication-set selection: the paper's Algorithms 2/3
+//! executed through the L1 Pallas kernels (`abs_stats`,
+//! `threshold_count`, `compress_mask`) instead of host code.
+//!
+//! The TPU rethink (DESIGN.md §Hardware-Adaptation): instead of the GPU's
+//! serial bisection of `count_nonzero` launches, `threshold_count`
+//! evaluates a *vector* of J candidate thresholds in a single pass, so a
+//! bisection to ratio-resolution ε takes `log_J(1/ε)` device passes
+//! rather than `log_2(1/ε)`.  `compress_mask` then produces the mask, the
+//! updated residual `V·(1-mask)` and the sign-partitioned sums for
+//! quantization in one fused pass; only the (tiny) masked set is
+//! compacted on the host.
+
+use super::compress_ops::CompressOps;
+use super::Result;
+use crate::compression::select::Selection;
+use crate::tensor::SparseTensor;
+
+/// Outcome of a device selection pass: the communication-set, the
+/// threshold that produced it (reusable across iterations, §5.2.2), the
+/// updated residual from the fused kernel, and the quantization stats.
+pub struct DeviceSelection {
+    pub sparse: SparseTensor,
+    pub threshold: f32,
+    /// `V·(1-mask)` — residual after removing the communication-set.
+    pub residual: Vec<f32>,
+    /// Sum of selected values (for mean quantization).
+    pub sel_sum: f32,
+}
+
+impl DeviceSelection {
+    pub fn into_selection(self) -> Selection {
+        Selection { sparse: self.sparse, threshold: self.threshold }
+    }
+}
+
+/// Device selection driver over one thread's [`CompressOps`].
+pub struct DeviceSelector<'rt> {
+    pub ops: CompressOps<'rt>,
+}
+
+impl<'rt> DeviceSelector<'rt> {
+    pub fn new(ops: CompressOps<'rt>) -> Self {
+        DeviceSelector { ops }
+    }
+
+    fn sign_mode(sign: Option<f32>) -> f32 {
+        sign.unwrap_or(0.0)
+    }
+
+    /// Finish a pass: fused mask/residual kernel + host compaction.
+    fn finish(&self, x: &[f32], threshold: f32, sign: Option<f32>) -> Result<DeviceSelection> {
+        let (mask, residual, sel_sum, _cnt) =
+            self.ops.compress_mask(x, threshold, Self::sign_mode(sign))?;
+        let sparse = SparseTensor::compact_masked(x, &mask);
+        Ok(DeviceSelection { sparse, threshold, residual, sel_sum })
+    }
+
+    /// Algorithm 2 on-device: trim with a descending-ratio threshold until
+    /// ≥ k candidates survive, exact-select the top k of the (small)
+    /// surviving set on the host.
+    ///
+    /// One `abs_stats` pass + one `threshold_count` pass (the J-vector
+    /// evaluates the whole ratio ladder at once) + one `compress_mask`.
+    pub fn trimmed_topk(&self, x: &[f32], k: usize, eps: f32, sign: Option<f32>) -> Result<DeviceSelection> {
+        let n = x.len();
+        if n == 0 || k == 0 {
+            return Ok(DeviceSelection {
+                sparse: SparseTensor::default(),
+                threshold: f32::INFINITY,
+                residual: x.to_vec(),
+                sel_sum: 0.0,
+            });
+        }
+        let (mean, max) = self.stats(x, sign)?;
+        if max <= 0.0 {
+            // all-zero (or all wrong-signed) residual: nothing to send
+            return Ok(DeviceSelection {
+                sparse: SparseTensor::default(),
+                threshold: f32::INFINITY,
+                residual: x.to_vec(),
+                sel_sum: 0.0,
+            });
+        }
+        // ratio ladder 1-eps, 1-2eps, ... evaluated in a single device pass
+        let j = self.ops.num_thresholds;
+        let ladder: Vec<f32> = (0..j)
+            .map(|i| {
+                let ratio = (1.0 - eps * (i + 1) as f32).max(0.0);
+                mean + ratio * (max - mean)
+            })
+            .collect();
+        let counts = self.counts(x, &ladder, sign)?;
+        // first rung with enough survivors (ladder is descending in threshold)
+        let pick = counts.iter().position(|&c| c >= k);
+        let trim_thr = match pick {
+            Some(i) => ladder[i],
+            // even ratio→0 keeps fewer than k above `mean`: trim at 0
+            // (keep everything positive-keyed) and let exact top-k decide
+            None => 0.0,
+        };
+        // device: fused mask pass at the trim threshold produces the
+        // candidate set and the masked residual; host exact-selects the
+        // top k of the (tiny) candidate set for exact-k semantics (Alg. 2)
+        let (mask, _residual, _sum, _cnt) =
+            self.ops.compress_mask(x, trim_thr, Self::sign_mode(sign))?;
+        let candidates = SparseTensor::compact_masked(x, &mask);
+        let sel = crate::compression::select::exact_topk(&candidates.values, k, sign);
+        // sel indexes into `candidates`; map back to original positions
+        let mut pairs: Vec<(u32, f32)> = sel
+            .sparse
+            .indices
+            .iter()
+            .map(|&ci| {
+                let i = candidates.indices[ci as usize];
+                (i, x[i as usize])
+            })
+            .collect();
+        pairs.sort_unstable_by_key(|&(i, _)| i);
+        let sel_sum = pairs.iter().map(|&(_, v)| v).sum();
+        let (idx, vals): (Vec<u32>, Vec<f32>) = pairs.into_iter().unzip();
+        let chosen = SparseTensor::new(idx, vals);
+        let mut residual = x.to_vec();
+        chosen.zero_at(&mut residual);
+        Ok(DeviceSelection { sparse: chosen, threshold: sel.threshold, residual, sel_sum })
+    }
+
+    /// Algorithm 3 on-device: J-way threshold bisection until the count
+    /// lands in [k, 2k] (or the bracket is narrower than `eps`).
+    pub fn threshold_binary_search(
+        &self,
+        x: &[f32],
+        k: usize,
+        eps: f32,
+        max_passes: usize,
+        sign: Option<f32>,
+    ) -> Result<DeviceSelection> {
+        let n = x.len();
+        if n == 0 || k == 0 {
+            return Ok(DeviceSelection {
+                sparse: SparseTensor::default(),
+                threshold: f32::INFINITY,
+                residual: x.to_vec(),
+                sel_sum: 0.0,
+            });
+        }
+        let (mean, max) = self.stats(x, sign)?;
+        if max <= 0.0 {
+            return Ok(DeviceSelection {
+                sparse: SparseTensor::default(),
+                threshold: f32::INFINITY,
+                residual: x.to_vec(),
+                sel_sum: 0.0,
+            });
+        }
+        let j = self.ops.num_thresholds;
+        let (mut lo, mut hi) = (0.0f32, 1.0f32); // ratio bracket
+        let mut best = mean; // threshold at ratio 0
+        for _ in 0..max_passes {
+            if hi - lo <= eps {
+                break;
+            }
+            // J interior points of the bracket, descending threshold order
+            let ladder: Vec<f32> = (0..j)
+                .map(|i| {
+                    let r = hi - (hi - lo) * (i + 1) as f32 / (j + 1) as f32;
+                    mean + r * (max - mean)
+                })
+                .collect();
+            let counts = self.counts(x, &ladder, sign)?;
+            // find the highest threshold with count in [k, 2k]
+            if let Some(i) = counts.iter().position(|&c| c >= k && c <= 2 * k) {
+                best = ladder[i];
+                return self.finish(x, best, sign);
+            }
+            // bracket: last rung with count < k and first with count > 2k
+            let mut new_hi = hi;
+            let mut new_lo = lo;
+            for (i, &c) in counts.iter().enumerate() {
+                let r = hi - (hi - lo) * (i + 1) as f32 / (j + 1) as f32;
+                if c < k {
+                    new_hi = r; // too strict: threshold can come down
+                } else if c > 2 * k {
+                    new_lo = new_lo.max(r); // too loose
+                    break;
+                }
+            }
+            if new_hi <= new_lo {
+                best = mean + new_hi * (max - mean);
+                break;
+            }
+            hi = new_hi;
+            lo = new_lo;
+            best = mean + lo * (max - mean);
+        }
+        self.finish(x, best, sign)
+    }
+
+    fn stats(&self, x: &[f32], sign: Option<f32>) -> Result<(f32, f32)> {
+        match sign {
+            // magnitude stats come straight from the kernel
+            None => self.ops.abs_stats(x),
+            // signed stats need max(s·x, 0): cheap host fallback (the L1
+            // kernel computes |x| stats; signed quantized layers re-search
+            // every iteration anyway per §6.4)
+            Some(s) => {
+                let mut sum = 0f64;
+                let mut max = 0f32;
+                for &v in x {
+                    let kx = (s * v).max(0.0);
+                    sum += kx as f64;
+                    max = max.max(kx);
+                }
+                Ok(((sum / x.len() as f64) as f32, max))
+            }
+        }
+    }
+
+    fn counts(&self, x: &[f32], thresholds: &[f32], sign: Option<f32>) -> Result<Vec<usize>> {
+        match sign {
+            None => self.ops.threshold_count(x, thresholds),
+            Some(s) => Ok(thresholds
+                .iter()
+                .map(|&t| crate::tensor::count_above_signed(x, t, s))
+                .collect()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::schema::Manifest;
+    use crate::runtime::Runtime;
+    use crate::util::rng::Pcg32;
+    use std::path::PathBuf;
+
+    fn setup() -> Option<(Runtime, Manifest)> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return None;
+        }
+        Some((Runtime::new().unwrap(), Manifest::load(dir).unwrap()))
+    }
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Pcg32::seeded(seed);
+        let mut v = vec![0f32; n];
+        r.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn device_trimmed_matches_host_exact_topk() {
+        let Some((rt, m)) = setup() else { return };
+        let sel = DeviceSelector::new(CompressOps::new(&rt, &m).unwrap());
+        let x = randn(4000, 1);
+        let k = 40;
+        let d = sel.trimmed_topk(&x, k, 0.2, None).unwrap();
+        assert_eq!(d.sparse.len(), k);
+        let host = crate::compression::select::exact_topk(&x, k, None);
+        assert_eq!(d.sparse.indices, host.sparse.indices);
+        // residual zeroed exactly at the selected indices
+        for &i in &d.sparse.indices {
+            assert_eq!(d.residual[i as usize], 0.0);
+        }
+        let zeros = d.residual.iter().filter(|&&v| v == 0.0).count();
+        assert!(zeros >= k);
+    }
+
+    #[test]
+    fn device_binary_search_in_k_2k() {
+        let Some((rt, m)) = setup() else { return };
+        let sel = DeviceSelector::new(CompressOps::new(&rt, &m).unwrap());
+        let x = randn(60_000, 2);
+        let k = 60;
+        let d = sel.threshold_binary_search(&x, k, 1e-3, 16, None).unwrap();
+        assert!(
+            d.sparse.len() >= k && d.sparse.len() <= 2 * k + 2,
+            "selected {} for k={k}",
+            d.sparse.len()
+        );
+        // every selected magnitude is >= every unselected magnitude... at
+        // least the threshold property must hold:
+        for (&i, &v) in d.sparse.indices.iter().zip(&d.sparse.values) {
+            assert!(v.abs() > d.threshold, "idx {i}");
+        }
+    }
+
+    #[test]
+    fn device_signed_selection_single_signed() {
+        let Some((rt, m)) = setup() else { return };
+        let sel = DeviceSelector::new(CompressOps::new(&rt, &m).unwrap());
+        let x = randn(5000, 3);
+        let d = sel.trimmed_topk(&x, 25, 0.2, Some(1.0)).unwrap();
+        assert_eq!(d.sparse.len(), 25);
+        assert!(d.sparse.values.iter().all(|&v| v > 0.0));
+        let dneg = sel.trimmed_topk(&x, 25, 0.2, Some(-1.0)).unwrap();
+        assert!(dneg.sparse.values.iter().all(|&v| v < 0.0));
+        assert!(dneg.sel_sum < 0.0);
+    }
+
+    #[test]
+    fn device_zero_residual_selects_nothing() {
+        let Some((rt, m)) = setup() else { return };
+        let sel = DeviceSelector::new(CompressOps::new(&rt, &m).unwrap());
+        let x = vec![0f32; 2048];
+        let d = sel.trimmed_topk(&x, 10, 0.2, None).unwrap();
+        assert_eq!(d.sparse.len(), 0);
+        let d = sel.threshold_binary_search(&x, 10, 1e-3, 8, None).unwrap();
+        assert_eq!(d.sparse.len(), 0);
+    }
+}

@@ -1,0 +1,208 @@
+//! PJRT runtime: loads the AOT-compiled HLO text artifacts and executes
+//! them — the only place where numeric compute happens at training time.
+//!
+//! Thread model: the `xla` crate's `PjRtClient` is `Rc`-based (not
+//! `Send`), so each worker thread owns its own [`Runtime`] — mirroring
+//! the paper's one-process-per-GPU deployment.  Executables are cached
+//! per runtime; `make artifacts` has already paid the lowering cost, so a
+//! per-worker `client.compile` of the HLO text is the only startup work.
+
+pub mod compress_ops;
+pub mod device_select;
+pub mod step;
+
+pub use compress_ops::CompressOps;
+pub use device_select::{DeviceSelection, DeviceSelector};
+pub use step::StepRunner;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("xla: {0}")]
+    Xla(String),
+    #[error("artifact not found: {0}")]
+    MissingArtifact(PathBuf),
+    #[error("artifact output mismatch: expected {expected}, got {got}")]
+    OutputArity { expected: usize, got: usize },
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+/// A typed input tensor for an executable call.
+pub enum Input<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+impl Input<'_> {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Input::F32(data, shape) => {
+                let l = xla::Literal::vec1(data);
+                l.reshape(&shape.iter().map(|&d| d as i64).collect::<Vec<_>>())?
+            }
+            Input::I32(data, shape) => {
+                let l = xla::Literal::vec1(data);
+                l.reshape(&shape.iter().map(|&d| d as i64).collect::<Vec<_>>())?
+            }
+        };
+        Ok(lit)
+    }
+}
+
+/// One thread's PJRT CPU client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<PathBuf, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()?, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&self, path: &Path) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(path) {
+            return Ok(Rc::clone(exe));
+        }
+        if !path.exists() {
+            return Err(RuntimeError::MissingArtifact(path.to_path_buf()));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("artifact path must be utf-8"),
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(path.to_path_buf(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute an artifact; returns each tuple output as an f32 vec.
+    /// (All our artifacts return f32 tensors lowered with
+    /// `return_tuple=True`.)
+    pub fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[Input],
+    ) -> Result<Vec<Vec<f32>>> {
+        let literals = inputs
+            .iter()
+            .map(Input::to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+
+    /// Execute with a bound on expected outputs (arity check).
+    pub fn execute_expect(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[Input],
+        expected_outputs: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let out = self.execute(exe, inputs)?;
+        if out.len() != expected_outputs {
+            return Err(RuntimeError::OutputArity { expected: expected_outputs, got: out.len() });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::schema::Manifest;
+
+    fn artifacts() -> Option<Manifest> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(dir).unwrap())
+        } else {
+            eprintln!("skipping: run `make artifacts`");
+            None
+        }
+    }
+
+    #[test]
+    fn runtime_boots_cpu_client() {
+        let rt = Runtime::new().unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let rt = Runtime::new().unwrap();
+        match rt.load(Path::new("/nonexistent/foo.hlo.txt")) {
+            Err(RuntimeError::MissingArtifact(_)) => {}
+            Err(e) => panic!("wrong error: {e}"),
+            Ok(_) => panic!("expected MissingArtifact"),
+        }
+    }
+
+    #[test]
+    fn load_is_cached() {
+        let Some(m) = artifacts() else { return };
+        let rt = Runtime::new().unwrap();
+        let p = &m.compress_ops["sgd_update"][&1024];
+        let a = rt.load(p).unwrap();
+        let b = rt.load(p).unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn sgd_update_artifact_executes() {
+        let Some(m) = artifacts() else { return };
+        let rt = Runtime::new().unwrap();
+        let exe = rt.load(&m.compress_ops["sgd_update"][&1024]).unwrap();
+        let w = vec![1.0f32; 1024];
+        let g = vec![0.5f32; 1024];
+        let lr = [0.1f32];
+        let out = rt
+            .execute_expect(
+                &exe,
+                &[
+                    Input::F32(&w, &[1024]),
+                    Input::F32(&g, &[1024]),
+                    Input::F32(&lr, &[1]),
+                ],
+                1,
+            )
+            .unwrap();
+        assert_eq!(out[0].len(), 1024);
+        assert!(out[0].iter().all(|&v| (v - 0.95).abs() < 1e-6));
+    }
+
+    #[test]
+    fn abs_stats_artifact_matches_host() {
+        let Some(m) = artifacts() else { return };
+        let rt = Runtime::new().unwrap();
+        let exe = rt.load(&m.compress_ops["abs_stats"][&1024]).unwrap();
+        let mut rng = crate::util::rng::Pcg32::seeded(3);
+        let mut x = vec![0f32; 1024];
+        rng.fill_normal(&mut x, 1.0);
+        let out = rt.execute_expect(&exe, &[Input::F32(&x, &[1024])], 2).unwrap();
+        let (mean, max) = crate::tensor::abs_mean_max(&x);
+        assert!((out[0][0] - mean * 1024.0).abs() / (mean * 1024.0) < 1e-4);
+        assert!((out[1][0] - max).abs() < 1e-6);
+    }
+}

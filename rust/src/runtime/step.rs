@@ -1,0 +1,229 @@
+//! Model step execution: drives one model's train-step and eval HLO
+//! artifacts from the coordinator hot loop.
+//!
+//! The artifact contract (see `python/compile/aot.py`):
+//!
+//! * step: `fn(*params, *inputs) -> (loss[1], *grads)` — grads in the same
+//!   order as `schema.params`.
+//! * eval (lm): `fn(*params, tokens, targets) -> (loss[1],)`
+//! * eval (mlp): `fn(*params, x) -> (logits,)`
+
+use super::{Input, Result, Runtime, RuntimeError};
+use crate::models::schema::ModelSchema;
+use std::rc::Rc;
+
+/// A model's compiled step + eval executables for one runtime thread.
+pub struct StepRunner {
+    pub schema: ModelSchema,
+    step: Rc<xla::PjRtLoadedExecutable>,
+    eval: Rc<xla::PjRtLoadedExecutable>,
+}
+
+/// Mini-batch inputs for one step, already in the model's layout.
+#[derive(Clone, Debug)]
+pub enum Batch {
+    /// (tokens, targets), each `batch*seq` i32 — LM models.
+    Lm { tokens: Vec<i32>, targets: Vec<i32> },
+    /// (x `batch*in_dim` f32, y `batch` i32) — MLP models.
+    Mlp { x: Vec<f32>, y: Vec<i32> },
+}
+
+impl StepRunner {
+    pub fn new(rt: &Runtime, schema: &ModelSchema) -> Result<StepRunner> {
+        Ok(StepRunner {
+            schema: schema.clone(),
+            step: rt.load(&schema.file)?,
+            eval: rt.load(&schema.eval_file)?,
+        })
+    }
+
+    fn push_params<'a>(&'a self, params: &'a [Vec<f32>], inputs: &mut Vec<Input<'a>>) {
+        for (spec, buf) in self.schema.params.iter().zip(params) {
+            debug_assert_eq!(buf.len(), spec.size(), "param {} size", spec.name);
+            inputs.push(Input::F32(buf, &spec.shape));
+        }
+    }
+
+    fn batch_inputs<'a>(&'a self, batch: &'a Batch, inputs: &mut Vec<Input<'a>>) {
+        match batch {
+            Batch::Lm { tokens, targets } => {
+                inputs.push(Input::I32(tokens, &self.schema.inputs[0].shape));
+                inputs.push(Input::I32(targets, &self.schema.inputs[1].shape));
+            }
+            Batch::Mlp { x, y } => {
+                inputs.push(Input::F32(x, &self.schema.inputs[0].shape));
+                inputs.push(Input::I32(y, &self.schema.inputs[1].shape));
+            }
+        }
+    }
+
+    /// Run one forward+backward step: returns `(loss, grads)` with one
+    /// grad buffer per parameter, in schema order.
+    pub fn step(&self, rt: &Runtime, params: &[Vec<f32>], batch: &Batch) -> Result<(f32, Vec<Vec<f32>>)> {
+        let mut inputs = Vec::with_capacity(self.schema.params.len() + 2);
+        self.push_params(params, &mut inputs);
+        self.batch_inputs(batch, &mut inputs);
+        let mut out = rt.execute_expect(&self.step, &inputs, self.schema.params.len() + 1)?;
+        let grads = out.split_off(1);
+        let loss = out[0][0];
+        if !loss.is_finite() {
+            return Err(RuntimeError::Xla(format!("non-finite loss {loss}")));
+        }
+        Ok((loss, grads))
+    }
+
+    /// Eval an LM model: held-out mean token cross-entropy.
+    pub fn eval_lm(&self, rt: &Runtime, params: &[Vec<f32>], batch: &Batch) -> Result<f32> {
+        let mut inputs = Vec::with_capacity(self.schema.params.len() + 2);
+        self.push_params(params, &mut inputs);
+        self.batch_inputs(batch, &mut inputs);
+        let out = rt.execute_expect(&self.eval, &inputs, 1)?;
+        Ok(out[0][0])
+    }
+
+    /// Eval an MLP model: returns flat logits `[batch, classes]` for the
+    /// configured batch shape.
+    pub fn eval_mlp_logits(&self, rt: &Runtime, params: &[Vec<f32>], x: &[f32]) -> Result<Vec<f32>> {
+        let mut inputs = Vec::with_capacity(self.schema.params.len() + 1);
+        self.push_params(params, &mut inputs);
+        inputs.push(Input::F32(x, &self.schema.inputs[0].shape));
+        let out = rt.execute_expect(&self.eval, &inputs, 1)?;
+        Ok(out[0].clone())
+    }
+
+    /// MLP classification accuracy over `(x, y)` batches sliced out of a
+    /// full dataset (only whole batches are evaluated).
+    pub fn eval_mlp_accuracy(
+        &self,
+        rt: &Runtime,
+        params: &[Vec<f32>],
+        xs: &[f32],
+        ys: &[i32],
+    ) -> Result<f32> {
+        let b = self.schema.cfg("batch").unwrap_or(1);
+        let d = self.schema.cfg("in_dim").unwrap_or(1);
+        let c = self.schema.cfg("classes").unwrap_or(1);
+        let n_batches = ys.len() / b;
+        if n_batches == 0 {
+            return Ok(0.0);
+        }
+        let mut correct = 0usize;
+        for bi in 0..n_batches {
+            let x = &xs[bi * b * d..(bi + 1) * b * d];
+            let logits = self.eval_mlp_logits(rt, params, x)?;
+            for i in 0..b {
+                let row = &logits[i * c..(i + 1) * c];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap();
+                if pred as i32 == ys[bi * b + i] {
+                    correct += 1;
+                }
+            }
+        }
+        Ok(correct as f32 / (n_batches * b) as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::schema::Manifest;
+    use std::path::PathBuf;
+
+    fn setup() -> Option<(Runtime, Manifest)> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return None;
+        }
+        Some((Runtime::new().unwrap(), Manifest::load(dir).unwrap()))
+    }
+
+    fn lm_batch(schema: &ModelSchema, seed: u64) -> Batch {
+        let b = schema.cfg("batch").unwrap();
+        let s = schema.cfg("seq").unwrap();
+        let v = schema.cfg("vocab").unwrap() as u32;
+        let mut rng = crate::util::rng::Pcg32::seeded(seed);
+        Batch::Lm {
+            tokens: (0..b * s).map(|_| rng.below(v) as i32).collect(),
+            targets: (0..b * s).map(|_| rng.below(v) as i32).collect(),
+        }
+    }
+
+    #[test]
+    fn lm_step_produces_loss_and_grads() {
+        let Some((rt, m)) = setup() else { return };
+        let schema = &m.models["lm_tiny"];
+        let runner = StepRunner::new(&rt, schema).unwrap();
+        let params = schema.init_params(7);
+        let (loss, grads) = runner.step(&rt, &params, &lm_batch(schema, 1)).unwrap();
+        // random targets over vocab 64: loss near ln(64) ≈ 4.16
+        assert!(loss > 2.0 && loss < 8.0, "loss {loss}");
+        assert_eq!(grads.len(), schema.params.len());
+        for (g, p) in grads.iter().zip(&schema.params) {
+            assert_eq!(g.len(), p.size(), "{}", p.name);
+        }
+        // embedding grad should be nonzero
+        assert!(grads[0].iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn lm_sgd_direction_reduces_loss() {
+        let Some((rt, m)) = setup() else { return };
+        let schema = &m.models["lm_tiny"];
+        let runner = StepRunner::new(&rt, schema).unwrap();
+        let mut params = schema.init_params(7);
+        let batch = lm_batch(schema, 2);
+        let (l0, grads) = runner.step(&rt, &params, &batch).unwrap();
+        for (p, g) in params.iter_mut().zip(&grads) {
+            crate::tensor::axpy(p, -0.5, g);
+        }
+        let (l1, _) = runner.step(&rt, &params, &batch).unwrap();
+        assert!(l1 < l0, "loss did not decrease: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn eval_matches_step_loss() {
+        let Some((rt, m)) = setup() else { return };
+        let schema = &m.models["lm_tiny"];
+        let runner = StepRunner::new(&rt, schema).unwrap();
+        let params = schema.init_params(3);
+        let batch = lm_batch(schema, 5);
+        let (l_step, _) = runner.step(&rt, &params, &batch).unwrap();
+        let l_eval = runner.eval_lm(&rt, &params, &batch).unwrap();
+        assert!((l_step - l_eval).abs() < 1e-4, "{l_step} vs {l_eval}");
+    }
+
+    #[test]
+    fn mlp_step_and_accuracy() {
+        let Some((rt, m)) = setup() else { return };
+        let schema = &m.models["mlp_tiny"];
+        let runner = StepRunner::new(&rt, schema).unwrap();
+        let mut params = schema.init_params(11);
+        let ds = crate::data::ClusterDataset::new(
+            256,
+            schema.cfg("in_dim").unwrap(),
+            schema.cfg("classes").unwrap(),
+            3.0,
+            42,
+        );
+        let acc0 = {
+            let (xs, ys) = ds.all();
+            runner.eval_mlp_accuracy(&rt, &params, xs, ys).unwrap()
+        };
+        for step in 0..60 {
+            let (x, y) = ds.batch(0, 1, step, schema.cfg("batch").unwrap());
+            let (_, grads) = runner.step(&rt, &params, &Batch::Mlp { x, y }).unwrap();
+            for (p, g) in params.iter_mut().zip(&grads) {
+                crate::tensor::axpy(p, -0.1, g);
+            }
+        }
+        let (xs, ys) = ds.all();
+        let acc = runner.eval_mlp_accuracy(&rt, &params, xs, ys).unwrap();
+        assert!(acc > acc0.max(0.5), "train did not improve accuracy: {acc0} -> {acc}");
+    }
+}

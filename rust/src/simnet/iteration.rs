@@ -1,0 +1,369 @@
+//! Per-iteration timeline simulator: produces iteration time, speedup
+//! curves (Figs. 7-9) and the phase decomposition (Fig. 10) for the three
+//! strategies (dense baseline / RGC / quantized RGC) under the two §5.6
+//! overlap schemes (per-layer pipelining for CNNs, post-BPTT for RNNs).
+//!
+//! The network is single-ported (one collective in flight, as the cost
+//! model assumes): per-layer collectives queue on the link; GPU-side
+//! compression work (select/mask/pack) serializes with backprop compute on
+//! the device stream; decompression (unpack) happens after synchronization.
+
+use super::{allgather_time, allreduce_time, Machine};
+use crate::compression::{Method, PolicyThresholds};
+use crate::models::zoo::ModelProfile;
+
+/// Synchronization strategy for a simulated run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Dense allreduce every layer (the horovod baseline).
+    Dense,
+    /// Residual gradient compression, plain messages.
+    Rgc,
+    /// RGC + same-sign mean quantization (§5.2.3).
+    QuantRgc,
+}
+
+impl Strategy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Strategy::Dense => "baseline",
+            Strategy::Rgc => "RGC",
+            Strategy::QuantRgc => "quant-RGC",
+        }
+    }
+}
+
+/// Simulation tunables.
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    /// Compression density D (paper: 1e-3).
+    pub density: f64,
+    /// Per-GPU mini-batch (weak scaling, as the paper measures).
+    pub batch_per_gpu: usize,
+    /// §5.5 selection-method policy thresholds.
+    pub thresholds: PolicyThresholds,
+    /// Backward/forward flop ratio (standard 2x).
+    pub bwd_flop_ratio: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            density: 1e-3,
+            batch_per_gpu: 32,
+            thresholds: PolicyThresholds::default(),
+            bwd_flop_ratio: 2.0,
+        }
+    }
+}
+
+/// Virtual-time phase totals for one iteration.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Breakdown {
+    pub compute: f64,
+    pub select: f64,
+    pub mask: f64,
+    pub pack: f64,
+    /// Total collective time on the link (not the exposed part).
+    pub comm: f64,
+    pub unpack: f64,
+    /// End-to-end iteration time (with overlap).
+    pub total: f64,
+}
+
+impl Breakdown {
+    /// Sum of the device/network component costs (Fig. 10 columns are
+    /// proportions of this).
+    pub fn component_sum(&self) -> f64 {
+        self.compute + self.select + self.mask + self.pack + self.comm + self.unpack
+    }
+}
+
+fn compute_times(model: &ModelProfile, machine: &Machine, cfg: &SimConfig) -> (f64, f64) {
+    let total_flops =
+        model.fwd_gflops_per_sample * 1e9 * cfg.batch_per_gpu as f64 * (1.0 + cfg.bwd_flop_ratio);
+    let fwd = model.fwd_gflops_per_sample * 1e9 * cfg.batch_per_gpu as f64
+        / (machine.gpu_gflops * 1e9);
+    let bwd = (total_flops / (machine.gpu_gflops * 1e9)) - fwd;
+    (fwd, bwd)
+}
+
+/// Selected elements per layer under density D.
+fn k_for(elems: usize, density: f64) -> usize {
+    ((elems as f64 * density).ceil() as usize).clamp(1, elems)
+}
+
+/// Message bytes for one rank's compressed layer (§5.3 wire format).
+fn message_bytes(k: usize, quantized: bool) -> f64 {
+    if quantized {
+        // len + k indices + 1 mean
+        4.0 * (k as f64 + 2.0)
+    } else {
+        // len + k indices + k values
+        4.0 * (2.0 * k as f64 + 1.0)
+    }
+}
+
+/// Threshold-reuse interval of the sampled binary search (§5.2.2).
+const BS_INTERVAL: f64 = 5.0;
+
+/// Per-layer selection cost.  Sampled binary search amortizes the full
+/// search over `BS_INTERVAL` iterations (cached-threshold iterations pay
+/// only one compaction pass); quantized layers cannot reuse thresholds
+/// (§6.4 — the sign alternates) and pay the full search every time.
+fn select_time(machine: &Machine, method: Method, elems: usize, quantized: bool) -> f64 {
+    let n = elems as f64;
+    match method {
+        Method::Dense => 0.0,
+        Method::ExactTopk => machine.sel_launch + n * machine.sel_exact_per_elem,
+        Method::TrimmedTopk => machine.sel_launch + n * machine.sel_trimmed_per_elem,
+        Method::SampledBinarySearch => {
+            let full = n * machine.sel_bs_per_elem;
+            let compact = n * machine.sel_trimmed_per_elem;
+            if quantized {
+                machine.sel_launch + full
+            } else {
+                machine.sel_launch + (full + (BS_INTERVAL - 1.0) * compact) / BS_INTERVAL
+            }
+        }
+    }
+}
+
+/// Simulate one training iteration; returns the phase breakdown.
+pub fn simulate_iteration(
+    model: &ModelProfile,
+    machine: &Machine,
+    p: usize,
+    strategy: Strategy,
+    cfg: &SimConfig,
+) -> Breakdown {
+    let (fwd, bwd_total) = compute_times(model, machine, cfg);
+    let nl = model.layers.len() as f64;
+    let bwd_per_layer = bwd_total / nl;
+
+    let mut b = Breakdown { compute: fwd + bwd_total, ..Default::default() };
+
+    // device-stream clock (backprop + compression) and link clock
+    let mut gpu = 0.0f64;
+    let mut link = 0.0f64;
+
+    let per_layer_overlap = !model.is_rnn;
+    if !per_layer_overlap {
+        // RNN: BPTT must finish before any compression/communication
+        gpu = bwd_total;
+        link = bwd_total;
+    }
+
+    // iterate layers in backprop order (last layer first)
+    for layer in model.layers.iter().rev() {
+        if per_layer_overlap {
+            gpu += bwd_per_layer;
+        }
+        let bytes = layer.elems as f64 * 4.0;
+        match strategy {
+            Strategy::Dense => {
+                let start = gpu.max(link);
+                let dur = allreduce_time(machine, p, bytes);
+                b.comm += dur;
+                link = start + dur;
+            }
+            Strategy::Rgc | Strategy::QuantRgc => {
+                let method = Method::for_size(layer.elems * 4, cfg.thresholds);
+                if method == Method::Dense {
+                    let start = gpu.max(link);
+                    let dur = allreduce_time(machine, p, bytes);
+                    b.comm += dur;
+                    link = start + dur;
+                } else {
+                    // quantization is never applied to the output layer
+                    let quantized = strategy == Strategy::QuantRgc && !layer.is_output;
+                    let k = k_for(layer.elems, cfg.density);
+                    let t_sel = select_time(machine, method, layer.elems, quantized);
+                    let t_mask = layer.elems as f64 * machine.mask_per_elem;
+                    let t_pack = k as f64 * machine.pack_per_elem;
+                    b.select += t_sel;
+                    b.mask += t_mask;
+                    b.pack += t_pack;
+                    gpu += t_sel + t_mask + t_pack;
+                    let start = gpu.max(link);
+                    let dur = allgather_time(machine, p, message_bytes(k, quantized));
+                    b.comm += dur;
+                    link = start + dur;
+                    // unpack: apply p compressed sets of size k, one
+                    // (launch + scatter) per rank per layer — the p·γ₁
+                    // term of Eq. 1
+                    b.unpack += p as f64
+                        * (machine.unpack_launch + k as f64 * machine.gamma_decompress);
+                }
+            }
+        }
+    }
+
+    let sync_end = gpu.max(link);
+    b.total = fwd + sync_end + b.unpack;
+    b
+}
+
+/// Single-GPU iteration time of the *baseline* (compute only) — the
+/// denominator of the paper's speedup curves.
+pub fn single_gpu_time(model: &ModelProfile, machine: &Machine, cfg: &SimConfig) -> f64 {
+    let (fwd, bwd) = compute_times(model, machine, cfg);
+    fwd + bwd
+}
+
+/// Paper-style speedup: single-GPU baseline time / distributed per-
+/// iteration time (weak scaling: same per-GPU batch).
+pub fn speedup(
+    model: &ModelProfile,
+    machine: &Machine,
+    p: usize,
+    strategy: Strategy,
+    cfg: &SimConfig,
+) -> f64 {
+    let t1 = single_gpu_time(model, machine, cfg);
+    let tp = simulate_iteration(model, machine, p, strategy, cfg).total;
+    // speedup of p GPUs = p × per-iteration throughput ratio
+    p as f64 * t1 / tp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    fn cfg() -> SimConfig {
+        SimConfig::default()
+    }
+
+    #[test]
+    fn single_gpu_equals_compute() {
+        let m = zoo::alexnet();
+        let mach = Machine::muradin();
+        let b = simulate_iteration(&m, &mach, 1, Strategy::Dense, &cfg());
+        let t1 = single_gpu_time(&m, &mach, &cfg());
+        assert!((b.total - t1).abs() / t1 < 1e-9);
+    }
+
+    #[test]
+    fn rgc_beats_dense_for_alexnet_at_scale() {
+        // AlexNet = communication-bound: the paper's headline case
+        let m = zoo::alexnet();
+        let mach = Machine::piz_daint();
+        for p in [16usize, 32, 64, 128] {
+            let d = speedup(&m, &mach, p, Strategy::Dense, &cfg());
+            let r = speedup(&m, &mach, p, Strategy::QuantRgc, &cfg());
+            assert!(r > d, "p={p}: quant-RGC {r:.1} <= dense {d:.1}");
+        }
+    }
+
+    #[test]
+    fn quant_rgc_beats_rgc_for_comm_bound_cnns() {
+        // AlexNet = the communication-bound CNN where the halved message
+        // size is exposed (for VGG16 our overlap model hides comm almost
+        // fully, so quant ≈ plain there — see EXPERIMENTS.md deviations)
+        let m = zoo::alexnet();
+        let mach = Machine::piz_daint();
+        let r = speedup(&m, &mach, 64, Strategy::Rgc, &cfg());
+        let q = speedup(&m, &mach, 64, Strategy::QuantRgc, &cfg());
+        assert!(q > r, "quant {q:.2} <= plain {r:.2}");
+        // and never *worse* for the other CNNs
+        for name in ["vgg16", "resnet50"] {
+            let m = zoo::by_name(name).unwrap();
+            let r = speedup(&m, &mach, 64, Strategy::Rgc, &cfg());
+            let q = speedup(&m, &mach, 64, Strategy::QuantRgc, &cfg());
+            assert!(q >= 0.95 * r, "{name}: quant {q:.2} << plain {r:.2}");
+        }
+    }
+
+    #[test]
+    fn quant_rgc_slower_than_rgc_for_lstm_small_scale() {
+        // §6.4: threshold sharing is incompatible with quantization, so
+        // the LSTM's huge layers pay a full binary search every iteration
+        // — at small scale that overhead beats the bandwidth saving
+        let m = zoo::lstm_ptb();
+        let mach = Machine::muradin();
+        let r = speedup(&m, &mach, 2, Strategy::Rgc, &cfg());
+        let q = speedup(&m, &mach, 2, Strategy::QuantRgc, &cfg());
+        assert!(q < r, "quant {q:.2} should trail plain {r:.2} at p=2");
+    }
+
+    #[test]
+    fn resnet50_gains_little_or_nothing() {
+        // the paper's negative result: high compute/comm ratio
+        let m = zoo::resnet50();
+        let mach = Machine::piz_daint();
+        let d = speedup(&m, &mach, 128, Strategy::Dense, &cfg());
+        let q = speedup(&m, &mach, 128, Strategy::QuantRgc, &cfg());
+        assert!(
+            q < d * 1.15,
+            "resnet50 should not meaningfully benefit: dense {d:.1} quant {q:.1}"
+        );
+    }
+
+    #[test]
+    fn unpack_grows_linearly_with_p() {
+        let m = zoo::resnet50();
+        let mach = Machine::piz_daint();
+        let b32 = simulate_iteration(&m, &mach, 32, Strategy::Rgc, &cfg());
+        let b128 = simulate_iteration(&m, &mach, 128, Strategy::Rgc, &cfg());
+        let ratio = b128.unpack / b32.unpack;
+        assert!((ratio - 4.0).abs() < 0.01, "unpack ratio {ratio}");
+    }
+
+    #[test]
+    fn rnn_scheme_defers_comm() {
+        // with the RNN scheme, link time starts after full BPTT: total
+        // must be >= bwd + first comm
+        let m = zoo::lstm_ptb();
+        let mach = Machine::muradin();
+        let b = simulate_iteration(&m, &mach, 4, Strategy::Rgc, &cfg());
+        let t1 = single_gpu_time(&m, &mach, &cfg());
+        assert!(b.total > t1, "comm cannot be fully hidden for RNN");
+    }
+
+    #[test]
+    fn small_layers_fall_back_to_dense_in_rgc() {
+        // resnet44: every layer except the thirteen 147KB s3 64x64
+        // convs is below thsd1 -> dense allreduce inside the RGC strategy
+        let m = zoo::resnet44();
+        let compressed: Vec<_> = m
+            .layers
+            .iter()
+            .filter(|l| Method::for_size(l.elems * 4, PolicyThresholds::default()) != Method::Dense)
+            .collect();
+        assert_eq!(compressed.len(), 13, "{compressed:?}");
+        assert!(compressed.iter().all(|l| l.elems == 36_864));
+        let mach = Machine::muradin();
+        let rgc = simulate_iteration(&m, &mach, 4, Strategy::Rgc, &cfg());
+        // select cost is exactly the 7 trimmed selections
+        let expect = 13.0 * (mach.sel_launch + 36_864.0 * mach.sel_trimmed_per_elem);
+        assert!((rgc.select - expect).abs() / expect < 1e-9, "{} vs {expect}", rgc.select);
+        // and the rest of the traffic still goes through dense allreduce
+        let dense = simulate_iteration(&m, &mach, 4, Strategy::Dense, &cfg());
+        assert!(rgc.comm > 0.3 * dense.comm, "most of resnet44 stays dense");
+    }
+
+    #[test]
+    fn breakdown_components_positive() {
+        let m = zoo::vgg16();
+        let mach = Machine::piz_daint();
+        let b = simulate_iteration(&m, &mach, 16, Strategy::Rgc, &cfg());
+        assert!(b.select > 0.0 && b.mask > 0.0 && b.pack > 0.0);
+        assert!(b.comm > 0.0 && b.unpack > 0.0);
+        assert!(b.total >= b.compute);
+    }
+
+    #[test]
+    fn speedup_concave_at_scale_for_rgc() {
+        // the paper observes concave speedup curves (bandwidth + unpack
+        // grow with p): marginal speedup per added GPU shrinks
+        let m = zoo::vgg16();
+        let mach = Machine::piz_daint();
+        let s: Vec<f64> = [16usize, 32, 64, 128]
+            .iter()
+            .map(|&p| speedup(&m, &mach, p, Strategy::QuantRgc, &cfg()))
+            .collect();
+        let eff: Vec<f64> = s.iter().zip([16f64, 32.0, 64.0, 128.0]).map(|(s, p)| s / p).collect();
+        assert!(eff[0] > eff[1] && eff[1] > eff[2] && eff[2] > eff[3], "{eff:?}");
+    }
+}

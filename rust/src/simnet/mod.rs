@@ -1,0 +1,236 @@
+//! Virtual-time network + device simulator.
+//!
+//! The paper's performance results come from an 8-GPU PCIe server
+//! ("Muradin", 3.5 GB/s allreduce bandwidth) and a 5k-node Cray
+//! ("Piz Daint", Aries, ~1.5 GB/s) — hardware this repo does not have.
+//! Per DESIGN.md §Substitutions, the *scalability* experiments replay the
+//! exact collective schedules (`collectives::`) in virtual time against an
+//! α-β link model plus per-element device costs, with machine presets
+//! calibrated to the paper's measured bandwidths and Fig. 3 selection
+//! ratios.
+//!
+//! [`iteration`] builds on this: a per-layer timeline simulator producing
+//! iteration time + the Fig. 10 phase decomposition for dense / RGC /
+//! quantized-RGC strategies.
+
+pub mod iteration;
+
+/// Device + network parameters of one simulated machine.
+#[derive(Clone, Debug)]
+pub struct Machine {
+    pub name: String,
+    /// Per-message latency α (seconds).
+    pub alpha: f64,
+    /// Per-byte transfer time β (seconds/byte).
+    pub beta: f64,
+    /// Reduction cost per element (dense allreduce γ₂ contribution).
+    pub gamma_reduce: f64,
+    /// Sparse decompression (scatter-add) cost per element (γ₁).
+    pub gamma_decompress: f64,
+    /// Fixed launch/setup cost of one selection pass on a layer (the
+    /// handful of kernel launches behind Alg. 2/3) — why small layers
+    /// prefer dense allreduce (§5.5).
+    pub sel_launch: f64,
+    /// Fixed cost of decompressing one rank's message for one layer
+    /// (cuSparse axpyi launch + small-size inefficiency — the paper's
+    /// "GPU memory bandwidth cannot be fully utilized when
+    /// decompressing").  Charged p times per compressed layer; the
+    /// linear-in-p term that makes unpack dominate Fig. 10 at scale.
+    pub unpack_launch: f64,
+    /// Exact top-k selection cost per scanned element (the radixSelect
+    /// stand-in of Fig. 3).
+    pub sel_exact_per_elem: f64,
+    /// Trimmed top-k cost per scanned element (Alg. 2; ~38× cheaper at
+    /// 16Mi elements per Fig. 3).
+    pub sel_trimmed_per_elem: f64,
+    /// Threshold binary search cost per scanned element (Alg. 3; ~16×).
+    pub sel_bs_per_elem: f64,
+    /// Momentum correction + masking cost per element (Fig. 10 "mask").
+    pub mask_per_elem: f64,
+    /// Message packing cost per *selected* element (Fig. 10 "pack").
+    pub pack_per_elem: f64,
+    /// Effective device throughput for fwd+bwd compute (GFlop/s).
+    pub gpu_gflops: f64,
+    /// Ranks available on this machine in the paper.
+    pub max_ranks: usize,
+}
+
+impl Machine {
+    /// The 8× Titan V PCIe server: 3.5 GB/s peak allreduce bandwidth
+    /// (paper Fig. 5), NCCL within one node.
+    pub fn muradin() -> Machine {
+        Machine {
+            name: "muradin".into(),
+            alpha: 10e-6,
+            beta: 1.0 / 3.5e9,
+            gamma_reduce: 2.0e-11,
+            gamma_decompress: 1.0e-10,
+            sel_launch: 30e-6,
+            unpack_launch: 10e-6,
+            sel_exact_per_elem: 1.2e-9,
+            sel_trimmed_per_elem: 3.2e-11,
+            sel_bs_per_elem: 7.4e-11,
+            mask_per_elem: 4.0e-11,
+            pack_per_elem: 4.0e-10,
+            gpu_gflops: 7_000.0, // Titan V fp32, ~50% efficiency
+            max_ranks: 8,
+        }
+    }
+
+    /// Piz Daint: 1 P100/node, Aries dragonfly, ~1.5 GB/s sustained
+    /// allreduce bandwidth (paper Fig. 5), higher launch latency.
+    pub fn piz_daint() -> Machine {
+        Machine {
+            name: "piz-daint".into(),
+            alpha: 25e-6,
+            beta: 1.0 / 1.5e9,
+            gamma_reduce: 2.0e-11,
+            gamma_decompress: 1.0e-10,
+            sel_launch: 30e-6,
+            unpack_launch: 25e-6,
+            sel_exact_per_elem: 1.2e-9,
+            sel_trimmed_per_elem: 3.2e-11,
+            sel_bs_per_elem: 7.4e-11,
+            mask_per_elem: 4.0e-11,
+            pack_per_elem: 4.0e-10,
+            gpu_gflops: 5_000.0, // P100 fp32, ~50% efficiency
+            max_ranks: 128,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Machine> {
+        match name {
+            "muradin" => Some(Machine::muradin()),
+            "piz-daint" | "pizdaint" | "piz_daint" => Some(Machine::piz_daint()),
+            _ => None,
+        }
+    }
+}
+
+/// Virtual time of a recursive-doubling allgather where every rank
+/// contributes `bytes_per_rank`.  Walks the actual schedule: step s moves
+/// 2^s · m bytes, so Σ = lg(p)·α + (p-1)·m·β — Eq. 1's transfer term.
+pub fn allgather_time(machine: &Machine, p: usize, bytes_per_rank: f64) -> f64 {
+    assert!(p >= 1);
+    if p == 1 {
+        return 0.0;
+    }
+    let mut t = 0.0;
+    let mut have = bytes_per_rank; // bytes accumulated so far
+    let mut dist = 1;
+    while dist < p {
+        t += machine.alpha + have * machine.beta;
+        have *= 2.0;
+        dist <<= 1;
+    }
+    t
+}
+
+/// Virtual time of a Rabenseifner allreduce on `bytes` of gradient data:
+/// reduce-scatter (recursive halving, with per-element reduction) +
+/// allgather (recursive doubling) — Eq. 2's schedule.
+pub fn allreduce_time(machine: &Machine, p: usize, bytes: f64) -> f64 {
+    assert!(p >= 1);
+    if p == 1 {
+        return 0.0;
+    }
+    let elems = bytes / 4.0;
+    let mut t = 0.0;
+    // reduce-scatter: step sizes M/2, M/4, ... M/p
+    let mut part = bytes / 2.0;
+    let mut dist = p / 2;
+    while dist >= 1 {
+        t += machine.alpha + part * machine.beta + (part / 4.0) * machine.gamma_reduce;
+        part /= 2.0;
+        dist /= 2;
+    }
+    // allgather: step sizes M/p, 2M/p, ... M/2
+    let mut part = bytes / p as f64;
+    let mut dist = 1;
+    while dist < p {
+        t += machine.alpha + part * machine.beta;
+        part *= 2.0;
+        dist <<= 1;
+    }
+    let _ = elems;
+    t
+}
+
+/// Effective allreduce *bandwidth* reported the way the paper's Fig. 5
+/// measures it: S/t · 2(n-1)/n for per-rank data size S.
+pub fn allreduce_bandwidth(machine: &Machine, p: usize, bytes: f64) -> f64 {
+    if p == 1 {
+        return f64::INFINITY;
+    }
+    let t = allreduce_time(machine, p, bytes);
+    (bytes / t) * 2.0 * (p as f64 - 1.0) / p as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allgather_matches_closed_form() {
+        let m = Machine::muradin();
+        for p in [2usize, 4, 8, 32, 128] {
+            for bytes in [1e3, 1e6, 64e6] {
+                let walked = allgather_time(&m, p, bytes);
+                let closed =
+                    (p as f64).log2() * m.alpha + (p as f64 - 1.0) * bytes * m.beta;
+                assert!(
+                    (walked - closed).abs() / closed < 1e-9,
+                    "p={p} bytes={bytes}: {walked} vs {closed}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_matches_closed_form() {
+        let m = Machine::piz_daint();
+        for p in [2usize, 8, 64, 128] {
+            let bytes = 32e6;
+            let walked = allreduce_time(&m, p, bytes);
+            let pf = p as f64;
+            let closed = 2.0 * pf.log2() * m.alpha
+                + 2.0 * (pf - 1.0) / pf * bytes * m.beta
+                + (pf - 1.0) / pf * (bytes / 4.0) * m.gamma_reduce;
+            assert!(
+                (walked - closed).abs() / closed < 1e-9,
+                "p={p}: {walked} vs {closed}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_rank_costs_nothing() {
+        let m = Machine::muradin();
+        assert_eq!(allgather_time(&m, 1, 1e6), 0.0);
+        assert_eq!(allreduce_time(&m, 1, 1e6), 0.0);
+    }
+
+    #[test]
+    fn bandwidth_saturates_near_link_rate() {
+        // large message, few ranks: effective bw approaches 1/beta
+        let m = Machine::muradin();
+        let bw = allreduce_bandwidth(&m, 8, 256e6);
+        assert!(bw > 3.0e9 && bw < 3.6e9, "bw={bw:e}");
+    }
+
+    #[test]
+    fn bandwidth_drops_for_small_messages() {
+        // latency-dominated regime
+        let m = Machine::piz_daint();
+        let small = allreduce_bandwidth(&m, 8, 4e3);
+        let large = allreduce_bandwidth(&m, 8, 64e6);
+        assert!(small < large / 3.0, "small={small:e} large={large:e}");
+    }
+
+    #[test]
+    fn presets_resolve() {
+        assert_eq!(Machine::by_name("muradin").unwrap().max_ranks, 8);
+        assert_eq!(Machine::by_name("piz-daint").unwrap().max_ranks, 128);
+        assert!(Machine::by_name("x").is_none());
+    }
+}

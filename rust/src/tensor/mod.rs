@@ -1,0 +1,310 @@
+//! Dense tensor substrate: a flat `f32` buffer plus shape, with the
+//! vectorizable kernels the coordinator hot path needs (axpy, scale,
+//! norms, abs-stats).  No BLAS dependency — heavy compute runs in the
+//! AOT-compiled XLA artifacts; these ops cover optimizer/residual
+//! bookkeeping on the host.
+
+pub mod sparse;
+
+pub use sparse::SparseTensor;
+
+/// Dense f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    data: Vec<f32>,
+    shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { data: vec![0.0; n], shape: shape.to_vec() }
+    }
+
+    pub fn from_vec(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Tensor { data, shape: shape.to_vec() }
+    }
+
+    pub fn from_flat(data: Vec<f32>) -> Self {
+        let n = data.len();
+        Tensor { data, shape: vec![n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    /// self += alpha * other
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        axpy(&mut self.data, alpha, &other.data);
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        self.data.iter_mut().for_each(|x| *x *= alpha);
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        l2_norm(&self.data)
+    }
+
+    pub fn abs_mean_max(&self) -> (f32, f32) {
+        abs_mean_max(&self.data)
+    }
+}
+
+/// y += alpha * x (slice form, the host-side hot kernel).
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// y = alpha*x + beta*y
+pub fn axpby(y: &mut [f32], alpha: f32, x: &[f32], beta: f32) {
+    assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = alpha * xi + beta * *yi;
+    }
+}
+
+pub fn l2_norm(x: &[f32]) -> f32 {
+    // f64 accumulator: gradient-clipping norms over multi-million-element
+    // buffers lose precision in f32.
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt() as f32
+}
+
+/// Single pass (mean |x|, max |x|) — host mirror of the `abs_stats`
+/// kernel.  8-lane accumulators let LLVM vectorize the reduction; the
+/// per-chunk f32 partial sums feed an f64 total so multi-million-element
+/// means stay accurate (§Perf).
+pub fn abs_mean_max(x: &[f32]) -> (f32, f32) {
+    if x.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mut sum = 0f64;
+    let mut max = 0f32;
+    for chunk in x.chunks(4096) {
+        let mut acc = [0f32; 8];
+        let mut mx = [0f32; 8];
+        let mut it = chunk.chunks_exact(8);
+        for grp in &mut it {
+            for l in 0..8 {
+                let a = grp[l].abs();
+                acc[l] += a;
+                if a > mx[l] {
+                    mx[l] = a;
+                }
+            }
+        }
+        let mut csum = 0f32;
+        let mut cmax = 0f32;
+        for l in 0..8 {
+            csum += acc[l];
+            if mx[l] > cmax {
+                cmax = mx[l];
+            }
+        }
+        for &v in it.remainder() {
+            let a = v.abs();
+            csum += a;
+            if a > cmax {
+                cmax = a;
+            }
+        }
+        sum += csum as f64;
+        if cmax > max {
+            max = cmax;
+        }
+    }
+    ((sum / x.len() as f64) as f32, max)
+}
+
+/// Count of |x| strictly above `thr` — host mirror of `threshold_count`.
+pub fn count_above(x: &[f32], thr: f32) -> usize {
+    x.iter().filter(|v| v.abs() > thr).count()
+}
+
+/// Signed variant for quantized selection: counts x*sign > thr.
+pub fn count_above_signed(x: &[f32], thr: f32, sign: f32) -> usize {
+    x.iter().filter(|&&v| v * sign > thr).count()
+}
+
+/// L1-cache chunk size (elements) for the blocked streaming kernels —
+/// 16 KiB of f32, the host analogue of a VMEM tile.
+const CHUNK: usize = 4096;
+
+/// Counts above each of J thresholds in ONE memory pass — the host mirror
+/// of the L1 `threshold_count` Pallas kernel and the workhorse of the
+/// fast selectors (§Perf).
+///
+/// Returns `counts[j] = #{ i : key(x[i]) > thrs[j] }` where the key is
+/// `|x|` (`sign = None`) or `sign·x` (`sign = Some(±1)`).
+///
+/// Blocked evaluation: each 16 KiB chunk's keys are materialized once,
+/// then all J thresholds scan the chunk from L1 with a branch-free
+/// (vectorizable) predicate-count — J compares per element of compute,
+/// but only one pass of memory traffic.
+pub fn count_above_multi(x: &[f32], thrs: &[f32], sign: Option<f32>) -> Vec<usize> {
+    let j = thrs.len();
+    if j == 0 {
+        return Vec::new();
+    }
+    let mut counts = vec![0usize; j];
+    match sign {
+        None => {
+            for chunk in x.chunks(CHUNK) {
+                for (c, &t) in counts.iter_mut().zip(thrs) {
+                    *c += chunk.iter().filter(|&&v| v.abs() > t).count();
+                }
+            }
+        }
+        Some(s) => {
+            let mut keys = [0f32; CHUNK];
+            for chunk in x.chunks(CHUNK) {
+                let m = chunk.len();
+                for (kk, &v) in keys[..m].iter_mut().zip(chunk) {
+                    *kk = v * s;
+                }
+                for (c, &t) in counts.iter_mut().zip(thrs) {
+                    *c += keys[..m].iter().filter(|&&a| a > t).count();
+                }
+            }
+        }
+    }
+    counts
+}
+
+/// Sparse-regime variant of [`count_above_multi`]: `thrs` must be sorted
+/// **descending**; cost is one compare per element plus a short ladder
+/// walk for the (assumed few) elements above `thrs.last()`.  The right
+/// tool when every threshold sits in the top-percent tail — e.g. the
+/// verification pass of the sample-guided selectors (§Perf); degrades
+/// badly when a large fraction qualifies (use the dense variant there).
+pub fn count_above_multi_sparse(x: &[f32], thrs: &[f32], sign: Option<f32>) -> Vec<usize> {
+    let j = thrs.len();
+    if j == 0 {
+        return Vec::new();
+    }
+    debug_assert!(thrs.windows(2).all(|w| w[0] >= w[1]), "thresholds must descend");
+    let tmin = thrs[j - 1];
+    // hist[b]: elements with key in (thrs[b], thrs[b-1]] (b = 0: > thrs[0])
+    let mut hist = vec![0usize; j];
+    let mut scan = |a: f32| {
+        if a > tmin {
+            let mut b = j - 1;
+            while b > 0 && a > thrs[b - 1] {
+                b -= 1;
+            }
+            hist[b] += 1;
+        }
+    };
+    match sign {
+        None => x.iter().for_each(|&v| scan(v.abs())),
+        Some(s) => x.iter().for_each(|&v| scan(v * s)),
+    }
+    for b in 1..j {
+        hist[b] += hist[b - 1];
+    }
+    hist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert!(t.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_vec_validates() {
+        Tensor::from_vec(vec![1.0; 5], &[2, 3]);
+    }
+
+    #[test]
+    fn axpy_works() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(&mut y, 2.0, &[10.0, 20.0, 30.0]);
+        assert_eq!(y, vec![21.0, 42.0, 63.0]);
+    }
+
+    #[test]
+    fn axpby_works() {
+        let mut y = vec![1.0, 2.0];
+        axpby(&mut y, 2.0, &[3.0, 4.0], 0.5);
+        assert_eq!(y, vec![6.5, 9.0]);
+    }
+
+    #[test]
+    fn l2_norm_f64_accumulation() {
+        let x = vec![1e-4f32; 1_000_000];
+        let n = l2_norm(&x);
+        assert!((n - 0.1).abs() < 1e-4, "{n}");
+    }
+
+    #[test]
+    fn abs_stats_simple() {
+        let (mean, max) = abs_mean_max(&[-2.0, 1.0, -4.0, 1.0]);
+        assert_eq!(max, 4.0);
+        assert!((mean - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn abs_stats_empty() {
+        assert_eq!(abs_mean_max(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn count_above_strict() {
+        assert_eq!(count_above(&[1.0, -1.0, 0.5], 1.0), 0);
+        assert_eq!(count_above(&[1.1, -1.2, 0.5], 1.0), 2);
+    }
+
+    #[test]
+    fn count_above_signed_partitions() {
+        let x = [2.0, -2.0, 0.5, -0.5];
+        assert_eq!(count_above_signed(&x, 1.0, 1.0), 1);
+        assert_eq!(count_above_signed(&x, 1.0, -1.0), 1);
+    }
+
+    #[test]
+    fn tensor_ops_chain() {
+        let mut a = Tensor::from_flat(vec![1.0, 2.0]);
+        let b = Tensor::from_flat(vec![3.0, 4.0]);
+        a.axpy(0.5, &b);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[5.0, 8.0]);
+        assert!((a.l2_norm() - (89f32).sqrt()).abs() < 1e-6);
+    }
+}

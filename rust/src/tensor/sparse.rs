@@ -1,0 +1,161 @@
+//! Sparse tensor: the compressed communication-set representation.
+//!
+//! `(indices, values)` pairs extracted from a dense residual; the
+//! `scatter_add` decompression is the paper's cuSparse `axpyi()` analogue
+//! (§5.4), and the dominant cost at large p (Fig. 10 "unpack").
+
+/// Compressed communication-set: sorted-by-extraction indices + values.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseTensor {
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl SparseTensor {
+    pub fn new(indices: Vec<u32>, values: Vec<f32>) -> Self {
+        assert_eq!(indices.len(), values.len());
+        SparseTensor { indices, values }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        SparseTensor { indices: Vec::with_capacity(n), values: Vec::with_capacity(n) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    pub fn push(&mut self, idx: u32, val: f32) {
+        self.indices.push(idx);
+        self.values.push(val);
+    }
+
+    /// Extract elements of `dense` whose |value| > thr (stream compaction).
+    pub fn compact_above(dense: &[f32], thr: f32) -> Self {
+        let mut out = SparseTensor::default();
+        for (i, &v) in dense.iter().enumerate() {
+            if v.abs() > thr {
+                out.push(i as u32, v);
+            }
+        }
+        out
+    }
+
+    /// Signed compaction for quantized selection: keeps v*sign > thr.
+    pub fn compact_above_signed(dense: &[f32], thr: f32, sign: f32) -> Self {
+        let mut out = SparseTensor::default();
+        for (i, &v) in dense.iter().enumerate() {
+            if v * sign > thr {
+                out.push(i as u32, v);
+            }
+        }
+        out
+    }
+
+    /// Extract elements where mask > 0.5 (device-produced masks).
+    pub fn compact_masked(dense: &[f32], mask: &[f32]) -> Self {
+        assert_eq!(dense.len(), mask.len());
+        let mut out = SparseTensor::default();
+        for i in 0..dense.len() {
+            if mask[i] > 0.5 {
+                out.push(i as u32, dense[i]);
+            }
+        }
+        out
+    }
+
+    /// dense[idx] += scale * val for every element (the `axpyi` of §5.4).
+    pub fn scatter_add(&self, dense: &mut [f32], scale: f32) {
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            dense[i as usize] += scale * v;
+        }
+    }
+
+    /// Zero out `dense` at this tensor's indices (momentum factor masking).
+    pub fn zero_at(&self, dense: &mut [f32]) {
+        for &i in &self.indices {
+            dense[i as usize] = 0.0;
+        }
+    }
+
+    pub fn value_sum(&self) -> f32 {
+        self.values.iter().sum()
+    }
+
+    /// Replace all values by a single constant (quantized decompression).
+    pub fn with_constant_values(indices: Vec<u32>, value: f32) -> Self {
+        let values = vec![value; indices.len()];
+        SparseTensor { indices, values }
+    }
+
+    /// Densify into a fresh buffer of length n.
+    pub fn to_dense(&self, n: usize) -> Vec<f32> {
+        let mut out = vec![0f32; n];
+        self.scatter_add(&mut out, 1.0);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compact_above_picks_strictly_greater() {
+        let d = [0.5, -2.0, 1.0, 3.0, -0.1];
+        let s = SparseTensor::compact_above(&d, 1.0);
+        assert_eq!(s.indices, vec![1, 3]);
+        assert_eq!(s.values, vec![-2.0, 3.0]);
+    }
+
+    #[test]
+    fn compact_signed_positive_and_negative() {
+        let d = [0.5, -2.0, 1.5, 3.0];
+        let pos = SparseTensor::compact_above_signed(&d, 1.0, 1.0);
+        assert_eq!(pos.indices, vec![2, 3]);
+        let neg = SparseTensor::compact_above_signed(&d, 1.0, -1.0);
+        assert_eq!(neg.indices, vec![1]);
+        assert_eq!(neg.values, vec![-2.0]);
+    }
+
+    #[test]
+    fn compact_masked_matches_mask() {
+        let d = [1.0, 2.0, 3.0];
+        let m = [0.0, 1.0, 1.0];
+        let s = SparseTensor::compact_masked(&d, &m);
+        assert_eq!(s.indices, vec![1, 2]);
+    }
+
+    #[test]
+    fn scatter_add_accumulates() {
+        let s = SparseTensor::new(vec![0, 2, 2], vec![1.0, 2.0, 3.0]);
+        let mut d = vec![10.0, 10.0, 10.0];
+        s.scatter_add(&mut d, 0.5);
+        assert_eq!(d, vec![10.5, 10.0, 12.5]);
+    }
+
+    #[test]
+    fn compact_then_scatter_roundtrip() {
+        let d = [0.0, 5.0, 0.0, -7.0];
+        let s = SparseTensor::compact_above(&d, 0.1);
+        assert_eq!(s.to_dense(4), d.to_vec());
+    }
+
+    #[test]
+    fn zero_at_masks_residual() {
+        let s = SparseTensor::new(vec![1, 3], vec![9.0, 9.0]);
+        let mut d = vec![1.0, 2.0, 3.0, 4.0];
+        s.zero_at(&mut d);
+        assert_eq!(d, vec![1.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn constant_values() {
+        let s = SparseTensor::with_constant_values(vec![0, 2], 0.25);
+        assert_eq!(s.values, vec![0.25, 0.25]);
+    }
+}

@@ -1,0 +1,269 @@
+//! Tiny declarative CLI argument parser (no `clap` in the vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands, with auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArgError {
+    #[error("unknown option '{0}' (try --help)")]
+    Unknown(String),
+    #[error("option '--{0}' expects a value")]
+    MissingValue(String),
+    #[error("invalid value '{1}' for --{0}: {2}")]
+    Invalid(String, String, String),
+    #[error("missing required option --{0}")]
+    MissingRequired(String),
+}
+
+struct Spec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+    required: bool,
+}
+
+/// Declarative parser: declare options, call [`Args::parse`], then read
+/// typed values.
+pub struct Args {
+    program: String,
+    about: String,
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Args {
+            program: program.to_string(),
+            about: about.to_string(),
+            specs: Vec::new(),
+            values: BTreeMap::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Option taking a value, with default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+            required: false,
+        });
+        self
+    }
+
+    /// Required option taking a value.
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: false,
+            required: true,
+        });
+        self
+    }
+
+    /// Boolean flag (no value).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+            required: false,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let head = if spec.is_flag {
+                format!("  --{}", spec.name)
+            } else if let Some(d) = &spec.default {
+                format!("  --{} <val> (default: {})", spec.name, d)
+            } else {
+                format!("  --{} <val> (required)", spec.name)
+            };
+            s.push_str(&format!("{head:<44} {}\n", spec.help));
+        }
+        s.push_str("  --help                                       print this message\n");
+        s
+    }
+
+    /// Parse a raw arg list (without argv[0]).  On `--help`, prints usage
+    /// and exits.
+    pub fn parse(mut self, argv: &[String]) -> Result<Parsed, ArgError> {
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                print!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| ArgError::Unknown(a.clone()))?;
+                if spec.is_flag {
+                    self.values.insert(name, "true".to_string());
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| ArgError::MissingValue(name.clone()))?
+                        }
+                    };
+                    self.values.insert(name, v);
+                }
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        for spec in &self.specs {
+            if !self.values.contains_key(&spec.name) {
+                if spec.required {
+                    return Err(ArgError::MissingRequired(spec.name.clone()));
+                }
+                if let Some(d) = &spec.default {
+                    self.values.insert(spec.name.clone(), d.clone());
+                }
+            }
+        }
+        Ok(Parsed { values: self.values, positional: self.positional })
+    }
+}
+
+/// Parsed argument values with typed getters.
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .map(|s| s.as_str())
+            .unwrap_or_else(|| panic!("undeclared option '{name}'"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.values.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<T, ArgError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.get(name);
+        raw.parse().map_err(|e: T::Err| {
+            ArgError::Invalid(name.to_string(), raw.to_string(), e.to_string())
+        })
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.get_parse(name).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.get_parse(name).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn f32(&self, name: &str) -> f32 {
+        self.get_parse(name).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.get_parse(name).unwrap_or_else(|e| panic!("{e}"))
+    }
+}
+
+fn _sv(xs: &[&str]) -> Vec<String> {
+    xs.iter().map(|s| s.to_string()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args() -> Args {
+        Args::new("t", "test")
+            .opt("steps", "100", "step count")
+            .opt("density", "0.001", "compression density")
+            .flag("quantize", "enable quantization")
+            .req("model", "model name")
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let p = args().parse(&_sv(&["--model", "lm_tiny"])).unwrap();
+        assert_eq!(p.usize("steps"), 100);
+        assert_eq!(p.f64("density"), 0.001);
+        assert!(!p.get_flag("quantize"));
+        assert_eq!(p.get("model"), "lm_tiny");
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let p = args()
+            .parse(&_sv(&["--model=x", "--steps=5", "--quantize"]))
+            .unwrap();
+        assert_eq!(p.usize("steps"), 5);
+        assert!(p.get_flag("quantize"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(matches!(
+            args().parse(&_sv(&["--steps", "5"])),
+            Err(ArgError::MissingRequired(_))
+        ));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(matches!(
+            args().parse(&_sv(&["--model", "x", "--nope"])),
+            Err(ArgError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(matches!(
+            args().parse(&_sv(&["--model"])),
+            Err(ArgError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let p = args().parse(&_sv(&["pos1", "--model", "x", "pos2"])).unwrap();
+        assert_eq!(p.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn bad_parse_reports_option() {
+        let p = args().parse(&_sv(&["--model", "x", "--steps", "abc"])).unwrap();
+        let e = p.get_parse::<usize>("steps").unwrap_err();
+        assert!(e.to_string().contains("steps"));
+    }
+}

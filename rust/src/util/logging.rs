@@ -1,0 +1,89 @@
+//! Leveled stderr logger with a global verbosity switch.
+//!
+//! Not `log`/`env_logger` (not vendored); a minimal equivalent whose level
+//! is set once by the CLI (`--log-level`) or the `REDSYNC_LOG` env var.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+impl Level {
+    pub fn from_str_loose(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+/// Set the global level (also reads `REDSYNC_LOG` if `level` is None).
+pub fn init(level: Option<Level>) {
+    let l = level
+        .or_else(|| std::env::var("REDSYNC_LOG").ok().and_then(|s| Level::from_str_loose(&s)))
+        .unwrap_or(Level::Info);
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, args: std::fmt::Arguments) {
+    if enabled(level) {
+        eprintln!("[{}] {}", level.tag(), args);
+    }
+}
+
+#[macro_export]
+macro_rules! log_error { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_info { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($t)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::from_str_loose("WARN"), Some(Level::Warn));
+        assert_eq!(Level::from_str_loose("debug"), Some(Level::Debug));
+        assert_eq!(Level::from_str_loose("nope"), None);
+    }
+
+    #[test]
+    fn enabled_respects_threshold() {
+        init(Some(Level::Warn));
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        init(Some(Level::Info));
+    }
+}

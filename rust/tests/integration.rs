@@ -1,0 +1,343 @@
+//! Integration tests across the whole stack: runtime artifacts, the
+//! trainer over the in-process fabric, the device-selection path, and
+//! the CLI-level config plumbing.
+//!
+//! Tests that need artifacts skip gracefully when `make artifacts` has
+//! not been run (CI always builds them first).
+
+use redsync::compression::PolicyThresholds;
+use redsync::config::{preset, TrainConfig, WarmupKind};
+use redsync::coordinator::metrics::phase;
+use redsync::coordinator::{TrainError, Trainer};
+use redsync::models::schema::Manifest;
+use redsync::optim::{LrSchedule, Optimizer};
+use redsync::simnet::iteration::Strategy;
+use std::path::PathBuf;
+
+fn manifest() -> Option<Manifest> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return None;
+    }
+    Some(Manifest::load(dir).unwrap())
+}
+
+fn base_cfg() -> TrainConfig {
+    TrainConfig {
+        model: "lm_tiny".into(),
+        world: 2,
+        steps: 10,
+        strategy: Strategy::Rgc,
+        density: 0.02,
+        thresholds: PolicyThresholds { thsd1: 512, thsd2: 8 * 1024 },
+        log_every: 2,
+        eval_every: 0,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn full_stack_rgc_all_strategies_and_worlds() {
+    let Some(m) = manifest() else { return };
+    for strategy in [Strategy::Dense, Strategy::Rgc, Strategy::QuantRgc] {
+        for world in [1usize, 2, 4] {
+            let cfg = TrainConfig { world, strategy, ..base_cfg() };
+            let r = Trainer::new(&m, cfg).unwrap().run().unwrap();
+            assert!(r.replicas_consistent, "{} x{world}", strategy.label());
+            assert!(r.final_loss.is_finite());
+        }
+    }
+}
+
+#[test]
+fn rgc_matches_dense_quality_on_short_run() {
+    // not bit-identical, but same ballpark loss after the same steps
+    let Some(m) = manifest() else { return };
+    let steps = 40;
+    let lr = LrSchedule::Constant { lr: 0.3 };
+    let dense = Trainer::new(
+        &m,
+        TrainConfig { strategy: Strategy::Dense, steps, lr: lr.clone(), ..base_cfg() },
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    let rgc = Trainer::new(
+        &m,
+        TrainConfig { strategy: Strategy::Rgc, steps, lr, density: 0.05, ..base_cfg() },
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    let d = dense.final_loss;
+    let r = rgc.final_loss;
+    assert!(
+        (d - r).abs() < 0.5 * d,
+        "RGC strayed too far from dense: {r} vs {d}"
+    );
+}
+
+#[test]
+fn device_select_path_runs_and_learns() {
+    // the full L1 path: selection through the Pallas-kernel artifacts
+    let Some(m) = manifest() else { return };
+    let cfg = TrainConfig {
+        device_select: true,
+        steps: 6,
+        world: 2,
+        ..base_cfg()
+    };
+    let r = Trainer::new(&m, cfg).unwrap().run().unwrap();
+    assert!(r.replicas_consistent);
+    assert!(r.phases.total(phase::SELECT) > 0.0);
+}
+
+#[test]
+fn device_and_host_select_agree_end_to_end() {
+    // same config, host vs device selection: identical training result.
+    // Restricted to trimmed-top-k layers (exact-k semantics on both
+    // sides); binary-search layers may legitimately pick different
+    // [k, 2k] sets on host vs device.
+    let Some(m) = manifest() else { return };
+    let host_cfg = TrainConfig {
+        steps: 5,
+        world: 2,
+        thresholds: PolicyThresholds { thsd1: 512, thsd2: 1 << 30 },
+        ..base_cfg()
+    };
+    let dev_cfg = TrainConfig { device_select: true, ..host_cfg.clone() };
+    let host = Trainer::new(&m, host_cfg).unwrap().run().unwrap();
+    let dev = Trainer::new(&m, dev_cfg).unwrap().run().unwrap();
+    assert!(
+        (host.final_loss - dev.final_loss).abs() < 5e-3,
+        "host {} vs device {}",
+        host.final_loss,
+        dev.final_loss
+    );
+}
+
+#[test]
+fn momentum_and_nesterov_paths() {
+    let Some(m) = manifest() else { return };
+    for opt in [
+        Optimizer::Sgd,
+        Optimizer::Momentum { momentum: 0.9 },
+        Optimizer::Nesterov { momentum: 0.9 },
+    ] {
+        let cfg = TrainConfig { optimizer: opt, steps: 12, ..base_cfg() };
+        let r = Trainer::new(&m, cfg).unwrap().run().unwrap();
+        assert!(r.replicas_consistent, "{opt:?}");
+        assert!(r.final_loss.is_finite(), "{opt:?}");
+    }
+}
+
+#[test]
+fn local_clipping_keeps_training_stable() {
+    let Some(m) = manifest() else { return };
+    let cfg = TrainConfig {
+        clip: Some(0.25),
+        lr: LrSchedule::Constant { lr: 1.0 }, // aggressive without clip
+        steps: 20,
+        ..base_cfg()
+    };
+    let r = Trainer::new(&m, cfg).unwrap().run().unwrap();
+    assert!(r.final_loss.is_finite());
+    assert!(r.replicas_consistent);
+}
+
+#[test]
+fn warmup_transitions_dense_to_sparse() {
+    let Some(m) = manifest() else { return };
+    let cfg = TrainConfig {
+        warmup: WarmupKind::DenseEpochs(1),
+        steps_per_epoch: 5,
+        steps: 10,
+        ..base_cfg()
+    };
+    let r = Trainer::new(&m, cfg).unwrap().run().unwrap();
+    // both phases present: dense comm (epoch 0) and sparse comm (epoch 1)
+    assert!(r.phases.total(phase::COMM_DENSE) > 0.0);
+    assert!(r.phases.total(phase::COMM_SPARSE) > 0.0);
+    assert!(r.replicas_consistent);
+}
+
+#[test]
+fn dgc_warmup_density_decays() {
+    let Some(m) = manifest() else { return };
+    let cfg = TrainConfig {
+        warmup: WarmupKind::Dgc,
+        steps_per_epoch: 2,
+        steps: 12,
+        log_every: 2,
+        ..base_cfg()
+    };
+    let r = Trainer::new(&m, cfg).unwrap().run().unwrap();
+    // sent density must decrease epoch over epoch
+    let d: Vec<f64> = r.sent_density.iter().map(|&(_, d)| d).collect();
+    assert!(d.len() >= 3);
+    assert!(
+        d.first().unwrap() > d.last().unwrap(),
+        "density did not decay: {d:?}"
+    );
+}
+
+#[test]
+fn union_density_exceeds_per_rank_density() {
+    // §5.3: distinct indices across ranks ≈ world × per-rank density
+    let Some(m) = manifest() else { return };
+    let cfg = TrainConfig { world: 4, density: 0.01, steps: 6, ..base_cfg() };
+    let r = Trainer::new(&m, cfg).unwrap().run().unwrap();
+    let (_, union) = *r.union_density.last().unwrap();
+    let (_, sent) = *r.sent_density.last().unwrap();
+    assert!(union > 1.5 * sent, "union {union} vs sent {sent}");
+    // upper bound: world ranks, each sending up to ~2k (binary-search
+    // layers return between k and 2k elements)
+    assert!(union <= 2.0 * 4.0 * sent + 1e-9, "union {union} vs sent {sent}");
+}
+
+#[test]
+fn quantized_traffic_below_plain() {
+    let Some(m) = manifest() else { return };
+    let plain = Trainer::new(&m, TrainConfig { eval_every: 0, ..base_cfg() })
+        .unwrap()
+        .run()
+        .unwrap();
+    let quant = Trainer::new(
+        &m,
+        TrainConfig { strategy: Strategy::QuantRgc, eval_every: 0, ..base_cfg() },
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    assert!(
+        quant.bytes < plain.bytes,
+        "quantized {} !< plain {}",
+        quant.bytes,
+        plain.bytes
+    );
+}
+
+#[test]
+fn single_worker_degenerates_gracefully() {
+    let Some(m) = manifest() else { return };
+    let cfg = TrainConfig { world: 1, steps: 5, ..base_cfg() };
+    let r = Trainer::new(&m, cfg).unwrap().run().unwrap();
+    assert!(r.replicas_consistent);
+    assert!(r.final_loss.is_finite());
+}
+
+#[test]
+fn run_is_deterministic_for_fixed_seed() {
+    let Some(m) = manifest() else { return };
+    let a = Trainer::new(&m, base_cfg()).unwrap().run().unwrap();
+    let b = Trainer::new(&m, base_cfg()).unwrap().run().unwrap();
+    assert_eq!(a.final_loss, b.final_loss);
+    assert_eq!(
+        a.loss_curve, b.loss_curve,
+        "training must be bit-deterministic for a fixed seed"
+    );
+}
+
+#[test]
+fn seeds_change_the_run() {
+    let Some(m) = manifest() else { return };
+    let a = Trainer::new(&m, base_cfg()).unwrap().run().unwrap();
+    let b = Trainer::new(&m, TrainConfig { seed: 7, ..base_cfg() })
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_ne!(a.final_loss, b.final_loss);
+}
+
+#[test]
+fn presets_run_end_to_end_smoke() {
+    let Some(m) = manifest() else { return };
+    let mut cfg = preset("smoke").unwrap();
+    cfg.steps = 6;
+    let r = Trainer::new(&m, cfg).unwrap().run().unwrap();
+    assert!(r.replicas_consistent);
+}
+
+#[test]
+fn invalid_configs_rejected_by_trainer() {
+    let Some(m) = manifest() else { return };
+    // non-power-of-two world
+    let cfg = TrainConfig { world: 3, ..base_cfg() };
+    assert!(matches!(Trainer::new(&m, cfg), Err(TrainError::Config(_))));
+    // unknown model
+    let cfg = TrainConfig { model: "missing".into(), ..base_cfg() };
+    assert!(matches!(Trainer::new(&m, cfg), Err(TrainError::UnknownModel(_))));
+}
+
+#[test]
+fn mlp_models_train_all_strategies() {
+    let Some(m) = manifest() else { return };
+    for strategy in [Strategy::Dense, Strategy::Rgc, Strategy::QuantRgc] {
+        let cfg = TrainConfig {
+            model: "mlp_small".into(),
+            strategy,
+            steps: 8,
+            thresholds: PolicyThresholds { thsd1: 1024, thsd2: 64 * 1024 },
+            optimizer: Optimizer::Nesterov { momentum: 0.9 },
+            lr: LrSchedule::Constant { lr: 0.05 },
+            ..base_cfg()
+        };
+        let r = Trainer::new(&m, cfg).unwrap().run().unwrap();
+        assert!(r.replicas_consistent, "{}", strategy.label());
+    }
+}
+
+#[test]
+fn binary_search_policy_branch_exercised() {
+    // mlp_wide's 1024x1024 fc (4 MB) crosses thsd2 -> SampledBinarySearch
+    let Some(m) = manifest() else { return };
+    let cfg = TrainConfig {
+        model: "mlp_wide".into(),
+        thresholds: PolicyThresholds { thsd1: 1024, thsd2: 256 * 1024 },
+        steps: 8,
+        lr: LrSchedule::Constant { lr: 0.05 },
+        ..base_cfg()
+    };
+    let schema = &m.models["mlp_wide"];
+    let big = schema.params.iter().filter(|p| p.bytes() >= 256 * 1024).count();
+    assert!(big >= 1, "mlp_wide must have a binary-search layer");
+    let r = Trainer::new(&m, cfg).unwrap().run().unwrap();
+    assert!(r.replicas_consistent);
+}
+
+#[test]
+fn fusion_reduces_messages_and_preserves_results() {
+    // §5.3 tensor fusion: batching small allgathers must not change the
+    // training result (same messages, fewer collectives)
+    let Some(m) = manifest() else { return };
+    let unfused_cfg = TrainConfig { steps: 8, world: 2, ..base_cfg() };
+    let fused_cfg = TrainConfig { fusion_cap_elems: 1 << 20, ..unfused_cfg.clone() };
+    let unfused = Trainer::new(&m, unfused_cfg).unwrap().run().unwrap();
+    let fused = Trainer::new(&m, fused_cfg).unwrap().run().unwrap();
+    assert_eq!(
+        unfused.final_loss, fused.final_loss,
+        "fusion changed the training result"
+    );
+    assert!(fused.replicas_consistent);
+    assert!(
+        fused.messages < unfused.messages,
+        "fusion should reduce message count: {} vs {}",
+        fused.messages,
+        unfused.messages
+    );
+    // payload is the same modulo per-message headers
+    assert!(fused.bytes <= unfused.bytes);
+}
+
+#[test]
+fn fusion_respects_cap_granularity() {
+    // a tiny cap degenerates to singleton groups == unfused behavior
+    let Some(m) = manifest() else { return };
+    let single = TrainConfig { fusion_cap_elems: 1, steps: 5, ..base_cfg() };
+    let none = TrainConfig { fusion_cap_elems: 0, steps: 5, ..base_cfg() };
+    let a = Trainer::new(&m, single).unwrap().run().unwrap();
+    let b = Trainer::new(&m, none).unwrap().run().unwrap();
+    assert_eq!(a.final_loss, b.final_loss);
+    assert_eq!(a.messages, b.messages);
+}

@@ -1,0 +1,314 @@
+//! Property-based tests on the coordinator-level invariants: selection
+//! contracts, wire-format round-trips, collective algebra, residual mass
+//! conservation and the cost-model/simulator agreement.
+
+use redsync::collectives::{allgather, allreduce_mean, concat, LocalFabric, Transport};
+use redsync::compression::message::{
+    apply_gathered_plain, pack_plain, pack_quant, unpack_plain, unpack_quant,
+};
+use redsync::compression::{
+    exact_topk, threshold_binary_search, trimmed_topk, Accumulation, BinarySearchParams,
+    QuantizedSet, ResidualState,
+};
+use redsync::costmodel;
+use redsync::simnet::{allgather_time, allreduce_time, Machine};
+use redsync::tensor::SparseTensor;
+use redsync::util::proptest::{check, ensure, ensure_close};
+use std::thread;
+
+/// All three selectors pick supersets of each other's guarantees:
+/// trimmed == exact (same k elements), binary search ⊇ exact's threshold.
+#[test]
+fn prop_trimmed_equals_exact_topk() {
+    check(40, |g| {
+        let n = g.size(64..20_000);
+        let k = g.size(1..(n / 8).max(2));
+        let x = g.vec_normal(n, 1.0);
+        let e = exact_topk(&x, k, None);
+        let t = trimmed_topk(&x, k, 0.2, None);
+        ensure(t.sparse.len() == k, format!("trimmed returned {}", t.sparse.len()))?;
+        // same index set (both exact selections of the same keys, ties
+        // broken identically by magnitude)
+        let mut ei = e.sparse.indices.clone();
+        let mut ti = t.sparse.indices.clone();
+        ei.sort_unstable();
+        ti.sort_unstable();
+        let e_min = e.sparse.values.iter().map(|v| v.abs()).fold(f32::MAX, f32::min);
+        let t_min = t.sparse.values.iter().map(|v| v.abs()).fold(f32::MAX, f32::min);
+        // tie-tolerant check: the kth magnitude must agree
+        ensure_close(e_min as f64, t_min as f64, 1e-6, "kth magnitude")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_binary_search_bounds() {
+    check(40, |g| {
+        let n = g.size(256..40_000);
+        let k = g.size(4..(n / 16).max(5));
+        let x = g.vec_normal(n, 1.0);
+        let s = threshold_binary_search(&x, k, BinarySearchParams::default(), None);
+        ensure(
+            s.sparse.len() >= k.min(n),
+            format!("bs returned {} < k={k}", s.sparse.len()),
+        )?;
+        // the 2k bound can be overshot only on pathological ties; the
+        // uniform/normal generators never tie
+        ensure(
+            s.sparse.len() <= 2 * k + 1,
+            format!("bs returned {} > 2k={}", s.sparse.len(), 2 * k),
+        )?;
+        // threshold property
+        for &v in &s.sparse.values {
+            ensure(v.abs() > s.threshold, "value below threshold")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_signed_selection_is_single_signed() {
+    check(30, |g| {
+        let n = g.size(128..10_000);
+        let k = g.size(1..(n / 10).max(2));
+        let x = g.vec_normal(n, 1.0);
+        let sign = if g.bool() { 1.0 } else { -1.0 };
+        for sel in [
+            exact_topk(&x, k, Some(sign)),
+            trimmed_topk(&x, k, 0.2, Some(sign)),
+            threshold_binary_search(&x, k, BinarySearchParams::default(), Some(sign)),
+        ] {
+            for &v in &sel.sparse.values {
+                ensure(v * sign > 0.0, format!("wrong-signed value {v} for sign {sign}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_roundtrip_plain_and_quant() {
+    check(50, |g| {
+        let n = g.size(1..500);
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        g.rng().shuffle(&mut idx);
+        idx.truncate(g.size(1..n.max(2)));
+        idx.sort_unstable();
+        let vals = g.vec_normal(idx.len(), 2.0);
+        let s = SparseTensor::new(idx.clone(), vals);
+        let (s2, used) = unpack_plain(&pack_plain(&s)).map_err(|e| e.to_string())?;
+        ensure(used == 1 + 2 * s.len(), "plain length")?;
+        ensure(s2.indices == s.indices && s2.values == s.values, "plain roundtrip")?;
+
+        let q = QuantizedSet { indices: idx, mean: g.f32(-3.0..3.0) };
+        let (q2, used) = unpack_quant(&pack_quant(&q)).map_err(|e| e.to_string())?;
+        ensure(used == q.len() + 2, "quant length")?;
+        ensure(q2 == q, "quant roundtrip")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_truncated_wire_rejected() {
+    check(30, |g| {
+        let k = g.size(2..100);
+        let s = SparseTensor::new((0..k as u32).collect(), g.vec_normal(k, 1.0));
+        let buf = pack_plain(&s);
+        let cut = g.size(1..buf.len());
+        ensure(unpack_plain(&buf[..cut]).is_err(), "truncated message accepted")?;
+        Ok(())
+    });
+}
+
+/// Residual mass conservation: accumulate - send == keep (SGD rule).
+#[test]
+fn prop_residual_mass_conserved() {
+    check(30, |g| {
+        let n = g.size(64..4_000);
+        let mut r = ResidualState::new(n, Accumulation::Sgd);
+        let mut accumulated = 0f64;
+        let mut sent = 0f64;
+        for _ in 0..4 {
+            let grad = g.vec_normal(n, 1.0);
+            accumulated += grad.iter().map(|&v| v as f64).sum::<f64>();
+            r.accumulate(&grad);
+            let k = (n / 20).max(1);
+            let sel = exact_topk(r.residual(), k, None);
+            sent += sel.sparse.values.iter().map(|&v| v as f64).sum::<f64>();
+            r.mask(&sel.sparse);
+        }
+        let kept: f64 = r.residual().iter().map(|&v| v as f64).sum();
+        ensure_close(accumulated, sent + kept, 1e-2 * n as f64 * 1e-4 + 1e-3, "mass")?;
+        Ok(())
+    });
+}
+
+/// Sparse synchronization over the real fabric == serial scatter-add.
+#[test]
+fn prop_sparse_sync_equals_serial() {
+    check(8, |g| {
+        let world = *g.pick(&[2usize, 4, 8]);
+        let n = g.size(64..512);
+        // random per-rank contributions
+        let contributions: Vec<SparseTensor> = (0..world)
+            .map(|_| {
+                let k = g.size(1..(n / 4).max(2));
+                let mut idx: Vec<u32> = (0..n as u32).collect();
+                g.rng().shuffle(&mut idx);
+                idx.truncate(k);
+                idx.sort_unstable();
+                let vals = g.vec_normal(k, 1.0);
+                SparseTensor::new(idx, vals)
+            })
+            .collect();
+        let mut expect = vec![0f32; n];
+        for c in &contributions {
+            c.scatter_add(&mut expect, 1.0 / world as f32);
+        }
+        let mut fabric = LocalFabric::new(world);
+        let handles: Vec<_> = fabric
+            .take_all()
+            .into_iter()
+            .map(|t| {
+                let c = contributions[t.rank()].clone();
+                thread::spawn(move || {
+                    let gathered = concat(allgather(&t, pack_plain(&c)));
+                    let mut dense = vec![0f32; n];
+                    apply_gathered_plain(&gathered, t.world(), &mut dense, 1.0 / t.world() as f32)
+                        .unwrap();
+                    dense
+                })
+            })
+            .collect();
+        for h in handles {
+            let got = h.join().unwrap();
+            ensure(got == expect, "rank result differs from serial reference")?;
+        }
+        Ok(())
+    });
+}
+
+/// allreduce_mean over the fabric == arithmetic mean, all ranks agree.
+#[test]
+fn prop_allreduce_mean_exact() {
+    check(8, |g| {
+        let world = *g.pick(&[2usize, 4, 8]);
+        let n = g.size(1..2_000);
+        let data: Vec<Vec<f32>> = (0..world).map(|_| g.vec_normal(n, 1.0)).collect();
+        let mut expect = vec![0f64; n];
+        for d in &data {
+            for (e, &v) in expect.iter_mut().zip(d) {
+                *e += v as f64;
+            }
+        }
+        let expect: Vec<f32> = expect.iter().map(|&v| (v / world as f64) as f32).collect();
+        let mut fabric = LocalFabric::new(world);
+        let handles: Vec<_> = fabric
+            .take_all()
+            .into_iter()
+            .map(|t| {
+                let mut x = data[t.rank()].clone();
+                thread::spawn(move || {
+                    allreduce_mean(&t, &mut x);
+                    x
+                })
+            })
+            .collect();
+        let results: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for r in &results {
+            ensure(r == &results[0], "ranks disagree")?;
+        }
+        for (got, want) in results[0].iter().zip(&expect) {
+            ensure((got - want).abs() <= 1e-4 * want.abs().max(1.0), "mean wrong")?;
+        }
+        Ok(())
+    });
+}
+
+/// The simnet collective walkers equal the closed-form Eq. 1/2 costs.
+#[test]
+fn prop_simnet_matches_costmodel() {
+    check(40, |g| {
+        let m = if g.bool() { Machine::muradin() } else { Machine::piz_daint() };
+        let p = 1usize << g.size(1..8);
+        let elems = g.size(1_000..20_000_000) as f64;
+        let d = g.f32(1e-4..0.05) as f64;
+
+        // Eq. 2 vs walked allreduce (gamma term differs by elems vs bytes
+        // convention — compare the transfer parts by zeroing gamma)
+        let mut m0 = m.clone();
+        m0.gamma_reduce = 0.0;
+        let dense_walk = allreduce_time(&m0, p, elems * 4.0);
+        let pf = p as f64;
+        let dense_closed = 2.0 * pf.log2() * m0.alpha + 2.0 * (pf - 1.0) / pf * elems * 4.0 * m0.beta;
+        ensure_close(dense_walk, dense_closed, 1e-9 * dense_closed.max(1.0), "dense")?;
+
+        // Eq. 1 transfer vs walked allgather
+        let wire = costmodel::PLAIN_WIRE_BYTES;
+        let sparse_walk = allgather_time(&m, p, elems * d * wire);
+        let sparse_closed = pf.log2() * m.alpha + (pf - 1.0) * elems * d * wire * m.beta;
+        ensure_close(sparse_walk, sparse_closed, 1e-9 * sparse_closed.max(1.0), "sparse")?;
+        Ok(())
+    });
+}
+
+/// Cost model sanity: bandwidth ratio formula (the §5.5 "12.8%" point).
+#[test]
+fn prop_bandwidth_ratio_monotone_in_p_and_d() {
+    check(30, |g| {
+        let p = 1usize << g.size(1..8);
+        let d = g.f32(1e-4..0.01) as f64;
+        let r1 = costmodel::bandwidth_ratio(p, d, costmodel::PLAIN_WIRE_BYTES);
+        let r2 = costmodel::bandwidth_ratio(p * 2, d, costmodel::PLAIN_WIRE_BYTES);
+        let r3 = costmodel::bandwidth_ratio(p, d * 2.0, costmodel::PLAIN_WIRE_BYTES);
+        ensure(r2 > r1, "ratio must grow with p")?;
+        ensure(r3 > r1, "ratio must grow with density")?;
+        let rq = costmodel::bandwidth_ratio(p, d, costmodel::QUANT_WIRE_BYTES);
+        ensure_close(rq, r1 / 2.0, 1e-12, "quantization halves the ratio")?;
+        Ok(())
+    });
+}
+
+/// Quantization bound: dequantized error never exceeds the value spread.
+#[test]
+fn prop_quantization_error_bounded() {
+    check(30, |g| {
+        let k = g.size(1..400);
+        // single-signed values, as the §5.2.3 alternation guarantees
+        let vals: Vec<f32> = g.vec_normal(k, 1.0).iter().map(|v| v.abs() + 0.01).collect();
+        let s = SparseTensor::new((0..k as u32).collect(), vals.clone());
+        let q = QuantizedSet::from_sparse(&s);
+        let lo = vals.iter().cloned().fold(f32::MAX, f32::min);
+        let hi = vals.iter().cloned().fold(f32::MIN, f32::max);
+        ensure(q.mean >= lo - 1e-5 && q.mean <= hi + 1e-5, "mean outside range")?;
+        let d = q.dequantize();
+        ensure(d.len() == k, "dequantize length")?;
+        ensure(d.values.iter().all(|&v| (v - q.mean).abs() < 1e-7), "constant values")?;
+        Ok(())
+    });
+}
+
+/// Eq. 1 vs Eq. 2 crossover: sparse wins exactly below the crossover
+/// density returned by the solver.
+#[test]
+fn prop_crossover_density_is_a_boundary() {
+    check(25, |g| {
+        let m = Machine::muradin();
+        let p = 1usize << g.size(1..7);
+        let elems = g.size(100_000..50_000_000) as f64;
+        if let Some(dc) =
+            costmodel::crossover_density(&m, p, elems, 0.0, costmodel::PLAIN_WIRE_BYTES)
+        {
+            ensure(
+                costmodel::sparse_wins(&m, p, elems, dc * 0.5, 0.0, costmodel::PLAIN_WIRE_BYTES),
+                "below crossover must win",
+            )?;
+            ensure(
+                !costmodel::sparse_wins(&m, p, elems, dc * 1.5, 0.0, costmodel::PLAIN_WIRE_BYTES)
+                    || dc * 1.5 > 1.0,
+                "above crossover must lose",
+            )?;
+        }
+        Ok(())
+    });
+}
