@@ -29,6 +29,30 @@ pub trait Transport {
     }
 }
 
+/// References forward to the underlying transport, so generic code can
+/// take either an owned endpoint or a borrow.
+impl<T: Transport + ?Sized> Transport for &T {
+    fn rank(&self) -> usize {
+        (**self).rank()
+    }
+
+    fn world(&self) -> usize {
+        (**self).world()
+    }
+
+    fn send(&self, to: usize, msg: Vec<u32>) {
+        (**self).send(to, msg)
+    }
+
+    fn recv(&self, from: usize) -> Vec<u32> {
+        (**self).recv(from)
+    }
+
+    fn exchange(&self, peer: usize, msg: Vec<u32>) -> Vec<u32> {
+        (**self).exchange(peer, msg)
+    }
+}
+
 /// Traffic counters shared by all endpoints of a fabric (for tests and
 /// the bandwidth bench).
 #[derive(Default, Debug)]
@@ -178,6 +202,42 @@ mod tests {
         let a = fabric.take(0);
         a.send(0, vec![7]);
         assert_eq!(a.recv(0), vec![7]);
+    }
+
+    #[test]
+    fn exchange_with_self_returns_own_message() {
+        // collectives never self-exchange, but the Transport contract
+        // (buffered send) makes it well-defined: you get your bits back
+        let mut fabric = LocalFabric::new(3);
+        let t = fabric.take(1);
+        assert_eq!(t.exchange(1, vec![42, 7]), vec![42, 7]);
+    }
+
+    #[test]
+    fn multi_megabyte_message_intact() {
+        // 2M words = 8 MB: the seed's wire unit never exceeded a few KB,
+        // so guard the fabric against large-payload truncation
+        let n = 2 * 1024 * 1024usize;
+        let msg: Vec<u32> = (0..n as u32).map(|i| i.wrapping_mul(0x9E37_79B9)).collect();
+        let expect = msg.clone();
+        let mut fabric = LocalFabric::new(2);
+        let a = fabric.take(0);
+        let b = fabric.take(1);
+        let h = thread::spawn(move || b.recv(0));
+        a.send(1, msg);
+        assert_eq!(h.join().unwrap(), expect);
+    }
+
+    #[test]
+    fn borrowed_transport_is_a_transport() {
+        // generic code takes &T via the blanket impl
+        fn world_of<T: Transport>(t: T) -> usize {
+            t.world()
+        }
+        let mut fabric = LocalFabric::new(2);
+        let a = fabric.take(0);
+        assert_eq!(world_of(&a), 2);
+        assert_eq!(world_of(&&a), 2);
     }
 
     #[test]

@@ -16,13 +16,24 @@
 use super::quant::QuantizedSet;
 use crate::tensor::SparseTensor;
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum WireError {
-    #[error("message truncated: need {need} words, have {have}")]
     Truncated { need: usize, have: usize },
-    #[error("empty buffer")]
     Empty,
 }
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { need, have } => {
+                write!(f, "message truncated: need {need} words, have {have}")
+            }
+            WireError::Empty => write!(f, "empty buffer"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
 
 /// Words required to encode a plain message of k elements.
 pub fn plain_words(k: usize) -> usize {

@@ -13,6 +13,29 @@ use crate::optim::{LrSchedule, Optimizer, WarmupSchedule};
 use crate::simnet::iteration::Strategy;
 use crate::util::json::{self, Value};
 
+/// Which fabric carries the synchronization traffic (see DESIGN.md
+/// §Transports).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process channels between worker threads (`LocalFabric`); the
+    /// trainer owns every rank.
+    #[default]
+    Local,
+    /// TCP sockets between worker processes (`net::TcpTransport`); this
+    /// process runs the single rank in [`TrainConfig::rank`] and meets
+    /// the others at [`TrainConfig::rendezvous`].
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            TransportKind::Local => "local",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
 /// Warm-up flavor; resolved against the run's target density by
 /// [`TrainConfig::warmup_schedule`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -25,14 +48,35 @@ pub enum WarmupKind {
     Dgc,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("config io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("config parse: {0}")]
-    Parse(#[from] crate::util::json::ParseError),
-    #[error("config invalid: {0}")]
+    Io(std::io::Error),
+    Parse(crate::util::json::ParseError),
     Invalid(String),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Io(e) => write!(f, "config io: {e}"),
+            ConfigError::Parse(e) => write!(f, "config parse: {e}"),
+            ConfigError::Invalid(msg) => write!(f, "config invalid: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> Self {
+        ConfigError::Io(e)
+    }
+}
+
+impl From<crate::util::json::ParseError> for ConfigError {
+    fn from(e: crate::util::json::ParseError) -> Self {
+        ConfigError::Parse(e)
+    }
 }
 
 /// Full specification of one training run.
@@ -74,6 +118,13 @@ pub struct TrainConfig {
     /// Fuse small compressed layers into shared allgather buckets (§5.3);
     /// 0 disables fusion.
     pub fusion_cap_elems: usize,
+    /// Fabric carrying the synchronization traffic.
+    pub transport: TransportKind,
+    /// This process's rank (TCP transport only; `launch` sets it per
+    /// child).
+    pub rank: usize,
+    /// Rendezvous address rank 0 listens on (TCP transport only).
+    pub rendezvous: String,
 }
 
 impl Default for TrainConfig {
@@ -95,7 +146,18 @@ impl Default for TrainConfig {
             eval_every: 0,
             seed: 42,
             fusion_cap_elems: 0,
+            transport: TransportKind::Local,
+            rank: 0,
+            rendezvous: "127.0.0.1:29500".into(),
         }
+    }
+}
+
+fn parse_transport(s: &str) -> Result<TransportKind, ConfigError> {
+    match s {
+        "local" | "threads" => Ok(TransportKind::Local),
+        "tcp" | "net" => Ok(TransportKind::Tcp),
+        other => Err(ConfigError::Invalid(format!("unknown transport '{other}'"))),
     }
 }
 
@@ -200,6 +262,9 @@ impl TrainConfig {
             "eval_every" => self.eval_every = as_usize()?,
             "seed" => self.seed = as_usize()? as u64,
             "fusion_cap_elems" => self.fusion_cap_elems = as_usize()?,
+            "transport" => self.transport = parse_transport(as_str()?)?,
+            "rank" => self.rank = as_usize()?,
+            "rendezvous" => self.rendezvous = as_str()?.to_string(),
             other => return Err(ConfigError::Invalid(format!("unknown config key '{other}'"))),
         }
         Ok(())
@@ -252,6 +317,9 @@ impl TrainConfig {
             ("eval_every", json::num(self.eval_every as f64)),
             ("seed", json::num(self.seed as f64)),
             ("fusion_cap_elems", json::num(self.fusion_cap_elems as f64)),
+            ("transport", json::s(self.transport.label())),
+            ("rank", json::num(self.rank as f64)),
+            ("rendezvous", json::s(self.rendezvous.clone())),
         ])
     }
 
@@ -271,6 +339,17 @@ impl TrainConfig {
         }
         if self.thresholds.thsd1 > self.thresholds.thsd2 {
             return Err(ConfigError::Invalid("thsd1 > thsd2".into()));
+        }
+        if self.transport == TransportKind::Tcp {
+            if self.rank >= self.world {
+                return Err(ConfigError::Invalid(format!(
+                    "rank {} out of world {}",
+                    self.rank, self.world
+                )));
+            }
+            if self.rendezvous.is_empty() {
+                return Err(ConfigError::Invalid("tcp transport needs a rendezvous".into()));
+            }
         }
         Ok(())
     }
@@ -336,6 +415,27 @@ mod tests {
         cfg.world = 4;
         cfg.density = 0.0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn transport_knobs_apply_and_validate() {
+        let mut cfg = TrainConfig::default();
+        cfg.apply_overrides(&[
+            "transport=tcp".into(),
+            "rank=3".into(),
+            "rendezvous=127.0.0.1:4242".into(),
+        ])
+        .unwrap();
+        assert_eq!(cfg.transport, TransportKind::Tcp);
+        assert_eq!(cfg.rank, 3);
+        assert_eq!(cfg.rendezvous, "127.0.0.1:4242");
+        cfg.validate().unwrap();
+        cfg.rank = cfg.world;
+        assert!(cfg.validate().is_err(), "rank must stay below world");
+        cfg.rank = 0;
+        cfg.rendezvous.clear();
+        assert!(cfg.validate().is_err(), "tcp needs a rendezvous");
+        assert!(cfg.apply_overrides(&["transport=bogus".into()]).is_err());
     }
 
     #[test]

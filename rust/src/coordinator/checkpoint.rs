@@ -17,16 +17,31 @@ use std::path::Path;
 const MAGIC: &[u8; 4] = b"RSCK";
 const VERSION: u32 = 1;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CheckpointError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("not a redsync checkpoint (bad magic)")]
+    Io(std::io::Error),
     BadMagic,
-    #[error("unsupported checkpoint version {0}")]
     BadVersion(u32),
-    #[error("checkpoint corrupt: {0}")]
     Corrupt(String),
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "io: {e}"),
+            CheckpointError::BadMagic => write!(f, "not a redsync checkpoint (bad magic)"),
+            CheckpointError::BadVersion(v) => write!(f, "unsupported checkpoint version {v}"),
+            CheckpointError::Corrupt(msg) => write!(f, "checkpoint corrupt: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> Self {
+        CheckpointError::Io(e)
+    }
 }
 
 /// One layer's persisted state.

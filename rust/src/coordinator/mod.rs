@@ -15,23 +15,39 @@ pub mod worker;
 pub use checkpoint::{Checkpoint, LayerState};
 pub use metrics::{TrainReport, WorkerResult};
 
-use crate::collectives::LocalFabric;
+use crate::collectives::transport::TrafficStats;
+use crate::collectives::{allgather, LocalFabric, Transport};
 use crate::config::TrainConfig;
 use crate::models::schema::{Manifest, ModelSchema};
 use crate::util::timer::PhaseTimer;
 use std::thread;
 use std::time::Instant;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum TrainError {
-    #[error("unknown model '{0}' (run `make artifacts`?)")]
     UnknownModel(String),
-    #[error("config: {0}")]
-    Config(#[from] crate::config::ConfigError),
-    #[error("worker failed: {0}")]
+    Config(crate::config::ConfigError),
     Worker(String),
-    #[error("worker panicked")]
     Panic,
+}
+
+impl std::fmt::Display for TrainError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TrainError::UnknownModel(m) => write!(f, "unknown model '{m}' (run `make artifacts`?)"),
+            TrainError::Config(e) => write!(f, "config: {e}"),
+            TrainError::Worker(msg) => write!(f, "worker failed: {msg}"),
+            TrainError::Panic => write!(f, "worker panicked"),
+        }
+    }
+}
+
+impl std::error::Error for TrainError {}
+
+impl From<crate::config::ConfigError> for TrainError {
+    fn from(e: crate::config::ConfigError) -> Self {
+        TrainError::Config(e)
+    }
 }
 
 /// Data-parallel trainer: resolves the model schema, spawns the worker
@@ -66,7 +82,7 @@ impl Trainer {
                 .map(|t| {
                     let cfg = &self.cfg;
                     let schema = &self.schema;
-                    s.spawn(move || worker::run_worker(cfg, schema, t))
+                    s.spawn(move || worker::run_worker(cfg, schema, &t))
                 })
                 .collect();
             handles
@@ -101,6 +117,52 @@ impl Trainer {
             phases,
             bytes: stats.bytes(),
             messages: stats.message_count(),
+            wall_secs,
+            replicas_consistent,
+        })
+    }
+}
+
+impl Trainer {
+    /// Run *this process's* rank of a distributed job over an
+    /// already-connected transport (e.g. `net::TcpTransport`) — the
+    /// multi-process counterpart of [`Trainer::run`], which owns all
+    /// ranks as threads.
+    ///
+    /// After the worker loop the ranks allgather their parameter hashes,
+    /// so every process learns `replicas_consistent` — the same replica
+    /// drift check `run` performs centrally.  `stats` are this fabric's
+    /// traffic counters (per-process for TCP), if the caller has them.
+    pub fn run_rank<T: Transport>(
+        &self,
+        transport: &T,
+        stats: Option<&TrafficStats>,
+    ) -> Result<TrainReport, TrainError> {
+        let start = Instant::now();
+        let result = worker::run_worker(&self.cfg, &self.schema, transport)
+            .map_err(TrainError::Worker)?;
+        let wall_secs = start.elapsed().as_secs_f64();
+
+        let h = result.param_hash;
+        let hashes = allgather(transport, vec![(h & 0xFFFF_FFFF) as u32, (h >> 32) as u32]);
+        let replicas_consistent = hashes
+            .iter()
+            .all(|w| w.len() == 2 && (w[0] as u64 | (w[1] as u64) << 32) == h);
+
+        Ok(TrainReport {
+            model: self.cfg.model.clone(),
+            world: self.cfg.world,
+            steps: self.cfg.steps,
+            strategy: self.cfg.strategy.label(),
+            final_loss: result.final_loss,
+            final_eval: result.eval_curve.last().map(|&(_, e)| e),
+            loss_curve: result.loss_curve,
+            eval_curve: result.eval_curve,
+            union_density: result.union_density,
+            sent_density: result.sent_density,
+            phases: result.timer,
+            bytes: stats.map_or(0, |s| s.bytes()),
+            messages: stats.map_or(0, |s| s.message_count()),
             wall_secs,
             replicas_consistent,
         })

@@ -3,7 +3,7 @@
 //! RGC training loop of Algorithm 4.
 
 use super::metrics::{param_hash, phase, WorkerResult};
-use crate::collectives::{allgather, allreduce_mean, LocalTransport, Transport};
+use crate::collectives::{allgather, allreduce_mean, Transport};
 use crate::compression::message::{pack_plain, pack_quant, unpack_plain, unpack_quant};
 use crate::compression::{
     CompressorConfig, Method, QuantizedSet, ResidualState, SignAlternator,
@@ -89,12 +89,15 @@ impl DataSource {
 /// it disjoint from every training shard).
 const EVAL_STEP: usize = 0x7E0A;
 
-/// Run one worker to completion.  Called on its own thread by the
-/// [`super::Trainer`]; panics propagate to the join and become errors.
-pub fn run_worker(
+/// Run one worker to completion.  Generic over the fabric: in-process
+/// `LocalTransport` threads under [`super::Trainer::run`], a
+/// `net::TcpTransport` rank under [`super::Trainer::run_rank`].  Called
+/// on its own thread by the [`super::Trainer`]; panics propagate to the
+/// join and become errors.
+pub fn run_worker<T: Transport>(
     cfg: &TrainConfig,
     schema: &ModelSchema,
-    transport: LocalTransport,
+    transport: &T,
 ) -> Result<WorkerResult, String> {
     let rank = transport.rank();
     let world = transport.world();

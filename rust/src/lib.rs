@@ -6,7 +6,9 @@
 //!
 //! * **L3 (this crate)** — the distributed data-parallel coordinator:
 //!   residual gradient compression, sparse allgather synchronization,
-//!   cost-model-driven per-layer policy, worker orchestration.
+//!   cost-model-driven per-layer policy, worker orchestration — over an
+//!   in-process fabric (threads) or the [`net`] TCP fabric (one process
+//!   per rank, `redsync launch`).
 //! * **L2 (python/compile/model.py)** — jax train-step graphs, AOT-lowered
 //!   to HLO text under `artifacts/`.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the selection
@@ -25,6 +27,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod data;
 pub mod models;
+pub mod net;
 pub mod optim;
 pub mod ps;
 pub mod runtime;

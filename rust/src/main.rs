@@ -2,15 +2,17 @@
 //!
 //! Subcommands:
 //!   train       run a data-parallel training job (real execution)
+//!   launch      spawn a multi-process job over the TCP fabric
 //!   simulate    virtual-time scalability simulation (Figs. 7-10)
 //!   costmodel   evaluate the §5.5 analytic cost model (Eq. 1/2)
 //!   select      micro-benchmark the selection algorithms (Fig. 3)
 //!   info        list artifacts, models, machine presets
 
-use redsync::config::{preset, presets::preset_names};
+use redsync::config::{preset, presets::preset_names, TrainConfig, TransportKind};
 use redsync::coordinator::Trainer;
 use redsync::models::schema::Manifest;
 use redsync::models::zoo;
+use redsync::net::{free_loopback_addr, TcpOptions, TcpTransport};
 use redsync::simnet::iteration::{simulate_iteration, speedup, SimConfig, Strategy};
 use redsync::simnet::Machine;
 use redsync::util::argparse::Args;
@@ -21,6 +23,7 @@ fn main() {
     let argv: Vec<String> = std::env::args().collect();
     let code = match argv.get(1).map(String::as_str) {
         Some("train") => cmd_train(&argv[2..]),
+        Some("launch") => cmd_launch(&argv[2..]),
         Some("simulate") => cmd_simulate(&argv[2..]),
         Some("costmodel") => cmd_costmodel(&argv[2..]),
         Some("select") => cmd_select(&argv[2..]),
@@ -45,7 +48,8 @@ fn print_usage() {
 USAGE: redsync <subcommand> [flags]
 
 SUBCOMMANDS:
-  train      run a training job on the in-process fabric
+  train      run a training job (in-process fabric, or one TCP rank)
+  launch     spawn a multi-process training job over the TCP fabric
   simulate   virtual-time scalability simulation (paper Figs. 7-10)
   costmodel  evaluate the Eq. 1/2 analytic model for a layer size
   select     micro-benchmark selection algorithms (paper Fig. 3)
@@ -61,6 +65,10 @@ fn cmd_train(argv: &[String]) -> i32 {
         .opt("preset", "smoke", "named preset (see `redsync info`)")
         .opt("config", "", "JSON config file applied over the preset")
         .opt("set", "", "comma-separated key=value overrides")
+        .opt("transport", "", "fabric: local (threads) or tcp (this process = one rank)")
+        .opt("rank", "", "this process's rank (tcp transport)")
+        .opt("port", "", "loopback rendezvous port (shorthand for --rendezvous 127.0.0.1:PORT)")
+        .opt("rendezvous", "", "rendezvous address rank 0 listens on (tcp transport)")
         .flag("csv", "print a CSV row instead of the summary");
     let parsed = match args.parse(argv) {
         Ok(p) => p,
@@ -83,13 +91,22 @@ fn cmd_train(argv: &[String]) -> i32 {
             return 2;
         }
     }
+    let mut overrides: Vec<String> = Vec::new();
     if !parsed.get("set").is_empty() {
-        let overrides: Vec<String> =
-            parsed.get("set").split(',').map(str::to_string).collect();
-        if let Err(e) = cfg.apply_overrides(&overrides) {
-            eprintln!("{e}");
-            return 2;
+        overrides.extend(parsed.get("set").split(',').map(str::to_string));
+    }
+    // dedicated transport flags win over --set
+    for key in ["transport", "rank", "rendezvous"] {
+        if !parsed.get(key).is_empty() {
+            overrides.push(format!("{key}={}", parsed.get(key)));
         }
+    }
+    if !parsed.get("port").is_empty() && parsed.get("rendezvous").is_empty() {
+        overrides.push(format!("rendezvous=127.0.0.1:{}", parsed.get("port")));
+    }
+    if let Err(e) = cfg.apply_overrides(&overrides) {
+        eprintln!("{e}");
+        return 2;
     }
 
     let manifest = match Manifest::load(Manifest::default_dir()) {
@@ -99,28 +116,170 @@ fn cmd_train(argv: &[String]) -> i32 {
             return 1;
         }
     };
-    println!("config: {}", cfg.to_json().to_json());
-    let trainer = match Trainer::new(&manifest, cfg) {
+    match cfg.transport {
+        TransportKind::Local => {
+            println!("config: {}", cfg.to_json().to_json());
+            let trainer = match Trainer::new(&manifest, cfg) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 1;
+                }
+            };
+            match trainer.run() {
+                Ok(report) => {
+                    if parsed.get_flag("csv") {
+                        println!("{}", report.csv_row());
+                    } else {
+                        print!("{}", report.summary());
+                    }
+                    0
+                }
+                Err(e) => {
+                    eprintln!("training failed: {e}");
+                    1
+                }
+            }
+        }
+        TransportKind::Tcp => train_tcp_rank(&manifest, cfg, parsed.get_flag("csv")),
+    }
+}
+
+/// Run this process's single rank of a TCP job.
+fn train_tcp_rank(manifest: &Manifest, cfg: TrainConfig, csv: bool) -> i32 {
+    let rank = cfg.rank;
+    if let Err(e) = cfg.validate() {
+        eprintln!("{e}");
+        return 2;
+    }
+    if rank == 0 {
+        println!("config: {}", cfg.to_json().to_json());
+    }
+    let opts = TcpOptions::new(cfg.world, rank, cfg.rendezvous.clone());
+    let transport = match TcpTransport::connect(&opts) {
         Ok(t) => t,
         Err(e) => {
-            eprintln!("{e}");
+            eprintln!("rank {rank}: tcp fabric bootstrap failed: {e}");
             return 1;
         }
     };
-    match trainer.run() {
+    let stats = std::sync::Arc::clone(&transport.stats);
+    let trainer = match Trainer::new(manifest, cfg) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("rank {rank}: {e}");
+            return 1;
+        }
+    };
+    match trainer.run_rank(&transport, Some(&stats)) {
         Ok(report) => {
-            if parsed.get_flag("csv") {
-                println!("{}", report.csv_row());
+            if rank == 0 {
+                if csv {
+                    println!("{}", report.csv_row());
+                } else {
+                    print!("{}", report.summary());
+                }
             } else {
-                print!("{}", report.summary());
+                eprintln!(
+                    "rank {rank}: done ({} sent over tcp, replicas {})",
+                    fmt_bytes(report.bytes as usize),
+                    if report.replicas_consistent { "consistent" } else { "DRIFTED" }
+                );
             }
-            0
+            if report.replicas_consistent {
+                0
+            } else {
+                eprintln!("rank {rank}: replica drift detected");
+                1
+            }
         }
         Err(e) => {
-            eprintln!("training failed: {e}");
+            eprintln!("rank {rank}: training failed: {e}");
             1
         }
     }
+}
+
+/// Spawn one `redsync train` process per rank over the loopback TCP
+/// fabric and wait for the fleet.
+fn cmd_launch(argv: &[String]) -> i32 {
+    let args = Args::new("redsync launch", "spawn a multi-process TCP training job on this host")
+        .opt("world", "2", "number of worker processes (one rank each)")
+        .opt("port", "0", "rendezvous port on 127.0.0.1 (0 = pick a free one)")
+        .opt("preset", "smoke", "named preset forwarded to every rank")
+        .opt("config", "", "JSON config file forwarded to every rank")
+        .opt("set", "", "comma-separated key=value overrides forwarded to every rank")
+        .flag("csv", "rank 0 prints a CSV row instead of the summary");
+    let parsed = match args.parse(argv) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let world = parsed.usize("world");
+    if world == 0 {
+        eprintln!("--world must be >= 1");
+        return 2;
+    }
+    let rendezvous = match parsed.get("port") {
+        "" | "0" => free_loopback_addr(),
+        port => format!("127.0.0.1:{port}"),
+    };
+    let exe = match std::env::current_exe() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("cannot locate the redsync binary: {e}");
+            return 1;
+        }
+    };
+
+    eprintln!("launching {world} workers over tcp, rendezvous {rendezvous}");
+    let mut children = Vec::with_capacity(world);
+    for rank in 0..world {
+        let mut set = format!("world={world},transport=tcp,rank={rank},rendezvous={rendezvous}");
+        if !parsed.get("set").is_empty() {
+            set = format!("{},{set}", parsed.get("set"));
+        }
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("train").arg("--preset").arg(parsed.get("preset")).arg("--set").arg(&set);
+        if !parsed.get("config").is_empty() {
+            cmd.arg("--config").arg(parsed.get("config"));
+        }
+        if parsed.get_flag("csv") {
+            cmd.arg("--csv");
+        }
+        // rank 0 owns stdout (the report); the rest keep stderr for logs
+        if rank != 0 {
+            cmd.stdout(std::process::Stdio::null());
+        }
+        match cmd.spawn() {
+            Ok(child) => children.push((rank, child)),
+            Err(e) => {
+                eprintln!("failed to spawn rank {rank}: {e}");
+                for (_, mut c) in children {
+                    let _ = c.kill();
+                }
+                return 1;
+            }
+        }
+    }
+
+    let mut code = 0;
+    for (rank, mut child) in children {
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => {
+                eprintln!("rank {rank} exited with {status}");
+                code = 1;
+            }
+            Err(e) => {
+                eprintln!("rank {rank}: wait failed: {e}");
+                code = 1;
+            }
+        }
+    }
+    code
 }
 
 fn cmd_simulate(argv: &[String]) -> i32 {

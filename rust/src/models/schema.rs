@@ -7,14 +7,35 @@ use crate::util::rng::Pcg32;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SchemaError {
-    #[error("manifest io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("manifest parse: {0}")]
-    Parse(#[from] crate::util::json::ParseError),
-    #[error("manifest malformed: {0}")]
+    Io(std::io::Error),
+    Parse(crate::util::json::ParseError),
     Malformed(String),
+}
+
+impl std::fmt::Display for SchemaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SchemaError::Io(e) => write!(f, "manifest io: {e}"),
+            SchemaError::Parse(e) => write!(f, "manifest parse: {e}"),
+            SchemaError::Malformed(msg) => write!(f, "manifest malformed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SchemaError {}
+
+impl From<std::io::Error> for SchemaError {
+    fn from(e: std::io::Error) -> Self {
+        SchemaError::Io(e)
+    }
+}
+
+impl From<crate::util::json::ParseError> for SchemaError {
+    fn from(e: crate::util::json::ParseError) -> Self {
+        SchemaError::Parse(e)
+    }
 }
 
 /// Parameter initialization recipe (mirrors model.py's init specs).

@@ -1,0 +1,161 @@
+//! Length-prefixed framing for the TCP fabric.
+//!
+//! The collectives' message unit is `Vec<u32>` (see
+//! `collectives/transport.rs`); on the wire each message becomes one
+//! frame:
+//!
+//! ```text
+//! [len u32 LE][word_0 u32 LE] .. [word_{len-1} u32 LE]
+//! ```
+//!
+//! `len` counts payload *words*, so the wire overhead is exactly 4 bytes
+//! per message — the per-message α term the Eq. 1/2 cost model already
+//! charges.  Words travel little-endian regardless of host order, so a
+//! heterogeneous cluster still bit-matches the in-process fabric.
+
+use std::io::{self, Read, Write};
+
+/// Hard cap on a single frame's payload (words): 1 GiB.  A peer that
+/// announces more is corrupt (or hostile); failing fast beats a huge
+/// allocation.
+pub const MAX_FRAME_WORDS: usize = 1 << 28;
+
+/// Serialize one message into a frame's wire bytes.
+pub fn encode_frame(msg: &[u32]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(4 + msg.len() * 4);
+    buf.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+    for &w in msg {
+        buf.extend_from_slice(&w.to_le_bytes());
+    }
+    buf
+}
+
+/// The send-side counterpart of the read cap: an oversized message must
+/// fail here, loudly, not as a peer-side reject — which for
+/// > 2^32-word messages would also be a silent u32 length truncation
+/// that desynchronizes the stream.
+fn check_send_len(words: usize) -> io::Result<()> {
+    if words > MAX_FRAME_WORDS {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("message of {words} words exceeds frame cap {MAX_FRAME_WORDS}"),
+        ));
+    }
+    Ok(())
+}
+
+/// Write one frame (single `write_all`; callers wrap the stream in a
+/// `BufWriter` and flush per message).  Enforces the same
+/// [`MAX_FRAME_WORDS`] cap the read side does.
+pub fn write_frame<W: Write>(w: &mut W, msg: &[u32]) -> io::Result<()> {
+    check_send_len(msg.len())?;
+    w.write_all(&encode_frame(msg))
+}
+
+/// Read one frame.  Returns `Ok(None)` on a clean EOF *between* frames
+/// (the peer shut down its write half); a mid-frame EOF is an error.
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Vec<u32>>> {
+    let mut header = [0u8; 4];
+    // Distinguish "no more frames" from "truncated frame": only a zero-
+    // byte first read counts as a clean close.
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "eof inside frame header",
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    let words = u32::from_le_bytes(header) as usize;
+    if words > MAX_FRAME_WORDS {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame of {words} words exceeds cap {MAX_FRAME_WORDS}"),
+        ));
+    }
+    let mut payload = vec![0u8; words * 4];
+    r.read_exact(&mut payload)?;
+    let msg = payload
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Some(msg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_empty_and_data() {
+        for msg in [vec![], vec![7u32], vec![0, u32::MAX, 0xDEAD_BEEF]] {
+            let mut wire = Vec::new();
+            write_frame(&mut wire, &msg).unwrap();
+            assert_eq!(wire.len(), 4 + msg.len() * 4);
+            let got = read_frame(&mut Cursor::new(&wire)).unwrap().unwrap();
+            assert_eq!(got, msg);
+        }
+    }
+
+    #[test]
+    fn back_to_back_frames() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &[1, 2]).unwrap();
+        write_frame(&mut wire, &[3]).unwrap();
+        let mut cur = Cursor::new(&wire);
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), vec![1, 2]);
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), vec![3]);
+        assert!(read_frame(&mut cur).unwrap().is_none());
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        let mut cur = Cursor::new(&[] as &[u8]);
+        assert!(read_frame(&mut cur).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_header_is_error() {
+        let mut cur = Cursor::new(&[1u8, 0][..]);
+        assert!(read_frame(&mut cur).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_is_error() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &[1, 2, 3]).unwrap();
+        wire.truncate(wire.len() - 2);
+        assert!(read_frame(&mut Cursor::new(&wire)).is_err());
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let wire = (u32::MAX).to_le_bytes();
+        let err = read_frame(&mut Cursor::new(&wire[..])).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn oversized_send_rejected_before_the_wire() {
+        // (a MAX_FRAME_WORDS+1 buffer would need >1 GiB, so the length
+        // check is probed directly)
+        assert!(check_send_len(MAX_FRAME_WORDS).is_ok());
+        let err = check_send_len(MAX_FRAME_WORDS + 1).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+    }
+
+    #[test]
+    fn wire_is_little_endian() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &[0x0102_0304]).unwrap();
+        assert_eq!(wire, vec![1, 0, 0, 0, 0x04, 0x03, 0x02, 0x01]);
+    }
+}

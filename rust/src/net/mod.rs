@@ -1,0 +1,40 @@
+//! Real network transport: TCP sockets between worker *processes*.
+//!
+//! This is the third rung of the transport hierarchy (see DESIGN.md
+//! §Transports and `collectives/mod.rs`):
+//!
+//! * `collectives::LocalFabric` — in-process channels between threads;
+//!   real numerics, zero wire cost.  The default for tests and
+//!   single-host runs.
+//! * [`TcpTransport`] (here) — real sockets between processes, one per
+//!   rank, with length-prefixed framing ([`frame`]) and a rank-0
+//!   rendezvous bootstrap ([`tcp`]).  This is where the paper's
+//!   synchronization traffic actually crosses a network stack, so the
+//!   Eq. 1/2 bandwidth terms meet real wire behavior.
+//! * `simnet` — no data at all; virtual-time replay of layer profiles for
+//!   the 128-GPU scalability figures.
+//!
+//! Both real fabrics implement `collectives::Transport`, so every
+//! collective (`allgather`, `allreduce_*`) and the whole coordinator run
+//! unchanged over either; a loopback integration test
+//! (`tests/tcp_loopback.rs`) holds them bit-identical.
+//!
+//! Entry points: `redsync launch --world N` forks one worker process per
+//! rank and wires them up; `redsync train --set transport=tcp,rank=R`
+//! runs a single rank by hand (see `main.rs`).
+
+pub mod frame;
+pub mod tcp;
+
+pub use tcp::{TcpOptions, TcpTransport};
+
+/// Pick a free loopback `ip:port` by binding port 0 and releasing it.
+/// Small bind race window (the port could be reused before the caller
+/// binds), acceptable for tests and single-host launches; pass an
+/// explicit `--port` for anything else.
+pub fn free_loopback_addr() -> String {
+    let listener =
+        std::net::TcpListener::bind("127.0.0.1:0").expect("bind ephemeral loopback port");
+    let addr = listener.local_addr().expect("local addr");
+    format!("127.0.0.1:{}", addr.port())
+}

@@ -11,6 +11,15 @@ pub mod compress_ops;
 pub mod device_select;
 pub mod step;
 
+/// PJRT bindings, or the stub when the `xla` feature is off (the stub
+/// boots a client but refuses to load artifacts — see `xla_stub.rs`).
+#[cfg(not(feature = "xla"))]
+pub(crate) mod xla_stub;
+#[cfg(not(feature = "xla"))]
+pub(crate) use xla_stub as xla;
+#[cfg(feature = "xla")]
+pub(crate) use ::xla;
+
 pub use compress_ops::CompressOps;
 pub use device_select::{DeviceSelection, DeviceSelector};
 pub use step::StepRunner;
@@ -20,15 +29,26 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("xla: {0}")]
     Xla(String),
-    #[error("artifact not found: {0}")]
     MissingArtifact(PathBuf),
-    #[error("artifact output mismatch: expected {expected}, got {got}")]
     OutputArity { expected: usize, got: usize },
 }
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Xla(msg) => write!(f, "xla: {msg}"),
+            RuntimeError::MissingArtifact(p) => write!(f, "artifact not found: {}", p.display()),
+            RuntimeError::OutputArity { expected, got } => {
+                write!(f, "artifact output mismatch: expected {expected}, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
 
 impl From<xla::Error> for RuntimeError {
     fn from(e: xla::Error) -> Self {

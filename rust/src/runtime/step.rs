@@ -8,7 +8,7 @@
 //! * eval (lm): `fn(*params, tokens, targets) -> (loss[1],)`
 //! * eval (mlp): `fn(*params, x) -> (logits,)`
 
-use super::{Input, Result, Runtime, RuntimeError};
+use super::{xla, Input, Result, Runtime, RuntimeError};
 use crate::models::schema::ModelSchema;
 use std::rc::Rc;
 

@@ -1,0 +1,104 @@
+//! Stand-in for the `xla` PJRT bindings when the `xla` cargo feature is
+//! off (the default — the bindings need a local XLA toolchain that most
+//! build environments, including CI, do not have).
+//!
+//! The stub keeps the exact API surface `runtime/` touches so the crate
+//! compiles unchanged: a client boots (so `Runtime::new()` works and
+//! transport/compression/simulation tests run everywhere), but loading or
+//! executing an artifact reports a descriptive error instead of running
+//! the HLO.  Build with `--features xla` and a vendored `xla` crate for
+//! real PJRT execution.
+
+const DISABLED: &str =
+    "xla feature disabled: rebuild with `--features xla` and a vendored xla crate";
+
+/// Error type mirroring `xla::Error` (stringly, like the real bindings).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn disabled<T>() -> Result<T, Error> {
+    Err(Error(DISABLED.to_string()))
+}
+
+/// Host-side literal (stub: shape-less, value-less).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Ok(Literal)
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        disabled()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        disabled()
+    }
+}
+
+/// Parsed HLO module (stub: never constructible from text).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        disabled()
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-side buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        disabled()
+    }
+}
+
+/// Compiled executable handle (stub: `execute` always errors).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        disabled()
+    }
+}
+
+/// PJRT client; `Rc`-based in the real bindings, hence not `Send` there —
+/// the stub mirrors the per-thread ownership model but has no state.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu (xla feature disabled)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        disabled()
+    }
+}

@@ -4,18 +4,28 @@
 //! subcommands, with auto-generated `--help` text.
 
 use std::collections::BTreeMap;
+use std::fmt;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ArgError {
-    #[error("unknown option '{0}' (try --help)")]
     Unknown(String),
-    #[error("option '--{0}' expects a value")]
     MissingValue(String),
-    #[error("invalid value '{1}' for --{0}: {2}")]
     Invalid(String, String, String),
-    #[error("missing required option --{0}")]
     MissingRequired(String),
 }
+
+impl fmt::Display for ArgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArgError::Unknown(o) => write!(f, "unknown option '{o}' (try --help)"),
+            ArgError::MissingValue(o) => write!(f, "option '--{o}' expects a value"),
+            ArgError::Invalid(o, v, why) => write!(f, "invalid value '{v}' for --{o}: {why}"),
+            ArgError::MissingRequired(o) => write!(f, "missing required option --{o}"),
+        }
+    }
+}
+
+impl std::error::Error for ArgError {}
 
 struct Spec {
     name: String,

@@ -1,6 +1,6 @@
-//! Utility substrates built in-repo (the offline vendor set provides only
-//! `xla`/`anyhow`/`thiserror`): PRNG, JSON, CLI parsing, logging, timing
-//! and a mini property-test harness.
+//! Utility substrates built in-repo (the crate is zero-dependency; even
+//! the `xla` bindings are feature-gated behind a stub): PRNG, JSON, CLI
+//! parsing, logging, timing and a mini property-test harness.
 
 pub mod argparse;
 pub mod json;

@@ -1,0 +1,176 @@
+//! The TCP fabric against the in-process fabric: identical collectives,
+//! identical bits, identical traffic accounting.
+//!
+//! Every test runs one thread per rank (each thread owning a real
+//! `TcpTransport` over loopback sockets — the same topology `redsync
+//! launch` builds with processes) and, where it matters, replays the
+//! exact same collective over `LocalFabric` to hold the two fabrics
+//! bit-identical.  A watchdog turns would-be deadlocks into failures
+//! instead of hung test runs.
+
+use redsync::collectives::transport::TrafficStats;
+use redsync::collectives::{allgather, allreduce_mean, concat, LocalFabric, Transport};
+use redsync::net::{free_loopback_addr, TcpOptions, TcpTransport};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+/// Bootstrap a full TCP mesh on loopback; returned in rank order.
+fn tcp_fabric(world: usize) -> Vec<TcpTransport> {
+    let addr = free_loopback_addr();
+    let handles: Vec<_> = (0..world)
+        .map(|rank| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                TcpTransport::connect(&TcpOptions::new(world, rank, addr))
+                    .expect("tcp bootstrap")
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Run `f` once per rank on its own thread.  Panics (instead of hanging)
+/// if any rank is still blocked after 60s — the deadlock watchdog.
+fn run_ranks<T, F, R>(transports: Vec<T>, f: F) -> Vec<R>
+where
+    T: Transport + Send + 'static,
+    F: Fn(T) -> R + Send + Sync + 'static,
+    R: Send + 'static,
+{
+    let f = Arc::new(f);
+    let (done_tx, done_rx) = channel();
+    let handles: Vec<_> = transports
+        .into_iter()
+        .map(|t| {
+            let f = Arc::clone(&f);
+            let done = done_tx.clone();
+            thread::spawn(move || {
+                let r = f(t);
+                let _ = done.send(());
+                r
+            })
+        })
+        .collect();
+    drop(done_tx);
+    for _ in 0..handles.len() {
+        done_rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("a rank did not finish within 60s (deadlock or crash)");
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// One round of sparse + dense synchronization, the §5.3/§2.2 pair the
+/// coordinator drives every step.  Returns the raw words and result bits
+/// so comparisons are bit-exact, never float-approximate.
+fn sync_round<T: Transport>(t: &T) -> (Vec<u32>, Vec<u32>) {
+    // variable-length allgather: rank r contributes r + 3 words
+    let msg: Vec<u32> = (0..t.rank() + 3).map(|i| (t.rank() * 1000 + i) as u32).collect();
+    let gathered = concat(allgather(t, msg));
+    // dense allreduce over f32s with rank-dependent values
+    let mut x: Vec<f32> =
+        (0..257).map(|i| (t.rank() + 1) as f32 * (i as f32 + 0.5) * 0.1).collect();
+    allreduce_mean(t, &mut x);
+    (gathered, x.iter().map(|v| v.to_bits()).collect())
+}
+
+#[test]
+fn tcp_collectives_bitmatch_local_fabric() {
+    let world = 4;
+
+    let mut local = LocalFabric::new(world);
+    let local_stats = Arc::clone(&local.stats);
+    let local_results = run_ranks(local.take_all(), |t| sync_round(&t));
+
+    let tcp = tcp_fabric(world);
+    let tcp_stats: Vec<Arc<TrafficStats>> = tcp.iter().map(|t| Arc::clone(&t.stats)).collect();
+    let tcp_results = run_ranks(tcp, |t| sync_round(&t));
+
+    for (rank, (l, t)) in local_results.iter().zip(&tcp_results).enumerate() {
+        assert_eq!(l.0, t.0, "rank {rank}: allgather words differ across fabrics");
+        assert_eq!(l.1, t.1, "rank {rank}: allreduce result bits differ across fabrics");
+    }
+
+    // identical collectives move identical payloads: the per-process TCP
+    // counters must sum to exactly the shared LocalFabric counter
+    let tcp_bytes: u64 = tcp_stats.iter().map(|s| s.bytes()).sum();
+    let tcp_msgs: u64 = tcp_stats.iter().map(|s| s.message_count()).sum();
+    assert_eq!(tcp_bytes, local_stats.bytes(), "fabric byte accounting differs");
+    assert_eq!(tcp_msgs, local_stats.message_count(), "fabric message accounting differs");
+}
+
+#[test]
+fn tcp_allgather_traffic_matches_eq1_bandwidth_term() {
+    // Same exact accounting as the LocalFabric test in collectives/mod.rs:
+    // payload (p-1)·m per rank — Eq. 1's bandwidth term — plus the
+    // deterministic recursive-doubling block headers.
+    let world = 4;
+    let msg_words = 50usize;
+    let tcp = tcp_fabric(world);
+    let stats: Vec<Arc<TrafficStats>> = tcp.iter().map(|t| Arc::clone(&t.stats)).collect();
+    run_ranks(tcp, move |t| {
+        allgather(&t, vec![0u32; msg_words]);
+    });
+    let total: u64 = stats.iter().map(|s| s.bytes() / 4).sum();
+    let payload = (world * (world - 1) * msg_words) as u64;
+    let lg = world.trailing_zeros() as u64;
+    let headers = world as u64 * (lg + 2 * (world as u64 - 1));
+    assert_eq!(total, payload + headers);
+}
+
+#[test]
+fn multi_megabyte_exchange_over_tcp() {
+    // 1.5M words = 6 MB each way: far beyond one socket buffer, so this
+    // exercises framing across partial reads/writes and the writer
+    // thread's role in keeping symmetric exchange deadlock-free.
+    let n = 1_500_000usize;
+    let tcp = tcp_fabric(2);
+    let results = run_ranks(tcp, move |t| {
+        let peer = 1 - t.rank();
+        let msg: Vec<u32> =
+            (0..n as u32).map(|i| i.wrapping_mul(0x9E37_79B9) ^ t.rank() as u32).collect();
+        t.exchange(peer, msg)
+    });
+    for (rank, got) in results.iter().enumerate() {
+        let peer = (1 - rank) as u32;
+        assert_eq!(got.len(), n);
+        for (i, &w) in got.iter().enumerate() {
+            assert_eq!(w, (i as u32).wrapping_mul(0x9E37_79B9) ^ peer, "word {i} corrupted");
+        }
+    }
+}
+
+#[test]
+fn exchange_with_self_peer_over_tcp() {
+    let tcp = tcp_fabric(3);
+    run_ranks(tcp, |t| {
+        let rank = t.rank() as u32;
+        assert_eq!(t.exchange(t.rank(), vec![rank, !rank]), vec![rank, !rank]);
+    });
+}
+
+#[test]
+fn all_pairs_symmetric_exchange_is_deadlock_free() {
+    // Every rank exchanges a non-trivial payload with every other rank in
+    // ascending-peer order.  With blocking sends this ordering deadlocks
+    // (all ranks first target rank 0... which targets rank 1); the
+    // buffered-send contract of both fabrics must absorb it.  The
+    // run_ranks watchdog converts a hang into a failure.
+    let world = 4;
+    let words = 100_000usize;
+    let body = move |t: &dyn Transport| {
+        for peer in 0..4usize {
+            if peer == t.rank() {
+                continue;
+            }
+            let got = t.exchange(peer, vec![t.rank() as u32; words]);
+            assert_eq!(got, vec![peer as u32; words]);
+        }
+    };
+    let mut local = LocalFabric::new(world);
+    run_ranks(local.take_all(), move |t| body(&t));
+    let tcp = tcp_fabric(world);
+    run_ranks(tcp, move |t| body(&t));
+}
