@@ -10,16 +10,34 @@
 //! ```sh
 //! make artifacts && cargo bench --bench e2e_throughput
 //! ```
+//!
+//! `--pipeline-smoke [OUT.json]` runs the artifact-free engine A/B
+//! instead: the same synthetic multi-bucket sync schedule driven through
+//! the `Sequential` and `Pipelined` engines over real loopback TCP,
+//! asserting bit-identical parameters and reporting the wall-clock
+//! ratio.  CI runs this and uploads `BENCH_pipeline.json`.
 
+use redsync::collectives::mux::TagMux;
+use redsync::collectives::Transport;
+use redsync::compression::{Accumulation, CompressorConfig, Method};
 use redsync::config::{preset, TrainConfig};
-use redsync::coordinator::metrics::phase;
+use redsync::coordinator::metrics::{param_hash, phase};
 use redsync::coordinator::train;
+use redsync::net::{free_loopback_addr, TcpOptions, TcpTransport};
+use redsync::pipeline::{
+    build_buckets, BucketDone, LayerSpec, Pipelined, Sequential, SyncEngine, BUCKET_TAG_BASE,
+};
 use redsync::simnet::iteration::Strategy;
+use redsync::util::rng::Pcg32;
+use redsync::util::timer::PhaseTimer;
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
 
 fn bench_model(model: &str, world: usize, steps: usize) {
     println!("\n## {model} x{world}, {steps} steps");
     println!(
-        "{:>10} {:>10} {:>12} {:>12} {:>9} {:>9} {:>9}",
+        "{:>12} {:>10} {:>12} {:>12} {:>9} {:>9} {:>9}",
         "strategy", "steps/s", "traffic", "KB/step/rk", "compute%", "comm%", "sync%"
     );
     let mut base = TrainConfig {
@@ -32,8 +50,20 @@ fn bench_model(model: &str, world: usize, steps: usize) {
         eval_every: 0,
         ..preset("smoke").unwrap()
     };
-    for s in [Strategy::Dense, Strategy::Rgc, Strategy::QuantRgc] {
+    // dense / RGC / quant-RGC on the sequential engine, then RGC again on
+    // the pipelined engine (fused buckets so there is something to
+    // overlap) — the e2e counterpart of the engine A/B below
+    let runs: [(&str, Strategy, bool); 4] = [
+        ("baseline", Strategy::Dense, false),
+        ("RGC", Strategy::Rgc, false),
+        ("quant-RGC", Strategy::QuantRgc, false),
+        ("RGC+pipe", Strategy::Rgc, true),
+    ];
+    for (label, s, pipeline) in runs {
         base.strategy = s;
+        base.pipeline = pipeline;
+        base.inflight = 4;
+        base.fusion_cap_elems = if pipeline { 16 * 1024 } else { base.fusion_cap_elems };
         let r = train(base.clone()).expect("run");
         assert!(r.replicas_consistent);
         let comm = r.phase_fraction(phase::COMM_DENSE) + r.phase_fraction(phase::COMM_SPARSE);
@@ -43,8 +73,8 @@ fn bench_model(model: &str, world: usize, steps: usize) {
             + r.phase_fraction(phase::PACK)
             + r.phase_fraction(phase::UNPACK);
         println!(
-            "{:>10} {:>10.2} {:>12} {:>12.1} {:>8.1}% {:>8.1}% {:>8.1}%",
-            s.label(),
+            "{:>12} {:>10.2} {:>12} {:>12.1} {:>8.1}% {:>8.1}% {:>8.1}%",
+            label,
             steps as f64 / r.wall_secs,
             redsync::util::fmt_bytes(r.bytes as usize),
             r.bytes_per_step_per_rank() / 1024.0,
@@ -55,13 +85,164 @@ fn bench_model(model: &str, world: usize, steps: usize) {
     }
 }
 
+// ---------------------------------------------------------------------
+// Engine A/B over loopback TCP (no artifacts needed)
+// ---------------------------------------------------------------------
+
+/// Synthetic model for the engine A/B: enough distinct buckets that the
+/// pipelined engine has work to overlap.
+const SMOKE_SIZES: &[usize] = &[48_000, 16_000, 16_000, 40_000, 24_000, 8_000, 32_000, 20_000];
+const SMOKE_FUSION_CAP: usize = 50_000;
+const SMOKE_WORLD: usize = 4;
+const SMOKE_STEPS: usize = 30;
+const SMOKE_DENSITY: f64 = 0.01;
+const SMOKE_INFLIGHT: usize = 4;
+
+fn smoke_specs() -> Vec<LayerSpec> {
+    SMOKE_SIZES
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| LayerSpec {
+            li: i,
+            n,
+            method: Method::TrimmedTopk,
+            quantize: i % 2 == 1,
+        })
+        .collect()
+}
+
+fn smoke_acc() -> Accumulation {
+    Accumulation::Momentum { momentum: 0.9 }
+}
+
+fn smoke_grad(rank: usize, step: usize, li: usize, n: usize) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(((rank as u64) << 32) ^ ((step as u64) << 8) ^ li as u64);
+    let mut g = vec![0f32; n];
+    rng.fill_normal(&mut g, 1.0);
+    g
+}
+
+fn smoke_steps(engine: &mut dyn SyncEngine, rank: usize, world: usize) -> u64 {
+    let mut params: Vec<Vec<f32>> = SMOKE_SIZES
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| {
+            let mut rng = Pcg32::seeded(0xD0 ^ i as u64);
+            let mut p = vec![0f32; n];
+            rng.fill_normal(&mut p, 0.5);
+            p
+        })
+        .collect();
+    let scale = -0.05 / world as f32;
+    let mut timer = PhaseTimer::new();
+    for step in 0..SMOKE_STEPS {
+        let grads: Vec<Vec<f32>> =
+            SMOKE_SIZES.iter().enumerate().map(|(i, &n)| smoke_grad(rank, step, i, n)).collect();
+        engine
+            .sync_step(&grads, SMOKE_DENSITY, &mut timer, &mut |done: BucketDone| {
+                done.apply_to(&mut params, scale)
+            })
+            .expect("sync step");
+    }
+    param_hash(&params)
+}
+
+fn tcp_fabric(world: usize) -> Vec<TcpTransport> {
+    let addr = free_loopback_addr();
+    let handles: Vec<_> = (0..world)
+        .map(|rank| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                TcpTransport::connect(&TcpOptions::new(world, rank, addr)).expect("tcp bootstrap")
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Run one engine flavor on every rank over a fresh loopback TCP mesh;
+/// returns (wall seconds, per-rank param hashes).
+fn smoke_run(pipelined: bool) -> (f64, Vec<u64>) {
+    let cc = CompressorConfig { density: SMOKE_DENSITY, ..Default::default() };
+    let acc = smoke_acc();
+    let transports = tcp_fabric(SMOKE_WORLD);
+    let start = Instant::now();
+    let handles: Vec<_> = transports
+        .into_iter()
+        .map(|t| {
+            thread::spawn(move || {
+                let (rank, world) = (t.rank(), t.world());
+                let buckets = build_buckets(&smoke_specs(), SMOKE_FUSION_CAP, acc);
+                if pipelined {
+                    let n = buckets.len() as u32;
+                    let mux = Arc::new(TagMux::new(t, BUCKET_TAG_BASE + n));
+                    let mut engine = Pipelined::new(mux, buckets, SMOKE_INFLIGHT, cc);
+                    smoke_steps(&mut engine, rank, world)
+                } else {
+                    let mut engine = Sequential::new(&t, None, buckets, cc);
+                    smoke_steps(&mut engine, rank, world)
+                }
+            })
+        })
+        .collect();
+    let hashes: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    (start.elapsed().as_secs_f64(), hashes)
+}
+
+/// The acceptance A/B: Pipelined must beat Sequential wall-clock on a
+/// multi-bucket model over loopback TCP while staying bit-identical.
+fn pipeline_smoke(json_path: Option<&str>) {
+    let n_buckets = build_buckets(&smoke_specs(), SMOKE_FUSION_CAP, smoke_acc()).len();
+    println!(
+        "# engine A/B: {} ranks x {} steps, {} layers -> {} fused buckets, density {}, inflight {}",
+        SMOKE_WORLD,
+        SMOKE_STEPS,
+        SMOKE_SIZES.len(),
+        n_buckets,
+        SMOKE_DENSITY,
+        SMOKE_INFLIGHT
+    );
+    // warm-up run to populate page cache / thread stacks fairly
+    let _ = smoke_run(false);
+    let (seq_secs, seq_hashes) = smoke_run(false);
+    let (pipe_secs, pipe_hashes) = smoke_run(true);
+
+    let consistent = seq_hashes.iter().all(|&h| h == seq_hashes[0])
+        && pipe_hashes.iter().all(|&h| h == pipe_hashes[0]);
+    let bit_identical = consistent && seq_hashes[0] == pipe_hashes[0];
+    let speedup = seq_secs / pipe_secs;
+    println!("{:>12} {:>10} {:>10}", "engine", "wall(s)", "steps/s");
+    println!("{:>12} {:>10.3} {:>10.2}", "sequential", seq_secs, SMOKE_STEPS as f64 / seq_secs);
+    println!("{:>12} {:>10.3} {:>10.2}", "pipelined", pipe_secs, SMOKE_STEPS as f64 / pipe_secs);
+    println!("pipelined/sequential speedup: {speedup:.2}x, bit_identical: {bit_identical}");
+    assert!(bit_identical, "engines must stay bit-identical (see tests/pipeline.rs)");
+
+    let json = format!(
+        "{{\"bench\":\"pipeline_smoke\",\"world\":{SMOKE_WORLD},\"steps\":{SMOKE_STEPS},\
+         \"buckets\":{n_buckets},\"inflight\":{SMOKE_INFLIGHT},\
+         \"sequential_secs\":{seq_secs:.6},\"pipelined_secs\":{pipe_secs:.6},\
+         \"speedup\":{speedup:.4},\"bit_identical\":{bit_identical}}}",
+    );
+    if let Some(path) = json_path {
+        std::fs::write(path, format!("{json}\n")).expect("write bench json");
+        println!("wrote {path}");
+    }
+    println!("{json}");
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(pos) = args.iter().position(|a| a == "--pipeline-smoke") {
+        pipeline_smoke(args.get(pos + 1).map(String::as_str));
+        return;
+    }
     if redsync::models::schema::Manifest::load(
         redsync::models::schema::Manifest::default_dir(),
     )
     .is_err()
     {
         eprintln!("artifacts not built; run `make artifacts` first");
+        eprintln!("(the artifact-free engine A/B is available via --pipeline-smoke)");
         std::process::exit(1);
     }
     bench_model("lm_tiny", 2, 40);

@@ -6,6 +6,8 @@
 //! * [`allgather`] — recursive doubling + ring, variable-length blocks
 //!   (sparse synchronization, Eq. 1 schedule)
 //! * [`fusion`]    — tensor fusion for small layers (§5.3)
+//! * [`mux`]       — tag-multiplexed logical channels over one endpoint,
+//!   so the pipelined sync engine can run bucket collectives concurrently
 //!
 //! ## Transport hierarchy
 //!
@@ -28,12 +30,14 @@
 pub mod allgather;
 pub mod allreduce;
 pub mod fusion;
+pub mod mux;
 pub mod transport;
 
 pub use allgather::{allgather, concat};
 pub use allreduce::{allreduce_mean, allreduce_sum};
 pub use fusion::FusionPlan;
-pub use transport::{LocalFabric, LocalTransport, Transport};
+pub use mux::{TagChannel, TagMux};
+pub use transport::{LocalFabric, LocalTransport, Transport, TransportError};
 
 #[cfg(test)]
 mod tests {

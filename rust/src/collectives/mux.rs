@@ -1,0 +1,296 @@
+//! Tag-multiplexed logical channels over one [`Transport`] endpoint.
+//!
+//! The pipelined sync engine (`crate::pipeline`) runs several bucket
+//! collectives *concurrently* over a single fabric endpoint.  The base
+//! `Transport` demultiplexes inbound traffic by peer only, so two
+//! in-flight collectives would steal each other's messages.  [`TagMux`]
+//! fixes that with the MPI tag-matching discipline over ordered streams:
+//! every outbound message gets a trailing *tag* word naming its logical
+//! channel (trailing, not leading, so tagging is an amortized-O(1)
+//! `push` and untagging an O(1) `pop` instead of a whole-message copy),
+//! and inbound messages are routed into per-(peer, tag) FIFO queues.
+//! Each [`TagChannel`] then behaves exactly like a private `Transport`,
+//! so the collectives run over it unchanged.
+//!
+//! ## Why frames never interleave
+//!
+//! Both real fabrics send each message atomically — one mpsc element
+//! in-process, one length-prefixed frame written by the peer's single
+//! writer thread over TCP (`net::tcp`) — so concurrent tagged senders
+//! interleave whole messages, never words inside one.  The tag word is
+//! all the demux needs.
+//!
+//! ## Why tags may be reused across steps
+//!
+//! Per-(src, dst, tag) order is preserved end-to-end: the underlying
+//! stream is ordered per peer, and routing appends to FIFO queues.  A
+//! bucket that reuses its tag next step enqueues strictly *behind* any
+//! of its still-undrained messages from this step, so cross-step
+//! confusion is impossible — the argument that makes the engine's
+//! bounded in-flight window safe without a per-step epoch in the wire
+//! format.
+//!
+//! ## Blocking discipline
+//!
+//! `recv` on a channel locks that peer's router and drains the underlying
+//! stream, parking other tags' messages in their queues.  Another thread
+//! waiting on a different tag of the same peer blocks on the router lock
+//! until the first receiver gets its message; progress is guaranteed
+//! because every parked message was already sent (sends never block) and
+//! collectives consume exactly what they are sent.
+
+use super::transport::{Transport, TransportError};
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+/// Demultiplexer wrapping one fabric endpoint into `n_tags` logical
+/// channels.  Build once per endpoint, share via `Arc`, and mint
+/// channels with [`TagChannel::new`].
+///
+/// While a mux is live, *all* traffic on the endpoint must flow through
+/// its channels: a raw `recv` on the inner transport could steal a tagged
+/// message, and a raw `send` would arrive without a tag (a clean error on
+/// the receiving mux, but an error nonetheless).
+pub struct TagMux<T: Transport> {
+    inner: T,
+    n_tags: u32,
+    /// pending[peer][tag]: messages received for a tag no channel was
+    /// draining at the time.
+    pending: Vec<Mutex<Vec<VecDeque<Vec<u32>>>>>,
+}
+
+impl<T: Transport> TagMux<T> {
+    /// Wrap `inner`, reserving tags `0..n_tags`.
+    pub fn new(inner: T, n_tags: u32) -> TagMux<T> {
+        assert!(n_tags >= 1, "a mux needs at least one channel");
+        let world = inner.world();
+        let pending = (0..world)
+            .map(|_| Mutex::new((0..n_tags as usize).map(|_| VecDeque::new()).collect()))
+            .collect();
+        TagMux { inner, n_tags, pending }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    pub fn world(&self) -> usize {
+        self.inner.world()
+    }
+
+    pub fn n_tags(&self) -> u32 {
+        self.n_tags
+    }
+
+    fn send_tagged(&self, to: usize, tag: u32, mut msg: Vec<u32>) {
+        debug_assert!(tag < self.n_tags);
+        msg.push(tag);
+        self.inner.send(to, msg);
+    }
+
+    /// Blocking receive on one (peer, tag) channel.  The calling thread
+    /// drains the underlying stream while it waits, parking messages for
+    /// other tags in their FIFO queues.
+    fn recv_tagged(&self, from: usize, tag: u32) -> Result<Vec<u32>, TransportError> {
+        debug_assert!(tag < self.n_tags);
+        let mut router = self.pending[from].lock().unwrap();
+        if let Some(msg) = router[tag as usize].pop_front() {
+            return Ok(msg);
+        }
+        loop {
+            let mut raw = self.inner.recv_checked(from)?;
+            let Some(t) = raw.pop() else {
+                return Err(TransportError {
+                    peer: from,
+                    reason: "untagged (empty) message on a multiplexed fabric".into(),
+                });
+            };
+            if t >= self.n_tags {
+                return Err(TransportError {
+                    peer: from,
+                    reason: format!(
+                        "message tagged {t} outside the fabric's {} channels",
+                        self.n_tags
+                    ),
+                });
+            }
+            if t == tag {
+                return Ok(raw);
+            }
+            router[t as usize].push_back(raw);
+        }
+    }
+}
+
+/// One logical channel of a [`TagMux`] — a full [`Transport`], safe to
+/// move to (or clone into) any thread.
+pub struct TagChannel<T: Transport> {
+    mux: Arc<TagMux<T>>,
+    tag: u32,
+}
+
+impl<T: Transport> TagChannel<T> {
+    pub fn new(mux: Arc<TagMux<T>>, tag: u32) -> TagChannel<T> {
+        assert!(tag < mux.n_tags, "tag {tag} outside the mux's {} channels", mux.n_tags);
+        TagChannel { mux, tag }
+    }
+
+    pub fn tag(&self) -> u32 {
+        self.tag
+    }
+}
+
+impl<T: Transport> Clone for TagChannel<T> {
+    fn clone(&self) -> Self {
+        TagChannel { mux: Arc::clone(&self.mux), tag: self.tag }
+    }
+}
+
+impl<T: Transport> Transport for TagChannel<T> {
+    fn rank(&self) -> usize {
+        self.mux.inner.rank()
+    }
+
+    fn world(&self) -> usize {
+        self.mux.inner.world()
+    }
+
+    fn send(&self, to: usize, msg: Vec<u32>) {
+        self.mux.send_tagged(to, self.tag, msg)
+    }
+
+    fn recv_checked(&self, from: usize) -> Result<Vec<u32>, TransportError> {
+        self.mux.recv_tagged(from, self.tag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::allgather;
+    use crate::collectives::transport::LocalFabric;
+    use std::thread;
+
+    type LocalMux = Arc<TagMux<crate::collectives::LocalTransport>>;
+
+    fn mux_pair(n_tags: u32) -> (LocalMux, LocalMux) {
+        let mut fabric = LocalFabric::new(2);
+        let a = Arc::new(TagMux::new(fabric.take(0), n_tags));
+        let b = Arc::new(TagMux::new(fabric.take(1), n_tags));
+        (a, b)
+    }
+
+    #[test]
+    fn tags_route_to_their_channels() {
+        let (a, b) = mux_pair(3);
+        let a0 = TagChannel::new(Arc::clone(&a), 0);
+        let a2 = TagChannel::new(Arc::clone(&a), 2);
+        let b0 = TagChannel::new(Arc::clone(&b), 0);
+        let b2 = TagChannel::new(Arc::clone(&b), 2);
+        // rank 1 sends tag 2 first, then tag 0: the tag-0 receiver must
+        // still get its own message while parking the tag-2 one
+        b2.send(0, vec![22]);
+        b0.send(0, vec![10]);
+        assert_eq!(a0.recv(1), vec![10]);
+        assert_eq!(a2.recv(1), vec![22]);
+        // and the reverse direction
+        a0.send(1, vec![7]);
+        assert_eq!(b0.recv(0), vec![7]);
+        drop((b2, a2));
+    }
+
+    #[test]
+    fn per_tag_order_is_fifo() {
+        let (a, b) = mux_pair(2);
+        let a1 = TagChannel::new(Arc::clone(&a), 1);
+        let b1 = TagChannel::new(Arc::clone(&b), 1);
+        let b0 = TagChannel::new(Arc::clone(&b), 0);
+        for i in 0..50u32 {
+            b1.send(0, vec![i]);
+            b0.send(0, vec![1000 + i]); // interleaved noise on tag 0
+        }
+        for i in 0..50u32 {
+            assert_eq!(a1.recv(1), vec![i]);
+        }
+        // the parked tag-0 messages are intact and ordered
+        let a0 = TagChannel::new(Arc::clone(&a), 0);
+        for i in 0..50u32 {
+            assert_eq!(a0.recv(1), vec![1000 + i]);
+        }
+    }
+
+    #[test]
+    fn untagged_and_out_of_range_messages_are_clean_errors() {
+        let mut fabric = LocalFabric::new(2);
+        let a = Arc::new(TagMux::new(fabric.take(0), 2));
+        let raw_b = fabric.take(1);
+        let chan = TagChannel::new(Arc::clone(&a), 0);
+        raw_b.send(0, vec![]); // no tag word at all
+        let err = chan.recv_checked(1).unwrap_err();
+        assert!(err.reason.contains("untagged"), "{err}");
+        raw_b.send(0, vec![1, 2, 9]); // trailing tag 9 with only 2 channels
+        let err = chan.recv_checked(1).unwrap_err();
+        assert!(err.reason.contains("outside"), "{err}");
+    }
+
+    #[test]
+    fn self_channel_roundtrips_through_the_mux() {
+        let mut fabric = LocalFabric::new(1);
+        let m = Arc::new(TagMux::new(fabric.take(0), 2));
+        let c1 = TagChannel::new(Arc::clone(&m), 1);
+        c1.send(0, vec![5, 6]);
+        assert_eq!(c1.recv(0), vec![5, 6]);
+    }
+
+    #[test]
+    fn concurrent_allgathers_on_different_tags_do_not_cross() {
+        // 4 ranks, each running two allgathers at once from two threads —
+        // the exact sharing pattern of the pipelined engine's comm pool
+        let world = 4;
+        let mut fabric = LocalFabric::new(world);
+        let handles: Vec<_> = fabric
+            .take_all()
+            .into_iter()
+            .map(|t| {
+                thread::spawn(move || {
+                    let rank = t.rank();
+                    let mux = Arc::new(TagMux::new(t, 2));
+                    let c0 = TagChannel::new(Arc::clone(&mux), 0);
+                    let c1 = TagChannel::new(Arc::clone(&mux), 1);
+                    let h = thread::spawn(move || allgather(&c1, vec![rank as u32; 3]));
+                    let got0 = allgather(&c0, vec![100 + rank as u32]);
+                    (got0, h.join().unwrap())
+                })
+            })
+            .collect();
+        for h in handles {
+            let (got0, got1) = h.join().unwrap();
+            for r in 0..world {
+                assert_eq!(got0[r], vec![100 + r as u32]);
+                assert_eq!(got1[r], vec![r as u32; 3]);
+            }
+        }
+    }
+
+    #[test]
+    fn tag_word_is_counted_as_traffic() {
+        // the mux's 1-word tag is real wire overhead and must show up in
+        // the fabric's byte accounting (the Eq. 1 audit relies on this)
+        let mut fabric = LocalFabric::new(2);
+        let stats = Arc::clone(&fabric.stats);
+        let a = Arc::new(TagMux::new(fabric.take(0), 1));
+        let b = fabric.take(1);
+        let c = TagChannel::new(Arc::clone(&a), 0);
+        c.send(1, vec![1, 2, 3]);
+        assert_eq!(b.recv(0).len(), 4, "tag word + 3 payload words");
+        assert_eq!(stats.words.load(std::sync::atomic::Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the mux's")]
+    fn channel_tag_must_be_in_range() {
+        let mut fabric = LocalFabric::new(1);
+        let m = Arc::new(TagMux::new(fabric.take(0), 2));
+        let _ = TagChannel::new(m, 2);
+    }
+}

@@ -8,10 +8,36 @@
 //! The message unit is `Vec<u32>` words: gradients travel as bit-cast f32,
 //! compressed residuals in their §5.3 wire format.  Byte accounting for
 //! the cost model is `4 * words`.
+//!
+//! Endpoints are `Sync`: the pipelined sync engine (`crate::pipeline`)
+//! shares one endpoint between the training thread and a communication
+//! thread pool through `crate::collectives::mux::TagMux`, so the per-peer
+//! channel ends sit behind mutexes.  The locks are uncontended on the
+//! sequential path (one thread per endpoint, the historical contract).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+
+/// A fabric link failure: the peer endpoint is gone (dropped thread,
+/// closed socket, corrupt stream).  Collectives treat this as fatal via
+/// [`Transport::recv`]'s panic; supervisors and fault tests observe it
+/// cleanly through [`Transport::recv_checked`].
+#[derive(Debug)]
+pub struct TransportError {
+    /// Peer rank the failed operation addressed.
+    pub peer: usize,
+    /// Human-readable cause (as specific as the fabric can make it).
+    pub reason: String,
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "link to rank {}: {}", self.peer, self.reason)
+    }
+}
+
+impl std::error::Error for TransportError {}
 
 /// Point-to-point message transport between ranks.
 pub trait Transport {
@@ -19,8 +45,18 @@ pub trait Transport {
     fn world(&self) -> usize;
     /// Send `msg` to rank `to`.  Non-blocking (buffered fabric).
     fn send(&self, to: usize, msg: Vec<u32>);
-    /// Blocking receive of the next message from rank `from`.
-    fn recv(&self, from: usize) -> Vec<u32>;
+    /// Blocking receive of the next message from rank `from`, surfacing a
+    /// broken link as a clean error instead of a panic or a hang.
+    fn recv_checked(&self, from: usize) -> Result<Vec<u32>, TransportError>;
+
+    /// Blocking receive of the next message from rank `from`.  Panics if
+    /// the link broke — a dead peer mid-collective is unrecoverable.
+    fn recv(&self, from: usize) -> Vec<u32> {
+        match self.recv_checked(from) {
+            Ok(msg) => msg,
+            Err(e) => panic!("rank {}: {e}", self.rank()),
+        }
+    }
 
     /// Symmetric exchange (both sides call with each other's rank).
     fn exchange(&self, peer: usize, msg: Vec<u32>) -> Vec<u32> {
@@ -42,6 +78,10 @@ impl<T: Transport + ?Sized> Transport for &T {
 
     fn send(&self, to: usize, msg: Vec<u32>) {
         (**self).send(to, msg)
+    }
+
+    fn recv_checked(&self, from: usize) -> Result<Vec<u32>, TransportError> {
+        (**self).recv_checked(from)
     }
 
     fn recv(&self, from: usize) -> Vec<u32> {
@@ -100,11 +140,13 @@ impl LocalFabric {
         }
         let mut endpoints = Vec::with_capacity(world);
         for (rank, rx_row) in rxs.into_iter().enumerate() {
-            let senders: Vec<Sender<Vec<u32>>> = (0..world)
-                .map(|to| txs[rank][to].take().expect("sender taken twice"))
+            let senders: Vec<Mutex<Sender<Vec<u32>>>> = (0..world)
+                .map(|to| Mutex::new(txs[rank][to].take().expect("sender taken twice")))
                 .collect();
-            let receivers: Vec<Receiver<Vec<u32>>> =
-                rx_row.into_iter().map(|r| r.expect("receiver missing")).collect();
+            let receivers: Vec<Mutex<Receiver<Vec<u32>>>> = rx_row
+                .into_iter()
+                .map(|r| Mutex::new(r.expect("receiver missing")))
+                .collect();
             endpoints.push(Some(LocalTransport {
                 rank,
                 world,
@@ -132,8 +174,8 @@ impl LocalFabric {
 pub struct LocalTransport {
     rank: usize,
     world: usize,
-    senders: Vec<Sender<Vec<u32>>>,
-    receivers: Vec<Receiver<Vec<u32>>>,
+    senders: Vec<Mutex<Sender<Vec<u32>>>>,
+    receivers: Vec<Mutex<Receiver<Vec<u32>>>>,
     stats: Arc<TrafficStats>,
 }
 
@@ -149,11 +191,14 @@ impl Transport for LocalTransport {
     fn send(&self, to: usize, msg: Vec<u32>) {
         self.stats.messages.fetch_add(1, Ordering::Relaxed);
         self.stats.words.fetch_add(msg.len() as u64, Ordering::Relaxed);
-        self.senders[to].send(msg).expect("peer endpoint dropped");
+        self.senders[to].lock().unwrap().send(msg).expect("peer endpoint dropped");
     }
 
-    fn recv(&self, from: usize) -> Vec<u32> {
-        self.receivers[from].recv().expect("peer endpoint dropped")
+    fn recv_checked(&self, from: usize) -> Result<Vec<u32>, TransportError> {
+        self.receivers[from].lock().unwrap().recv().map_err(|_| TransportError {
+            peer: from,
+            reason: "peer endpoint dropped".into(),
+        })
     }
 }
 
@@ -238,6 +283,25 @@ mod tests {
         let a = fabric.take(0);
         assert_eq!(world_of(&a), 2);
         assert_eq!(world_of(&&a), 2);
+    }
+
+    #[test]
+    fn endpoints_are_sync_and_send() {
+        // the pipelined engine shares one endpoint across its comm pool
+        fn assert_share<T: Send + Sync>() {}
+        assert_share::<LocalTransport>();
+        assert_share::<TransportError>();
+    }
+
+    #[test]
+    fn recv_checked_surfaces_dropped_peer() {
+        let mut fabric = LocalFabric::new(2);
+        let a = fabric.take(0);
+        let b = fabric.take(1);
+        drop(b);
+        let err = a.recv_checked(1).unwrap_err();
+        assert_eq!(err.peer, 1);
+        assert!(err.reason.contains("dropped"), "{err}");
     }
 
     #[test]

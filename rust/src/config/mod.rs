@@ -118,6 +118,14 @@ pub struct TrainConfig {
     /// Fuse small compressed layers into shared allgather buckets (§5.3);
     /// 0 disables fusion.
     pub fusion_cap_elems: usize,
+    /// Run the pipelined sync engine: bucket selection/encoding and the
+    /// sparse collectives execute on a comm thread pool, overlapped
+    /// across buckets, with a deterministic apply barrier (see
+    /// `pipeline`).  Must be uniform across ranks (the wire format gains
+    /// a per-message bucket tag).
+    pub pipeline: bool,
+    /// Pipelined engine: max buckets in flight at once (>= 1).
+    pub inflight: usize,
     /// Fabric carrying the synchronization traffic.
     pub transport: TransportKind,
     /// This process's rank (TCP transport only; `launch` sets it per
@@ -146,6 +154,8 @@ impl Default for TrainConfig {
             eval_every: 0,
             seed: 42,
             fusion_cap_elems: 0,
+            pipeline: false,
+            inflight: 2,
             transport: TransportKind::Local,
             rank: 0,
             rendezvous: "127.0.0.1:29500".into(),
@@ -262,6 +272,12 @@ impl TrainConfig {
             "eval_every" => self.eval_every = as_usize()?,
             "seed" => self.seed = as_usize()? as u64,
             "fusion_cap_elems" => self.fusion_cap_elems = as_usize()?,
+            "pipeline" => {
+                self.pipeline = val
+                    .as_bool()
+                    .ok_or_else(|| ConfigError::Invalid("pipeline: expected bool".into()))?
+            }
+            "inflight" => self.inflight = as_usize()?,
             "transport" => self.transport = parse_transport(as_str()?)?,
             "rank" => self.rank = as_usize()?,
             "rendezvous" => self.rendezvous = as_str()?.to_string(),
@@ -317,6 +333,8 @@ impl TrainConfig {
             ("eval_every", json::num(self.eval_every as f64)),
             ("seed", json::num(self.seed as f64)),
             ("fusion_cap_elems", json::num(self.fusion_cap_elems as f64)),
+            ("pipeline", Value::Bool(self.pipeline)),
+            ("inflight", json::num(self.inflight as f64)),
             ("transport", json::s(self.transport.label())),
             ("rank", json::num(self.rank as f64)),
             ("rendezvous", json::s(self.rendezvous.clone())),
@@ -339,6 +357,20 @@ impl TrainConfig {
         }
         if self.thresholds.thsd1 > self.thresholds.thsd2 {
             return Err(ConfigError::Invalid("thsd1 > thsd2".into()));
+        }
+        if self.pipeline {
+            if self.inflight == 0 {
+                return Err(ConfigError::Invalid(
+                    "inflight must be >= 1 for the pipelined engine".into(),
+                ));
+            }
+            if self.device_select {
+                return Err(ConfigError::Invalid(
+                    "pipeline is incompatible with device_select (PJRT clients are \
+                     thread-bound; the comm pool cannot drive device selection)"
+                        .into(),
+                ));
+            }
         }
         if self.transport == TransportKind::Tcp {
             if self.rank >= self.world {
@@ -436,6 +468,22 @@ mod tests {
         cfg.rendezvous.clear();
         assert!(cfg.validate().is_err(), "tcp needs a rendezvous");
         assert!(cfg.apply_overrides(&["transport=bogus".into()]).is_err());
+    }
+
+    #[test]
+    fn pipeline_knobs_apply_and_validate() {
+        let mut cfg = TrainConfig::default();
+        cfg.apply_overrides(&["pipeline=true".into(), "inflight=4".into()]).unwrap();
+        assert!(cfg.pipeline);
+        assert_eq!(cfg.inflight, 4);
+        cfg.validate().unwrap();
+        cfg.inflight = 0;
+        assert!(cfg.validate().is_err(), "window must admit at least one bucket");
+        cfg.inflight = 2;
+        cfg.device_select = true;
+        assert!(cfg.validate().is_err(), "comm pool cannot drive device selection");
+        cfg.pipeline = false;
+        cfg.validate().unwrap();
     }
 
     #[test]

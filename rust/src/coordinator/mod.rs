@@ -7,6 +7,10 @@
 //! model replica, executes forward/backward through the AOT artifacts and
 //! synchronizes per-layer by the §5.5 policy: dense allreduce for small
 //! layers, sparse allgather of compressed residuals (Alg. 4/5) otherwise.
+//! Bucket synchronization runs through a [`crate::pipeline::SyncEngine`]
+//! — inline (`Sequential`, the default/oracle) or overlapped on a comm
+//! thread pool (`Pipelined`, `cfg.pipeline`); both are bit-identical by
+//! construction and by test.
 
 pub mod checkpoint;
 pub mod metrics;
@@ -133,7 +137,7 @@ impl Trainer {
     /// so every process learns `replicas_consistent` — the same replica
     /// drift check `run` performs centrally.  `stats` are this fabric's
     /// traffic counters (per-process for TCP), if the caller has them.
-    pub fn run_rank<T: Transport>(
+    pub fn run_rank<T: Transport + Sync>(
         &self,
         transport: &T,
         stats: Option<&TrafficStats>,

@@ -1,34 +1,43 @@
 //! One data-parallel worker: owns a PJRT runtime, a model replica, the
 //! per-layer compression pipelines and one fabric endpoint.  Executes the
 //! RGC training loop of Algorithm 4.
+//!
+//! Compressed-bucket synchronization is delegated to a
+//! [`crate::pipeline::SyncEngine`]: `Sequential` (inline, the oracle) or
+//! `Pipelined` (comm thread pool overlapping selection + collectives
+//! across buckets, `cfg.pipeline`).  Under the pipelined engine *all*
+//! fabric traffic — including this loop's dense allreduces, loss
+//! averaging and the trainer's replica-hash check — flows through a
+//! [`TagMux`] control channel so concurrent bucket collectives can share
+//! the endpoint.
 
 use super::metrics::{param_hash, phase, WorkerResult};
-use crate::collectives::{allgather, allreduce_mean, Transport};
-use crate::compression::message::{pack_plain, pack_quant, unpack_plain, unpack_quant};
-use crate::compression::{
-    CompressorConfig, Method, QuantizedSet, ResidualState, SignAlternator,
-};
+use crate::collectives::mux::{TagChannel, TagMux};
+use crate::collectives::{allreduce_mean, Transport};
+use crate::compression::message::{unpack_plain, unpack_quant};
+use crate::compression::{CompressorConfig, Method};
 use crate::config::TrainConfig;
 use crate::data::{ClusterDataset, ZipfMarkovCorpus};
 use crate::models::schema::ModelSchema;
 use crate::optim::{clip_by_global_norm, local_clip_factor, DenseOptState};
+use crate::pipeline::{
+    build_buckets, BucketDone, LayerSpec, Pipelined, Sequential, SyncEngine, BUCKET_TAG_BASE,
+    CTRL_TAG,
+};
 use crate::runtime::step::{Batch, StepRunner};
 use crate::runtime::{CompressOps, DeviceSelector, Runtime};
 use crate::simnet::iteration::Strategy;
-use crate::tensor::SparseTensor;
-use crate::util::timer::PhaseTimer;
+use std::sync::Arc;
+use std::time::Instant;
 
-/// Per-layer synchronization plan (Alg. 5 dispatch, decided once).
+/// Per-layer synchronization plan (Alg. 5 dispatch, decided once).  The
+/// compressed layers' evolving state (residual, alternator, threshold
+/// cache) lives inside the sync engine's buckets; this keeps what the
+/// training loop itself needs.
 struct LayerPlan {
     method: Method,
     /// Quantize this layer's messages (§5.2.3; never the output layer).
     quantize: bool,
-    /// Residual + momentum state (compressed layers only).
-    residual: Option<ResidualState>,
-    /// Sign alternation for quantized layers.
-    alternator: SignAlternator,
-    /// Cached binary-search threshold (+ age) for the sampled variant.
-    cached_thr: Option<(f32, usize)>,
     /// Dense-path optimizer state (used for Dense layers and during
     /// dense warm-up epochs).
     dense_state: DenseOptState,
@@ -93,8 +102,9 @@ const EVAL_STEP: usize = 0x7E0A;
 /// `LocalTransport` threads under [`super::Trainer::run`], a
 /// `net::TcpTransport` rank under [`super::Trainer::run_rank`].  Called
 /// on its own thread by the [`super::Trainer`]; panics propagate to the
-/// join and become errors.
-pub fn run_worker<T: Transport>(
+/// join and become errors.  `Sync` because the pipelined engine shares
+/// the endpoint with its comm pool.
+pub fn run_worker<T: Transport + Sync>(
     cfg: &TrainConfig,
     schema: &ModelSchema,
     transport: &T,
@@ -107,6 +117,13 @@ pub fn run_worker<T: Transport>(
     // the device-selection path needs the compression-op artifacts
     let manifest;
     let device = if cfg.device_select {
+        if cfg.pipeline {
+            // config::validate rejects this too; belt and braces
+            return Err(format!(
+                "rank {rank}: device_select is incompatible with the pipelined engine \
+                 (PJRT clients are thread-bound)"
+            ));
+        }
         manifest = crate::models::schema::Manifest::load(
             schema.file.parent().expect("artifact dir"),
         )
@@ -123,23 +140,46 @@ pub fn run_worker<T: Transport>(
     let data = DataSource::for_model(schema, cfg.seed);
     let warmup = cfg.warmup_schedule();
 
-    // §5.3 tensor fusion: batch compressed layers (in backprop order)
-    // into shared allgather groups; singleton groups when fusion is off
-    let comp_order: Vec<usize> =
-        (0..schema.params.len()).rev().filter(|&i| plans[i].method != Method::Dense).collect();
-    let fusion_groups: Vec<Vec<usize>> = if cfg.fusion_cap_elems > 0 && !comp_order.is_empty() {
-        let sizes: Vec<usize> =
-            comp_order.iter().map(|&i| schema.params[i].size()).collect();
-        crate::collectives::FusionPlan::greedy(&sizes, cfg.fusion_cap_elems)
-            .buckets
-            .into_iter()
-            .map(|b| b.layers.into_iter().map(|(pos, _)| comp_order[pos]).collect())
-            .collect()
-    } else {
-        comp_order.into_iter().map(|i| vec![i]).collect()
-    };
+    // §5.3 tensor fusion: compressed layers in backprop order, batched
+    // into shared allgather buckets owned by the sync engine (singleton
+    // buckets when fusion is off)
+    let specs: Vec<LayerSpec> = (0..schema.params.len())
+        .rev()
+        .filter(|&i| plans[i].method != Method::Dense)
+        .map(|i| LayerSpec {
+            li: i,
+            n: schema.params[i].size(),
+            method: plans[i].method,
+            quantize: plans[i].quantize,
+        })
+        .collect();
+    let buckets = build_buckets(&specs, cfg.fusion_cap_elems, cfg.optimizer.accumulation());
+    let n_buckets = buckets.len();
+    let cc = CompressorConfig { density: cfg.density, ..Default::default() };
 
-    let mut timer = PhaseTimer::new();
+    // Engine + the loop's own comm handle.  Sequential keeps the raw
+    // endpoint (bit- and byte-identical to the historical schedule);
+    // pipelined multiplexes everything: control on tag 0, bucket b on
+    // tag 1 + b.
+    let mux: Arc<TagMux<&T>>;
+    let ctrl: TagChannel<&T>;
+    let mut pipelined_engine: Pipelined<&T>;
+    let mut sequential_engine: Sequential<'_, T>;
+    let engine: &mut dyn SyncEngine;
+    let comm: &dyn Transport;
+    if cfg.pipeline {
+        mux = Arc::new(TagMux::new(transport, BUCKET_TAG_BASE + n_buckets as u32));
+        ctrl = TagChannel::new(Arc::clone(&mux), CTRL_TAG);
+        pipelined_engine = Pipelined::new(Arc::clone(&mux), buckets, cfg.inflight, cc);
+        engine = &mut pipelined_engine;
+        comm = &ctrl;
+    } else {
+        sequential_engine = Sequential::new(transport, device, buckets, cc);
+        engine = &mut sequential_engine;
+        comm = transport;
+    }
+
+    let mut timer = crate::util::timer::PhaseTimer::new();
     let mut loss_curve = Vec::new();
     let mut eval_curve = Vec::new();
     let mut union_density = Vec::new();
@@ -176,12 +216,11 @@ pub fn run_worker<T: Transport>(
 
         // backprop order: last layer first, as the paper's overlap scheme
         // initiates communication for deeper layers first.  Dense layers
-        // allreduce inline; compressed layers are handled per fusion
-        // group (a group of one when fusion is off, §5.3 batching when
-        // `fusion_cap_elems` > 0).
+        // allreduce inline; compressed layers go through the sync engine
+        // bucket by bucket.
         if dense_step {
             for li in (0..params.len()).rev() {
-                timer.time(phase::COMM_DENSE, || allreduce_mean(&transport, &mut grads[li]));
+                timer.time(phase::COMM_DENSE, || allreduce_mean(&comm, &mut grads[li]));
                 timer.time(phase::UPDATE, || {
                     plans[li].dense_state.apply(cfg.optimizer, &mut params[li], &grads[li], lr)
                 });
@@ -191,117 +230,44 @@ pub fn run_worker<T: Transport>(
                 if plans[li].method != Method::Dense {
                     continue;
                 }
-                timer.time(phase::COMM_DENSE, || allreduce_mean(&transport, &mut grads[li]));
+                timer.time(phase::COMM_DENSE, || allreduce_mean(&comm, &mut grads[li]));
                 timer.time(phase::UPDATE, || {
                     plans[li].dense_state.apply(cfg.optimizer, &mut params[li], &grads[li], lr)
                 });
             }
-            for group in &fusion_groups {
-                // --- compressed path (Alg. 4): select + pack per layer,
-                // one allgather per fusion group ---
-                let mut blob: Vec<u32> = Vec::new();
-                for &li in group {
-                    let plan = &mut plans[li];
-                    let n = params[li].len();
-                    let residual =
-                        plan.residual.as_mut().expect("compressed layer has residual");
-                    // momentum correction (Alg. 4 lines 11-19): via the
-                    // fused L1 kernel on the device path, host otherwise
-                    let dev_accum = device
-                        .as_ref()
-                        .filter(|d| d.ops.has_momentum_accum())
-                        .map(|d| &d.ops);
-                    timer.time(phase::MASK, || -> Result<(), String> {
-                        if let Some(ops) = dev_accum {
-                            let (momentum, nesterov) = match residual.accumulation {
-                                crate::compression::Accumulation::Sgd => (0.0, false),
-                                crate::compression::Accumulation::Momentum { momentum } => {
-                                    (momentum, false)
-                                }
-                                crate::compression::Accumulation::Nesterov { momentum } => {
-                                    (momentum, true)
-                                }
-                            };
-                            let (v, u) = ops
-                                .momentum_accum(
-                                    residual.residual(),
-                                    residual.momentum_buf(),
-                                    &grads[li],
-                                    momentum,
-                                    nesterov,
-                                )
-                                .map_err(|e| format!("momentum_accum: {e}"))?;
-                            residual.set_buffers(v, u);
-                        } else {
-                            residual.accumulate(&grads[li]);
-                        }
-                        Ok(())
-                    })?;
 
-                    let k = k_for(n, density);
-                    let sign =
-                        if plan.quantize { Some(plan.alternator.next_sign()) } else { None };
-                    let sel = timer.time(phase::SELECT, || {
-                        select_layer(plan, device.as_ref(), k, sign, cfg)
-                    })?;
-                    timer.time(phase::MASK, || {
-                        plan.residual.as_mut().unwrap().mask(&sel);
-                    });
-                    selected_elems += sel.len();
-                    sparse_elems += n;
-
-                    timer.time(phase::PACK, || {
-                        if plan.quantize {
-                            blob.extend(pack_quant(&QuantizedSet::from_sparse(&sel)))
-                        } else {
-                            blob.extend(pack_plain(&sel))
-                        }
-                    });
-                }
-
-                let gathered =
-                    timer.time(phase::COMM_SPARSE, || allgather(&transport, blob));
-
-                // §5.4 decompression: walk each rank's blob, scatter-add
-                // every layer's set scaled by -lr/N
-                timer
-                    .time(phase::UNPACK, || -> Result<(), String> {
-                        for rank_blob in &gathered {
-                            let mut off = 0usize;
-                            for &li in group {
-                                if plans[li].quantize {
-                                    let (q, used) = unpack_quant(&rank_blob[off..])
-                                        .map_err(|e| format!("layer {li}: {e}"))?;
-                                    let add = q.mean * scale;
-                                    for &i in &q.indices {
-                                        params[li][i as usize] += add;
-                                    }
-                                    off += used;
-                                } else {
-                                    let (s, used) = unpack_plain(&rank_blob[off..])
-                                        .map_err(|e| format!("layer {li}: {e}"))?;
-                                    s.scatter_add(&mut params[li], scale);
-                                    off += used;
-                                }
-                            }
-                        }
-                        Ok(())
-                    })
-                    .map_err(|e| format!("rank {rank} step {step}: wire: {e}"))?;
-
-                // union-density measurement (log steps): distinct indices
-                // across all ranks / layer size — the §5.3 observation
-                if log_step {
-                    union_elems += count_union_fused(&gathered, group, &plans, &mut seen);
-                }
+            // engine drives select/pack/allgather per bucket; this
+            // closure is the deterministic apply point (§5.4
+            // decompression), called in bucket order
+            let mut unpack_secs = 0.0f64;
+            {
+                let params = &mut params;
+                let seen = &mut seen;
+                let mut apply = |done: BucketDone| -> Result<(), String> {
+                    let t0 = Instant::now();
+                    done.apply_to(params, scale)?;
+                    unpack_secs += t0.elapsed().as_secs_f64();
+                    selected_elems += done.selected;
+                    sparse_elems += done.elems;
+                    // union-density measurement (log steps): distinct
+                    // indices across all ranks / layer size — §5.3
+                    if log_step {
+                        union_elems += count_union_fused(&done.gathered, &done.layers, seen)?;
+                    }
+                    Ok(())
+                };
+                engine
+                    .sync_step(&grads, density, &mut timer, &mut apply)
+                    .map_err(|e| format!("rank {rank} step {step}: {e}"))?;
             }
+            timer.add(phase::UNPACK, unpack_secs);
         }
 
         final_loss = loss;
         if log_step {
             // global mean loss (collective: all ranks participate)
             let mut l = [loss];
-            allreduce_mean(&transport, &mut l);
+            allreduce_mean(&comm, &mut l);
             if rank == 0 {
                 loss_curve.push((step, l[0]));
                 if sparse_elems > 0 {
@@ -333,10 +299,6 @@ pub fn run_worker<T: Transport>(
     })
 }
 
-fn k_for(n: usize, density: f64) -> usize {
-    ((n as f64 * density).ceil() as usize).clamp(1, n)
-}
-
 fn build_plans(cfg: &TrainConfig, schema: &ModelSchema) -> Vec<LayerPlan> {
     schema
         .params
@@ -355,99 +317,43 @@ fn build_plans(cfg: &TrainConfig, schema: &ModelSchema) -> Vec<LayerPlan> {
             LayerPlan {
                 method,
                 quantize,
-                residual: compressed
-                    .then(|| ResidualState::new(p.size(), cfg.optimizer.accumulation())),
-                alternator: SignAlternator::new(),
-                cached_thr: None,
                 dense_state: DenseOptState::new(p.size(), cfg.optimizer),
             }
         })
         .collect()
 }
 
-/// Communication-set selection for one layer, host or device flavor.
-fn select_layer(
-    plan: &mut LayerPlan,
-    device: Option<&DeviceSelector>,
-    k: usize,
-    sign: Option<f32>,
-    cfg: &TrainConfig,
-) -> Result<SparseTensor, String> {
-    let cc = CompressorConfig { density: cfg.density, ..Default::default() };
-    let residual = plan.residual.as_mut().expect("residual");
-
-    if let Some(dev) = device {
-        // L1-kernel path
-        let d = match plan.method {
-            Method::TrimmedTopk | Method::ExactTopk => {
-                dev.trimmed_topk(residual.residual(), k, cc.trim_eps, sign)
-            }
-            Method::SampledBinarySearch => dev
-                .threshold_binary_search(residual.residual(), k, cc.bs.eps, cc.bs.max_iters, sign),
-            Method::Dense => unreachable!("dense layers never select"),
-        }
-        .map_err(|e| format!("device select: {e}"))?;
-        return Ok(d.sparse);
-    }
-
-    // host path (mirrors LayerCompressor but with the per-step density and
-    // the worker-owned threshold cache)
-    let v = residual.residual();
-    let sel = match plan.method {
-        Method::ExactTopk => crate::compression::exact_topk(v, k, sign),
-        Method::TrimmedTopk => crate::compression::trimmed_topk(v, k, cc.trim_eps, sign),
-        Method::SampledBinarySearch => {
-            // §6.4: threshold reuse is incompatible with sign alternation
-            if sign.is_none() {
-                if let Some((thr, age)) = plan.cached_thr {
-                    if age < cc.interval {
-                        let s = SparseTensor::compact_above(v, thr);
-                        // cache is valid unless the residual drifted far
-                        // from the threshold (the paper's re-select rule)
-                        if !s.is_empty() && s.len() <= 4 * k {
-                            plan.cached_thr = Some((thr, age + 1));
-                            return Ok(s);
-                        }
-                        // fall through to a fresh search
-                    }
-                }
-            }
-            let sel = crate::compression::threshold_binary_search(v, k, cc.bs, sign);
-            if sign.is_none() {
-                plan.cached_thr = Some((sel.threshold, 1));
-            }
-            sel
-        }
-        Method::Dense => unreachable!(),
-    };
-    Ok(sel.sparse)
-}
-
-/// Count the distinct indices each layer of a fusion group received
+/// Count the distinct indices each layer of a fusion bucket received
 /// across all ranks' blobs, using (and clearing) the `seen` scratch.
+///
+/// A malformed blob is an error: the old code skipped bad messages
+/// *without* advancing that rank's cursor, silently desynchronizing
+/// every later layer's walk (and the Eq. 1 density audit with it).  The
+/// per-layer message headers are consumed exactly once per layer per
+/// rank — the bucket's framing overhead is never counted as indices.
 fn count_union_fused(
     gathered: &[Vec<u32>],
-    group: &[usize],
-    plans: &[LayerPlan],
+    layers: &[(usize, bool)],
     seen: &mut [bool],
-) -> usize {
+) -> Result<usize, String> {
     let mut cursors = vec![0usize; gathered.len()];
     let mut total = 0usize;
-    for &li in group {
-        let quantized = plans[li].quantize;
+    for &(li, quantized) in layers {
         let mut marked: Vec<u32> = Vec::new();
         for (r, blob) in gathered.iter().enumerate() {
             if quantized {
-                if let Ok((q, used)) = unpack_quant(&blob[cursors[r]..]) {
-                    for &i in &q.indices {
-                        if !seen[i as usize] {
-                            seen[i as usize] = true;
-                            marked.push(i);
-                        }
+                let (q, used) = unpack_quant(&blob[cursors[r]..])
+                    .map_err(|e| format!("union count: rank {r} layer {li}: {e}"))?;
+                for &i in &q.indices {
+                    if !seen[i as usize] {
+                        seen[i as usize] = true;
+                        marked.push(i);
                     }
-                    cursors[r] += used;
                 }
-            } else if let Ok((s, used)) = unpack_plain(&blob[cursors[r]..]) {
+                cursors[r] += used;
+            } else {
+                let (s, used) = unpack_plain(&blob[cursors[r]..])
+                    .map_err(|e| format!("union count: rank {r} layer {li}: {e}"))?;
                 for &i in &s.indices {
                     if !seen[i as usize] {
                         seen[i as usize] = true;
@@ -462,7 +368,7 @@ fn count_union_fused(
             seen[i as usize] = false;
         }
     }
-    total
+    Ok(total)
 }
 
 fn eval_metric(
@@ -488,5 +394,63 @@ fn eval_metric(
             let (xs, ys) = ds.eval_split();
             runner.eval_mlp_accuracy(rt, params, xs, ys)
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::message::{pack_plain, pack_quant};
+    use crate::compression::QuantizedSet;
+    use crate::tensor::SparseTensor;
+
+    /// Two ranks, a fused bucket of one plain + one quantized layer.
+    fn gathered_pair() -> Vec<Vec<u32>> {
+        let mk = |plain_idx: Vec<u32>, quant_idx: Vec<u32>| {
+            let mut blob =
+                pack_plain(&SparseTensor::new(plain_idx.clone(), vec![1.0; plain_idx.len()]));
+            blob.extend(pack_quant(&QuantizedSet { indices: quant_idx, mean: 0.5 }));
+            blob
+        };
+        vec![mk(vec![0, 2, 4], vec![1, 3]), mk(vec![2, 6], vec![3, 5, 7])]
+    }
+
+    #[test]
+    fn union_counts_distinct_indices_per_layer() {
+        let layers = vec![(0usize, false), (1usize, true)];
+        let mut seen = vec![false; 16];
+        let n = count_union_fused(&gathered_pair(), &layers, &mut seen).unwrap();
+        // plain layer: {0,2,4} ∪ {2,6} = 4; quant layer: {1,3} ∪ {3,5,7} = 4
+        assert_eq!(n, 8);
+        assert!(seen.iter().all(|&s| !s), "scratch must be cleared");
+        // counting twice gives the same answer (scratch reuse)
+        let n2 = count_union_fused(&gathered_pair(), &layers, &mut seen).unwrap();
+        assert_eq!(n2, 8);
+    }
+
+    #[test]
+    fn union_count_rejects_malformed_blobs() {
+        let mut gathered = gathered_pair();
+        // truncate rank 1 mid-bucket: the quantized layer's walk must
+        // surface an error, not silently desync the cursor
+        let cut = gathered[1].len() - 2;
+        gathered[1].truncate(cut);
+        let layers = vec![(0usize, false), (1usize, true)];
+        let mut seen = vec![false; 16];
+        let err = count_union_fused(&gathered, &layers, &mut seen).unwrap_err();
+        assert!(err.contains("rank 1"), "{err}");
+    }
+
+    #[test]
+    fn union_count_headers_once_per_bucket_layer() {
+        // single rank, two plain layers back to back: the second layer's
+        // count must start exactly after the first message (header
+        // consumed once), so index 9 is counted for layer 1 only
+        let mut blob = pack_plain(&SparseTensor::new(vec![1, 9], vec![1.0, 2.0]));
+        blob.extend(pack_plain(&SparseTensor::new(vec![9], vec![3.0])));
+        let layers = vec![(0usize, false), (1usize, false)];
+        let mut seen = vec![false; 16];
+        let n = count_union_fused(&[blob], &layers, &mut seen).unwrap();
+        assert_eq!(n, 3, "layer 0 has {{1, 9}}, layer 1 has {{9}}");
     }
 }

@@ -60,6 +60,34 @@ pub fn t_dense(machine: &Machine, p: usize, m_elems: f64) -> f64 {
         + (pf - 1.0) / pf * m_elems * machine.gamma_reduce
 }
 
+/// Exposed wall time of one pipelined window: GPU-side work (selection,
+/// encoding) hides behind the in-flight collective, so the window costs
+/// the max of the two, not their sum — the §5.3 overlap scheme the
+/// `Pipelined` sync engine implements and `simnet` walks per layer.
+pub fn t_overlap(compute: f64, comm: f64) -> f64 {
+    compute.max(comm)
+}
+
+/// Eq. 1 under the pipelined schedule: selection overlaps the transfer
+/// (`max` instead of `+`); decompression still serializes after the
+/// barrier (it needs the gathered result).
+pub fn t_sparse_pipelined(
+    machine: &Machine,
+    p: usize,
+    m_elems: f64,
+    density: f64,
+    t_select: f64,
+    wire_bytes: f64,
+) -> f64 {
+    if p <= 1 {
+        return t_select;
+    }
+    let pf = p as f64;
+    let md = m_elems * density;
+    let transfer = pf.log2() * machine.alpha + (pf - 1.0) * md * wire_bytes * machine.beta;
+    t_overlap(t_select, transfer) + pf * md * machine.gamma_decompress
+}
+
 /// Sparse/dense *bandwidth* ratio: `(p-1)·D·w / (2·(p-1)/p · 4)` =
 /// `p·D·w/8`.  The §5.5 "12.8% not 0.1%" observation (the paper quotes
 /// p·D; the factor the two conventions differ by is dense allreduce's
@@ -228,6 +256,34 @@ mod tests {
         assert!(r > 0.45, "quantized warm-up bandwidth ratio {r}");
         let rp = bandwidth_ratio(64, 0.015625, PLAIN_WIRE_BYTES);
         assert!(rp > 0.9, "plain warm-up bandwidth ratio {rp}");
+    }
+
+    #[test]
+    fn prop_pipelined_never_exceeds_sequential_eq1() {
+        // max(select, transfer) <= select + transfer, with equality only
+        // when one side is zero — the overlap can only help
+        let m = Machine::piz_daint();
+        check(40, |g| {
+            let p = 1usize << g.size(1..8);
+            let elems = g.size(10_000..40_000_000) as f64;
+            let d = g.f32(1e-4..0.02) as f64;
+            let t_sel = elems * m.sel_trimmed_per_elem;
+            let piped = t_sparse_pipelined(&m, p, elems, d, t_sel, PLAIN_WIRE_BYTES);
+            let seq = t_sparse(&m, p, elems, d, t_sel, PLAIN_WIRE_BYTES);
+            ensure(piped <= seq + 1e-15, format!("pipelined {piped} > sequential {seq}"))?;
+            // the hidden side is exactly min(select, transfer)
+            let transfer = seq - t_sel - p as f64 * elems * d * m.gamma_decompress;
+            ensure_close(seq - piped, t_sel.min(transfer), 1e-9, "hidden time")
+        });
+    }
+
+    #[test]
+    fn t_overlap_is_the_max() {
+        assert_eq!(t_overlap(2.0, 3.0), 3.0);
+        assert_eq!(t_overlap(5.0, 1.0), 5.0);
+        // single rank: nothing to transfer, select is exposed either way
+        let m = Machine::muradin();
+        assert_eq!(t_sparse_pipelined(&m, 1, 1e6, 1e-3, 0.5, PLAIN_WIRE_BYTES), 0.5);
     }
 
     #[test]

@@ -29,6 +29,7 @@ pub mod data;
 pub mod models;
 pub mod net;
 pub mod optim;
+pub mod pipeline;
 pub mod ps;
 pub mod runtime;
 pub mod simnet;

@@ -69,6 +69,8 @@ fn cmd_train(argv: &[String]) -> i32 {
         .opt("rank", "", "this process's rank (tcp transport)")
         .opt("port", "", "loopback rendezvous port (shorthand for --rendezvous 127.0.0.1:PORT)")
         .opt("rendezvous", "", "rendezvous address rank 0 listens on (tcp transport)")
+        .opt("inflight", "", "pipelined engine: max buckets in flight (default 2)")
+        .flag("pipeline", "overlap bucket selection + collectives on a comm thread pool")
         .flag("csv", "print a CSV row instead of the summary");
     let parsed = match args.parse(argv) {
         Ok(p) => p,
@@ -95,11 +97,14 @@ fn cmd_train(argv: &[String]) -> i32 {
     if !parsed.get("set").is_empty() {
         overrides.extend(parsed.get("set").split(',').map(str::to_string));
     }
-    // dedicated transport flags win over --set
-    for key in ["transport", "rank", "rendezvous"] {
+    // dedicated transport/engine flags win over --set
+    for key in ["transport", "rank", "rendezvous", "inflight"] {
         if !parsed.get(key).is_empty() {
             overrides.push(format!("{key}={}", parsed.get(key)));
         }
+    }
+    if parsed.get_flag("pipeline") {
+        overrides.push("pipeline=true".into());
     }
     if !parsed.get("port").is_empty() && parsed.get("rendezvous").is_empty() {
         overrides.push(format!("rendezvous=127.0.0.1:{}", parsed.get("port")));
@@ -209,6 +214,8 @@ fn cmd_launch(argv: &[String]) -> i32 {
         .opt("preset", "smoke", "named preset forwarded to every rank")
         .opt("config", "", "JSON config file forwarded to every rank")
         .opt("set", "", "comma-separated key=value overrides forwarded to every rank")
+        .opt("inflight", "", "pipelined engine: max buckets in flight (default 2)")
+        .flag("pipeline", "every rank runs the pipelined sync engine")
         .flag("csv", "rank 0 prints a CSV row instead of the summary");
     let parsed = match args.parse(argv) {
         Ok(p) => p,
@@ -238,6 +245,12 @@ fn cmd_launch(argv: &[String]) -> i32 {
     let mut children = Vec::with_capacity(world);
     for rank in 0..world {
         let mut set = format!("world={world},transport=tcp,rank={rank},rendezvous={rendezvous}");
+        if parsed.get_flag("pipeline") {
+            set.push_str(",pipeline=true");
+        }
+        if !parsed.get("inflight").is_empty() {
+            set.push_str(&format!(",inflight={}", parsed.get("inflight")));
+        }
         if !parsed.get("set").is_empty() {
             set = format!("{},{set}", parsed.get("set"));
         }
@@ -289,6 +302,8 @@ fn cmd_simulate(argv: &[String]) -> i32 {
         .opt("gpus", "2,4,8,16,32,64,128", "comma-separated world sizes")
         .opt("density", "0.001", "compression density D")
         .opt("batch", "32", "per-GPU batch size")
+        .opt("engine", "pipelined", "sync-engine schedule: pipelined|sequential")
+        .opt("inflight", "0", "pipelined in-flight window (0 = unbounded)")
         .flag("breakdown", "print the Fig. 10 phase decomposition");
     let parsed = match args.parse(argv) {
         Ok(p) => p,
@@ -305,9 +320,19 @@ fn cmd_simulate(argv: &[String]) -> i32 {
         eprintln!("unknown machine '{}'", parsed.get("machine"));
         return 2;
     };
+    let pipeline = match parsed.get("engine") {
+        "sequential" | "seq" => false,
+        "pipelined" | "pipe" => true,
+        other => {
+            eprintln!("unknown engine '{other}' (pipelined|sequential)");
+            return 2;
+        }
+    };
     let cfg = SimConfig {
         density: parsed.f64("density"),
         batch_per_gpu: parsed.usize("batch"),
+        pipeline,
+        inflight: parsed.usize("inflight"),
         ..SimConfig::default()
     };
     let gpus: Vec<usize> = parsed
@@ -317,8 +342,17 @@ fn cmd_simulate(argv: &[String]) -> i32 {
         .collect();
 
     println!(
-        "# {} on {} (density {}, batch/gpu {})",
-        model.name, machine.name, cfg.density, cfg.batch_per_gpu
+        "# {} on {} (density {}, batch/gpu {}, engine {}{})",
+        model.name,
+        machine.name,
+        cfg.density,
+        cfg.batch_per_gpu,
+        if cfg.pipeline { "pipelined" } else { "sequential" },
+        if cfg.pipeline && cfg.inflight > 0 {
+            format!(" inflight {}", cfg.inflight)
+        } else {
+            String::new()
+        },
     );
     if parsed.get_flag("breakdown") {
         println!("{:>5} {:>10} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>10}",

@@ -21,6 +21,20 @@
 //! collectives' symmetric `exchange` deadlock-free.  Readers demultiplex
 //! inbound frames into per-peer inboxes consumed by `recv`.
 //!
+//! Every message crosses the wire as one atomic frame written by that
+//! peer's single writer thread, so concurrent senders (the pipelined sync
+//! engine's comm pool, multiplexed by `collectives::mux::TagMux` bucket
+//! tags) never interleave words *inside* a frame — the tag word at the
+//! end of each message is all the demux above needs.  The endpoint is
+//! `Sync` for exactly that sharing: channel ends sit behind mutexes,
+//! uncontended in single-threaded (sequential-engine) use.
+//!
+//! When a stream dies — truncated frame, oversized length prefix, peer
+//! FIN mid-message, or a clean FIN — the reader records the cause and
+//! closes the inbox; `recv_checked` then reports it as a clean
+//! [`TransportError`] instead of hanging (`recv` still panics, the
+//! collective contract).
+//!
 //! ## Shutdown
 //!
 //! Dropping the transport closes the writer channels; each writer flushes
@@ -30,11 +44,11 @@
 //! drop wait on rank B's, an avoidable shutdown barrier.
 
 use super::frame::{read_frame, write_frame};
-use crate::collectives::transport::{TrafficStats, Transport};
+use crate::collectives::transport::{TrafficStats, Transport, TransportError};
 use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{IpAddr, Ipv4Addr, Shutdown, SocketAddrV4, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
 
@@ -125,8 +139,11 @@ fn read_handshake(s: &mut TcpStream, deadline: Instant, what: &str) -> io::Resul
 pub struct TcpTransport {
     rank: usize,
     world: usize,
-    txs: Vec<Sender<Vec<u32>>>,
-    rxs: Vec<Receiver<Vec<u32>>>,
+    txs: Vec<Mutex<Sender<Vec<u32>>>>,
+    rxs: Vec<Mutex<Receiver<Vec<u32>>>>,
+    /// Why each peer's reader thread exited, for `recv_checked` reports
+    /// (set once, right before the inbox closes).
+    causes: Vec<Arc<Mutex<Option<String>>>>,
     writers: Vec<JoinHandle<()>>,
     /// Per-process traffic counters (same accounting as `LocalFabric`:
     /// payload words at `send`; the 4-byte frame header is `4 *
@@ -165,13 +182,16 @@ impl TcpTransport {
         let stats = Arc::new(TrafficStats::default());
         let mut txs = Vec::with_capacity(world);
         let mut rxs = Vec::with_capacity(world);
+        let mut causes = Vec::with_capacity(world);
         let mut writers = Vec::with_capacity(world.saturating_sub(1));
         for peer in 0..world {
+            let cause = Arc::new(Mutex::new(None::<String>));
+            causes.push(Arc::clone(&cause));
             if peer == rank {
                 // self-channel: in-memory, like LocalFabric's self pair
                 let (tx, rx) = channel();
-                txs.push(tx);
-                rxs.push(rx);
+                txs.push(Mutex::new(tx));
+                rxs.push(Mutex::new(rx));
                 continue;
             }
             let stream = streams[peer].take().expect("bootstrap left a peer unconnected");
@@ -213,15 +233,20 @@ impl TcpTransport {
                                 }
                             }
                             // clean FIN: the peer shut down between frames
-                            Ok(None) => return,
+                            Ok(None) => {
+                                *cause.lock().unwrap() =
+                                    Some("connection closed by peer".into());
+                                return;
+                            }
                             // mid-frame EOF (peer crash), corrupt or
                             // oversized frame: distinct from clean
-                            // shutdown — say which before the blocked
-                            // recv() raises its generic panic
+                            // shutdown — record the cause for
+                            // recv_checked before the inbox closes
                             Err(e) => {
                                 crate::log_warn!(
                                     "rank {rank}: recv stream from rank {peer} broke: {e}"
                                 );
+                                *cause.lock().unwrap() = Some(format!("stream broke: {e}"));
                                 return;
                             }
                         }
@@ -229,11 +254,11 @@ impl TcpTransport {
                 })
                 .expect("spawn reader thread");
 
-            txs.push(tx);
-            rxs.push(inbox_rx);
+            txs.push(Mutex::new(tx));
+            rxs.push(Mutex::new(inbox_rx));
             writers.push(writer);
         }
-        TcpTransport { rank, world, txs, rxs, writers, stats }
+        TcpTransport { rank, world, txs, rxs, causes, writers, stats }
     }
 }
 
@@ -344,14 +369,27 @@ impl Transport for TcpTransport {
         self.stats.messages.fetch_add(1, Ordering::Relaxed);
         self.stats.words.fetch_add(msg.len() as u64, Ordering::Relaxed);
         self.txs[to]
+            .lock()
+            .unwrap()
             .send(msg)
             .unwrap_or_else(|_| panic!("rank {}: connection to rank {to} closed", self.rank));
     }
 
+    fn recv_checked(&self, from: usize) -> Result<Vec<u32>, TransportError> {
+        self.rxs[from].lock().unwrap().recv().map_err(|_| {
+            let reason = self.causes[from]
+                .lock()
+                .unwrap()
+                .clone()
+                .unwrap_or_else(|| "connection closed".into());
+            TransportError { peer: from, reason }
+        })
+    }
+
     fn recv(&self, from: usize) -> Vec<u32> {
-        self.rxs[from]
-            .recv()
-            .unwrap_or_else(|_| panic!("rank {}: connection to rank {from} closed", self.rank))
+        self.recv_checked(from).unwrap_or_else(|e| {
+            panic!("rank {}: connection to rank {from} closed ({e})", self.rank)
+        })
     }
 }
 
@@ -438,6 +476,24 @@ mod tests {
         assert_eq!(t1.stats.message_count(), 1);
         assert_eq!(t1.stats.bytes(), 40);
         assert_eq!(t0.stats.bytes(), 0, "recv side counts nothing, like LocalFabric");
+    }
+
+    #[test]
+    fn tcp_endpoint_is_sync() {
+        // shared across the pipelined engine's comm pool via TagMux
+        fn assert_share<T: Send + Sync>() {}
+        assert_share::<TcpTransport>();
+    }
+
+    #[test]
+    fn recv_checked_reports_clean_fin() {
+        let addr = free_loopback_addr();
+        let (h0, t1) = pair(&addr);
+        let t0 = h0.join().unwrap();
+        drop(t1); // graceful shutdown: writers flush + FIN
+        let err = t0.recv_checked(1).unwrap_err();
+        assert_eq!(err.peer, 1);
+        assert!(err.reason.contains("closed"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,341 @@
+//! Per-bucket compressor state and the produce step shared by both sync
+//! engines.
+//!
+//! A *bucket* is one §5.3 fusion group of compressed layers: the unit of
+//! synchronization (one allgather per bucket per step) and, under the
+//! pipelined engine, the unit of parallelism — each in-flight bucket owns
+//! its layers' residual/alternator/threshold state outright, so the task
+//! can run on any thread without sharing.  `produce` is the entire
+//! GPU-side half of Algorithm 4 for one bucket: accumulate (momentum
+//! correction) → select → mask → pack, identical math on either engine —
+//! the root of the engines' bit-for-bit agreement.
+
+use crate::collectives::FusionPlan;
+use crate::compression::message::{pack_plain, pack_quant};
+use crate::compression::{
+    exact_topk, threshold_binary_search, trimmed_topk, Accumulation, CompressorConfig, Method,
+    QuantizedSet, ResidualState, SignAlternator,
+};
+use crate::runtime::DeviceSelector;
+use crate::tensor::SparseTensor;
+use std::time::Instant;
+
+/// Static description of one compressed layer (everything `produce`
+/// needs besides the evolving state).
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    /// Layer index in the model schema — names the parameter buffer the
+    /// gathered result is applied to.
+    pub li: usize,
+    /// Element count.
+    pub n: usize,
+    /// Selection method (Alg. 5 dispatch, decided once).
+    pub method: Method,
+    /// Quantize this layer's messages (§5.2.3; never the output layer).
+    pub quantize: bool,
+}
+
+/// Mutable compressor state for one layer of a bucket.
+pub struct BucketLayer {
+    pub spec: LayerSpec,
+    /// Residual + momentum state (Alg. 4).
+    residual: ResidualState,
+    /// Sign alternation for quantized layers.
+    alternator: SignAlternator,
+    /// Cached binary-search threshold (+ age) for the sampled variant.
+    cached_thr: Option<(f32, usize)>,
+}
+
+/// One fusion bucket's compressor state; owned by a sync engine and, in
+/// the pipelined engine, moved into the in-flight task.
+pub struct BucketState {
+    pub(crate) layers: Vec<BucketLayer>,
+}
+
+/// What `produce` hands to the collective: the packed bucket blob plus
+/// the per-phase seconds the engines merge into the worker's timer.
+pub struct Produced {
+    pub blob: Vec<u32>,
+    /// Elements this rank selected across the bucket's layers.
+    pub selected: usize,
+    /// Total elements across the bucket's layers.
+    pub elems: usize,
+    pub mask_secs: f64,
+    pub select_secs: f64,
+    pub pack_secs: f64,
+}
+
+/// Group compressed-layer specs (already in backward order) into fusion
+/// buckets under `fusion_cap_elems` (§5.3 greedy first-fit; 0 disables
+/// fusion — one bucket per layer) and seed each layer's state.
+pub fn build_buckets(
+    specs: &[LayerSpec],
+    fusion_cap_elems: usize,
+    accumulation: Accumulation,
+) -> Vec<BucketState> {
+    let groups: Vec<Vec<usize>> = if fusion_cap_elems > 0 && !specs.is_empty() {
+        let sizes: Vec<usize> = specs.iter().map(|s| s.n).collect();
+        FusionPlan::greedy(&sizes, fusion_cap_elems)
+            .buckets
+            .into_iter()
+            .map(|b| b.layers.into_iter().map(|(pos, _)| pos).collect())
+            .collect()
+    } else {
+        (0..specs.len()).map(|i| vec![i]).collect()
+    };
+    groups
+        .into_iter()
+        .map(|group| BucketState {
+            layers: group
+                .into_iter()
+                .map(|pos| {
+                    let spec = specs[pos].clone();
+                    BucketLayer {
+                        residual: ResidualState::new(spec.n, accumulation),
+                        alternator: SignAlternator::new(),
+                        cached_thr: None,
+                        spec,
+                    }
+                })
+                .collect(),
+        })
+        .collect()
+}
+
+fn k_for(n: usize, density: f64) -> usize {
+    ((n as f64 * density).ceil() as usize).clamp(1, n)
+}
+
+impl BucketState {
+    /// Layer specs in packing order.
+    pub fn specs(&self) -> impl Iterator<Item = &LayerSpec> {
+        self.layers.iter().map(|l| &l.spec)
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// The GPU-side half of Alg. 4 for this bucket: accumulate → select
+    /// → mask → pack each layer in order, into one allgather blob.
+    /// `grads[i]` is this step's gradient for `layers[i]` (same order).
+    ///
+    /// Pure given (state, grads, density): the produced blob is identical
+    /// no matter which thread runs it — the pipelined engine's
+    /// determinism rests here.
+    pub fn produce(
+        &mut self,
+        grads: &[&[f32]],
+        density: f64,
+        cc: &CompressorConfig,
+        device: Option<&DeviceSelector>,
+    ) -> Result<Produced, String> {
+        assert_eq!(grads.len(), self.layers.len(), "one gradient per bucket layer");
+        let mut out = Produced {
+            blob: Vec::new(),
+            selected: 0,
+            elems: 0,
+            mask_secs: 0.0,
+            select_secs: 0.0,
+            pack_secs: 0.0,
+        };
+        for (layer, grad) in self.layers.iter_mut().zip(grads) {
+            let n = layer.spec.n;
+            debug_assert_eq!(grad.len(), n);
+
+            // momentum correction (Alg. 4 lines 11-19): via the fused L1
+            // kernel on the device path, host otherwise
+            let t0 = Instant::now();
+            let dev_accum = device.filter(|d| d.ops.has_momentum_accum()).map(|d| &d.ops);
+            if let Some(ops) = dev_accum {
+                let (momentum, nesterov) = match layer.residual.accumulation {
+                    Accumulation::Sgd => (0.0, false),
+                    Accumulation::Momentum { momentum } => (momentum, false),
+                    Accumulation::Nesterov { momentum } => (momentum, true),
+                };
+                let (v, u) = ops
+                    .momentum_accum(
+                        layer.residual.residual(),
+                        layer.residual.momentum_buf(),
+                        grad,
+                        momentum,
+                        nesterov,
+                    )
+                    .map_err(|e| format!("momentum_accum: {e}"))?;
+                layer.residual.set_buffers(v, u);
+            } else {
+                layer.residual.accumulate(grad);
+            }
+            out.mask_secs += t0.elapsed().as_secs_f64();
+
+            let k = k_for(n, density);
+            let sign =
+                if layer.spec.quantize { Some(layer.alternator.next_sign()) } else { None };
+            let t1 = Instant::now();
+            let sel = layer.select(device, k, sign, cc)?;
+            out.select_secs += t1.elapsed().as_secs_f64();
+
+            let t2 = Instant::now();
+            layer.residual.mask(&sel);
+            out.mask_secs += t2.elapsed().as_secs_f64();
+            out.selected += sel.len();
+            out.elems += n;
+
+            let t3 = Instant::now();
+            if layer.spec.quantize {
+                out.blob.extend(pack_quant(&QuantizedSet::from_sparse(&sel)));
+            } else {
+                out.blob.extend(pack_plain(&sel));
+            }
+            out.pack_secs += t3.elapsed().as_secs_f64();
+        }
+        Ok(out)
+    }
+}
+
+impl BucketLayer {
+    /// Communication-set selection, host or device flavor (moved from
+    /// the pre-engine `run_worker`, math unchanged).
+    fn select(
+        &mut self,
+        device: Option<&DeviceSelector>,
+        k: usize,
+        sign: Option<f32>,
+        cc: &CompressorConfig,
+    ) -> Result<SparseTensor, String> {
+        let residual = &mut self.residual;
+
+        if let Some(dev) = device {
+            // L1-kernel path
+            let d = match self.spec.method {
+                Method::TrimmedTopk | Method::ExactTopk => {
+                    dev.trimmed_topk(residual.residual(), k, cc.trim_eps, sign)
+                }
+                Method::SampledBinarySearch => dev.threshold_binary_search(
+                    residual.residual(),
+                    k,
+                    cc.bs.eps,
+                    cc.bs.max_iters,
+                    sign,
+                ),
+                Method::Dense => unreachable!("dense layers never select"),
+            }
+            .map_err(|e| format!("device select: {e}"))?;
+            return Ok(d.sparse);
+        }
+
+        // host path (per-step density, bucket-owned threshold cache)
+        let v = residual.residual();
+        let sel = match self.spec.method {
+            Method::ExactTopk => exact_topk(v, k, sign),
+            Method::TrimmedTopk => trimmed_topk(v, k, cc.trim_eps, sign),
+            Method::SampledBinarySearch => {
+                // §6.4: threshold reuse is incompatible with sign alternation
+                if sign.is_none() {
+                    if let Some((thr, age)) = self.cached_thr {
+                        if age < cc.interval {
+                            let s = SparseTensor::compact_above(v, thr);
+                            // cache is valid unless the residual drifted far
+                            // from the threshold (the paper's re-select rule)
+                            if !s.is_empty() && s.len() <= 4 * k {
+                                self.cached_thr = Some((thr, age + 1));
+                                return Ok(s);
+                            }
+                            // fall through to a fresh search
+                        }
+                    }
+                }
+                let sel = threshold_binary_search(v, k, cc.bs, sign);
+                if sign.is_none() {
+                    self.cached_thr = Some((sel.threshold, 1));
+                }
+                sel
+            }
+            Method::Dense => unreachable!(),
+        };
+        Ok(sel.sparse)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::message::{unpack_plain, unpack_quant};
+    use crate::util::proptest::Gen;
+
+    fn spec(li: usize, n: usize, quantize: bool) -> LayerSpec {
+        LayerSpec { li, n, method: Method::TrimmedTopk, quantize }
+    }
+
+    #[test]
+    fn build_buckets_respects_fusion_cap() {
+        let specs: Vec<LayerSpec> =
+            [100usize, 200, 300, 400].iter().enumerate().map(|(i, &n)| spec(i, n, false)).collect();
+        let buckets = build_buckets(&specs, 500, Accumulation::Sgd);
+        // greedy: [100,200] -> 300; +300 = 600 > 500 -> [300]; [400]
+        assert_eq!(buckets.len(), 3);
+        assert_eq!(buckets[0].n_layers(), 2);
+        let lis: Vec<usize> = buckets.iter().flat_map(|b| b.specs().map(|s| s.li)).collect();
+        assert_eq!(lis, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn no_fusion_means_singleton_buckets() {
+        let specs: Vec<LayerSpec> = (0..3).map(|i| spec(i, 50, false)).collect();
+        let buckets = build_buckets(&specs, 0, Accumulation::Sgd);
+        assert_eq!(buckets.len(), 3);
+        assert!(buckets.iter().all(|b| b.n_layers() == 1));
+    }
+
+    #[test]
+    fn produce_packs_every_layer_in_order() {
+        let specs = vec![spec(0, 400, false), spec(1, 300, true)];
+        let mut buckets = build_buckets(&specs, 1000, Accumulation::Sgd);
+        assert_eq!(buckets.len(), 1);
+        let mut g = Gen::new(7);
+        let g0 = g.vec_normal(400, 1.0);
+        let g1 = g.vec_normal(300, 1.0);
+        let cc = CompressorConfig::default();
+        let p = buckets[0]
+            .produce(&[g0.as_slice(), g1.as_slice()], 0.05, &cc, None)
+            .unwrap();
+        assert_eq!(p.elems, 700);
+        // blob = one plain message then one quantized message
+        let (s, used) = unpack_plain(&p.blob).unwrap();
+        assert_eq!(s.len(), 20, "ceil(400 * 0.05)");
+        let (q, used2) = unpack_quant(&p.blob[used..]).unwrap();
+        assert_eq!(q.len(), 15, "ceil(300 * 0.05)");
+        assert_eq!(used + used2, p.blob.len());
+        assert_eq!(p.selected, 35);
+    }
+
+    #[test]
+    fn produce_is_deterministic_across_calls_on_equal_state() {
+        let specs = vec![spec(0, 600, false)];
+        let cc = CompressorConfig::default();
+        let mut g = Gen::new(3);
+        let grad = g.vec_normal(600, 1.0);
+        let mut a = build_buckets(&specs, 0, Accumulation::Momentum { momentum: 0.9 });
+        let mut b = build_buckets(&specs, 0, Accumulation::Momentum { momentum: 0.9 });
+        for _ in 0..3 {
+            let pa = a[0].produce(&[grad.as_slice()], 0.01, &cc, None).unwrap();
+            let pb = b[0].produce(&[grad.as_slice()], 0.01, &cc, None).unwrap();
+            assert_eq!(pa.blob, pb.blob, "same state + grads must pack the same bits");
+        }
+    }
+
+    #[test]
+    fn quantized_layer_alternates_sign_across_steps() {
+        let specs = vec![spec(0, 500, true)];
+        let mut buckets = build_buckets(&specs, 0, Accumulation::Sgd);
+        let mut g = Gen::new(11);
+        let grad = g.vec_normal(500, 1.0);
+        let cc = CompressorConfig::default();
+        let p1 = buckets[0].produce(&[grad.as_slice()], 0.02, &cc, None).unwrap();
+        let p2 = buckets[0].produce(&[grad.as_slice()], 0.02, &cc, None).unwrap();
+        let (q1, _) = unpack_quant(&p1.blob).unwrap();
+        let (q2, _) = unpack_quant(&p2.blob).unwrap();
+        assert!(q1.mean > 0.0, "first pass selects top-k");
+        assert!(q2.mean < 0.0, "second pass selects bottom-k");
+    }
+}

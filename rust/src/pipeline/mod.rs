@@ -1,0 +1,137 @@
+//! Synchronization engines: how one step's compressed buckets reach the
+//! fabric.
+//!
+//! The paper's end-to-end speedups (§5.3, Figs. 7-9) depend on *hiding*
+//! communication behind computation, not just shrinking it.  This module
+//! turns the transport subsystem into that wall-clock win by making the
+//! per-step bucket synchronization a strategy:
+//!
+//! * [`Sequential`] — the historical schedule and the correctness
+//!   *oracle*: produce (accumulate → select → mask → pack) and allgather
+//!   each bucket inline on the training thread, one after another.
+//! * [`Pipelined`] — hands each bucket, in backward order, to a
+//!   communication thread pool of `inflight` workers.  While bucket *b*'s
+//!   allgather waits on the wire, bucket *b+1* is selecting and packing —
+//!   selection, encoding and the collective all overlap across buckets.
+//!   Traffic is tag-multiplexed per bucket over one fabric endpoint
+//!   (`collectives::mux`), so concurrent collectives never steal each
+//!   other's messages.
+//!
+//! ## Determinism
+//!
+//! Both engines produce **bit-identical** parameters (pinned by
+//! `tests/pipeline.rs`, on the in-process and the TCP fabric):
+//!
+//! 1. `BucketState::produce` is pure given (state, grads, density) — the
+//!    thread that runs it cannot affect the packed bits.
+//! 2. Each bucket's collective runs on a private tag channel whose
+//!    per-(src, dst, tag) order is preserved end-to-end, so the gathered
+//!    blobs match the sequential run's exactly.
+//! 3. [`SyncEngine::sync_step`] delivers finished buckets to the apply
+//!    callback in *bucket order*, whatever order they completed in — the
+//!    barrier at the optimizer step.  Scatter-adds therefore run in the
+//!    same float order as the sequential engine.
+//!
+//! The only observable difference is wall-clock and one tag word per
+//! message of mux overhead (audited exactly in `tests/pipeline.rs`).
+//!
+//! ## Constraints
+//!
+//! The engine choice must be uniform across ranks (tagged and untagged
+//! wire formats don't mix), and the pipelined engine cannot drive device
+//! selection — PJRT clients are thread-bound (`config::validate`
+//! rejects the combination).
+
+pub mod bucket;
+mod pipelined;
+mod sequential;
+
+pub use bucket::{build_buckets, BucketState, LayerSpec, Produced};
+pub use pipelined::Pipelined;
+pub use sequential::Sequential;
+
+use crate::compression::message::{unpack_plain, unpack_quant};
+use crate::util::timer::PhaseTimer;
+
+/// Mux tag reserved for the training loop's own collectives (dense
+/// allreduce, loss averaging, replica-hash checks).
+pub const CTRL_TAG: u32 = 0;
+/// Bucket `b` communicates on tag `BUCKET_TAG_BASE + b`.
+pub const BUCKET_TAG_BASE: u32 = 1;
+
+/// One synchronized bucket, delivered to the apply callback in bucket
+/// order.
+pub struct BucketDone {
+    /// Bucket index (backward order, 0 = deepest layers).
+    pub bucket: usize,
+    /// (layer index, quantized) per layer, in packing order — everything
+    /// the decompression walk needs.
+    pub layers: Vec<(usize, bool)>,
+    /// Gathered per-rank blobs, indexed by rank.
+    pub gathered: Vec<Vec<u32>>,
+    /// Elements this rank selected across the bucket's layers.
+    pub selected: usize,
+    /// Total elements across the bucket's layers.
+    pub elems: usize,
+}
+
+impl BucketDone {
+    /// The §5.4 decompression walk: scatter-add every rank's gathered
+    /// messages for this bucket into the parameter buffers, scaled by
+    /// `scale` (the worker passes `-lr / world`).  The single shared
+    /// implementation behind the worker, the determinism tests and the
+    /// smoke bench — so the bit-identical pin always covers the
+    /// production walk.
+    pub fn apply_to(&self, params: &mut [Vec<f32>], scale: f32) -> Result<(), String> {
+        for rank_blob in &self.gathered {
+            let mut off = 0usize;
+            for &(li, quantized) in &self.layers {
+                if quantized {
+                    let (q, used) = unpack_quant(&rank_blob[off..])
+                        .map_err(|e| format!("layer {li}: {e}"))?;
+                    let add = q.mean * scale;
+                    for &i in &q.indices {
+                        params[li][i as usize] += add;
+                    }
+                    off += used;
+                } else {
+                    let (s, used) = unpack_plain(&rank_blob[off..])
+                        .map_err(|e| format!("layer {li}: {e}"))?;
+                    s.scatter_add(&mut params[li], scale);
+                    off += used;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-step compressed-bucket synchronization strategy.
+///
+/// The worker calls [`sync_step`](SyncEngine::sync_step) once per
+/// non-warm-up step after the dense layers' allreduce; the engine owns
+/// the compressed layers' residual state across steps.
+pub trait SyncEngine {
+    /// Engine label for logs and reports.
+    fn name(&self) -> &'static str;
+
+    fn n_buckets(&self) -> usize;
+
+    /// Synchronize every bucket for one step.  `grads` is the full
+    /// per-layer gradient set, indexed by schema layer id; engines read
+    /// only their buckets' layers.  Calls `apply` exactly once per bucket
+    /// **in bucket order** — the deterministic reduction point — and
+    /// returns after all buckets are applied (the optimizer barrier).
+    ///
+    /// Phase seconds for mask/select/pack/comm are merged into `timer`
+    /// as *component* times (the Fig. 10 convention): under the
+    /// pipelined engine they overlap in wall-clock, so they sum to more
+    /// than the elapsed time.
+    fn sync_step(
+        &mut self,
+        grads: &[Vec<f32>],
+        density: f64,
+        timer: &mut PhaseTimer,
+        apply: &mut dyn FnMut(BucketDone) -> Result<(), String>,
+    ) -> Result<(), String>;
+}

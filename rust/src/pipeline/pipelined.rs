@@ -1,0 +1,203 @@
+//! The pipelined sync engine: a bounded comm thread pool overlaps bucket
+//! selection/encoding with the collectives.
+//!
+//! Each step, every bucket becomes a task owning its compressor state
+//! and a snapshot of its layers' gradients.  `inflight` pool workers pop
+//! tasks in backward (bucket) order — the bounded in-flight window — run
+//! produce (select → encode) and the bucket's allgather on its private
+//! tag channel, and report back.  The engine collects results, restores
+//! each bucket's state, and applies them in bucket order regardless of
+//! completion order: the optimizer-step barrier that keeps reductions
+//! deterministic.
+//!
+//! ## Progress
+//!
+//! Workers pop buckets in order, so the globally lowest-numbered
+//! incomplete bucket is in (or next into) every rank's window; sends are
+//! buffered, so by induction on collective rounds that bucket always
+//! completes — the window never deadlocks.  Tag reuse across steps is
+//! safe because per-(src, dst, tag) FIFO order is end-to-end (see
+//! `collectives::mux`).
+//!
+//! ## Failure
+//!
+//! A produce/apply error aborts the step; in-flight peers then observe a
+//! dead fabric and panic out of their collectives (clean `Err` surfaces
+//! are for `recv_checked` users — a dead peer mid-collective is fatal by
+//! the transport contract).
+
+use super::bucket::BucketState;
+use super::{BucketDone, SyncEngine, BUCKET_TAG_BASE};
+use crate::collectives::mux::{TagChannel, TagMux};
+use crate::collectives::{allgather, Transport};
+use crate::compression::CompressorConfig;
+use crate::coordinator::metrics::phase;
+use crate::util::timer::PhaseTimer;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+/// One in-flight bucket: owned state + this step's gradient slices
+/// (borrowed — the caller's gradient set outlives the step's scope, so
+/// no copies cross the thread boundary).
+struct Task<'g> {
+    bucket: usize,
+    state: BucketState,
+    grads: Vec<&'g [f32]>,
+}
+
+/// What a pool worker hands back.
+struct TaskOut {
+    state: BucketState,
+    gathered: Vec<Vec<u32>>,
+    selected: usize,
+    elems: usize,
+    mask_secs: f64,
+    select_secs: f64,
+    pack_secs: f64,
+    comm_secs: f64,
+}
+
+/// The pipelined engine.  `T` is the fabric endpoint the mux wraps —
+/// `&TcpTransport`, `&LocalTransport`, or an owned endpoint in tests.
+pub struct Pipelined<T: Transport + Send + Sync> {
+    mux: Arc<TagMux<T>>,
+    /// Bucket states, parked here between steps (`None` while in flight).
+    slots: Vec<Option<BucketState>>,
+    /// (layer index, quantized) per bucket — the stable copy handed out
+    /// in [`BucketDone`] while the state itself is on a pool thread.
+    groups: Vec<Vec<(usize, bool)>>,
+    inflight: usize,
+    cc: CompressorConfig,
+}
+
+impl<T: Transport + Send + Sync> Pipelined<T> {
+    /// `mux` must reserve tags `BUCKET_TAG_BASE .. BUCKET_TAG_BASE +
+    /// buckets.len()` (plus the control tag below them).
+    pub fn new(
+        mux: Arc<TagMux<T>>,
+        buckets: Vec<BucketState>,
+        inflight: usize,
+        cc: CompressorConfig,
+    ) -> Pipelined<T> {
+        assert!(inflight >= 1, "the in-flight window must admit at least one bucket");
+        assert!(
+            mux.n_tags() >= BUCKET_TAG_BASE + buckets.len() as u32,
+            "mux reserves too few tags for {} buckets",
+            buckets.len()
+        );
+        let groups = buckets
+            .iter()
+            .map(|b| b.specs().map(|s| (s.li, s.quantize)).collect())
+            .collect();
+        Pipelined { mux, slots: buckets.into_iter().map(Some).collect(), groups, inflight, cc }
+    }
+}
+
+impl<T: Transport + Send + Sync> SyncEngine for Pipelined<T> {
+    fn name(&self) -> &'static str {
+        "pipelined"
+    }
+
+    fn n_buckets(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn sync_step(
+        &mut self,
+        grads: &[Vec<f32>],
+        density: f64,
+        timer: &mut PhaseTimer,
+        apply: &mut dyn FnMut(BucketDone) -> Result<(), String>,
+    ) -> Result<(), String> {
+        let n = self.slots.len();
+        if n == 0 {
+            return Ok(());
+        }
+        // Queue every bucket's task in backward order.  Each task borrows
+        // its layers' gradient slices (the barrier below keeps `grads`
+        // alive past every worker) and owns its bucket state outright —
+        // the state moves (never copies) to whichever worker runs it.
+        let mut tasks = VecDeque::with_capacity(n);
+        for b in 0..n {
+            let state = self.slots[b].take().expect("bucket state parked between steps");
+            let g: Vec<&[f32]> = state.specs().map(|s| grads[s.li].as_slice()).collect();
+            tasks.push_back(Task { bucket: b, state, grads: g });
+        }
+        let queue = Mutex::new(tasks);
+        let (res_tx, res_rx) = channel::<(usize, Result<TaskOut, String>)>();
+        let workers = self.inflight.min(n);
+
+        thread::scope(|s| -> Result<(), String> {
+            for _ in 0..workers {
+                let mux = Arc::clone(&self.mux);
+                let tx = res_tx.clone();
+                let cc = self.cc;
+                let queue = &queue;
+                s.spawn(move || loop {
+                    let task = queue.lock().unwrap().pop_front();
+                    let Some(mut task) = task else { return };
+                    let out = match task.state.produce(&task.grads, density, &cc, None) {
+                        Ok(p) => {
+                            let chan = TagChannel::new(
+                                Arc::clone(&mux),
+                                BUCKET_TAG_BASE + task.bucket as u32,
+                            );
+                            let t0 = Instant::now();
+                            let gathered = allgather(&chan, p.blob);
+                            Ok(TaskOut {
+                                state: task.state,
+                                gathered,
+                                selected: p.selected,
+                                elems: p.elems,
+                                mask_secs: p.mask_secs,
+                                select_secs: p.select_secs,
+                                pack_secs: p.pack_secs,
+                                comm_secs: t0.elapsed().as_secs_f64(),
+                            })
+                        }
+                        Err(e) => Err(e),
+                    };
+                    if tx.send((task.bucket, out)).is_err() {
+                        return; // collector gone (step aborted)
+                    }
+                });
+            }
+            drop(res_tx);
+
+            // Collect and apply in bucket order regardless of completion
+            // order — the deterministic barrier at the optimizer step.
+            let mut parked: BTreeMap<usize, Result<TaskOut, String>> = BTreeMap::new();
+            for expect in 0..n {
+                let out = loop {
+                    if let Some(o) = parked.remove(&expect) {
+                        break o;
+                    }
+                    match res_rx.recv() {
+                        Ok((b, o)) if b == expect => break o,
+                        Ok((b, o)) => {
+                            parked.insert(b, o);
+                        }
+                        Err(_) => return Err("pipelined sync: comm pool hung up".into()),
+                    }
+                };
+                let out = out.map_err(|e| format!("bucket {expect}: {e}"))?;
+                timer.add(phase::MASK, out.mask_secs);
+                timer.add(phase::SELECT, out.select_secs);
+                timer.add(phase::PACK, out.pack_secs);
+                timer.add(phase::COMM_SPARSE, out.comm_secs);
+                self.slots[expect] = Some(out.state);
+                apply(BucketDone {
+                    bucket: expect,
+                    layers: self.groups[expect].clone(),
+                    gathered: out.gathered,
+                    selected: out.selected,
+                    elems: out.elems,
+                })?;
+            }
+            Ok(())
+        })
+    }
+}

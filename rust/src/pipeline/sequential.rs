@@ -1,0 +1,69 @@
+//! The sequential sync engine: the historical inline schedule, kept as
+//! the correctness oracle the pipelined engine is pinned against.
+
+use super::bucket::BucketState;
+use super::{BucketDone, SyncEngine};
+use crate::collectives::{allgather, Transport};
+use crate::compression::CompressorConfig;
+use crate::coordinator::metrics::phase;
+use crate::runtime::DeviceSelector;
+use crate::util::timer::PhaseTimer;
+
+/// Produce + allgather every bucket inline on the calling thread, in
+/// bucket order.  The only engine that can drive device selection (the
+/// PJRT client is owned by this thread).
+pub struct Sequential<'a, T: Transport> {
+    transport: &'a T,
+    device: Option<DeviceSelector<'a>>,
+    buckets: Vec<BucketState>,
+    cc: CompressorConfig,
+}
+
+impl<'a, T: Transport> Sequential<'a, T> {
+    pub fn new(
+        transport: &'a T,
+        device: Option<DeviceSelector<'a>>,
+        buckets: Vec<BucketState>,
+        cc: CompressorConfig,
+    ) -> Sequential<'a, T> {
+        Sequential { transport, device, buckets, cc }
+    }
+}
+
+impl<T: Transport> SyncEngine for Sequential<'_, T> {
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+
+    fn n_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    fn sync_step(
+        &mut self,
+        grads: &[Vec<f32>],
+        density: f64,
+        timer: &mut PhaseTimer,
+        apply: &mut dyn FnMut(BucketDone) -> Result<(), String>,
+    ) -> Result<(), String> {
+        for (b, state) in self.buckets.iter_mut().enumerate() {
+            let grefs: Vec<&[f32]> = state.specs().map(|s| grads[s.li].as_slice()).collect();
+            let produced = state
+                .produce(&grefs, density, &self.cc, self.device.as_ref())
+                .map_err(|e| format!("bucket {b}: {e}"))?;
+            timer.add(phase::MASK, produced.mask_secs);
+            timer.add(phase::SELECT, produced.select_secs);
+            timer.add(phase::PACK, produced.pack_secs);
+            let gathered =
+                timer.time(phase::COMM_SPARSE, || allgather(&self.transport, produced.blob));
+            apply(BucketDone {
+                bucket: b,
+                layers: state.specs().map(|s| (s.li, s.quantize)).collect(),
+                gathered,
+                selected: produced.selected,
+                elems: produced.elems,
+            })?;
+        }
+        Ok(())
+    }
+}

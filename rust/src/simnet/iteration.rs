@@ -44,6 +44,16 @@ pub struct SimConfig {
     pub thresholds: PolicyThresholds,
     /// Backward/forward flop ratio (standard 2x).
     pub bwd_flop_ratio: f64,
+    /// Model the pipelined sync engine: collectives queue on the link
+    /// while the device stream runs ahead — per-window exposed time is
+    /// `max(comm, compute)`, not the sum.  `false` projects the
+    /// sequential engine (compute blocks on every collective).
+    pub pipeline: bool,
+    /// Bounded in-flight window under `pipeline`: issuing collective `i`
+    /// stalls the device stream until collective `i - inflight` left the
+    /// link.  0 = unbounded (the idealized overlap of the paper's
+    /// figures).
+    pub inflight: usize,
 }
 
 impl Default for SimConfig {
@@ -53,6 +63,8 @@ impl Default for SimConfig {
             batch_per_gpu: 32,
             thresholds: PolicyThresholds::default(),
             bwd_flop_ratio: 2.0,
+            pipeline: true,
+            inflight: 0,
         }
     }
 }
@@ -143,9 +155,12 @@ pub fn simulate_iteration(
 
     let mut b = Breakdown { compute: fwd + bwd_total, ..Default::default() };
 
-    // device-stream clock (backprop + compression) and link clock
+    // device-stream clock (backprop + compression) and link clock; the
+    // link is single-ported (one collective at a time), and `ends`
+    // records per-collective completion for the in-flight window
     let mut gpu = 0.0f64;
     let mut link = 0.0f64;
+    let mut ends: Vec<f64> = Vec::new();
 
     let per_layer_overlap = !model.is_rnn;
     if !per_layer_overlap {
@@ -154,26 +169,41 @@ pub fn simulate_iteration(
         link = bwd_total;
     }
 
+    // issue one collective: start when both the device stream has
+    // produced it and the link is free; sequential engines (`!pipeline`)
+    // block the device stream until it completes
+    let issue = |gpu: &mut f64, link: &mut f64, ends: &mut Vec<f64>, dur: f64| {
+        let start = gpu.max(*link);
+        *link = start + dur;
+        ends.push(*link);
+        if !cfg.pipeline {
+            *gpu = *link;
+        }
+    };
+
     // iterate layers in backprop order (last layer first)
     for layer in model.layers.iter().rev() {
         if per_layer_overlap {
             gpu += bwd_per_layer;
         }
+        // bounded in-flight window: the producer stalls until collective
+        // i - inflight retired (the pipelined engine's backpressure)
+        if cfg.pipeline && cfg.inflight > 0 && ends.len() >= cfg.inflight {
+            gpu = gpu.max(ends[ends.len() - cfg.inflight]);
+        }
         let bytes = layer.elems as f64 * 4.0;
         match strategy {
             Strategy::Dense => {
-                let start = gpu.max(link);
                 let dur = allreduce_time(machine, p, bytes);
                 b.comm += dur;
-                link = start + dur;
+                issue(&mut gpu, &mut link, &mut ends, dur);
             }
             Strategy::Rgc | Strategy::QuantRgc => {
                 let method = Method::for_size(layer.elems * 4, cfg.thresholds);
                 if method == Method::Dense {
-                    let start = gpu.max(link);
                     let dur = allreduce_time(machine, p, bytes);
                     b.comm += dur;
-                    link = start + dur;
+                    issue(&mut gpu, &mut link, &mut ends, dur);
                 } else {
                     // quantization is never applied to the output layer
                     let quantized = strategy == Strategy::QuantRgc && !layer.is_output;
@@ -185,10 +215,9 @@ pub fn simulate_iteration(
                     b.mask += t_mask;
                     b.pack += t_pack;
                     gpu += t_sel + t_mask + t_pack;
-                    let start = gpu.max(link);
                     let dur = allgather_time(machine, p, message_bytes(k, quantized));
                     b.comm += dur;
-                    link = start + dur;
+                    issue(&mut gpu, &mut link, &mut ends, dur);
                     // unpack: apply p compressed sets of size k, one
                     // (launch + scatter) per rank per layer — the p·γ₁
                     // term of Eq. 1
@@ -351,6 +380,64 @@ mod tests {
         assert!(b.select > 0.0 && b.mask > 0.0 && b.pack > 0.0);
         assert!(b.comm > 0.0 && b.unpack > 0.0);
         assert!(b.total >= b.compute);
+    }
+
+    #[test]
+    fn sequential_engine_never_beats_pipelined() {
+        // removing overlap can only expose more time, for every model,
+        // machine and strategy
+        let mach = Machine::piz_daint();
+        for name in ["alexnet", "vgg16", "resnet50", "lstm-ptb"] {
+            let m = zoo::by_name(name).unwrap();
+            for strat in [Strategy::Dense, Strategy::Rgc, Strategy::QuantRgc] {
+                let piped = simulate_iteration(&m, &mach, 16, strat, &cfg());
+                let seq_cfg = SimConfig { pipeline: false, ..cfg() };
+                let seq = simulate_iteration(&m, &mach, 16, strat, &seq_cfg);
+                assert!(
+                    seq.total >= piped.total * (1.0 - 1e-9),
+                    "{name}/{}: sequential {} < pipelined {}",
+                    strat.label(),
+                    seq.total,
+                    piped.total
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn no_overlap_total_is_the_sum_of_parts() {
+        // with the sequential engine nothing hides: iteration time is
+        // exactly compute + select + mask + pack + comm + unpack
+        let m = zoo::vgg16();
+        let mach = Machine::piz_daint();
+        let seq_cfg = SimConfig { pipeline: false, ..cfg() };
+        let b = simulate_iteration(&m, &mach, 32, Strategy::Rgc, &seq_cfg);
+        let sum = b.component_sum();
+        assert!((b.total - sum).abs() / sum < 1e-9, "total {} vs sum {}", b.total, sum);
+    }
+
+    #[test]
+    fn inflight_window_is_monotone() {
+        // a tighter window can only stall the producer more
+        let m = zoo::alexnet();
+        let mach = Machine::piz_daint();
+        let t = |inflight: usize| {
+            let c = SimConfig { inflight, ..cfg() };
+            simulate_iteration(&m, &mach, 64, Strategy::Rgc, &c).total
+        };
+        let (w1, w4, unbounded) = (t(1), t(4), t(0));
+        assert!(w1 >= w4 * (1.0 - 1e-9), "window 1 {w1} < window 4 {w4}");
+        assert!(w4 >= unbounded * (1.0 - 1e-9), "window 4 {w4} < unbounded {unbounded}");
+        // and the window sits between the two engine extremes
+        let seq = simulate_iteration(
+            &m,
+            &mach,
+            64,
+            Strategy::Rgc,
+            &SimConfig { pipeline: false, ..cfg() },
+        )
+        .total;
+        assert!(seq >= w1 * (1.0 - 1e-9), "sequential {seq} < window-1 {w1}");
     }
 
     #[test]

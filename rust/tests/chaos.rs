@@ -1,0 +1,202 @@
+//! Chaos/fault injection for the network stack: a corrupt, truncated or
+//! dying peer must surface a clean `Err` from `recv_checked` — never a
+//! hang, never a panic.
+//!
+//! The TCP tests impersonate rank 1 of a 2-rank job by speaking the
+//! bootstrap protocol by hand ([`fake_rank1`]), then injecting raw bytes
+//! into the established mesh link.  The tag tests inject malformed
+//! bucket-tagged messages under a `TagMux`.
+
+use redsync::collectives::mux::{TagChannel, TagMux};
+use redsync::collectives::{LocalFabric, Transport};
+use redsync::net::frame::{read_frame, write_frame, MAX_FRAME_WORDS};
+use redsync::net::{free_loopback_addr, TcpOptions, TcpTransport};
+use std::io::Write;
+use std::net::{Shutdown, TcpStream};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// `REG` frame kind of the rank-0 rendezvous protocol (net/tcp.rs wire
+/// constant: "RDS" + kind 1).
+const REG: u32 = 0x5244_5301;
+
+/// Spawn the real rank 0 of a 2-rank job.
+fn rank0(addr: String) -> thread::JoinHandle<TcpTransport> {
+    thread::spawn(move || TcpTransport::connect(&TcpOptions::new(2, 0, addr)).expect("rank 0"))
+}
+
+/// Impersonate rank 1: register with rank 0, swallow the directory, and
+/// return the raw mesh socket to rank 0.  (In a 2-rank world rank 1
+/// neither dials nor accepts anyone else, so this one socket is the
+/// whole mesh.)
+fn fake_rank1(addr: &str) -> TcpStream {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut s = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    panic!("rendezvous never came up: {e}");
+                }
+                thread::sleep(Duration::from_millis(10));
+            }
+        }
+    };
+    // [REG, world, rank, listen_port] — the port is never dialed here
+    write_frame(&mut s, &[REG, 2, 1, 1]).unwrap();
+    s.flush().unwrap();
+    let dir = read_frame(&mut s).unwrap().expect("directory frame");
+    assert_eq!(dir[1], 2, "directory should echo world=2");
+    s
+}
+
+/// Run `f` with a watchdog: a hang is a test failure, not a stuck suite.
+fn with_timeout<R: Send + 'static>(f: impl FnOnce() -> R + Send + 'static) -> R {
+    let (tx, rx) = channel();
+    thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    rx.recv_timeout(Duration::from_secs(30)).expect("operation hung (expected a clean error)")
+}
+
+#[test]
+fn truncated_frame_header_is_clean_error() {
+    let addr = free_loopback_addr();
+    let h = rank0(addr.clone());
+    let mut fake = fake_rank1(&addr);
+    let t0 = h.join().unwrap();
+    // half a length prefix, then FIN
+    fake.write_all(&[0x03, 0x00]).unwrap();
+    fake.flush().unwrap();
+    drop(fake);
+    let err = with_timeout(move || t0.recv_checked(1)).unwrap_err();
+    assert_eq!(err.peer, 1);
+    assert!(err.reason.contains("broke"), "want a stream-broke cause, got: {err}");
+}
+
+#[test]
+fn oversized_length_prefix_is_clean_error() {
+    let addr = free_loopback_addr();
+    let h = rank0(addr.clone());
+    let mut fake = fake_rank1(&addr);
+    let t0 = h.join().unwrap();
+    // a frame claiming u32::MAX words: must be rejected before any
+    // allocation, not trusted and waited for
+    fake.write_all(&u32::MAX.to_le_bytes()).unwrap();
+    fake.flush().unwrap();
+    let err = with_timeout(move || t0.recv_checked(1)).unwrap_err();
+    assert!(err.reason.contains("broke"), "{err}");
+    assert!(
+        MAX_FRAME_WORDS < u32::MAX as usize,
+        "cap must be enforceable from a u32 length prefix"
+    );
+    drop(fake);
+}
+
+#[test]
+fn peer_fin_mid_message_is_clean_error() {
+    let addr = free_loopback_addr();
+    let h = rank0(addr.clone());
+    let mut fake = fake_rank1(&addr);
+    let t0 = h.join().unwrap();
+    // a valid header promising 8 words, 3 words of payload, then FIN
+    let mut partial = Vec::new();
+    partial.extend_from_slice(&8u32.to_le_bytes());
+    for w in [1u32, 2, 3] {
+        partial.extend_from_slice(&w.to_le_bytes());
+    }
+    fake.write_all(&partial).unwrap();
+    fake.flush().unwrap();
+    let _ = fake.shutdown(Shutdown::Write);
+    let err = with_timeout(move || t0.recv_checked(1)).unwrap_err();
+    assert!(err.reason.contains("broke"), "{err}");
+    drop(fake);
+}
+
+#[test]
+fn clean_fin_between_frames_is_clean_error_not_hang() {
+    let addr = free_loopback_addr();
+    let h = rank0(addr.clone());
+    let mut fake = fake_rank1(&addr);
+    let t0 = h.join().unwrap();
+    // one intact frame, then a graceful close
+    write_frame(&mut fake, &[7, 8, 9]).unwrap();
+    fake.flush().unwrap();
+    let _ = fake.shutdown(Shutdown::Write);
+    let (msg, err) = with_timeout(move || {
+        let msg = t0.recv_checked(1);
+        let err = t0.recv_checked(1);
+        (msg, err)
+    });
+    assert_eq!(msg.unwrap(), vec![7, 8, 9], "data before the FIN is delivered");
+    let err = err.unwrap_err();
+    assert!(err.reason.contains("closed"), "{err}");
+    drop(fake);
+}
+
+#[test]
+fn out_of_order_bucket_tags_route_without_loss() {
+    // tags arriving in any order are routed, FIFO per tag — no message
+    // crosses channels, none is dropped
+    let mut fabric = LocalFabric::new(2);
+    let a = Arc::new(TagMux::new(fabric.take(0), 4));
+    let b = fabric.take(1);
+    // peer interleaves three buckets' streams in scrambled order (the
+    // tag word travels at the end of each message)
+    for (tag, val) in [(3u32, 30u32), (1, 10), (2, 20), (1, 11), (3, 31), (2, 21)] {
+        b.send(0, vec![val, tag]);
+    }
+    for tag in [1u32, 2, 3] {
+        let chan = TagChannel::new(Arc::clone(&a), tag);
+        assert_eq!(chan.recv(1), vec![tag * 10]);
+        assert_eq!(chan.recv(1), vec![tag * 10 + 1]);
+    }
+}
+
+#[test]
+fn foreign_bucket_tag_is_clean_error() {
+    // a tag outside the engine's window (corrupt peer, or an engine
+    // mismatch across ranks) must error out, not park forever
+    let mut fabric = LocalFabric::new(2);
+    let a = Arc::new(TagMux::new(fabric.take(0), 3));
+    let b = fabric.take(1);
+    b.send(0, vec![1, 2, 3, 42]);
+    let chan = TagChannel::new(Arc::clone(&a), 0);
+    let err = with_timeout(move || chan.recv_checked(1)).unwrap_err();
+    assert!(err.reason.contains("outside"), "{err}");
+}
+
+#[test]
+fn untagged_message_on_multiplexed_fabric_is_clean_error() {
+    // a raw (sequential-engine) peer talking to a pipelined rank: its
+    // empty keepalive-style message has no tag word at all
+    let mut fabric = LocalFabric::new(2);
+    let a = Arc::new(TagMux::new(fabric.take(0), 2));
+    let b = fabric.take(1);
+    b.send(0, vec![]);
+    let chan = TagChannel::new(Arc::clone(&a), 1);
+    let err = with_timeout(move || chan.recv_checked(1)).unwrap_err();
+    assert!(err.reason.contains("untagged"), "{err}");
+}
+
+#[test]
+fn mux_over_tcp_surfaces_stream_breakage() {
+    // the full stack: corrupt frame -> tcp reader exits -> mux recv on a
+    // bucket channel reports the transport error
+    let addr = free_loopback_addr();
+    let h = rank0(addr.clone());
+    let mut fake = fake_rank1(&addr);
+    let t0 = h.join().unwrap();
+    fake.write_all(&u32::MAX.to_le_bytes()).unwrap();
+    fake.flush().unwrap();
+    let err = with_timeout(move || {
+        let mux = Arc::new(TagMux::new(t0, 2));
+        let chan = TagChannel::new(mux, 1);
+        chan.recv_checked(1)
+    })
+    .unwrap_err();
+    assert_eq!(err.peer, 1);
+    drop(fake);
+}

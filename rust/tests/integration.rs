@@ -341,3 +341,31 @@ fn fusion_respects_cap_granularity() {
     assert_eq!(a.final_loss, b.final_loss);
     assert_eq!(a.messages, b.messages);
 }
+
+#[test]
+fn pipelined_trainer_matches_sequential_bit_for_bit() {
+    // the full-stack engine A/B: same artifacts, same data, both
+    // engines — the loss curves must agree to the bit and every
+    // replica set must stay internally consistent
+    let Some(m) = manifest() else { return };
+    let seq_cfg = TrainConfig { fusion_cap_elems: 8 * 1024, ..base_cfg() };
+    let pipe_cfg = TrainConfig { pipeline: true, inflight: 2, ..seq_cfg.clone() };
+    let seq = Trainer::new(&m, seq_cfg).unwrap().run().unwrap();
+    let piped = Trainer::new(&m, pipe_cfg).unwrap().run().unwrap();
+    assert!(seq.replicas_consistent && piped.replicas_consistent);
+    assert_eq!(
+        seq.final_loss.to_bits(),
+        piped.final_loss.to_bits(),
+        "engines diverged: {} vs {}",
+        seq.final_loss,
+        piped.final_loss
+    );
+    assert_eq!(seq.loss_curve.len(), piped.loss_curve.len());
+    for ((s1, l1), (s2, l2)) in seq.loss_curve.iter().zip(&piped.loss_curve) {
+        assert_eq!(s1, s2);
+        assert_eq!(l1.to_bits(), l2.to_bits(), "loss curves diverged at step {s1}");
+    }
+    // pipelined moves the same payload plus one tag word per message
+    assert_eq!(seq.messages, piped.messages);
+    assert_eq!(piped.bytes, seq.bytes + 4 * piped.messages);
+}

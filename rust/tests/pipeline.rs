@@ -1,0 +1,283 @@
+//! Determinism + traffic audit for the sync engines.
+//!
+//! The `Pipelined` engine reorders *work* (selection and collectives run
+//! concurrently across buckets on a comm pool) but must not reorder
+//! *math*: after any number of steps its parameters are bit-identical to
+//! the `Sequential` oracle's, on both the in-process fabric and real
+//! loopback TCP sockets.  Its only wire-visible difference is the
+//! one-word bucket tag per message, which the traffic audit pins
+//! exactly (the Eq. 1 "headers once per in-flight bucket" accounting).
+//!
+//! No artifacts needed: the engines are driven directly with synthetic
+//! deterministic gradients, the same way the worker drives them.
+
+use redsync::collectives::mux::{TagChannel, TagMux};
+use redsync::collectives::transport::TrafficStats;
+use redsync::collectives::{LocalFabric, Transport};
+use redsync::compression::{Accumulation, CompressorConfig, Method};
+use redsync::coordinator::metrics::param_hash;
+use redsync::net::{free_loopback_addr, TcpOptions, TcpTransport};
+use redsync::pipeline::{
+    build_buckets, BucketDone, LayerSpec, Pipelined, Sequential, SyncEngine, BUCKET_TAG_BASE,
+};
+use redsync::util::rng::Pcg32;
+use redsync::util::timer::PhaseTimer;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+/// Synthetic model: sizes chosen so greedy fusion (cap 3000) yields four
+/// buckets, two of them multi-layer — singleton and fused paths both hit.
+const SIZES: &[usize] = &[2500, 600, 600, 600, 1800, 900, 400, 2200];
+const FUSION_CAP: usize = 3000;
+const WORLD: usize = 4;
+const STEPS: usize = 20;
+const DENSITY: f64 = 0.02;
+const LR: f32 = 0.05;
+
+fn specs(quantize_mix: bool) -> Vec<LayerSpec> {
+    SIZES
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| LayerSpec {
+            li: i,
+            n,
+            // exercise both selection paths: big layers binary-search
+            // (threshold cache), the rest trimmed top-k
+            method: if n >= 1500 { Method::SampledBinarySearch } else { Method::TrimmedTopk },
+            quantize: quantize_mix && i % 2 == 0,
+        })
+        .collect()
+}
+
+/// Deterministic per-(rank, step, layer) gradient — rank-dependent so the
+/// gathered merge actually mixes different index sets.
+fn grad(rank: usize, step: usize, li: usize, n: usize) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(((rank as u64) << 32) ^ ((step as u64) << 8) ^ li as u64);
+    let mut g = vec![0f32; n];
+    rng.fill_normal(&mut g, 1.0);
+    g
+}
+
+/// Run STEPS synthetic training steps through an engine; returns the
+/// FNV hash over the final parameter bits.
+fn run_steps(engine: &mut dyn SyncEngine, rank: usize, world: usize) -> u64 {
+    let mut params: Vec<Vec<f32>> = SIZES
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| {
+            let mut rng = Pcg32::seeded(0xBEEF ^ i as u64); // identical on every rank
+            let mut p = vec![0f32; n];
+            rng.fill_normal(&mut p, 0.5);
+            p
+        })
+        .collect();
+    let scale = -LR / world as f32;
+    let mut timer = PhaseTimer::new();
+    for step in 0..STEPS {
+        let grads: Vec<Vec<f32>> =
+            SIZES.iter().enumerate().map(|(i, &n)| grad(rank, step, i, n)).collect();
+        engine
+            .sync_step(&grads, DENSITY, &mut timer, &mut |done: BucketDone| {
+                // the worker's §5.4 decompression walk (shared impl)
+                done.apply_to(&mut params, scale)
+            })
+            .unwrap_or_else(|e| panic!("rank {rank} step {step}: {e}"));
+    }
+    param_hash(&params)
+}
+
+fn cc() -> CompressorConfig {
+    CompressorConfig { density: DENSITY, ..Default::default() }
+}
+
+fn acc() -> Accumulation {
+    Accumulation::Momentum { momentum: 0.9 }
+}
+
+fn run_sequential<T: Transport>(t: &T, quantize_mix: bool) -> u64 {
+    let buckets = build_buckets(&specs(quantize_mix), FUSION_CAP, acc());
+    let mut engine = Sequential::new(t, None, buckets, cc());
+    run_steps(&mut engine, t.rank(), t.world())
+}
+
+fn run_pipelined<T: Transport + Send + Sync>(t: T, inflight: usize, quantize_mix: bool) -> u64 {
+    let (rank, world) = (t.rank(), t.world());
+    let buckets = build_buckets(&specs(quantize_mix), FUSION_CAP, acc());
+    let n = buckets.len() as u32;
+    let mux = Arc::new(TagMux::new(t, BUCKET_TAG_BASE + n));
+    let mut engine = Pipelined::new(mux, buckets, inflight, cc());
+    run_steps(&mut engine, rank, world)
+}
+
+/// One thread per rank, with a deadlock watchdog.
+fn run_ranks<T, F>(transports: Vec<T>, f: F) -> Vec<u64>
+where
+    T: Transport + Send + 'static,
+    F: Fn(T) -> u64 + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let (done_tx, done_rx) = channel();
+    let handles: Vec<_> = transports
+        .into_iter()
+        .map(|t| {
+            let f = Arc::clone(&f);
+            let done = done_tx.clone();
+            thread::spawn(move || {
+                let r = f(t);
+                let _ = done.send(());
+                r
+            })
+        })
+        .collect();
+    drop(done_tx);
+    for _ in 0..handles.len() {
+        done_rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("a rank did not finish within 120s (deadlock or crash)");
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Bootstrap a full TCP mesh on loopback; returned in rank order.
+fn tcp_fabric(world: usize) -> Vec<TcpTransport> {
+    let addr = free_loopback_addr();
+    let handles: Vec<_> = (0..world)
+        .map(|rank| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                TcpTransport::connect(&TcpOptions::new(world, rank, addr)).expect("tcp bootstrap")
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+fn all_equal(hashes: &[u64]) -> bool {
+    hashes.iter().all(|&h| h == hashes[0])
+}
+
+#[test]
+fn pipelined_matches_sequential_on_local_fabric() {
+    for quantize_mix in [false, true] {
+        let mut local = LocalFabric::new(WORLD);
+        let seq = run_ranks(local.take_all(), move |t| run_sequential(&t, quantize_mix));
+        assert!(all_equal(&seq), "sequential replicas drifted: {seq:x?}");
+
+        let mut local = LocalFabric::new(WORLD);
+        let piped = run_ranks(local.take_all(), move |t| run_pipelined(t, 2, quantize_mix));
+        assert!(all_equal(&piped), "pipelined replicas drifted: {piped:x?}");
+
+        assert_eq!(
+            seq[0], piped[0],
+            "engines diverged (quantize_mix={quantize_mix}): params not bit-identical"
+        );
+    }
+}
+
+#[test]
+fn pipelined_matches_sequential_over_tcp_loopback() {
+    let seq = run_ranks(tcp_fabric(WORLD), |t| run_sequential(&t, true));
+    assert!(all_equal(&seq), "sequential replicas drifted over tcp: {seq:x?}");
+
+    let piped = run_ranks(tcp_fabric(WORLD), |t| run_pipelined(t, 2, true));
+    assert!(all_equal(&piped), "pipelined replicas drifted over tcp: {piped:x?}");
+
+    assert_eq!(seq[0], piped[0], "engines diverged over tcp");
+
+    // and TCP agrees with the in-process fabric bit-for-bit
+    let mut local = LocalFabric::new(WORLD);
+    let local_seq = run_ranks(local.take_all(), |t| run_sequential(&t, true));
+    assert_eq!(local_seq[0], seq[0], "fabrics diverged");
+}
+
+#[test]
+fn window_edges_still_bit_identical() {
+    // window 1 (fully serialized issue) and window >= buckets (all in
+    // flight) must still match the oracle
+    let mut local = LocalFabric::new(WORLD);
+    let seq = run_ranks(local.take_all(), |t| run_sequential(&t, false));
+    for inflight in [1usize, 8] {
+        let mut local = LocalFabric::new(WORLD);
+        let piped = run_ranks(local.take_all(), move |t| run_pipelined(t, inflight, false));
+        assert!(all_equal(&piped), "inflight={inflight} replicas drifted");
+        assert_eq!(seq[0], piped[0], "inflight={inflight} diverged from oracle");
+    }
+}
+
+#[test]
+fn pipelined_traffic_is_sequential_plus_one_tag_word_per_message() {
+    // Eq. 1 header audit: the pipelined engine moves exactly the same
+    // messages as the sequential one, plus one mux tag word per message
+    // — the per-bucket framing is charged once per in-flight message,
+    // never per layer.
+    let mut local = LocalFabric::new(WORLD);
+    let seq_stats = Arc::clone(&local.stats);
+    let seq = run_ranks(local.take_all(), |t| run_sequential(&t, true));
+
+    let mut local = LocalFabric::new(WORLD);
+    let pipe_stats: Arc<TrafficStats> = Arc::clone(&local.stats);
+    let piped = run_ranks(local.take_all(), |t| run_pipelined(t, 3, true));
+
+    assert_eq!(seq[0], piped[0], "audit precondition: same math");
+    assert_eq!(
+        seq_stats.message_count(),
+        pipe_stats.message_count(),
+        "same collective schedule => same message count"
+    );
+    let seq_words = seq_stats.bytes() / 4;
+    let pipe_words = pipe_stats.bytes() / 4;
+    assert_eq!(
+        pipe_words,
+        seq_words + pipe_stats.message_count(),
+        "mux overhead must be exactly one tag word per message"
+    );
+}
+
+#[test]
+fn empty_engine_is_a_no_op() {
+    let mut local = LocalFabric::new(1);
+    let t = local.take(0);
+    let mux = Arc::new(TagMux::new(t, BUCKET_TAG_BASE));
+    let mut engine = Pipelined::new(mux, Vec::new(), 2, cc());
+    assert_eq!(engine.n_buckets(), 0);
+    let mut timer = PhaseTimer::new();
+    engine
+        .sync_step(&[], DENSITY, &mut timer, &mut |_| {
+            Err("no buckets, no apply".to_string())
+        })
+        .unwrap();
+}
+
+#[test]
+fn tag_channels_keep_control_traffic_separate_during_sync() {
+    // while bucket collectives are in flight, a control-tag allreduce
+    // (the loop's dense/loss traffic) must pass through untouched — the
+    // worker's exact sharing pattern
+    use redsync::collectives::allreduce_mean;
+    use redsync::pipeline::CTRL_TAG;
+    let mut local = LocalFabric::new(WORLD);
+    let results = run_ranks(local.take_all(), |t| {
+        let rank = t.rank();
+        let world = t.world();
+        let buckets = build_buckets(&specs(false), FUSION_CAP, acc());
+        let n = buckets.len() as u32;
+        let mux = Arc::new(TagMux::new(t, BUCKET_TAG_BASE + n));
+        let ctrl = TagChannel::new(Arc::clone(&mux), CTRL_TAG);
+        let mut engine = Pipelined::new(mux, buckets, 2, cc());
+        let mut timer = PhaseTimer::new();
+        for step in 0..3 {
+            let grads: Vec<Vec<f32>> =
+                SIZES.iter().enumerate().map(|(i, &n)| grad(rank, step, i, n)).collect();
+            engine.sync_step(&grads, DENSITY, &mut timer, &mut |_| Ok(())).unwrap();
+            // control collective between syncs, like the loss average
+            let mut l = [(rank + 1) as f32];
+            allreduce_mean(&ctrl, &mut l);
+            let expect: f32 = (1..=world).map(|r| r as f32).sum::<f32>() / world as f32;
+            assert_eq!(l[0], expect);
+        }
+        0u64
+    });
+    assert_eq!(results.len(), WORLD);
+}

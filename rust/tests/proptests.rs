@@ -2,9 +2,9 @@
 //! contracts, wire-format round-trips, collective algebra, residual mass
 //! conservation and the cost-model/simulator agreement.
 
-use redsync::collectives::{allgather, allreduce_mean, concat, LocalFabric, Transport};
+use redsync::collectives::{allgather, allreduce_mean, concat, FusionPlan, LocalFabric, Transport};
 use redsync::compression::message::{
-    apply_gathered_plain, pack_plain, pack_quant, unpack_plain, unpack_quant,
+    apply_gathered_plain, pack_plain, pack_quant, quant_words, unpack_plain, unpack_quant,
 };
 use redsync::compression::{
     exact_topk, threshold_binary_search, trimmed_topk, Accumulation, BinarySearchParams,
@@ -116,6 +116,82 @@ fn prop_truncated_wire_rejected() {
         let buf = pack_plain(&s);
         let cut = g.size(1..buf.len());
         ensure(unpack_plain(&buf[..cut]).is_err(), "truncated message accepted")?;
+        Ok(())
+    });
+}
+
+/// Quantized-RGC roundtrip: a single-signed selection survives
+/// from_sparse → pack → unpack → dequantize with bit-exact indices and
+/// mean, and the §5.2.3 mass identity `mean·k == Σvalues` holds.
+#[test]
+fn prop_quant_rgc_encode_decode_roundtrip() {
+    check(50, |g| {
+        let n = g.size(8..4_000);
+        let k = g.size(1..(n / 4).max(2));
+        let sign = if g.bool() { 1.0f32 } else { -1.0 };
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        g.rng().shuffle(&mut idx);
+        idx.truncate(k);
+        idx.sort_unstable();
+        // single-signed values, as the sign alternation guarantees
+        let vals: Vec<f32> =
+            g.vec_normal(k, 1.5).iter().map(|v| (v.abs() + 0.01) * sign).collect();
+        let s = SparseTensor::new(idx, vals);
+
+        let q = QuantizedSet::from_sparse(&s);
+        let (q2, used) = unpack_quant(&pack_quant(&q)).map_err(|e| e.to_string())?;
+        ensure(used == quant_words(k), "wire length")?;
+        ensure(q2.indices == s.indices, "indices must survive the wire")?;
+        ensure(q2.mean.to_bits() == q.mean.to_bits(), "mean must be bit-exact")?;
+        ensure(q2.mean * sign > 0.0, "mean must carry the selection's sign")?;
+
+        let d = q2.dequantize();
+        ensure(d.indices == s.indices, "dequantize keeps the index set")?;
+        ensure(
+            d.values.iter().all(|v| v.to_bits() == q.mean.to_bits()),
+            "dequantize is constant-valued",
+        )?;
+        // mass preservation: mean * k == sum(values) up to f32 rounding
+        ensure_close(
+            q.mean as f64 * k as f64,
+            s.value_sum() as f64,
+            1e-4,
+            "quantization preserves mass",
+        )
+    });
+}
+
+/// FusionPlan::gather and scatter_into are exact inverses on arbitrary
+/// layer splits: every bucket reconstructs its layers bit-for-bit, every
+/// layer is covered exactly once.
+#[test]
+fn prop_fusion_gather_scatter_inverse() {
+    check(40, |g| {
+        let n_layers = g.size(1..12);
+        let sizes: Vec<usize> = (0..n_layers).map(|_| g.size(1..300)).collect();
+        let cap = g.size(1..600);
+        let layers: Vec<Vec<f32>> = sizes.iter().map(|&n| g.vec_normal(n, 2.0)).collect();
+
+        let plan = FusionPlan::greedy(&sizes, cap);
+        let mut out: Vec<Vec<f32>> = sizes.iter().map(|&n| vec![0.0f32; n]).collect();
+        let mut covered = vec![false; n_layers];
+        for b in &plan.buckets {
+            let fused = b.gather(|i| layers[i].as_slice());
+            ensure(fused.len() == b.total_elems, "gather length == bucket total")?;
+            b.scatter_into(&fused, &mut out);
+            for &(i, n) in &b.layers {
+                ensure(!covered[i], format!("layer {i} in two buckets"))?;
+                ensure(n == sizes[i], "bucket records the true layer size")?;
+                covered[i] = true;
+            }
+        }
+        ensure(covered.iter().all(|&c| c), "every layer fused exactly once")?;
+        for (orig, round) in layers.iter().zip(&out) {
+            ensure(
+                orig.iter().zip(round.iter()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "gather ∘ scatter_into must be the identity, bit-for-bit",
+            )?;
+        }
         Ok(())
     });
 }
