@@ -16,10 +16,18 @@
 //! the `Sequential` and `Pipelined` engines over real loopback TCP,
 //! asserting bit-identical parameters and reporting the wall-clock
 //! ratio.  CI runs this and uploads `BENCH_pipeline.json`.
+//!
+//! `--topology-smoke [OUT.json]` is the flat-vs-hierarchical A/B over
+//! loopback TCP (8 ranks as 2 nodes × 4): asserts the two schedules
+//! stay bit-identical, reports wall-clock and measured wire bytes per
+//! schedule, and the intra-node union compression the value-merging
+//! reduce would add.  CI runs this and uploads `BENCH_topology.json`.
 
 use redsync::collectives::mux::TagMux;
-use redsync::collectives::Transport;
-use redsync::compression::{Accumulation, CompressorConfig, Method};
+use redsync::collectives::{Algo, Topology, Transport};
+use redsync::compression::message::{merge_plain, plain_words};
+use redsync::compression::{trimmed_topk, Accumulation, CompressorConfig, Method};
+use redsync::tensor::SparseTensor;
 use redsync::config::{preset, TrainConfig};
 use redsync::coordinator::metrics::{param_hash, phase};
 use redsync::coordinator::train;
@@ -230,10 +238,104 @@ fn pipeline_smoke(json_path: Option<&str>) {
     println!("{json}");
 }
 
+// ---------------------------------------------------------------------
+// Flat vs hierarchical A/B over loopback TCP (no artifacts needed)
+// ---------------------------------------------------------------------
+
+const TOPO_WORLD: usize = 8;
+const TOPO: Topology = Topology { nodes: 2, ranks_per_node: 4 };
+
+/// Run the smoke schedule on every rank of a fresh 8-rank loopback TCP
+/// mesh under one collective algorithm; returns (wall seconds,
+/// per-rank param hashes, total wire bytes across ranks).
+fn topo_run(algo: Algo) -> (f64, Vec<u64>, u64) {
+    let cc = CompressorConfig { density: SMOKE_DENSITY, ..Default::default() };
+    let acc = smoke_acc();
+    let transports = tcp_fabric(TOPO_WORLD);
+    let stats: Vec<_> = transports.iter().map(|t| Arc::clone(&t.stats)).collect();
+    let start = Instant::now();
+    let handles: Vec<_> = transports
+        .into_iter()
+        .map(|t| {
+            thread::spawn(move || {
+                let (rank, world) = (t.rank(), t.world());
+                let mut buckets = build_buckets(&smoke_specs(), SMOKE_FUSION_CAP, acc);
+                for b in &mut buckets {
+                    b.set_algo(algo);
+                }
+                let mut engine = Sequential::with_topology(&t, TOPO, None, buckets, cc);
+                smoke_steps(&mut engine, rank, world)
+            })
+        })
+        .collect();
+    let hashes: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let secs = start.elapsed().as_secs_f64();
+    let bytes: u64 = stats.iter().map(|s| s.bytes()).sum();
+    (secs, hashes, bytes)
+}
+
+/// The topology A/B: flat vs hierarchical schedules over loopback TCP
+/// must stay bit-identical; report wall-clock, wire bytes, and the
+/// extra intra-node union compression a value-merging reduce would buy.
+fn topology_smoke(json_path: Option<&str>) {
+    println!(
+        "# topology A/B: {TOPO_WORLD} ranks as {} over loopback tcp, {} steps, density {}",
+        TOPO.label(),
+        SMOKE_STEPS,
+        SMOKE_DENSITY
+    );
+    let _ = topo_run(Algo::Sparse); // warm-up
+    let (flat_secs, flat_hashes, flat_bytes) = topo_run(Algo::Sparse);
+    let (hier_secs, hier_hashes, hier_bytes) = topo_run(Algo::Hierarchical);
+
+    let consistent = flat_hashes.iter().all(|&h| h == flat_hashes[0])
+        && hier_hashes.iter().all(|&h| h == hier_hashes[0]);
+    let bit_identical = consistent && flat_hashes[0] == hier_hashes[0];
+    println!("{:>14} {:>10} {:>12}", "schedule", "wall(s)", "wire bytes");
+    println!("{:>14} {:>10.3} {:>12}", "flat", flat_secs, flat_bytes);
+    println!("{:>14} {:>10.3} {:>12}", "hierarchical", hier_secs, hier_bytes);
+    println!("bit_identical: {bit_identical}");
+    assert!(bit_identical, "schedules must stay bit-identical (see tests/topology.rs)");
+
+    // what the value-merging intra-node union would shrink one node's
+    // step-0 messages to (largest layer), vs the boundary-preserving
+    // concatenation the bit-identical schedule ships
+    let n0 = SMOKE_SIZES[0];
+    let k = ((n0 as f64 * SMOKE_DENSITY).ceil() as usize).max(1);
+    let sels: Vec<SparseTensor> = (0..TOPO.ranks_per_node)
+        .map(|r| trimmed_topk(&smoke_grad(r, 0, 0, n0), k, 0.2, None).sparse)
+        .collect();
+    let concat_words: usize = sels.iter().map(|s| plain_words(s.len())).sum();
+    let union_words = plain_words(merge_plain(&sels).len());
+    println!(
+        "node-0 union reduce would ship {union_words} of {concat_words} words \
+         ({:.1}% of the concatenated blob)",
+        100.0 * union_words as f64 / concat_words as f64
+    );
+
+    let json = format!(
+        "{{\"bench\":\"topology_smoke\",\"world\":{TOPO_WORLD},\"topology\":\"{}\",\
+         \"steps\":{SMOKE_STEPS},\"flat_secs\":{flat_secs:.6},\"hier_secs\":{hier_secs:.6},\
+         \"flat_bytes\":{flat_bytes},\"hier_bytes\":{hier_bytes},\
+         \"union_words\":{union_words},\"concat_words\":{concat_words},\
+         \"bit_identical\":{bit_identical}}}",
+        TOPO.label()
+    );
+    if let Some(path) = json_path {
+        std::fs::write(path, format!("{json}\n")).expect("write bench json");
+        println!("wrote {path}");
+    }
+    println!("{json}");
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     if let Some(pos) = args.iter().position(|a| a == "--pipeline-smoke") {
         pipeline_smoke(args.get(pos + 1).map(String::as_str));
+        return;
+    }
+    if let Some(pos) = args.iter().position(|a| a == "--topology-smoke") {
+        topology_smoke(args.get(pos + 1).map(String::as_str));
         return;
     }
     if redsync::models::schema::Manifest::load(

@@ -11,6 +11,12 @@ use super::transport::Transport;
 
 /// Gather each rank's `msg`; returns all contributions indexed by rank.
 /// Dispatches to recursive doubling when `world` is a power of two.
+///
+/// `t` is any [`Transport`], including a
+/// [`ProcessGroup`](super::group::ProcessGroup): over a group the
+/// collective runs among the members only and the result is indexed by
+/// *group-local* rank — how the hierarchical schedule runs its
+/// inter-node leader allgather.
 pub fn allgather<T: Transport>(t: &T, msg: Vec<u32>) -> Vec<Vec<u32>> {
     if t.world().is_power_of_two() {
         allgather_recursive_doubling(t, msg)
@@ -21,7 +27,9 @@ pub fn allgather<T: Transport>(t: &T, msg: Vec<u32>) -> Vec<Vec<u32>> {
 
 /// Serialize a set of (rank, payload) blocks:
 /// `[count][rank_0, len_0]...[rank_{c-1}, len_{c-1}][payload_0 ...]`.
-fn pack_blocks(blocks: &[(u32, Vec<u32>)]) -> Vec<u32> {
+/// Shared with the hierarchical schedule, which uses the same framing
+/// for node blobs and the leader broadcast.
+pub(crate) fn pack_blocks(blocks: &[(u32, Vec<u32>)]) -> Vec<u32> {
     let payload: usize = blocks.iter().map(|(_, p)| p.len()).sum();
     let mut out = Vec::with_capacity(1 + 2 * blocks.len() + payload);
     out.push(blocks.len() as u32);
@@ -35,7 +43,7 @@ fn pack_blocks(blocks: &[(u32, Vec<u32>)]) -> Vec<u32> {
     out
 }
 
-fn unpack_blocks(buf: &[u32]) -> Vec<(u32, Vec<u32>)> {
+pub(crate) fn unpack_blocks(buf: &[u32]) -> Vec<(u32, Vec<u32>)> {
     let count = buf[0] as usize;
     let mut headers = Vec::with_capacity(count);
     for i in 0..count {
@@ -84,7 +92,7 @@ pub fn allgather_ring<T: Transport>(t: &T, msg: Vec<u32>) -> Vec<Vec<u32>> {
     finish(blocks, world)
 }
 
-fn finish(blocks: Vec<(u32, Vec<u32>)>, world: usize) -> Vec<Vec<u32>> {
+pub(crate) fn finish(blocks: Vec<(u32, Vec<u32>)>, world: usize) -> Vec<Vec<u32>> {
     let mut out: Vec<Option<Vec<u32>>> = vec![None; world];
     for (r, p) in blocks {
         let slot = &mut out[r as usize];

@@ -10,6 +10,12 @@ use super::transport::{f32s_to_words, words_to_f32s, Transport};
 
 /// Sum-allreduce of `x` across all ranks (in place).  Dispatches to
 /// Rabenseifner for power-of-two worlds, ring otherwise.
+///
+/// Like every collective here, `t` may be a
+/// [`ProcessGroup`](super::group::ProcessGroup): the reduction then
+/// runs among the group's members only (`world()` is the group size),
+/// which is how topology-aware schedules scope dense reductions to a
+/// node or to the leader set.
 pub fn allreduce_sum<T: Transport>(t: &T, x: &mut [f32]) {
     if t.world() == 1 {
         return;
@@ -215,6 +221,32 @@ mod tests {
             .collect();
         for h in handles {
             assert_eq!(h.join().unwrap(), vec![4.0f32; 8]);
+        }
+    }
+
+    #[test]
+    fn allreduce_over_a_process_group_scopes_to_members() {
+        // an 8-rank fabric, reduced only within each 4-rank "node"
+        use crate::collectives::group::{ProcessGroup, Topology};
+        let topo = Topology::new(2, 4);
+        let mut fabric = LocalFabric::new(topo.world());
+        let handles: Vec<_> = fabric
+            .take_all()
+            .into_iter()
+            .map(|t| {
+                thread::spawn(move || {
+                    let rank = t.rank();
+                    let members = topo.node_members(topo.node_of(rank));
+                    let g = ProcessGroup::new(&t, members.clone());
+                    let mut x = vec![rank as f32];
+                    allreduce_sum(&g, &mut x);
+                    let want: f32 = members.iter().map(|&m| m as f32).sum();
+                    assert_eq!(x[0], want, "rank {rank} node sum");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
         }
     }
 

@@ -1,0 +1,412 @@
+//! Process groups and physical topology: the communicator layer under
+//! the collectives.
+//!
+//! The paper's 128-GPU scalability rests on *hierarchical* communication
+//! (§5.3): sparse messages are aggregated inside a node before a much
+//! smaller inter-node exchange among node leaders.  That requires
+//! collectives that run over an ordered *subset* of the world — a
+//! [`ProcessGroup`] — rather than the raw fabric.
+//!
+//! A group is itself a [`Transport`]: `rank()`/`world()` are
+//! group-local, and sends/receives translate local ranks to world ranks
+//! on the underlying endpoint.  Every collective in this crate is
+//! generic over `Transport`, so `allgather(&group, msg)` just works —
+//! over any fabric (`LocalFabric`, `net::TcpTransport`) and through any
+//! wrapper (`mux::TagChannel`), which is how the pipelined engine runs
+//! hierarchical bucket collectives concurrently.
+//!
+//! [`Topology`] describes the machine as `nodes × ranks-per-node`
+//! (contiguous rank placement: world rank `r` lives on node `r / s`),
+//! and [`Communicator`] derives the standard groups from it: the node's
+//! intra-node group, the inter-node leader group, and the world group.
+//!
+//! ## Why plain rank translation is safe
+//!
+//! Between any pair of world ranks the fabric preserves FIFO order, and
+//! a rank participates in the hierarchical phases sequentially, so two
+//! groups over the same endpoint never race for each other's messages
+//! as long as every rank drives its collectives in the same global
+//! order — the same discipline the flat collectives already require.
+//! Concurrent collectives (the pipelined engine) isolate themselves
+//! with per-bucket [`crate::collectives::mux::TagChannel`]s *under* the
+//! group, not beside it.
+
+use super::allgather::allgather;
+use super::hierarchical::hierarchical_allgather;
+use super::transport::{Transport, TransportError};
+
+/// Which collective algorithm synchronizes a fusion bucket (§5.5 + the
+/// hierarchical scheme).  Picked per bucket at plan time — statically
+/// (`--algo sparse|hierarchical`) or by the cost-model argmin
+/// (`--algo auto`, `crate::costmodel::pick_algo`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// Dense allreduce of the raw gradient (Eq. 2): the bucket's layers
+    /// are demoted to the dense path and never compress.
+    Dense,
+    /// Flat sparse allgather over the full world (Eq. 1).
+    Sparse,
+    /// Intra-node aggregation at the leader, inter-node allgather among
+    /// leaders, intra-node broadcast (the §5.3 hierarchical scheme).
+    Hierarchical,
+}
+
+impl Algo {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Algo::Dense => "dense",
+            Algo::Sparse => "sparse",
+            Algo::Hierarchical => "hierarchical",
+        }
+    }
+}
+
+/// Physical machine shape: `nodes` × `ranks_per_node`, with contiguous
+/// placement (world rank `r` is local rank `r % ranks_per_node` on node
+/// `r / ranks_per_node`; each node's leader is its local rank 0).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    pub nodes: usize,
+    pub ranks_per_node: usize,
+}
+
+impl Topology {
+    pub fn new(nodes: usize, ranks_per_node: usize) -> Topology {
+        assert!(nodes >= 1 && ranks_per_node >= 1, "topology axes must be >= 1");
+        Topology { nodes, ranks_per_node }
+    }
+
+    /// The degenerate one-node topology: hierarchical collectives over
+    /// it collapse to a leader gather + broadcast with no inter-node
+    /// exchange.
+    pub fn flat(world: usize) -> Topology {
+        Topology::new(1, world.max(1))
+    }
+
+    /// Parse `"NxM"` (nodes x ranks-per-node), e.g. `"2x4"`.
+    pub fn parse(s: &str) -> Result<Topology, String> {
+        let (n, r) = s
+            .split_once('x')
+            .ok_or_else(|| format!("topology '{s}': expected NODESxRANKS_PER_NODE, e.g. 2x4"))?;
+        let nodes: usize =
+            n.trim().parse().map_err(|_| format!("topology '{s}': bad node count '{n}'"))?;
+        let rpn: usize = r
+            .trim()
+            .parse()
+            .map_err(|_| format!("topology '{s}': bad ranks-per-node '{r}'"))?;
+        if nodes == 0 || rpn == 0 {
+            return Err(format!("topology '{s}': axes must be >= 1"));
+        }
+        Ok(Topology::new(nodes, rpn))
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}x{}", self.nodes, self.ranks_per_node)
+    }
+
+    pub fn world(&self) -> usize {
+        self.nodes * self.ranks_per_node
+    }
+
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.ranks_per_node
+    }
+
+    pub fn local_of(&self, rank: usize) -> usize {
+        rank % self.ranks_per_node
+    }
+
+    /// World rank of `node`'s local rank `local` — the inverse of
+    /// ([`node_of`](Self::node_of), [`local_of`](Self::local_of)).
+    pub fn world_rank(&self, node: usize, local: usize) -> usize {
+        debug_assert!(node < self.nodes && local < self.ranks_per_node);
+        node * self.ranks_per_node + local
+    }
+
+    /// The node leader `rank` reports to (local rank 0 of its node).
+    pub fn leader_of(&self, rank: usize) -> usize {
+        self.node_of(rank) * self.ranks_per_node
+    }
+
+    pub fn is_leader(&self, rank: usize) -> bool {
+        self.local_of(rank) == 0
+    }
+
+    /// World ranks of one node, ascending (leader first).
+    pub fn node_members(&self, node: usize) -> Vec<usize> {
+        assert!(node < self.nodes, "node {node} out of {}", self.nodes);
+        let base = node * self.ranks_per_node;
+        (base..base + self.ranks_per_node).collect()
+    }
+
+    /// World ranks of every node leader, ascending (one per node).
+    pub fn leaders(&self) -> Vec<usize> {
+        (0..self.nodes).map(|n| n * self.ranks_per_node).collect()
+    }
+}
+
+/// An ordered subset of world ranks with local-rank translation — what
+/// collectives run over instead of a raw endpoint.  The group is a full
+/// [`Transport`]: `rank()`/`world()` are the *group-local* view, and
+/// every send/receive maps local peer ids onto the member list.
+pub struct ProcessGroup<T: Transport> {
+    inner: T,
+    members: Vec<usize>,
+    /// This rank's position in `members` (its group-local rank).
+    pos: usize,
+}
+
+impl<T: Transport> ProcessGroup<T> {
+    /// Build the group view for the calling rank.  `members` is the
+    /// ordered world-rank list; the caller's world rank must be one of
+    /// them (a rank outside a group never constructs its view), and
+    /// duplicates are rejected.
+    pub fn new(inner: T, members: Vec<usize>) -> ProcessGroup<T> {
+        assert!(!members.is_empty(), "a process group needs at least one member");
+        let world = inner.world();
+        let mut seen = vec![false; world];
+        for &m in &members {
+            assert!(m < world, "member {m} outside world {world}");
+            assert!(!seen[m], "duplicate member {m}");
+            seen[m] = true;
+        }
+        let me = inner.rank();
+        let pos = members
+            .iter()
+            .position(|&m| m == me)
+            .unwrap_or_else(|| panic!("rank {me} is not a member of the group {members:?}"));
+        ProcessGroup { inner, members, pos }
+    }
+
+    /// The ordered world-rank membership.
+    pub fn members(&self) -> &[usize] {
+        &self.members
+    }
+
+    /// World rank of group-local rank `local`.
+    pub fn world_rank(&self, local: usize) -> usize {
+        self.members[local]
+    }
+
+    /// Group-local rank of world rank `world`, if it is a member.
+    pub fn local_rank(&self, world: usize) -> Option<usize> {
+        self.members.iter().position(|&m| m == world)
+    }
+}
+
+impl<T: Transport> Transport for ProcessGroup<T> {
+    /// Group-local rank.
+    fn rank(&self) -> usize {
+        self.pos
+    }
+
+    /// Group size (not the world size of the underlying fabric).
+    fn world(&self) -> usize {
+        self.members.len()
+    }
+
+    fn send(&self, to: usize, msg: Vec<u32>) {
+        self.inner.send(self.members[to], msg)
+    }
+
+    fn recv_checked(&self, from: usize) -> Result<Vec<u32>, TransportError> {
+        self.inner.recv_checked(self.members[from]).map_err(|e| TransportError {
+            // report the *group-local* peer the caller addressed
+            peer: from,
+            reason: format!("world rank {}: {}", self.members[from], e.reason),
+        })
+    }
+}
+
+/// One rank's communicator: an endpoint plus the [`Topology`] it lives
+/// in, from which the standard groups (intra-node, inter-node leaders,
+/// world) are derived.  The sync engines hold one per collective
+/// context and dispatch each bucket's [`Algo`] through it.
+pub struct Communicator<T: Transport> {
+    inner: T,
+    topo: Topology,
+}
+
+impl<T: Transport> Communicator<T> {
+    pub fn new(inner: T, topo: Topology) -> Communicator<T> {
+        assert_eq!(
+            topo.world(),
+            inner.world(),
+            "topology {} does not cover world {}",
+            topo.label(),
+            inner.world()
+        );
+        Communicator { inner, topo }
+    }
+
+    /// A communicator over the degenerate one-node topology — the flat
+    /// world every pre-topology call site assumed.
+    pub fn flat(inner: T) -> Communicator<T> {
+        let world = inner.world();
+        Communicator::new(inner, Topology::flat(world))
+    }
+
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.topo
+    }
+
+    /// This rank's intra-node group (leader first).
+    pub fn intra_group(&self) -> ProcessGroup<&T> {
+        let node = self.topo.node_of(self.inner.rank());
+        ProcessGroup::new(&self.inner, self.topo.node_members(node))
+    }
+
+    /// The inter-node leader group — only leaders may build their view.
+    pub fn leaders_group(&self) -> Option<ProcessGroup<&T>> {
+        if self.topo.is_leader(self.inner.rank()) {
+            Some(ProcessGroup::new(&self.inner, self.topo.leaders()))
+        } else {
+            None
+        }
+    }
+
+    /// The full-world group (identity translation).
+    pub fn world_group(&self) -> ProcessGroup<&T> {
+        ProcessGroup::new(&self.inner, (0..self.inner.world()).collect())
+    }
+
+    /// Dispatch one sparse collective for a bucket: gather every world
+    /// rank's `msg`, indexed by world rank, over the algorithm the plan
+    /// chose.  Both paths return bit-identical results (pinned in
+    /// `tests/topology.rs`); they differ only in schedule and traffic.
+    pub fn allgather(&self, algo: Algo, msg: Vec<u32>) -> Vec<Vec<u32>> {
+        match algo {
+            Algo::Sparse => allgather(&self.inner, msg),
+            Algo::Hierarchical => hierarchical_allgather(&self.inner, self.topo, msg),
+            Algo::Dense => unreachable!("dense buckets never reach the sparse collective"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::transport::LocalFabric;
+    use crate::collectives::{allgather, allreduce_mean};
+    use std::thread;
+
+    #[test]
+    fn topology_translation() {
+        let t = Topology::new(2, 4);
+        assert_eq!(t.world(), 8);
+        assert_eq!(t.node_of(5), 1);
+        assert_eq!(t.local_of(5), 1);
+        assert_eq!(t.world_rank(1, 1), 5);
+        assert_eq!(t.leader_of(6), 4);
+        assert!(t.is_leader(4) && !t.is_leader(7));
+        assert_eq!(t.node_members(1), vec![4, 5, 6, 7]);
+        assert_eq!(t.leaders(), vec![0, 4]);
+        assert_eq!(t.label(), "2x4");
+    }
+
+    #[test]
+    fn topology_parse_roundtrip() {
+        let t = Topology::parse("2x4").unwrap();
+        assert_eq!(t, Topology::new(2, 4));
+        assert_eq!(Topology::parse(&t.label()).unwrap(), t);
+        assert!(Topology::parse("2x0").is_err());
+        assert!(Topology::parse("nope").is_err());
+        assert!(Topology::parse("x4").is_err());
+    }
+
+    #[test]
+    fn flat_topology_is_one_node() {
+        let t = Topology::flat(4);
+        assert_eq!((t.nodes, t.ranks_per_node), (1, 4));
+        assert!(t.is_leader(0) && !t.is_leader(3));
+        assert_eq!(t.leaders(), vec![0]);
+    }
+
+    #[test]
+    fn group_translates_ranks() {
+        // rank 2's view of the group {1, 2, 5} over an 8-rank fabric
+        let mut fabric = LocalFabric::new(8);
+        let t = fabric.take(2);
+        let g = ProcessGroup::new(&t, vec![1, 2, 5]);
+        assert_eq!(g.rank(), 1, "group-local rank");
+        assert_eq!(g.world(), 3, "group size");
+        assert_eq!(g.world_rank(2), 5);
+        assert_eq!(g.local_rank(5), Some(2));
+        assert_eq!(g.local_rank(3), None);
+        assert_eq!(g.members(), &[1, 2, 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a member")]
+    fn group_rejects_non_member_builder() {
+        let mut fabric = LocalFabric::new(4);
+        let t = fabric.take(0);
+        let _ = ProcessGroup::new(&t, vec![1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate member")]
+    fn group_rejects_duplicates() {
+        let mut fabric = LocalFabric::new(4);
+        let t = fabric.take(1);
+        let _ = ProcessGroup::new(&t, vec![1, 1]);
+    }
+
+    /// Two disjoint groups run independent collectives over one fabric:
+    /// evens allgather while odds allreduce, no cross-talk.
+    #[test]
+    fn disjoint_subgroups_run_independent_collectives() {
+        let world = 4;
+        let mut fabric = LocalFabric::new(world);
+        let handles: Vec<_> = fabric
+            .take_all()
+            .into_iter()
+            .map(|t| {
+                thread::spawn(move || {
+                    let rank = t.rank();
+                    if rank % 2 == 0 {
+                        let g = ProcessGroup::new(&t, vec![0, 2]);
+                        let got = allgather(&g, vec![rank as u32]);
+                        assert_eq!(got, vec![vec![0], vec![2]]);
+                    } else {
+                        let g = ProcessGroup::new(&t, vec![1, 3]);
+                        let mut x = vec![rank as f32];
+                        allreduce_mean(&g, &mut x);
+                        assert_eq!(x, vec![2.0], "mean of ranks 1 and 3");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn communicator_derives_standard_groups() {
+        let mut fabric = LocalFabric::new(8);
+        let t = fabric.take(5);
+        let comm = Communicator::new(&t, Topology::new(2, 4));
+        assert_eq!(comm.intra_group().members(), &[4, 5, 6, 7]);
+        assert!(comm.leaders_group().is_none(), "rank 5 is not a leader");
+        assert_eq!(comm.world_group().members().len(), 8);
+
+        let t4 = fabric.take(4);
+        let comm4 = Communicator::new(&t4, Topology::new(2, 4));
+        let leaders = comm4.leaders_group().expect("rank 4 leads node 1");
+        assert_eq!(leaders.members(), &[0, 4]);
+        assert_eq!(leaders.rank(), 1, "leader-group-local rank");
+    }
+
+    #[test]
+    #[should_panic(expected = "does not cover world")]
+    fn communicator_rejects_mismatched_topology() {
+        let mut fabric = LocalFabric::new(4);
+        let t = fabric.take(0);
+        let _ = Communicator::new(&t, Topology::new(2, 4));
+    }
+}

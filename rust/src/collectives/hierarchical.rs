@@ -1,0 +1,259 @@
+//! Hierarchical sparse allgather — the §5.3 topology-aware schedule.
+//!
+//! Flat sparse allgather moves `(p-1)·m` bytes per rank over whatever
+//! link happens to connect each peer pair; at scale most of that
+//! crosses the slow inter-node fabric, which is why DGC-style flat
+//! schedules stop paying off as the world grows.  The hierarchical
+//! schedule keeps the bulk of the traffic inside a node:
+//!
+//! 1. **Intra-node gather** — every non-leader sends its message to the
+//!    node leader (local rank 0 of the intra-node group).
+//! 2. **Inter-node allgather** — each leader packs its node's messages
+//!    into one *node blob* (per-rank boundaries preserved) and runs the
+//!    ordinary allgather over the leader group — only `nodes`
+//!    participants, so the slow-link bytes drop from `Θ(p²·m)` to
+//!    `Θ(nodes²·s·m)`.
+//! 3. **Intra-node broadcast** — each leader sends the assembled world
+//!    blob back to its node members; every rank unpacks it into the
+//!    per-world-rank result.
+//!
+//! All addressing goes through the [`Communicator`]'s derived
+//! [`super::group::ProcessGroup`]s (intra-node, leaders): the schedule
+//! is written in group-local ranks and the groups do the world-rank
+//! translation.
+//!
+//! ## Bit-identity with the flat schedule
+//!
+//! The node-level aggregation is a *structural* union: messages are
+//! concatenated under `[rank, len]` block headers, never value-merged,
+//! so every rank ends with exactly the per-rank blobs the flat
+//! allgather would deliver, in world-rank order.  Decompression then
+//! applies them in the same float order — parameters stay bit-identical
+//! (pinned in `tests/topology.rs` on both fabrics).  The value-merging
+//! union (`compression::message::merge_plain`) halves inter-node bytes
+//! further but changes summation order; it is modeled by the cost
+//! model, not used on the schedule.
+//!
+//! Traffic is exactly accountable ([`hierarchical_traffic_words`]);
+//! `tests/topology.rs` pins the fabric counters to it word-for-word,
+//! and its payload component to the cost-model bandwidth term
+//! (`costmodel::hierarchical_payload_words`).
+
+use super::allgather::{allgather, finish, pack_blocks, unpack_blocks};
+use super::group::{Communicator, Topology};
+use super::transport::Transport;
+
+/// Gather each rank's `msg` over the hierarchical schedule; returns all
+/// contributions indexed by world rank — the same contract (and the
+/// same bits) as [`allgather`], with a topology-shaped schedule.
+pub fn hierarchical_allgather<T: Transport>(t: &T, topo: Topology, msg: Vec<u32>) -> Vec<Vec<u32>> {
+    assert_eq!(topo.world(), t.world(), "topology {} over world {}", topo.label(), t.world());
+    if t.world() == 1 {
+        return vec![msg];
+    }
+    let rank = t.rank();
+    let comm = Communicator::new(t, topo);
+    let intra = comm.intra_group();
+
+    if !topo.is_leader(rank) {
+        // phase 1: hand the contribution to the node leader (local 0)...
+        intra.send(0, msg);
+        // ...phase 3: receive the assembled world blob back
+        let blob = intra.recv(0);
+        return finish(unpack_blocks(&blob), topo.world());
+    }
+
+    // leader: gather the node's messages in member (= world-rank) order
+    let mut blocks: Vec<(u32, Vec<u32>)> = vec![(rank as u32, msg)];
+    for local in 1..intra.world() {
+        blocks.push((intra.world_rank(local) as u32, intra.recv(local)));
+    }
+
+    // phase 2: allgather node blobs among the per-node leaders
+    let leaders = comm.leaders_group().expect("a leader can build the leader group");
+    let node_blobs = allgather(&leaders, pack_blocks(&blocks));
+    let mut all: Vec<(u32, Vec<u32>)> = Vec::with_capacity(topo.world());
+    for nb in &node_blobs {
+        all.extend(unpack_blocks(nb));
+    }
+    let result = finish(all, topo.world());
+
+    // phase 3: broadcast the world blob to the node, packed straight
+    // from `result` (no intermediate copy of the gathered payload); the
+    // last member takes the buffer by move
+    let s = intra.world();
+    if s > 1 {
+        let world_blob = pack_world_blob(&result);
+        for local in 1..s - 1 {
+            intra.send(local, world_blob.clone());
+        }
+        intra.send(s - 1, world_blob);
+    }
+    result
+}
+
+/// [`pack_blocks`] framing over the finished world result (block `r` is
+/// world rank `r`'s payload), borrowing the payloads instead of cloning
+/// them into a block list first.
+fn pack_world_blob(result: &[Vec<u32>]) -> Vec<u32> {
+    let payload: usize = result.iter().map(|p| p.len()).sum();
+    let mut out = Vec::with_capacity(1 + 2 * result.len() + payload);
+    out.push(result.len() as u32);
+    for (r, p) in result.iter().enumerate() {
+        out.push(r as u32);
+        out.push(p.len() as u32);
+    }
+    for p in result {
+        out.extend_from_slice(p);
+    }
+    out
+}
+
+/// Exact fabric traffic of one [`hierarchical_allgather`] where every
+/// rank contributes `msg_words` payload words: `(payload, headers)` in
+/// words, summed over all ranks.  The payload component is the
+/// bandwidth term the hierarchical cost model charges
+/// (`costmodel::hierarchical_payload_words`); the headers are the
+/// `[count]`/`[rank, len]` block framing, deterministic because the
+/// schedule is.  `tests/topology.rs` asserts the fabric counters equal
+/// `payload + headers` word-for-word.
+pub fn hierarchical_traffic_words(
+    nodes: usize,
+    ranks_per_node: usize,
+    msg_words: usize,
+) -> (u64, u64) {
+    let (n, s) = (nodes as u64, ranks_per_node as u64);
+    let p = n * s;
+    let m = msg_words as u64;
+    if p <= 1 {
+        return (0, 0);
+    }
+
+    // phase 1: per node, s-1 raw (unframed) messages of m words
+    let payload1 = n * (s - 1) * m;
+
+    // phase 2: leaders allgather node blobs B = 1 + s·(2 + m) words;
+    // recursive doubling when the node count is a power of two (step j
+    // sends 2^j blobs under one [count] word + [rank, len] each), ring
+    // otherwise (n-1 single-blob messages per leader)
+    let blob_headers = 1 + 2 * s; // [count] + s × [rank, len]
+    let (payload2, headers2) = if n == 1 {
+        (0, 0)
+    } else if n.is_power_of_two() {
+        let lg = n.trailing_zeros() as u64;
+        (n * (n - 1) * s * m, n * (lg + (n - 1) * (2 + blob_headers)))
+    } else {
+        (n * (n - 1) * s * m, n * (n - 1) * (3 + blob_headers))
+    };
+
+    // phase 3: per node, s-1 copies of the world blob W = 1 + p·(2 + m)
+    let payload3 = n * (s - 1) * p * m;
+    let headers3 = n * (s - 1) * (1 + 2 * p);
+
+    (payload1 + payload2 + payload3, headers2 + headers3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::transport::LocalFabric;
+    use std::sync::Arc;
+    use std::thread;
+
+    fn rank_msg(rank: usize, len: usize) -> Vec<u32> {
+        (0..len).map(|i| (rank * 1000 + i) as u32).collect()
+    }
+
+    fn run_hier(
+        topo: Topology,
+        len_of: impl Fn(usize) -> usize + Copy + Send + 'static,
+    ) -> Vec<Vec<Vec<u32>>> {
+        let world = topo.world();
+        let mut fabric = LocalFabric::new(world);
+        let handles: Vec<_> = fabric
+            .take_all()
+            .into_iter()
+            .map(|t| {
+                thread::spawn(move || {
+                    let msg = rank_msg(t.rank(), len_of(t.rank()));
+                    hierarchical_allgather(&t, topo, msg)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn matches_flat_allgather_across_shapes() {
+        for (nodes, rpn) in [(2usize, 4usize), (4, 2), (8, 1), (1, 8), (3, 2), (2, 3)] {
+            let topo = Topology::new(nodes, rpn);
+            let results = run_hier(topo, |r| r + 1);
+            for got in &results {
+                assert_eq!(got.len(), topo.world());
+                for (r, part) in got.iter().enumerate() {
+                    assert_eq!(part, &rank_msg(r, r + 1), "topology {}", topo.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_contributions_survive_the_hierarchy() {
+        let topo = Topology::new(2, 2);
+        let results = run_hier(topo, |r| if r % 2 == 0 { 0 } else { 2 });
+        for got in &results {
+            assert!(got[0].is_empty() && got[2].is_empty());
+            assert_eq!(got[1].len(), 2);
+            assert_eq!(got[3].len(), 2);
+        }
+    }
+
+    #[test]
+    fn single_rank_is_identity() {
+        let topo = Topology::new(1, 1);
+        let results = run_hier(topo, |_| 3);
+        assert_eq!(results[0], vec![rank_msg(0, 3)]);
+    }
+
+    #[test]
+    fn traffic_matches_exact_accounting() {
+        for (nodes, rpn) in [(2usize, 4usize), (4, 2), (1, 4), (4, 1), (3, 2)] {
+            let topo = Topology::new(nodes, rpn);
+            let world = topo.world();
+            let m = 64usize;
+            let mut fabric = LocalFabric::new(world);
+            let stats = Arc::clone(&fabric.stats);
+            let handles: Vec<_> = fabric
+                .take_all()
+                .into_iter()
+                .map(|t| {
+                    thread::spawn(move || {
+                        hierarchical_allgather(&t, topo, vec![7u32; m]);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            let (payload, headers) = hierarchical_traffic_words(nodes, rpn, m);
+            let total = stats.words.load(std::sync::atomic::Ordering::Relaxed);
+            assert_eq!(
+                total,
+                payload + headers,
+                "topology {}: fabric moved {total} words, accounting says {payload} + {headers}",
+                topo.label()
+            );
+        }
+    }
+
+    #[test]
+    fn hierarchy_shrinks_leader_link_traffic() {
+        // the point of the scheme: inter-node (phase 2) payload is
+        // n·(n-1)·s·m vs the flat schedule's p·(p-1)·m total
+        let (n, s, m) = (2u64, 4u64, 100u64);
+        let p = n * s;
+        let inter = n * (n - 1) * s * m;
+        let flat_total = p * (p - 1) * m;
+        assert!(inter * 4 <= flat_total, "inter-node {inter} vs flat {flat_total}");
+    }
+}

@@ -2,12 +2,22 @@
 //!
 //! * [`transport`] — the point-to-point [`Transport`] trait and the
 //!   in-process [`LocalFabric`]
+//! * [`group`]     — [`Topology`], [`ProcessGroup`] (ordered rank subset
+//!   with local-rank translation; itself a `Transport`) and the
+//!   [`Communicator`] that derives intra-node / leader / world groups
 //! * [`allreduce`] — Rabenseifner + ring (dense baseline, Eq. 2 schedule)
 //! * [`allgather`] — recursive doubling + ring, variable-length blocks
 //!   (sparse synchronization, Eq. 1 schedule)
+//! * [`hierarchical`] — topology-aware sparse allgather (§5.3):
+//!   intra-node gather at the leader, inter-node allgather among
+//!   leaders, intra-node broadcast — bit-identical to the flat schedule
 //! * [`fusion`]    — tensor fusion for small layers (§5.3)
 //! * [`mux`]       — tag-multiplexed logical channels over one endpoint,
 //!   so the pipelined sync engine can run bucket collectives concurrently
+//!
+//! Collectives are generic over [`Transport`] and therefore run over a
+//! [`ProcessGroup`] unchanged — groups are how the sync engines address
+//! subsets of the world (DESIGN.md §Topology-Aware-Communication).
 //!
 //! ## Transport hierarchy
 //!
@@ -30,12 +40,16 @@
 pub mod allgather;
 pub mod allreduce;
 pub mod fusion;
+pub mod group;
+pub mod hierarchical;
 pub mod mux;
 pub mod transport;
 
 pub use allgather::{allgather, concat};
 pub use allreduce::{allreduce_mean, allreduce_sum};
 pub use fusion::FusionPlan;
+pub use group::{Algo, Communicator, ProcessGroup, Topology};
+pub use hierarchical::{hierarchical_allgather, hierarchical_traffic_words};
 pub use mux::{TagChannel, TagMux};
 pub use transport::{LocalFabric, LocalTransport, Transport, TransportError};
 

@@ -39,7 +39,7 @@
 //! because every parked message was already sent (sends never block) and
 //! collectives consume exactly what they are sent.
 
-use super::transport::{Transport, TransportError};
+use super::transport::{TrafficStats, Transport, TransportError};
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 
@@ -57,6 +57,10 @@ pub struct TagMux<T: Transport> {
     /// pending[peer][tag]: messages received for a tag no channel was
     /// draining at the time.
     pending: Vec<Mutex<Vec<VecDeque<Vec<u32>>>>>,
+    /// Per-tag outbound counters (words include the tag word, matching
+    /// what the underlying fabric charges), so per-fabric totals can be
+    /// split into control vs bucket streams.
+    stats: Vec<TrafficStats>,
 }
 
 impl<T: Transport> TagMux<T> {
@@ -67,7 +71,24 @@ impl<T: Transport> TagMux<T> {
         let pending = (0..world)
             .map(|_| Mutex::new((0..n_tags as usize).map(|_| VecDeque::new()).collect()))
             .collect();
-        TagMux { inner, n_tags, pending }
+        let stats = (0..n_tags).map(|_| TrafficStats::default()).collect();
+        TagMux { inner, n_tags, pending, stats }
+    }
+
+    /// Outbound traffic of one logical channel (words include the tag
+    /// word each message carries on the wire).
+    pub fn tag_stats(&self, tag: u32) -> &TrafficStats {
+        &self.stats[tag as usize]
+    }
+
+    /// Aggregate outbound `(messages, words)` across every channel of
+    /// this mux — by construction exactly what the muxed streams added
+    /// to the underlying fabric's counters.
+    pub fn aggregate(&self) -> (u64, u64) {
+        use std::sync::atomic::Ordering;
+        self.stats.iter().fold((0, 0), |(m, w), s| {
+            (m + s.messages.load(Ordering::Relaxed), w + s.words.load(Ordering::Relaxed))
+        })
     }
 
     pub fn rank(&self) -> usize {
@@ -83,8 +104,12 @@ impl<T: Transport> TagMux<T> {
     }
 
     fn send_tagged(&self, to: usize, tag: u32, mut msg: Vec<u32>) {
+        use std::sync::atomic::Ordering;
         debug_assert!(tag < self.n_tags);
         msg.push(tag);
+        let s = &self.stats[tag as usize];
+        s.messages.fetch_add(1, Ordering::Relaxed);
+        s.words.fetch_add(msg.len() as u64, Ordering::Relaxed);
         self.inner.send(to, msg);
     }
 
@@ -284,6 +309,35 @@ mod tests {
         c.send(1, vec![1, 2, 3]);
         assert_eq!(b.recv(0).len(), 4, "tag word + 3 payload words");
         assert_eq!(stats.words.load(std::sync::atomic::Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn per_tag_stats_split_the_fabric_counters() {
+        // the mux's per-tag counters must sum to exactly what its
+        // channels added to the fabric totals (tag words included), so
+        // worker metrics can split control from bucket traffic
+        let mut fabric = LocalFabric::new(2);
+        let fabric_stats = Arc::clone(&fabric.stats);
+        let a = Arc::new(TagMux::new(fabric.take(0), 3));
+        let _b = fabric.take(1);
+        let c0 = TagChannel::new(Arc::clone(&a), 0);
+        let c2 = TagChannel::new(Arc::clone(&a), 2);
+        c0.send(1, vec![1, 2, 3]); // 4 words on the wire
+        c2.send(1, vec![9]); // 2 words
+        c2.send(1, vec![]); // 1 word (tag only)
+        assert_eq!(a.tag_stats(0).message_count(), 1);
+        assert_eq!(a.tag_stats(0).bytes(), 16);
+        assert_eq!(a.tag_stats(1).message_count(), 0);
+        assert_eq!(a.tag_stats(2).message_count(), 2);
+        assert_eq!(a.tag_stats(2).bytes(), 12);
+        let (msgs, words) = a.aggregate();
+        assert_eq!(msgs, 3);
+        assert_eq!(words, 7);
+        assert_eq!(
+            words,
+            fabric_stats.words.load(std::sync::atomic::Ordering::Relaxed),
+            "mux aggregate must equal what the fabric was charged"
+        );
     }
 
     #[test]

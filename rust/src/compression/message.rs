@@ -110,6 +110,34 @@ pub fn apply_gathered_plain(
     Ok(applied)
 }
 
+/// Merge plain sparse messages into one index-union message: indices
+/// selected by several ranks appear once with their values summed —
+/// the node-level *reduce* of the hierarchical scheme in its
+/// bandwidth-optimal form (inter-node bytes bounded by the union, not
+/// the sum, of the node's selections).  Indices come back sorted;
+/// values are f32 sums accumulated in `msgs` order, so callers must
+/// present messages in a rank-deterministic order to get identical
+/// bits everywhere (float addition does not commute bitwise).
+///
+/// The wire schedule (`collectives::hierarchical`) deliberately does
+/// *not* apply this merge — value-merging changes float summation order
+/// and would break the bit-identity pin against the flat schedule — but
+/// the cost model prices it and the topology bench reports the union
+/// size it would achieve.
+pub fn merge_plain(msgs: &[SparseTensor]) -> SparseTensor {
+    let mut acc: std::collections::BTreeMap<u32, f32> = std::collections::BTreeMap::new();
+    for m in msgs {
+        for (&i, &v) in m.indices.iter().zip(&m.values) {
+            *acc.entry(i).or_insert(0.0) += v;
+        }
+    }
+    let mut out = SparseTensor::default();
+    for (i, v) in acc {
+        out.push(i, v);
+    }
+    out
+}
+
 /// Quantized variant of [`apply_gathered_plain`]: each rank contributes
 /// indices + one mean.
 pub fn apply_gathered_quant(
@@ -220,6 +248,71 @@ mod tests {
         let mut dense = vec![0f32; 2];
         apply_gathered_quant(&buf, 2, &mut dense, 0.5).unwrap();
         assert_eq!(dense, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn merge_sums_overlapping_indices() {
+        let a = SparseTensor::new(vec![0, 2, 5], vec![1.0, 2.0, 3.0]);
+        let b = SparseTensor::new(vec![2, 7], vec![10.0, 4.0]);
+        let m = merge_plain(&[a, b]);
+        assert_eq!(m.indices, vec![0, 2, 5, 7]);
+        assert_eq!(m.values, vec![1.0, 12.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn merge_of_disjoint_messages_is_the_sorted_union() {
+        let a = SparseTensor::new(vec![9, 1], vec![1.0, 2.0]);
+        let b = SparseTensor::new(vec![4], vec![3.0]);
+        let m = merge_plain(&[a, b]);
+        assert_eq!(m.indices, vec![1, 4, 9]);
+        assert_eq!(m.values, vec![2.0, 1.0, 3.0]);
+        assert!(merge_plain(&[]).is_empty());
+    }
+
+    #[test]
+    fn prop_merged_size_is_the_distinct_index_count() {
+        // the hierarchical cost model's union bound: |merge| == number
+        // of distinct indices across the node's messages, and the merged
+        // scatter equals the sequential scatter of the parts
+        check(40, |g| {
+            let n_msgs = g.size(1..5);
+            let dim = g.size(8..200);
+            let msgs: Vec<SparseTensor> = (0..n_msgs)
+                .map(|_| {
+                    let k = g.size(0..dim.min(40));
+                    let mut s = SparseTensor::default();
+                    let mut used = vec![false; dim];
+                    for _ in 0..k {
+                        let i = g.size(0..dim);
+                        if !used[i] {
+                            used[i] = true;
+                            s.push(i as u32, g.f32(-2.0..2.0));
+                        }
+                    }
+                    s
+                })
+                .collect();
+            let mut distinct = vec![false; dim];
+            for m in &msgs {
+                for &i in &m.indices {
+                    distinct[i as usize] = true;
+                }
+            }
+            let want = distinct.iter().filter(|&&d| d).count();
+            let merged = merge_plain(&msgs);
+            ensure(merged.len() == want, format!("union {} != {}", merged.len(), want))?;
+            let mut direct = vec![0f64; dim];
+            for m in &msgs {
+                for (&i, &v) in m.indices.iter().zip(&m.values) {
+                    direct[i as usize] += v as f64;
+                }
+            }
+            for (&i, &v) in merged.indices.iter().zip(&merged.values) {
+                let d = direct[i as usize];
+                ensure((v as f64 - d).abs() <= 1e-4 * d.abs().max(1.0), "merged value")?;
+            }
+            Ok(())
+        });
     }
 
     #[test]

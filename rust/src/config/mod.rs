@@ -8,10 +8,38 @@ pub mod presets;
 
 pub use presets::preset;
 
+use crate::collectives::group::Topology;
 use crate::compression::PolicyThresholds;
 use crate::optim::{LrSchedule, Optimizer, WarmupSchedule};
 use crate::simnet::iteration::Strategy;
 use crate::util::json::{self, Value};
+
+/// How each fusion bucket's collective algorithm is chosen (DESIGN.md
+/// §Topology-Aware-Communication).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AlgoMode {
+    /// Flat sparse allgather over the full world for every bucket (the
+    /// historical schedule).
+    #[default]
+    Sparse,
+    /// The hierarchical (intra-node / leader / broadcast) schedule for
+    /// every bucket.
+    Hierarchical,
+    /// Cost-model argmin per bucket (`costmodel::pick_algo` against
+    /// [`TrainConfig::machine`]): dense allreduce, flat sparse, or
+    /// hierarchical.
+    Auto,
+}
+
+impl AlgoMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            AlgoMode::Sparse => "sparse",
+            AlgoMode::Hierarchical => "hierarchical",
+            AlgoMode::Auto => "auto",
+        }
+    }
+}
 
 /// Which fabric carries the synchronization traffic (see DESIGN.md
 /// §Transports).
@@ -133,6 +161,17 @@ pub struct TrainConfig {
     pub rank: usize,
     /// Rendezvous address rank 0 listens on (TCP transport only).
     pub rendezvous: String,
+    /// Physical topology `nodes x ranks-per-node` the world maps onto
+    /// (contiguous placement); `None` = flat (one node).  Shapes the
+    /// hierarchical schedule — but which buckets actually use it is
+    /// [`TrainConfig::algo`]'s call: under the default `sparse` mode a
+    /// topology alone changes nothing.
+    pub topology: Option<Topology>,
+    /// Per-bucket collective algorithm choice.
+    pub algo: AlgoMode,
+    /// Machine preset the `auto` picker prices Eq. 1/2 and the
+    /// hierarchical closed form against (`simnet::Machine::by_name`).
+    pub machine: String,
 }
 
 impl Default for TrainConfig {
@@ -159,6 +198,9 @@ impl Default for TrainConfig {
             transport: TransportKind::Local,
             rank: 0,
             rendezvous: "127.0.0.1:29500".into(),
+            topology: None,
+            algo: AlgoMode::Sparse,
+            machine: "muradin".into(),
         }
     }
 }
@@ -168,6 +210,22 @@ fn parse_transport(s: &str) -> Result<TransportKind, ConfigError> {
         "local" | "threads" => Ok(TransportKind::Local),
         "tcp" | "net" => Ok(TransportKind::Tcp),
         other => Err(ConfigError::Invalid(format!("unknown transport '{other}'"))),
+    }
+}
+
+fn parse_algo(s: &str) -> Result<AlgoMode, ConfigError> {
+    match s {
+        "sparse" | "flat" => Ok(AlgoMode::Sparse),
+        "hierarchical" | "hier" => Ok(AlgoMode::Hierarchical),
+        "auto" | "costmodel" => Ok(AlgoMode::Auto),
+        other => Err(ConfigError::Invalid(format!("unknown algo '{other}'"))),
+    }
+}
+
+fn parse_topology(s: &str) -> Result<Option<Topology>, ConfigError> {
+    match s {
+        "" | "flat" | "none" => Ok(None),
+        spec => Topology::parse(spec).map(Some).map_err(ConfigError::Invalid),
     }
 }
 
@@ -281,6 +339,9 @@ impl TrainConfig {
             "transport" => self.transport = parse_transport(as_str()?)?,
             "rank" => self.rank = as_usize()?,
             "rendezvous" => self.rendezvous = as_str()?.to_string(),
+            "topology" => self.topology = parse_topology(as_str()?)?,
+            "algo" => self.algo = parse_algo(as_str()?)?,
+            "machine" => self.machine = as_str()?.to_string(),
             other => return Err(ConfigError::Invalid(format!("unknown config key '{other}'"))),
         }
         Ok(())
@@ -338,6 +399,12 @@ impl TrainConfig {
             ("transport", json::s(self.transport.label())),
             ("rank", json::num(self.rank as f64)),
             ("rendezvous", json::s(self.rendezvous.clone())),
+            (
+                "topology",
+                json::s(self.topology.map(|t| t.label()).unwrap_or_else(|| "flat".into())),
+            ),
+            ("algo", json::s(self.algo.label())),
+            ("machine", json::s(self.machine.clone())),
         ])
     }
 
@@ -382,6 +449,30 @@ impl TrainConfig {
             if self.rendezvous.is_empty() {
                 return Err(ConfigError::Invalid("tcp transport needs a rendezvous".into()));
             }
+        }
+        if let Some(t) = self.topology {
+            if t.world() != self.world {
+                return Err(ConfigError::Invalid(format!(
+                    "topology {} covers {} ranks but world is {}",
+                    t.label(),
+                    t.world(),
+                    self.world
+                )));
+            }
+        }
+        if self.algo != AlgoMode::Sparse && self.topology.is_none() {
+            return Err(ConfigError::Invalid(format!(
+                "algo '{}' needs a --topology (hierarchical schedules are shaped by it)",
+                self.algo.label()
+            )));
+        }
+        if self.algo == AlgoMode::Auto
+            && crate::simnet::Machine::by_name(&self.machine).is_none()
+        {
+            return Err(ConfigError::Invalid(format!(
+                "unknown machine preset '{}' for the auto algorithm picker",
+                self.machine
+            )));
         }
         Ok(())
     }
@@ -484,6 +575,36 @@ mod tests {
         assert!(cfg.validate().is_err(), "comm pool cannot drive device selection");
         cfg.pipeline = false;
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn topology_knobs_apply_and_validate() {
+        let mut cfg = TrainConfig::default();
+        cfg.apply_overrides(&["world=8".into(), "topology=2x4".into(), "algo=hierarchical".into()])
+            .unwrap();
+        assert_eq!(cfg.topology, Some(Topology::new(2, 4)));
+        assert_eq!(cfg.algo, AlgoMode::Hierarchical);
+        cfg.validate().unwrap();
+        // topology must cover the world
+        cfg.world = 4;
+        assert!(cfg.validate().is_err(), "2x4 over world 4");
+        cfg.world = 8;
+        // auto needs a known machine preset
+        cfg.apply_overrides(&["algo=auto".into(), "machine=fatnode".into()]).unwrap();
+        cfg.validate().unwrap();
+        cfg.machine = "warp-drive".into();
+        assert!(cfg.validate().is_err(), "unknown machine");
+        // hierarchical/auto without a topology is rejected
+        let mut flat = TrainConfig::default();
+        flat.apply_overrides(&["algo=hierarchical".into()]).unwrap();
+        assert!(flat.validate().is_err());
+        // 'flat' clears the topology again
+        cfg.apply_overrides(&["topology=flat".into(), "algo=sparse".into(), "machine=muradin".into()])
+            .unwrap();
+        assert_eq!(cfg.topology, None);
+        cfg.validate().unwrap();
+        assert!(cfg.apply_overrides(&["topology=2by4".into()]).is_err());
+        assert!(cfg.apply_overrides(&["algo=psychic".into()]).is_err());
     }
 
     #[test]

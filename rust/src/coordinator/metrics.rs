@@ -46,6 +46,13 @@ pub struct WorkerResult {
     /// FNV-1a hash over the final parameter bits (replica-consistency check).
     pub param_hash: u64,
     pub final_loss: f32,
+    /// Bytes this worker pushed through its `TagMux` channels (bucket
+    /// streams + control, tag words included) — 0 on the sequential
+    /// engine, which does not multiplex.
+    pub mux_bytes: u64,
+    /// The control-channel (tag 0) share of `mux_bytes`: dense
+    /// allreduces, loss averaging, replica-hash checks.
+    pub mux_ctrl_bytes: u64,
 }
 
 /// FNV-1a over f32 bit patterns.
@@ -80,6 +87,11 @@ pub struct TrainReport {
     /// Total fabric traffic (bytes / messages) over the whole run.
     pub bytes: u64,
     pub messages: u64,
+    /// Multiplexed traffic summed over workers (0 without the pipelined
+    /// engine): total through `TagMux` channels and the control-tag
+    /// share of it, so the report can split bucket vs control streams.
+    pub mux_bytes: u64,
+    pub mux_ctrl_bytes: u64,
     /// Wall-clock of the whole run (leader side).
     pub wall_secs: f64,
     pub final_loss: f32,
@@ -135,6 +147,14 @@ impl TrainReport {
             }
         }
         let _ = writeln!(s, "  phases: {}", parts.join("  "));
+        if self.mux_bytes > 0 {
+            let _ = writeln!(
+                s,
+                "  muxed streams: {} buckets + {} control",
+                crate::util::fmt_bytes((self.mux_bytes - self.mux_ctrl_bytes) as usize),
+                crate::util::fmt_bytes(self.mux_ctrl_bytes as usize),
+            );
+        }
         if let Some(&(_, d)) = self.union_density.last() {
             let _ = writeln!(s, "  union density of synced residual: {:.3}%", d * 100.0);
         }
@@ -187,6 +207,8 @@ mod tests {
             phases,
             bytes: 4096,
             messages: 10,
+            mux_bytes: 3000,
+            mux_ctrl_bytes: 1000,
             wall_secs: 1.0,
             final_loss: 1.0,
             final_eval: None,
@@ -196,5 +218,6 @@ mod tests {
         assert_eq!(r.bytes_per_step_per_rank(), 4096.0 / 20.0);
         let s = r.summary();
         assert!(s.contains("RGC") && s.contains("union density"));
+        assert!(s.contains("muxed streams"), "{s}");
     }
 }

@@ -97,8 +97,12 @@ impl Trainer {
         let wall_secs = start.elapsed().as_secs_f64();
 
         let mut phases = PhaseTimer::new();
+        let mut mux_bytes = 0u64;
+        let mut mux_ctrl_bytes = 0u64;
         for r in &results {
             phases.merge(&r.timer);
+            mux_bytes += r.mux_bytes;
+            mux_ctrl_bytes += r.mux_ctrl_bytes;
         }
         let h0 = results[0].param_hash;
         let replicas_consistent = results.iter().all(|r| r.param_hash == h0);
@@ -121,6 +125,8 @@ impl Trainer {
             phases,
             bytes: stats.bytes(),
             messages: stats.message_count(),
+            mux_bytes,
+            mux_ctrl_bytes,
             wall_secs,
             replicas_consistent,
         })
@@ -167,6 +173,8 @@ impl Trainer {
             phases: result.timer,
             bytes: stats.map_or(0, |s| s.bytes()),
             messages: stats.map_or(0, |s| s.message_count()),
+            mux_bytes: result.mux_bytes,
+            mux_ctrl_bytes: result.mux_ctrl_bytes,
             wall_secs,
             replicas_consistent,
         })

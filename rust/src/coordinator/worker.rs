@@ -12,11 +12,13 @@
 //! the endpoint.
 
 use super::metrics::{param_hash, phase, WorkerResult};
+use crate::collectives::group::{Algo, Topology};
 use crate::collectives::mux::{TagChannel, TagMux};
 use crate::collectives::{allreduce_mean, Transport};
 use crate::compression::message::{unpack_plain, unpack_quant};
 use crate::compression::{CompressorConfig, Method};
-use crate::config::TrainConfig;
+use crate::config::{AlgoMode, TrainConfig};
+use crate::costmodel;
 use crate::data::{ClusterDataset, ZipfMarkovCorpus};
 use crate::models::schema::ModelSchema;
 use crate::optim::{clip_by_global_norm, local_clip_factor, DenseOptState};
@@ -27,6 +29,7 @@ use crate::pipeline::{
 use crate::runtime::step::{Batch, StepRunner};
 use crate::runtime::{CompressOps, DeviceSelector, Runtime};
 use crate::simnet::iteration::Strategy;
+use crate::simnet::Machine;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -153,7 +156,49 @@ pub fn run_worker<T: Transport + Sync>(
             quantize: plans[i].quantize,
         })
         .collect();
-    let buckets = build_buckets(&specs, cfg.fusion_cap_elems, cfg.optimizer.accumulation());
+    let mut buckets = build_buckets(&specs, cfg.fusion_cap_elems, cfg.optimizer.accumulation());
+
+    // Per-bucket collective plan (DESIGN.md §Topology-Aware-
+    // Communication): static under `sparse`/`hierarchical`, the
+    // cost-model argmin under `auto` — where a dense-picked bucket's
+    // layers are demoted to the dense allreduce path before any engine
+    // (or the mux tag space) sees them.  Identical on every rank: the
+    // inputs are config + schema, never runtime measurements.
+    let topo = cfg.topology.unwrap_or_else(|| Topology::flat(world));
+    match cfg.algo {
+        AlgoMode::Sparse => {}
+        AlgoMode::Hierarchical => {
+            for b in &mut buckets {
+                b.set_algo(Algo::Hierarchical);
+            }
+        }
+        AlgoMode::Auto => {
+            let machine = Machine::by_name(&cfg.machine)
+                .ok_or_else(|| format!("rank {rank}: unknown machine '{}'", cfg.machine))?;
+            let mut kept = Vec::with_capacity(buckets.len());
+            for mut b in buckets {
+                let layers: Vec<(usize, Method, bool)> =
+                    b.specs().map(|s| (s.n, s.method, s.quantize)).collect();
+                let cost = costmodel::bucket_cost(&machine, &layers, cfg.density);
+                let (algo, _times) = costmodel::pick_algo(
+                    &machine,
+                    topo.nodes,
+                    topo.ranks_per_node,
+                    &cost,
+                    cfg.density,
+                );
+                if algo == Algo::Dense {
+                    for s in b.specs() {
+                        plans[s.li].method = Method::Dense;
+                    }
+                } else {
+                    b.set_algo(algo);
+                    kept.push(b);
+                }
+            }
+            buckets = kept;
+        }
+    }
     let n_buckets = buckets.len();
     let cc = CompressorConfig { density: cfg.density, ..Default::default() };
 
@@ -161,20 +206,21 @@ pub fn run_worker<T: Transport + Sync>(
     // endpoint (bit- and byte-identical to the historical schedule);
     // pipelined multiplexes everything: control on tag 0, bucket b on
     // tag 1 + b.
-    let mux: Arc<TagMux<&T>>;
+    let mut mux_handle: Option<Arc<TagMux<&T>>> = None;
     let ctrl: TagChannel<&T>;
     let mut pipelined_engine: Pipelined<&T>;
     let mut sequential_engine: Sequential<'_, T>;
     let engine: &mut dyn SyncEngine;
     let comm: &dyn Transport;
     if cfg.pipeline {
-        mux = Arc::new(TagMux::new(transport, BUCKET_TAG_BASE + n_buckets as u32));
+        let mux = Arc::new(TagMux::new(transport, BUCKET_TAG_BASE + n_buckets as u32));
+        mux_handle = Some(Arc::clone(&mux));
         ctrl = TagChannel::new(Arc::clone(&mux), CTRL_TAG);
-        pipelined_engine = Pipelined::new(Arc::clone(&mux), buckets, cfg.inflight, cc);
+        pipelined_engine = Pipelined::with_topology(mux, topo, buckets, cfg.inflight, cc);
         engine = &mut pipelined_engine;
         comm = &ctrl;
     } else {
-        sequential_engine = Sequential::new(transport, device, buckets, cc);
+        sequential_engine = Sequential::with_topology(transport, topo, device, buckets, cc);
         engine = &mut sequential_engine;
         comm = transport;
     }
@@ -287,6 +333,18 @@ pub fn run_worker<T: Transport + Sync>(
         }
     }
 
+    // Mux channel accounting: under the pipelined engine all fabric
+    // traffic is tag-multiplexed, and the per-tag counters split the
+    // per-fabric totals into bucket streams vs the loop's control
+    // collectives (sequential runs have no mux; both stay 0).
+    let (mux_bytes, mux_ctrl_bytes) = match &mux_handle {
+        Some(m) => {
+            let (_msgs, words) = m.aggregate();
+            (words * 4, m.tag_stats(CTRL_TAG).bytes())
+        }
+        None => (0, 0),
+    };
+
     Ok(WorkerResult {
         rank,
         timer,
@@ -296,6 +354,8 @@ pub fn run_worker<T: Transport + Sync>(
         sent_density,
         param_hash: param_hash(&params),
         final_loss,
+        mux_bytes,
+        mux_ctrl_bytes,
     })
 }
 

@@ -18,6 +18,8 @@
 //! * decompression (`p·γ₁·M·D`) grows linearly with p and becomes the
 //!   bottleneck at scale ([`decompress_fraction`]).
 
+use crate::collectives::group::Algo;
+use crate::compression::Method;
 use crate::simnet::Machine;
 
 /// Wire bytes per selected element.
@@ -86,6 +88,161 @@ pub fn t_sparse_pipelined(
     let md = m_elems * density;
     let transfer = pf.log2() * machine.alpha + (pf - 1.0) * md * wire_bytes * machine.beta;
     t_overlap(t_select, transfer) + pf * md * machine.gamma_decompress
+}
+
+/// Hierarchical sparse synchronization cost (seconds) on `nodes ×
+/// ranks_per_node`: the closed form of the three-phase schedule
+/// `collectives::hierarchical` runs (critical path = the node leader).
+///
+/// ```text
+/// T_hier = T_select
+///        + (s-1)·(α_i + M·D·w·β_i)            intra gather at the leader
+///        + L(n)·α + (n-1)·s·(M·D·w)·β         leader allgather of node blobs
+///        + (s-1)·(α_i + p·(M·D·w)·β_i)        intra broadcast of the world blob
+///        + p·(M·D)·γ₁                         decompression (same as Eq. 1)
+/// ```
+///
+/// where `L(n)` is the leader-allgather latency term of the schedule
+/// actually dispatched: `lg(n)` rounds under recursive doubling
+/// (power-of-two node counts), `n-1` under the ring fallback.
+///
+/// `simnet::hierarchical_allgather_time` walks the same schedule; the
+/// proptests pin the two equal.  Versus Eq. 1, the slow-link bandwidth
+/// term shrinks from `(p-1)` to `(n-1)·s` message units while the
+/// gather/broadcast phases pay the intra link — the schedule wins iff
+/// `β/β_i` exceeds roughly `p` (see `Machine::fatnode`).
+pub fn t_hierarchical(
+    machine: &Machine,
+    nodes: usize,
+    ranks_per_node: usize,
+    m_elems: f64,
+    density: f64,
+    t_select: f64,
+    wire_bytes: f64,
+) -> f64 {
+    let p = nodes * ranks_per_node;
+    if p <= 1 {
+        return t_select;
+    }
+    let md = m_elems * density;
+    let msg_bytes = md * wire_bytes;
+    let (n, s, pf) = (nodes as f64, ranks_per_node as f64, p as f64);
+    let mut t = t_select;
+    t += (s - 1.0) * (machine.intra_alpha + msg_bytes * machine.intra_beta);
+    if nodes > 1 {
+        let rounds = if nodes.is_power_of_two() { n.log2() } else { n - 1.0 };
+        t += rounds * machine.alpha + (n - 1.0) * s * msg_bytes * machine.beta;
+    }
+    t += (s - 1.0) * (machine.intra_alpha + pf * msg_bytes * machine.intra_beta);
+    t + pf * md * machine.gamma_decompress
+}
+
+/// Total payload words the hierarchical schedule moves across the whole
+/// fabric for uniform per-rank messages of `msg_words` words — the
+/// bandwidth term [`t_hierarchical`] charges, summed over ranks:
+/// `n·(s-1)·m` (gather) + `n·(n-1)·s·m` (leader allgather) +
+/// `n·(s-1)·p·m` (broadcast).  The schedule's exact byte count is this
+/// plus deterministic block framing
+/// (`collectives::hierarchical_traffic_words` — pinned equal in
+/// `tests/topology.rs`).
+pub fn hierarchical_payload_words(nodes: usize, ranks_per_node: usize, msg_words: usize) -> u64 {
+    let (n, s) = (nodes as u64, ranks_per_node as u64);
+    let (p, m) = (n * s, msg_words as u64);
+    if p <= 1 {
+        return 0;
+    }
+    n * (s - 1) * m + n * (n - 1) * s * m + n * (s - 1) * p * m
+}
+
+/// Expected union density of `s` independent density-`d` selections —
+/// the size the value-merging intra-node union
+/// (`compression::message::merge_plain`) would shrink a node blob to:
+/// `1 - (1-d)^s` (the §5.3 "1.55% from 0.1%·16 workers" growth law).
+pub fn union_density(density: f64, ranks: usize) -> f64 {
+    1.0 - (1.0 - density).powi(ranks as i32)
+}
+
+/// Plan-time cost inputs the picker derives from one fusion bucket.
+#[derive(Clone, Copy, Debug)]
+pub struct BucketCost {
+    /// Total elements across the bucket's layers (M).
+    pub m_elems: f64,
+    /// Modeled selection time for the bucket (Σ per-layer launches).
+    pub t_select: f64,
+    /// Mean wire bytes per selected element (8 plain / 4 quantized,
+    /// selection-weighted across the bucket's layers).
+    pub wire_bytes: f64,
+}
+
+/// Derive [`BucketCost`] from a bucket's `(elems, method, quantize)`
+/// layer specs under density `D` — what `--algo auto` prices.
+pub fn bucket_cost(machine: &Machine, layers: &[(usize, Method, bool)], density: f64) -> BucketCost {
+    let mut m_elems = 0.0;
+    let mut t_select = 0.0;
+    let mut sel_elems = 0.0;
+    let mut sel_words = 0.0;
+    for &(n, method, quantize) in layers {
+        let nf = n as f64;
+        m_elems += nf;
+        let per_elem = match method {
+            Method::Dense => 0.0,
+            Method::ExactTopk => machine.sel_exact_per_elem,
+            Method::TrimmedTopk => machine.sel_trimmed_per_elem,
+            Method::SampledBinarySearch => machine.sel_bs_per_elem,
+        };
+        if method != Method::Dense {
+            t_select += machine.sel_launch + nf * per_elem;
+        }
+        let k = (nf * density).ceil().max(1.0);
+        sel_elems += k;
+        sel_words += k * if quantize { 1.0 } else { 2.0 };
+    }
+    let wire_bytes =
+        if sel_elems > 0.0 { 4.0 * sel_words / sel_elems } else { PLAIN_WIRE_BYTES };
+    BucketCost { m_elems, t_select, wire_bytes }
+}
+
+/// The `--algo auto` decision for one fusion bucket: argmin of Eq. 2
+/// (dense allreduce), Eq. 1 (flat sparse allgather) and the
+/// hierarchical closed form, evaluated at plan time.  Ties resolve
+/// dense < sparse < hierarchical (prefer the simpler schedule).
+/// Returns the choice plus the three modeled times
+/// `[dense, sparse, hierarchical]` for logs and the pinned test.
+///
+/// Latency conventions are consistent wherever the trainer can reach:
+/// `config::validate` requires a power-of-two world, and every
+/// factorization of a power of two is pow2 × pow2, so all three forms
+/// price recursive-doubling rounds.  Off that path (a raw non-pow2 `p`
+/// through this API), Eq. 1/2 keep the paper's `lg p` convention while
+/// the hierarchical form prices the ring its leader phase actually
+/// dispatches — compare with care.
+pub fn pick_algo(
+    machine: &Machine,
+    nodes: usize,
+    ranks_per_node: usize,
+    cost: &BucketCost,
+    density: f64,
+) -> (Algo, [f64; 3]) {
+    let p = nodes * ranks_per_node;
+    let td = t_dense(machine, p, cost.m_elems);
+    let ts = t_sparse(machine, p, cost.m_elems, density, cost.t_select, cost.wire_bytes);
+    let th = t_hierarchical(
+        machine,
+        nodes,
+        ranks_per_node,
+        cost.m_elems,
+        density,
+        cost.t_select,
+        cost.wire_bytes,
+    );
+    let algo = if td <= ts && td <= th {
+        Algo::Dense
+    } else if ts <= th {
+        Algo::Sparse
+    } else {
+        Algo::Hierarchical
+    };
+    (algo, [td, ts, th])
 }
 
 /// Sparse/dense *bandwidth* ratio: `(p-1)·D·w / (2·(p-1)/p · 4)` =
@@ -185,6 +342,81 @@ mod tests {
             let walked = allreduce_time(&m, p, elems * 4.0);
             ensure_close(closed, walked, 1e-9, "Eq2 vs schedule")
         });
+    }
+
+    #[test]
+    fn hierarchical_matches_simnet_walk() {
+        // closed-form transfer terms == the walked three-phase schedule,
+        // over pow2 (recursive doubling) and non-pow2 (ring) node counts
+        let m = Machine::fatnode();
+        check(60, |g| {
+            let nodes = g.size(1..13);
+            let s = g.size(1..9);
+            let elems = g.size(10_000..4_000_000) as f64;
+            let d = g.f32(0.0001..0.02) as f64;
+            let p = nodes * s;
+            if p == 1 {
+                return Ok(());
+            }
+            let closed = t_hierarchical(&m, nodes, s, elems, d, 0.0, PLAIN_WIRE_BYTES)
+                - p as f64 * elems * d * m.gamma_decompress;
+            let walked =
+                crate::simnet::hierarchical_allgather_time(&m, nodes, s, elems * d * PLAIN_WIRE_BYTES);
+            ensure_close(closed, walked, 1e-9, "T_hier vs schedule")
+        });
+    }
+
+    #[test]
+    fn hierarchical_degenerates_to_flat_on_one_rank_nodes() {
+        // s = 1: no gather, no broadcast — T_hier == Eq. 1 exactly
+        let m = Machine::piz_daint();
+        for p in [2usize, 8, 32] {
+            let th = t_hierarchical(&m, p, 1, 1e7, 1e-3, 1e-4, PLAIN_WIRE_BYTES);
+            let ts = t_sparse(&m, p, 1e7, 1e-3, 1e-4, PLAIN_WIRE_BYTES);
+            assert!((th - ts).abs() <= 1e-12 * ts, "p={p}: {th} vs {ts}");
+        }
+    }
+
+    #[test]
+    fn picker_argmin_spans_all_three_regimes() {
+        let m = Machine::fatnode();
+        // a bucket of many fused small layers: per-layer selection
+        // launches dwarf the bandwidth saving -> dense
+        let tiny =
+            BucketCost { m_elems: 80_000.0, t_select: 20.0 * m.sel_launch, wire_bytes: 8.0 };
+        let (a, t) = pick_algo(&m, 4, 4, &tiny, 1e-3);
+        assert_eq!(a, Algo::Dense, "{t:?}");
+        // big bucket on fat nodes -> hierarchical beats flat sparse
+        let big = BucketCost { m_elems: 40e6, t_select: 40e6 * m.sel_bs_per_elem, wire_bytes: 8.0 };
+        let (a, t) = pick_algo(&m, 4, 4, &big, 1e-3);
+        assert_eq!(a, Algo::Hierarchical, "{t:?}");
+        assert!(t[2] < t[1] && t[1] < t[0], "{t:?}");
+        // same bucket on piz-daint's thin nodes -> flat sparse
+        let pd = Machine::piz_daint();
+        let (a, t) = pick_algo(&pd, 4, 4, &big, 1e-3);
+        assert_eq!(a, Algo::Sparse, "{t:?}");
+    }
+
+    #[test]
+    fn bucket_cost_weights_wire_bytes_by_selection() {
+        let m = Machine::muradin();
+        // two equal layers, one quantized: mean wire bytes = 6
+        let layers = vec![
+            (100_000usize, Method::SampledBinarySearch, false),
+            (100_000usize, Method::SampledBinarySearch, true),
+        ];
+        let c = bucket_cost(&m, &layers, 0.01);
+        assert_eq!(c.m_elems, 200_000.0);
+        assert!((c.wire_bytes - 6.0).abs() < 1e-9, "{}", c.wire_bytes);
+        assert!(c.t_select > 2.0 * m.sel_launch);
+    }
+
+    #[test]
+    fn union_density_growth_law() {
+        // §5.3: 0.1% density over 16 workers unions to ~1.55%
+        let u = union_density(1e-3, 16);
+        assert!(u > 0.0158 && u < 0.016, "{u}");
+        assert_eq!(union_density(0.5, 1), 0.5);
     }
 
     #[test]

@@ -70,6 +70,9 @@ fn cmd_train(argv: &[String]) -> i32 {
         .opt("port", "", "loopback rendezvous port (shorthand for --rendezvous 127.0.0.1:PORT)")
         .opt("rendezvous", "", "rendezvous address rank 0 listens on (tcp transport)")
         .opt("inflight", "", "pipelined engine: max buckets in flight (default 2)")
+        .opt("topology", "", "physical topology NODESxRANKS_PER_NODE, e.g. 2x4 (flat if unset)")
+        .opt("algo", "", "bucket collective: sparse | hierarchical | auto (cost-model argmin)")
+        .opt("machine", "", "machine preset the auto picker prices against (default muradin)")
         .flag("pipeline", "overlap bucket selection + collectives on a comm thread pool")
         .flag("csv", "print a CSV row instead of the summary");
     let parsed = match args.parse(argv) {
@@ -98,7 +101,7 @@ fn cmd_train(argv: &[String]) -> i32 {
         overrides.extend(parsed.get("set").split(',').map(str::to_string));
     }
     // dedicated transport/engine flags win over --set
-    for key in ["transport", "rank", "rendezvous", "inflight"] {
+    for key in ["transport", "rank", "rendezvous", "inflight", "topology", "algo", "machine"] {
         if !parsed.get(key).is_empty() {
             overrides.push(format!("{key}={}", parsed.get(key)));
         }
@@ -215,6 +218,9 @@ fn cmd_launch(argv: &[String]) -> i32 {
         .opt("config", "", "JSON config file forwarded to every rank")
         .opt("set", "", "comma-separated key=value overrides forwarded to every rank")
         .opt("inflight", "", "pipelined engine: max buckets in flight (default 2)")
+        .opt("topology", "", "physical topology NODESxRANKS_PER_NODE forwarded to every rank")
+        .opt("algo", "", "bucket collective forwarded to every rank: sparse | hierarchical | auto")
+        .opt("machine", "", "machine preset the auto picker prices against, forwarded to every rank")
         .flag("pipeline", "every rank runs the pipelined sync engine")
         .flag("csv", "rank 0 prints a CSV row instead of the summary");
     let parsed = match args.parse(argv) {
@@ -250,6 +256,11 @@ fn cmd_launch(argv: &[String]) -> i32 {
         }
         if !parsed.get("inflight").is_empty() {
             set.push_str(&format!(",inflight={}", parsed.get("inflight")));
+        }
+        for key in ["topology", "algo", "machine"] {
+            if !parsed.get(key).is_empty() {
+                set.push_str(&format!(",{key}={}", parsed.get(key)));
+            }
         }
         if !parsed.get("set").is_empty() {
             set = format!("{},{set}", parsed.get("set"));
@@ -298,12 +309,17 @@ fn cmd_launch(argv: &[String]) -> i32 {
 fn cmd_simulate(argv: &[String]) -> i32 {
     let args = Args::new("redsync simulate", "virtual-time scalability simulation")
         .opt("model", "vgg16", "profile: alexnet|vgg16|vgg16-cifar|resnet50|resnet44|lstm-ptb|lstm-wiki2")
-        .opt("machine", "piz-daint", "machine preset: muradin|piz-daint")
+        .opt("machine", "piz-daint", "machine preset: muradin|piz-daint|fatnode")
         .opt("gpus", "2,4,8,16,32,64,128", "comma-separated world sizes")
         .opt("density", "0.001", "compression density D")
         .opt("batch", "32", "per-GPU batch size")
         .opt("engine", "pipelined", "sync-engine schedule: pipelined|sequential")
         .opt("inflight", "0", "pipelined in-flight window (0 = unbounded)")
+        .opt(
+            "topology",
+            "",
+            "NODESxRANKS_PER_NODE; ranks-per-node is held as --gpus sweeps (hierarchical sparse collectives)",
+        )
         .flag("breakdown", "print the Fig. 10 phase decomposition");
     let parsed = match args.parse(argv) {
         Ok(p) => p,
@@ -328,21 +344,48 @@ fn cmd_simulate(argv: &[String]) -> i32 {
             return 2;
         }
     };
-    let cfg = SimConfig {
+    let ranks_per_node = match parsed.get("topology") {
+        "" => None,
+        spec => match redsync::collectives::Topology::parse(spec) {
+            Ok(t) => Some(t.ranks_per_node),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+    };
+    let base_cfg = SimConfig {
         density: parsed.f64("density"),
         batch_per_gpu: parsed.usize("batch"),
         pipeline,
         inflight: parsed.usize("inflight"),
         ..SimConfig::default()
     };
+    // per world size p: hold ranks-per-node, scale the node count
+    let cfg_for = |p: usize| -> SimConfig {
+        let topology = ranks_per_node
+            .filter(|&rpn| p % rpn == 0 && p >= rpn)
+            .map(|rpn| (p / rpn, rpn));
+        SimConfig { topology, ..base_cfg }
+    };
+    let cfg = base_cfg;
     let gpus: Vec<usize> = parsed
         .get("gpus")
         .split(',')
         .filter_map(|s| s.trim().parse().ok())
         .collect();
+    if let Some(rpn) = ranks_per_node {
+        for &p in &gpus {
+            if p % rpn != 0 || p < rpn {
+                eprintln!(
+                    "# note: {rpn} ranks/node does not divide p={p} — that row uses the flat schedule"
+                );
+            }
+        }
+    }
 
     println!(
-        "# {} on {} (density {}, batch/gpu {}, engine {}{})",
+        "# {} on {} (density {}, batch/gpu {}, engine {}{}{})",
         model.name,
         machine.name,
         cfg.density,
@@ -353,13 +396,16 @@ fn cmd_simulate(argv: &[String]) -> i32 {
         } else {
             String::new()
         },
+        ranks_per_node
+            .map(|rpn| format!(", hierarchical over {rpn} ranks/node"))
+            .unwrap_or_default(),
     );
     if parsed.get_flag("breakdown") {
         println!("{:>5} {:>10} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>10}",
             "gpus", "strategy", "compute", "select", "mask", "pack", "comm", "unpack", "iter(ms)");
         for &p in &gpus {
             for strat in [Strategy::Dense, Strategy::Rgc, Strategy::QuantRgc] {
-                let b = simulate_iteration(&model, &machine, p, strat, &cfg);
+                let b = simulate_iteration(&model, &machine, p, strat, &cfg_for(p));
                 println!(
                     "{:>5} {:>10} {:>8.1}% {:>8.1}% {:>8.1}% {:>8.1}% {:>8.1}% {:>8.1}% {:>10.2}",
                     p,
@@ -377,9 +423,10 @@ fn cmd_simulate(argv: &[String]) -> i32 {
     } else {
         println!("{:>5} {:>12} {:>12} {:>12}", "gpus", "baseline", "RGC", "quant-RGC");
         for &p in &gpus {
-            let d = speedup(&model, &machine, p, Strategy::Dense, &cfg);
-            let r = speedup(&model, &machine, p, Strategy::Rgc, &cfg);
-            let q = speedup(&model, &machine, p, Strategy::QuantRgc, &cfg);
+            let c = cfg_for(p);
+            let d = speedup(&model, &machine, p, Strategy::Dense, &c);
+            let r = speedup(&model, &machine, p, Strategy::Rgc, &c);
+            let q = speedup(&model, &machine, p, Strategy::QuantRgc, &c);
             println!("{p:>5} {d:>12.2} {r:>12.2} {q:>12.2}");
         }
     }
@@ -484,12 +531,13 @@ fn cmd_select(argv: &[String]) -> i32 {
 
 fn cmd_info() -> i32 {
     println!("machine presets:");
-    for m in [Machine::muradin(), Machine::piz_daint()] {
+    for m in [Machine::muradin(), Machine::piz_daint(), Machine::fatnode()] {
         println!(
-            "  {:<10} alpha {:.0}us  bw {:.1} GB/s  max ranks {}",
+            "  {:<10} alpha {:.0}us  bw {:.1} GB/s  intra bw {:.0} GB/s  max ranks {}",
             m.name,
             m.alpha * 1e6,
             1e-9 / m.beta,
+            1e-9 / m.intra_beta,
             m.max_ranks
         );
     }

@@ -81,17 +81,38 @@ fn timed_out(msg: &str) -> io::Error {
     io::Error::new(io::ErrorKind::TimedOut, msg.to_string())
 }
 
-/// Dial with retries until `deadline`: during bootstrap the target's
-/// listener may simply not be bound yet.
+/// First retry delay of [`connect_retry`]; doubles per refused attempt.
+const CONNECT_BACKOFF_START: Duration = Duration::from_millis(10);
+/// Backoff ceiling: late attempts poll at this period until the
+/// deadline, so a rank that comes up seconds late is still caught
+/// promptly without hammering the host with SYNs.
+const CONNECT_BACKOFF_CAP: Duration = Duration::from_millis(400);
+
+/// Dial with bounded exponential backoff until `deadline`: during
+/// bootstrap the target's listener may simply not be bound yet (ranks
+/// of a `launch` fleet start in arbitrary order), so refused/unreachable
+/// connects are retried — 10ms, 20ms, ... capped at 400ms — rather than
+/// failing on the first `ECONNREFUSED`.  On timeout the error reports
+/// the attempt count and the last underlying cause.
 fn connect_retry<A: ToSocketAddrs + Clone>(addr: A, deadline: Instant) -> io::Result<TcpStream> {
+    let mut delay = CONNECT_BACKOFF_START;
+    let mut attempts = 0u32;
     loop {
+        attempts += 1;
         match TcpStream::connect(addr.clone()) {
             Ok(s) => return Ok(s),
             Err(e) => {
-                if Instant::now() >= deadline {
-                    return Err(e);
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(io::Error::new(
+                        e.kind(),
+                        format!("giving up after {attempts} connect attempts: {e}"),
+                    ));
                 }
-                thread::sleep(Duration::from_millis(25));
+                // never sleep past the deadline — the caller's bootstrap
+                // budget is shared across every handshake
+                thread::sleep(delay.min(deadline.saturating_duration_since(now)));
+                delay = (delay * 2).min(CONNECT_BACKOFF_CAP);
             }
         }
     }
@@ -500,5 +521,53 @@ mod tests {
     fn invalid_options_rejected() {
         assert!(TcpTransport::connect(&TcpOptions::new(0, 0, "127.0.0.1:1")).is_err());
         assert!(TcpTransport::connect(&TcpOptions::new(2, 5, "127.0.0.1:1")).is_err());
+    }
+
+    #[test]
+    fn connect_retry_survives_a_slow_listener() {
+        // the listener binds ~150ms after the dial starts — the backoff
+        // loop must ride out the refused connections and succeed
+        let addr = free_loopback_addr();
+        let bind_addr = addr.clone();
+        let h = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(150));
+            let listener = TcpListener::bind(&bind_addr[..]).expect("late bind");
+            let _ = listener.accept();
+        });
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let s = connect_retry(&addr[..], deadline).expect("late listener not reached");
+        drop(s);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn connect_retry_times_out_with_attempt_count() {
+        // a port nothing listens on: the retry loop must stop at the
+        // deadline and say how hard it tried
+        let addr = free_loopback_addr(); // bound then released by the helper
+        let deadline = Instant::now() + Duration::from_millis(200);
+        let err = connect_retry(&addr[..], deadline).unwrap_err();
+        assert!(
+            err.to_string().contains("connect attempts"),
+            "error should report attempts: {err}"
+        );
+        assert!(Instant::now() >= deadline, "must keep trying until the deadline");
+    }
+
+    #[test]
+    fn slow_starting_rank0_does_not_fail_the_fleet() {
+        // end-to-end version of the backoff guarantee: rank 1 dials the
+        // rendezvous well before rank 0 binds it
+        let addr = free_loopback_addr();
+        let addr0 = addr.clone();
+        let h1 = {
+            let addr = addr.clone();
+            thread::spawn(move || TcpTransport::connect(&TcpOptions::new(2, 1, addr)).unwrap())
+        };
+        thread::sleep(Duration::from_millis(200));
+        let t0 = TcpTransport::connect(&TcpOptions::new(2, 0, addr0)).unwrap();
+        let t1 = h1.join().unwrap();
+        t1.send(0, vec![42]);
+        assert_eq!(t0.recv(1), vec![42]);
     }
 }

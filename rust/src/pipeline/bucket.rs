@@ -10,6 +10,7 @@
 //! correction) → select → mask → pack, identical math on either engine —
 //! the root of the engines' bit-for-bit agreement.
 
+use crate::collectives::group::Algo;
 use crate::collectives::FusionPlan;
 use crate::compression::message::{pack_plain, pack_quant};
 use crate::compression::{
@@ -50,6 +51,11 @@ pub struct BucketLayer {
 /// the pipelined engine, moved into the in-flight task.
 pub struct BucketState {
     pub(crate) layers: Vec<BucketLayer>,
+    /// Collective algorithm the plan chose for this bucket (flat sparse
+    /// allgather by default; `Hierarchical` under a topology plan —
+    /// never `Dense`, dense-picked buckets are demoted before the
+    /// engine sees them).
+    algo: Algo,
 }
 
 /// What `produce` hands to the collective: the packed bucket blob plus
@@ -98,6 +104,7 @@ pub fn build_buckets(
                     }
                 })
                 .collect(),
+            algo: Algo::Sparse,
         })
         .collect()
 }
@@ -114,6 +121,19 @@ impl BucketState {
 
     pub fn n_layers(&self) -> usize {
         self.layers.len()
+    }
+
+    /// The collective algorithm planned for this bucket.
+    pub fn algo(&self) -> Algo {
+        self.algo
+    }
+
+    /// Assign the planned algorithm (`Sparse` or `Hierarchical`; a
+    /// dense-picked bucket is demoted to the dense path instead of ever
+    /// reaching an engine).
+    pub fn set_algo(&mut self, algo: Algo) {
+        assert_ne!(algo, Algo::Dense, "dense buckets are demoted, not synced");
+        self.algo = algo;
     }
 
     /// The GPU-side half of Alg. 4 for this bucket: accumulate → select

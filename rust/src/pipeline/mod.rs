@@ -35,6 +35,18 @@
 //! The only observable difference is wall-clock and one tag word per
 //! message of mux overhead (audited exactly in `tests/pipeline.rs`).
 //!
+//! ## Topology
+//!
+//! Both engines drive *group* collectives through a
+//! [`crate::collectives::Communicator`]: each bucket carries a planned
+//! algorithm ([`BucketState::algo`]) — flat sparse allgather or the
+//! hierarchical (intra-node gather → leader allgather → intra-node
+//! broadcast) schedule — chosen statically (`--algo`) or by the
+//! cost-model argmin per bucket (`--algo auto`,
+//! `costmodel::pick_algo`; dense-picked buckets are demoted to the
+//! worker's dense allreduce path before the engine sees them).  Both
+//! algorithms deliver bit-identical gathered blobs (`tests/topology.rs`).
+//!
 //! ## Constraints
 //!
 //! The engine choice must be uniform across ranks (tagged and untagged

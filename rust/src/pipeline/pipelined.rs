@@ -28,8 +28,9 @@
 
 use super::bucket::BucketState;
 use super::{BucketDone, SyncEngine, BUCKET_TAG_BASE};
+use crate::collectives::group::{Communicator, Topology};
 use crate::collectives::mux::{TagChannel, TagMux};
-use crate::collectives::{allgather, Transport};
+use crate::collectives::Transport;
 use crate::compression::CompressorConfig;
 use crate::coordinator::metrics::phase;
 use crate::util::timer::PhaseTimer;
@@ -64,6 +65,10 @@ struct TaskOut {
 /// `&TcpTransport`, `&LocalTransport`, or an owned endpoint in tests.
 pub struct Pipelined<T: Transport + Send + Sync> {
     mux: Arc<TagMux<T>>,
+    /// Topology each bucket's communicator is built over (flat by
+    /// default); buckets planned `Hierarchical` run the three-phase
+    /// schedule on their private tag channel.
+    topo: Topology,
     /// Bucket states, parked here between steps (`None` while in flight).
     slots: Vec<Option<BucketState>>,
     /// (layer index, quantized) per bucket — the stable copy handed out
@@ -75,14 +80,35 @@ pub struct Pipelined<T: Transport + Send + Sync> {
 
 impl<T: Transport + Send + Sync> Pipelined<T> {
     /// `mux` must reserve tags `BUCKET_TAG_BASE .. BUCKET_TAG_BASE +
-    /// buckets.len()` (plus the control tag below them).
+    /// buckets.len()` (plus the control tag below them).  Flat (one-node)
+    /// topology: every bucket collective runs over the full world.
     pub fn new(
         mux: Arc<TagMux<T>>,
         buckets: Vec<BucketState>,
         inflight: usize,
         cc: CompressorConfig,
     ) -> Pipelined<T> {
+        let topo = Topology::flat(mux.world());
+        Pipelined::with_topology(mux, topo, buckets, inflight, cc)
+    }
+
+    /// A pool over a physical topology; per-bucket algorithms come from
+    /// the buckets' plan ([`BucketState::algo`]).
+    pub fn with_topology(
+        mux: Arc<TagMux<T>>,
+        topo: Topology,
+        buckets: Vec<BucketState>,
+        inflight: usize,
+        cc: CompressorConfig,
+    ) -> Pipelined<T> {
         assert!(inflight >= 1, "the in-flight window must admit at least one bucket");
+        assert_eq!(
+            topo.world(),
+            mux.world(),
+            "topology {} does not cover the fabric's {} ranks",
+            topo.label(),
+            mux.world()
+        );
         assert!(
             mux.n_tags() >= BUCKET_TAG_BASE + buckets.len() as u32,
             "mux reserves too few tags for {} buckets",
@@ -92,7 +118,14 @@ impl<T: Transport + Send + Sync> Pipelined<T> {
             .iter()
             .map(|b| b.specs().map(|s| (s.li, s.quantize)).collect())
             .collect();
-        Pipelined { mux, slots: buckets.into_iter().map(Some).collect(), groups, inflight, cc }
+        Pipelined {
+            mux,
+            topo,
+            slots: buckets.into_iter().map(Some).collect(),
+            groups,
+            inflight,
+            cc,
+        }
     }
 }
 
@@ -135,6 +168,7 @@ impl<T: Transport + Send + Sync> SyncEngine for Pipelined<T> {
                 let mux = Arc::clone(&self.mux);
                 let tx = res_tx.clone();
                 let cc = self.cc;
+                let topo = self.topo;
                 let queue = &queue;
                 s.spawn(move || loop {
                     let task = queue.lock().unwrap().pop_front();
@@ -145,8 +179,9 @@ impl<T: Transport + Send + Sync> SyncEngine for Pipelined<T> {
                                 Arc::clone(&mux),
                                 BUCKET_TAG_BASE + task.bucket as u32,
                             );
+                            let comm = Communicator::new(chan, topo);
                             let t0 = Instant::now();
-                            let gathered = allgather(&chan, p.blob);
+                            let gathered = comm.allgather(task.state.algo(), p.blob);
                             Ok(TaskOut {
                                 state: task.state,
                                 gathered,

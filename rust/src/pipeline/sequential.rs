@@ -3,30 +3,49 @@
 
 use super::bucket::BucketState;
 use super::{BucketDone, SyncEngine};
-use crate::collectives::{allgather, Transport};
+use crate::collectives::group::{Communicator, Topology};
+use crate::collectives::Transport;
 use crate::compression::CompressorConfig;
 use crate::coordinator::metrics::phase;
 use crate::runtime::DeviceSelector;
 use crate::util::timer::PhaseTimer;
 
 /// Produce + allgather every bucket inline on the calling thread, in
-/// bucket order.  The only engine that can drive device selection (the
-/// PJRT client is owned by this thread).
+/// bucket order, dispatching each bucket's planned collective (flat or
+/// hierarchical) through the [`Communicator`].  The only engine that
+/// can drive device selection (the PJRT client is owned by this
+/// thread).
 pub struct Sequential<'a, T: Transport> {
-    transport: &'a T,
+    comm: Communicator<&'a T>,
     device: Option<DeviceSelector<'a>>,
     buckets: Vec<BucketState>,
     cc: CompressorConfig,
 }
 
 impl<'a, T: Transport> Sequential<'a, T> {
+    /// The flat (one-node topology) engine — every bucket's collective
+    /// runs over the full world, the pre-topology schedule.
     pub fn new(
         transport: &'a T,
         device: Option<DeviceSelector<'a>>,
         buckets: Vec<BucketState>,
         cc: CompressorConfig,
     ) -> Sequential<'a, T> {
-        Sequential { transport, device, buckets, cc }
+        let topo = Topology::flat(transport.world());
+        Sequential::with_topology(transport, topo, device, buckets, cc)
+    }
+
+    /// An engine over a physical topology: buckets planned
+    /// `Hierarchical` run the three-phase schedule over the derived
+    /// process groups.
+    pub fn with_topology(
+        transport: &'a T,
+        topo: Topology,
+        device: Option<DeviceSelector<'a>>,
+        buckets: Vec<BucketState>,
+        cc: CompressorConfig,
+    ) -> Sequential<'a, T> {
+        Sequential { comm: Communicator::new(transport, topo), device, buckets, cc }
     }
 }
 
@@ -54,8 +73,9 @@ impl<T: Transport> SyncEngine for Sequential<'_, T> {
             timer.add(phase::MASK, produced.mask_secs);
             timer.add(phase::SELECT, produced.select_secs);
             timer.add(phase::PACK, produced.pack_secs);
+            let algo = state.algo();
             let gathered =
-                timer.time(phase::COMM_SPARSE, || allgather(&self.transport, produced.blob));
+                timer.time(phase::COMM_SPARSE, || self.comm.allgather(algo, produced.blob));
             apply(BucketDone {
                 bucket: b,
                 layers: state.specs().map(|s| (s.li, s.quantize)).collect(),

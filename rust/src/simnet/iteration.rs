@@ -8,7 +8,7 @@
 //! compression work (select/mask/pack) serializes with backprop compute on
 //! the device stream; decompression (unpack) happens after synchronization.
 
-use super::{allgather_time, allreduce_time, Machine};
+use super::{allgather_time, allreduce_time, hierarchical_allgather_time, Machine};
 use crate::compression::{Method, PolicyThresholds};
 use crate::models::zoo::ModelProfile;
 
@@ -54,6 +54,12 @@ pub struct SimConfig {
     /// link.  0 = unbounded (the idealized overlap of the paper's
     /// figures).
     pub inflight: usize,
+    /// Physical topology `(nodes, ranks_per_node)` for the sparse
+    /// collectives: when set (and it covers `p`), compressed layers run
+    /// the hierarchical allgather schedule instead of the flat one —
+    /// `redsync simulate --topology`.  Dense allreduces keep the flat
+    /// Eq. 2 schedule either way.
+    pub topology: Option<(usize, usize)>,
 }
 
 impl Default for SimConfig {
@@ -65,6 +71,7 @@ impl Default for SimConfig {
             bwd_flop_ratio: 2.0,
             pipeline: true,
             inflight: 0,
+            topology: None,
         }
     }
 }
@@ -215,7 +222,17 @@ pub fn simulate_iteration(
                     b.mask += t_mask;
                     b.pack += t_pack;
                     gpu += t_sel + t_mask + t_pack;
-                    let dur = allgather_time(machine, p, message_bytes(k, quantized));
+                    let dur = match cfg.topology {
+                        Some((nodes, rpn)) if nodes * rpn == p => {
+                            hierarchical_allgather_time(
+                                machine,
+                                nodes,
+                                rpn,
+                                message_bytes(k, quantized),
+                            )
+                        }
+                        _ => allgather_time(machine, p, message_bytes(k, quantized)),
+                    };
                     b.comm += dur;
                     issue(&mut gpu, &mut link, &mut ends, dur);
                     // unpack: apply p compressed sets of size k, one
@@ -438,6 +455,30 @@ mod tests {
         )
         .total;
         assert!(seq >= w1 * (1.0 - 1e-9), "sequential {seq} < window-1 {w1}");
+    }
+
+    #[test]
+    fn topology_model_helps_rgc_on_fat_nodes_only() {
+        // hierarchical collectives cut comm link time on fat nodes; on
+        // thin (1 GPU/node) topologies they degenerate to the flat
+        // schedule and change nothing
+        let m = zoo::alexnet();
+        let flat = cfg();
+        let fat = SimConfig { topology: Some((4, 4)), ..cfg() };
+        let mach = Machine::fatnode();
+        let b_flat = simulate_iteration(&m, &mach, 16, Strategy::Rgc, &flat);
+        let b_fat = simulate_iteration(&m, &mach, 16, Strategy::Rgc, &fat);
+        assert!(b_fat.comm < b_flat.comm, "fat {} !< flat {}", b_fat.comm, b_flat.comm);
+        let thin = SimConfig { topology: Some((16, 1)), ..cfg() };
+        let b_thin = simulate_iteration(&m, &mach, 16, Strategy::Rgc, &thin);
+        assert!(
+            (b_thin.comm - b_flat.comm).abs() <= 1e-12 * b_flat.comm,
+            "1-rank nodes must match the flat schedule"
+        );
+        // a topology that does not cover p falls back to flat
+        let bad = SimConfig { topology: Some((3, 5)), ..cfg() };
+        let b_bad = simulate_iteration(&m, &mach, 16, Strategy::Rgc, &bad);
+        assert_eq!(b_bad.comm, b_flat.comm);
     }
 
     #[test]

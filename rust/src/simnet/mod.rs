@@ -19,10 +19,15 @@ pub mod iteration;
 #[derive(Clone, Debug)]
 pub struct Machine {
     pub name: String,
-    /// Per-message latency α (seconds).
+    /// Per-message latency α (seconds) of the inter-node fabric.
     pub alpha: f64,
-    /// Per-byte transfer time β (seconds/byte).
+    /// Per-byte transfer time β (seconds/byte) of the inter-node fabric.
     pub beta: f64,
+    /// Per-message latency of the intra-node link (PCIe/NVLink class) —
+    /// what the hierarchical schedule's gather/broadcast phases pay.
+    pub intra_alpha: f64,
+    /// Per-byte transfer time of the intra-node link.
+    pub intra_beta: f64,
     /// Reduction cost per element (dense allreduce γ₂ contribution).
     pub gamma_reduce: f64,
     /// Sparse decompression (scatter-add) cost per element (γ₁).
@@ -63,6 +68,10 @@ impl Machine {
             name: "muradin".into(),
             alpha: 10e-6,
             beta: 1.0 / 3.5e9,
+            // single-node PCIe server: the "intra" link is the same PCIe
+            // complex NCCL already uses, slightly faster point-to-point
+            intra_alpha: 5e-6,
+            intra_beta: 1.0 / 12e9,
             gamma_reduce: 2.0e-11,
             gamma_decompress: 1.0e-10,
             sel_launch: 30e-6,
@@ -84,6 +93,10 @@ impl Machine {
             name: "piz-daint".into(),
             alpha: 25e-6,
             beta: 1.0 / 1.5e9,
+            // hypothetical fat nodes (the paper's nodes host one P100,
+            // so hierarchy degenerates there): NVLink-class local link
+            intra_alpha: 5e-6,
+            intra_beta: 1.0 / 10e9,
             gamma_reduce: 2.0e-11,
             gamma_decompress: 1.0e-10,
             sel_launch: 30e-6,
@@ -98,10 +111,37 @@ impl Machine {
         }
     }
 
+    /// A fat-node commodity cluster: NVLink-class links inside a node,
+    /// a 10 GbE-class fabric between nodes.  The regime where the
+    /// hierarchical schedule pays: the inter/intra bandwidth ratio
+    /// (~40×) exceeds the world sizes we care about, so keeping traffic
+    /// on-node beats the flat schedule (see `costmodel::t_hierarchical`).
+    pub fn fatnode() -> Machine {
+        Machine {
+            name: "fatnode".into(),
+            alpha: 20e-6,
+            beta: 1.0 / 1.25e9,
+            intra_alpha: 3e-6,
+            intra_beta: 1.0 / 50e9,
+            gamma_reduce: 2.0e-11,
+            gamma_decompress: 1.0e-10,
+            sel_launch: 30e-6,
+            unpack_launch: 10e-6,
+            sel_exact_per_elem: 1.2e-9,
+            sel_trimmed_per_elem: 3.2e-11,
+            sel_bs_per_elem: 7.4e-11,
+            mask_per_elem: 4.0e-11,
+            pack_per_elem: 4.0e-10,
+            gpu_gflops: 7_000.0,
+            max_ranks: 64,
+        }
+    }
+
     pub fn by_name(name: &str) -> Option<Machine> {
         match name {
             "muradin" => Some(Machine::muradin()),
             "piz-daint" | "pizdaint" | "piz_daint" => Some(Machine::piz_daint()),
+            "fatnode" | "fat-node" | "fat_node" => Some(Machine::fatnode()),
             _ => None,
         }
     }
@@ -153,6 +193,54 @@ pub fn allreduce_time(machine: &Machine, p: usize, bytes: f64) -> f64 {
         dist <<= 1;
     }
     let _ = elems;
+    t
+}
+
+/// Virtual time of one hierarchical allgather (`nodes` ×
+/// `ranks_per_node`, every rank contributing `bytes_per_rank`), walking
+/// the actual three-phase schedule on the leader's critical path:
+/// serial intra-node gather, recursive-doubling allgather of node blobs
+/// among the leaders (inter-node link), serial intra-node broadcast of
+/// the world blob.  `costmodel::t_hierarchical` is the closed form;
+/// the proptests pin them equal.
+pub fn hierarchical_allgather_time(
+    machine: &Machine,
+    nodes: usize,
+    ranks_per_node: usize,
+    bytes_per_rank: f64,
+) -> f64 {
+    let p = nodes * ranks_per_node;
+    assert!(p >= 1);
+    if p == 1 {
+        return 0.0;
+    }
+    let mut t = 0.0;
+    // phase 1: the leader drains s-1 member messages one after another
+    for _ in 1..ranks_per_node {
+        t += machine.intra_alpha + bytes_per_rank * machine.intra_beta;
+    }
+    // phase 2: the leader allgather dispatches like the real collective
+    // — recursive doubling for power-of-two node counts (blobs double
+    // per step), ring otherwise (n-1 single-blob forwards)
+    let node_bytes = ranks_per_node as f64 * bytes_per_rank;
+    if nodes.is_power_of_two() {
+        let mut have = node_bytes;
+        let mut dist = 1;
+        while dist < nodes {
+            t += machine.alpha + have * machine.beta;
+            have *= 2.0;
+            dist <<= 1;
+        }
+    } else {
+        for _ in 1..nodes {
+            t += machine.alpha + node_bytes * machine.beta;
+        }
+    }
+    // phase 3: the leader pushes the world blob to each member in turn
+    let world_bytes = p as f64 * bytes_per_rank;
+    for _ in 1..ranks_per_node {
+        t += machine.intra_alpha + world_bytes * machine.intra_beta;
+    }
     t
 }
 
@@ -208,6 +296,54 @@ mod tests {
         let m = Machine::muradin();
         assert_eq!(allgather_time(&m, 1, 1e6), 0.0);
         assert_eq!(allreduce_time(&m, 1, 1e6), 0.0);
+        assert_eq!(hierarchical_allgather_time(&m, 1, 1, 1e6), 0.0);
+    }
+
+    #[test]
+    fn hierarchical_walk_matches_closed_form() {
+        // pow2 node counts walk recursive doubling (lg n rounds),
+        // non-pow2 walk the ring (n-1 rounds) — exactly what the real
+        // leader allgather dispatches
+        let m = Machine::piz_daint();
+        for (n, s) in [(2usize, 4usize), (4, 4), (8, 2), (1, 8), (16, 1), (3, 2), (6, 4), (5, 1)] {
+            for bytes in [1e3, 1e6] {
+                let walked = hierarchical_allgather_time(&m, n, s, bytes);
+                let (nf, sf) = (n as f64, s as f64);
+                let p = nf * sf;
+                let mut closed = (sf - 1.0) * (m.intra_alpha + bytes * m.intra_beta);
+                if n > 1 {
+                    let rounds = if n.is_power_of_two() { nf.log2() } else { nf - 1.0 };
+                    closed += rounds * m.alpha + (nf - 1.0) * sf * bytes * m.beta;
+                }
+                closed += (sf - 1.0) * (m.intra_alpha + p * bytes * m.intra_beta);
+                assert!(
+                    (walked - closed).abs() <= 1e-9 * closed.max(1e-12),
+                    "{n}x{s} bytes={bytes}: {walked} vs {closed}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchy_beats_flat_on_fat_nodes() {
+        // per-leader slow-link bytes drop from (p-1)·m to (n-1)·s·m; the
+        // gather/broadcast phases move to the ~40x faster intra link, so
+        // the schedule wins whenever β_inter/β_intra exceeds ~p
+        let m = Machine::fatnode();
+        let bytes = 1e6;
+        for (n, s) in [(4usize, 4usize), (2, 8)] {
+            let flat = allgather_time(&m, n * s, bytes);
+            let hier = hierarchical_allgather_time(&m, n, s, bytes);
+            assert!(hier < flat, "{n}x{s}: hierarchical {hier} !< flat {flat}");
+        }
+        // and on piz-daint (1 GPU/node in the paper, mild intra edge) the
+        // serial broadcast makes flat the right call — the reason the
+        // algorithm choice is a per-bucket cost-model decision, not a
+        // global default
+        let pd = Machine::piz_daint();
+        let flat = allgather_time(&pd, 16, bytes);
+        let hier = hierarchical_allgather_time(&pd, 4, 4, bytes);
+        assert!(hier > flat, "piz-daint 4x4 should prefer flat: {hier} vs {flat}");
     }
 
     #[test]

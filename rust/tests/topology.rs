@@ -1,0 +1,322 @@
+//! Topology-aware communicator acceptance tests.
+//!
+//! * The 8-rank (2 nodes × 4 ranks) hierarchical schedule is
+//!   **bit-identical** to the flat sparse-allgather schedule — on the
+//!   in-process fabric and over real loopback TCP, on both sync
+//!   engines.  The hierarchical path may only change *where* bytes
+//!   travel, never the math.
+//! * The hierarchical schedule's byte count is pinned word-for-word to
+//!   the cost-model accounting (`costmodel::hierarchical_payload_words`
+//!   + deterministic framing).
+//! * The `auto` picker's per-bucket choices equal the cost model's
+//!   argmin, with all three regimes (dense / sparse / hierarchical)
+//!   represented.
+//! * Group↔world rank translation round-trips (proptest).
+
+use redsync::collectives::group::{Algo, ProcessGroup, Topology};
+use redsync::collectives::transport::TrafficStats;
+use redsync::collectives::{
+    hierarchical_allgather, hierarchical_traffic_words, LocalFabric, TagMux, Transport,
+};
+use redsync::compression::{Accumulation, CompressorConfig, Method};
+use redsync::coordinator::metrics::param_hash;
+use redsync::costmodel;
+use redsync::net::{free_loopback_addr, TcpOptions, TcpTransport};
+use redsync::pipeline::{
+    build_buckets, BucketDone, BucketState, LayerSpec, Pipelined, Sequential, SyncEngine,
+    BUCKET_TAG_BASE,
+};
+use redsync::simnet::Machine;
+use redsync::util::proptest::{check, ensure};
+use redsync::util::rng::Pcg32;
+use redsync::util::timer::PhaseTimer;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+/// Synthetic model: greedy fusion (cap 3000) yields multiple buckets,
+/// some multi-layer, mixing plain and quantized layers.
+const SIZES: &[usize] = &[2500, 600, 600, 600, 1800, 900, 400, 2200];
+const FUSION_CAP: usize = 3000;
+const WORLD: usize = 8;
+const TOPO: Topology = Topology { nodes: 2, ranks_per_node: 4 };
+const STEPS: usize = 12;
+const DENSITY: f64 = 0.02;
+const LR: f32 = 0.05;
+
+fn specs() -> Vec<LayerSpec> {
+    SIZES
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| LayerSpec {
+            li: i,
+            n,
+            method: if n >= 1500 { Method::SampledBinarySearch } else { Method::TrimmedTopk },
+            quantize: i % 2 == 0,
+        })
+        .collect()
+}
+
+fn grad(rank: usize, step: usize, li: usize, n: usize) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(((rank as u64) << 32) ^ ((step as u64) << 8) ^ li as u64);
+    let mut g = vec![0f32; n];
+    rng.fill_normal(&mut g, 1.0);
+    g
+}
+
+fn cc() -> CompressorConfig {
+    CompressorConfig { density: DENSITY, ..Default::default() }
+}
+
+fn acc() -> Accumulation {
+    Accumulation::Momentum { momentum: 0.9 }
+}
+
+fn make_buckets(algo: Algo) -> Vec<BucketState> {
+    let mut buckets = build_buckets(&specs(), FUSION_CAP, acc());
+    for b in &mut buckets {
+        b.set_algo(algo);
+    }
+    buckets
+}
+
+fn run_steps(engine: &mut dyn SyncEngine, rank: usize, world: usize) -> u64 {
+    let mut params: Vec<Vec<f32>> = SIZES
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| {
+            let mut rng = Pcg32::seeded(0xBEEF ^ i as u64); // identical on every rank
+            let mut p = vec![0f32; n];
+            rng.fill_normal(&mut p, 0.5);
+            p
+        })
+        .collect();
+    let scale = -LR / world as f32;
+    let mut timer = PhaseTimer::new();
+    for step in 0..STEPS {
+        let grads: Vec<Vec<f32>> =
+            SIZES.iter().enumerate().map(|(i, &n)| grad(rank, step, i, n)).collect();
+        engine
+            .sync_step(&grads, DENSITY, &mut timer, &mut |done: BucketDone| {
+                done.apply_to(&mut params, scale)
+            })
+            .unwrap_or_else(|e| panic!("rank {rank} step {step}: {e}"));
+    }
+    param_hash(&params)
+}
+
+fn run_sequential<T: Transport>(t: &T, algo: Algo) -> u64 {
+    let mut engine = Sequential::with_topology(t, TOPO, None, make_buckets(algo), cc());
+    run_steps(&mut engine, t.rank(), t.world())
+}
+
+fn run_pipelined<T: Transport + Send + Sync>(t: T, algo: Algo) -> u64 {
+    let (rank, world) = (t.rank(), t.world());
+    let buckets = make_buckets(algo);
+    let n = buckets.len() as u32;
+    let mux = Arc::new(TagMux::new(t, BUCKET_TAG_BASE + n));
+    let mut engine = Pipelined::with_topology(mux, TOPO, buckets, 3, cc());
+    run_steps(&mut engine, rank, world)
+}
+
+/// One thread per rank, with a deadlock watchdog.
+fn run_ranks<T, F>(transports: Vec<T>, f: F) -> Vec<u64>
+where
+    T: Transport + Send + 'static,
+    F: Fn(T) -> u64 + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let (done_tx, done_rx) = channel();
+    let handles: Vec<_> = transports
+        .into_iter()
+        .map(|t| {
+            let f = Arc::clone(&f);
+            let done = done_tx.clone();
+            thread::spawn(move || {
+                let r = f(t);
+                let _ = done.send(());
+                r
+            })
+        })
+        .collect();
+    drop(done_tx);
+    for _ in 0..handles.len() {
+        done_rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("a rank did not finish within 120s (deadlock or crash)");
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+fn tcp_fabric(world: usize) -> Vec<TcpTransport> {
+    let addr = free_loopback_addr();
+    let handles: Vec<_> = (0..world)
+        .map(|rank| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                TcpTransport::connect(&TcpOptions::new(world, rank, addr)).expect("tcp bootstrap")
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+fn all_equal(hashes: &[u64]) -> bool {
+    hashes.iter().all(|&h| h == hashes[0])
+}
+
+#[test]
+fn hierarchical_bit_identical_to_flat_on_local_fabric() {
+    let mut local = LocalFabric::new(WORLD);
+    let flat = run_ranks(local.take_all(), |t| run_sequential(&t, Algo::Sparse));
+    assert!(all_equal(&flat), "flat replicas drifted: {flat:x?}");
+
+    let mut local = LocalFabric::new(WORLD);
+    let hier = run_ranks(local.take_all(), |t| run_sequential(&t, Algo::Hierarchical));
+    assert!(all_equal(&hier), "hierarchical replicas drifted: {hier:x?}");
+    assert_eq!(flat[0], hier[0], "hierarchical schedule changed the math");
+
+    // and through the pipelined engine's per-bucket tag channels
+    let mut local = LocalFabric::new(WORLD);
+    let piped = run_ranks(local.take_all(), |t| run_pipelined(t, Algo::Hierarchical));
+    assert!(all_equal(&piped), "pipelined hierarchical replicas drifted: {piped:x?}");
+    assert_eq!(flat[0], piped[0], "pipelined hierarchical diverged from the oracle");
+}
+
+#[test]
+fn hierarchical_bit_identical_to_flat_over_tcp_loopback() {
+    let flat = run_ranks(tcp_fabric(WORLD), |t| run_sequential(&t, Algo::Sparse));
+    assert!(all_equal(&flat), "flat replicas drifted over tcp: {flat:x?}");
+
+    let hier = run_ranks(tcp_fabric(WORLD), |t| run_sequential(&t, Algo::Hierarchical));
+    assert!(all_equal(&hier), "hierarchical replicas drifted over tcp: {hier:x?}");
+    assert_eq!(flat[0], hier[0], "hierarchical diverged over tcp");
+
+    // the TCP schedule agrees with the in-process fabric bit-for-bit
+    let mut local = LocalFabric::new(WORLD);
+    let local_hier = run_ranks(local.take_all(), |t| run_sequential(&t, Algo::Hierarchical));
+    assert_eq!(local_hier[0], hier[0], "fabrics diverged under the hierarchical schedule");
+}
+
+#[test]
+fn hierarchical_traffic_matches_cost_model_term() {
+    // uniform per-rank message: the fabric counters must equal the
+    // cost-model payload term plus the deterministic block framing
+    let m_words = 200usize;
+    let mut fabric = LocalFabric::new(WORLD);
+    let stats: Arc<TrafficStats> = Arc::clone(&fabric.stats);
+    let handles: Vec<_> = fabric
+        .take_all()
+        .into_iter()
+        .map(|t| {
+            thread::spawn(move || {
+                let gathered = hierarchical_allgather(&t, TOPO, vec![3u32; m_words]);
+                assert_eq!(gathered.len(), WORLD);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let payload = costmodel::hierarchical_payload_words(TOPO.nodes, TOPO.ranks_per_node, m_words);
+    let (acct_payload, headers) =
+        hierarchical_traffic_words(TOPO.nodes, TOPO.ranks_per_node, m_words);
+    assert_eq!(acct_payload, payload, "schedule accounting vs cost-model bandwidth term");
+    let total = stats.words.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(
+        total,
+        payload + headers,
+        "fabric moved {total} words; cost model charges {payload} payload + {headers} framing"
+    );
+    // the model charges only the payload; framing must stay noise
+    assert!(headers < payload / 10, "framing {headers} not negligible vs payload {payload}");
+}
+
+#[test]
+fn auto_picker_matches_cost_model_argmin() {
+    // replicate the worker's plan: derive each bucket's cost inputs and
+    // check the picker returns the argmin of the three closed forms
+    let machine = Machine::fatnode();
+    let (nodes, rpn) = (TOPO.nodes, TOPO.ranks_per_node);
+    let p = nodes * rpn;
+    // buckets spanning the regimes: one huge layer, a mid-size layer and
+    // a pile of fused small layers
+    let plan: Vec<Vec<(usize, Method, bool)>> = vec![
+        vec![(40_000_000, Method::SampledBinarySearch, false)],
+        vec![(2_000_000, Method::TrimmedTopk, false), (1_500_000, Method::TrimmedTopk, true)],
+        (0..24).map(|_| (3_000usize, Method::TrimmedTopk, false)).collect(),
+    ];
+    let mut picks = Vec::new();
+    for layers in &plan {
+        let cost = costmodel::bucket_cost(&machine, layers, 1e-3);
+        let (algo, times) = costmodel::pick_algo(&machine, nodes, rpn, &cost, 1e-3);
+        // independent argmin over the three closed forms
+        let td = costmodel::t_dense(&machine, p, cost.m_elems);
+        let ts = costmodel::t_sparse(&machine, p, cost.m_elems, 1e-3, cost.t_select, cost.wire_bytes);
+        let th = costmodel::t_hierarchical(
+            &machine,
+            nodes,
+            rpn,
+            cost.m_elems,
+            1e-3,
+            cost.t_select,
+            cost.wire_bytes,
+        );
+        let want = if td <= ts && td <= th {
+            Algo::Dense
+        } else if ts <= th {
+            Algo::Sparse
+        } else {
+            Algo::Hierarchical
+        };
+        assert_eq!(algo, want, "picker disagrees with argmin for {layers:?} ({times:?})");
+        assert_eq!(times, [td, ts, th], "reported times must be the model's");
+        picks.push(algo);
+    }
+    // pin the concrete regime split on fat nodes: big -> hierarchical,
+    // fused-small -> dense
+    assert_eq!(picks[0], Algo::Hierarchical, "40M-element bucket should go hierarchical");
+    assert_eq!(picks[2], Algo::Dense, "24 fused 3K layers should be demoted to dense");
+    assert!(picks.contains(&Algo::Hierarchical) && picks.contains(&Algo::Dense));
+}
+
+#[test]
+fn prop_group_rank_translation_roundtrip() {
+    check(80, |g| {
+        let nodes = g.size(1..7);
+        let rpn = g.size(1..7);
+        let topo = Topology::new(nodes, rpn);
+        let rank = g.size(0..topo.world());
+        // node/local decomposition round-trips
+        let (node, local) = (topo.node_of(rank), topo.local_of(rank));
+        ensure(topo.world_rank(node, local) == rank, "world_rank inverse")?;
+        // leader membership: leader_of is the node's first member, a
+        // leader, and listed exactly once in leaders()
+        let leader = topo.leader_of(rank);
+        let members = topo.node_members(node);
+        ensure(members[0] == leader, "leader is member[0]")?;
+        ensure(members.len() == rpn, "node size")?;
+        ensure(members.contains(&rank), "rank in own node")?;
+        ensure(topo.is_leader(leader), "leader_of yields a leader")?;
+        let leaders = topo.leaders();
+        ensure(leaders.len() == nodes, "one leader per node")?;
+        ensure(leaders.iter().filter(|&&l| l == leader).count() == 1, "leader listed once")?;
+        // a ProcessGroup over the node members translates both ways
+        let mut fabric = LocalFabric::new(topo.world());
+        let t = fabric.take(rank);
+        let group = ProcessGroup::new(&t, members.clone());
+        ensure(group.rank() == local, "group-local rank == topology local rank")?;
+        ensure(group.world() == rpn, "group world")?;
+        for (l, &w) in members.iter().enumerate() {
+            ensure(group.world_rank(l) == w, "local -> world")?;
+            ensure(group.local_rank(w) == Some(l), "world -> local")?;
+        }
+        if nodes > 1 {
+            // any rank of another node is not a member of this group
+            let outsider = topo.world_rank((node + 1) % nodes, 0);
+            ensure(group.local_rank(outsider).is_none(), "outsider has no local rank")?;
+        }
+        Ok(())
+    });
+}
