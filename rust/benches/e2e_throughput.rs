@@ -22,11 +22,20 @@
 //! stay bit-identical, reports wall-clock and measured wire bytes per
 //! schedule, and the intra-node union compression the value-merging
 //! reduce would add.  CI runs this and uploads `BENCH_topology.json`.
+//!
+//! `--hotpath-smoke [OUT.json]` is the zero-copy hot-path A/B (no
+//! network at all): pack + §5.4 apply for 8 ranks at density 0.01
+//! through the historical owned-decode walk vs the borrowed-view /
+//! pack-in-place walk, asserting bit-identical parameters and reporting
+//! the speedup.  CI runs this and uploads `BENCH_hotpath.json`.
 
 use redsync::collectives::mux::TagMux;
-use redsync::collectives::{Algo, Topology, Transport};
-use redsync::compression::message::{merge_plain, plain_words};
-use redsync::compression::{trimmed_topk, Accumulation, CompressorConfig, Method};
+use redsync::collectives::{Algo, Gathered, Topology, Transport};
+use redsync::compression::message::{
+    merge_plain, pack_plain, pack_plain_into, pack_quant, pack_quant_into, plain_words,
+    unpack_plain, unpack_quant,
+};
+use redsync::compression::{trimmed_topk, Accumulation, CompressorConfig, Method, QuantizedSet};
 use redsync::tensor::SparseTensor;
 use redsync::config::{preset, TrainConfig};
 use redsync::coordinator::metrics::{param_hash, phase};
@@ -328,6 +337,169 @@ fn topology_smoke(json_path: Option<&str>) {
     println!("{json}");
 }
 
+// ---------------------------------------------------------------------
+// Zero-copy hot-path A/B: owned-decode vs view-based pack + apply
+// ---------------------------------------------------------------------
+
+const HOT_WORLD: usize = 8;
+const HOT_DENSITY: f64 = 0.01;
+const HOT_REPS: usize = 60;
+
+/// The pre-zero-copy decompression walk, verbatim: every message decoded
+/// into a freshly allocated tensor, then scattered.
+fn hot_apply_owned(
+    gathered: &[Vec<u32>],
+    layers: &[(usize, bool)],
+    params: &mut [Vec<f32>],
+    scale: f32,
+) {
+    for rank_blob in gathered {
+        let mut off = 0usize;
+        for &(li, quantized) in layers {
+            if quantized {
+                let (q, used) = unpack_quant(&rank_blob[off..]).expect("well-formed blob");
+                let add = q.mean * scale;
+                for &i in &q.indices {
+                    params[li][i as usize] += add;
+                }
+                off += used;
+            } else {
+                let (s, used) = unpack_plain(&rank_blob[off..]).expect("well-formed blob");
+                s.scatter_add(&mut params[li], scale);
+                off += used;
+            }
+        }
+    }
+}
+
+/// One rank's per-layer selections for the hot-path A/B (deterministic).
+fn hot_selections() -> Vec<Vec<(SparseTensor, bool)>> {
+    (0..HOT_WORLD)
+        .map(|rank| {
+            SMOKE_SIZES
+                .iter()
+                .enumerate()
+                .map(|(li, &n)| {
+                    let k = ((n as f64 * HOT_DENSITY).ceil() as usize).max(1);
+                    let quantized = li % 2 == 1;
+                    let grad = smoke_grad(rank, 0, li, n);
+                    let sign = if quantized { Some(1.0) } else { None };
+                    (trimmed_topk(&grad, k, 0.2, sign).sparse, quantized)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The acceptance A/B for the zero-copy refactor: pack + apply through
+/// the owned-decode path vs the view/pack-in-place path, p=8 ranks,
+/// density 0.01 — bit-identical results, wall-clock ratio reported.
+fn hotpath_smoke(json_path: Option<&str>) {
+    let sels = hot_selections();
+    let layers: Vec<(usize, bool)> = (0..SMOKE_SIZES.len()).map(|li| (li, li % 2 == 1)).collect();
+    let scale = -0.05 / HOT_WORLD as f32;
+    println!(
+        "# hot-path A/B: {HOT_WORLD} ranks x {} layers, density {HOT_DENSITY}, {HOT_REPS} reps",
+        SMOKE_SIZES.len()
+    );
+
+    let fresh_params = || -> Vec<Vec<f32>> { SMOKE_SIZES.iter().map(|&n| vec![0f32; n]).collect() };
+    let quant_mean = |s: &SparseTensor| -> f32 {
+        if s.is_empty() {
+            0.0
+        } else {
+            s.values.iter().sum::<f32>() / s.len() as f32
+        }
+    };
+
+    // owned-decode baseline: fresh blob Vecs per rank per step, owned
+    // unpack per message per rank
+    let mut owned_params = fresh_params();
+    let owned = redsync::util::timer::bench(HOT_REPS, || {
+        let gathered: Vec<Vec<u32>> = sels
+            .iter()
+            .map(|rank_sels| {
+                let mut blob = Vec::new();
+                for (s, quantized) in rank_sels {
+                    if *quantized {
+                        blob.extend(pack_quant(&QuantizedSet {
+                            indices: s.indices.clone(),
+                            mean: quant_mean(s),
+                        }));
+                    } else {
+                        blob.extend(pack_plain(s));
+                    }
+                }
+                blob
+            })
+            .collect();
+        hot_apply_owned(&gathered, &layers, &mut owned_params, scale);
+    });
+
+    // zero-copy path: per-rank persistent blobs packed in place, views
+    // applied straight off one gather buffer
+    let mut view_params = fresh_params();
+    let mut blobs: Vec<Vec<u32>> = (0..HOT_WORLD).map(|_| Vec::new()).collect();
+    let view = redsync::util::timer::bench(HOT_REPS, || {
+        for (blob, rank_sels) in blobs.iter_mut().zip(&sels) {
+            blob.clear();
+            for (s, quantized) in rank_sels {
+                if *quantized {
+                    pack_quant_into(&s.indices, quant_mean(s), blob);
+                } else {
+                    pack_plain_into(s, blob);
+                }
+            }
+        }
+        // one owned gather buffer, rank blocks addressed by span — the
+        // shape the collectives hand to BucketDone
+        let gathered = Gathered::from_parts(&blobs);
+        redsync::pipeline::BucketDone {
+            bucket: 0,
+            layers: layers.clone(),
+            gathered,
+            selected: 0,
+            elems: 0,
+        }
+        .apply_to(&mut view_params, scale)
+        .expect("well-formed blob");
+    });
+
+    let bit_identical = owned_params
+        .iter()
+        .zip(&view_params)
+        .all(|(a, b)| a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()));
+    assert!(bit_identical, "view apply diverged from owned-decode apply");
+
+    let speedup = owned.median / view.median;
+    println!("{:>14} {:>12} {:>12}", "path", "median", "min");
+    println!(
+        "{:>14} {:>12} {:>12}",
+        "owned-decode",
+        redsync::util::timer::fmt_secs(owned.median),
+        redsync::util::timer::fmt_secs(owned.min)
+    );
+    println!(
+        "{:>14} {:>12} {:>12}",
+        "zero-copy",
+        redsync::util::timer::fmt_secs(view.median),
+        redsync::util::timer::fmt_secs(view.min)
+    );
+    println!("zero-copy speedup on pack+apply: {speedup:.2}x, bit_identical: {bit_identical}");
+
+    let json = format!(
+        "{{\"bench\":\"hotpath_smoke\",\"world\":{HOT_WORLD},\"density\":{HOT_DENSITY},\
+         \"reps\":{HOT_REPS},\"owned_secs\":{:.9},\"view_secs\":{:.9},\
+         \"speedup\":{speedup:.4},\"bit_identical\":{bit_identical}}}",
+        owned.median, view.median
+    );
+    if let Some(path) = json_path {
+        std::fs::write(path, format!("{json}\n")).expect("write bench json");
+        println!("wrote {path}");
+    }
+    println!("{json}");
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     if let Some(pos) = args.iter().position(|a| a == "--pipeline-smoke") {
@@ -336,6 +508,10 @@ fn main() {
     }
     if let Some(pos) = args.iter().position(|a| a == "--topology-smoke") {
         topology_smoke(args.get(pos + 1).map(String::as_str));
+        return;
+    }
+    if let Some(pos) = args.iter().position(|a| a == "--hotpath-smoke") {
+        hotpath_smoke(args.get(pos + 1).map(String::as_str));
         return;
     }
     if redsync::models::schema::Manifest::load(

@@ -6,8 +6,77 @@
 //! binary search each rank's compressed residual differs in length, so
 //! blocks travel with `[rank, len]` headers and are reassembled in rank
 //! order at the end.
+//!
+//! The primary result shape is [`Gathered`]: every rank's block inside
+//! ONE owned buffer addressed by `(start, len)` spans, so the §5.4
+//! decompression walk reads straight from the gather buffer instead of
+//! p freshly allocated per-rank `Vec`s (DESIGN.md §Zero-Copy-Hot-Path).
+//! The `Vec<Vec<u32>>` shape survives as a compat wrapper for tests and
+//! non-hot callers.
 
 use super::transport::Transport;
+
+/// An allgather result: every rank's contribution inside one owned
+/// buffer, addressed by per-rank `(start, len)` spans.  `buf` may hold
+/// framing words outside the spans (the hierarchical broadcast parses
+/// the leader's world blob in place, headers and all), so consumers go
+/// through [`block`](Gathered::block) / [`blocks`](Gathered::blocks).
+pub struct Gathered {
+    buf: Vec<u32>,
+    spans: Vec<(usize, usize)>,
+}
+
+impl Gathered {
+    /// Single-rank result: the whole buffer is rank 0's block.
+    pub fn single(buf: Vec<u32>) -> Gathered {
+        let n = buf.len();
+        Gathered { buf, spans: vec![(0, n)] }
+    }
+
+    /// Wrap an already-framed buffer with externally computed spans.
+    pub(crate) fn from_spans(buf: Vec<u32>, spans: Vec<(usize, usize)>) -> Gathered {
+        debug_assert!(spans.iter().all(|&(s, l)| s + l <= buf.len()));
+        Gathered { buf, spans }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// Rank `r`'s contribution.
+    pub fn block(&self, r: usize) -> &[u32] {
+        let (start, len) = self.spans[r];
+        &self.buf[start..start + len]
+    }
+
+    /// All blocks in rank order.
+    pub fn blocks(&self) -> impl Iterator<Item = &[u32]> {
+        (0..self.spans.len()).map(move |r| self.block(r))
+    }
+
+    /// Total payload words across ranks (framing excluded).
+    pub fn payload_words(&self) -> usize {
+        self.spans.iter().map(|&(_, l)| l).sum()
+    }
+
+    /// Assemble from borrowed per-rank parts — one copy into the single
+    /// buffer (tests, benches, compat).
+    pub fn from_parts(parts: &[Vec<u32>]) -> Gathered {
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        let mut buf = Vec::with_capacity(total);
+        let mut spans = Vec::with_capacity(parts.len());
+        for p in parts {
+            spans.push((buf.len(), p.len()));
+            buf.extend_from_slice(p);
+        }
+        Gathered { buf, spans }
+    }
+
+    /// Copy out per-rank parts — the historical result shape.
+    pub fn into_parts(self) -> Vec<Vec<u32>> {
+        (0..self.n_ranks()).map(|r| self.block(r).to_vec()).collect()
+    }
+}
 
 /// Gather each rank's `msg`; returns all contributions indexed by rank.
 /// Dispatches to recursive doubling when `world` is a power of two.
@@ -17,28 +86,39 @@ use super::transport::Transport;
 /// collective runs among the members only and the result is indexed by
 /// *group-local* rank — how the hierarchical schedule runs its
 /// inter-node leader allgather.
+///
+/// Compat shape; the hot path uses [`allgather_ref`].
 pub fn allgather<T: Transport>(t: &T, msg: Vec<u32>) -> Vec<Vec<u32>> {
+    allgather_ref(t, &msg).into_parts()
+}
+
+/// [`allgather`] borrowing the caller's message (the bucket's persistent
+/// pack blob is read, never consumed) and returning the single-buffer
+/// [`Gathered`] form.  Wire schedule and bytes are identical to the
+/// historical implementation; only the result representation differs.
+pub fn allgather_ref<T: Transport>(t: &T, msg: &[u32]) -> Gathered {
     if t.world().is_power_of_two() {
-        allgather_recursive_doubling(t, msg)
+        allgather_rd_ref(t, msg)
     } else {
-        allgather_ring(t, msg)
+        allgather_ring_ref(t, msg)
     }
 }
 
 /// Serialize a set of (rank, payload) blocks:
 /// `[count][rank_0, len_0]...[rank_{c-1}, len_{c-1}][payload_0 ...]`.
 /// Shared with the hierarchical schedule, which uses the same framing
-/// for node blobs and the leader broadcast.
-pub(crate) fn pack_blocks(blocks: &[(u32, Vec<u32>)]) -> Vec<u32> {
-    let payload: usize = blocks.iter().map(|(_, p)| p.len()).sum();
+/// for node blobs and the leader broadcast.  Generic over the payload
+/// holder so owned blocks and borrowed slices pack the same bytes.
+pub(crate) fn pack_blocks<B: AsRef<[u32]>>(blocks: &[(u32, B)]) -> Vec<u32> {
+    let payload: usize = blocks.iter().map(|(_, p)| p.as_ref().len()).sum();
     let mut out = Vec::with_capacity(1 + 2 * blocks.len() + payload);
     out.push(blocks.len() as u32);
     for (r, p) in blocks {
         out.push(*r);
-        out.push(p.len() as u32);
+        out.push(p.as_ref().len() as u32);
     }
     for (_, p) in blocks {
-        out.extend_from_slice(p);
+        out.extend_from_slice(p.as_ref());
     }
     out
 }
@@ -59,50 +139,72 @@ pub(crate) fn unpack_blocks(buf: &[u32]) -> Vec<(u32, Vec<u32>)> {
 }
 
 /// Recursive doubling: at step s, exchange all accumulated blocks with the
-/// partner at distance 2^s.  Exactly lg(p) rounds.
+/// partner at distance 2^s.  Exactly lg(p) rounds.  Compat shape.
 pub fn allgather_recursive_doubling<T: Transport>(t: &T, msg: Vec<u32>) -> Vec<Vec<u32>> {
+    allgather_rd_ref(t, &msg).into_parts()
+}
+
+fn allgather_rd_ref<T: Transport>(t: &T, msg: &[u32]) -> Gathered {
     let (rank, world) = (t.rank(), t.world());
     assert!(world.is_power_of_two(), "recursive doubling needs 2^k ranks");
-    let mut blocks: Vec<(u32, Vec<u32>)> = vec![(rank as u32, msg)];
+    // own message first, received blocks in arrival order — the exact
+    // packing order of the historical schedule, so wire bytes match
+    let mut blocks: Vec<(u32, Vec<u32>)> = Vec::with_capacity(world - 1);
     let mut dist = 1;
     while dist < world {
         let peer = rank ^ dist;
-        let received = t.exchange(peer, pack_blocks(&blocks));
+        let refs: Vec<(u32, &[u32])> = std::iter::once((rank as u32, msg))
+            .chain(blocks.iter().map(|(r, p)| (*r, p.as_slice())))
+            .collect();
+        let received = t.exchange(peer, pack_blocks(&refs));
         blocks.extend(unpack_blocks(&received));
         dist <<= 1;
     }
-    finish(blocks, world)
+    finish_ref(rank, msg, blocks, world)
 }
 
 /// Ring allgather: p-1 steps, each forwarding the block received last
-/// round.  Works for any world size.
+/// round.  Works for any world size.  Compat shape.
 pub fn allgather_ring<T: Transport>(t: &T, msg: Vec<u32>) -> Vec<Vec<u32>> {
+    allgather_ring_ref(t, &msg).into_parts()
+}
+
+fn allgather_ring_ref<T: Transport>(t: &T, msg: &[u32]) -> Gathered {
     let (rank, world) = (t.rank(), t.world());
     let next = (rank + 1) % world;
     let prev = (rank + world - 1) % world;
-    let mut blocks: Vec<(u32, Vec<u32>)> = vec![(rank as u32, msg)];
-    let mut forward = pack_blocks(&blocks);
+    let mut blocks: Vec<(u32, Vec<u32>)> = Vec::with_capacity(world - 1);
+    let mut forward = pack_blocks(&[(rank as u32, msg)]);
     for _ in 0..world.saturating_sub(1) {
         t.send(next, forward);
         let received = t.recv(prev);
         let got = unpack_blocks(&received);
-        blocks.extend(got.clone());
         forward = pack_blocks(&got);
+        blocks.extend(got);
     }
-    finish(blocks, world)
+    finish_ref(rank, msg, blocks, world)
 }
 
-pub(crate) fn finish(blocks: Vec<(u32, Vec<u32>)>, world: usize) -> Vec<Vec<u32>> {
-    let mut out: Vec<Option<Vec<u32>>> = vec![None; world];
-    for (r, p) in blocks {
-        let slot = &mut out[r as usize];
+/// Assemble own + received blocks into the single-buffer result,
+/// asserting exactly one block per rank.
+fn finish_ref(rank: usize, own: &[u32], blocks: Vec<(u32, Vec<u32>)>, world: usize) -> Gathered {
+    let total = own.len() + blocks.iter().map(|(_, p)| p.len()).sum::<usize>();
+    let mut buf = Vec::with_capacity(total);
+    let mut spans: Vec<Option<(usize, usize)>> = vec![None; world];
+    spans[rank] = Some((0, own.len()));
+    buf.extend_from_slice(own);
+    for (r, p) in &blocks {
+        let slot = &mut spans[*r as usize];
         assert!(slot.is_none(), "duplicate block for rank {r}");
-        *slot = Some(p);
+        *slot = Some((buf.len(), p.len()));
+        buf.extend_from_slice(p);
     }
-    out.into_iter()
+    let spans = spans
+        .into_iter()
         .enumerate()
-        .map(|(r, p)| p.unwrap_or_else(|| panic!("missing block for rank {r}")))
-        .collect()
+        .map(|(r, s)| s.unwrap_or_else(|| panic!("missing block for rank {r}")))
+        .collect();
+    Gathered { buf, spans }
 }
 
 /// Flatten an allgather result into one buffer (rank order) — the §5.4
@@ -193,6 +295,27 @@ mod tests {
     }
 
     #[test]
+    fn gathered_form_matches_compat_form() {
+        // the zero-copy result addresses the same bytes the Vec-of-Vec
+        // shape copies out
+        let results = run_world(4, |t| {
+            let msg = rank_msg(t.rank(), t.rank() + 1);
+            let g = allgather_ref(&t, &msg);
+            assert_eq!(g.n_ranks(), 4);
+            assert_eq!(g.payload_words(), 1 + 2 + 3 + 4);
+            for (r, b) in g.blocks().enumerate() {
+                assert_eq!(b, g.block(r));
+            }
+            g.into_parts()
+        });
+        for got in &results {
+            for (r, part) in got.iter().enumerate() {
+                assert_eq!(part, &rank_msg(r, r + 1));
+            }
+        }
+    }
+
+    #[test]
     fn empty_contributions_ok() {
         let results = run_world(4, |t| {
             let msg = if t.rank() % 2 == 0 { vec![] } else { vec![t.rank() as u32] };
@@ -224,5 +347,17 @@ mod tests {
     fn block_pack_roundtrip() {
         let blocks = vec![(0u32, vec![1, 2]), (3u32, vec![]), (2u32, vec![9, 9, 9])];
         assert_eq!(unpack_blocks(&pack_blocks(&blocks)), blocks);
+    }
+
+    #[test]
+    fn gathered_from_parts_roundtrip() {
+        let parts = vec![vec![1, 2], vec![], vec![3]];
+        let g = Gathered::from_parts(&parts);
+        assert_eq!(g.block(0), &[1, 2]);
+        assert!(g.block(1).is_empty());
+        assert_eq!(g.into_parts(), parts);
+        let s = Gathered::single(vec![5, 6]);
+        assert_eq!(s.n_ranks(), 1);
+        assert_eq!(s.block(0), &[5, 6]);
     }
 }

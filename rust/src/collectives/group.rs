@@ -31,9 +31,10 @@
 //! with per-bucket [`crate::collectives::mux::TagChannel`]s *under* the
 //! group, not beside it.
 
-use super::allgather::allgather;
-use super::hierarchical::hierarchical_allgather;
+use super::allgather::{allgather_ref, Gathered};
+use super::hierarchical::hierarchical_allgather_ref;
 use super::transport::{Transport, TransportError};
+use std::sync::Arc;
 
 /// Which collective algorithm synchronizes a fusion bucket (§5.5 + the
 /// hierarchical scheme).  Picked per bucket at plan time — statically
@@ -209,6 +210,10 @@ impl<T: Transport> Transport for ProcessGroup<T> {
         self.inner.send(self.members[to], msg)
     }
 
+    fn send_shared(&self, to: usize, msg: &Arc<Vec<u32>>) {
+        self.inner.send_shared(self.members[to], msg)
+    }
+
     fn recv_checked(&self, from: usize) -> Result<Vec<u32>, TransportError> {
         self.inner.recv_checked(self.members[from]).map_err(|e| TransportError {
             // report the *group-local* peer the caller addressed
@@ -275,13 +280,15 @@ impl<T: Transport> Communicator<T> {
     }
 
     /// Dispatch one sparse collective for a bucket: gather every world
-    /// rank's `msg`, indexed by world rank, over the algorithm the plan
-    /// chose.  Both paths return bit-identical results (pinned in
-    /// `tests/topology.rs`); they differ only in schedule and traffic.
-    pub fn allgather(&self, algo: Algo, msg: Vec<u32>) -> Vec<Vec<u32>> {
+    /// rank's `msg` (borrowed — the bucket's persistent pack blob is
+    /// read, never consumed) into one owned [`Gathered`] buffer indexed
+    /// by world rank, over the algorithm the plan chose.  Both paths
+    /// return bit-identical results (pinned in `tests/topology.rs`);
+    /// they differ only in schedule and traffic.
+    pub fn allgather(&self, algo: Algo, msg: &[u32]) -> Gathered {
         match algo {
-            Algo::Sparse => allgather(&self.inner, msg),
-            Algo::Hierarchical => hierarchical_allgather(&self.inner, self.topo, msg),
+            Algo::Sparse => allgather_ref(&self.inner, msg),
+            Algo::Hierarchical => hierarchical_allgather_ref(&self.inner, self.topo, msg),
             Algo::Dense => unreachable!("dense buckets never reach the sparse collective"),
         }
     }

@@ -39,74 +39,151 @@
 //! and its payload component to the cost-model bandwidth term
 //! (`costmodel::hierarchical_payload_words`).
 
-use super::allgather::{allgather, finish, pack_blocks, unpack_blocks};
+use super::allgather::{allgather_ref, pack_blocks, Gathered};
 use super::group::{Communicator, Topology};
 use super::transport::Transport;
+use std::sync::Arc;
 
 /// Gather each rank's `msg` over the hierarchical schedule; returns all
 /// contributions indexed by world rank — the same contract (and the
-/// same bits) as [`allgather`], with a topology-shaped schedule.
+/// same bits) as [`crate::collectives::allgather`], with a
+/// topology-shaped schedule.  Compat shape; the hot path uses
+/// [`hierarchical_allgather_ref`].
 pub fn hierarchical_allgather<T: Transport>(t: &T, topo: Topology, msg: Vec<u32>) -> Vec<Vec<u32>> {
+    hierarchical_allgather_ref(t, topo, &msg).into_parts()
+}
+
+/// [`hierarchical_allgather`] borrowing the caller's message and
+/// returning the single-buffer [`Gathered`] form.  The wire schedule and
+/// every byte on it are identical to the historical implementation; the
+/// zero-copy wins are local: a non-leader parses the received world blob
+/// *in place* (spans into the blob, no per-rank copies), and the leader
+/// broadcast ships one shared buffer instead of `s - 2` clones.
+pub fn hierarchical_allgather_ref<T: Transport>(t: &T, topo: Topology, msg: &[u32]) -> Gathered {
     assert_eq!(topo.world(), t.world(), "topology {} over world {}", topo.label(), t.world());
     if t.world() == 1 {
-        return vec![msg];
+        return Gathered::single(msg.to_vec());
     }
     let rank = t.rank();
     let comm = Communicator::new(t, topo);
     let intra = comm.intra_group();
 
     if !topo.is_leader(rank) {
-        // phase 1: hand the contribution to the node leader (local 0)...
-        intra.send(0, msg);
-        // ...phase 3: receive the assembled world blob back
+        // phase 1: hand the contribution to the node leader (local 0).
+        // The to_vec is the one copy borrowing costs on this schedule:
+        // the historical code moved an owned blob here but then had to
+        // re-allocate and re-fill it next step — same words either way,
+        // and the caller's persistent pack buffer keeps its capacity.
+        intra.send(0, msg.to_vec());
+        // ...phase 3: the assembled world blob comes back; address it in
+        // place instead of copying every rank's payload out
         let blob = intra.recv(0);
-        return finish(unpack_blocks(&blob), topo.world());
+        return parse_world_blob(blob, topo.world());
     }
 
-    // leader: gather the node's messages in member (= world-rank) order
-    let mut blocks: Vec<(u32, Vec<u32>)> = vec![(rank as u32, msg)];
+    // leader: the node's messages in member (= world-rank) order, own
+    // message first — the historical packing order, byte for byte
+    let mut member_msgs: Vec<(u32, Vec<u32>)> = Vec::with_capacity(intra.world() - 1);
     for local in 1..intra.world() {
-        blocks.push((intra.world_rank(local) as u32, intra.recv(local)));
+        member_msgs.push((intra.world_rank(local) as u32, intra.recv(local)));
     }
+    let refs: Vec<(u32, &[u32])> = std::iter::once((rank as u32, msg))
+        .chain(member_msgs.iter().map(|(r, p)| (*r, p.as_slice())))
+        .collect();
 
     // phase 2: allgather node blobs among the per-node leaders
     let leaders = comm.leaders_group().expect("a leader can build the leader group");
-    let node_blobs = allgather(&leaders, pack_blocks(&blocks));
-    let mut all: Vec<(u32, Vec<u32>)> = Vec::with_capacity(topo.world());
-    for nb in &node_blobs {
-        all.extend(unpack_blocks(nb));
-    }
-    let result = finish(all, topo.world());
+    let node_blobs = allgather_ref(&leaders, &pack_blocks(&refs));
+    let result = assemble_world(&node_blobs, topo.world());
 
-    // phase 3: broadcast the world blob to the node, packed straight
-    // from `result` (no intermediate copy of the gathered payload); the
-    // last member takes the buffer by move
+    // phase 3: broadcast the world blob to the node — ONE shared buffer
+    // enqueued s-1 times (`send_shared`), zero per-peer clones at the
+    // leader
     let s = intra.world();
     if s > 1 {
-        let world_blob = pack_world_blob(&result);
-        for local in 1..s - 1 {
-            intra.send(local, world_blob.clone());
+        let world_blob = Arc::new(pack_world_blob(&result));
+        for local in 1..s {
+            intra.send_shared(local, &world_blob);
         }
-        intra.send(s - 1, world_blob);
     }
     result
 }
 
 /// [`pack_blocks`] framing over the finished world result (block `r` is
-/// world rank `r`'s payload), borrowing the payloads instead of cloning
-/// them into a block list first.
-fn pack_world_blob(result: &[Vec<u32>]) -> Vec<u32> {
-    let payload: usize = result.iter().map(|p| p.len()).sum();
-    let mut out = Vec::with_capacity(1 + 2 * result.len() + payload);
-    out.push(result.len() as u32);
-    for (r, p) in result.iter().enumerate() {
+/// world rank `r`'s payload), borrowing the payloads straight out of the
+/// gather buffer.
+fn pack_world_blob(result: &Gathered) -> Vec<u32> {
+    let p = result.n_ranks();
+    let mut out = Vec::with_capacity(1 + 2 * p + result.payload_words());
+    out.push(p as u32);
+    for (r, b) in result.blocks().enumerate() {
         out.push(r as u32);
-        out.push(p.len() as u32);
+        out.push(b.len() as u32);
     }
-    for p in result {
-        out.extend_from_slice(p);
+    for b in result.blocks() {
+        out.extend_from_slice(b);
     }
     out
+}
+
+/// Address a received world blob in place: spans point into the blob
+/// past its `[count][rank, len]…` headers — the non-leader's whole
+/// phase-3 cost is this header walk.
+fn parse_world_blob(blob: Vec<u32>, world: usize) -> Gathered {
+    assert!(!blob.is_empty(), "empty world blob");
+    let count = blob[0] as usize;
+    assert_eq!(count, world, "world blob carries {count} blocks for a {world}-rank world");
+    let mut spans: Vec<Option<(usize, usize)>> = vec![None; world];
+    let mut off = 1 + 2 * count;
+    for i in 0..count {
+        let r = blob[1 + 2 * i] as usize;
+        let len = blob[2 + 2 * i] as usize;
+        let slot = &mut spans[r];
+        assert!(slot.is_none(), "duplicate block for rank {r}");
+        *slot = Some((off, len));
+        off += len;
+    }
+    assert!(off <= blob.len(), "world blob truncated");
+    let spans = spans
+        .into_iter()
+        .enumerate()
+        .map(|(r, s)| s.unwrap_or_else(|| panic!("missing block for rank {r}")))
+        .collect();
+    Gathered::from_spans(blob, spans)
+}
+
+/// Assemble the world result from the leaders' gathered node blobs:
+/// every node blob's framed blocks are copied once into one buffer,
+/// spans indexed by world rank.
+fn assemble_world(node_blobs: &Gathered, world: usize) -> Gathered {
+    let mut total = 0usize;
+    for nb in node_blobs.blocks() {
+        let count = nb[0] as usize;
+        for i in 0..count {
+            total += nb[2 + 2 * i] as usize;
+        }
+    }
+    let mut buf = Vec::with_capacity(total);
+    let mut spans: Vec<Option<(usize, usize)>> = vec![None; world];
+    for nb in node_blobs.blocks() {
+        let count = nb[0] as usize;
+        let mut off = 1 + 2 * count;
+        for i in 0..count {
+            let r = nb[1 + 2 * i] as usize;
+            let len = nb[2 + 2 * i] as usize;
+            let slot = &mut spans[r];
+            assert!(slot.is_none(), "duplicate block for rank {r}");
+            *slot = Some((buf.len(), len));
+            buf.extend_from_slice(&nb[off..off + len]);
+            off += len;
+        }
+    }
+    let spans = spans
+        .into_iter()
+        .enumerate()
+        .map(|(r, s)| s.unwrap_or_else(|| panic!("missing block for rank {r}")))
+        .collect();
+    Gathered::from_spans(buf, spans)
 }
 
 /// Exact fabric traffic of one [`hierarchical_allgather`] where every

@@ -45,11 +45,13 @@ pub mod hierarchical;
 pub mod mux;
 pub mod transport;
 
-pub use allgather::{allgather, concat};
+pub use allgather::{allgather, allgather_ref, concat, Gathered};
 pub use allreduce::{allreduce_mean, allreduce_sum};
 pub use fusion::FusionPlan;
 pub use group::{Algo, Communicator, ProcessGroup, Topology};
-pub use hierarchical::{hierarchical_allgather, hierarchical_traffic_words};
+pub use hierarchical::{
+    hierarchical_allgather, hierarchical_allgather_ref, hierarchical_traffic_words,
+};
 pub use mux::{TagChannel, TagMux};
 pub use transport::{LocalFabric, LocalTransport, Transport, TransportError};
 

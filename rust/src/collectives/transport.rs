@@ -39,6 +39,33 @@ impl std::fmt::Display for TransportError {
 
 impl std::error::Error for TransportError {}
 
+/// One queued fabric message: owned, or shared for broadcast fan-out
+/// (the hierarchical intra-node broadcast ships one buffer to s-1 peers
+/// without cloning it per peer).
+pub(crate) enum Payload {
+    Owned(Vec<u32>),
+    Shared(Arc<Vec<u32>>),
+}
+
+impl Payload {
+    pub(crate) fn as_slice(&self) -> &[u32] {
+        match self {
+            Payload::Owned(v) => v.as_slice(),
+            Payload::Shared(a) => a.as_slice(),
+        }
+    }
+
+    /// Take ownership: free for owned payloads and the last holder of a
+    /// shared one; one receiver-side copy otherwise (cost the sender no
+    /// longer pays serially).
+    pub(crate) fn into_vec(self) -> Vec<u32> {
+        match self {
+            Payload::Owned(v) => v,
+            Payload::Shared(a) => Arc::try_unwrap(a).unwrap_or_else(|a| (*a).clone()),
+        }
+    }
+}
+
 /// Point-to-point message transport between ranks.
 pub trait Transport {
     fn rank(&self) -> usize;
@@ -48,6 +75,16 @@ pub trait Transport {
     /// Blocking receive of the next message from rank `from`, surfacing a
     /// broken link as a clean error instead of a panic or a hang.
     fn recv_checked(&self, from: usize) -> Result<Vec<u32>, TransportError>;
+
+    /// Broadcast-friendly send: ship a shared buffer without a per-peer
+    /// clone at the sender.  Defaults to clone + [`send`](Transport::send);
+    /// the real fabrics forward the `Arc` to their queues so the leader's
+    /// intra-node broadcast enqueues s-1 sends of one buffer.  Byte
+    /// accounting and receiver-observable behavior are identical to
+    /// `send`.
+    fn send_shared(&self, to: usize, msg: &Arc<Vec<u32>>) {
+        self.send(to, msg.as_ref().clone());
+    }
 
     /// Blocking receive of the next message from rank `from`.  Panics if
     /// the link broke — a dead peer mid-collective is unrecoverable.
@@ -78,6 +115,10 @@ impl<T: Transport + ?Sized> Transport for &T {
 
     fn send(&self, to: usize, msg: Vec<u32>) {
         (**self).send(to, msg)
+    }
+
+    fn send_shared(&self, to: usize, msg: &Arc<Vec<u32>>) {
+        (**self).send_shared(to, msg)
     }
 
     fn recv_checked(&self, from: usize) -> Result<Vec<u32>, TransportError> {
@@ -127,9 +168,9 @@ impl LocalFabric {
         assert!(world >= 1);
         let stats = Arc::new(TrafficStats::default());
         // txs[from][to], rxs[to][from]
-        let mut txs: Vec<Vec<Option<Sender<Vec<u32>>>>> =
+        let mut txs: Vec<Vec<Option<Sender<Payload>>>> =
             (0..world).map(|_| (0..world).map(|_| None).collect()).collect();
-        let mut rxs: Vec<Vec<Option<Receiver<Vec<u32>>>>> =
+        let mut rxs: Vec<Vec<Option<Receiver<Payload>>>> =
             (0..world).map(|_| (0..world).map(|_| None).collect()).collect();
         for from in 0..world {
             for to in 0..world {
@@ -140,10 +181,10 @@ impl LocalFabric {
         }
         let mut endpoints = Vec::with_capacity(world);
         for (rank, rx_row) in rxs.into_iter().enumerate() {
-            let senders: Vec<Mutex<Sender<Vec<u32>>>> = (0..world)
+            let senders: Vec<Mutex<Sender<Payload>>> = (0..world)
                 .map(|to| Mutex::new(txs[rank][to].take().expect("sender taken twice")))
                 .collect();
-            let receivers: Vec<Mutex<Receiver<Vec<u32>>>> = rx_row
+            let receivers: Vec<Mutex<Receiver<Payload>>> = rx_row
                 .into_iter()
                 .map(|r| Mutex::new(r.expect("receiver missing")))
                 .collect();
@@ -174,8 +215,8 @@ impl LocalFabric {
 pub struct LocalTransport {
     rank: usize,
     world: usize,
-    senders: Vec<Mutex<Sender<Vec<u32>>>>,
-    receivers: Vec<Mutex<Receiver<Vec<u32>>>>,
+    senders: Vec<Mutex<Sender<Payload>>>,
+    receivers: Vec<Mutex<Receiver<Payload>>>,
     stats: Arc<TrafficStats>,
 }
 
@@ -191,13 +232,26 @@ impl Transport for LocalTransport {
     fn send(&self, to: usize, msg: Vec<u32>) {
         self.stats.messages.fetch_add(1, Ordering::Relaxed);
         self.stats.words.fetch_add(msg.len() as u64, Ordering::Relaxed);
-        self.senders[to].lock().unwrap().send(msg).expect("peer endpoint dropped");
+        self.senders[to]
+            .lock()
+            .unwrap()
+            .send(Payload::Owned(msg))
+            .expect("peer endpoint dropped");
+    }
+
+    fn send_shared(&self, to: usize, msg: &Arc<Vec<u32>>) {
+        self.stats.messages.fetch_add(1, Ordering::Relaxed);
+        self.stats.words.fetch_add(msg.len() as u64, Ordering::Relaxed);
+        self.senders[to]
+            .lock()
+            .unwrap()
+            .send(Payload::Shared(Arc::clone(msg)))
+            .expect("peer endpoint dropped");
     }
 
     fn recv_checked(&self, from: usize) -> Result<Vec<u32>, TransportError> {
-        self.receivers[from].lock().unwrap().recv().map_err(|_| TransportError {
-            peer: from,
-            reason: "peer endpoint dropped".into(),
+        self.receivers[from].lock().unwrap().recv().map(Payload::into_vec).map_err(|_| {
+            TransportError { peer: from, reason: "peer endpoint dropped".into() }
         })
     }
 }
@@ -315,6 +369,25 @@ mod tests {
         for i in 0..100u32 {
             assert_eq!(b.recv(0), vec![i]);
         }
+    }
+
+    #[test]
+    fn send_shared_delivers_and_counts_like_send() {
+        let mut fabric = LocalFabric::new(3);
+        let stats = Arc::clone(&fabric.stats);
+        let a = fabric.take(0);
+        let b = fabric.take(1);
+        let c = fabric.take(2);
+        let blob = Arc::new(vec![7u32, 8, 9]);
+        a.send_shared(1, &blob);
+        a.send_shared(2, &blob);
+        assert_eq!(b.recv(0), vec![7, 8, 9]);
+        assert_eq!(c.recv(0), vec![7, 8, 9]);
+        // identical accounting to two owned sends
+        assert_eq!(stats.message_count(), 2);
+        assert_eq!(stats.bytes(), 2 * 3 * 4);
+        // the sender still holds its copy untouched
+        assert_eq!(*blob, vec![7, 8, 9]);
     }
 
     #[test]

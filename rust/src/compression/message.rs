@@ -14,7 +14,7 @@
 //! ranks' messages are concatenated by the allgather.
 
 use super::quant::QuantizedSet;
-use crate::tensor::SparseTensor;
+use crate::tensor::{SparseTensor, SparseView};
 
 #[derive(Debug, PartialEq)]
 pub enum WireError {
@@ -48,46 +48,109 @@ pub fn quant_words(k: usize) -> usize {
 /// Encode a plain (index, value) message.
 pub fn pack_plain(s: &SparseTensor) -> Vec<u32> {
     let mut out = Vec::with_capacity(plain_words(s.len()));
+    pack_plain_into(s, &mut out);
+    out
+}
+
+/// Append a plain message to a reused wire buffer — the pack-in-place
+/// form `BucketState::produce` drives: the bucket's persistent blob is
+/// cleared once per step and every layer appends, so steady-state
+/// packing allocates nothing.
+pub fn pack_plain_into(s: &SparseTensor, out: &mut Vec<u32>) {
+    out.reserve(plain_words(s.len()));
     out.push(s.len() as u32);
     out.extend_from_slice(&s.indices);
     out.extend(s.values.iter().map(|v| v.to_bits()));
-    out
 }
 
 /// Encode a quantized (indices + mean) message.
 pub fn pack_quant(q: &QuantizedSet) -> Vec<u32> {
     let mut out = Vec::with_capacity(quant_words(q.len()));
-    out.push(q.indices.len() as u32);
-    out.extend_from_slice(&q.indices);
-    out.push(q.mean.to_bits());
+    pack_quant_into(&q.indices, q.mean, &mut out);
     out
 }
 
-/// Decode one plain message from the front of `buf`; returns (tensor,
-/// words consumed).
-pub fn unpack_plain(buf: &[u32]) -> Result<(SparseTensor, usize), WireError> {
+/// Append a quantized message to a reused wire buffer.  Takes the raw
+/// (indices, mean) pair so the packer never materializes a
+/// [`QuantizedSet`] on the hot path.
+pub fn pack_quant_into(indices: &[u32], mean: f32, out: &mut Vec<u32>) {
+    out.reserve(quant_words(indices.len()));
+    out.push(indices.len() as u32);
+    out.extend_from_slice(indices);
+    out.push(mean.to_bits());
+}
+
+/// A quantized message parsed in place: borrowed indices + the mean.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantView<'a> {
+    pub indices: &'a [u32],
+    pub mean: f32,
+}
+
+impl QuantView<'_> {
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+}
+
+/// One message of either flavor, parsed in place — what a layer walk
+/// over a gathered blob yields without touching the heap.
+#[derive(Clone, Copy, Debug)]
+pub enum MessageView<'a> {
+    Plain(SparseView<'a>),
+    Quantized(QuantView<'a>),
+}
+
+/// Parse one message of the given flavor from the front of `buf`;
+/// returns (view, words consumed).
+pub fn view_message(buf: &[u32], quantized: bool) -> Result<(MessageView<'_>, usize), WireError> {
+    if quantized {
+        view_quant(buf).map(|(q, used)| (MessageView::Quantized(q), used))
+    } else {
+        view_plain(buf).map(|(s, used)| (MessageView::Plain(s), used))
+    }
+}
+
+/// Parse one plain message in place from the front of `buf`; returns
+/// (view, words consumed).  Same framing checks as [`unpack_plain`],
+/// zero copies.
+pub fn view_plain(buf: &[u32]) -> Result<(SparseView<'_>, usize), WireError> {
     let &len = buf.first().ok_or(WireError::Empty)?;
     let len = len as usize;
     let need = plain_words(len);
     if buf.len() < need {
         return Err(WireError::Truncated { need, have: buf.len() });
     }
-    let indices = buf[1..1 + len].to_vec();
-    let values = buf[1 + len..need].iter().map(|&b| f32::from_bits(b)).collect();
-    Ok((SparseTensor::new(indices, values), need))
+    Ok((SparseView::new(&buf[1..1 + len], &buf[1 + len..need]), need))
 }
 
-/// Decode one quantized message from the front of `buf`.
-pub fn unpack_quant(buf: &[u32]) -> Result<(QuantizedSet, usize), WireError> {
+/// Parse one quantized message in place from the front of `buf`.
+pub fn view_quant(buf: &[u32]) -> Result<(QuantView<'_>, usize), WireError> {
     let &len = buf.first().ok_or(WireError::Empty)?;
     let len = len as usize;
     let need = quant_words(len);
     if buf.len() < need {
         return Err(WireError::Truncated { need, have: buf.len() });
     }
-    let indices = buf[1..1 + len].to_vec();
-    let mean = f32::from_bits(buf[need - 1]);
-    Ok((QuantizedSet { indices, mean }, need))
+    Ok((QuantView { indices: &buf[1..1 + len], mean: f32::from_bits(buf[need - 1]) }, need))
+}
+
+/// Decode one plain message from the front of `buf`; returns (tensor,
+/// words consumed).  Owned-decode compat shape — the hot path uses
+/// [`view_plain`].
+pub fn unpack_plain(buf: &[u32]) -> Result<(SparseTensor, usize), WireError> {
+    let (v, used) = view_plain(buf)?;
+    Ok((v.to_tensor(), used))
+}
+
+/// Decode one quantized message from the front of `buf`.
+pub fn unpack_quant(buf: &[u32]) -> Result<(QuantizedSet, usize), WireError> {
+    let (q, used) = view_quant(buf)?;
+    Ok((QuantizedSet { indices: q.indices.to_vec(), mean: q.mean }, used))
 }
 
 /// Decode a concatenation of `n_ranks` plain messages (an allgather
@@ -102,7 +165,7 @@ pub fn apply_gathered_plain(
     let mut off = 0;
     let mut applied = 0;
     for _ in 0..n_ranks {
-        let (s, used) = unpack_plain(&buf[off..])?;
+        let (s, used) = view_plain(&buf[off..])?;
         s.scatter_add(dense, scale);
         applied += s.len();
         off += used;
@@ -119,20 +182,44 @@ pub fn apply_gathered_plain(
 /// present messages in a rank-deterministic order to get identical
 /// bits everywhere (float addition does not commute bitwise).
 ///
+/// Implemented as a k-way sort-merge over the inputs, which the wire
+/// format guarantees are index-ascending (every selector emits sorted
+/// indices) — O(union · k) cursor scans and one output buffer, no
+/// tree-map churn.  Debug builds assert the ascending precondition.
+///
 /// The wire schedule (`collectives::hierarchical`) deliberately does
 /// *not* apply this merge — value-merging changes float summation order
 /// and would break the bit-identity pin against the flat schedule — but
 /// the cost model prices it and the topology bench reports the union
 /// size it would achieve.
 pub fn merge_plain(msgs: &[SparseTensor]) -> SparseTensor {
-    let mut acc: std::collections::BTreeMap<u32, f32> = std::collections::BTreeMap::new();
-    for m in msgs {
-        for (&i, &v) in m.indices.iter().zip(&m.values) {
-            *acc.entry(i).or_insert(0.0) += v;
-        }
-    }
+    debug_assert!(
+        msgs.iter().all(|m| m.indices.windows(2).all(|w| w[0] <= w[1])),
+        "merge_plain needs index-ascending messages (the wire invariant)"
+    );
+    let mut cursors = vec![0usize; msgs.len()];
     let mut out = SparseTensor::default();
-    for (i, v) in acc {
+    loop {
+        // the smallest index any cursor still points at
+        let mut next: Option<u32> = None;
+        for (m, &c) in msgs.iter().zip(&cursors) {
+            if c < m.len() {
+                let i = m.indices[c];
+                if next.map_or(true, |n| i < n) {
+                    next = Some(i);
+                }
+            }
+        }
+        let Some(i) = next else { break };
+        // sum every message's run of `i` entries, in message order — the
+        // same accumulation order the receivers' scatter walk uses
+        let mut v = 0.0f32;
+        for (m, c) in msgs.iter().zip(&mut cursors) {
+            while *c < m.len() && m.indices[*c] == i {
+                v += m.values[*c];
+                *c += 1;
+            }
+        }
         out.push(i, v);
     }
     out
@@ -149,9 +236,9 @@ pub fn apply_gathered_quant(
     let mut off = 0;
     let mut applied = 0;
     for _ in 0..n_ranks {
-        let (q, used) = unpack_quant(&buf[off..])?;
+        let (q, used) = view_quant(&buf[off..])?;
         let add = q.mean * scale;
-        for &i in &q.indices {
+        for &i in q.indices {
             dense[i as usize] += add;
         }
         applied += q.len();
@@ -216,6 +303,41 @@ mod tests {
         buf.pop();
         assert!(matches!(unpack_plain(&buf), Err(WireError::Truncated { .. })));
         assert_eq!(unpack_plain(&[]), Err(WireError::Empty));
+        // the in-place views apply the same framing checks
+        assert!(matches!(view_plain(&buf), Err(WireError::Truncated { .. })));
+        assert!(matches!(view_quant(&[]), Err(WireError::Empty)));
+    }
+
+    #[test]
+    fn views_parse_in_place() {
+        let s = sample();
+        let mut buf = pack_plain(&s);
+        buf.extend(pack_quant(&QuantizedSet { indices: vec![2, 5], mean: -0.75 }));
+        let (v, used) = view_plain(&buf).unwrap();
+        assert_eq!(v.indices, &s.indices[..]);
+        assert_eq!(v.to_tensor(), s);
+        let (q, used2) = view_quant(&buf[used..]).unwrap();
+        assert_eq!(q.indices, &[2, 5]);
+        assert_eq!(q.mean, -0.75);
+        assert_eq!(used + used2, buf.len());
+        match view_message(&buf, false).unwrap() {
+            (MessageView::Plain(p), u) => assert_eq!((p.len(), u), (3, used)),
+            _ => panic!("expected plain"),
+        }
+    }
+
+    #[test]
+    fn pack_into_appends_to_a_shared_blob() {
+        let s = sample();
+        let mut blob = vec![0xFEEDu32]; // pre-existing contents survive
+        pack_plain_into(&s, &mut blob);
+        pack_quant_into(&[1, 2], 0.5, &mut blob);
+        assert_eq!(blob[0], 0xFEED);
+        assert_eq!(&blob[1..1 + plain_words(3)], &pack_plain(&s)[..]);
+        assert_eq!(
+            &blob[1 + plain_words(3)..],
+            &pack_quant(&QuantizedSet { indices: vec![1, 2], mean: 0.5 })[..]
+        );
     }
 
     #[test]
@@ -261,7 +383,7 @@ mod tests {
 
     #[test]
     fn merge_of_disjoint_messages_is_the_sorted_union() {
-        let a = SparseTensor::new(vec![9, 1], vec![1.0, 2.0]);
+        let a = SparseTensor::new(vec![1, 9], vec![2.0, 1.0]);
         let b = SparseTensor::new(vec![4], vec![3.0]);
         let m = merge_plain(&[a, b]);
         assert_eq!(m.indices, vec![1, 4, 9]);
@@ -280,12 +402,14 @@ mod tests {
             let msgs: Vec<SparseTensor> = (0..n_msgs)
                 .map(|_| {
                     let k = g.size(0..dim.min(40));
-                    let mut s = SparseTensor::default();
                     let mut used = vec![false; dim];
                     for _ in 0..k {
-                        let i = g.size(0..dim);
-                        if !used[i] {
-                            used[i] = true;
+                        used[g.size(0..dim)] = true;
+                    }
+                    // wire invariant: message indices ascend
+                    let mut s = SparseTensor::default();
+                    for (i, &u) in used.iter().enumerate() {
+                        if u {
                             s.push(i as u32, g.f32(-2.0..2.0));
                         }
                     }

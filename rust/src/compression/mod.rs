@@ -18,8 +18,9 @@ pub mod select;
 pub use quant::{QuantizedSet, SignAlternator};
 pub use residual::{Accumulation, ResidualState};
 pub use select::{
-    exact_topk, threshold_binary_search, trimmed_topk, BinarySearchParams,
-    CachedThresholdSelector, Selection,
+    exact_topk, exact_topk_into, threshold_binary_search, threshold_binary_search_into,
+    trimmed_topk, trimmed_topk_into, BinarySearchParams, CachedThresholdSelector, SelectScratch,
+    Selection,
 };
 
 use crate::tensor::SparseTensor;
@@ -81,6 +82,11 @@ pub struct CompressorConfig {
     /// threshold caching — quantized layers re-search every iteration, as
     /// the paper notes.
     pub quantize: bool,
+    /// Record per-phase produce timings (the Fig. 10 mask/select/pack
+    /// split).  Disabling skips every clock read on the produce hot path
+    /// — for micro-layer workloads and benches where `Instant::now`
+    /// would dominate the phase being measured.
+    pub timing: bool,
 }
 
 impl Default for CompressorConfig {
@@ -91,6 +97,7 @@ impl Default for CompressorConfig {
             bs: BinarySearchParams::default(),
             interval: 5,
             quantize: false,
+            timing: true,
         }
     }
 }

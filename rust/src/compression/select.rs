@@ -29,6 +29,61 @@ pub struct Selection {
     pub threshold: f32,
 }
 
+/// Reusable selection scratch: every buffer a selector touches, kept
+/// alive across steps so steady-state selection performs zero heap
+/// allocation (DESIGN.md §Zero-Copy-Hot-Path).  One per fusion bucket —
+/// the bucket's layers select serially, so they share it; capacities
+/// grow to the largest layer once and stay.
+///
+/// The `*_into` selectors leave their result in the
+/// [`selected`](SelectScratch::selected) slot and return the threshold;
+/// the owned wrappers ([`exact_topk`], [`trimmed_topk`],
+/// [`threshold_binary_search`]) keep the historical `Selection` shape
+/// for everything that is not the per-step hot path.
+#[derive(Default)]
+pub struct SelectScratch {
+    /// Index permutation buffer for exact top-k's quickselect.
+    idx: Vec<u32>,
+    /// Strided sample keys (trim / sample-guided estimation).
+    keys: Vec<f32>,
+    /// Bisection threshold ladder.
+    ladder: Vec<f32>,
+    /// Counting-pass output.
+    counts: Vec<usize>,
+    /// Trim-pass candidate set.
+    cand: SparseTensor,
+    /// The selection result slot.
+    out: SparseTensor,
+}
+
+impl SelectScratch {
+    pub fn new() -> SelectScratch {
+        SelectScratch::default()
+    }
+
+    /// The last selection written by an `*_into` selector.
+    pub fn selected(&self) -> &SparseTensor {
+        &self.out
+    }
+
+    /// Take the result slot (owned-wrapper use).
+    pub fn take_selected(&mut self) -> SparseTensor {
+        std::mem::take(&mut self.out)
+    }
+
+    /// Replace the result slot with an externally produced selection
+    /// (the device-selector path hands back owned tensors).
+    pub fn put(&mut self, s: SparseTensor) {
+        self.out = s;
+    }
+
+    /// Compact `x` above a cached threshold into the result slot — the
+    /// §5.2.2 threshold-reuse fast path, allocation-free.
+    pub fn compact_above(&mut self, x: &[f32], thr: f32) {
+        SparseTensor::compact_above_into(x, thr, &mut self.out);
+    }
+}
+
 #[derive(Clone, Copy, Debug)]
 pub struct BinarySearchParams {
     /// Termination width on the ratio interval (paper's ε).
@@ -92,11 +147,12 @@ fn key_stats(x: &[f32], sign: Option<f32>) -> (f32, f32) {
     }
 }
 
-/// Strided sample of selection keys (§Perf).
-fn sample_keys(x: &[f32], stride: usize, sign: Option<f32>) -> Vec<f32> {
+/// Strided sample of selection keys (§Perf) into a reused buffer.
+fn sample_keys_into(x: &[f32], stride: usize, sign: Option<f32>, keys: &mut Vec<f32>) {
+    keys.clear();
     match sign {
-        None => x.iter().step_by(stride).map(|v| v.abs()).collect(),
-        Some(s) => x.iter().step_by(stride).map(|v| v * s).collect(),
+        None => keys.extend(x.iter().step_by(stride).map(|v| v.abs())),
+        Some(s) => keys.extend(x.iter().step_by(stride).map(|v| v * s)),
     }
 }
 
@@ -110,10 +166,15 @@ fn sample_stride(n: usize, k: usize) -> usize {
 /// Trim threshold from a strided-sample quantile at twice the target
 /// rank: ≥ k survivors w.h.p., ~2k expected.  `None` when the sample's
 /// quantile is non-positive (degenerate distribution) — callers fall back
-/// to the exact selector.
-fn sample_trim_threshold(x: &[f32], k: usize, sign: Option<f32>) -> Option<f32> {
+/// to the exact selector.  `keys` is reused scratch.
+fn sample_trim_threshold(
+    x: &[f32],
+    k: usize,
+    sign: Option<f32>,
+    keys: &mut Vec<f32>,
+) -> Option<f32> {
     let stride = sample_stride(x.len(), k);
-    let mut keys = sample_keys(x, stride, sign);
+    sample_keys_into(x, stride, sign, keys);
     if keys.is_empty() {
         return None;
     }
@@ -128,18 +189,39 @@ fn sample_trim_threshold(x: &[f32], k: usize, sign: Option<f32>) -> Option<f32> 
 /// radixSelect-baseline of Fig. 3.  Returns exactly `min(k, n)` elements
 /// with ascending indices.
 pub fn exact_topk(x: &[f32], k: usize, sign: Option<f32>) -> Selection {
+    let mut idx = Vec::new();
+    let mut out = SparseTensor::default();
+    let threshold = exact_topk_core(x, k, sign, &mut idx, &mut out);
+    Selection { sparse: out, threshold }
+}
+
+/// [`exact_topk`] over reusable scratch.
+pub fn exact_topk_into(x: &[f32], k: usize, sign: Option<f32>, s: &mut SelectScratch) -> f32 {
+    exact_topk_core(x, k, sign, &mut s.idx, &mut s.out)
+}
+
+/// The quickselect core: result in `out` (cleared first), `idx` is the
+/// reused permutation buffer; returns the selection threshold.
+fn exact_topk_core(
+    x: &[f32],
+    k: usize,
+    sign: Option<f32>,
+    idx: &mut Vec<u32>,
+    out: &mut SparseTensor,
+) -> f32 {
+    out.clear();
     let n = x.len();
     if k == 0 || n == 0 {
-        return Selection { sparse: SparseTensor::default(), threshold: f32::INFINITY };
+        return f32::INFINITY;
     }
     if k >= n {
-        let mut s = SparseTensor::with_capacity(n);
         for (i, &v) in x.iter().enumerate() {
-            s.push(i as u32, v);
+            out.push(i as u32, v);
         }
-        return Selection { sparse: s, threshold: f32::NEG_INFINITY };
+        return f32::NEG_INFINITY;
     }
-    let mut idx: Vec<u32> = (0..n as u32).collect();
+    idx.clear();
+    idx.extend(0..n as u32);
     // descending by key: element k-1 is the kth largest after the call
     idx.select_nth_unstable_by(k - 1, |&a, &b| {
         key_of(x[b as usize], sign)
@@ -147,22 +229,39 @@ pub fn exact_topk(x: &[f32], k: usize, sign: Option<f32>) -> Selection {
             .unwrap()
     });
     let threshold = key_of(x[idx[k - 1] as usize], sign);
-    let mut top: Vec<u32> = idx[..k].to_vec();
-    top.sort_unstable();
-    let values = top.iter().map(|&i| x[i as usize]).collect();
-    Selection { sparse: SparseTensor::new(top, values), threshold }
+    idx[..k].sort_unstable();
+    for &i in &idx[..k] {
+        out.push(i, x[i as usize]);
+    }
+    threshold
 }
 
 /// Algorithm 2: trimmed top-k.  One stats pass, a descending-ratio scan to
 /// find a trim threshold with >= k survivors, then exact top-k on the
 /// survivors only.  `eps` is the paper's ratio decrement (0.2).
 pub fn trimmed_topk(x: &[f32], k: usize, eps: f32, sign: Option<f32>) -> Selection {
+    let mut s = SelectScratch::default();
+    let threshold = trimmed_topk_into(x, k, eps, sign, &mut s);
+    Selection { sparse: s.take_selected(), threshold }
+}
+
+/// [`trimmed_topk`] over reusable scratch: result in
+/// [`SelectScratch::selected`], returns the threshold.
+pub fn trimmed_topk_into(
+    x: &[f32],
+    k: usize,
+    eps: f32,
+    sign: Option<f32>,
+    s: &mut SelectScratch,
+) -> f32 {
     let n = x.len();
     if k == 0 || n == 0 {
-        return Selection { sparse: SparseTensor::default(), threshold: f32::INFINITY };
+        s.out.clear();
+        return f32::INFINITY;
     }
+    let SelectScratch { idx, keys, cand, out, .. } = s;
     if k >= n {
-        return exact_topk(x, k, sign);
+        return exact_topk_core(x, k, sign, idx, out);
     }
     let _ = eps; // ratio decrement of the paper's GPU ladder; the host
                  // trim statistic is a sample quantile instead (§Perf)
@@ -173,36 +272,47 @@ pub fn trimmed_topk(x: &[f32], k: usize, eps: f32, sign: Option<f32>) -> Selecti
     // exact selector on ~1M elements, so the trim threshold comes from a
     // strided-sample quantile at twice the target rank: ≥ k survivors
     // w.h.p., ~2k in expectation, verified by the compaction pass.
-    let Some(thr) = sample_trim_threshold(x, k, sign) else {
+    let Some(thr) = sample_trim_threshold(x, k, sign, keys) else {
         // degenerate (constant / all-zero / wrong-signed) distribution
-        return exact_topk(x, k, sign);
+        return exact_topk_core(x, k, sign, idx, out);
     };
     // Trim: gather candidate (index, value) pairs, then exact top-k on
     // the candidates (the paper's "radixSelect on the remaining").
-    let mut cand = compact(x, thr, sign);
+    compact_into(x, thr, sign, cand);
     if cand.len() < k {
         // sampling undershot (rare; heavy ties or tiny k): fall back to a
         // trim at the sample's low quantile, then to the full array
-        cand = compact(x, 0.0, sign);
+        compact_into(x, 0.0, sign, cand);
         if cand.len() < k {
-            return exact_topk(x, k, sign);
+            return exact_topk_core(x, k, sign, idx, out);
         }
     }
-    let sel = exact_topk(&cand.values, k, sign);
-    let mut indices: Vec<u32> =
-        sel.sparse.indices.iter().map(|&i| cand.indices[i as usize]).collect();
-    let mut values = sel.sparse.values.clone();
+    let threshold = exact_topk_core(&cand.values, k, sign, idx, out);
+    // candidate positions -> original indices, in place
+    for i in out.indices.iter_mut() {
+        *i = cand.indices[*i as usize];
+    }
     // indices of candidates are ascending, and exact_topk returns ascending
     // positions within candidates, so this is already ascending; keep it
     // defensive anyway.
-    if !indices.windows(2).all(|w| w[0] < w[1]) {
+    if !out.indices.windows(2).all(|w| w[0] < w[1]) {
         let mut pairs: Vec<(u32, f32)> =
-            indices.iter().copied().zip(values.iter().copied()).collect();
+            out.indices.iter().copied().zip(out.values.iter().copied()).collect();
         pairs.sort_unstable_by_key(|p| p.0);
-        indices = pairs.iter().map(|p| p.0).collect();
-        values = pairs.iter().map(|p| p.1).collect();
+        out.clear();
+        for (i, v) in pairs {
+            out.push(i, v);
+        }
     }
-    Selection { sparse: SparseTensor::new(indices, values), threshold: sel.threshold }
+    threshold
+}
+
+/// `compact` into a reused buffer (sign-dispatched).
+fn compact_into(x: &[f32], thr: f32, sign: Option<f32>, out: &mut SparseTensor) {
+    match sign {
+        None => SparseTensor::compact_above_into(x, thr, out),
+        Some(s) => SparseTensor::compact_above_signed_into(x, thr, s, out),
+    }
 }
 
 /// Algorithm 3: threshold binary search.  Bisects `ratio ∈ [0, 1]` over
@@ -217,23 +327,42 @@ pub fn threshold_binary_search(
     p: BinarySearchParams,
     sign: Option<f32>,
 ) -> Selection {
+    let mut s = SelectScratch::default();
+    let threshold = threshold_binary_search_into(x, k, p, sign, &mut s);
+    Selection { sparse: s.take_selected(), threshold }
+}
+
+/// [`threshold_binary_search`] over reusable scratch: result in
+/// [`SelectScratch::selected`], returns the threshold.
+pub fn threshold_binary_search_into(
+    x: &[f32],
+    k: usize,
+    p: BinarySearchParams,
+    sign: Option<f32>,
+    s: &mut SelectScratch,
+) -> f32 {
     let n = x.len();
     if k == 0 || n == 0 {
-        return Selection { sparse: SparseTensor::default(), threshold: f32::INFINITY };
+        s.out.clear();
+        return f32::INFINITY;
     }
+    let SelectScratch { idx, keys, ladder, counts, out, .. } = s;
     if k >= n {
-        return exact_topk(x, k, sign);
+        return exact_topk_core(x, k, sign, idx, out);
     }
     // Fast path (§Perf): sample-guided threshold estimation — candidate
     // thresholds from the strided sample at ranks spanning (k, 2k), all
     // verified with ONE sparse counting pass; take the highest whose
     // exact count lands in [k, 2k].
-    if let Some(sel) = sample_guided_threshold(x, k, sign) {
-        return sel;
+    if let Some((thr, cnt)) = sample_guided_threshold(x, k, sign, keys, counts) {
+        compact_into(x, thr, sign, out);
+        debug_assert_eq!(out.len(), cnt);
+        return thr;
     }
     let (mean, max) = key_stats(x, sign);
     if max == 0.0 {
-        return Selection { sparse: SparseTensor::default(), threshold: 0.0 };
+        out.clear();
+        return 0.0;
     }
     // Fallback: J-way bisection — each counting pass probes `p.probes`
     // interior ratios at once, shrinking the bracket by (probes+1)x per
@@ -248,13 +377,12 @@ pub fn threshold_binary_search(
     'outer: while r - l > p.eps && passes * probes < p.max_iters {
         passes += 1;
         // descending thresholds = ascending ratios reversed
-        let ladder: Vec<f32> = (0..probes)
-            .map(|i| {
-                let ratio = r - (r - l) * (i + 1) as f32 / (probes + 1) as f32;
-                mean + ratio * (max - mean)
-            })
-            .collect();
-        let counts = crate::tensor::count_above_multi(x, &ladder, sign);
+        ladder.clear();
+        ladder.extend((0..probes).map(|i| {
+            let ratio = r - (r - l) * (i + 1) as f32 / (probes + 1) as f32;
+            mean + ratio * (max - mean)
+        }));
+        crate::tensor::count_above_multi_into(x, ladder, sign, counts);
         for (i, &c) in counts.iter().enumerate() {
             if c >= k && c <= 2 * k {
                 thr = ladder[i];
@@ -288,26 +416,33 @@ pub fn threshold_binary_search(
         let thr_low = mean + l * (max - mean);
         thr = if count(x, thr_low, sign) >= k { thr_low } else { mean };
     }
-    let sparse = compact(x, thr, sign);
-    if sparse.is_empty() {
+    compact_into(x, thr, sign, out);
+    if out.is_empty() {
         // pathological (e.g. all values equal mean=max): fall back
-        return exact_topk(x, k, sign);
+        return exact_topk_core(x, k, sign, idx, out);
     }
-    Selection { sparse, threshold: thr }
+    thr
 }
 
 /// Sample-guided Alg. 3 fast path: estimate J candidate thresholds at
 /// sample ranks spanning (k, 2k), verify all of them exactly in one
-/// sparse counting pass, return the compaction at the best one.  `None`
-/// when k is too small for reliable sampling or no candidate lands in
-/// [k, 2k] (heavy ties) — the caller bisects instead.
-fn sample_guided_threshold(x: &[f32], k: usize, sign: Option<f32>) -> Option<Selection> {
+/// sparse counting pass, return the best `(threshold, exact count)`.
+/// `None` when k is too small for reliable sampling or no candidate
+/// lands in [k, 2k] (heavy ties) — the caller bisects instead.  `keys`
+/// and `counts` are reused scratch.
+fn sample_guided_threshold(
+    x: &[f32],
+    k: usize,
+    sign: Option<f32>,
+    keys: &mut Vec<f32>,
+    counts: &mut Vec<usize>,
+) -> Option<(f32, usize)> {
     let n = x.len();
     if k < 64 || n < 8_192 {
         return None;
     }
     let stride = sample_stride(n, k);
-    let mut keys = sample_keys(x, stride, sign);
+    sample_keys_into(x, stride, sign, keys);
     let m = keys.len();
     // top (2.4k/stride) sample keys, sorted descending: rank r in this
     // prefix estimates a threshold with ~r·stride true survivors
@@ -316,7 +451,8 @@ fn sample_guided_threshold(x: &[f32], k: usize, sign: Option<f32>) -> Option<Sel
     keys.truncate(prefix + 1);
     keys.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
     const J: usize = 8;
-    let mut thrs = Vec::with_capacity(J);
+    let mut thrs = [0f32; J];
+    let mut nt = 0;
     for i in 0..J {
         // expected counts from ~1.1k up to ~1.9k
         let target = (1.1 + 0.8 * i as f64 / (J - 1) as f64) * k as f64;
@@ -325,19 +461,17 @@ fn sample_guided_threshold(x: &[f32], k: usize, sign: Option<f32>) -> Option<Sel
         if t <= 0.0 {
             break;
         }
-        if thrs.last() != Some(&t) {
-            thrs.push(t);
+        if nt == 0 || thrs[nt - 1] != t {
+            thrs[nt] = t;
+            nt += 1;
         }
     }
-    if thrs.is_empty() {
+    if nt == 0 {
         return None;
     }
-    let counts = crate::tensor::count_above_multi_sparse(x, &thrs, sign);
+    crate::tensor::count_above_multi_sparse_into(x, &thrs[..nt], sign, counts);
     let pick = counts.iter().position(|&c| c >= k && c <= 2 * k)?;
-    let thr = thrs[pick];
-    let sparse = compact(x, thr, sign);
-    debug_assert_eq!(sparse.len(), counts[pick]);
-    Some(Selection { sparse, threshold: thr })
+    Some((thrs[pick], counts[pick]))
 }
 
 /// §5.2.2 sampled-threshold optimization: run the binary search only every

@@ -154,6 +154,11 @@ pub struct TrainConfig {
     pub pipeline: bool,
     /// Pipelined engine: max buckets in flight at once (>= 1).
     pub inflight: usize,
+    /// Record the per-layer mask/select/pack phase split inside
+    /// `produce` (the Fig. 10 decomposition).  Off = zero clock reads on
+    /// the produce hot path, for models whose micro-layers would
+    /// otherwise be dominated by timer overhead.
+    pub phase_timing: bool,
     /// Fabric carrying the synchronization traffic.
     pub transport: TransportKind,
     /// This process's rank (TCP transport only; `launch` sets it per
@@ -195,6 +200,7 @@ impl Default for TrainConfig {
             fusion_cap_elems: 0,
             pipeline: false,
             inflight: 2,
+            phase_timing: true,
             transport: TransportKind::Local,
             rank: 0,
             rendezvous: "127.0.0.1:29500".into(),
@@ -336,6 +342,11 @@ impl TrainConfig {
                     .ok_or_else(|| ConfigError::Invalid("pipeline: expected bool".into()))?
             }
             "inflight" => self.inflight = as_usize()?,
+            "phase_timing" => {
+                self.phase_timing = val
+                    .as_bool()
+                    .ok_or_else(|| ConfigError::Invalid("phase_timing: expected bool".into()))?
+            }
             "transport" => self.transport = parse_transport(as_str()?)?,
             "rank" => self.rank = as_usize()?,
             "rendezvous" => self.rendezvous = as_str()?.to_string(),
@@ -396,6 +407,7 @@ impl TrainConfig {
             ("fusion_cap_elems", json::num(self.fusion_cap_elems as f64)),
             ("pipeline", Value::Bool(self.pipeline)),
             ("inflight", json::num(self.inflight as f64)),
+            ("phase_timing", Value::Bool(self.phase_timing)),
             ("transport", json::s(self.transport.label())),
             ("rank", json::num(self.rank as f64)),
             ("rendezvous", json::s(self.rendezvous.clone())),
@@ -575,6 +587,15 @@ mod tests {
         assert!(cfg.validate().is_err(), "comm pool cannot drive device selection");
         cfg.pipeline = false;
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn phase_timing_knob_applies() {
+        let mut cfg = TrainConfig::default();
+        assert!(cfg.phase_timing, "Fig. 10 phase split records by default");
+        cfg.apply_overrides(&["phase_timing=false".into()]).unwrap();
+        assert!(!cfg.phase_timing);
+        assert!(cfg.apply_overrides(&["phase_timing=7".into()]).is_err());
     }
 
     #[test]

@@ -14,8 +14,8 @@
 use super::metrics::{param_hash, phase, WorkerResult};
 use crate::collectives::group::{Algo, Topology};
 use crate::collectives::mux::{TagChannel, TagMux};
-use crate::collectives::{allreduce_mean, Transport};
-use crate::compression::message::{unpack_plain, unpack_quant};
+use crate::collectives::{allreduce_mean, Gathered, Transport};
+use crate::compression::message::{view_plain, view_quant};
 use crate::compression::{CompressorConfig, Method};
 use crate::config::{AlgoMode, TrainConfig};
 use crate::costmodel;
@@ -200,7 +200,8 @@ pub fn run_worker<T: Transport + Sync>(
         }
     }
     let n_buckets = buckets.len();
-    let cc = CompressorConfig { density: cfg.density, ..Default::default() };
+    let cc =
+        CompressorConfig { density: cfg.density, timing: cfg.phase_timing, ..Default::default() };
 
     // Engine + the loop's own comm handle.  Sequential keeps the raw
     // endpoint (bit- and byte-identical to the historical schedule);
@@ -385,6 +386,8 @@ fn build_plans(cfg: &TrainConfig, schema: &ModelSchema) -> Vec<LayerPlan> {
 
 /// Count the distinct indices each layer of a fusion bucket received
 /// across all ranks' blobs, using (and clearing) the `seen` scratch.
+/// Messages are parsed in place ([`view_plain`]/[`view_quant`]) straight
+/// out of the gather buffer — the walk copies nothing.
 ///
 /// A malformed blob is an error: the old code skipped bad messages
 /// *without* advancing that rank's cursor, silently desynchronizing
@@ -392,35 +395,31 @@ fn build_plans(cfg: &TrainConfig, schema: &ModelSchema) -> Vec<LayerPlan> {
 /// per-layer message headers are consumed exactly once per layer per
 /// rank — the bucket's framing overhead is never counted as indices.
 fn count_union_fused(
-    gathered: &[Vec<u32>],
+    gathered: &Gathered,
     layers: &[(usize, bool)],
     seen: &mut [bool],
 ) -> Result<usize, String> {
-    let mut cursors = vec![0usize; gathered.len()];
+    let mut cursors = vec![0usize; gathered.n_ranks()];
     let mut total = 0usize;
     for &(li, quantized) in layers {
         let mut marked: Vec<u32> = Vec::new();
-        for (r, blob) in gathered.iter().enumerate() {
-            if quantized {
-                let (q, used) = unpack_quant(&blob[cursors[r]..])
+        for (r, blob) in gathered.blocks().enumerate() {
+            let indices: &[u32] = if quantized {
+                let (q, used) = view_quant(&blob[cursors[r]..])
                     .map_err(|e| format!("union count: rank {r} layer {li}: {e}"))?;
-                for &i in &q.indices {
-                    if !seen[i as usize] {
-                        seen[i as usize] = true;
-                        marked.push(i);
-                    }
-                }
                 cursors[r] += used;
+                q.indices
             } else {
-                let (s, used) = unpack_plain(&blob[cursors[r]..])
+                let (s, used) = view_plain(&blob[cursors[r]..])
                     .map_err(|e| format!("union count: rank {r} layer {li}: {e}"))?;
-                for &i in &s.indices {
-                    if !seen[i as usize] {
-                        seen[i as usize] = true;
-                        marked.push(i);
-                    }
-                }
                 cursors[r] += used;
+                s.indices
+            };
+            for &i in indices {
+                if !seen[i as usize] {
+                    seen[i as usize] = true;
+                    marked.push(i);
+                }
             }
         }
         total += marked.len();
@@ -479,12 +478,13 @@ mod tests {
     fn union_counts_distinct_indices_per_layer() {
         let layers = vec![(0usize, false), (1usize, true)];
         let mut seen = vec![false; 16];
-        let n = count_union_fused(&gathered_pair(), &layers, &mut seen).unwrap();
+        let g = Gathered::from_parts(&gathered_pair());
+        let n = count_union_fused(&g, &layers, &mut seen).unwrap();
         // plain layer: {0,2,4} ∪ {2,6} = 4; quant layer: {1,3} ∪ {3,5,7} = 4
         assert_eq!(n, 8);
         assert!(seen.iter().all(|&s| !s), "scratch must be cleared");
         // counting twice gives the same answer (scratch reuse)
-        let n2 = count_union_fused(&gathered_pair(), &layers, &mut seen).unwrap();
+        let n2 = count_union_fused(&g, &layers, &mut seen).unwrap();
         assert_eq!(n2, 8);
     }
 
@@ -497,7 +497,8 @@ mod tests {
         gathered[1].truncate(cut);
         let layers = vec![(0usize, false), (1usize, true)];
         let mut seen = vec![false; 16];
-        let err = count_union_fused(&gathered, &layers, &mut seen).unwrap_err();
+        let err =
+            count_union_fused(&Gathered::from_parts(&gathered), &layers, &mut seen).unwrap_err();
         assert!(err.contains("rank 1"), "{err}");
     }
 
@@ -510,7 +511,7 @@ mod tests {
         blob.extend(pack_plain(&SparseTensor::new(vec![9], vec![3.0])));
         let layers = vec![(0usize, false), (1usize, false)];
         let mut seen = vec![false; 16];
-        let n = count_union_fused(&[blob], &layers, &mut seen).unwrap();
+        let n = count_union_fused(&Gathered::from_parts(&[blob]), &layers, &mut seen).unwrap();
         assert_eq!(n, 3, "layer 0 has {{1, 9}}, layer 1 has {{9}}");
     }
 }

@@ -52,9 +52,32 @@ pub fn write_frame<W: Write>(w: &mut W, msg: &[u32]) -> io::Result<()> {
     w.write_all(&encode_frame(msg))
 }
 
+/// [`write_frame`] staging through a reused encode buffer (cleared
+/// first) — the steady-state form the fabric's writer threads drive so
+/// framing stops allocating per message (buffers recycle through
+/// [`super::pool::BytePool`]).
+pub fn write_frame_with<W: Write>(w: &mut W, msg: &[u32], scratch: &mut Vec<u8>) -> io::Result<()> {
+    check_send_len(msg.len())?;
+    scratch.clear();
+    scratch.reserve(4 + msg.len() * 4);
+    scratch.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+    for &word in msg {
+        scratch.extend_from_slice(&word.to_le_bytes());
+    }
+    w.write_all(scratch)
+}
+
 /// Read one frame.  Returns `Ok(None)` on a clean EOF *between* frames
 /// (the peer shut down its write half); a mid-frame EOF is an error.
 pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Vec<u32>>> {
+    let mut scratch = Vec::new();
+    read_frame_with(r, &mut scratch)
+}
+
+/// [`read_frame`] staging the payload bytes through a reused buffer —
+/// only the decoded `Vec<u32>` handed to the inbox is allocated per
+/// message.
+pub fn read_frame_with<R: Read>(r: &mut R, scratch: &mut Vec<u8>) -> io::Result<Option<Vec<u32>>> {
     let mut header = [0u8; 4];
     // Distinguish "no more frames" from "truncated frame": only a zero-
     // byte first read counts as a clean close.
@@ -80,9 +103,10 @@ pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Vec<u32>>> {
             format!("frame of {words} words exceeds cap {MAX_FRAME_WORDS}"),
         ));
     }
-    let mut payload = vec![0u8; words * 4];
-    r.read_exact(&mut payload)?;
-    let msg = payload
+    scratch.clear();
+    scratch.resize(words * 4, 0);
+    r.read_exact(scratch)?;
+    let msg = scratch
         .chunks_exact(4)
         .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect();
@@ -150,6 +174,22 @@ mod tests {
         assert!(check_send_len(MAX_FRAME_WORDS).is_ok());
         let err = check_send_len(MAX_FRAME_WORDS + 1).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+    }
+
+    #[test]
+    fn scratch_variants_match_the_plain_ones() {
+        let mut scratch = Vec::new();
+        let mut wire_a = Vec::new();
+        let mut wire_b = Vec::new();
+        for msg in [vec![], vec![7u32], vec![0, u32::MAX, 0xDEAD_BEEF]] {
+            wire_a.clear();
+            wire_b.clear();
+            write_frame(&mut wire_a, &msg).unwrap();
+            write_frame_with(&mut wire_b, &msg, &mut scratch).unwrap();
+            assert_eq!(wire_a, wire_b, "scratch encoding must be byte-identical");
+            let got = read_frame_with(&mut Cursor::new(&wire_b), &mut scratch).unwrap().unwrap();
+            assert_eq!(got, msg);
+        }
     }
 
     #[test]

@@ -24,8 +24,10 @@
 //! runs a single rank by hand (see `main.rs`).
 
 pub mod frame;
+pub mod pool;
 pub mod tcp;
 
+pub use pool::BytePool;
 pub use tcp::{TcpOptions, TcpTransport};
 
 /// Pick a free loopback `ip:port` by binding port 0 and releasing it.

@@ -1,0 +1,88 @@
+//! Tiny free-list buffer pool for the TCP fabric's framing scratch.
+//!
+//! Every frame crossing a socket needs a byte staging buffer — encode on
+//! the writer side, payload read on the reader side.  Allocating those
+//! per message made steady-state framing O(messages) heap churn; the
+//! per-message reuse now lives in `frame::{read,write}_frame_with`,
+//! which each writer/reader thread drives with ONE long-lived buffer.
+//! The pool is the checkout desk for those buffers: a thread takes its
+//! scratch here at spawn and returns it on exit, so buffer capacity
+//! survives thread turnover (future reconnect/re-peer paths) instead of
+//! dying with each thread (DESIGN.md §Zero-Copy-Hot-Path).
+
+use std::sync::Mutex;
+
+/// Capacity cap (bytes) above which a returned buffer is dropped instead
+/// of pooled — one multi-GB gather must not pin its footprint forever.
+const MAX_POOLED_BYTES: usize = 8 << 20;
+
+/// A small LIFO free list of byte buffers, shared by a fabric's writer
+/// and reader threads.
+pub struct BytePool {
+    free: Mutex<Vec<Vec<u8>>>,
+    max_buffers: usize,
+}
+
+impl BytePool {
+    /// Pool retaining at most `max_buffers` buffers.
+    pub fn new(max_buffers: usize) -> BytePool {
+        BytePool { free: Mutex::new(Vec::new()), max_buffers }
+    }
+
+    /// Take a cleared buffer (fresh if the pool is empty).
+    pub fn get(&self) -> Vec<u8> {
+        self.free.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Return a buffer for reuse; oversized or surplus buffers are freed.
+    pub fn put(&self, mut buf: Vec<u8>) {
+        if buf.capacity() > MAX_POOLED_BYTES {
+            return;
+        }
+        buf.clear();
+        let mut free = self.free.lock().unwrap();
+        if free.len() < self.max_buffers {
+            free.push(buf);
+        }
+    }
+
+    /// Buffers currently parked in the free list.
+    pub fn pooled(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_put_recycles_capacity() {
+        let pool = BytePool::new(2);
+        let mut b = pool.get();
+        assert!(b.is_empty());
+        b.extend_from_slice(&[1, 2, 3, 4]);
+        let cap = b.capacity();
+        pool.put(b);
+        assert_eq!(pool.pooled(), 1);
+        let b2 = pool.get();
+        assert!(b2.is_empty(), "returned buffers come back cleared");
+        assert_eq!(b2.capacity(), cap, "capacity survives the round trip");
+        assert_eq!(pool.pooled(), 0);
+    }
+
+    #[test]
+    fn pool_caps_buffer_count() {
+        let pool = BytePool::new(1);
+        pool.put(Vec::with_capacity(8));
+        pool.put(Vec::with_capacity(8));
+        assert_eq!(pool.pooled(), 1, "surplus buffers are dropped");
+    }
+
+    #[test]
+    fn oversized_buffers_are_not_pooled() {
+        let pool = BytePool::new(4);
+        pool.put(Vec::with_capacity(MAX_POOLED_BYTES + 1));
+        assert_eq!(pool.pooled(), 0);
+    }
+}

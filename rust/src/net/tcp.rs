@@ -43,8 +43,9 @@
 //! left to exit on the peer's `FIN` — joining them would make rank A's
 //! drop wait on rank B's, an avoidable shutdown barrier.
 
-use super::frame::{read_frame, write_frame};
-use crate::collectives::transport::{TrafficStats, Transport, TransportError};
+use super::frame::{read_frame, read_frame_with, write_frame, write_frame_with};
+use super::pool::BytePool;
+use crate::collectives::transport::{Payload, TrafficStats, Transport, TransportError};
 use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{IpAddr, Ipv4Addr, Shutdown, SocketAddrV4, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -160,8 +161,8 @@ fn read_handshake(s: &mut TcpStream, deadline: Instant, what: &str) -> io::Resul
 pub struct TcpTransport {
     rank: usize,
     world: usize,
-    txs: Vec<Mutex<Sender<Vec<u32>>>>,
-    rxs: Vec<Mutex<Receiver<Vec<u32>>>>,
+    txs: Vec<Mutex<Sender<Payload>>>,
+    rxs: Vec<Mutex<Receiver<Payload>>>,
     /// Why each peer's reader thread exited, for `recv_checked` reports
     /// (set once, right before the inbox closes).
     causes: Vec<Arc<Mutex<Option<String>>>>,
@@ -201,6 +202,10 @@ impl TcpTransport {
         mut streams: Vec<Option<TcpStream>>,
     ) -> TcpTransport {
         let stats = Arc::new(TrafficStats::default());
+        // Framing scratch recycles through a shared free list: one
+        // buffer per writer/reader thread for its lifetime, returned on
+        // exit — steady-state framing never allocates staging bytes.
+        let pool = Arc::new(BytePool::new(2 * world.max(1)));
         let mut txs = Vec::with_capacity(world);
         let mut rxs = Vec::with_capacity(world);
         let mut causes = Vec::with_capacity(world);
@@ -210,7 +215,7 @@ impl TcpTransport {
             causes.push(Arc::clone(&cause));
             if peer == rank {
                 // self-channel: in-memory, like LocalFabric's self pair
-                let (tx, rx) = channel();
+                let (tx, rx) = channel::<Payload>();
                 txs.push(Mutex::new(tx));
                 rxs.push(Mutex::new(rx));
                 continue;
@@ -219,45 +224,51 @@ impl TcpTransport {
             let _ = stream.set_nodelay(true);
             let reader_stream = stream.try_clone().expect("tcp stream clone");
 
-            let (tx, writer_rx) = channel::<Vec<u32>>();
+            let (tx, writer_rx) = channel::<Payload>();
+            let writer_pool = Arc::clone(&pool);
             let writer = thread::Builder::new()
                 .name(format!("redsync-net-w{rank}-{peer}"))
                 .spawn(move || {
                     let mut w = BufWriter::new(stream);
+                    let mut scratch = writer_pool.get();
                     for msg in writer_rx {
-                        let mut res = write_frame(&mut w, &msg);
+                        let mut res = write_frame_with(&mut w, msg.as_slice(), &mut scratch);
                         if res.is_ok() {
                             res = w.flush();
                         }
                         if let Err(e) = res {
                             // recv side raises the panic; keep the cause
                             crate::log_warn!("rank {rank}: send to rank {peer} failed: {e}");
+                            writer_pool.put(scratch);
                             return;
                         }
                     }
                     // channel closed: graceful shutdown — flush + FIN
                     let _ = w.flush();
                     let _ = w.get_ref().shutdown(Shutdown::Write);
+                    writer_pool.put(scratch);
                 })
                 .expect("spawn writer thread");
 
-            let (inbox_tx, inbox_rx) = channel::<Vec<u32>>();
+            let (inbox_tx, inbox_rx) = channel::<Payload>();
+            let reader_pool = Arc::clone(&pool);
             thread::Builder::new()
                 .name(format!("redsync-net-r{rank}-{peer}"))
                 .spawn(move || {
                     let mut r = BufReader::new(reader_stream);
+                    let mut scratch = reader_pool.get();
                     loop {
-                        match read_frame(&mut r) {
+                        match read_frame_with(&mut r, &mut scratch) {
                             Ok(Some(msg)) => {
-                                if inbox_tx.send(msg).is_err() {
-                                    return; // transport dropped
+                                if inbox_tx.send(Payload::Owned(msg)).is_err() {
+                                    break; // transport dropped
                                 }
                             }
                             // clean FIN: the peer shut down between frames
                             Ok(None) => {
                                 *cause.lock().unwrap() =
                                     Some("connection closed by peer".into());
-                                return;
+                                break;
                             }
                             // mid-frame EOF (peer crash), corrupt or
                             // oversized frame: distinct from clean
@@ -268,10 +279,11 @@ impl TcpTransport {
                                     "rank {rank}: recv stream from rank {peer} broke: {e}"
                                 );
                                 *cause.lock().unwrap() = Some(format!("stream broke: {e}"));
-                                return;
+                                break;
                             }
                         }
                     }
+                    reader_pool.put(scratch);
                 })
                 .expect("spawn reader thread");
 
@@ -392,12 +404,25 @@ impl Transport for TcpTransport {
         self.txs[to]
             .lock()
             .unwrap()
-            .send(msg)
+            .send(Payload::Owned(msg))
+            .unwrap_or_else(|_| panic!("rank {}: connection to rank {to} closed", self.rank));
+    }
+
+    fn send_shared(&self, to: usize, msg: &Arc<Vec<u32>>) {
+        use std::sync::atomic::Ordering;
+        self.stats.messages.fetch_add(1, Ordering::Relaxed);
+        self.stats.words.fetch_add(msg.len() as u64, Ordering::Relaxed);
+        // the writer thread encodes straight from the shared buffer —
+        // the broadcast sender clones nothing
+        self.txs[to]
+            .lock()
+            .unwrap()
+            .send(Payload::Shared(Arc::clone(msg)))
             .unwrap_or_else(|_| panic!("rank {}: connection to rank {to} closed", self.rank));
     }
 
     fn recv_checked(&self, from: usize) -> Result<Vec<u32>, TransportError> {
-        self.rxs[from].lock().unwrap().recv().map_err(|_| {
+        self.rxs[from].lock().unwrap().recv().map(Payload::into_vec).map_err(|_| {
             let reason = self.causes[from]
                 .lock()
                 .unwrap()
@@ -485,6 +510,21 @@ mod tests {
         t.send(0, vec![7]);
         assert_eq!(t.recv(0), vec![7]);
         assert_eq!(t.exchange(0, vec![8]), vec![8]);
+    }
+
+    #[test]
+    fn send_shared_crosses_the_wire_like_send() {
+        use std::sync::Arc;
+        let addr = free_loopback_addr();
+        let (h0, t1) = pair(&addr);
+        let t0 = h0.join().unwrap();
+        let blob = Arc::new(vec![1u32, 2, 3, 4]);
+        t1.send_shared(0, &blob);
+        assert_eq!(t0.recv(1), vec![1, 2, 3, 4]);
+        // accounting identical to an owned send; sender copy untouched
+        assert_eq!(t1.stats.message_count(), 1);
+        assert_eq!(t1.stats.bytes(), 16);
+        assert_eq!(*blob, vec![1, 2, 3, 4]);
     }
 
     #[test]

@@ -12,13 +12,12 @@
 
 use crate::collectives::group::Algo;
 use crate::collectives::FusionPlan;
-use crate::compression::message::{pack_plain, pack_quant};
+use crate::compression::message::{pack_plain_into, pack_quant_into};
 use crate::compression::{
-    exact_topk, threshold_binary_search, trimmed_topk, Accumulation, CompressorConfig, Method,
-    QuantizedSet, ResidualState, SignAlternator,
+    exact_topk_into, threshold_binary_search_into, trimmed_topk_into, Accumulation,
+    CompressorConfig, Method, ResidualState, SelectScratch, SignAlternator,
 };
 use crate::runtime::DeviceSelector;
-use crate::tensor::SparseTensor;
 use std::time::Instant;
 
 /// Static description of one compressed layer (everything `produce`
@@ -48,7 +47,11 @@ pub struct BucketLayer {
 }
 
 /// One fusion bucket's compressor state; owned by a sync engine and, in
-/// the pipelined engine, moved into the in-flight task.
+/// the pipelined engine, moved into the in-flight task.  Carries the
+/// bucket's persistent scratch: the wire blob `produce` packs in place
+/// and the selection buffers its layers share — after warm-up a
+/// steady-state `produce` allocates nothing (pinned by
+/// `tests/alloc_steady.rs`).
 pub struct BucketState {
     pub(crate) layers: Vec<BucketLayer>,
     /// Collective algorithm the plan chose for this bucket (flat sparse
@@ -56,12 +59,19 @@ pub struct BucketState {
     /// never `Dense`, dense-picked buckets are demoted before the
     /// engine sees them).
     algo: Algo,
+    /// Persistent wire blob: cleared and repacked in place each step;
+    /// the collective borrows it (`Communicator::allgather` takes
+    /// `&[u32]`), so its capacity survives across steps.
+    blob: Vec<u32>,
+    /// Reusable selection scratch, shared by the bucket's layers (they
+    /// select serially inside `produce`).
+    scratch: SelectScratch,
 }
 
-/// What `produce` hands to the collective: the packed bucket blob plus
-/// the per-phase seconds the engines merge into the worker's timer.
+/// What one `produce` yields besides the packed blob (readable via
+/// [`BucketState::blob`] afterwards): selection totals plus the
+/// per-phase seconds the engines merge into the worker's timer.
 pub struct Produced {
-    pub blob: Vec<u32>,
     /// Elements this rank selected across the bucket's layers.
     pub selected: usize,
     /// Total elements across the bucket's layers.
@@ -69,6 +79,31 @@ pub struct Produced {
     pub mask_secs: f64,
     pub select_secs: f64,
     pub pack_secs: f64,
+}
+
+/// Cheap per-phase stopwatch for the produce loop: one `lap()` per phase
+/// boundary instead of paired `Instant::now()` calls, and a disabled
+/// clock (`CompressorConfig::timing = false`) never touches the OS timer
+/// — so micro-layer buckets aren't dominated by clock reads.
+struct PhaseClock(Option<Instant>);
+
+impl PhaseClock {
+    fn start(enabled: bool) -> PhaseClock {
+        PhaseClock(enabled.then(Instant::now))
+    }
+
+    /// Seconds since the previous lap (0 when disabled).
+    fn lap(&mut self) -> f64 {
+        match &mut self.0 {
+            Some(last) => {
+                let now = Instant::now();
+                let d = now.duration_since(*last).as_secs_f64();
+                *last = now;
+                d
+            }
+            None => 0.0,
+        }
+    }
 }
 
 /// Group compressed-layer specs (already in backward order) into fusion
@@ -105,6 +140,8 @@ pub fn build_buckets(
                 })
                 .collect(),
             algo: Algo::Sparse,
+            blob: Vec::new(),
+            scratch: SelectScratch::new(),
         })
         .collect()
 }
@@ -136,13 +173,22 @@ impl BucketState {
         self.algo = algo;
     }
 
+    /// The packed wire blob of the last [`produce`](Self::produce) —
+    /// what the engines hand (borrowed) to the bucket's collective.
+    pub fn blob(&self) -> &[u32] {
+        &self.blob
+    }
+
     /// The GPU-side half of Alg. 4 for this bucket: accumulate → select
-    /// → mask → pack each layer in order, into one allgather blob.
-    /// `grads[i]` is this step's gradient for `layers[i]` (same order).
+    /// → mask → pack each layer in order, into the bucket's persistent
+    /// allgather blob ([`blob`](Self::blob)).  `grads[i]` is this step's
+    /// gradient for `layers[i]` (same order).
     ///
     /// Pure given (state, grads, density): the produced blob is identical
     /// no matter which thread runs it — the pipelined engine's
-    /// determinism rests here.
+    /// determinism rests here.  Selection and packing run entirely in
+    /// the bucket's reusable scratch: zero heap allocation once the
+    /// buffers are warm.
     pub fn produce(
         &mut self,
         grads: &[&[f32]],
@@ -151,21 +197,16 @@ impl BucketState {
         device: Option<&DeviceSelector>,
     ) -> Result<Produced, String> {
         assert_eq!(grads.len(), self.layers.len(), "one gradient per bucket layer");
-        let mut out = Produced {
-            blob: Vec::new(),
-            selected: 0,
-            elems: 0,
-            mask_secs: 0.0,
-            select_secs: 0.0,
-            pack_secs: 0.0,
-        };
+        self.blob.clear();
+        let mut out =
+            Produced { selected: 0, elems: 0, mask_secs: 0.0, select_secs: 0.0, pack_secs: 0.0 };
+        let mut clock = PhaseClock::start(cc.timing);
         for (layer, grad) in self.layers.iter_mut().zip(grads) {
             let n = layer.spec.n;
             debug_assert_eq!(grad.len(), n);
 
             // momentum correction (Alg. 4 lines 11-19): via the fused L1
             // kernel on the device path, host otherwise
-            let t0 = Instant::now();
             let dev_accum = device.filter(|d| d.ops.has_momentum_accum()).map(|d| &d.ops);
             if let Some(ops) = dev_accum {
                 let (momentum, nesterov) = match layer.residual.accumulation {
@@ -186,47 +227,50 @@ impl BucketState {
             } else {
                 layer.residual.accumulate(grad);
             }
-            out.mask_secs += t0.elapsed().as_secs_f64();
+            out.mask_secs += clock.lap();
 
             let k = k_for(n, density);
             let sign =
                 if layer.spec.quantize { Some(layer.alternator.next_sign()) } else { None };
-            let t1 = Instant::now();
-            let sel = layer.select(device, k, sign, cc)?;
-            out.select_secs += t1.elapsed().as_secs_f64();
+            layer.select_into(device, k, sign, cc, &mut self.scratch)?;
+            out.select_secs += clock.lap();
 
-            let t2 = Instant::now();
-            layer.residual.mask(&sel);
-            out.mask_secs += t2.elapsed().as_secs_f64();
+            let sel = self.scratch.selected();
+            layer.residual.mask(sel);
+            out.mask_secs += clock.lap();
             out.selected += sel.len();
             out.elems += n;
 
-            let t3 = Instant::now();
             if layer.spec.quantize {
-                out.blob.extend(pack_quant(&QuantizedSet::from_sparse(&sel)));
+                // same-sign mean quantization (§5.2.3), packed without
+                // materializing a QuantizedSet
+                let mean = if sel.is_empty() { 0.0 } else { sel.value_sum() / sel.len() as f32 };
+                pack_quant_into(&sel.indices, mean, &mut self.blob);
             } else {
-                out.blob.extend(pack_plain(&sel));
+                pack_plain_into(sel, &mut self.blob);
             }
-            out.pack_secs += t3.elapsed().as_secs_f64();
+            out.pack_secs += clock.lap();
         }
         Ok(out)
     }
 }
 
 impl BucketLayer {
-    /// Communication-set selection, host or device flavor (moved from
-    /// the pre-engine `run_worker`, math unchanged).
-    fn select(
+    /// Communication-set selection into the bucket's reusable scratch
+    /// (result in [`SelectScratch::selected`]), host or device flavor
+    /// (moved from the pre-engine `run_worker`, math unchanged).
+    fn select_into(
         &mut self,
         device: Option<&DeviceSelector>,
         k: usize,
         sign: Option<f32>,
         cc: &CompressorConfig,
-    ) -> Result<SparseTensor, String> {
+        scratch: &mut SelectScratch,
+    ) -> Result<(), String> {
         let residual = &mut self.residual;
 
         if let Some(dev) = device {
-            // L1-kernel path
+            // L1-kernel path (device buffers are owned per call)
             let d = match self.spec.method {
                 Method::TrimmedTopk | Method::ExactTopk => {
                     dev.trimmed_topk(residual.residual(), k, cc.trim_eps, sign)
@@ -241,39 +285,44 @@ impl BucketLayer {
                 Method::Dense => unreachable!("dense layers never select"),
             }
             .map_err(|e| format!("device select: {e}"))?;
-            return Ok(d.sparse);
+            scratch.put(d.sparse);
+            return Ok(());
         }
 
         // host path (per-step density, bucket-owned threshold cache)
         let v = residual.residual();
-        let sel = match self.spec.method {
-            Method::ExactTopk => exact_topk(v, k, sign),
-            Method::TrimmedTopk => trimmed_topk(v, k, cc.trim_eps, sign),
+        match self.spec.method {
+            Method::ExactTopk => {
+                exact_topk_into(v, k, sign, scratch);
+            }
+            Method::TrimmedTopk => {
+                trimmed_topk_into(v, k, cc.trim_eps, sign, scratch);
+            }
             Method::SampledBinarySearch => {
                 // §6.4: threshold reuse is incompatible with sign alternation
                 if sign.is_none() {
                     if let Some((thr, age)) = self.cached_thr {
                         if age < cc.interval {
-                            let s = SparseTensor::compact_above(v, thr);
+                            scratch.compact_above(v, thr);
                             // cache is valid unless the residual drifted far
                             // from the threshold (the paper's re-select rule)
-                            if !s.is_empty() && s.len() <= 4 * k {
+                            let len = scratch.selected().len();
+                            if len > 0 && len <= 4 * k {
                                 self.cached_thr = Some((thr, age + 1));
-                                return Ok(s);
+                                return Ok(());
                             }
                             // fall through to a fresh search
                         }
                     }
                 }
-                let sel = threshold_binary_search(v, k, cc.bs, sign);
+                let thr = threshold_binary_search_into(v, k, cc.bs, sign, scratch);
                 if sign.is_none() {
-                    self.cached_thr = Some((sel.threshold, 1));
+                    self.cached_thr = Some((thr, 1));
                 }
-                sel
             }
             Method::Dense => unreachable!(),
-        };
-        Ok(sel.sparse)
+        }
+        Ok(())
     }
 }
 
@@ -321,12 +370,17 @@ mod tests {
             .unwrap();
         assert_eq!(p.elems, 700);
         // blob = one plain message then one quantized message
-        let (s, used) = unpack_plain(&p.blob).unwrap();
+        let blob = buckets[0].blob();
+        let (s, used) = unpack_plain(blob).unwrap();
         assert_eq!(s.len(), 20, "ceil(400 * 0.05)");
-        let (q, used2) = unpack_quant(&p.blob[used..]).unwrap();
+        let (q, used2) = unpack_quant(&blob[used..]).unwrap();
         assert_eq!(q.len(), 15, "ceil(300 * 0.05)");
-        assert_eq!(used + used2, p.blob.len());
+        assert_eq!(used + used2, blob.len());
         assert_eq!(p.selected, 35);
+        // the persistent blob is repacked in place, not appended to
+        let len1 = buckets[0].blob().len();
+        buckets[0].produce(&[g0.as_slice(), g1.as_slice()], 0.05, &cc, None).unwrap();
+        assert_eq!(buckets[0].blob().len(), len1, "second produce must clear the blob first");
     }
 
     #[test]
@@ -338,10 +392,27 @@ mod tests {
         let mut a = build_buckets(&specs, 0, Accumulation::Momentum { momentum: 0.9 });
         let mut b = build_buckets(&specs, 0, Accumulation::Momentum { momentum: 0.9 });
         for _ in 0..3 {
-            let pa = a[0].produce(&[grad.as_slice()], 0.01, &cc, None).unwrap();
-            let pb = b[0].produce(&[grad.as_slice()], 0.01, &cc, None).unwrap();
-            assert_eq!(pa.blob, pb.blob, "same state + grads must pack the same bits");
+            a[0].produce(&[grad.as_slice()], 0.01, &cc, None).unwrap();
+            b[0].produce(&[grad.as_slice()], 0.01, &cc, None).unwrap();
+            assert_eq!(a[0].blob(), b[0].blob(), "same state + grads must pack the same bits");
         }
+    }
+
+    #[test]
+    fn timing_gate_zeroes_phase_seconds_without_changing_bits() {
+        let specs = vec![spec(0, 800, false)];
+        let mut g = Gen::new(5);
+        let grad = g.vec_normal(800, 1.0);
+        let timed = CompressorConfig::default();
+        let silent = CompressorConfig { timing: false, ..Default::default() };
+        let mut a = build_buckets(&specs, 0, Accumulation::Sgd);
+        let mut b = build_buckets(&specs, 0, Accumulation::Sgd);
+        let pa = a[0].produce(&[grad.as_slice()], 0.02, &timed, None).unwrap();
+        let pb = b[0].produce(&[grad.as_slice()], 0.02, &silent, None).unwrap();
+        assert_eq!(a[0].blob(), b[0].blob(), "the timing gate must not touch the math");
+        assert_eq!(pb.mask_secs + pb.select_secs + pb.pack_secs, 0.0, "disabled clock reads");
+        assert!(pa.select_secs >= 0.0);
+        assert_eq!((pa.selected, pa.elems), (pb.selected, pb.elems));
     }
 
     #[test]
@@ -351,10 +422,11 @@ mod tests {
         let mut g = Gen::new(11);
         let grad = g.vec_normal(500, 1.0);
         let cc = CompressorConfig::default();
-        let p1 = buckets[0].produce(&[grad.as_slice()], 0.02, &cc, None).unwrap();
-        let p2 = buckets[0].produce(&[grad.as_slice()], 0.02, &cc, None).unwrap();
-        let (q1, _) = unpack_quant(&p1.blob).unwrap();
-        let (q2, _) = unpack_quant(&p2.blob).unwrap();
+        buckets[0].produce(&[grad.as_slice()], 0.02, &cc, None).unwrap();
+        let blob1 = buckets[0].blob().to_vec();
+        buckets[0].produce(&[grad.as_slice()], 0.02, &cc, None).unwrap();
+        let (q1, _) = unpack_quant(&blob1).unwrap();
+        let (q2, _) = unpack_quant(buckets[0].blob()).unwrap();
         assert!(q1.mean > 0.0, "first pass selects top-k");
         assert!(q2.mean < 0.0, "second pass selects bottom-k");
     }

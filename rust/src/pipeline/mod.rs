@@ -62,7 +62,8 @@ pub use bucket::{build_buckets, BucketState, LayerSpec, Produced};
 pub use pipelined::Pipelined;
 pub use sequential::Sequential;
 
-use crate::compression::message::{unpack_plain, unpack_quant};
+use crate::collectives::Gathered;
+use crate::compression::message::{view_plain, view_quant};
 use crate::util::timer::PhaseTimer;
 
 /// Mux tag reserved for the training loop's own collectives (dense
@@ -79,8 +80,8 @@ pub struct BucketDone {
     /// (layer index, quantized) per layer, in packing order — everything
     /// the decompression walk needs.
     pub layers: Vec<(usize, bool)>,
-    /// Gathered per-rank blobs, indexed by rank.
-    pub gathered: Vec<Vec<u32>>,
+    /// Gathered per-rank blobs in one owned buffer, indexed by rank.
+    pub gathered: Gathered,
     /// Elements this rank selected across the bucket's layers.
     pub selected: usize,
     /// Total elements across the bucket's layers.
@@ -90,24 +91,27 @@ pub struct BucketDone {
 impl BucketDone {
     /// The §5.4 decompression walk: scatter-add every rank's gathered
     /// messages for this bucket into the parameter buffers, scaled by
-    /// `scale` (the worker passes `-lr / world`).  The single shared
-    /// implementation behind the worker, the determinism tests and the
-    /// smoke bench — so the bit-identical pin always covers the
-    /// production walk.
+    /// `scale` (the worker passes `-lr / world`).  Parses each message
+    /// *in place* (`view_plain`/`view_quant`) and scatters straight from
+    /// the gather buffer — zero heap traffic, float-op identical to the
+    /// historical owned-decode walk (pinned by the view-parity proptest
+    /// in `tests/proptests.rs`).  The single shared implementation
+    /// behind the worker, the determinism tests and the smoke bench —
+    /// so the bit-identical pin always covers the production walk.
     pub fn apply_to(&self, params: &mut [Vec<f32>], scale: f32) -> Result<(), String> {
-        for rank_blob in &self.gathered {
+        for rank_blob in self.gathered.blocks() {
             let mut off = 0usize;
             for &(li, quantized) in &self.layers {
                 if quantized {
-                    let (q, used) = unpack_quant(&rank_blob[off..])
+                    let (q, used) = view_quant(&rank_blob[off..])
                         .map_err(|e| format!("layer {li}: {e}"))?;
                     let add = q.mean * scale;
-                    for &i in &q.indices {
+                    for &i in q.indices {
                         params[li][i as usize] += add;
                     }
                     off += used;
                 } else {
-                    let (s, used) = unpack_plain(&rank_blob[off..])
+                    let (s, used) = view_plain(&rank_blob[off..])
                         .map_err(|e| format!("layer {li}: {e}"))?;
                     s.scatter_add(&mut params[li], scale);
                     off += used;

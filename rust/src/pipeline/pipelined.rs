@@ -30,7 +30,7 @@ use super::bucket::BucketState;
 use super::{BucketDone, SyncEngine, BUCKET_TAG_BASE};
 use crate::collectives::group::{Communicator, Topology};
 use crate::collectives::mux::{TagChannel, TagMux};
-use crate::collectives::Transport;
+use crate::collectives::{Gathered, Transport};
 use crate::compression::CompressorConfig;
 use crate::coordinator::metrics::phase;
 use crate::util::timer::PhaseTimer;
@@ -52,7 +52,7 @@ struct Task<'g> {
 /// What a pool worker hands back.
 struct TaskOut {
     state: BucketState,
-    gathered: Vec<Vec<u32>>,
+    gathered: Gathered,
     selected: usize,
     elems: usize,
     mask_secs: f64,
@@ -181,7 +181,9 @@ impl<T: Transport + Send + Sync> SyncEngine for Pipelined<T> {
                             );
                             let comm = Communicator::new(chan, topo);
                             let t0 = Instant::now();
-                            let gathered = comm.allgather(task.state.algo(), p.blob);
+                            // borrows the bucket's persistent blob; the
+                            // state (blob included) moves back afterwards
+                            let gathered = comm.allgather(task.state.algo(), task.state.blob());
                             Ok(TaskOut {
                                 state: task.state,
                                 gathered,

@@ -74,8 +74,9 @@ impl<T: Transport> SyncEngine for Sequential<'_, T> {
             timer.add(phase::SELECT, produced.select_secs);
             timer.add(phase::PACK, produced.pack_secs);
             let algo = state.algo();
+            // the collective borrows the bucket's persistent blob
             let gathered =
-                timer.time(phase::COMM_SPARSE, || self.comm.allgather(algo, produced.blob));
+                timer.time(phase::COMM_SPARSE, || self.comm.allgather(algo, state.blob()));
             apply(BucketDone {
                 bucket: b,
                 layers: state.specs().map(|s| (s.li, s.quantize)).collect(),

@@ -6,7 +6,7 @@
 
 pub mod sparse;
 
-pub use sparse::SparseTensor;
+pub use sparse::{SparseTensor, SparseView};
 
 /// Dense f32 tensor.
 #[derive(Clone, Debug, PartialEq)]
@@ -171,11 +171,20 @@ const CHUNK: usize = 4096;
 /// (vectorizable) predicate-count — J compares per element of compute,
 /// but only one pass of memory traffic.
 pub fn count_above_multi(x: &[f32], thrs: &[f32], sign: Option<f32>) -> Vec<usize> {
+    let mut counts = Vec::new();
+    count_above_multi_into(x, thrs, sign, &mut counts);
+    counts
+}
+
+/// [`count_above_multi`] into a reused output buffer (cleared first) —
+/// the allocation-free form the selection scratch drives.
+pub fn count_above_multi_into(x: &[f32], thrs: &[f32], sign: Option<f32>, counts: &mut Vec<usize>) {
+    counts.clear();
     let j = thrs.len();
     if j == 0 {
-        return Vec::new();
+        return;
     }
-    let mut counts = vec![0usize; j];
+    counts.resize(j, 0);
     match sign {
         None => {
             for chunk in x.chunks(CHUNK) {
@@ -197,7 +206,6 @@ pub fn count_above_multi(x: &[f32], thrs: &[f32], sign: Option<f32>) -> Vec<usiz
             }
         }
     }
-    counts
 }
 
 /// Sparse-regime variant of [`count_above_multi`]: `thrs` must be sorted
@@ -207,14 +215,28 @@ pub fn count_above_multi(x: &[f32], thrs: &[f32], sign: Option<f32>) -> Vec<usiz
 /// verification pass of the sample-guided selectors (§Perf); degrades
 /// badly when a large fraction qualifies (use the dense variant there).
 pub fn count_above_multi_sparse(x: &[f32], thrs: &[f32], sign: Option<f32>) -> Vec<usize> {
+    let mut hist = Vec::new();
+    count_above_multi_sparse_into(x, thrs, sign, &mut hist);
+    hist
+}
+
+/// [`count_above_multi_sparse`] into a reused output buffer (cleared
+/// first).
+pub fn count_above_multi_sparse_into(
+    x: &[f32],
+    thrs: &[f32],
+    sign: Option<f32>,
+    hist: &mut Vec<usize>,
+) {
+    hist.clear();
     let j = thrs.len();
     if j == 0 {
-        return Vec::new();
+        return;
     }
     debug_assert!(thrs.windows(2).all(|w| w[0] >= w[1]), "thresholds must descend");
     let tmin = thrs[j - 1];
     // hist[b]: elements with key in (thrs[b], thrs[b-1]] (b = 0: > thrs[0])
-    let mut hist = vec![0usize; j];
+    hist.resize(j, 0);
     let mut scan = |a: f32| {
         if a > tmin {
             let mut b = j - 1;
@@ -231,7 +253,6 @@ pub fn count_above_multi_sparse(x: &[f32], thrs: &[f32], sign: Option<f32>) -> V
     for b in 1..j {
         hist[b] += hist[b - 1];
     }
-    hist
 }
 
 #[cfg(test)]

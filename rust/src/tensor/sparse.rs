@@ -3,12 +3,67 @@
 //! `(indices, values)` pairs extracted from a dense residual; the
 //! `scatter_add` decompression is the paper's cuSparse `axpyi()` analogue
 //! (§5.4), and the dominant cost at large p (Fig. 10 "unpack").
+//!
+//! Two shapes share that math: the owned [`SparseTensor`] (selection
+//! output, residual masking) and the borrowed [`SparseView`], which
+//! parses `[idx…][bits…]` regions of a gathered wire blob *in place* —
+//! indices as a slice of the blob, values decoded via `f32::from_bits`
+//! on the fly — so the decompression walk never copies p·k words per
+//! bucket onto the heap (DESIGN.md §Zero-Copy-Hot-Path).
 
 /// Compressed communication-set: sorted-by-extraction indices + values.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct SparseTensor {
     pub indices: Vec<u32>,
     pub values: Vec<f32>,
+}
+
+/// Borrowed sparse message parsed in place from a wire blob.  Same
+/// scatter math as [`SparseTensor`], zero heap traffic: the view cannot
+/// outlive the gather buffer it points into.
+#[derive(Clone, Copy, Debug)]
+pub struct SparseView<'a> {
+    pub indices: &'a [u32],
+    /// Bit-cast f32 values, decoded lazily.
+    value_bits: &'a [u32],
+}
+
+impl<'a> SparseView<'a> {
+    pub fn new(indices: &'a [u32], value_bits: &'a [u32]) -> SparseView<'a> {
+        assert_eq!(indices.len(), value_bits.len());
+        SparseView { indices, value_bits }
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// The i-th value, decoded from its wire bits.
+    pub fn value(&self, i: usize) -> f32 {
+        f32::from_bits(self.value_bits[i])
+    }
+
+    pub fn values(&self) -> impl Iterator<Item = f32> + 'a {
+        self.value_bits.iter().map(|&b| f32::from_bits(b))
+    }
+
+    /// dense[idx] += scale * val straight off the wire words — float-op
+    /// for float-op identical to `SparseTensor::scatter_add` on the
+    /// decoded copy (the bit-identity pins rest on this).
+    pub fn scatter_add(&self, dense: &mut [f32], scale: f32) {
+        for (&i, &b) in self.indices.iter().zip(self.value_bits) {
+            dense[i as usize] += scale * f32::from_bits(b);
+        }
+    }
+
+    /// Materialize an owned copy (compat / diagnostics — not the hot path).
+    pub fn to_tensor(&self) -> SparseTensor {
+        SparseTensor::new(self.indices.to_vec(), self.values().collect())
+    }
 }
 
 impl SparseTensor {
@@ -34,26 +89,45 @@ impl SparseTensor {
         self.values.push(val);
     }
 
+    /// Drop all elements, keeping both buffers' capacity (scratch reuse).
+    pub fn clear(&mut self) {
+        self.indices.clear();
+        self.values.clear();
+    }
+
     /// Extract elements of `dense` whose |value| > thr (stream compaction).
     pub fn compact_above(dense: &[f32], thr: f32) -> Self {
         let mut out = SparseTensor::default();
+        SparseTensor::compact_above_into(dense, thr, &mut out);
+        out
+    }
+
+    /// [`compact_above`](Self::compact_above) into a reused buffer
+    /// (cleared first) — the allocation-free steady-state form.
+    pub fn compact_above_into(dense: &[f32], thr: f32, out: &mut SparseTensor) {
+        out.clear();
         for (i, &v) in dense.iter().enumerate() {
             if v.abs() > thr {
                 out.push(i as u32, v);
             }
         }
-        out
     }
 
     /// Signed compaction for quantized selection: keeps v*sign > thr.
     pub fn compact_above_signed(dense: &[f32], thr: f32, sign: f32) -> Self {
         let mut out = SparseTensor::default();
+        SparseTensor::compact_above_signed_into(dense, thr, sign, &mut out);
+        out
+    }
+
+    /// Signed compaction into a reused buffer (cleared first).
+    pub fn compact_above_signed_into(dense: &[f32], thr: f32, sign: f32, out: &mut SparseTensor) {
+        out.clear();
         for (i, &v) in dense.iter().enumerate() {
             if v * sign > thr {
                 out.push(i as u32, v);
             }
         }
-        out
     }
 
     /// Extract elements where mask > 0.5 (device-produced masks).
@@ -157,5 +231,35 @@ mod tests {
     fn constant_values() {
         let s = SparseTensor::with_constant_values(vec![0, 2], 0.25);
         assert_eq!(s.values, vec![0.25, 0.25]);
+    }
+
+    #[test]
+    fn view_scatter_matches_owned_bitwise() {
+        let s = SparseTensor::new(vec![1, 3, 7], vec![-1.5, f32::MIN_POSITIVE, 1e20]);
+        let bits: Vec<u32> = s.values.iter().map(|v| v.to_bits()).collect();
+        let v = SparseView::new(&s.indices, &bits);
+        assert_eq!(v.len(), 3);
+        assert_eq!(v.value(0).to_bits(), (-1.5f32).to_bits());
+        let mut a = vec![0.5f32; 8];
+        let mut b = a.clone();
+        s.scatter_add(&mut a, 0.25);
+        v.scatter_add(&mut b, 0.25);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(v.to_tensor(), s);
+    }
+
+    #[test]
+    fn compact_into_reuses_buffers() {
+        let d = [0.5, -2.0, 1.0, 3.0];
+        let mut out = SparseTensor::with_capacity(4);
+        SparseTensor::compact_above_into(&d, 1.0, &mut out);
+        assert_eq!(out, SparseTensor::compact_above(&d, 1.0));
+        // a second compaction fully replaces the contents
+        SparseTensor::compact_above_signed_into(&d, 0.0, -1.0, &mut out);
+        assert_eq!(out, SparseTensor::compact_above_signed(&d, 0.0, -1.0));
+        out.clear();
+        assert!(out.is_empty());
     }
 }

@@ -1,0 +1,199 @@
+//! Steady-state allocation pin for the zero-copy hot path
+//! (DESIGN.md §Zero-Copy-Hot-Path).
+//!
+//! A counting `GlobalAlloc` wraps the system allocator; after a warm-up
+//! phase (scratch buffers grown, threshold caches primed), one sync
+//! step's allocation COUNT must be
+//!
+//! * independent of k — quadrupling the selection density must not add
+//!   a single allocation: selection, packing and the apply walk run
+//!   entirely in reused buffers and borrowed views, so no per-element
+//!   (O(k) or O(p·k)) allocation survives anywhere on the path;
+//! * O(buckets) small bookkeeping at world 1 (timer strings, the
+//!   gather buffer, the `BucketDone` layer list), with only
+//!   O(messages) = O(buckets·lg p) fabric bookkeeping on top at p > 1.
+//!
+//! The counter counts `alloc`/`realloc` calls, not bytes: a `Vec` that
+//! reuses its capacity is free, which is exactly the property under
+//! test.
+
+use redsync::collectives::LocalFabric;
+use redsync::compression::{Accumulation, CompressorConfig, Method};
+use redsync::pipeline::{build_buckets, BucketDone, LayerSpec, Sequential, SyncEngine};
+use redsync::util::rng::Pcg32;
+use redsync::util::timer::PhaseTimer;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn allocs() -> usize {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// The two tests share the global counter; libtest runs tests on
+/// parallel threads, so they serialize on this lock.
+static TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Layer mix covering every host selection path: sampled binary search
+/// (large layer), trimmed top-k, exact top-k, and a quantized layer.
+const SIZES: &[usize] = &[40_000, 9_000, 9_000, 12_000];
+const FUSION_CAP: usize = 20_000;
+const WARMUP: usize = 10;
+const MEASURED: usize = 10;
+
+fn specs() -> Vec<LayerSpec> {
+    vec![
+        LayerSpec { li: 0, n: SIZES[0], method: Method::SampledBinarySearch, quantize: false },
+        LayerSpec { li: 1, n: SIZES[1], method: Method::TrimmedTopk, quantize: true },
+        LayerSpec { li: 2, n: SIZES[2], method: Method::ExactTopk, quantize: false },
+        LayerSpec { li: 3, n: SIZES[3], method: Method::TrimmedTopk, quantize: false },
+    ]
+}
+
+fn fixed_grads() -> Vec<Vec<f32>> {
+    SIZES
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| {
+            let mut rng = Pcg32::seeded(0xA110C ^ i as u64);
+            let mut g = vec![0f32; n];
+            rng.fill_normal(&mut g, 1.0);
+            g
+        })
+        .collect()
+}
+
+/// Run `steps` single-rank sync steps; returns allocation counts
+/// sampled after `WARMUP` steps and at the end.
+fn run_single_rank(density: f64, steps: usize) -> (usize, usize, usize) {
+    let specs = specs();
+    let buckets = build_buckets(&specs, FUSION_CAP, Accumulation::Momentum { momentum: 0.9 });
+    let n_buckets = buckets.len();
+    let cc = CompressorConfig { density, ..Default::default() };
+    let mut fabric = LocalFabric::new(1);
+    let t = fabric.take(0);
+    let mut engine = Sequential::new(&t, None, buckets, cc);
+    let mut params: Vec<Vec<f32>> = SIZES.iter().map(|&n| vec![0f32; n]).collect();
+    let grads = fixed_grads();
+    let mut timer = PhaseTimer::new();
+    let mut after_warmup = 0usize;
+    for step in 0..steps {
+        if step == WARMUP {
+            after_warmup = allocs();
+        }
+        engine
+            .sync_step(&grads, density, &mut timer, &mut |done: BucketDone| {
+                done.apply_to(&mut params, -0.01)
+            })
+            .expect("sync step");
+    }
+    (n_buckets, after_warmup, allocs())
+}
+
+#[test]
+fn steady_state_step_allocations_are_independent_of_k() {
+    let _serial = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // same engine, same steps, 4x the density (4x k per layer): the
+    // per-step allocation count must not move at all — any per-element
+    // allocation on the produce/pack/apply path would scale with k and
+    // fail this exactly-equal pin
+    let (buckets, a0, a1) = run_single_rank(0.004, WARMUP + MEASURED);
+    let per_step_lo = (a1 - a0) / MEASURED;
+    let (_, b0, b1) = run_single_rank(0.016, WARMUP + MEASURED);
+    let per_step_hi = (b1 - b0) / MEASURED;
+    // slack 4 absorbs the occasional capacity-doubling realloc when a
+    // threshold-search step selects more than any warm-up step did;
+    // anything O(k) would shift the count by hundreds
+    assert!(
+        per_step_lo.abs_diff(per_step_hi) <= 4,
+        "steady-state allocations scale with k: {per_step_lo} at k vs {per_step_hi} at 4k"
+    );
+    // O(buckets) bookkeeping: timer phase strings, the gather buffer,
+    // the BucketDone layer list — nothing per element, nothing per rank
+    assert!(
+        per_step_lo <= 40 * buckets,
+        "steady-state step allocates {per_step_lo} times for {buckets} buckets"
+    );
+}
+
+/// 4-rank in-process fabric: the collective's own bookkeeping joins the
+/// count (pack/unpack block lists, channel nodes), all O(messages) —
+/// still independent of k.  Measured differentially (short run vs long
+/// run, same seeds) so thread/fabric setup cancels out.
+#[test]
+fn multi_rank_step_allocations_are_independent_of_k() {
+    let _serial = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+
+    fn run_world(density: f64, steps: usize) -> usize {
+        let mut fabric = LocalFabric::new(4);
+        let handles: Vec<_> = fabric
+            .take_all()
+            .into_iter()
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let specs = specs();
+                    let buckets =
+                        build_buckets(&specs, FUSION_CAP, Accumulation::Momentum { momentum: 0.9 });
+                    // timing disabled: the produce loop must skip every
+                    // clock read (the PhaseClock enabled-check path)
+                    let cc = CompressorConfig { density, timing: false, ..Default::default() };
+                    let mut engine = Sequential::new(&t, None, buckets, cc);
+                    let mut params: Vec<Vec<f32>> =
+                        SIZES.iter().map(|&n| vec![0f32; n]).collect();
+                    let grads = fixed_grads();
+                    let mut timer = PhaseTimer::new();
+                    for _ in 0..steps {
+                        engine
+                            .sync_step(&grads, density, &mut timer, &mut |done: BucketDone| {
+                                done.apply_to(&mut params, -0.01)
+                            })
+                            .expect("sync step");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        allocs()
+    }
+
+    let extra = 8; // differential: extra steps beyond the base run
+    for density in [0.004f64, 0.016] {
+        let t0 = allocs();
+        let t1 = run_world(density, WARMUP);
+        let t2 = run_world(density, WARMUP + extra);
+        // (t2 - t1) - (t1 - t0) = extra steps' worth of allocations
+        let base = t1 - t0;
+        let long = t2 - t1;
+        let per_step = (long.saturating_sub(base)) / extra;
+        // 4 ranks x O(buckets · lg p) messages + O(buckets) bookkeeping
+        // per rank; k never enters
+        assert!(
+            per_step <= 4 * 80 * 3,
+            "density {density}: {per_step} allocations per steady step across 4 ranks"
+        );
+    }
+}

@@ -364,6 +364,115 @@ fn prop_quantization_error_bounded() {
     });
 }
 
+/// Zero-copy apply parity: `BucketDone::apply_to` (in-place message
+/// views over one gather buffer) must be bit-identical to the
+/// historical owned-decode walk — `unpack_plain`/`unpack_quant` into
+/// fresh tensors, then scatter — on random gathered blobs, INCLUDING
+/// truncated blobs: both walks must fail on the same input and leave
+/// the same partially-applied parameters behind.
+#[test]
+fn prop_view_apply_matches_owned_decode_apply() {
+    use redsync::collectives::Gathered;
+    use redsync::pipeline::BucketDone;
+
+    /// The pre-zero-copy decompression walk, verbatim.
+    fn apply_owned(
+        gathered: &[Vec<u32>],
+        layers: &[(usize, bool)],
+        params: &mut [Vec<f32>],
+        scale: f32,
+    ) -> Result<(), String> {
+        for rank_blob in gathered {
+            let mut off = 0usize;
+            for &(li, quantized) in layers {
+                if quantized {
+                    let (q, used) = unpack_quant(&rank_blob[off..])
+                        .map_err(|e| format!("layer {li}: {e}"))?;
+                    let add = q.mean * scale;
+                    for &i in &q.indices {
+                        params[li][i as usize] += add;
+                    }
+                    off += used;
+                } else {
+                    let (s, used) = unpack_plain(&rank_blob[off..])
+                        .map_err(|e| format!("layer {li}: {e}"))?;
+                    s.scatter_add(&mut params[li], scale);
+                    off += used;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    check(60, |g| {
+        let n_layers = g.size(1..4);
+        let n_ranks = g.size(1..5);
+        let dim = g.size(8..300);
+        let layers: Vec<(usize, bool)> = (0..n_layers).map(|li| (li, g.bool())).collect();
+        // each rank's blob: one message per layer, random sparse content
+        let mut gathered: Vec<Vec<u32>> = (0..n_ranks)
+            .map(|_| {
+                let mut blob = Vec::new();
+                for &(_, quantized) in &layers {
+                    let k = g.size(0..dim / 2);
+                    let mut idx: Vec<u32> = (0..dim as u32).collect();
+                    g.rng().shuffle(&mut idx);
+                    idx.truncate(k);
+                    idx.sort_unstable();
+                    if quantized {
+                        blob.extend(pack_quant(&QuantizedSet {
+                            indices: idx,
+                            mean: g.f32(-2.0..2.0),
+                        }));
+                    } else {
+                        let vals = g.vec_normal(idx.len(), 1.5);
+                        blob.extend(pack_plain(&SparseTensor::new(idx, vals)));
+                    }
+                }
+                blob
+            })
+            .collect();
+        // sometimes truncate one rank's blob mid-message — error parity
+        if g.bool() && !gathered[n_ranks - 1].is_empty() {
+            let cut = g.size(0..gathered[n_ranks - 1].len());
+            gathered[n_ranks - 1].truncate(cut);
+        }
+
+        let scale = g.f32(-1.0..1.0);
+        let init: Vec<Vec<f32>> = (0..n_layers).map(|_| g.vec_normal(dim, 0.5)).collect();
+
+        let mut owned_params = init.clone();
+        let owned_res = apply_owned(&gathered, &layers, &mut owned_params, scale);
+
+        let mut view_params = init;
+        let done = BucketDone {
+            bucket: 0,
+            layers: layers.clone(),
+            gathered: Gathered::from_parts(&gathered),
+            selected: 0,
+            elems: 0,
+        };
+        let view_res = done.apply_to(&mut view_params, scale);
+
+        ensure(
+            owned_res.is_ok() == view_res.is_ok(),
+            format!("error parity: owned {owned_res:?} vs view {view_res:?}"),
+        )?;
+        if let (Err(a), Err(b)) = (&owned_res, &view_res) {
+            ensure(a == b, format!("error text diverged: {a} vs {b}"))?;
+        }
+        for (li, (a, b)) in owned_params.iter().zip(&view_params).enumerate() {
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                ensure(
+                    x.to_bits() == y.to_bits(),
+                    format!("layer {li} elem {i}: {x} != {y} (bitwise)"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Eq. 1 vs Eq. 2 crossover: sparse wins exactly below the crossover
 /// density returned by the solver.
 #[test]
