@@ -28,6 +28,11 @@
 //! through the historical owned-decode walk vs the borrowed-view /
 //! pack-in-place walk, asserting bit-identical parameters and reporting
 //! the speedup.  CI runs this and uploads `BENCH_hotpath.json`.
+//!
+//! `--elastic-smoke [OUT.json]` kills rank 2 of a 4-rank loopback-TCP
+//! elastic run mid-training and records the recovery timeline —
+//! detect → reshape → resume — plus the post-reshape consistency
+//! verdict, to `BENCH_elastic.json` (uploaded by CI).
 
 use redsync::collectives::mux::TagMux;
 use redsync::collectives::{Algo, Gathered, Topology, Transport};
@@ -500,10 +505,94 @@ fn hotpath_smoke(json_path: Option<&str>) {
     println!("{json}");
 }
 
+// ---------------------------------------------------------------------
+// Elastic recovery smoke: detect -> reshape -> resume over loopback TCP
+// ---------------------------------------------------------------------
+
+/// 4 ranks over loopback TCP, rank 2 killed at step 8 of 16: measure
+/// the survivors' recovery timeline and assert the shrunken world ends
+/// replica-consistent.
+fn elastic_smoke(json_path: Option<&str>) {
+    use redsync::elastic::synthetic::{self, SyntheticWorkload};
+    use redsync::elastic::{
+        fresh_checkpoint, run_elastic_worker, ElasticOpts, ElasticStatus, FaultSpec,
+    };
+    use std::time::Duration;
+
+    const WORLD: usize = 4;
+    const STEPS: usize = 16;
+    const KILL_AT: usize = 8;
+    let seed = 0xE1A5u64;
+    let opts = ElasticOpts {
+        steps: STEPS,
+        fusion_cap_elems: 3000,
+        heartbeat: Duration::from_millis(50),
+        log_every: STEPS,
+        kill: vec![FaultSpec { rank: 2, step: KILL_AT }],
+        ..ElasticOpts::default()
+    };
+    println!(
+        "# elastic smoke: {WORLD} ranks over loopback tcp, {STEPS} steps, \
+         kill rank 2 @ step {KILL_AT}, heartbeat {}ms",
+        opts.heartbeat.as_millis()
+    );
+
+    let transports = tcp_fabric(WORLD);
+    let start = Instant::now();
+    let handles: Vec<_> = transports
+        .into_iter()
+        .map(|t| {
+            let opts = opts.clone();
+            thread::spawn(move || {
+                let specs = synthetic::specs();
+                let init =
+                    fresh_checkpoint(synthetic::init_params(seed), &specs, opts.optimizer, seed);
+                let mut w = SyntheticWorkload { seed };
+                run_elastic_worker(&t, &specs, init, None, &opts, &mut w).expect("elastic rank")
+            })
+        })
+        .collect();
+    let outs: Vec<_> = handles.into_iter().map(|h| h.join().expect("rank")).collect();
+    let total_secs = start.elapsed().as_secs_f64();
+
+    assert_eq!(outs[2].status, ElasticStatus::Killed);
+    let survivors = [0usize, 1, 3];
+    let consistent = survivors.iter().all(|&r| {
+        outs[r].status == ElasticStatus::Finished && outs[r].replicas_consistent
+    });
+    assert!(consistent, "survivors must finish replica-consistent");
+    let event = outs[0].events.first().expect("membership event");
+    println!("{:>14} {:>12}", "phase", "seconds");
+    println!("{:>14} {:>12.4}", "detect", event.detect_secs);
+    println!("{:>14} {:>12.4}", "reshape", event.reshape_secs);
+    println!("{:>14} {:>12.4}", "run total", total_secs);
+    println!(
+        "lost {:?} -> {} ranks at epoch {}, resumed from step {}",
+        event.lost, event.world_after, event.epoch, event.resume_step
+    );
+
+    let json = format!(
+        "{{\"bench\":\"elastic_smoke\",\"world\":{WORLD},\"steps\":{STEPS},\
+         \"kill_step\":{KILL_AT},\"detect_secs\":{:.6},\"reshape_secs\":{:.6},\
+         \"total_secs\":{total_secs:.6},\"resume_step\":{},\"world_after\":{},\
+         \"consistent\":{consistent}}}",
+        event.detect_secs, event.reshape_secs, event.resume_step, event.world_after
+    );
+    if let Some(path) = json_path {
+        std::fs::write(path, format!("{json}\n")).expect("write bench json");
+        println!("wrote {path}");
+    }
+    println!("{json}");
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     if let Some(pos) = args.iter().position(|a| a == "--pipeline-smoke") {
         pipeline_smoke(args.get(pos + 1).map(String::as_str));
+        return;
+    }
+    if let Some(pos) = args.iter().position(|a| a == "--elastic-smoke") {
+        elastic_smoke(args.get(pos + 1).map(String::as_str));
         return;
     }
     if let Some(pos) = args.iter().position(|a| a == "--topology-smoke") {

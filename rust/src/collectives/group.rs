@@ -215,11 +215,31 @@ impl<T: Transport> Transport for ProcessGroup<T> {
     }
 
     fn recv_checked(&self, from: usize) -> Result<Vec<u32>, TransportError> {
-        self.inner.recv_checked(self.members[from]).map_err(|e| TransportError {
-            // report the *group-local* peer the caller addressed
-            peer: from,
-            reason: format!("world rank {}: {}", self.members[from], e.reason),
-        })
+        self.inner.recv_checked(self.members[from]).map_err(|e| self.relabel(from, e))
+    }
+
+    fn try_recv(&self, from: usize) -> Result<Option<Vec<u32>>, TransportError> {
+        self.inner.try_recv(self.members[from]).map_err(|e| self.relabel(from, e))
+    }
+
+    fn send_checked(&self, to: usize, msg: Vec<u32>) -> Result<(), TransportError> {
+        self.inner.send_checked(self.members[to], msg).map_err(|e| self.relabel(to, e))
+    }
+
+    fn sever(&self, peer: usize) {
+        self.inner.sever(self.members[peer])
+    }
+}
+
+impl<T: Transport> ProcessGroup<T> {
+    /// Report the *group-local* peer the caller addressed, keeping the
+    /// structured cause.
+    fn relabel(&self, local: usize, e: TransportError) -> TransportError {
+        TransportError::with_cause(
+            local,
+            format!("world rank {}: {}", self.members[local], e.reason),
+            e.cause,
+        )
     }
 }
 

@@ -52,8 +52,8 @@ pub use group::{Algo, Communicator, ProcessGroup, Topology};
 pub use hierarchical::{
     hierarchical_allgather, hierarchical_allgather_ref, hierarchical_traffic_words,
 };
-pub use mux::{TagChannel, TagMux};
-pub use transport::{LocalFabric, LocalTransport, Transport, TransportError};
+pub use mux::{TagChannel, TagMux, OOB_TAG};
+pub use transport::{LocalFabric, LocalTransport, PeerLostCause, Transport, TransportError};
 
 #[cfg(test)]
 mod tests {

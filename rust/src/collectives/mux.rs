@@ -39,9 +39,18 @@
 //! because every parked message was already sent (sends never block) and
 //! collectives consume exactly what they are sent.
 
-use super::transport::{TrafficStats, Transport, TransportError};
+use super::transport::{lock_ok, PeerLostCause, TrafficStats, Transport, TransportError};
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
+
+/// Reserved out-of-band tag value: a frame whose trailing word is
+/// `OOB_TAG` is not epoch traffic at all but an elastic reshape-protocol
+/// frame (`crate::elastic::reshape`).  The mux parks it per peer and
+/// surfaces a [`PeerLostCause::OutOfBand`] error, which aborts the
+/// in-flight collective and hands control to the reshape driver —
+/// without losing the frame.  `u32::MAX` can never collide with a real
+/// tag (muxes reserve `0..n_tags` with `n_tags` small).
+pub const OOB_TAG: u32 = u32::MAX;
 
 /// Demultiplexer wrapping one fabric endpoint into `n_tags` logical
 /// channels.  Build once per endpoint, share via `Arc`, and mint
@@ -50,13 +59,26 @@ use std::sync::{Arc, Mutex};
 /// While a mux is live, *all* traffic on the endpoint must flow through
 /// its channels: a raw `recv` on the inner transport could steal a tagged
 /// message, and a raw `send` would arrive without a tag (a clean error on
-/// the receiving mux, but an error nonetheless).
+/// the receiving mux, but an error nonetheless).  The one exception is
+/// the reserved [`OOB_TAG`]: out-of-band frames are parked per peer for
+/// the elastic reshape driver instead of being routed to a channel.
 pub struct TagMux<T: Transport> {
     inner: T,
     n_tags: u32,
     /// pending[peer][tag]: messages received for a tag no channel was
     /// draining at the time.
     pending: Vec<Mutex<Vec<VecDeque<Vec<u32>>>>>,
+    /// Out-of-band reshape frames per peer (tag word already stripped),
+    /// in arrival order.
+    oob: Vec<Mutex<VecDeque<Vec<u32>>>>,
+    /// The side-channel tag, if one is reserved: its inbound messages
+    /// are parked in [`side`](Self::side) — *outside* the per-peer
+    /// router lock — so a poller (the heartbeat monitor) can observe
+    /// them even while a blocking receive holds the router.  Without
+    /// this, a peer's liveness evidence would be invisible exactly when
+    /// a collective is waiting on that peer.
+    side_tag: Option<u32>,
+    side: Vec<Mutex<VecDeque<Vec<u32>>>>,
     /// Per-tag outbound counters (words include the tag word, matching
     /// what the underlying fabric charges), so per-fabric totals can be
     /// split into control vs bucket streams.
@@ -71,8 +93,19 @@ impl<T: Transport> TagMux<T> {
         let pending = (0..world)
             .map(|_| Mutex::new((0..n_tags as usize).map(|_| VecDeque::new()).collect()))
             .collect();
+        let oob = (0..world).map(|_| Mutex::new(VecDeque::new())).collect();
+        let side = (0..world).map(|_| Mutex::new(VecDeque::new())).collect();
         let stats = (0..n_tags).map(|_| TrafficStats::default()).collect();
-        TagMux { inner, n_tags, pending, stats }
+        TagMux { inner, n_tags, pending, oob, side_tag: None, side, stats }
+    }
+
+    /// [`new`](Self::new), additionally reserving `side_tag` as the
+    /// lock-independent side channel (the elastic heartbeat stream).
+    pub fn with_side_channel(inner: T, n_tags: u32, side_tag: u32) -> TagMux<T> {
+        assert!(side_tag < n_tags, "side tag {side_tag} outside {n_tags} channels");
+        let mut mux = Self::new(inner, n_tags);
+        mux.side_tag = Some(side_tag);
+        mux
     }
 
     /// Outbound traffic of one logical channel (words include the tag
@@ -113,37 +146,141 @@ impl<T: Transport> TagMux<T> {
         self.inner.send(to, msg);
     }
 
+    /// Route one raw inbound message: strip the tag and either return it
+    /// (`Some` when it matches `want`), park it for its channel, or park
+    /// an out-of-band frame and surface the [`PeerLostCause::OutOfBand`]
+    /// error that aborts the caller's collective.
+    fn route(
+        &self,
+        from: usize,
+        want: u32,
+        mut raw: Vec<u32>,
+        router: &mut [VecDeque<Vec<u32>>],
+    ) -> Result<Option<Vec<u32>>, TransportError> {
+        let Some(t) = raw.pop() else {
+            return Err(TransportError::with_cause(
+                from,
+                "untagged (empty) message on a multiplexed fabric",
+                PeerLostCause::Corrupt,
+            ));
+        };
+        if t == OOB_TAG {
+            lock_ok(&self.oob[from]).push_back(raw);
+            return Err(TransportError::with_cause(
+                from,
+                "out-of-band reshape frame (peer left the epoch)",
+                PeerLostCause::OutOfBand,
+            ));
+        }
+        if t >= self.n_tags {
+            return Err(TransportError::with_cause(
+                from,
+                format!("message tagged {t} outside the fabric's {} channels", self.n_tags),
+                PeerLostCause::Corrupt,
+            ));
+        }
+        if t == want {
+            return Ok(Some(raw));
+        }
+        if Some(t) == self.side_tag {
+            // park outside the router lock so a concurrent poller sees it
+            lock_ok(&self.side[from]).push_back(raw);
+            return Ok(None);
+        }
+        router[t as usize].push_back(raw);
+        Ok(None)
+    }
+
+    /// Pop a parked side-channel message from `from`, if any.
+    fn pop_side(&self, from: usize) -> Option<Vec<u32>> {
+        lock_ok(&self.side[from]).pop_front()
+    }
+
     /// Blocking receive on one (peer, tag) channel.  The calling thread
     /// drains the underlying stream while it waits, parking messages for
     /// other tags in their FIFO queues.
     fn recv_tagged(&self, from: usize, tag: u32) -> Result<Vec<u32>, TransportError> {
         debug_assert!(tag < self.n_tags);
+        if Some(tag) == self.side_tag {
+            if let Some(msg) = self.pop_side(from) {
+                return Ok(msg);
+            }
+        }
         let mut router = self.pending[from].lock().unwrap();
         if let Some(msg) = router[tag as usize].pop_front() {
             return Ok(msg);
         }
         loop {
-            let mut raw = self.inner.recv_checked(from)?;
-            let Some(t) = raw.pop() else {
-                return Err(TransportError {
-                    peer: from,
-                    reason: "untagged (empty) message on a multiplexed fabric".into(),
-                });
-            };
-            if t >= self.n_tags {
-                return Err(TransportError {
-                    peer: from,
-                    reason: format!(
-                        "message tagged {t} outside the fabric's {} channels",
-                        self.n_tags
-                    ),
-                });
+            let raw = self.inner.recv_checked(from)?;
+            if let Some(msg) = self.route(from, tag, raw, &mut router[..])? {
+                return Ok(msg);
             }
-            if t == tag {
-                return Ok(raw);
-            }
-            router[t as usize].push_back(raw);
         }
+    }
+
+    /// Non-blocking receive on one (peer, tag) channel: polls parked
+    /// messages and whatever the fabric already buffered, without ever
+    /// waiting — the heartbeat monitor's primitive.  A router busy in
+    /// another thread's blocking receive reports `Ok(None)` (that thread
+    /// will park our messages for the next poll).
+    fn try_recv_tagged(&self, from: usize, tag: u32) -> Result<Option<Vec<u32>>, TransportError> {
+        debug_assert!(tag < self.n_tags);
+        if Some(tag) == self.side_tag {
+            if let Some(msg) = self.pop_side(from) {
+                return Ok(Some(msg));
+            }
+        }
+        let Ok(mut router) = self.pending[from].try_lock() else {
+            // a blocking receiver is draining this peer; side-channel
+            // messages still surface above, everything else next poll
+            return Ok(None);
+        };
+        if let Some(msg) = router[tag as usize].pop_front() {
+            return Ok(Some(msg));
+        }
+        loop {
+            let Some(raw) = self.inner.try_recv(from)? else {
+                return Ok(None);
+            };
+            if let Some(msg) = self.route(from, tag, raw, &mut router[..])? {
+                return Ok(Some(msg));
+            }
+        }
+    }
+
+    /// Fallible tagged send (heartbeats outlive dead peers).  Counts
+    /// traffic only on success.
+    fn send_tagged_checked(&self, to: usize, tag: u32, mut msg: Vec<u32>) -> Result<(), TransportError> {
+        use std::sync::atomic::Ordering;
+        debug_assert!(tag < self.n_tags);
+        msg.push(tag);
+        let words = msg.len() as u64;
+        self.inner.send_checked(to, msg)?;
+        let s = &self.stats[tag as usize];
+        s.messages.fetch_add(1, Ordering::Relaxed);
+        s.words.fetch_add(words, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Any out-of-band reshape frames parked (from any peer)?
+    pub fn has_oob(&self) -> bool {
+        self.oob.iter().any(|q| !lock_ok(q).is_empty())
+    }
+
+    /// Hand the parked out-of-band frames (tag stripped, arrival order,
+    /// indexed by this mux's peer id) to the reshape driver, clearing
+    /// the queues.
+    pub fn drain_oob(&self) -> Vec<VecDeque<Vec<u32>>> {
+        self.oob
+            .iter()
+            .map(|q| std::mem::take(&mut *lock_ok(q)))
+            .collect()
+    }
+
+    /// Force-close the underlying link to `peer` (see
+    /// [`Transport::sever`]).
+    pub fn sever(&self, peer: usize) {
+        self.inner.sever(peer);
     }
 }
 
@@ -186,6 +323,18 @@ impl<T: Transport> Transport for TagChannel<T> {
 
     fn recv_checked(&self, from: usize) -> Result<Vec<u32>, TransportError> {
         self.mux.recv_tagged(from, self.tag)
+    }
+
+    fn try_recv(&self, from: usize) -> Result<Option<Vec<u32>>, TransportError> {
+        self.mux.try_recv_tagged(from, self.tag)
+    }
+
+    fn send_checked(&self, to: usize, msg: Vec<u32>) -> Result<(), TransportError> {
+        self.mux.send_tagged_checked(to, self.tag, msg)
+    }
+
+    fn sever(&self, peer: usize) {
+        self.mux.sever(peer)
     }
 }
 
@@ -346,5 +495,90 @@ mod tests {
         let mut fabric = LocalFabric::new(1);
         let m = Arc::new(TagMux::new(fabric.take(0), 2));
         let _ = TagChannel::new(m, 2);
+    }
+
+    #[test]
+    fn oob_frames_are_parked_and_surface_a_clean_error() {
+        use crate::collectives::transport::PeerLostCause;
+        let mut fabric = LocalFabric::new(2);
+        let a = Arc::new(TagMux::new(fabric.take(0), 2));
+        let raw_b = fabric.take(1);
+        let chan = TagChannel::new(Arc::clone(&a), 0);
+        // a reshape frame: payload + the reserved OOB tag word
+        raw_b.send(0, vec![7, 8, OOB_TAG]);
+        let err = chan.recv_checked(1).unwrap_err();
+        assert_eq!(err.cause, PeerLostCause::OutOfBand, "{err}");
+        assert!(a.has_oob());
+        let mut parked = a.drain_oob();
+        assert_eq!(parked[1].pop_front().unwrap(), vec![7, 8], "tag stripped, frame kept");
+        assert!(!a.has_oob(), "drained");
+    }
+
+    #[test]
+    fn try_recv_on_a_channel_polls_and_parks() {
+        let (a, b) = mux_pair(2);
+        let a0 = TagChannel::new(Arc::clone(&a), 0);
+        let a1 = TagChannel::new(Arc::clone(&a), 1);
+        let b0 = TagChannel::new(Arc::clone(&b), 0);
+        let b1 = TagChannel::new(Arc::clone(&b), 1);
+        assert!(a1.try_recv(1).unwrap().is_none(), "idle");
+        b0.send(0, vec![10]); // noise for tag 0
+        b1.send(0, vec![11]);
+        // polling tag 1 must deliver its message and park the tag-0 one
+        assert_eq!(a1.try_recv(1).unwrap(), Some(vec![11]));
+        assert_eq!(a0.try_recv(1).unwrap(), Some(vec![10]));
+        assert!(a0.try_recv(1).unwrap().is_none());
+        drop((b0, b1));
+    }
+
+    #[test]
+    fn side_channel_messages_survive_a_blocked_router() {
+        // the elastic liveness property: peer beats stay observable by a
+        // poller even while another thread's blocking receive holds the
+        // peer's router (a collective waiting on a slow peer)
+        let mut fabric = LocalFabric::new(2);
+        let a = Arc::new(TagMux::with_side_channel(fabric.take(0), 2, 1));
+        let b = Arc::new(TagMux::with_side_channel(fabric.take(1), 2, 1));
+        let a_ctrl = TagChannel::new(Arc::clone(&a), 0);
+        let a_side = TagChannel::new(Arc::clone(&a), 1);
+        let b_ctrl = TagChannel::new(Arc::clone(&b), 0);
+        let b_side = TagChannel::new(Arc::clone(&b), 1);
+        // a blocking ctrl receive on rank 0 drains rank 1's stream
+        let blocker = thread::spawn(move || a_ctrl.recv(1));
+        // give the blocker time to take the router lock
+        thread::sleep(std::time::Duration::from_millis(30));
+        b_side.send(0, vec![0x4842]);
+        // the poller must see the beat while the router stays locked
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            match a_side.try_recv(1).unwrap() {
+                Some(msg) => {
+                    assert_eq!(msg, vec![0x4842]);
+                    break;
+                }
+                None if std::time::Instant::now() > deadline => {
+                    panic!("beat invisible behind the blocked router")
+                }
+                None => thread::sleep(std::time::Duration::from_millis(1)),
+            }
+        }
+        // release the blocker and check ctrl traffic was untouched
+        b_ctrl.send(0, vec![7]);
+        assert_eq!(blocker.join().unwrap(), vec![7]);
+        drop(b_side);
+    }
+
+    #[test]
+    fn send_checked_on_a_channel_counts_only_successes() {
+        let mut fabric = LocalFabric::new(2);
+        let a = Arc::new(TagMux::new(fabric.take(0), 1));
+        let b = fabric.take(1);
+        let c = TagChannel::new(Arc::clone(&a), 0);
+        c.send_checked(1, vec![1, 2]).unwrap();
+        assert_eq!(b.recv(0), vec![1, 2, 0], "payload + tag word");
+        assert_eq!(a.tag_stats(0).message_count(), 1);
+        drop(b);
+        assert!(c.send_checked(1, vec![3]).is_err());
+        assert_eq!(a.tag_stats(0).message_count(), 1, "failed send not counted");
     }
 }

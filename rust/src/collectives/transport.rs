@@ -19,21 +19,84 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
+/// Why a peer link died, as specifically as the fabric can classify it.
+/// The elastic membership layer (`crate::elastic`) keys its detection
+/// and eviction decisions on this instead of grepping error strings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeerLostCause {
+    /// Orderly shutdown: a clean FIN between frames, or the in-process
+    /// peer endpoint dropped (its worker thread exited).
+    CleanFin,
+    /// The stream ended in the middle of a frame — the peer vanished
+    /// with data in flight (crash / hard kill).
+    MidStream,
+    /// The OS reported a reset (`ECONNRESET` / `EPIPE` / aborted
+    /// connection).
+    Reset,
+    /// A heartbeat lease expired, or a read deadline fired; for TCP the
+    /// monitor severs such links, converting a stall into a hard loss.
+    Timeout,
+    /// The stream carried garbage: oversized length prefix, malformed
+    /// frame, untagged or out-of-range mux tag.
+    Corrupt,
+    /// Not a loss at all: an out-of-band reshape frame arrived on a
+    /// multiplexed channel (the peer entered the elastic reshape
+    /// protocol).  The frame is parked for the reshape driver.
+    OutOfBand,
+    /// The fabric could not classify the failure.
+    Unknown,
+}
+
+impl PeerLostCause {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PeerLostCause::CleanFin => "clean-fin",
+            PeerLostCause::MidStream => "mid-stream-eof",
+            PeerLostCause::Reset => "reset",
+            PeerLostCause::Timeout => "timeout",
+            PeerLostCause::Corrupt => "corrupt",
+            PeerLostCause::OutOfBand => "out-of-band",
+            PeerLostCause::Unknown => "unknown",
+        }
+    }
+}
+
 /// A fabric link failure: the peer endpoint is gone (dropped thread,
 /// closed socket, corrupt stream).  Collectives treat this as fatal via
 /// [`Transport::recv`]'s panic; supervisors and fault tests observe it
-/// cleanly through [`Transport::recv_checked`].
+/// cleanly through [`Transport::recv_checked`], and the elastic layer
+/// dispatches on the structured [`PeerLostCause`].
 #[derive(Debug)]
 pub struct TransportError {
     /// Peer rank the failed operation addressed.
     pub peer: usize,
     /// Human-readable cause (as specific as the fabric can make it).
     pub reason: String,
+    /// Structured classification of the failure.
+    pub cause: PeerLostCause,
+}
+
+impl TransportError {
+    pub fn new(peer: usize, reason: impl Into<String>) -> TransportError {
+        TransportError { peer, reason: reason.into(), cause: PeerLostCause::Unknown }
+    }
+
+    pub fn with_cause(
+        peer: usize,
+        reason: impl Into<String>,
+        cause: PeerLostCause,
+    ) -> TransportError {
+        TransportError { peer, reason: reason.into(), cause }
+    }
 }
 
 impl std::fmt::Display for TransportError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "link to rank {}: {}", self.peer, self.reason)
+        if self.cause == PeerLostCause::Unknown {
+            write!(f, "link to rank {}: {}", self.peer, self.reason)
+        } else {
+            write!(f, "link to rank {}: {} [{}]", self.peer, self.reason, self.cause.label())
+        }
     }
 }
 
@@ -75,6 +138,31 @@ pub trait Transport {
     /// Blocking receive of the next message from rank `from`, surfacing a
     /// broken link as a clean error instead of a panic or a hang.
     fn recv_checked(&self, from: usize) -> Result<Vec<u32>, TransportError>;
+
+    /// Non-blocking receive: `Ok(Some(msg))` if a message from `from` is
+    /// already queued, `Ok(None)` if the link is healthy but idle,
+    /// `Err` if it broke.  Polling fabrics (heartbeat monitors, the
+    /// reshape protocol) require this; the default `Ok(None)` suits
+    /// fabrics that are never polled.
+    fn try_recv(&self, _from: usize) -> Result<Option<Vec<u32>>, TransportError> {
+        Ok(None)
+    }
+
+    /// Fallible send: a closed link is an error instead of the panic
+    /// [`send`](Transport::send) raises — for supervisors (heartbeats,
+    /// reshape frames) that must outlive dead peers.
+    fn send_checked(&self, to: usize, msg: Vec<u32>) -> Result<(), TransportError> {
+        self.send(to, msg);
+        Ok(())
+    }
+
+    /// Force-close the link to `peer`, if the fabric can: subsequent
+    /// receives on it fail instead of blocking.  The elastic monitor
+    /// severs a stalled peer's TCP link after its lease expires,
+    /// converting a silent stall into a detectable loss.  Default no-op
+    /// (the in-process fabric cannot interrupt a blocked channel; its
+    /// failures are always immediate).
+    fn sever(&self, _peer: usize) {}
 
     /// Broadcast-friendly send: ship a shared buffer without a per-peer
     /// clone at the sender.  Defaults to clone + [`send`](Transport::send);
@@ -123,6 +211,18 @@ impl<T: Transport + ?Sized> Transport for &T {
 
     fn recv_checked(&self, from: usize) -> Result<Vec<u32>, TransportError> {
         (**self).recv_checked(from)
+    }
+
+    fn try_recv(&self, from: usize) -> Result<Option<Vec<u32>>, TransportError> {
+        (**self).try_recv(from)
+    }
+
+    fn send_checked(&self, to: usize, msg: Vec<u32>) -> Result<(), TransportError> {
+        (**self).send_checked(to, msg)
+    }
+
+    fn sever(&self, peer: usize) {
+        (**self).sever(peer)
     }
 
     fn recv(&self, from: usize) -> Vec<u32> {
@@ -220,6 +320,14 @@ pub struct LocalTransport {
     stats: Arc<TrafficStats>,
 }
 
+/// Lock that tolerates poisoning: a peer-death panic in one thread's
+/// `send` must not take the supervisor's `send_checked` down with it —
+/// the channel ends themselves stay consistent (mpsc operations never
+/// leave partial state under panic).
+pub(crate) fn lock_ok<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poison| poison.into_inner())
+}
+
 impl Transport for LocalTransport {
     fn rank(&self) -> usize {
         self.rank
@@ -250,9 +358,39 @@ impl Transport for LocalTransport {
     }
 
     fn recv_checked(&self, from: usize) -> Result<Vec<u32>, TransportError> {
-        self.receivers[from].lock().unwrap().recv().map(Payload::into_vec).map_err(|_| {
-            TransportError { peer: from, reason: "peer endpoint dropped".into() }
+        lock_ok(&self.receivers[from]).recv().map(Payload::into_vec).map_err(|_| {
+            TransportError::with_cause(from, "peer endpoint dropped", PeerLostCause::CleanFin)
         })
+    }
+
+    fn try_recv(&self, from: usize) -> Result<Option<Vec<u32>>, TransportError> {
+        use std::sync::mpsc::TryRecvError;
+        match lock_ok(&self.receivers[from]).try_recv() {
+            Ok(p) => Ok(Some(p.into_vec())),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(TransportError::with_cause(
+                from,
+                "peer endpoint dropped",
+                PeerLostCause::CleanFin,
+            )),
+        }
+    }
+
+    fn send_checked(&self, to: usize, msg: Vec<u32>) -> Result<(), TransportError> {
+        let words = msg.len() as u64;
+        match lock_ok(&self.senders[to]).send(Payload::Owned(msg)) {
+            Ok(()) => {
+                self.stats.messages.fetch_add(1, Ordering::Relaxed);
+                self.stats.words.fetch_add(words, Ordering::Relaxed);
+                Ok(())
+            }
+            // a failed send moved no bytes, so it is never counted
+            Err(_) => Err(TransportError::with_cause(
+                to,
+                "peer endpoint dropped",
+                PeerLostCause::CleanFin,
+            )),
+        }
     }
 }
 
@@ -356,6 +494,47 @@ mod tests {
         let err = a.recv_checked(1).unwrap_err();
         assert_eq!(err.peer, 1);
         assert!(err.reason.contains("dropped"), "{err}");
+        assert_eq!(err.cause, PeerLostCause::CleanFin);
+    }
+
+    #[test]
+    fn try_recv_polls_without_blocking() {
+        let mut fabric = LocalFabric::new(2);
+        let a = fabric.take(0);
+        let b = fabric.take(1);
+        assert!(a.try_recv(1).unwrap().is_none(), "idle link");
+        b.send(0, vec![5]);
+        assert_eq!(a.try_recv(1).unwrap(), Some(vec![5]));
+        assert!(a.try_recv(1).unwrap().is_none(), "drained");
+        drop(b);
+        let err = a.try_recv(1).unwrap_err();
+        assert_eq!(err.cause, PeerLostCause::CleanFin);
+    }
+
+    #[test]
+    fn send_checked_errors_instead_of_panicking() {
+        let mut fabric = LocalFabric::new(2);
+        let stats = Arc::clone(&fabric.stats);
+        let a = fabric.take(0);
+        let b = fabric.take(1);
+        a.send_checked(1, vec![1, 2]).unwrap();
+        assert_eq!(b.recv(0), vec![1, 2]);
+        assert_eq!(stats.bytes(), 8, "successful send_checked counts like send");
+        drop(b);
+        let err = a.send_checked(1, vec![3]).unwrap_err();
+        assert_eq!(err.peer, 1);
+        assert_eq!(err.cause, PeerLostCause::CleanFin);
+        assert_eq!(stats.bytes(), 8, "failed send moves no bytes");
+    }
+
+    #[test]
+    fn sever_is_a_noop_on_the_local_fabric() {
+        let mut fabric = LocalFabric::new(2);
+        let a = fabric.take(0);
+        let b = fabric.take(1);
+        a.sever(1);
+        b.send(0, vec![9]);
+        assert_eq!(a.recv(1), vec![9], "local links cannot be severed");
     }
 
     #[test]

@@ -10,9 +10,53 @@ pub use presets::preset;
 
 use crate::collectives::group::Topology;
 use crate::compression::PolicyThresholds;
+use crate::elastic::{FaultSpec, StallSpec, MAX_ELASTIC_WORLD};
 use crate::optim::{LrSchedule, Optimizer, WarmupSchedule};
 use crate::simnet::iteration::Strategy;
 use crate::util::json::{self, Value};
+
+/// Elastic-membership knobs (DESIGN.md §Elastic-Membership): keep the
+/// job alive through worker loss, with heartbeat failure detection,
+/// deterministic world reshape and residual-preserving rejoin.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ElasticConfig {
+    /// Run the elastic driver instead of the fail-fast worker loop.
+    pub enabled: bool,
+    /// Heartbeat interval in milliseconds (lease = 4×).
+    pub heartbeat_ms: u64,
+    /// Abort (instead of reshaping) when the view would shrink below
+    /// this many ranks.
+    pub min_ranks: usize,
+    /// Injected crashes `R@S` (`--kill-rank`).
+    pub kill: Vec<FaultSpec>,
+    /// Injected stalls `R@S:MS` (`--stall-rank`).
+    pub stall: Vec<StallSpec>,
+    /// Scheduled rejoin `R@S` of a previously killed rank
+    /// (`--rejoin-rank`; local transport, needs checkpoints).
+    pub rejoin: Vec<FaultSpec>,
+    /// `RSCK` path prefix for periodic/reshape/join checkpoints.
+    pub ckpt: Option<String>,
+    /// Periodic checkpoint cadence in steps (0 = never).
+    pub ckpt_every: usize,
+    /// Resume every rank from `{resume}_rank{R}.rsck`.
+    pub resume: Option<String>,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig {
+            enabled: false,
+            heartbeat_ms: 25,
+            min_ranks: 1,
+            kill: Vec::new(),
+            stall: Vec::new(),
+            rejoin: Vec::new(),
+            ckpt: None,
+            ckpt_every: 0,
+            resume: None,
+        }
+    }
+}
 
 /// How each fusion bucket's collective algorithm is chosen (DESIGN.md
 /// §Topology-Aware-Communication).
@@ -177,6 +221,9 @@ pub struct TrainConfig {
     /// Machine preset the `auto` picker prices Eq. 1/2 and the
     /// hierarchical closed form against (`simnet::Machine::by_name`).
     pub machine: String,
+    /// Elastic membership (survive worker loss; `--elastic` and
+    /// friends).
+    pub elastic: ElasticConfig,
 }
 
 impl Default for TrainConfig {
@@ -207,6 +254,7 @@ impl Default for TrainConfig {
             topology: None,
             algo: AlgoMode::Sparse,
             machine: "muradin".into(),
+            elastic: ElasticConfig::default(),
         }
     }
 }
@@ -353,6 +401,34 @@ impl TrainConfig {
             "topology" => self.topology = parse_topology(as_str()?)?,
             "algo" => self.algo = parse_algo(as_str()?)?,
             "machine" => self.machine = as_str()?.to_string(),
+            "elastic" => {
+                self.elastic.enabled = val
+                    .as_bool()
+                    .ok_or_else(|| ConfigError::Invalid("elastic: expected bool".into()))?
+            }
+            "heartbeat_ms" => self.elastic.heartbeat_ms = as_usize()? as u64,
+            "min_ranks" => self.elastic.min_ranks = as_usize()?,
+            "kill_rank" => {
+                self.elastic.kill =
+                    FaultSpec::parse_list(as_str()?).map_err(ConfigError::Invalid)?
+            }
+            "stall_rank" => {
+                self.elastic.stall =
+                    StallSpec::parse_list(as_str()?).map_err(ConfigError::Invalid)?
+            }
+            "rejoin_rank" => {
+                self.elastic.rejoin =
+                    FaultSpec::parse_list(as_str()?).map_err(ConfigError::Invalid)?
+            }
+            "ckpt" => {
+                let p = as_str()?.to_string();
+                self.elastic.ckpt = if p.is_empty() { None } else { Some(p) };
+            }
+            "ckpt_every" => self.elastic.ckpt_every = as_usize()?,
+            "resume" => {
+                let p = as_str()?.to_string();
+                self.elastic.resume = if p.is_empty() { None } else { Some(p) };
+            }
             other => return Err(ConfigError::Invalid(format!("unknown config key '{other}'"))),
         }
         Ok(())
@@ -417,6 +493,45 @@ impl TrainConfig {
             ),
             ("algo", json::s(self.algo.label())),
             ("machine", json::s(self.machine.clone())),
+            ("elastic", Value::Bool(self.elastic.enabled)),
+            ("heartbeat_ms", json::num(self.elastic.heartbeat_ms as f64)),
+            ("min_ranks", json::num(self.elastic.min_ranks as f64)),
+            (
+                "kill_rank",
+                json::s(
+                    self.elastic
+                        .kill
+                        .iter()
+                        .map(|f| format!("{}@{}", f.rank, f.step))
+                        .collect::<Vec<_>>()
+                        .join(";"),
+                ),
+            ),
+            (
+                "stall_rank",
+                json::s(
+                    self.elastic
+                        .stall
+                        .iter()
+                        .map(|f| format!("{}@{}:{}", f.rank, f.step, f.millis))
+                        .collect::<Vec<_>>()
+                        .join(";"),
+                ),
+            ),
+            (
+                "rejoin_rank",
+                json::s(
+                    self.elastic
+                        .rejoin
+                        .iter()
+                        .map(|f| format!("{}@{}", f.rank, f.step))
+                        .collect::<Vec<_>>()
+                        .join(";"),
+                ),
+            ),
+            ("ckpt", json::s(self.elastic.ckpt.clone().unwrap_or_default())),
+            ("ckpt_every", json::num(self.elastic.ckpt_every as f64)),
+            ("resume", json::s(self.elastic.resume.clone().unwrap_or_default())),
         ])
     }
 
@@ -425,9 +540,13 @@ impl TrainConfig {
         if self.world == 0 {
             return Err(ConfigError::Invalid("world must be >= 1".into()));
         }
-        if !self.world.is_power_of_two() {
+        if !self.world.is_power_of_two() && !self.elastic.enabled {
+            // elastic views shrink to arbitrary sizes, so the elastic
+            // driver always runs over the ring fallbacks; everything
+            // else keeps the historical recursive-doubling contract
             return Err(ConfigError::Invalid(format!(
-                "world {} must be a power of two (recursive-doubling collectives)",
+                "world {} must be a power of two (recursive-doubling collectives); \
+                 arbitrary sizes need --elastic",
                 self.world
             )));
         }
@@ -485,6 +604,107 @@ impl TrainConfig {
                 "unknown machine preset '{}' for the auto algorithm picker",
                 self.machine
             )));
+        }
+        self.validate_elastic()
+    }
+
+    fn validate_elastic(&self) -> Result<(), ConfigError> {
+        let e = &self.elastic;
+        if !e.enabled {
+            if !e.kill.is_empty() || !e.stall.is_empty() || !e.rejoin.is_empty() {
+                return Err(ConfigError::Invalid(
+                    "fault injection (kill/stall/rejoin) requires --elastic".into(),
+                ));
+            }
+            if e.resume.is_some() || e.ckpt.is_some() || e.ckpt_every != 0 {
+                // the plain trainer never reads these — accepting them
+                // would silently train from fresh state
+                return Err(ConfigError::Invalid(
+                    "resume/ckpt/ckpt_every are elastic-run knobs; add --elastic".into(),
+                ));
+            }
+            return Ok(());
+        }
+        if e.ckpt_every > 0 && e.ckpt.is_none() {
+            return Err(ConfigError::Invalid(
+                "ckpt_every > 0 writes nothing without a --ckpt prefix".into(),
+            ));
+        }
+        if self.world > MAX_ELASTIC_WORLD {
+            return Err(ConfigError::Invalid(format!(
+                "elastic views are capped at {MAX_ELASTIC_WORLD} ranks (world {})",
+                self.world
+            )));
+        }
+        if e.heartbeat_ms == 0 {
+            return Err(ConfigError::Invalid("heartbeat_ms must be >= 1".into()));
+        }
+        if e.min_ranks == 0 || e.min_ranks > self.world {
+            return Err(ConfigError::Invalid(format!(
+                "min_ranks {} out of 1..={}",
+                e.min_ranks, self.world
+            )));
+        }
+        if self.device_select {
+            return Err(ConfigError::Invalid(
+                "elastic is incompatible with device_select (a reshaped epoch rebuilds \
+                 the engine off-thread state)"
+                    .into(),
+            ));
+        }
+        if self.algo == AlgoMode::Auto {
+            return Err(ConfigError::Invalid(
+                "elastic needs a static --algo (sparse|hierarchical); auto demotion is \
+                 planned per world size"
+                    .into(),
+            ));
+        }
+        if !matches!(self.warmup, WarmupKind::None) {
+            return Err(ConfigError::Invalid(
+                "elastic does not support warm-up schedules yet".into(),
+            ));
+        }
+        if self.eval_every != 0 {
+            return Err(ConfigError::Invalid(
+                "elastic runs do not evaluate mid-run (set eval_every=0)".into(),
+            ));
+        }
+        for f in e.kill.iter().chain(&e.rejoin) {
+            if f.rank >= self.world {
+                return Err(ConfigError::Invalid(format!(
+                    "fault rank {} out of world {}",
+                    f.rank, self.world
+                )));
+            }
+        }
+        for s in &e.stall {
+            if s.rank >= self.world {
+                return Err(ConfigError::Invalid(format!(
+                    "stall rank {} out of world {}",
+                    s.rank, self.world
+                )));
+            }
+        }
+        if !e.rejoin.is_empty() {
+            if e.rejoin.len() > 1 {
+                return Err(ConfigError::Invalid(
+                    "one scheduled rejoin per run is supported".into(),
+                ));
+            }
+            if self.transport != TransportKind::Local {
+                return Err(ConfigError::Invalid(
+                    "rejoin is orchestrated by the in-process trainer (transport=local); \
+                     TCP fleets support shrink only"
+                        .into(),
+                ));
+            }
+            if e.ckpt.is_none() || e.ckpt_every == 0 {
+                return Err(ConfigError::Invalid(
+                    "rejoin needs --ckpt PREFIX and ckpt_every > 0 (the returning rank \
+                     restores from its RSCK checkpoint)"
+                        .into(),
+                ));
+            }
         }
         Ok(())
     }
@@ -634,5 +854,64 @@ mod tests {
         let s = cfg.to_json().to_json();
         assert!(s.contains("\"strategy\""));
         assert!(s.contains("RGC"));
+        assert!(s.contains("\"elastic\""));
+    }
+
+    #[test]
+    fn elastic_knobs_apply_and_validate() {
+        use crate::elastic::{FaultSpec, StallSpec};
+        let mut cfg = TrainConfig::default();
+        cfg.apply_overrides(&[
+            "elastic=true".into(),
+            "heartbeat_ms=50".into(),
+            "min_ranks=2".into(),
+            "kill_rank=2@6".into(),
+            "stall_rank=1@4:500".into(),
+        ])
+        .unwrap();
+        assert!(cfg.elastic.enabled);
+        assert_eq!(cfg.elastic.heartbeat_ms, 50);
+        assert_eq!(cfg.elastic.min_ranks, 2);
+        assert_eq!(cfg.elastic.kill, vec![FaultSpec { rank: 2, step: 6 }]);
+        assert_eq!(cfg.elastic.stall, vec![StallSpec { rank: 1, step: 4, millis: 500 }]);
+        cfg.validate().unwrap();
+        // elastic admits non-power-of-two worlds (ring collectives)
+        cfg.world = 3;
+        cfg.elastic.kill.clear();
+        cfg.elastic.stall.clear();
+        cfg.validate().unwrap();
+        cfg.world = 4;
+        // fault rank must fit the world
+        cfg.apply_overrides(&["kill_rank=7@1".into()]).unwrap();
+        assert!(cfg.validate().is_err(), "kill rank outside world");
+        cfg.elastic.kill.clear();
+        // injection without elastic is rejected
+        let mut plain = TrainConfig::default();
+        plain.apply_overrides(&["kill_rank=1@2".into()]).unwrap();
+        assert!(plain.validate().is_err());
+        // so are the checkpoint/resume knobs (the plain trainer never
+        // reads them)
+        let mut plain = TrainConfig::default();
+        plain.apply_overrides(&["resume=/tmp/ck".into()]).unwrap();
+        assert!(plain.validate().is_err(), "resume without --elastic is a silent no-op");
+        // ckpt_every without a prefix writes nothing
+        let mut cadence = TrainConfig::default();
+        cadence.apply_overrides(&["elastic=true".into(), "ckpt_every=5".into()]).unwrap();
+        assert!(cadence.validate().is_err(), "ckpt_every needs --ckpt");
+        // rejoin needs checkpoints and the local transport
+        cfg.apply_overrides(&["rejoin_rank=2@12".into()]).unwrap();
+        assert!(cfg.validate().is_err(), "rejoin without ckpt");
+        cfg.apply_overrides(&["ckpt=/tmp/ck".into(), "ckpt_every=6".into()]).unwrap();
+        cfg.validate().unwrap();
+        cfg.transport = TransportKind::Tcp;
+        assert!(cfg.validate().is_err(), "rejoin over tcp");
+        cfg.transport = TransportKind::Local;
+        // incompatible modes
+        cfg.eval_every = 4;
+        assert!(cfg.validate().is_err(), "elastic forbids mid-run eval");
+        cfg.eval_every = 0;
+        cfg.algo = AlgoMode::Auto;
+        cfg.topology = Some(Topology::new(1, 4));
+        assert!(cfg.validate().is_err(), "elastic forbids algo=auto");
     }
 }

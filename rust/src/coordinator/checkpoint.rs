@@ -4,18 +4,25 @@
 //!
 //! Binary format (little-endian):
 //! ```text
-//! magic "RSCK" | version u32 | step u64 | seed u64 | n_layers u32
+//! magic "RSCK" | version u32 | step u64 | seed u64
+//! | view_epoch u64                                 (version >= 2)
+//! | n_layers u32
 //! per layer: n u64 | params f32[n] | flags u32
 //!            [residual f32[n] | momentum f32[n]]   (flag bit 0)
 //!            [velocity f32[n]]                     (flag bit 1)
 //! trailer: fnv hash u64 of everything above
 //! ```
+//!
+//! Version 2 adds the membership `view_epoch` (DESIGN.md
+//! §Elastic-Membership): resumes and rejoins re-key the data sharder by
+//! `(seed, view_epoch, rank)`, so the epoch must travel with the state.
+//! Version-1 blobs still parse (epoch 0).
 
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"RSCK";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 #[derive(Debug)]
 pub enum CheckpointError {
@@ -59,6 +66,9 @@ pub struct LayerState {
 pub struct Checkpoint {
     pub step: u64,
     pub seed: u64,
+    /// Membership view epoch the state was taken under (0 for a fresh
+    /// run; bumped by every elastic reshape/rejoin).
+    pub view_epoch: u64,
     pub layers: Vec<LayerState>,
 }
 
@@ -100,6 +110,7 @@ impl Checkpoint {
         out.extend_from_slice(&VERSION.to_le_bytes());
         out.extend_from_slice(&self.step.to_le_bytes());
         out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&self.view_epoch.to_le_bytes());
         out.extend_from_slice(&(self.layers.len() as u32).to_le_bytes());
         fnv(&mut h, &out[..]);
         for l in &self.layers {
@@ -151,11 +162,22 @@ impl Checkpoint {
             v
         };
         let version = rd_u32(body, &mut pos);
-        if version != VERSION {
+        if version == 0 || version > VERSION {
             return Err(CheckpointError::BadVersion(version));
         }
         let step = rd_u64(body, &mut pos);
         let seed = rd_u64(body, &mut pos);
+        let view_epoch = if version >= 2 {
+            if body.len() < pos + 8 {
+                return Err(CheckpointError::Corrupt("truncated view epoch".into()));
+            }
+            rd_u64(body, &mut pos)
+        } else {
+            0
+        };
+        if body.len() < pos + 4 {
+            return Err(CheckpointError::Corrupt("truncated layer count".into()));
+        }
         let n_layers = rd_u32(body, &mut pos) as usize;
         let mut layers = Vec::with_capacity(n_layers);
         for _ in 0..n_layers {
@@ -177,7 +199,7 @@ impl Checkpoint {
         if pos != body.len() {
             return Err(CheckpointError::Corrupt("trailing bytes".into()));
         }
-        Ok(Checkpoint { step, seed, layers })
+        Ok(Checkpoint { step, seed, view_epoch, layers })
     }
 
     pub fn save(&self, path: impl AsRef<Path>) -> Result<(), CheckpointError> {
@@ -208,6 +230,7 @@ mod tests {
         Checkpoint {
             step: 1234,
             seed: 42,
+            view_epoch: 3,
             layers: vec![
                 LayerState {
                     params: mk(100),
@@ -274,7 +297,42 @@ mod tests {
 
     #[test]
     fn empty_checkpoint_roundtrips() {
-        let ck = Checkpoint { step: 0, seed: 0, layers: vec![] };
+        let ck = Checkpoint { step: 0, seed: 0, view_epoch: 0, layers: vec![] };
         assert_eq!(Checkpoint::from_bytes(&ck.to_bytes()).unwrap(), ck);
+    }
+
+    #[test]
+    fn version_1_blobs_still_parse_with_epoch_zero() {
+        // hand-build a v1 blob: same layout minus the view_epoch field
+        let ck = sample();
+        let mut out = Vec::new();
+        let mut h: u64 = 0xcbf29ce484222325;
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&ck.step.to_le_bytes());
+        out.extend_from_slice(&ck.seed.to_le_bytes());
+        out.extend_from_slice(&(ck.layers.len() as u32).to_le_bytes());
+        fnv(&mut h, &out[..]);
+        for l in &ck.layers {
+            let mut head = Vec::with_capacity(12);
+            head.extend_from_slice(&(l.params.len() as u64).to_le_bytes());
+            let flags: u32 = (l.residual.is_some() as u32) | ((l.velocity.is_some() as u32) << 1);
+            head.extend_from_slice(&flags.to_le_bytes());
+            fnv(&mut h, &head);
+            out.extend_from_slice(&head);
+            put_f32s(&mut out, &mut h, &l.params);
+            if let Some((v, u)) = &l.residual {
+                put_f32s(&mut out, &mut h, v);
+                put_f32s(&mut out, &mut h, u);
+            }
+            if let Some(vel) = &l.velocity {
+                put_f32s(&mut out, &mut h, vel);
+            }
+        }
+        out.extend_from_slice(&h.to_le_bytes());
+        let back = Checkpoint::from_bytes(&out).unwrap();
+        assert_eq!(back.view_epoch, 0, "v1 blobs predate membership epochs");
+        assert_eq!(back.layers, ck.layers);
+        assert_eq!((back.step, back.seed), (ck.step, ck.seed));
     }
 }

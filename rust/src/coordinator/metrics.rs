@@ -29,6 +29,48 @@ pub mod phase {
         &[COMPUTE, MASK, SELECT, PACK, COMM_SPARSE, COMM_DENSE, UNPACK, UPDATE];
 }
 
+/// One membership change of an elastic run (DESIGN.md
+/// §Elastic-Membership): which ranks left/returned, how long detection
+/// and the reshape stall took, and where training resumed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MembershipEvent {
+    /// The view epoch this event established.
+    pub epoch: u64,
+    /// World ranks confirmed lost by this reshape.
+    pub lost: Vec<usize>,
+    /// World ranks that rejoined at this barrier.
+    pub joined: Vec<usize>,
+    /// Seconds from the last completed step boundary to fault detection.
+    pub detect_secs: f64,
+    /// Seconds the reshape (agreement + rollback) stalled training.
+    pub reshape_secs: f64,
+    /// Step the new view resumed from.
+    pub resume_step: usize,
+    /// View size after the event.
+    pub world_after: usize,
+}
+
+impl MembershipEvent {
+    /// One summary line, e.g.
+    /// `epoch 1: lost [2] -> 3 ranks, detect 12ms, reshape 3ms, resume @6`.
+    pub fn describe(&self) -> String {
+        let what = if !self.joined.is_empty() {
+            format!("joined {:?}", self.joined)
+        } else {
+            format!("lost {:?}", self.lost)
+        };
+        format!(
+            "epoch {}: {} -> {} ranks, detect {:.0}ms, reshape {:.0}ms, resume @{}",
+            self.epoch,
+            what,
+            self.world_after,
+            self.detect_secs * 1e3,
+            self.reshape_secs * 1e3,
+            self.resume_step
+        )
+    }
+}
+
 /// What one worker hands back after its training loop.
 #[derive(Debug)]
 pub struct WorkerResult {
@@ -53,6 +95,9 @@ pub struct WorkerResult {
     /// The control-channel (tag 0) share of `mux_bytes`: dense
     /// allreduces, loss averaging, replica-hash checks.
     pub mux_ctrl_bytes: u64,
+    /// Membership changes this worker lived through (elastic runs;
+    /// empty otherwise).
+    pub membership: Vec<MembershipEvent>,
 }
 
 /// FNV-1a over f32 bit patterns.
@@ -98,6 +143,14 @@ pub struct TrainReport {
     pub final_eval: Option<f32>,
     /// All ranks ended with bit-identical parameters.
     pub replicas_consistent: bool,
+    /// Membership-event log of an elastic run: view epochs, lost/joined
+    /// ranks, per-event detection and reshape stall times.
+    pub membership: Vec<MembershipEvent>,
+    /// Set when this rank did not run to completion but that is an
+    /// *expected* elastic outcome (killed by injection, evicted from
+    /// the view): the launcher treats such ranks as clean exits, and
+    /// the summary says why instead of claiming replica consistency.
+    pub status_note: Option<String>,
 }
 
 impl TrainReport {
@@ -158,6 +211,15 @@ impl TrainReport {
         if let Some(&(_, d)) = self.union_density.last() {
             let _ = writeln!(s, "  union density of synced residual: {:.3}%", d * 100.0);
         }
+        if !self.membership.is_empty() {
+            let _ = writeln!(s, "  membership events:");
+            for e in &self.membership {
+                let _ = writeln!(s, "    {}", e.describe());
+            }
+        }
+        if let Some(note) = &self.status_note {
+            let _ = writeln!(s, "  elastic status: {note}");
+        }
         s
     }
 
@@ -213,11 +275,39 @@ mod tests {
             final_loss: 1.0,
             final_eval: None,
             replicas_consistent: true,
+            membership: vec![MembershipEvent {
+                epoch: 1,
+                lost: vec![2],
+                joined: vec![],
+                detect_secs: 0.012,
+                reshape_secs: 0.003,
+                resume_step: 6,
+                world_after: 3,
+            }],
+            status_note: Some("evicted from the view at epoch 1".into()),
         };
         assert!((r.phase_fraction(phase::COMPUTE) - 0.75).abs() < 1e-12);
         assert_eq!(r.bytes_per_step_per_rank(), 4096.0 / 20.0);
         let s = r.summary();
         assert!(s.contains("RGC") && s.contains("union density"));
         assert!(s.contains("muxed streams"), "{s}");
+        assert!(s.contains("membership events"), "{s}");
+        assert!(s.contains("lost [2] -> 3 ranks"), "{s}");
+        assert!(s.contains("elastic status: evicted"), "{s}");
+    }
+
+    #[test]
+    fn membership_event_describe_covers_joins() {
+        let e = MembershipEvent {
+            epoch: 2,
+            lost: vec![],
+            joined: vec![2],
+            detect_secs: 0.0,
+            reshape_secs: 0.0,
+            resume_step: 12,
+            world_after: 4,
+        };
+        let s = e.describe();
+        assert!(s.contains("joined [2]") && s.contains("resume @12"), "{s}");
     }
 }

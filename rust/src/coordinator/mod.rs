@@ -73,7 +73,14 @@ impl Trainer {
     }
 
     /// Run the full training job; blocks until all workers finish.
+    /// Elastic runs (`cfg.elastic.enabled`) go through the
+    /// membership-aware fleet instead (`crate::elastic`): injected
+    /// kills/stalls, reshapes and rejoins are survived rather than
+    /// fatal.
     pub fn run(&self) -> Result<TrainReport, TrainError> {
+        if self.cfg.elastic.enabled {
+            return self.run_elastic();
+        }
         let world = self.cfg.world;
         let mut fabric = LocalFabric::new(world);
         let stats = std::sync::Arc::clone(&fabric.stats);
@@ -129,6 +136,92 @@ impl Trainer {
             mux_ctrl_bytes,
             wall_secs,
             replicas_consistent,
+            membership: rank0.membership,
+            status_note: None,
+        })
+    }
+
+    /// The elastic in-process fleet: fabric generations (shrink in
+    /// place, rejoin via a fresh full-world generation) orchestrated by
+    /// [`crate::elastic::run_local_fleet`], with the real PJRT model
+    /// behind the driver's `Workload`.
+    fn run_elastic(&self) -> Result<TrainReport, TrainError> {
+        use crate::elastic::ElasticStatus;
+        let cfg = &self.cfg;
+        let schema = &self.schema;
+        let world = cfg.world;
+        let specs = worker::elastic_specs(cfg, schema);
+        let opts = worker::elastic_opts(cfg);
+        let fleet = crate::elastic::run_local_fleet(
+            world,
+            &specs,
+            &opts,
+            |rank| worker::elastic_init(cfg, schema, &specs, rank),
+            |_rank| worker::ModelWorkload::new(cfg, schema),
+        )
+        .map_err(TrainError::Worker)?;
+
+        let finished: Vec<usize> = (0..world)
+            .filter(|&r| fleet.ranks[r].status == ElasticStatus::Finished)
+            .collect();
+        if finished.is_empty() {
+            return Err(TrainError::Worker(
+                "no rank survived to the end of the elastic run".into(),
+            ));
+        }
+        let replicas_consistent =
+            finished.iter().all(|&r| fleet.ranks[r].replicas_consistent);
+        // the view leader (group-local rank 0) records the loss curve,
+        // and the leader itself can be a casualty — merge every rank's
+        // curve, finished ranks first (their post-rollback values are
+        // the canonical trajectory; a dead leader only fills in steps
+        // nobody else logged)
+        let mut curve: std::collections::BTreeMap<usize, f32> = std::collections::BTreeMap::new();
+        for &r in &finished {
+            for &(s, l) in &fleet.ranks[r].loss_curve {
+                curve.entry(s).or_insert(l);
+            }
+        }
+        for o in &fleet.ranks {
+            for &(s, l) in &o.loss_curve {
+                curve.entry(s).or_insert(l);
+            }
+        }
+        let loss_curve: Vec<(usize, f32)> = curve.into_iter().collect();
+        let reporter = finished
+            .iter()
+            .copied()
+            .max_by_key(|&r| fleet.ranks[r].loss_curve.len())
+            .expect("nonempty");
+        let mut phases = PhaseTimer::new();
+        let mut mux_bytes = 0u64;
+        let mut mux_ctrl_bytes = 0u64;
+        for o in &fleet.ranks {
+            phases.merge(&o.timer);
+            mux_bytes += o.mux_words * 4;
+            mux_ctrl_bytes += o.ctrl_words * 4;
+        }
+        let lead = &fleet.ranks[reporter];
+        Ok(TrainReport {
+            model: cfg.model.clone(),
+            world,
+            steps: cfg.steps,
+            strategy: cfg.strategy.label(),
+            final_loss: lead.final_loss,
+            final_eval: None,
+            loss_curve,
+            eval_curve: Vec::new(),
+            union_density: Vec::new(),
+            sent_density: Vec::new(),
+            phases,
+            bytes: fleet.bytes,
+            messages: fleet.messages,
+            mux_bytes,
+            mux_ctrl_bytes,
+            wall_secs: fleet.wall_secs,
+            replicas_consistent,
+            membership: lead.events.clone(),
+            status_note: None,
         })
     }
 }
@@ -148,6 +241,9 @@ impl Trainer {
         transport: &T,
         stats: Option<&TrafficStats>,
     ) -> Result<TrainReport, TrainError> {
+        if self.cfg.elastic.enabled {
+            return self.run_rank_elastic(transport, stats);
+        }
         let start = Instant::now();
         let result = worker::run_worker(&self.cfg, &self.schema, transport)
             .map_err(TrainError::Worker)?;
@@ -177,6 +273,58 @@ impl Trainer {
             mux_ctrl_bytes: result.mux_ctrl_bytes,
             wall_secs,
             replicas_consistent,
+            membership: result.membership,
+            status_note: None,
+        })
+    }
+
+    /// One elastic rank over an external transport (`redsync launch`
+    /// with `--elastic`): the view's consistency verdict comes from the
+    /// driver's final in-view hash exchange.  A killed or evicted rank
+    /// reports its partial run with an explicit `status_note` (the
+    /// launcher treats that as a clean exit without claiming replica
+    /// consistency).
+    fn run_rank_elastic<T: Transport + Sync>(
+        &self,
+        transport: &T,
+        stats: Option<&TrafficStats>,
+    ) -> Result<TrainReport, TrainError> {
+        use crate::elastic::ElasticStatus;
+        let start = Instant::now();
+        let (result, out) =
+            worker::run_worker_elastic(&self.cfg, &self.schema, transport)
+                .map_err(TrainError::Worker)?;
+        let wall_secs = start.elapsed().as_secs_f64();
+        let status_note = match out.status {
+            ElasticStatus::Finished => None,
+            ElasticStatus::Killed => {
+                Some(format!("killed by fault injection at step {}", out.state.step))
+            }
+            ElasticStatus::Evicted => {
+                Some(format!("evicted from the view at epoch {}", out.epoch))
+            }
+            ElasticStatus::Paused => Some("paused at a rejoin barrier".into()),
+        };
+        Ok(TrainReport {
+            model: self.cfg.model.clone(),
+            world: self.cfg.world,
+            steps: self.cfg.steps,
+            strategy: self.cfg.strategy.label(),
+            final_loss: result.final_loss,
+            final_eval: None,
+            loss_curve: result.loss_curve,
+            eval_curve: Vec::new(),
+            union_density: Vec::new(),
+            sent_density: Vec::new(),
+            phases: result.timer,
+            bytes: stats.map_or(0, |s| s.bytes()),
+            messages: stats.map_or(0, |s| s.message_count()),
+            mux_bytes: result.mux_bytes,
+            mux_ctrl_bytes: result.mux_ctrl_bytes,
+            wall_secs,
+            replicas_consistent: out.replicas_consistent,
+            membership: result.membership,
+            status_note,
         })
     }
 }
@@ -298,6 +446,39 @@ mod tests {
         assert!(r.replicas_consistent);
         let acc = r.final_eval.unwrap();
         assert!(acc > 0.5, "accuracy {acc}");
+    }
+
+    #[test]
+    fn elastic_no_fault_matches_the_plain_trainer() {
+        // the elastic stack (heartbeats, snapshots, group-scoped
+        // collectives) must not change the math: without faults its
+        // loss trajectory is bit-identical to the fail-fast trainer's
+        let Some(m) = manifest() else { return };
+        let mut cfg = smoke_cfg(Strategy::Rgc);
+        cfg.eval_every = 0;
+        let plain = Trainer::new(&m, cfg.clone()).unwrap().run().unwrap();
+        cfg.elastic.enabled = true;
+        let elastic = Trainer::new(&m, cfg).unwrap().run().unwrap();
+        assert!(elastic.replicas_consistent);
+        assert!(elastic.membership.is_empty(), "no faults, no events");
+        assert_eq!(plain.loss_curve, elastic.loss_curve, "elastic changed the math");
+    }
+
+    #[test]
+    fn elastic_run_survives_an_injected_kill() {
+        use crate::elastic::FaultSpec;
+        let Some(m) = manifest() else { return };
+        let mut cfg = smoke_cfg(Strategy::Rgc);
+        cfg.eval_every = 0;
+        cfg.steps = 10;
+        cfg.elastic.enabled = true;
+        cfg.elastic.kill = vec![FaultSpec { rank: 1, step: 5 }];
+        let r = Trainer::new(&m, cfg).unwrap().run().unwrap();
+        assert!(r.replicas_consistent, "survivor must finish consistent");
+        assert_eq!(r.membership.len(), 1, "{:?}", r.membership);
+        assert_eq!(r.membership[0].lost, vec![1]);
+        assert_eq!(r.membership[0].world_after, 1);
+        assert!(r.summary().contains("membership events"));
     }
 
     #[test]

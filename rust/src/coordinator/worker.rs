@@ -11,6 +11,7 @@
 //! [`TagMux`] control channel so concurrent bucket collectives can share
 //! the endpoint.
 
+use super::checkpoint::Checkpoint;
 use super::metrics::{param_hash, phase, WorkerResult};
 use crate::collectives::group::{Algo, Topology};
 use crate::collectives::mux::{TagChannel, TagMux};
@@ -20,6 +21,7 @@ use crate::compression::{CompressorConfig, Method};
 use crate::config::{AlgoMode, TrainConfig};
 use crate::costmodel;
 use crate::data::{ClusterDataset, ZipfMarkovCorpus};
+use crate::elastic::{self, ElasticOpts, ElasticStatus, RankOutcome, ShardKey, Workload};
 use crate::models::schema::ModelSchema;
 use crate::optim::{clip_by_global_norm, local_clip_factor, DenseOptState};
 use crate::pipeline::{
@@ -31,7 +33,7 @@ use crate::runtime::{CompressOps, DeviceSelector, Runtime};
 use crate::simnet::iteration::Strategy;
 use crate::simnet::Machine;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Per-layer synchronization plan (Alg. 5 dispatch, decided once).  The
 /// compressed layers' evolving state (residual, alternator, threshold
@@ -78,23 +80,38 @@ impl DataSource {
     }
 
     fn batch(&self, schema: &ModelSchema, rank: usize, world: usize, step: usize) -> Batch {
+        self.batch_salted(schema, rank, world, step, 0)
+    }
+
+    /// Shard re-keyed by `(seed, view_epoch, rank)`: the elastic driver
+    /// passes the membership view epoch as the salt, so a reshaped
+    /// world draws fresh, still-disjoint shards.
+    fn batch_salted(
+        &self,
+        schema: &ModelSchema,
+        rank: usize,
+        world: usize,
+        step: usize,
+        salt: u64,
+    ) -> Batch {
         match self {
             DataSource::Lm(corpus) => {
-                let (tokens, targets) = corpus.batch(
+                let (tokens, targets) = corpus.batch_salted(
                     rank,
                     step,
+                    salt,
                     schema.cfg("batch").unwrap(),
                     schema.cfg("seq").unwrap(),
                 );
                 Batch::Lm { tokens, targets }
             }
             DataSource::Mlp(ds) => {
-                let (x, y) = ds.batch(rank, world, step, schema.cfg("batch").unwrap());
+                let (x, y) =
+                    ds.batch_salted(rank, world, step, salt, schema.cfg("batch").unwrap());
                 Batch::Mlp { x, y }
             }
         }
     }
-
 }
 
 /// Step id of the fixed held-out LM eval batch (rank id `world + 1` keeps
@@ -357,7 +374,158 @@ pub fn run_worker<T: Transport + Sync>(
         final_loss,
         mux_bytes,
         mux_ctrl_bytes,
+        membership: Vec::new(),
     })
+}
+
+// ---------------------------------------------------------------------
+// Elastic glue: the real model behind the elastic driver's Workload
+// (DESIGN.md §Elastic-Membership)
+// ---------------------------------------------------------------------
+
+/// The PJRT-backed model as an elastic [`Workload`]: shard selection is
+/// keyed by the driver's group-local `(rank, world)` plus the view
+/// epoch, so a reshaped run consumes exactly the batches a fresh
+/// shrunken-world run would.
+pub struct ModelWorkload<'a> {
+    rt: Runtime,
+    runner: StepRunner,
+    schema: &'a ModelSchema,
+    data: DataSource,
+}
+
+impl<'a> ModelWorkload<'a> {
+    pub fn new(cfg: &TrainConfig, schema: &'a ModelSchema) -> Result<ModelWorkload<'a>, String> {
+        let rt = Runtime::new().map_err(|e| format!("runtime: {e}"))?;
+        let runner = StepRunner::new(&rt, schema).map_err(|e| format!("load: {e}"))?;
+        let data = DataSource::for_model(schema, cfg.seed);
+        Ok(ModelWorkload { rt, runner, schema, data })
+    }
+}
+
+impl Workload for ModelWorkload<'_> {
+    fn compute(
+        &mut self,
+        params: &[Vec<f32>],
+        key: &ShardKey,
+    ) -> Result<(f32, Vec<Vec<f32>>), String> {
+        let batch =
+            self.data.batch_salted(self.schema, key.rank, key.world, key.step, key.epoch);
+        self.runner
+            .step(&self.rt, params, &batch)
+            .map_err(|e| format!("step {}: {e}", key.step))
+    }
+}
+
+/// Per-layer specs for the elastic driver: the §5.5 policy over every
+/// schema layer, dense layers included (the driver owns the dense path
+/// too).
+pub fn elastic_specs(cfg: &TrainConfig, schema: &ModelSchema) -> Vec<LayerSpec> {
+    schema
+        .params
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let method = if cfg.strategy == Strategy::Dense {
+                Method::Dense
+            } else {
+                Method::for_size(p.bytes(), cfg.thresholds)
+            };
+            let quantize = cfg.strategy == Strategy::QuantRgc
+                && method != Method::Dense
+                && !schema.is_output_param(i);
+            LayerSpec { li: i, n: p.size(), method, quantize }
+        })
+        .collect()
+}
+
+/// Driver options from the run config.
+pub fn elastic_opts(cfg: &TrainConfig) -> ElasticOpts {
+    ElasticOpts {
+        steps: cfg.steps,
+        density: cfg.density,
+        lr: cfg.lr.clone(),
+        clip: cfg.clip,
+        optimizer: cfg.optimizer,
+        fusion_cap_elems: cfg.fusion_cap_elems,
+        pipeline: cfg.pipeline,
+        inflight: cfg.inflight,
+        topology: cfg.topology,
+        hierarchical: cfg.algo == AlgoMode::Hierarchical,
+        log_every: cfg.log_every,
+        heartbeat: Duration::from_millis(cfg.elastic.heartbeat_ms),
+        min_ranks: cfg.elastic.min_ranks,
+        kill: cfg.elastic.kill.clone(),
+        stall: cfg.elastic.stall.clone(),
+        rejoin: cfg.elastic.rejoin.clone(),
+        ckpt_prefix: cfg.elastic.ckpt.clone(),
+        ckpt_every: cfg.elastic.ckpt_every,
+        cc: CompressorConfig {
+            density: cfg.density,
+            timing: cfg.phase_timing,
+            ..Default::default()
+        },
+    }
+}
+
+/// A rank's starting state: its resume checkpoint when configured,
+/// fresh seeded parameters otherwise.
+pub fn elastic_init(
+    cfg: &TrainConfig,
+    schema: &ModelSchema,
+    specs: &[LayerSpec],
+    rank: usize,
+) -> Result<Checkpoint, String> {
+    if let Some(prefix) = &cfg.elastic.resume {
+        let path = format!("{prefix}_rank{rank}.rsck");
+        return Checkpoint::load(&path).map_err(|e| format!("resume {path}: {e}"));
+    }
+    Ok(elastic::fresh_checkpoint(
+        schema.init_params(cfg.seed),
+        specs,
+        cfg.optimizer,
+        cfg.seed,
+    ))
+}
+
+/// Bridge a driver outcome into the run-report shape.
+pub fn worker_result_from(rank: usize, o: &RankOutcome) -> WorkerResult {
+    WorkerResult {
+        rank,
+        timer: o.timer.clone(),
+        loss_curve: o.loss_curve.clone(),
+        eval_curve: Vec::new(),
+        union_density: Vec::new(),
+        sent_density: Vec::new(),
+        param_hash: o.param_hash,
+        final_loss: o.final_loss,
+        mux_bytes: o.mux_words * 4,
+        mux_ctrl_bytes: o.ctrl_words * 4,
+        membership: o.events.clone(),
+    }
+}
+
+/// Run one elastic rank over an already-connected transport (the TCP
+/// path; the in-process trainer goes through
+/// [`crate::elastic::run_local_fleet`] instead, which also handles
+/// rejoin generations).
+pub fn run_worker_elastic<T: Transport + Sync>(
+    cfg: &TrainConfig,
+    schema: &ModelSchema,
+    transport: &T,
+) -> Result<(WorkerResult, RankOutcome), String> {
+    let rank = transport.rank();
+    let specs = elastic_specs(cfg, schema);
+    let init = elastic_init(cfg, schema, &specs, rank)?;
+    let mut workload =
+        ModelWorkload::new(cfg, schema).map_err(|e| format!("rank {rank}: {e}"))?;
+    let opts = elastic_opts(cfg);
+    let out = elastic::run_elastic_worker(transport, &specs, init, None, &opts, &mut workload)
+        .map_err(|e| format!("rank {rank}: {e}"))?;
+    if out.status == ElasticStatus::Killed {
+        crate::log_warn!("rank {rank}: exited by injected kill");
+    }
+    Ok((worker_result_from(rank, &out), out))
 }
 
 fn build_plans(cfg: &TrainConfig, schema: &ModelSchema) -> Vec<LayerPlan> {

@@ -63,7 +63,24 @@ impl ZipfMarkovCorpus {
         batch: usize,
         seq: usize,
     ) -> (Vec<i32>, Vec<i32>) {
-        let mut rng = Pcg32::new((step as u64) << 16 | rank as u64, 0xBA7C);
+        self.batch_salted(rank, step, 0, batch, seq)
+    }
+
+    /// [`batch`](Self::batch) with a shard salt: the elastic layer
+    /// passes the membership view epoch, re-keying every rank's stream
+    /// by `(seed, view_epoch, rank)` after a reshape or rejoin so the
+    /// new world's shards stay disjoint without replaying old draws.
+    /// Salt 0 reproduces `batch` exactly.
+    pub fn batch_salted(
+        &self,
+        rank: usize,
+        step: usize,
+        salt: u64,
+        batch: usize,
+        seq: usize,
+    ) -> (Vec<i32>, Vec<i32>) {
+        let stream = 0xBA7C ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Pcg32::new((step as u64) << 16 | rank as u64, stream);
         let mut tokens = Vec::with_capacity(batch * seq);
         let mut targets = Vec::with_capacity(batch * seq);
         for _ in 0..batch {
@@ -133,11 +150,27 @@ impl ClusterDataset {
         step: usize,
         batch: usize,
     ) -> (Vec<f32>, Vec<i32>) {
+        self.batch_salted(rank, world, step, 0, batch)
+    }
+
+    /// [`batch`](Self::batch) re-keyed by a shard salt (the elastic
+    /// membership view epoch): shards stay disjoint per rank within a
+    /// view, and a reshaped world draws a fresh stream.  Salt 0
+    /// reproduces `batch` exactly.
+    pub fn batch_salted(
+        &self,
+        rank: usize,
+        world: usize,
+        step: usize,
+        salt: u64,
+        batch: usize,
+    ) -> (Vec<f32>, Vec<i32>) {
         let n = self.train_len();
         let shard = n / world;
         let lo = rank * shard;
         let hi = if rank == world - 1 { n } else { lo + shard };
-        let mut rng = Pcg32::new((step as u64) << 16 | rank as u64, 0xBA7C + 1);
+        let stream = (0xBA7C + 1) ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Pcg32::new((step as u64) << 16 | rank as u64, stream);
         let mut xs = Vec::with_capacity(batch * self.dim);
         let mut ys = Vec::with_capacity(batch);
         for _ in 0..batch {
@@ -209,6 +242,19 @@ mod tests {
         let (xs, ys) = d.batch(0, 4, 0, 32);
         assert_eq!(xs.len(), 32 * 16);
         assert!(ys.iter().all(|&y| (0..4).contains(&y)));
+    }
+
+    #[test]
+    fn salted_batches_rekey_the_stream() {
+        // salt 0 is the unsalted stream; a nonzero view epoch draws a
+        // different — but still deterministic — batch per (rank, step)
+        let c = ZipfMarkovCorpus::new(64, 7, 1.0);
+        assert_eq!(c.batch_salted(0, 3, 0, 4, 16), c.batch(0, 3, 4, 16));
+        assert_ne!(c.batch_salted(0, 3, 1, 4, 16).0, c.batch(0, 3, 4, 16).0);
+        assert_eq!(c.batch_salted(1, 3, 2, 4, 16), c.batch_salted(1, 3, 2, 4, 16));
+        let d = ClusterDataset::new(200, 4, 2, 3.0, 5);
+        assert_eq!(d.batch_salted(0, 2, 0, 0, 16), d.batch(0, 2, 0, 16));
+        assert_ne!(d.batch_salted(0, 2, 0, 1, 16).0, d.batch(0, 2, 0, 16).0);
     }
 
     #[test]

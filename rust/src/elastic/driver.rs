@@ -1,0 +1,931 @@
+//! The elastic training driver: the per-rank epoch/step loop that keeps
+//! a compressed-sync run alive across membership changes.
+//!
+//! One *membership epoch* is a stretch of steps under a fixed view.
+//! Per epoch the driver builds the full elastic stack over the raw
+//! fabric endpoint:
+//!
+//! ```text
+//! raw Transport (world ranks, lives across epochs)
+//!   └─ ProcessGroup(view members)     rank translation for the view
+//!        └─ Watched                   failure recording → FailBoard
+//!             └─ TagMux               ctrl tag 0 | bucket tags | hb tag
+//!                  ├─ TagChannel ctrl   dense/loss collectives (+ the
+//!                  │                    Sequential engine's buckets)
+//!                  ├─ bucket channels   Pipelined engine comm pool
+//!                  └─ TagChannel hb     heartbeat monitor thread
+//! ```
+//!
+//! Every completed step pushes a full state snapshot (params, per-layer
+//! residual/momentum from the engine, dense velocities) into a
+//! two-deep ring; bulk-synchronous steps keep ranks within one step of
+//! each other, so the ring always covers the reshape's agreed resume
+//! step.  A step that dies mid-collective (peer loss panics by the
+//! transport contract) is caught, classified against the epoch's
+//! `FailBoard` and parked out-of-band frames, and resolved by
+//! [`reshape::agree`](super::reshape::agree); survivors roll back to
+//! the agreed snapshot and rebuild the whole stack for the shrunken
+//! view — bit-identically to a fresh run started from that snapshot,
+//! which is exactly what `tests/elastic.rs` pins.
+//!
+//! The model side is abstracted behind [`Workload`], so the driver runs
+//! artifact-free under tests/benches and with the real PJRT step
+//! runner under `coordinator::worker`.
+
+use super::heartbeat::{spawn_monitor, Freezer};
+use super::reshape::{agree, Agreement};
+use super::{derive_topology, FailBoard, FaultSpec, StallSpec, Watched, MAX_ELASTIC_WORLD};
+use crate::collectives::group::{Algo, ProcessGroup, Topology};
+use crate::collectives::mux::{TagChannel, TagMux};
+use crate::collectives::transport::{f32s_to_words, words_to_f32s};
+use crate::collectives::{allgather, allreduce_mean, Transport};
+use crate::compression::{CompressorConfig, Method};
+use crate::coordinator::checkpoint::{Checkpoint, LayerState};
+use crate::coordinator::metrics::{param_hash, phase, MembershipEvent};
+use crate::optim::{clip_by_global_norm, local_clip_factor, DenseOptState, LrSchedule, Optimizer};
+use crate::pipeline::{
+    build_buckets, BucketDone, BucketState, LayerSpec, Pipelined, Sequential, SyncEngine,
+    BUCKET_TAG_BASE, CTRL_TAG,
+};
+use crate::util::timer::PhaseTimer;
+use std::collections::{BTreeMap, VecDeque};
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Which shard of the data stream a step consumes: group-local rank and
+/// view size plus the membership epoch — the `(seed, view_epoch, rank)`
+/// re-keying that keeps shards disjoint across reshapes.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardKey {
+    pub epoch: u64,
+    pub rank: usize,
+    pub world: usize,
+    pub step: usize,
+}
+
+/// The model side of a step: everything the elastic driver does *not*
+/// own.  Implementations must be deterministic in `(params, key)` — the
+/// root of the post-reshape bit-identity guarantee.
+pub trait Workload {
+    /// Forward/backward on this rank's shard: `(loss, per-layer grads)`
+    /// in schema layer order.
+    fn compute(&mut self, params: &[Vec<f32>], key: &ShardKey)
+        -> Result<(f32, Vec<Vec<f32>>), String>;
+}
+
+/// Scheduled rejoin of a previously lost rank, executed at the start of
+/// a fresh fabric generation (`orchestrate::run_local_fleet`): the
+/// donor streams its current parameter image to the rejoiner over the
+/// control channel (the "delta" advancing the rejoiner's checkpoint to
+/// the barrier step); residual/momentum/velocity stay the rejoiner's
+/// own checkpointed per-rank state.
+#[derive(Clone, Copy, Debug)]
+pub struct JoinPlan {
+    pub rejoiner: usize,
+    pub donor: usize,
+    pub resume_step: usize,
+    pub epoch: u64,
+}
+
+/// Everything the elastic driver needs beyond the transport and the
+/// workload.  Mirrors the `config::ElasticConfig` + run knobs; kept
+/// separate so tests and benches drive the subsystem without a full
+/// `TrainConfig`.
+#[derive(Clone, Debug)]
+pub struct ElasticOpts {
+    pub steps: usize,
+    pub density: f64,
+    pub lr: LrSchedule,
+    pub clip: Option<f32>,
+    pub optimizer: Optimizer,
+    pub fusion_cap_elems: usize,
+    pub pipeline: bool,
+    pub inflight: usize,
+    pub topology: Option<Topology>,
+    /// Run every bucket's collective on the hierarchical schedule.
+    pub hierarchical: bool,
+    pub log_every: usize,
+    /// Heartbeat interval; the lease is 4× this.
+    pub heartbeat: Duration,
+    pub min_ranks: usize,
+    pub kill: Vec<FaultSpec>,
+    pub stall: Vec<StallSpec>,
+    /// Scheduled rejoins (rank, step) — `orchestrate` pauses the fleet
+    /// at the step barrier and restarts a full-world generation.
+    pub rejoin: Vec<FaultSpec>,
+    /// Path prefix for `RSCK` files (periodic `{prefix}_rank{R}.rsck`,
+    /// reshape dumps `{prefix}_reshape_e{E}_rank{R}.rsck`, the
+    /// rejoiner's `{prefix}_join_rank{R}.rsck` — `R` always the world
+    /// rank, so disjoint views never clobber each other).
+    pub ckpt_prefix: Option<String>,
+    /// Write a periodic checkpoint every this many steps (0 = never).
+    pub ckpt_every: usize,
+    pub cc: CompressorConfig,
+}
+
+impl Default for ElasticOpts {
+    fn default() -> Self {
+        ElasticOpts {
+            steps: 10,
+            density: 0.02,
+            lr: LrSchedule::Constant { lr: 0.05 },
+            clip: None,
+            optimizer: Optimizer::Momentum { momentum: 0.9 },
+            fusion_cap_elems: 0,
+            pipeline: false,
+            inflight: 2,
+            topology: None,
+            hierarchical: false,
+            log_every: 1,
+            heartbeat: Duration::from_millis(25),
+            min_ranks: 1,
+            kill: Vec::new(),
+            stall: Vec::new(),
+            rejoin: Vec::new(),
+            ckpt_prefix: None,
+            ckpt_every: 0,
+            cc: CompressorConfig::default(),
+        }
+    }
+}
+
+impl ElasticOpts {
+    /// The failure-detection lease: a peer silent this long is lost.
+    pub fn lease(&self) -> Duration {
+        self.heartbeat * 4
+    }
+}
+
+/// How a rank's participation ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElasticStatus {
+    /// Ran to `opts.steps` and passed the final replica-hash exchange.
+    Finished,
+    /// Died by fault injection (`--kill-rank`).
+    Killed,
+    /// Excluded from the surviving view (crash suspicion or quorum loss).
+    Evicted,
+    /// Stopped at a scheduled rejoin barrier; the orchestrator restarts
+    /// a full-world generation from the returned state.
+    Paused,
+}
+
+/// One rank's result: metrics plus the final state checkpoint.
+pub struct RankOutcome {
+    pub status: ElasticStatus,
+    /// State at the last completed step boundary.
+    pub state: Checkpoint,
+    pub events: Vec<MembershipEvent>,
+    pub loss_curve: Vec<(usize, f32)>,
+    pub timer: PhaseTimer,
+    pub param_hash: u64,
+    pub final_loss: f32,
+    /// Replica hashes agreed across the final view (`Finished` only).
+    pub replicas_consistent: bool,
+    /// Multiplexed traffic across the rank's epochs: total messages and
+    /// words, and the non-bucket (control + heartbeat) share of words.
+    pub mux_messages: u64,
+    pub mux_words: u64,
+    pub ctrl_words: u64,
+    /// Final view (world ranks) and epoch.
+    pub view: Vec<usize>,
+    pub epoch: u64,
+}
+
+/// Build the step-0 state for a fresh rank: zero residual/momentum for
+/// every compressed layer, zero velocity for dense layers under a
+/// momentum-family optimizer.
+pub fn fresh_checkpoint(
+    params: Vec<Vec<f32>>,
+    specs: &[LayerSpec],
+    opt: Optimizer,
+    seed: u64,
+) -> Checkpoint {
+    assert_eq!(params.len(), specs.len(), "one spec per layer");
+    let layers = params
+        .into_iter()
+        .zip(specs)
+        .map(|(p, s)| {
+            let n = p.len();
+            assert_eq!(n, s.n, "layer {} size", s.li);
+            let residual =
+                (s.method != Method::Dense).then(|| (vec![0.0; n], vec![0.0; n]));
+            let velocity =
+                (s.method == Method::Dense && opt != Optimizer::Sgd).then(|| vec![0.0; n]);
+            LayerState { params: p, residual, velocity }
+        })
+        .collect();
+    Checkpoint { step: 0, seed, view_epoch: 0, layers }
+}
+
+/// Mutable training state between snapshots.
+struct TrainState {
+    params: Vec<Vec<f32>>,
+    dense: Vec<DenseOptState>,
+    done: usize,
+    epoch: u64,
+}
+
+fn state_from_checkpoint(
+    ck: &Checkpoint,
+    specs: &[LayerSpec],
+    opt: Optimizer,
+) -> Result<TrainState, String> {
+    if ck.layers.len() != specs.len() {
+        return Err(format!(
+            "checkpoint has {} layers, model has {}",
+            ck.layers.len(),
+            specs.len()
+        ));
+    }
+    let mut params = Vec::with_capacity(specs.len());
+    let mut dense = Vec::with_capacity(specs.len());
+    for (i, (l, s)) in ck.layers.iter().zip(specs).enumerate() {
+        // the driver's convention throughout: specs are in schema order,
+        // so a spec's layer id is its position
+        assert_eq!(s.li, i, "elastic specs must be in schema order");
+        if l.params.len() != s.n {
+            return Err(format!(
+                "checkpoint layer {} has {} params, want {}",
+                s.li,
+                l.params.len(),
+                s.n
+            ));
+        }
+        params.push(l.params.clone());
+        let mut d = DenseOptState::new(s.n, opt);
+        if let Some(vel) = &l.velocity {
+            d.load_velocity(vel);
+        }
+        dense.push(d);
+    }
+    Ok(TrainState { params, dense, done: ck.step as usize, epoch: ck.view_epoch })
+}
+
+/// Full state snapshot at a step boundary: params + dense velocities
+/// from `state`, residual/momentum from the engine's buckets.
+///
+/// This clones the full model state — O(model) heap traffic per step,
+/// a deliberate trade for rollback simplicity at the scales the elastic
+/// runs target.  If elastic steady-state allocation ever matters, the
+/// evicted ring slot's buffers can be recycled (`copy_from_slice` into
+/// the existing `Vec`s) without changing any semantics.
+fn make_snapshot(
+    state: &TrainState,
+    engine: &dyn SyncEngine,
+    specs: &[LayerSpec],
+    seed: u64,
+) -> Checkpoint {
+    let mut residuals: BTreeMap<usize, (Vec<f32>, Vec<f32>)> = engine
+        .export_layer_states()
+        .into_iter()
+        .map(|(li, v, u)| (li, (v, u)))
+        .collect();
+    let layers = specs
+        .iter()
+        .map(|s| LayerState {
+            params: state.params[s.li].clone(),
+            residual: residuals.remove(&s.li),
+            velocity: if s.method == Method::Dense {
+                state.dense[s.li].velocity().map(|v| v.to_vec())
+            } else {
+                None
+            },
+        })
+        .collect();
+    Checkpoint { step: state.done as u64, seed, view_epoch: state.epoch, layers }
+}
+
+/// Two-deep snapshot ring: bulk-synchronous steps keep every member
+/// within one completed step of the others, so the reshape's agreed
+/// resume step is always the latest or the previous boundary.
+struct SnapRing {
+    slots: VecDeque<(usize, Checkpoint)>,
+}
+
+impl SnapRing {
+    fn new() -> SnapRing {
+        SnapRing { slots: VecDeque::new() }
+    }
+
+    fn reset(&mut self, done: usize, ck: Checkpoint) {
+        self.slots.clear();
+        self.slots.push_back((done, ck));
+    }
+
+    fn push(&mut self, done: usize, ck: Checkpoint) {
+        if self.slots.len() == 2 {
+            self.slots.pop_front();
+        }
+        self.slots.push_back((done, ck));
+    }
+
+    fn get(&self, done: usize) -> Option<&Checkpoint> {
+        self.slots.iter().find(|(d, _)| *d == done).map(|(_, c)| c)
+    }
+
+    fn latest(&self) -> &Checkpoint {
+        &self.slots.back().expect("snapshot ring never empty").1
+    }
+}
+
+/// Compressed-layer buckets for one epoch, residuals seeded from `ck`.
+fn build_epoch_buckets(
+    specs: &[LayerSpec],
+    opts: &ElasticOpts,
+    ck: &Checkpoint,
+) -> Vec<BucketState> {
+    let comp: Vec<LayerSpec> = specs
+        .iter()
+        .rev()
+        .filter(|s| s.method != Method::Dense)
+        .cloned()
+        .collect();
+    let mut buckets =
+        build_buckets(&comp, opts.fusion_cap_elems, opts.optimizer.accumulation());
+    for b in &mut buckets {
+        if opts.hierarchical {
+            b.set_algo(Algo::Hierarchical);
+        }
+        let lis: Vec<usize> = b.specs().map(|s| s.li).collect();
+        for (idx, li) in lis.into_iter().enumerate() {
+            if let Some((v, u)) = &ck.layers[li].residual {
+                b.load_layer_state(idx, v, u);
+            }
+        }
+    }
+    buckets
+}
+
+/// How one epoch ended, as seen from inside its scope.
+enum EpochMark {
+    Finished { consistent: bool },
+    Paused,
+    Killed,
+    Fault,
+}
+
+/// How one epoch ended, with the fault context the reshape needs.
+enum EpochEnd {
+    Finished { consistent: bool },
+    Paused,
+    Killed,
+    Fault {
+        suspects: Vec<usize>,
+        /// Parked out-of-band frames, indexed by *world* rank.
+        pending: Vec<VecDeque<Vec<u32>>>,
+        detect_secs: f64,
+    },
+}
+
+/// Run one rank through a full elastic job: epochs of steps separated
+/// by reshapes, until completion, injected death, eviction or a rejoin
+/// barrier.  `transport` is the raw fabric endpoint; `specs` all model
+/// layers in schema order (dense and compressed); `init` the starting
+/// state (fresh, resumed or generation-carried).
+pub fn run_elastic_worker<T, W>(
+    transport: &T,
+    specs: &[LayerSpec],
+    init: Checkpoint,
+    join: Option<JoinPlan>,
+    opts: &ElasticOpts,
+    workload: &mut W,
+) -> Result<RankOutcome, String>
+where
+    T: Transport + Sync,
+    W: Workload,
+{
+    let my = transport.rank();
+    let world0 = transport.world();
+    assert!(world0 <= MAX_ELASTIC_WORLD, "elastic views are capped at {MAX_ELASTIC_WORLD} ranks");
+    let seed = init.seed;
+    let mut cur = init;
+    if let Some(j) = &join {
+        cur.view_epoch = j.epoch;
+        cur.step = j.resume_step as u64;
+    }
+    let mut state = state_from_checkpoint(&cur, specs, opts.optimizer)?;
+    let mut members: Vec<usize> = (0..world0).collect();
+    let mut events: Vec<MembershipEvent> = Vec::new();
+    if let Some(j) = &join {
+        events.push(MembershipEvent {
+            epoch: j.epoch,
+            lost: Vec::new(),
+            joined: vec![j.rejoiner],
+            detect_secs: 0.0,
+            reshape_secs: 0.0,
+            resume_step: j.resume_step,
+            world_after: world0,
+        });
+    }
+    let mut curves: Vec<(usize, f32)> = Vec::new();
+    let mut timer = PhaseTimer::new();
+    let mut ring = SnapRing::new();
+    let freezer = Arc::new(Freezer::new());
+    let mut stall_used = vec![false; opts.stall.len()];
+    let mut totals = (0u64, 0u64, 0u64); // (messages, words, non-bucket words)
+    let mut final_loss = f32::NAN;
+    let mut join_once = join;
+
+    let outcome = |status: ElasticStatus,
+                   consistent: bool,
+                   state: &TrainState,
+                   ring: &SnapRing,
+                   events: Vec<MembershipEvent>,
+                   curves: Vec<(usize, f32)>,
+                   timer: PhaseTimer,
+                   totals: (u64, u64, u64),
+                   members: Vec<usize>,
+                   final_loss: f32| RankOutcome {
+        status,
+        state: ring.latest().clone(),
+        events,
+        loss_curve: curves,
+        timer,
+        param_hash: param_hash(&state.params),
+        final_loss,
+        replicas_consistent: consistent,
+        mux_messages: totals.0,
+        mux_words: totals.1,
+        ctrl_words: totals.2,
+        view: members,
+        epoch: state.epoch,
+    };
+
+    loop {
+        if members.len() < opts.min_ranks.max(1) {
+            return Err(format!(
+                "rank {my}: view shrank to {} ranks, below --min-ranks {}",
+                members.len(),
+                opts.min_ranks
+            ));
+        }
+        let end = run_epoch(
+            transport,
+            &members,
+            specs,
+            opts,
+            seed,
+            &cur,
+            &mut state,
+            &mut ring,
+            join_once.take(),
+            &mut curves,
+            &mut timer,
+            &freezer,
+            &mut stall_used,
+            &mut totals,
+            &mut final_loss,
+            workload,
+        )?;
+        match end {
+            EpochEnd::Finished { consistent } => {
+                return Ok(outcome(
+                    ElasticStatus::Finished,
+                    consistent,
+                    &state,
+                    &ring,
+                    events,
+                    curves,
+                    timer,
+                    totals,
+                    members,
+                    final_loss,
+                ));
+            }
+            EpochEnd::Paused => {
+                return Ok(outcome(
+                    ElasticStatus::Paused,
+                    false,
+                    &state,
+                    &ring,
+                    events,
+                    curves,
+                    timer,
+                    totals,
+                    members,
+                    final_loss,
+                ));
+            }
+            EpochEnd::Killed => {
+                return Ok(outcome(
+                    ElasticStatus::Killed,
+                    false,
+                    &state,
+                    &ring,
+                    events,
+                    curves,
+                    timer,
+                    totals,
+                    members,
+                    final_loss,
+                ));
+            }
+            EpochEnd::Fault { suspects, pending, detect_secs } => {
+                let t0 = Instant::now();
+                let agreement = agree(
+                    transport,
+                    my,
+                    &members,
+                    state.epoch,
+                    &suspects,
+                    state.done,
+                    pending,
+                    opts.lease(),
+                    opts.min_ranks,
+                )?;
+                match agreement {
+                    Agreement::Evicted(why) => {
+                        crate::log_warn!("rank {my}: evicted from the view: {why}");
+                        return Ok(outcome(
+                            ElasticStatus::Evicted,
+                            false,
+                            &state,
+                            &ring,
+                            events,
+                            curves,
+                            timer,
+                            totals,
+                            members,
+                            final_loss,
+                        ));
+                    }
+                    Agreement::View { members: next, epoch, resume_step } => {
+                        let snap = ring
+                            .get(resume_step)
+                            .ok_or_else(|| {
+                                format!(
+                                    "rank {my}: rollback snapshot for step {resume_step} \
+                                     missing (have up to {})",
+                                    state.done
+                                )
+                            })?
+                            .clone();
+                        let lost: Vec<usize> =
+                            members.iter().copied().filter(|r| !next.contains(r)).collect();
+                        events.push(MembershipEvent {
+                            epoch,
+                            lost,
+                            joined: Vec::new(),
+                            detect_secs,
+                            reshape_secs: t0.elapsed().as_secs_f64(),
+                            resume_step,
+                            world_after: next.len(),
+                        });
+                        cur = snap;
+                        cur.view_epoch = epoch;
+                        cur.step = resume_step as u64;
+                        state = state_from_checkpoint(&cur, specs, opts.optimizer)?;
+                        curves.retain(|&(s, _)| s < resume_step);
+                        members = next;
+                        // dump the rollback state so a fresh shrunken-world
+                        // run can be started (and bit-compared) from it —
+                        // keyed by *world* rank, so disjoint views (a
+                        // solo-partitioned rank under --min-ranks 1) can
+                        // never clobber each other's files
+                        if let Some(prefix) = &opts.ckpt_prefix {
+                            let path = format!("{prefix}_reshape_e{epoch}_rank{my}.rsck");
+                            cur.save(&path).map_err(|e| format!("reshape ckpt: {e}"))?;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One membership epoch: build the stack, run steps until the job ends
+/// or a fault breaks the view.
+#[allow(clippy::too_many_arguments)]
+fn run_epoch<T, W>(
+    transport: &T,
+    members: &[usize],
+    specs: &[LayerSpec],
+    opts: &ElasticOpts,
+    seed: u64,
+    cur: &Checkpoint,
+    state: &mut TrainState,
+    ring: &mut SnapRing,
+    join: Option<JoinPlan>,
+    curves: &mut Vec<(usize, f32)>,
+    timer: &mut PhaseTimer,
+    freezer: &Arc<Freezer>,
+    stall_used: &mut [bool],
+    totals: &mut (u64, u64, u64),
+    final_loss: &mut f32,
+    workload: &mut W,
+) -> Result<EpochEnd, String>
+where
+    T: Transport + Sync,
+    W: Workload,
+{
+    let my = transport.rank();
+    let k = members.len();
+    let me_local = members.iter().position(|&m| m == my).expect("rank is a view member");
+    let group = ProcessGroup::new(transport, members.to_vec());
+    let board = Arc::new(FailBoard::new(members.to_vec()));
+    let fabric = Watched::new(group, Arc::clone(&board));
+    let topo = derive_topology(opts.topology, members);
+    let buckets = build_epoch_buckets(specs, opts, cur);
+    let n_buckets = buckets.len();
+    let n_tags =
+        if opts.pipeline { BUCKET_TAG_BASE as usize + n_buckets + 1 } else { 2 };
+    let hb_tag = (n_tags - 1) as u32;
+    // the heartbeat tag is the mux's side channel: beats stay visible
+    // to the monitor's poll even while a collective blocks on the peer
+    // (otherwise a step longer than the lease would read as death)
+    let mux = Arc::new(TagMux::with_side_channel(fabric, n_tags as u32, hb_tag));
+    let ctrl = TagChannel::new(Arc::clone(&mux), CTRL_TAG);
+    let hb = TagChannel::new(Arc::clone(&mux), hb_tag);
+
+    let mut last_ok = Instant::now();
+    let mark: Result<EpochMark, String> = thread::scope(|s| {
+        let monitor = spawn_monitor(
+            s,
+            hb.clone(),
+            Arc::clone(&board),
+            Arc::clone(freezer),
+            opts.heartbeat,
+            opts.lease(),
+        );
+        let run = (|| -> Result<EpochMark, String> {
+            let mut seq_engine;
+            let mut pipe_engine;
+            let engine: &mut dyn SyncEngine = if opts.pipeline {
+                pipe_engine = Pipelined::with_topology(
+                    Arc::clone(&mux),
+                    topo,
+                    buckets,
+                    opts.inflight,
+                    opts.cc,
+                );
+                &mut pipe_engine
+            } else {
+                seq_engine = Sequential::with_topology(&ctrl, topo, None, buckets, opts.cc);
+                &mut seq_engine
+            };
+
+            // rejoin barrier entry: the donor streams its parameter
+            // image to the rejoiner before anyone steps
+            if let Some(j) = &join {
+                join_sync(&ctrl, members, me_local, j, state)?;
+            }
+            ring.reset(state.done, make_snapshot(state, &*engine, specs, seed));
+            if let Some(j) = &join {
+                if my == j.rejoiner {
+                    if let Some(prefix) = &opts.ckpt_prefix {
+                        let path = format!("{prefix}_join_rank{my}.rsck");
+                        ring.latest().save(&path).map_err(|e| format!("join ckpt: {e}"))?;
+                    }
+                }
+            }
+
+            loop {
+                let step = state.done;
+                if step >= opts.steps {
+                    let consistent =
+                        match panic::catch_unwind(AssertUnwindSafe(|| {
+                            replica_hashes_agree(&ctrl, &state.params)
+                        })) {
+                            Ok(c) => c,
+                            Err(_) => {
+                                monitor.stop();
+                                return Ok(EpochMark::Fault);
+                            }
+                        };
+                    monitor.stop();
+                    return Ok(EpochMark::Finished { consistent });
+                }
+                if opts.kill.iter().any(|f| f.rank == my && f.step == step) {
+                    crate::log_warn!("rank {my}: killed by fault injection at step {step}");
+                    monitor.stop();
+                    return Ok(EpochMark::Killed);
+                }
+                for (i, st) in opts.stall.iter().enumerate() {
+                    if st.rank == my && st.step == step && !stall_used[i] {
+                        stall_used[i] = true;
+                        crate::log_warn!(
+                            "rank {my}: stalling {}ms at step {step} (fault injection)",
+                            st.millis
+                        );
+                        freezer.freeze_for(Duration::from_millis(st.millis));
+                        thread::sleep(Duration::from_millis(st.millis));
+                    }
+                }
+                if opts
+                    .rejoin
+                    .iter()
+                    .any(|f| f.step == step && !members.contains(&f.rank))
+                {
+                    monitor.stop();
+                    return Ok(EpochMark::Paused);
+                }
+                if board.has_suspects() || mux.has_oob() {
+                    monitor.stop();
+                    return Ok(EpochMark::Fault);
+                }
+
+                let attempt = panic::catch_unwind(AssertUnwindSafe(|| {
+                    run_step(
+                        &ctrl,
+                        &mut *engine,
+                        specs,
+                        opts,
+                        &mut *state,
+                        me_local,
+                        k,
+                        step,
+                        &mut *timer,
+                        &mut *curves,
+                        &mut *final_loss,
+                        &mut *workload,
+                    )
+                }));
+                match attempt {
+                    Ok(Ok(())) => {
+                        state.done += 1;
+                        last_ok = Instant::now();
+                        ring.push(state.done, make_snapshot(state, &*engine, specs, seed));
+                        if opts.ckpt_every > 0 && state.done % opts.ckpt_every == 0 {
+                            if let Some(prefix) = &opts.ckpt_prefix {
+                                let path = format!("{prefix}_rank{my}.rsck");
+                                ring.latest()
+                                    .save(&path)
+                                    .map_err(|e| format!("periodic ckpt: {e}"))?;
+                            }
+                        }
+                    }
+                    Ok(Err(e)) => {
+                        monitor.stop();
+                        if board.has_suspects() || mux.has_oob() {
+                            return Ok(EpochMark::Fault);
+                        }
+                        return Err(e);
+                    }
+                    Err(_) => {
+                        monitor.stop();
+                        if board.has_suspects() || mux.has_oob() {
+                            return Ok(EpochMark::Fault);
+                        }
+                        return Err(format!(
+                            "rank {my} step {step}: aborted without a recorded membership fault"
+                        ));
+                    }
+                }
+            }
+        })();
+        monitor.stop();
+        run
+    });
+
+    // mux traffic accounting survives the epoch teardown; "control" is
+    // everything that is not a bucket stream (ctrl collectives + beats)
+    let (msgs, words) = mux.aggregate();
+    totals.0 += msgs;
+    totals.1 += words;
+    totals.2 += (mux.tag_stats(CTRL_TAG).bytes() + mux.tag_stats(hb_tag).bytes()) / 4;
+
+    match mark? {
+        EpochMark::Finished { consistent } => Ok(EpochEnd::Finished { consistent }),
+        EpochMark::Paused => Ok(EpochEnd::Paused),
+        EpochMark::Killed => Ok(EpochEnd::Killed),
+        EpochMark::Fault => {
+            let detect_secs = last_ok.elapsed().as_secs_f64();
+            let mut pending: Vec<VecDeque<Vec<u32>>> =
+                (0..transport.world()).map(|_| VecDeque::new()).collect();
+            for (local, q) in mux.drain_oob().into_iter().enumerate() {
+                pending[members[local]] = q;
+            }
+            let suspects: Vec<usize> = board.suspects().into_iter().map(|(r, _)| r).collect();
+            Ok(EpochEnd::Fault { suspects, pending, detect_secs })
+        }
+    }
+}
+
+/// One training step under the current view: compute → clip → dense
+/// allreduce + update → compressed buckets through the engine →
+/// loss logging.  Exactly the non-elastic worker's schedule, scoped to
+/// the view's process group.
+#[allow(clippy::too_many_arguments)]
+fn run_step<C, W>(
+    ctrl: &C,
+    engine: &mut dyn SyncEngine,
+    specs: &[LayerSpec],
+    opts: &ElasticOpts,
+    state: &mut TrainState,
+    me_local: usize,
+    k: usize,
+    step: usize,
+    timer: &mut PhaseTimer,
+    curves: &mut Vec<(usize, f32)>,
+    final_loss: &mut f32,
+    workload: &mut W,
+) -> Result<(), String>
+where
+    C: Transport,
+    W: Workload,
+{
+    let lr = opts.lr.lr_at(step);
+    let key = ShardKey { epoch: state.epoch, rank: me_local, world: k, step };
+    let (loss, mut grads) =
+        timer.time(phase::COMPUTE, || workload.compute(&state.params, &key))?;
+    if grads.len() != specs.len() {
+        return Err(format!("workload produced {} grads for {} layers", grads.len(), specs.len()));
+    }
+
+    if let Some(max_norm) = opts.clip {
+        let any_compressed = specs.iter().any(|s| s.method != Method::Dense);
+        let limit =
+            if any_compressed { local_clip_factor(max_norm, k) } else { max_norm };
+        let mut refs: Vec<&mut [f32]> = grads.iter_mut().map(|g| g.as_mut_slice()).collect();
+        clip_by_global_norm(&mut refs, limit);
+    }
+
+    let scale = -lr / k as f32;
+    for li in (0..specs.len()).rev() {
+        if specs[li].method != Method::Dense {
+            continue;
+        }
+        timer.time(phase::COMM_DENSE, || allreduce_mean(ctrl, &mut grads[li]));
+        timer.time(phase::UPDATE, || {
+            state.dense[li].apply(opts.optimizer, &mut state.params[li], &grads[li], lr)
+        });
+    }
+
+    let mut unpack_secs = 0.0f64;
+    {
+        let params = &mut state.params;
+        let mut apply = |done: BucketDone| -> Result<(), String> {
+            let t0 = Instant::now();
+            done.apply_to(params, scale)?;
+            unpack_secs += t0.elapsed().as_secs_f64();
+            Ok(())
+        };
+        engine.sync_step(&grads, opts.density, timer, &mut apply)?;
+    }
+    timer.add(phase::UNPACK, unpack_secs);
+
+    let log_step = step % opts.log_every.max(1) == 0 || step + 1 == opts.steps;
+    if log_step {
+        let mut l = [loss];
+        allreduce_mean(ctrl, &mut l);
+        if me_local == 0 {
+            curves.push((step, l[0]));
+        }
+    }
+    *final_loss = loss;
+    Ok(())
+}
+
+/// The rejoin "delta" stream: the donor sends every layer's current
+/// parameter words to the rejoiner on the control channel; the rejoiner
+/// overwrites its (checkpoint-stale) parameters.  Per-link FIFO puts
+/// these frames ahead of the donor's first step traffic, so no barrier
+/// is needed for the other members.
+fn join_sync<C: Transport>(
+    ctrl: &C,
+    members: &[usize],
+    me_local: usize,
+    j: &JoinPlan,
+    state: &mut TrainState,
+) -> Result<(), String> {
+    let donor_local = members
+        .iter()
+        .position(|&r| r == j.donor)
+        .ok_or_else(|| format!("join donor {} not in the view", j.donor))?;
+    let join_local = members
+        .iter()
+        .position(|&r| r == j.rejoiner)
+        .ok_or_else(|| format!("rejoiner {} not in the view", j.rejoiner))?;
+    if me_local == donor_local {
+        for p in &state.params {
+            ctrl.send(join_local, f32s_to_words(p));
+        }
+    } else if me_local == join_local {
+        for li in 0..state.params.len() {
+            let words = ctrl
+                .recv_checked(donor_local)
+                .map_err(|e| format!("join sync layer {li}: {e}"))?;
+            let vals = words_to_f32s(&words);
+            if vals.len() != state.params[li].len() {
+                return Err(format!(
+                    "join sync layer {li}: got {} params, want {}",
+                    vals.len(),
+                    state.params[li].len()
+                ));
+            }
+            state.params[li] = vals;
+        }
+    }
+    Ok(())
+}
+
+/// Allgather the FNV parameter hashes across the view and compare.
+fn replica_hashes_agree<C: Transport>(ctrl: &C, params: &[Vec<f32>]) -> bool {
+    let h = param_hash(params);
+    let msg = vec![(h & 0xFFFF_FFFF) as u32, (h >> 32) as u32];
+    let all = allgather(ctrl, msg);
+    all.iter().all(|w| w.len() == 2 && (w[0] as u64 | (w[1] as u64) << 32) == h)
+}

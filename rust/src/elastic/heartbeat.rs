@@ -1,0 +1,224 @@
+//! Heartbeat / lease failure detection.
+//!
+//! Every rank of an elastic epoch runs one monitor thread over a
+//! reserved `TagMux` channel (the mux's last tag).  The monitor beats
+//! every `interval`, drains incoming beats without ever blocking
+//! ([`Transport::try_recv`]), and declares a peer lost when its lease
+//! (`4 × interval` by [`ElasticOpts::lease`](super::ElasticOpts::lease))
+//! expires without a beat — recording the suspicion on the epoch's
+//! [`FailBoard`](super::FailBoard) and *severing* the link
+//! ([`Transport::sever`]), which over TCP force-closes the socket so a
+//! training thread blocked on the stalled peer fails instead of
+//! hanging.  On `LocalFabric` sever is a no-op, but there a dead peer's
+//! channels fail immediately anyway; only silent stalls stay invisible,
+//! and in-process a stalled thread stalls the whole process clock too.
+//!
+//! The monitor never blocks on the fabric: sends are
+//! [`Transport::send_checked`] (a dead peer is a suspicion, not a
+//! panic) and receives are polls.  A frozen process (the `--stall-rank`
+//! injection models SIGSTOP) freezes its monitor with it, so peers see
+//! the beats stop — the property the eviction tests pin.
+
+use super::FailBoard;
+use crate::collectives::mux::TagChannel;
+use crate::collectives::transport::{PeerLostCause, Transport};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Shared freeze switch for fault injection: while set to a future
+/// deadline (millis from `origin`), the monitor neither beats nor
+/// drains — the whole "process" looks stopped to its peers.
+pub struct Freezer {
+    origin: Instant,
+    until_ms: AtomicU64,
+}
+
+impl Freezer {
+    pub fn new() -> Freezer {
+        Freezer { origin: Instant::now(), until_ms: AtomicU64::new(0) }
+    }
+
+    /// Freeze for `d` from now (driver side, before it sleeps itself).
+    pub fn freeze_for(&self, d: Duration) {
+        let until = self.origin.elapsed() + d;
+        self.until_ms.store(until.as_millis() as u64, Ordering::Relaxed);
+    }
+
+    pub fn frozen(&self) -> bool {
+        (self.origin.elapsed().as_millis() as u64) < self.until_ms.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Freezer {
+    fn default() -> Self {
+        Freezer::new()
+    }
+}
+
+/// Handle to a running monitor: set `stop` and the thread exits within
+/// one beat interval (the epoch scope joins it).
+pub struct MonitorHandle {
+    pub stop: Arc<AtomicBool>,
+}
+
+impl MonitorHandle {
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Spawn the epoch's monitor on `scope`.  `chan` is the reserved
+/// heartbeat channel (group-local peer ids); `board` the epoch's
+/// failure record; `freezer` the fault-injection switch.
+pub fn spawn_monitor<'scope, T>(
+    scope: &'scope thread::Scope<'scope, '_>,
+    chan: TagChannel<T>,
+    board: Arc<FailBoard>,
+    freezer: Arc<Freezer>,
+    interval: Duration,
+    lease: Duration,
+) -> MonitorHandle
+where
+    T: Transport + Send + Sync + 'scope,
+{
+    let stop = Arc::new(AtomicBool::new(false));
+    let flag = Arc::clone(&stop);
+    scope.spawn(move || {
+        let me = chan.rank();
+        let world = chan.world();
+        let mut last_seen = vec![Instant::now(); world];
+        loop {
+            if flag.load(Ordering::Relaxed) {
+                return;
+            }
+            if freezer.frozen() {
+                // a stopped process beats no one and reads nothing
+                thread::sleep(Duration::from_millis(1));
+                continue;
+            }
+            for peer in 0..world {
+                if peer == me || board.is_suspect_local(peer) {
+                    continue;
+                }
+                if let Err(e) = chan.send_checked(peer, vec![0x4842 /* "HB" */]) {
+                    board.mark_local(peer, e.cause);
+                    continue;
+                }
+                // drain every queued beat; anything from the peer counts
+                // as liveness
+                loop {
+                    match chan.try_recv(peer) {
+                        Ok(Some(_)) => last_seen[peer] = Instant::now(),
+                        Ok(None) => break,
+                        Err(e) => {
+                            // out-of-band frames mean the peer entered
+                            // reshape — alive, and the driver will see
+                            // the parked frame; everything else is loss
+                            if e.cause != PeerLostCause::OutOfBand {
+                                board.mark_local(peer, e.cause);
+                            } else {
+                                last_seen[peer] = Instant::now();
+                            }
+                            break;
+                        }
+                    }
+                }
+                if last_seen[peer].elapsed() > lease && !board.is_suspect_local(peer) {
+                    board.mark_local(peer, PeerLostCause::Timeout);
+                    // convert a silent stall into a hard failure the
+                    // blocked training thread can observe (TCP; no-op on
+                    // the local fabric)
+                    chan.sever(peer);
+                }
+            }
+            thread::sleep(interval);
+        }
+    });
+    MonitorHandle { stop }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::mux::TagMux;
+    use crate::collectives::LocalFabric;
+
+    #[test]
+    fn freezer_gates_on_time() {
+        let f = Freezer::new();
+        assert!(!f.frozen());
+        f.freeze_for(Duration::from_millis(50));
+        assert!(f.frozen());
+        thread::sleep(Duration::from_millis(80));
+        assert!(!f.frozen());
+    }
+
+    #[test]
+    fn monitor_stays_quiet_while_peers_beat() {
+        let world = 2;
+        let mut fabric = LocalFabric::new(world);
+        let ts: Vec<_> = fabric.take_all();
+        let boards: Vec<_> =
+            (0..world).map(|_| Arc::new(FailBoard::new((0..world).collect()))).collect();
+        let interval = Duration::from_millis(5);
+        let lease = Duration::from_millis(200);
+        thread::scope(|s| {
+            let handles: Vec<MonitorHandle> = ts
+                .iter()
+                .zip(&boards)
+                .map(|(t, b)| {
+                    let mux = Arc::new(TagMux::new(t, 1));
+                    let chan = TagChannel::new(mux, 0);
+                    spawn_monitor(
+                        s,
+                        chan,
+                        Arc::clone(b),
+                        Arc::new(Freezer::new()),
+                        interval,
+                        lease,
+                    )
+                })
+                .collect();
+            thread::sleep(Duration::from_millis(60));
+            for h in &handles {
+                h.stop();
+            }
+        });
+        for b in &boards {
+            assert!(!b.has_suspects(), "healthy peers must not be suspected");
+        }
+    }
+
+    #[test]
+    fn monitor_suspects_a_dead_peer() {
+        let world = 2;
+        let mut fabric = LocalFabric::new(world);
+        let mut ts = fabric.take_all();
+        let dead = ts.pop().unwrap(); // rank 1 never starts a monitor
+        let t0 = ts.pop().unwrap();
+        let board = Arc::new(FailBoard::new(vec![0, 1]));
+        thread::scope(|s| {
+            let mux = Arc::new(TagMux::new(&t0, 1));
+            let chan = TagChannel::new(mux, 0);
+            let h = spawn_monitor(
+                s,
+                chan,
+                Arc::clone(&board),
+                Arc::new(Freezer::new()),
+                Duration::from_millis(5),
+                Duration::from_millis(40),
+            );
+            drop(dead); // rank 1 dies: the next beat send fails
+            let deadline = Instant::now() + Duration::from_secs(5);
+            while !board.has_suspects() && Instant::now() < deadline {
+                thread::sleep(Duration::from_millis(5));
+            }
+            h.stop();
+        });
+        let suspects = board.suspects();
+        assert_eq!(suspects.len(), 1, "{suspects:?}");
+        assert_eq!(suspects[0].0, 1);
+    }
+}

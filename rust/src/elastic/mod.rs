@@ -1,0 +1,338 @@
+//! Elastic membership: keep a compressed-sync job alive through worker
+//! loss and rejoin (DESIGN.md §Elastic-Membership).
+//!
+//! RedSync's headline numbers come from 128-GPU runs — a regime where
+//! worker failure is routine — yet a lost peer historically aborted the
+//! whole job.  Worse, RGC makes failure uniquely costly: every rank
+//! carries *residual* state (the unsent gradient mass DGC shows is part
+//! of the training trajectory), so a naive restart silently changes what
+//! the job computes.  This subsystem makes membership a first-class,
+//! epoch-numbered quantity:
+//!
+//! * **Detection** ([`heartbeat`]) — a monitor thread rides a reserved
+//!   `TagMux` tag over either fabric, exchanging leases; transport-level
+//!   failures surface as structured
+//!   [`PeerLostCause`](crate::collectives::PeerLostCause)s (clean FIN vs
+//!   mid-stream EOF vs reset vs timeout), recorded on a shared
+//!   [`FailBoard`] by the [`Watched`] fabric wrapper.  Over TCP an
+//!   expired lease *severs* the link, converting a silent stall into a
+//!   detectable loss.
+//! * **Reshape** ([`reshape`]) — on a confirmed loss, survivors drain
+//!   their in-flight buckets (every step ends at the engines' apply
+//!   barrier, and an aborted step is rolled back), agree on an
+//!   epoch-numbered membership view over out-of-band protocol frames,
+//!   roll back to the last step boundary every survivor completed, and
+//!   rebuild `Topology`/`ProcessGroup`s, the `Communicator` stack and
+//!   the `SyncEngine` for the shrunken world ([`driver`]).
+//! * **Rejoin** ([`orchestrate`]) — a returning worker restores
+//!   params/residual/momentum from its `RSCK` checkpoint plus a
+//!   survivor-streamed parameter image, re-enters at a step barrier,
+//!   and the data sharder re-keys by `(seed, view_epoch, rank)` so
+//!   shards stay disjoint.
+//!
+//! The driver is generic over a [`driver::Workload`], so the whole
+//! subsystem is exercised artifact-free (`tests/elastic.rs`,
+//! `e2e_throughput --elastic-smoke`) and wired to the real trainer by
+//! `coordinator::worker`.
+
+pub mod driver;
+pub mod heartbeat;
+pub mod orchestrate;
+pub mod reshape;
+pub mod synthetic;
+
+pub use driver::{
+    fresh_checkpoint, run_elastic_worker, ElasticOpts, ElasticStatus, JoinPlan, RankOutcome,
+    ShardKey, Workload,
+};
+pub use orchestrate::{run_local_fleet, FleetOutcome};
+pub use reshape::Agreement;
+
+use crate::collectives::group::Topology;
+use crate::collectives::transport::{lock_ok, PeerLostCause, Transport, TransportError};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Elastic views support at most this many ranks: membership travels as
+/// a u32 bitmap in the reshape protocol frames.
+pub const MAX_ELASTIC_WORLD: usize = 32;
+
+/// One injected crash: world rank `rank` dies at the start of step
+/// `step` (before sending anything for it) — `--kill-rank R@S`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub rank: usize,
+    pub step: usize,
+}
+
+impl FaultSpec {
+    /// Parse `R@S`, e.g. `2@6`.
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        let (r, st) = s
+            .split_once('@')
+            .ok_or_else(|| format!("fault '{s}': expected RANK@STEP, e.g. 2@6"))?;
+        let rank = r.trim().parse().map_err(|_| format!("fault '{s}': bad rank '{r}'"))?;
+        let step = st.trim().parse().map_err(|_| format!("fault '{s}': bad step '{st}'"))?;
+        Ok(FaultSpec { rank, step })
+    }
+
+    /// Parse a `;`-separated list (`,` belongs to `--set`).
+    pub fn parse_list(s: &str) -> Result<Vec<FaultSpec>, String> {
+        s.split(';').filter(|p| !p.trim().is_empty()).map(FaultSpec::parse).collect()
+    }
+}
+
+/// One injected stall: world rank `rank` freezes for `millis` at the
+/// start of step `step` — `--stall-rank R@S:MS`.  The freeze covers the
+/// rank's heartbeat monitor too (a SIGSTOP-faithful stall): a stall
+/// longer than the lease is indistinguishable from death and gets the
+/// rank evicted; a short one is ridden out.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StallSpec {
+    pub rank: usize,
+    pub step: usize,
+    pub millis: u64,
+}
+
+impl StallSpec {
+    /// Parse `R@S:MS`, e.g. `1@4:500`.
+    pub fn parse(s: &str) -> Result<StallSpec, String> {
+        let (head, ms) = s
+            .split_once(':')
+            .ok_or_else(|| format!("stall '{s}': expected RANK@STEP:MILLIS, e.g. 1@4:500"))?;
+        let f = FaultSpec::parse(head)?;
+        let millis =
+            ms.trim().parse().map_err(|_| format!("stall '{s}': bad duration '{ms}'"))?;
+        Ok(StallSpec { rank: f.rank, step: f.step, millis })
+    }
+
+    pub fn parse_list(s: &str) -> Result<Vec<StallSpec>, String> {
+        s.split(';').filter(|p| !p.trim().is_empty()).map(StallSpec::parse).collect()
+    }
+}
+
+/// Pack a set of world ranks into the protocol's u32 bitmap.
+pub(crate) fn bitmap(ranks: impl IntoIterator<Item = usize>) -> u32 {
+    let mut b = 0u32;
+    for r in ranks {
+        assert!(r < MAX_ELASTIC_WORLD, "rank {r} outside the elastic bitmap");
+        b |= 1 << r;
+    }
+    b
+}
+
+/// Unpack a bitmap into ascending world ranks.
+pub(crate) fn ranks_of(bitmap: u32) -> Vec<usize> {
+    (0..MAX_ELASTIC_WORLD).filter(|&r| bitmap & (1 << r) != 0).collect()
+}
+
+/// Shared failure record of one membership epoch: the [`Watched`]
+/// fabric, the heartbeat monitor and the step driver all write here;
+/// the reshape protocol reads it as the local suspect set.  Keys are
+/// *world* ranks (the board translates the epoch's group-local ids).
+pub struct FailBoard {
+    members: Vec<usize>,
+    suspects: Mutex<BTreeMap<usize, PeerLostCause>>,
+}
+
+impl FailBoard {
+    /// `members`: the epoch's world ranks in group order.
+    pub fn new(members: Vec<usize>) -> FailBoard {
+        FailBoard { members, suspects: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Record a failure observed on the epoch's group-local peer id.
+    pub fn mark_local(&self, local: usize, cause: PeerLostCause) {
+        self.mark_world(self.members[local], cause);
+    }
+
+    /// Record a failure of a world rank directly (heartbeat monitor,
+    /// fault injection).  Out-of-band "failures" are not suspicions.
+    pub fn mark_world(&self, world: usize, cause: PeerLostCause) {
+        if cause == PeerLostCause::OutOfBand {
+            return;
+        }
+        lock_ok(&self.suspects).entry(world).or_insert(cause);
+    }
+
+    pub fn is_suspect_local(&self, local: usize) -> bool {
+        self.is_suspect_world(self.members[local])
+    }
+
+    pub fn is_suspect_world(&self, world: usize) -> bool {
+        lock_ok(&self.suspects).contains_key(&world)
+    }
+
+    pub fn has_suspects(&self) -> bool {
+        !lock_ok(&self.suspects).is_empty()
+    }
+
+    /// The suspect set as `(world rank, first recorded cause)`.
+    pub fn suspects(&self) -> Vec<(usize, PeerLostCause)> {
+        lock_ok(&self.suspects).iter().map(|(&r, &c)| (r, c)).collect()
+    }
+}
+
+/// Fabric wrapper recording every link failure on the epoch's
+/// [`FailBoard`] before re-raising it — so a peer death observed deep
+/// inside a collective (which aborts the step by panic, per the
+/// transport contract) still leaves a structured suspect for the
+/// reshape protocol.  Wraps the epoch's `ProcessGroup`, so peer ids are
+/// group-local and the board translates them to world ranks.
+pub struct Watched<T: Transport> {
+    inner: T,
+    board: Arc<FailBoard>,
+}
+
+impl<T: Transport> Watched<T> {
+    pub fn new(inner: T, board: Arc<FailBoard>) -> Watched<T> {
+        Watched { inner, board }
+    }
+}
+
+impl<T: Transport> Transport for Watched<T> {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn world(&self) -> usize {
+        self.inner.world()
+    }
+
+    /// Panics on a dead link like every fabric `send` (a dead peer
+    /// mid-collective is fatal for the step), but records the suspect
+    /// first.
+    fn send(&self, to: usize, msg: Vec<u32>) {
+        if let Err(e) = self.inner.send_checked(to, msg) {
+            self.board.mark_local(to, e.cause);
+            panic!("rank {}: send to group peer {to} failed: {e}", self.inner.rank());
+        }
+    }
+
+    /// One clone per receiver, through the checked send path.  Not a
+    /// hot-path regression: in the elastic stack every collective runs
+    /// over a `TagChannel`, whose tagging already materializes an owned
+    /// message per receiver — this direct path only exists for
+    /// completeness.  Byte accounting is unchanged.
+    fn send_shared(&self, to: usize, msg: &Arc<Vec<u32>>) {
+        self.send(to, msg.as_ref().clone());
+    }
+
+    fn send_checked(&self, to: usize, msg: Vec<u32>) -> Result<(), TransportError> {
+        self.inner.send_checked(to, msg).inspect_err(|e| self.board.mark_local(to, e.cause))
+    }
+
+    fn recv_checked(&self, from: usize) -> Result<Vec<u32>, TransportError> {
+        self.inner.recv_checked(from).inspect_err(|e| self.board.mark_local(from, e.cause))
+    }
+
+    fn try_recv(&self, from: usize) -> Result<Option<Vec<u32>>, TransportError> {
+        self.inner.try_recv(from).inspect_err(|e| self.board.mark_local(from, e.cause))
+    }
+
+    fn sever(&self, peer: usize) {
+        self.inner.sever(peer)
+    }
+}
+
+/// Re-derive the physical topology for a reshaped member list,
+/// deterministically from `(planned, members)` alone (identical on
+/// every survivor): the planned `nodes × ranks-per-node` shape survives
+/// iff the survivors still form whole nodes — contiguous
+/// `ranks_per_node`-chunks of the member list that each lie inside one
+/// original node.  Anything else degrades to the flat topology (the
+/// hierarchical schedule needs equal-size nodes).
+pub fn derive_topology(planned: Option<Topology>, members: &[usize]) -> Topology {
+    let k = members.len();
+    let Some(t) = planned else {
+        return Topology::flat(k);
+    };
+    if k == t.world() && members.iter().enumerate().all(|(i, &m)| i == m) {
+        return t;
+    }
+    let rpn = t.ranks_per_node;
+    if rpn == 0 || k % rpn != 0 || k == 0 {
+        return Topology::flat(k);
+    }
+    let whole_nodes = members
+        .chunks(rpn)
+        .all(|chunk| chunk.iter().all(|&m| t.node_of(m) == t.node_of(chunk[0])));
+    if whole_nodes {
+        Topology::new(k / rpn, rpn)
+    } else {
+        Topology::flat(k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::LocalFabric;
+
+    #[test]
+    fn fault_specs_parse() {
+        assert_eq!(FaultSpec::parse("2@6").unwrap(), FaultSpec { rank: 2, step: 6 });
+        assert_eq!(
+            FaultSpec::parse_list("2@6; 3@8").unwrap(),
+            vec![FaultSpec { rank: 2, step: 6 }, FaultSpec { rank: 3, step: 8 }]
+        );
+        assert!(FaultSpec::parse("2-6").is_err());
+        assert_eq!(
+            StallSpec::parse("1@4:500").unwrap(),
+            StallSpec { rank: 1, step: 4, millis: 500 }
+        );
+        assert!(StallSpec::parse("1@4").is_err());
+        assert!(FaultSpec::parse_list("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn bitmaps_roundtrip() {
+        let ranks = vec![0usize, 2, 31];
+        assert_eq!(ranks_of(bitmap(ranks.clone())), ranks);
+        assert_eq!(bitmap(std::iter::empty::<usize>()), 0);
+        assert!(ranks_of(0).is_empty());
+    }
+
+    #[test]
+    fn board_translates_and_keeps_first_cause() {
+        let board = FailBoard::new(vec![0, 1, 3]);
+        board.mark_local(2, PeerLostCause::CleanFin); // group-local 2 = world 3
+        board.mark_world(3, PeerLostCause::Reset); // later verdicts don't overwrite
+        board.mark_world(7, PeerLostCause::OutOfBand); // not a suspicion
+        assert!(board.is_suspect_world(3));
+        assert!(board.is_suspect_local(2));
+        assert!(!board.is_suspect_world(7));
+        assert_eq!(board.suspects(), vec![(3, PeerLostCause::CleanFin)]);
+    }
+
+    #[test]
+    fn watched_fabric_records_failures() {
+        let mut fabric = LocalFabric::new(2);
+        let a = fabric.take(0);
+        let b = fabric.take(1);
+        let board = Arc::new(FailBoard::new(vec![0, 1]));
+        let w = Watched::new(&a, Arc::clone(&board));
+        b.send(0, vec![7]);
+        assert_eq!(w.recv_checked(1).unwrap(), vec![7]);
+        assert!(!board.has_suspects());
+        drop(b);
+        assert!(w.recv_checked(1).is_err());
+        assert_eq!(board.suspects().len(), 1);
+        assert_eq!(board.suspects()[0].0, 1);
+    }
+
+    #[test]
+    fn topology_survives_whole_node_loss_only() {
+        let planned = Some(Topology::new(2, 2)); // nodes {0,1} {2,3}
+        // full world keeps the plan
+        assert_eq!(derive_topology(planned, &[0, 1, 2, 3]), Topology::new(2, 2));
+        // losing a whole node keeps 2-rank nodes
+        assert_eq!(derive_topology(planned, &[2, 3]), Topology::new(1, 2));
+        // losing one rank of a node degrades to flat
+        assert_eq!(derive_topology(planned, &[0, 1, 3]), Topology::flat(3));
+        // a chunk straddling two old nodes degrades too
+        assert_eq!(derive_topology(planned, &[1, 2]), Topology::flat(2));
+        // no plan: always flat
+        assert_eq!(derive_topology(None, &[0, 1, 3]), Topology::flat(3));
+    }
+}

@@ -1,0 +1,195 @@
+//! In-process fleet orchestration for elastic jobs: fabric
+//! *generations* separated by rejoin barriers.
+//!
+//! A shrink (worker loss) is handled inside one generation — survivors
+//! keep their endpoints and reshape in place.  A *rejoin* needs fresh
+//! links to the returning rank, which a fixed-size fabric cannot grow;
+//! the orchestrator models the paper-scale restart-with-state instead:
+//! when the workers pause at the scheduled rejoin barrier (a step every
+//! survivor reaches deterministically), it tears the generation down,
+//! builds a new full-world `LocalFabric`, and relaunches every rank —
+//! survivors carrying their paused state in memory, the rejoiner
+//! restoring params/residual/momentum from its periodic `RSCK`
+//! checkpoint, advanced to the barrier by the donor's parameter stream
+//! ([`JoinPlan`]).  The membership epoch bumps, so the data sharder
+//! re-keys and shards stay disjoint.
+//!
+//! Generic over the workload factory (called on each worker thread, so
+//! non-`Send` runtimes like PJRT clients work), which is how
+//! `coordinator::Trainer` and the artifact-free tests share this code.
+
+use super::driver::{run_elastic_worker, ElasticOpts, ElasticStatus, JoinPlan, RankOutcome};
+use super::Workload;
+use crate::collectives::LocalFabric;
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::pipeline::LayerSpec;
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+/// Everything a local fleet run produces.
+pub struct FleetOutcome {
+    /// Final (generation-merged) outcome per world rank.
+    pub ranks: Vec<RankOutcome>,
+    /// Fabric traffic summed over generations.
+    pub bytes: u64,
+    pub messages: u64,
+    pub wall_secs: f64,
+}
+
+/// Merge a later generation's outcome onto a rank's history: metrics
+/// accumulate, terminal state/status are the latest generation's.
+fn merge(prev: Option<RankOutcome>, next: RankOutcome) -> RankOutcome {
+    let Some(mut prev) = prev else { return next };
+    let RankOutcome {
+        status,
+        state,
+        events,
+        loss_curve,
+        timer,
+        param_hash,
+        final_loss,
+        replicas_consistent,
+        mux_messages,
+        mux_words,
+        ctrl_words,
+        view,
+        epoch,
+    } = next;
+    prev.timer.merge(&timer);
+    prev.loss_curve.extend(loss_curve);
+    prev.events.extend(events);
+    RankOutcome {
+        status,
+        state,
+        events: prev.events,
+        loss_curve: prev.loss_curve,
+        timer: prev.timer,
+        param_hash,
+        final_loss,
+        replicas_consistent,
+        mux_messages: prev.mux_messages + mux_messages,
+        mux_words: prev.mux_words + mux_words,
+        ctrl_words: prev.ctrl_words + ctrl_words,
+        view,
+        epoch,
+    }
+}
+
+/// Run a full elastic job over in-process fabrics: one thread per world
+/// rank per generation.  `make_init` builds a rank's starting state
+/// (fresh params or a resume checkpoint); `make_workload` builds its
+/// model side *on the worker thread* (runtimes need not be `Send`).
+pub fn run_local_fleet<W, MI, MW>(
+    world: usize,
+    specs: &[LayerSpec],
+    opts: &ElasticOpts,
+    make_init: MI,
+    make_workload: MW,
+) -> Result<FleetOutcome, String>
+where
+    W: Workload,
+    MI: Fn(usize) -> Result<Checkpoint, String> + Send + Sync,
+    MW: Fn(usize) -> Result<W, String> + Send + Sync,
+{
+    assert!(opts.rejoin.len() <= 1, "one scheduled rejoin per run is supported");
+    let start = Instant::now();
+    let mut carry: Vec<Option<(Checkpoint, Option<JoinPlan>)>> =
+        (0..world).map(|_| None).collect();
+    let mut merged: Vec<Option<RankOutcome>> = (0..world).map(|_| None).collect();
+    let mut bytes = 0u64;
+    let mut messages = 0u64;
+
+    for generation in 0..=opts.rejoin.len() {
+        let mut fabric = LocalFabric::new(world);
+        let stats = Arc::clone(&fabric.stats);
+        let endpoints = fabric.take_all();
+        let carries: Vec<Option<(Checkpoint, Option<JoinPlan>)>> =
+            carry.iter_mut().map(Option::take).collect();
+        let outs: Vec<Result<RankOutcome, String>> = thread::scope(|s| {
+            let handles: Vec<_> = endpoints
+                .into_iter()
+                .zip(carries)
+                .map(|(t, c)| {
+                    let make_init = &make_init;
+                    let make_workload = &make_workload;
+                    s.spawn(move || -> Result<RankOutcome, String> {
+                        let (init, join) = match c {
+                            Some((ck, j)) => (ck, j),
+                            None => (make_init(t.rank())?, None),
+                        };
+                        let mut w = make_workload(t.rank())?;
+                        run_elastic_worker(&t, specs, init, join, opts, &mut w)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| Err("worker thread panicked".into()))
+                })
+                .collect()
+        });
+        bytes += stats.bytes();
+        messages += stats.message_count();
+
+        let mut paused = false;
+        for (r, o) in outs.into_iter().enumerate() {
+            let o = o.map_err(|e| format!("rank {r}: {e}"))?;
+            paused |= o.status == ElasticStatus::Paused;
+            merged[r] = Some(merge(merged[r].take(), o));
+        }
+        if !paused {
+            break;
+        }
+
+        // -- schedule the rejoin generation -------------------------------
+        let j = opts
+            .rejoin
+            .first()
+            .copied()
+            .ok_or("fleet paused without a scheduled rejoin")?;
+        if generation >= opts.rejoin.len() {
+            return Err("fleet paused after its rejoin generation".into());
+        }
+        let rejoiner = j.rank;
+        let paused_ranks: Vec<usize> = (0..world)
+            .filter(|&r| merged[r].as_ref().is_some_and(|o| o.status == ElasticStatus::Paused))
+            .collect();
+        let donor = *paused_ranks.first().ok_or("no surviving rank can donate state")?;
+        let donor_state = &merged[donor].as_ref().expect("donor ran").state;
+        let resume_step = donor_state.step as usize;
+        let epoch_next = paused_ranks
+            .iter()
+            .map(|&r| merged[r].as_ref().expect("ran").epoch)
+            .max()
+            .unwrap_or(0)
+            + 1;
+        let plan = JoinPlan { rejoiner, donor, resume_step, epoch: epoch_next };
+        for r in 0..world {
+            let o = merged[r].as_ref().expect("all ranks ran");
+            let ck = if r == rejoiner {
+                let prefix = opts
+                    .ckpt_prefix
+                    .as_ref()
+                    .ok_or("a rejoin needs --ckpt so the lost rank has state to restore")?;
+                let path = format!("{prefix}_rank{r}.rsck");
+                Checkpoint::load(&path)
+                    .map_err(|e| format!("rejoin: rank {r} checkpoint {path}: {e}"))?
+            } else {
+                if o.status != ElasticStatus::Paused {
+                    return Err(format!(
+                        "rank {r} cannot enter the rejoin generation (status {:?})",
+                        o.status
+                    ));
+                }
+                o.state.clone()
+            };
+            carry[r] = Some((ck, Some(plan)));
+        }
+    }
+
+    let ranks: Vec<RankOutcome> =
+        merged.into_iter().map(|o| o.expect("every rank ran")).collect();
+    Ok(FleetOutcome { ranks, bytes, messages, wall_secs: start.elapsed().as_secs_f64() })
+}

@@ -1,0 +1,588 @@
+//! The world-reshape agreement protocol: survivors of a membership
+//! fault agree on an epoch-numbered view and a resume step, over
+//! out-of-band frames on the *raw* fabric.
+//!
+//! ## Frames
+//!
+//! Every protocol frame is `[kind, epoch, attempt, step, suspects,
+//! members]` followed by the reserved [`OOB_TAG`] word on the wire.
+//! The trailing tag is what lets a frame land safely at a peer still
+//! inside its epoch: the epoch's `TagMux` parks it per peer and aborts
+//! the in-flight collective with a clean
+//! [`PeerLostCause::OutOfBand`](crate::collectives::PeerLostCause)
+//! error — pulling that peer into the reshape without losing the frame.
+//!
+//! ## Protocol
+//!
+//! Symmetric, two rounds per attempt, at most [`MAX_ATTEMPTS`]:
+//!
+//! 1. **Announce** — every survivor sends its local suspect set (and
+//!    its completed-step count) to every candidate (old members minus
+//!    suspects), then collects one announce per candidate.  Learning a
+//!    *new* suspect — from a frame, a link error, or a collection
+//!    timeout — restarts the round at a higher attempt with the merged
+//!    set, so views only ever shrink.
+//! 2. **Commit** — with every candidate reporting the same attempt, the
+//!    view is `old members − suspects`, the resume step is the minimum
+//!    reported completed-step count (bulk-synchronous steps keep ranks
+//!    within one step of each other, so the rollback ring's depth of
+//!    two always covers it).  Every member sends a commit carrying
+//!    `(view bitmap, resume)` and waits for everyone else's; any
+//!    mismatch is a hard error, a failure mid-commit restarts.
+//!
+//! A rank never returns from `agree` until every member of the final
+//! view committed that exact view at the same attempt, and per-link
+//! FIFO order makes the commit the *last* pre-epoch frame on each
+//! surviving link — so the commit round doubles as the reshape barrier
+//! that drains stale epoch traffic: everything before a peer's commit
+//! is discarded here, everything after belongs to the new epoch.
+//!
+//! ## Fault model
+//!
+//! Fail-stop crashes and stalls exceeding the heartbeat lease
+//! (converted to hard losses by the monitor's sever), detected before
+//! or during the reshape.  A member dying *mid-commit* can leave
+//! survivors split across adjacent epochs; [`Dispatch::AdoptEpoch`]
+//! re-merges them (the lagging side joins the committed round).  A
+//! falsely-suspected rank stays suspected: it observes a view
+//! excluding itself and exits [`Agreement::Evicted`] whenever the
+//! `--min-ranks` floor is above one; at the permissive default floor
+//! of 1 a fully partitioned rank instead continues solo (loudly
+//! logged) — raise the floor for split-brain-intolerant jobs.  The
+//! surviving majority's trajectory stays deterministic either way.
+
+use crate::collectives::mux::OOB_TAG;
+use crate::collectives::transport::{Transport, TransportError};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::thread;
+use std::time::{Duration, Instant};
+
+pub const KIND_ANNOUNCE: u32 = 0x454C_0001; // "EL" + 1
+pub const KIND_COMMIT: u32 = 0x454C_0002;
+
+/// Attempt ceiling: suspect sets only grow and are bounded by the world
+/// size, so convergence needs at most one restart per newly learned
+/// suspect (plus slack for attempt-number adoption).
+pub const MAX_ATTEMPTS: u32 = 96;
+
+/// Polling cadence while waiting for protocol frames.
+const POLL: Duration = Duration::from_micros(500);
+
+/// What the survivors agreed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Agreement {
+    /// The new view: members (world ranks, ascending), its epoch, and
+    /// the step count every member rolls back to and resumes from.
+    View { members: Vec<usize>, epoch: u64, resume_step: usize },
+    /// This rank is not part of the new view (suspected by the
+    /// survivors, or left without a quorum).
+    Evicted(String),
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Frame {
+    kind: u32,
+    epoch: u32,
+    attempt: u32,
+    step: u32,
+    suspects: u32,
+    members: u32,
+}
+
+impl Frame {
+    fn encode(&self) -> Vec<u32> {
+        vec![self.kind, self.epoch, self.attempt, self.step, self.suspects, self.members]
+    }
+
+    fn decode(words: &[u32]) -> Option<Frame> {
+        if words.len() != 6 || (words[0] != KIND_ANNOUNCE && words[0] != KIND_COMMIT) {
+            return None;
+        }
+        Some(Frame {
+            kind: words[0],
+            epoch: words[1],
+            attempt: words[2],
+            step: words[3],
+            suspects: words[4],
+            members: words[5],
+        })
+    }
+}
+
+/// Send one protocol frame (payload + trailing OOB tag) on the raw
+/// fabric; failures are ignored — a dead receiver surfaces on the read
+/// side as a timeout or link error.
+fn send_frame<T: Transport>(t: &T, to: usize, frame: &Frame) {
+    let mut wire = frame.encode();
+    wire.push(OOB_TAG);
+    let _ = t.send_checked(to, wire);
+}
+
+enum ReadErr {
+    Timeout,
+    Dead(TransportError),
+}
+
+/// Next protocol frame from `from`: parked out-of-band frames first
+/// (handed over from the epoch's mux), then the raw stream — where
+/// anything *not* carrying the OOB tag is stale epoch traffic from the
+/// aborted step and is discarded.  This discard is the "drain in-flight
+/// buckets" half of the reshape barrier.
+fn read_frame_from<T: Transport>(
+    t: &T,
+    from: usize,
+    pending: &mut VecDeque<Vec<u32>>,
+    deadline: Instant,
+) -> Result<Vec<u32>, ReadErr> {
+    loop {
+        if let Some(f) = pending.pop_front() {
+            return Ok(f);
+        }
+        match t.try_recv(from) {
+            Ok(Some(mut raw)) => {
+                if raw.last() == Some(&OOB_TAG) {
+                    raw.pop();
+                    return Ok(raw);
+                }
+                // stale epoch traffic (tagged bucket/control words or a
+                // partial collective) — drained and dropped
+            }
+            Ok(None) => {
+                if Instant::now() > deadline {
+                    return Err(ReadErr::Timeout);
+                }
+                thread::sleep(POLL);
+            }
+            Err(e) => return Err(ReadErr::Dead(e)),
+        }
+    }
+}
+
+enum Dispatch {
+    /// Stale or irrelevant — keep reading this link.
+    Ignore,
+    /// New information (suspects or a higher attempt): restart the
+    /// round at this attempt.
+    Restart(u32),
+    /// The sender is a whole reshape ahead (it committed an epoch this
+    /// rank missed — e.g. a member died mid-commit and the survivors
+    /// split across adjacent epochs): adopt its `(epoch, attempt)` and
+    /// restart, so the partitioned rounds re-merge instead of mutually
+    /// ignoring each other until both sides time out into split views.
+    AdoptEpoch(u32, u32),
+    /// This link's announce for the current attempt (completed steps).
+    Announce(u32),
+    /// This link's commit for the current attempt (resume, members).
+    Commit(u32, u32),
+    /// A frame names *us* as a suspect.
+    Evicted,
+}
+
+fn dispatch(
+    frame: &Frame,
+    my: usize,
+    epoch_next: u32,
+    attempt: u32,
+    suspects: &mut BTreeSet<usize>,
+) -> Dispatch {
+    if frame.epoch < epoch_next {
+        // an older reshape's stragglers — superseded
+        return Dispatch::Ignore;
+    }
+    let frame_suspects: BTreeSet<usize> = super::ranks_of(frame.suspects).into_iter().collect();
+    if frame_suspects.contains(&my) {
+        return Dispatch::Evicted;
+    }
+    if frame.epoch > epoch_next {
+        // the sender committed a reshape this rank never saw (a member
+        // died between its commit sends); join its round — suspects
+        // merge so the missing member stays excluded
+        suspects.extend(frame_suspects);
+        return Dispatch::AdoptEpoch(frame.epoch, frame.attempt.max(1));
+    }
+    let news: Vec<usize> =
+        frame_suspects.iter().copied().filter(|r| !suspects.contains(r)).collect();
+    if !news.is_empty() {
+        suspects.extend(news);
+        return Dispatch::Restart(attempt.max(frame.attempt) + 1);
+    }
+    if frame.attempt > attempt {
+        return Dispatch::Restart(frame.attempt);
+    }
+    if frame.attempt < attempt {
+        return Dispatch::Ignore;
+    }
+    match frame.kind {
+        KIND_ANNOUNCE => Dispatch::Announce(frame.step),
+        _ => Dispatch::Commit(frame.step, frame.members),
+    }
+}
+
+/// Run the agreement for one membership fault.  `t` is the *raw* fabric
+/// endpoint (world ranks); `old_members` the failed epoch's view;
+/// `initial_suspects` everything the epoch's failure board recorded;
+/// `done` this rank's completed-step count; `pending` the out-of-band
+/// frames the epoch's mux parked, indexed by world rank; `lease` the
+/// heartbeat lease (collection deadlines scale from it).
+#[allow(clippy::too_many_arguments)]
+pub fn agree<T: Transport>(
+    t: &T,
+    my: usize,
+    old_members: &[usize],
+    old_epoch: u64,
+    initial_suspects: &[usize],
+    done: usize,
+    mut pending: Vec<VecDeque<Vec<u32>>>,
+    lease: Duration,
+    min_ranks: usize,
+) -> Result<Agreement, String> {
+    assert!(old_members.len() <= super::MAX_ELASTIC_WORLD);
+    assert!(old_epoch + 1 <= u32::MAX as u64, "epoch overflow");
+    assert_eq!(pending.len(), t.world(), "pending frames are world-indexed");
+    // may advance further via Dispatch::AdoptEpoch (joining a round a
+    // mid-commit death made us miss)
+    let mut epoch_next = (old_epoch + 1) as u32;
+    let window = (lease * 4).max(Duration::from_secs(2));
+    let mut suspects: BTreeSet<usize> =
+        initial_suspects.iter().copied().filter(|&r| r != my).collect();
+    let mut attempt: u32 = 1;
+
+    'retry: for _ in 0..MAX_ATTEMPTS {
+        let members: Vec<usize> =
+            old_members.iter().copied().filter(|r| !suspects.contains(r)).collect();
+        if members.len() < min_ranks.max(1) || !members.contains(&my) {
+            return Ok(Agreement::Evicted(format!(
+                "no quorum: {} candidate ranks left of {} (min {})",
+                members.len(),
+                old_members.len(),
+                min_ranks.max(1)
+            )));
+        }
+
+        // -- round 1: announce + collect ---------------------------------
+        let ann = Frame {
+            kind: KIND_ANNOUNCE,
+            epoch: epoch_next,
+            attempt,
+            step: done as u32,
+            suspects: super::bitmap(suspects.iter().copied()),
+            members: 0,
+        };
+        for &p in &members {
+            if p != my {
+                send_frame(t, p, &ann);
+            }
+        }
+        let mut reports: BTreeMap<usize, u32> = BTreeMap::new();
+        // Commits consumed *during* the announce round (a peer that ran
+        // ahead sends its single commit once; forgetting it here would
+        // make the commit round below time out on a healthy rank and
+        // falsely suspect it).  Scoped per attempt — a restart abandons
+        // them.
+        let mut committed: BTreeMap<usize, (u32, u32)> = BTreeMap::new();
+        reports.insert(my, done as u32);
+        let deadline = Instant::now() + window;
+        // Keepalive cadence: a peer may still be draining its aborted
+        // step (comm-pool threads blocked on surviving links unblock one
+        // per out-of-band frame they receive), so the announce is
+        // re-sent periodically until the peer answers.  Duplicates are
+        // consumed before the peer's commit by per-link FIFO, so none
+        // survive the barrier.
+        let resend = lease.max(Duration::from_millis(20));
+        for &p in &members {
+            if p == my {
+                continue;
+            }
+            loop {
+                let slice = (Instant::now() + resend).min(deadline);
+                match read_frame_from(t, p, &mut pending[p], slice) {
+                    Ok(words) => {
+                        let Some(frame) = Frame::decode(&words) else { continue };
+                        match dispatch(&frame, my, epoch_next, attempt, &mut suspects) {
+                            Dispatch::Ignore => continue,
+                            Dispatch::Restart(a) => {
+                                attempt = a;
+                                continue 'retry;
+                            }
+                            Dispatch::AdoptEpoch(e, a) => {
+                                epoch_next = e;
+                                attempt = a;
+                                continue 'retry;
+                            }
+                            Dispatch::Announce(step) => {
+                                reports.insert(p, step);
+                                break;
+                            }
+                            // per-link FIFO puts a peer's announce ahead
+                            // of its commit, so a same-attempt commit
+                            // here means we already consumed the
+                            // announce in an abandoned round — accept
+                            // its step report and remember the commit
+                            // (it will not be resent)
+                            Dispatch::Commit(step, bits) => {
+                                reports.insert(p, step);
+                                committed.insert(p, (step, bits));
+                                break;
+                            }
+                            Dispatch::Evicted => {
+                                return Ok(Agreement::Evicted(format!(
+                                    "rank {p} reports this rank as lost"
+                                )));
+                            }
+                        }
+                    }
+                    Err(ReadErr::Timeout) => {
+                        if Instant::now() < deadline {
+                            // keepalive: nudge a peer still draining its
+                            // aborted step
+                            send_frame(t, p, &ann);
+                            continue;
+                        }
+                        suspects.insert(p);
+                        attempt += 1;
+                        continue 'retry;
+                    }
+                    Err(ReadErr::Dead(e)) => {
+                        crate::log_warn!("rank {my}: reshape peer {p} died announcing: {e}");
+                        suspects.insert(p);
+                        attempt += 1;
+                        continue 'retry;
+                    }
+                }
+            }
+        }
+
+        // -- decide + round 2: commit barrier -----------------------------
+        let resume = reports.values().min().copied().unwrap_or(done as u32);
+        let view_bits = super::bitmap(members.iter().copied());
+        let commit = Frame {
+            kind: KIND_COMMIT,
+            epoch: epoch_next,
+            attempt,
+            step: resume,
+            suspects: super::bitmap(suspects.iter().copied()),
+            members: view_bits,
+        };
+        for &p in &members {
+            if p != my {
+                send_frame(t, p, &commit);
+            }
+        }
+        let deadline = Instant::now() + window;
+        for &p in &members {
+            if p == my {
+                continue;
+            }
+            // a commit harvested in the announce round counts here — the
+            // peer sent its one commit and is already in the new epoch
+            if let Some(&(step, bits)) = committed.get(&p) {
+                if step != resume || bits != view_bits {
+                    return Err(format!(
+                        "reshape divergence: rank {p} committed (step {step}, members \
+                         {bits:#x}) vs local (step {resume}, members {view_bits:#x})"
+                    ));
+                }
+                continue;
+            }
+            loop {
+                match read_frame_from(t, p, &mut pending[p], deadline) {
+                    Ok(words) => {
+                        let Some(frame) = Frame::decode(&words) else { continue };
+                        match dispatch(&frame, my, epoch_next, attempt, &mut suspects) {
+                            Dispatch::Ignore | Dispatch::Announce(_) => continue,
+                            Dispatch::Restart(a) => {
+                                attempt = a;
+                                continue 'retry;
+                            }
+                            Dispatch::AdoptEpoch(e, a) => {
+                                epoch_next = e;
+                                attempt = a;
+                                continue 'retry;
+                            }
+                            Dispatch::Commit(step, bits) => {
+                                if step != resume || bits != view_bits {
+                                    return Err(format!(
+                                        "reshape divergence: rank {p} committed \
+                                         (step {step}, members {bits:#x}) vs local \
+                                         (step {resume}, members {view_bits:#x})"
+                                    ));
+                                }
+                                break;
+                            }
+                            Dispatch::Evicted => {
+                                return Ok(Agreement::Evicted(format!(
+                                    "rank {p} reports this rank as lost"
+                                )));
+                            }
+                        }
+                    }
+                    Err(ReadErr::Timeout) => {
+                        suspects.insert(p);
+                        attempt += 1;
+                        continue 'retry;
+                    }
+                    Err(ReadErr::Dead(e)) => {
+                        crate::log_warn!("rank {my}: reshape peer {p} died committing: {e}");
+                        suspects.insert(p);
+                        attempt += 1;
+                        continue 'retry;
+                    }
+                }
+            }
+        }
+        if members.len() == 1 && old_members.len() > 1 {
+            // the permissive floor (--min-ranks 1) lets a fully
+            // partitioned rank continue solo; a falsely-suspected but
+            // alive peer may be doing the same elsewhere — raise the
+            // floor to forbid this
+            crate::log_warn!(
+                "rank {my}: continuing SOLO after losing every peer of a {}-rank view \
+                 (set --min-ranks 2 to abort instead)",
+                old_members.len()
+            );
+        }
+        return Ok(Agreement::View {
+            members,
+            epoch: epoch_next as u64,
+            resume_step: resume as usize,
+        });
+    }
+    Err(format!("reshape did not converge within {MAX_ATTEMPTS} attempts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::LocalFabric;
+
+    fn no_pending(world: usize) -> Vec<VecDeque<Vec<u32>>> {
+        (0..world).map(|_| VecDeque::new()).collect()
+    }
+
+    fn run_one(
+        t: crate::collectives::LocalTransport,
+        world: usize,
+        suspects: Vec<usize>,
+        done: usize,
+    ) -> Result<Agreement, String> {
+        let my = t.rank();
+        let old: Vec<usize> = (0..world).collect();
+        agree(
+            &t,
+            my,
+            &old,
+            0,
+            &suspects,
+            done,
+            no_pending(world),
+            Duration::from_millis(50),
+            1,
+        )
+    }
+
+    /// 4 ranks, rank 2 dead before the reshape; rank 3 is one step
+    /// ahead and only learns of the loss from the others' announces
+    /// (the adoption-restart path).
+    #[test]
+    fn survivors_agree_on_view_and_min_step() {
+        let world = 4;
+        let mut fabric = LocalFabric::new(world);
+        let mut ts = fabric.take_all();
+        let t3 = ts.pop().unwrap();
+        let _dead = ts.pop().unwrap(); // rank 2: never participates
+        let t1 = ts.pop().unwrap();
+        let t0 = ts.pop().unwrap();
+        std::thread::scope(|s| {
+            let h0 = s.spawn(move || run_one(t0, world, vec![2], 6));
+            let h1 = s.spawn(move || run_one(t1, world, vec![2], 6));
+            // rank 3 suspects no one yet and reports one more step done
+            let h3 = s.spawn(move || run_one(t3, world, vec![], 7));
+            let want = Agreement::View { members: vec![0, 1, 3], epoch: 1, resume_step: 6 };
+            assert_eq!(h0.join().unwrap().unwrap(), want);
+            assert_eq!(h1.join().unwrap().unwrap(), want);
+            assert_eq!(h3.join().unwrap().unwrap(), want);
+        });
+    }
+
+    #[test]
+    fn isolated_rank_gets_evicted_by_quorum_loss() {
+        // a 2-rank world where the peer is gone and min_ranks = 2:
+        // the survivor cannot form a quorum and reports eviction
+        let mut fabric = LocalFabric::new(2);
+        let t0 = fabric.take(0);
+        let _dead = fabric.take(1);
+        let got = agree(
+            &t0,
+            0,
+            &[0, 1],
+            0,
+            &[1],
+            5,
+            no_pending(2),
+            Duration::from_millis(20),
+            2,
+        )
+        .unwrap();
+        assert!(matches!(got, Agreement::Evicted(_)), "{got:?}");
+    }
+
+    #[test]
+    fn solo_survivor_forms_a_one_rank_view() {
+        let mut fabric = LocalFabric::new(2);
+        let t0 = fabric.take(0);
+        let _dead = fabric.take(1);
+        let got = agree(
+            &t0,
+            0,
+            &[0, 1],
+            3,
+            &[1],
+            9,
+            no_pending(2),
+            Duration::from_millis(20),
+            1,
+        )
+        .unwrap();
+        assert_eq!(got, Agreement::View { members: vec![0], epoch: 4, resume_step: 9 });
+    }
+
+    #[test]
+    fn timeout_on_a_silent_peer_suspects_it() {
+        // rank 1 exists but never joins the reshape (a stalled peer on a
+        // fabric that cannot sever): rank 0 must time out, suspect it
+        // and proceed solo
+        let mut fabric = LocalFabric::new(2);
+        let t0 = fabric.take(0);
+        let _silent = fabric.take(1); // alive, never speaks
+        let got = agree(
+            &t0,
+            0,
+            &[0, 1],
+            0,
+            &[],
+            4,
+            no_pending(2),
+            Duration::from_millis(10),
+            1,
+        )
+        .unwrap();
+        assert_eq!(got, Agreement::View { members: vec![0], epoch: 1, resume_step: 4 });
+    }
+
+    #[test]
+    fn frames_roundtrip() {
+        let f = Frame {
+            kind: KIND_COMMIT,
+            epoch: 7,
+            attempt: 2,
+            step: 100,
+            suspects: 0b100,
+            members: 0b1011,
+        };
+        let mut wire = f.encode();
+        assert_eq!(Frame::decode(&wire).unwrap().members, 0b1011);
+        wire.push(OOB_TAG);
+        assert!(Frame::decode(&wire).is_none(), "wire form includes the tag");
+        assert!(Frame::decode(&[1, 2, 3]).is_none());
+    }
+}

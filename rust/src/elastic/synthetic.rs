@@ -1,0 +1,124 @@
+//! Synthetic workload for the elastic subsystem's artifact-free tests
+//! and benches (the same role `tests/pipeline.rs`' inline harness plays
+//! for the sync engines, shared here because the chaos matrix, the
+//! proptests and `e2e_throughput --elastic-smoke` all need one
+//! deterministic model).
+//!
+//! Gradients are pure functions of `(seed, view_epoch, rank, world,
+//! step, layer)` — exactly the [`ShardKey`] contract — so a reshaped
+//! run and a fresh run started from the survivors' checkpoint consume
+//! bit-identical "data", which is what makes the post-reshape
+//! bit-identity pins meaningful without a real dataset.
+
+use super::driver::{ShardKey, Workload};
+use crate::compression::Method;
+use crate::pipeline::LayerSpec;
+use crate::util::rng::Pcg32;
+
+/// Default synthetic model: a dense head plus compressed layers sized
+/// so greedy fusion (cap 3000) produces multiple buckets.
+pub const SIZES: &[usize] = &[2200, 700, 700, 1600, 500, 900];
+
+/// Layer specs over [`SIZES`]: layer 0 dense, the rest compressed
+/// (every second one quantized), mixing both selection paths.
+pub fn specs() -> Vec<LayerSpec> {
+    SIZES
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| LayerSpec {
+            li: i,
+            n,
+            method: if i == 0 {
+                Method::Dense
+            } else if n >= 1500 {
+                Method::SampledBinarySearch
+            } else {
+                Method::TrimmedTopk
+            },
+            quantize: i % 2 == 1,
+        })
+        .collect()
+}
+
+/// Rank-identical initial parameters.
+pub fn init_params(seed: u64) -> Vec<Vec<f32>> {
+    SIZES
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| {
+            let mut rng = Pcg32::new(seed ^ 0xE1A5, i as u64);
+            let mut p = vec![0f32; n];
+            rng.fill_normal(&mut p, 0.5);
+            p
+        })
+        .collect()
+}
+
+/// Deterministic synthetic model: per-(key, layer) Gaussian gradients,
+/// loss = mean |param| of layer 0 (identical across ranks, so the loss
+/// allreduce is exercised but trivial to reason about).
+pub struct SyntheticWorkload {
+    pub seed: u64,
+}
+
+/// One layer's gradient for a shard key — exposed so tests can replay
+/// exactly what a rank computed.
+pub fn grad(seed: u64, key: &ShardKey, li: usize, n: usize) -> Vec<f32> {
+    let lo = seed
+        ^ ((key.step as u64) << 24)
+        ^ ((li as u64) << 16)
+        ^ ((key.world as u64) << 8)
+        ^ key.rank as u64;
+    let hi = 0x51AB ^ key.epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mut rng = Pcg32::new(lo, hi);
+    let mut g = vec![0f32; n];
+    rng.fill_normal(&mut g, 1.0);
+    g
+}
+
+impl Workload for SyntheticWorkload {
+    fn compute(
+        &mut self,
+        params: &[Vec<f32>],
+        key: &ShardKey,
+    ) -> Result<(f32, Vec<Vec<f32>>), String> {
+        let grads = SIZES
+            .iter()
+            .enumerate()
+            .map(|(li, &n)| grad(self.seed, key, li, n))
+            .collect();
+        let head = &params[0];
+        let loss = head.iter().map(|v| v.abs()).sum::<f32>() / head.len().max(1) as f32;
+        Ok((loss, grads))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grads_keyed_by_every_shard_component() {
+        let k = ShardKey { epoch: 0, rank: 0, world: 4, step: 3 };
+        let base = grad(7, &k, 1, 64);
+        assert_eq!(grad(7, &k, 1, 64), base, "deterministic");
+        assert_ne!(grad(8, &k, 1, 64), base, "seed");
+        assert_ne!(grad(7, &ShardKey { rank: 1, ..k }, 1, 64), base, "rank");
+        assert_ne!(grad(7, &ShardKey { world: 3, ..k }, 1, 64), base, "world");
+        assert_ne!(grad(7, &ShardKey { step: 4, ..k }, 1, 64), base, "step");
+        assert_ne!(grad(7, &ShardKey { epoch: 1, ..k }, 1, 64), base, "view epoch");
+        assert_ne!(grad(7, &k, 2, 64), base, "layer");
+    }
+
+    #[test]
+    fn specs_cover_dense_and_compressed() {
+        let s = specs();
+        assert_eq!(s.len(), SIZES.len());
+        assert_eq!(s[0].method, Method::Dense);
+        assert!(s.iter().any(|x| x.method == Method::SampledBinarySearch));
+        assert!(s.iter().any(|x| x.quantize));
+        let p = init_params(3);
+        assert_eq!(p.iter().map(Vec::len).collect::<Vec<_>>(), SIZES.to_vec());
+        assert_eq!(init_params(3)[2], p[2], "rank-identical params");
+    }
+}

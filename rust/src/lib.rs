@@ -26,6 +26,7 @@ pub mod config;
 pub mod coordinator;
 pub mod costmodel;
 pub mod data;
+pub mod elastic;
 pub mod models;
 pub mod net;
 pub mod optim;

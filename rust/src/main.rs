@@ -73,6 +73,15 @@ fn cmd_train(argv: &[String]) -> i32 {
         .opt("topology", "", "physical topology NODESxRANKS_PER_NODE, e.g. 2x4 (flat if unset)")
         .opt("algo", "", "bucket collective: sparse | hierarchical | auto (cost-model argmin)")
         .opt("machine", "", "machine preset the auto picker prices against (default muradin)")
+        .opt("heartbeat-ms", "", "elastic: heartbeat interval in ms (lease = 4x; default 25)")
+        .opt("min-ranks", "", "elastic: abort instead of reshaping below this many ranks")
+        .opt("kill-rank", "", "fault injection: kill rank R at step S, as R@S (';'-separated)")
+        .opt("stall-rank", "", "fault injection: stall rank R at step S for MS ms, as R@S:MS")
+        .opt("rejoin-rank", "", "elastic: rejoin killed rank R at step S, as R@S (local fabric)")
+        .opt("ckpt", "", "elastic: RSCK checkpoint path prefix")
+        .opt("ckpt-every", "", "elastic: periodic checkpoint cadence in steps (0 = never)")
+        .opt("resume", "", "elastic: resume every rank from PREFIX_rank{R}.rsck")
+        .flag("elastic", "survive worker loss: heartbeats, world reshape, rejoin")
         .flag("pipeline", "overlap bucket selection + collectives on a comm thread pool")
         .flag("csv", "print a CSV row instead of the summary");
     let parsed = match args.parse(argv) {
@@ -105,6 +114,24 @@ fn cmd_train(argv: &[String]) -> i32 {
         if !parsed.get(key).is_empty() {
             overrides.push(format!("{key}={}", parsed.get(key)));
         }
+    }
+    // elastic knobs: CLI spelling -> config key
+    for (flag, key) in [
+        ("heartbeat-ms", "heartbeat_ms"),
+        ("min-ranks", "min_ranks"),
+        ("kill-rank", "kill_rank"),
+        ("stall-rank", "stall_rank"),
+        ("rejoin-rank", "rejoin_rank"),
+        ("ckpt", "ckpt"),
+        ("ckpt-every", "ckpt_every"),
+        ("resume", "resume"),
+    ] {
+        if !parsed.get(flag).is_empty() {
+            overrides.push(format!("{key}={}", parsed.get(flag)));
+        }
+    }
+    if parsed.get_flag("elastic") {
+        overrides.push("elastic=true".into());
     }
     if parsed.get_flag("pipeline") {
         overrides.push("pipeline=true".into());
@@ -187,6 +214,11 @@ fn train_tcp_rank(manifest: &Manifest, cfg: TrainConfig, csv: bool) -> i32 {
                 } else {
                     print!("{}", report.summary());
                 }
+            } else if let Some(note) = &report.status_note {
+                eprintln!(
+                    "rank {rank}: {note} ({} sent over tcp)",
+                    fmt_bytes(report.bytes as usize)
+                );
             } else {
                 eprintln!(
                     "rank {rank}: done ({} sent over tcp, replicas {})",
@@ -194,7 +226,9 @@ fn train_tcp_rank(manifest: &Manifest, cfg: TrainConfig, csv: bool) -> i32 {
                     if report.replicas_consistent { "consistent" } else { "DRIFTED" }
                 );
             }
-            if report.replicas_consistent {
+            // a killed/evicted elastic rank is an expected clean exit;
+            // an actually-finished rank must have consistent replicas
+            if report.replicas_consistent || report.status_note.is_some() {
                 0
             } else {
                 eprintln!("rank {rank}: replica drift detected");
@@ -221,6 +255,11 @@ fn cmd_launch(argv: &[String]) -> i32 {
         .opt("topology", "", "physical topology NODESxRANKS_PER_NODE forwarded to every rank")
         .opt("algo", "", "bucket collective forwarded to every rank: sparse | hierarchical | auto")
         .opt("machine", "", "machine preset the auto picker prices against, forwarded to every rank")
+        .opt("heartbeat-ms", "", "elastic: heartbeat interval in ms, forwarded to every rank")
+        .opt("min-ranks", "", "elastic: minimum surviving view size, forwarded to every rank")
+        .opt("kill-rank", "", "fault injection: kill rank R at step S (R@S), forwarded")
+        .opt("stall-rank", "", "fault injection: stall rank R at step S for MS ms (R@S:MS), forwarded")
+        .flag("elastic", "every rank survives worker loss (heartbeats + world reshape)")
         .flag("pipeline", "every rank runs the pipelined sync engine")
         .flag("csv", "rank 0 prints a CSV row instead of the summary");
     let parsed = match args.parse(argv) {
@@ -254,12 +293,25 @@ fn cmd_launch(argv: &[String]) -> i32 {
         if parsed.get_flag("pipeline") {
             set.push_str(",pipeline=true");
         }
+        if parsed.get_flag("elastic") {
+            set.push_str(",elastic=true");
+        }
         if !parsed.get("inflight").is_empty() {
             set.push_str(&format!(",inflight={}", parsed.get("inflight")));
         }
         for key in ["topology", "algo", "machine"] {
             if !parsed.get(key).is_empty() {
                 set.push_str(&format!(",{key}={}", parsed.get(key)));
+            }
+        }
+        for (flag, key) in [
+            ("heartbeat-ms", "heartbeat_ms"),
+            ("min-ranks", "min_ranks"),
+            ("kill-rank", "kill_rank"),
+            ("stall-rank", "stall_rank"),
+        ] {
+            if !parsed.get(flag).is_empty() {
+                set.push_str(&format!(",{key}={}", parsed.get(flag)));
             }
         }
         if !parsed.get("set").is_empty() {

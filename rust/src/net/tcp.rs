@@ -45,7 +45,9 @@
 
 use super::frame::{read_frame, read_frame_with, write_frame, write_frame_with};
 use super::pool::BytePool;
-use crate::collectives::transport::{Payload, TrafficStats, Transport, TransportError};
+use crate::collectives::transport::{
+    lock_ok, Payload, PeerLostCause, TrafficStats, Transport, TransportError,
+};
 use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{IpAddr, Ipv4Addr, Shutdown, SocketAddrV4, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -155,6 +157,35 @@ fn read_handshake(s: &mut TcpStream, deadline: Instant, what: &str) -> io::Resul
     Ok(frame)
 }
 
+/// The cause a peer's reader thread recorded before closing its inbox,
+/// shared between the reader, `recv_checked` and [`TcpTransport::sever`].
+type CauseCell = Arc<Mutex<Option<(PeerLostCause, String)>>>;
+
+/// Record a loss cause exactly once: the first classification wins, so
+/// a sever-then-reset sequence keeps the sever's `Timeout` verdict and a
+/// reader racing a sever cannot overwrite it.
+fn record_cause(cell: &CauseCell, cause: PeerLostCause, reason: String) {
+    let mut slot = lock_ok(cell);
+    if slot.is_none() {
+        *slot = Some((cause, reason));
+    }
+}
+
+/// Classify a data-plane stream error into the structured
+/// [`PeerLostCause`] vocabulary: mid-frame EOF (peer vanished with data
+/// in flight) vs OS-level reset vs read deadline vs corrupt framing.
+fn classify_io(e: &io::Error) -> PeerLostCause {
+    match e.kind() {
+        io::ErrorKind::UnexpectedEof => PeerLostCause::MidStream,
+        io::ErrorKind::ConnectionReset
+        | io::ErrorKind::ConnectionAborted
+        | io::ErrorKind::BrokenPipe => PeerLostCause::Reset,
+        io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock => PeerLostCause::Timeout,
+        io::ErrorKind::InvalidData => PeerLostCause::Corrupt,
+        _ => PeerLostCause::Unknown,
+    }
+}
+
 /// One rank's endpoint of a TCP fabric.  Construct with
 /// [`TcpTransport::connect`]; every rank of the job calls it with the same
 /// `world` and rendezvous address and its own `rank`.
@@ -163,9 +194,13 @@ pub struct TcpTransport {
     world: usize,
     txs: Vec<Mutex<Sender<Payload>>>,
     rxs: Vec<Mutex<Receiver<Payload>>>,
-    /// Why each peer's reader thread exited, for `recv_checked` reports
-    /// (set once, right before the inbox closes).
-    causes: Vec<Arc<Mutex<Option<String>>>>,
+    /// Why each peer's link died, for `recv_checked` reports and the
+    /// elastic layer's detection (set once, right before the inbox
+    /// closes — clean FIN vs mid-stream EOF vs reset vs corrupt frame).
+    causes: Vec<CauseCell>,
+    /// One extra handle per peer socket so [`Transport::sever`] can
+    /// force-close a stalled link from the monitor thread.
+    sever_handles: Vec<Option<TcpStream>>,
     writers: Vec<JoinHandle<()>>,
     /// Per-process traffic counters (same accounting as `LocalFabric`:
     /// payload words at `send`; the 4-byte frame header is `4 *
@@ -209,20 +244,23 @@ impl TcpTransport {
         let mut txs = Vec::with_capacity(world);
         let mut rxs = Vec::with_capacity(world);
         let mut causes = Vec::with_capacity(world);
+        let mut sever_handles = Vec::with_capacity(world);
         let mut writers = Vec::with_capacity(world.saturating_sub(1));
         for peer in 0..world {
-            let cause = Arc::new(Mutex::new(None::<String>));
+            let cause: CauseCell = Arc::new(Mutex::new(None));
             causes.push(Arc::clone(&cause));
             if peer == rank {
                 // self-channel: in-memory, like LocalFabric's self pair
                 let (tx, rx) = channel::<Payload>();
                 txs.push(Mutex::new(tx));
                 rxs.push(Mutex::new(rx));
+                sever_handles.push(None);
                 continue;
             }
             let stream = streams[peer].take().expect("bootstrap left a peer unconnected");
             let _ = stream.set_nodelay(true);
             let reader_stream = stream.try_clone().expect("tcp stream clone");
+            sever_handles.push(stream.try_clone().ok());
 
             let (tx, writer_rx) = channel::<Payload>();
             let writer_pool = Arc::clone(&pool);
@@ -266,19 +304,23 @@ impl TcpTransport {
                             }
                             // clean FIN: the peer shut down between frames
                             Ok(None) => {
-                                *cause.lock().unwrap() =
-                                    Some("connection closed by peer".into());
+                                record_cause(
+                                    &cause,
+                                    PeerLostCause::CleanFin,
+                                    "connection closed by peer".into(),
+                                );
                                 break;
                             }
-                            // mid-frame EOF (peer crash), corrupt or
-                            // oversized frame: distinct from clean
-                            // shutdown — record the cause for
-                            // recv_checked before the inbox closes
+                            // mid-frame EOF (peer crash), OS reset,
+                            // corrupt or oversized frame: distinct from
+                            // clean shutdown — classify and record the
+                            // cause for recv_checked (and the elastic
+                            // failure detector) before the inbox closes
                             Err(e) => {
                                 crate::log_warn!(
                                     "rank {rank}: recv stream from rank {peer} broke: {e}"
                                 );
-                                *cause.lock().unwrap() = Some(format!("stream broke: {e}"));
+                                record_cause(&cause, classify_io(&e), format!("stream broke: {e}"));
                                 break;
                             }
                         }
@@ -291,7 +333,35 @@ impl TcpTransport {
             rxs.push(Mutex::new(inbox_rx));
             writers.push(writer);
         }
-        TcpTransport { rank, world, txs, rxs, causes, writers, stats }
+        TcpTransport { rank, world, txs, rxs, causes, sever_handles, writers, stats }
+    }
+
+    /// The recorded loss cause for `peer`'s link, if its reader has
+    /// already classified a failure.
+    pub fn peer_lost(&self, peer: usize) -> Option<(PeerLostCause, String)> {
+        lock_ok(&self.causes[peer]).clone()
+    }
+
+    /// Every peer whose link has died so far, with the classified cause
+    /// the reader thread recorded — the transport-level failure record
+    /// the elastic membership layer reads.
+    pub fn lost_peers(&self) -> Vec<(usize, PeerLostCause)> {
+        (0..self.world)
+            .filter_map(|p| self.peer_lost(p).map(|(cause, _)| (p, cause)))
+            .collect()
+    }
+
+    /// Build the error `recv_checked`/`try_recv` report for a closed
+    /// inbox from the reader's recorded classification.
+    fn lost_error(&self, from: usize) -> TransportError {
+        match self.peer_lost(from) {
+            Some((cause, reason)) => TransportError::with_cause(from, reason, cause),
+            None => TransportError::with_cause(
+                from,
+                "connection closed",
+                PeerLostCause::Unknown,
+            ),
+        }
     }
 }
 
@@ -422,14 +492,46 @@ impl Transport for TcpTransport {
     }
 
     fn recv_checked(&self, from: usize) -> Result<Vec<u32>, TransportError> {
-        self.rxs[from].lock().unwrap().recv().map(Payload::into_vec).map_err(|_| {
-            let reason = self.causes[from]
-                .lock()
-                .unwrap()
-                .clone()
-                .unwrap_or_else(|| "connection closed".into());
-            TransportError { peer: from, reason }
-        })
+        lock_ok(&self.rxs[from])
+            .recv()
+            .map(Payload::into_vec)
+            .map_err(|_| self.lost_error(from))
+    }
+
+    fn try_recv(&self, from: usize) -> Result<Option<Vec<u32>>, TransportError> {
+        use std::sync::mpsc::TryRecvError;
+        match lock_ok(&self.rxs[from]).try_recv() {
+            Ok(p) => Ok(Some(p.into_vec())),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(self.lost_error(from)),
+        }
+    }
+
+    fn send_checked(&self, to: usize, msg: Vec<u32>) -> Result<(), TransportError> {
+        use std::sync::atomic::Ordering;
+        let words = msg.len() as u64;
+        match lock_ok(&self.txs[to]).send(Payload::Owned(msg)) {
+            Ok(()) => {
+                self.stats.messages.fetch_add(1, Ordering::Relaxed);
+                self.stats.words.fetch_add(words, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(_) => Err(self.lost_error(to)),
+        }
+    }
+
+    /// Force-close the socket to `peer`: its reader errors out (the
+    /// recorded cause stays `Timeout` — the sever's verdict), so a
+    /// receive blocked on a stalled peer fails instead of hanging.
+    fn sever(&self, peer: usize) {
+        if let Some(stream) = &self.sever_handles[peer] {
+            record_cause(
+                &self.causes[peer],
+                PeerLostCause::Timeout,
+                format!("link to rank {peer} severed after lease expiry"),
+            );
+            let _ = stream.shutdown(Shutdown::Both);
+        }
     }
 
     fn recv(&self, from: usize) -> Vec<u32> {
@@ -555,6 +657,66 @@ mod tests {
         let err = t0.recv_checked(1).unwrap_err();
         assert_eq!(err.peer, 1);
         assert!(err.reason.contains("closed"), "{err}");
+        assert_eq!(err.cause, PeerLostCause::CleanFin, "orderly FIN classification");
+        assert_eq!(t0.lost_peers(), vec![(1, PeerLostCause::CleanFin)]);
+    }
+
+    #[test]
+    fn mid_frame_eof_classified_as_mid_stream() {
+        // a raw client writes half a frame then disappears: the reader
+        // must classify the mid-stream EOF distinctly from a clean FIN
+        let addr = free_loopback_addr();
+        let listener = TcpListener::bind(&addr[..]).unwrap();
+        let h = thread::spawn(move || {
+            let mut s = TcpStream::connect(&addr[..]).unwrap();
+            // header promises 4 words, only 1 arrives
+            use std::io::Write;
+            s.write_all(&4u32.to_le_bytes()).unwrap();
+            s.write_all(&7u32.to_le_bytes()).unwrap();
+            s.flush().unwrap();
+        });
+        let (stream, _) = listener.accept().unwrap();
+        h.join().unwrap();
+        let streams: Vec<Option<TcpStream>> = vec![None, Some(stream)];
+        let t = TcpTransport::from_streams(0, 2, streams);
+        let err = t.recv_checked(1).unwrap_err();
+        assert_eq!(err.cause, PeerLostCause::MidStream, "{err}");
+    }
+
+    #[test]
+    fn sever_converts_a_silent_stall_into_a_timeout_loss() {
+        let addr = free_loopback_addr();
+        let (h0, t1) = pair(&addr);
+        let t0 = h0.join().unwrap();
+        // rank 1 never sends (a "stalled" peer); rank 0 severs the link
+        t0.sever(1);
+        let err = t0.recv_checked(1).unwrap_err();
+        assert_eq!(err.cause, PeerLostCause::Timeout, "{err}");
+        assert!(err.reason.contains("severed"), "{err}");
+        assert_eq!(t0.lost_peers(), vec![(1, PeerLostCause::Timeout)]);
+        drop(t1);
+    }
+
+    #[test]
+    fn try_recv_and_send_checked_over_tcp() {
+        let addr = free_loopback_addr();
+        let (h0, t1) = pair(&addr);
+        let t0 = h0.join().unwrap();
+        assert!(t0.try_recv(1).unwrap().is_none(), "idle link polls empty");
+        t1.send_checked(0, vec![42]).unwrap();
+        // poll until the reader thread lands the frame in the inbox
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            match t0.try_recv(1).unwrap() {
+                Some(msg) => {
+                    assert_eq!(msg, vec![42]);
+                    break;
+                }
+                None if Instant::now() > deadline => panic!("frame never arrived"),
+                None => thread::sleep(Duration::from_millis(1)),
+            }
+        }
+        drop(t1);
     }
 
     #[test]

@@ -77,6 +77,22 @@ impl DenseOptState {
             }
         }
     }
+
+    /// The velocity buffer, if the optimizer keeps one — checkpointed by
+    /// the elastic layer alongside the compressed layers' residuals.
+    pub fn velocity(&self) -> Option<&[f32]> {
+        self.velocity.as_deref()
+    }
+
+    /// Restore a checkpointed velocity buffer (no-op target for SGD,
+    /// which keeps none — asserting instead would make dense-SGD layers
+    /// unrestorable).
+    pub fn load_velocity(&mut self, v: &[f32]) {
+        if let Some(cur) = &mut self.velocity {
+            assert_eq!(cur.len(), v.len(), "velocity length");
+            cur.copy_from_slice(v);
+        }
+    }
 }
 
 /// Learning-rate schedule: constant, step decay, or decay-on-plateau

@@ -179,6 +179,27 @@ impl BucketState {
         &self.blob
     }
 
+    /// Per-layer `(layer id, residual V, momentum U)` views — what the
+    /// elastic snapshot/checkpoint captures each step boundary
+    /// (DESIGN.md §Elastic-Membership).
+    pub fn layer_states(&self) -> impl Iterator<Item = (usize, &[f32], &[f32])> {
+        self.layers
+            .iter()
+            .map(|l| (l.spec.li, l.residual.residual(), l.residual.momentum_buf()))
+    }
+
+    /// Restore one layer's residual/momentum buffers (inverse of
+    /// [`layer_states`](Self::layer_states)); the selection caches
+    /// (threshold, sign alternator) restart cold — deterministically, so
+    /// a rebuilt engine matches a fresh run resumed from the same
+    /// checkpoint bit-for-bit.
+    pub fn load_layer_state(&mut self, idx: usize, v: &[f32], u: &[f32]) {
+        let layer = &mut self.layers[idx];
+        assert_eq!(v.len(), layer.spec.n, "residual length for layer {}", layer.spec.li);
+        assert_eq!(u.len(), layer.spec.n, "momentum length for layer {}", layer.spec.li);
+        layer.residual.set_buffers(v.to_vec(), u.to_vec());
+    }
+
     /// The GPU-side half of Alg. 4 for this bucket: accumulate → select
     /// → mask → pack each layer in order, into the bucket's persistent
     /// allgather blob ([`blob`](Self::blob)).  `grads[i]` is this step's

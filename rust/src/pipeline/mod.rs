@@ -150,4 +150,14 @@ pub trait SyncEngine {
         timer: &mut PhaseTimer,
         apply: &mut dyn FnMut(BucketDone) -> Result<(), String>,
     ) -> Result<(), String>;
+
+    /// Snapshot the engine-owned per-layer compressor state as
+    /// `(layer id, residual V, momentum U)` clones — taken at step
+    /// boundaries by the elastic driver, whose reshape rollback and
+    /// `RSCK` checkpoints must carry the unsent gradient mass (DGC:
+    /// residuals are part of the training trajectory).  Engines that
+    /// own no residual state may return nothing.
+    fn export_layer_states(&self) -> Vec<(usize, Vec<f32>, Vec<f32>)> {
+        Vec::new()
+    }
 }

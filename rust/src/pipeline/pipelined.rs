@@ -138,6 +138,21 @@ impl<T: Transport + Send + Sync> SyncEngine for Pipelined<T> {
         self.slots.len()
     }
 
+    fn export_layer_states(&self) -> Vec<(usize, Vec<f32>, Vec<f32>)> {
+        // between steps every bucket state is parked; mid-step (a bucket
+        // in flight on the pool) there is no consistent snapshot to take,
+        // and the elastic driver only calls this at step boundaries
+        self.slots
+            .iter()
+            .flat_map(|slot| {
+                let b = slot.as_ref().expect("bucket state parked between steps");
+                b.layer_states()
+                    .map(|(li, v, u)| (li, v.to_vec(), u.to_vec()))
+                    .collect::<Vec<_>>()
+            })
+            .collect()
+    }
+
     fn sync_step(
         &mut self,
         grads: &[Vec<f32>],

@@ -58,6 +58,13 @@ impl<T: Transport> SyncEngine for Sequential<'_, T> {
         self.buckets.len()
     }
 
+    fn export_layer_states(&self) -> Vec<(usize, Vec<f32>, Vec<f32>)> {
+        self.buckets
+            .iter()
+            .flat_map(|b| b.layer_states().map(|(li, v, u)| (li, v.to_vec(), u.to_vec())))
+            .collect()
+    }
+
     fn sync_step(
         &mut self,
         grads: &[Vec<f32>],

@@ -1,0 +1,401 @@
+//! Elastic-membership chaos matrix (DESIGN.md §Elastic-Membership).
+//!
+//! Injected kills and stalls across both sync engines, both real
+//! fabrics and both collective schedules, with the two load-bearing
+//! pins:
+//!
+//! * **Post-reshape bit-identity** — a 4-rank run that loses rank 2
+//!   mid-training reshapes to a 3-rank world and, from the reshape
+//!   barrier onward, is *bit-identical* to a fresh 3-rank run started
+//!   from the survivors' dumped checkpoints.
+//! * **Residual-preserving rejoin** — a killed-then-rejoined rank
+//!   resumes with its residual/momentum state intact, bit-compared
+//!   against an uninterrupted run's checkpoint at the same step.
+//!
+//! No artifacts needed: the driver runs over
+//! `elastic::synthetic::SyntheticWorkload`, whose gradients are pure in
+//! `(seed, view_epoch, rank, world, step, layer)`.
+
+use redsync::collectives::Topology;
+use redsync::coordinator::Checkpoint;
+use redsync::elastic::synthetic::{self, SyntheticWorkload};
+use redsync::elastic::{
+    fresh_checkpoint, run_elastic_worker, run_local_fleet, ElasticOpts, ElasticStatus, FaultSpec,
+    FleetOutcome, RankOutcome, StallSpec,
+};
+use redsync::net::{free_loopback_addr, TcpOptions, TcpTransport};
+use std::thread;
+use std::time::Duration;
+
+const SEED: u64 = 0xE1A5;
+
+fn opts(steps: usize, pipeline: bool) -> ElasticOpts {
+    ElasticOpts {
+        steps,
+        pipeline,
+        fusion_cap_elems: 3000,
+        // a generous lease (4x this) so loaded CI machines cannot
+        // false-positive; kill detection is transport-driven and fast
+        // regardless
+        heartbeat: Duration::from_millis(100),
+        log_every: 2,
+        ..ElasticOpts::default()
+    }
+}
+
+fn fresh(o: &ElasticOpts) -> Checkpoint {
+    fresh_checkpoint(synthetic::init_params(SEED), &synthetic::specs(), o.optimizer, SEED)
+}
+
+/// Run a fleet over the in-process fabric (handles rejoin generations).
+fn run_local(world: usize, o: &ElasticOpts) -> FleetOutcome {
+    let specs = synthetic::specs();
+    run_local_fleet(
+        world,
+        &specs,
+        o,
+        |_r| Ok(fresh(o)),
+        |_r| Ok(SyntheticWorkload { seed: SEED }),
+    )
+    .expect("fleet")
+}
+
+/// Run a fleet over the in-process fabric, each rank resuming from
+/// `{prefix}_rank{r}.rsck`-style files named by `path_of`.
+fn run_local_resumed(
+    world: usize,
+    o: &ElasticOpts,
+    path_of: impl Fn(usize) -> String + Send + Sync,
+) -> FleetOutcome {
+    let specs = synthetic::specs();
+    run_local_fleet(
+        world,
+        &specs,
+        o,
+        |r| Checkpoint::load(path_of(r)).map_err(|e| format!("resume rank {r}: {e}")),
+        |_r| Ok(SyntheticWorkload { seed: SEED }),
+    )
+    .expect("fleet")
+}
+
+/// Run every rank of a loopback-TCP fleet in threads (shrink only — the
+/// in-process orchestrator owns rejoin).
+fn run_tcp(world: usize, o: &ElasticOpts) -> Vec<RankOutcome> {
+    let addr = free_loopback_addr();
+    let handles: Vec<_> = (0..world)
+        .map(|rank| {
+            let addr = addr.clone();
+            let o = o.clone();
+            thread::spawn(move || {
+                let t = TcpTransport::connect(&TcpOptions::new(world, rank, addr))
+                    .expect("tcp bootstrap");
+                let specs = synthetic::specs();
+                let init = fresh(&o);
+                let mut w = SyntheticWorkload { seed: SEED };
+                run_elastic_worker(&t, &specs, init, None, &o, &mut w)
+                    .unwrap_or_else(|e| panic!("rank {rank}: {e}"))
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().expect("rank thread")).collect()
+}
+
+fn tmp_prefix(tag: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("redsync_elastic_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("tmp dir");
+    dir.join("ck").to_string_lossy().into_owned()
+}
+
+// ---------------------------------------------------------------------
+// No-fault baseline: the elastic stack must not change the math
+// ---------------------------------------------------------------------
+
+#[test]
+fn no_fault_runs_agree_across_engines_and_fabrics() {
+    let world = 4;
+    let o_seq = opts(8, false);
+    let o_pipe = opts(8, true);
+    let local_seq = run_local(world, &o_seq);
+    let local_pipe = run_local(world, &o_pipe);
+    let tcp_seq = run_tcp(world, &o_seq);
+    let tcp_pipe = run_tcp(world, &o_pipe);
+
+    let mut hashes = Vec::new();
+    for (label, ranks) in [
+        ("local/seq", &local_seq.ranks),
+        ("local/pipe", &local_pipe.ranks),
+        ("tcp/seq", &tcp_seq),
+        ("tcp/pipe", &tcp_pipe),
+    ] {
+        for o in ranks.iter() {
+            assert_eq!(o.status, ElasticStatus::Finished, "{label}");
+            assert!(o.replicas_consistent, "{label}");
+            assert!(o.events.is_empty(), "{label}: spurious membership events");
+            assert_eq!(o.epoch, 0, "{label}");
+        }
+        hashes.push((label, ranks[0].param_hash));
+    }
+    let h0 = hashes[0].1;
+    for (label, h) in &hashes {
+        assert_eq!(*h, h0, "{label} diverged from local/seq");
+    }
+}
+
+#[test]
+fn elastic_traffic_is_fully_multiplexed() {
+    // without faults, every byte on the fabric went through the mux
+    // (ctrl + bucket + heartbeat tags) — exact accounting, word for word
+    let fleet = run_local(2, &opts(5, true));
+    let mux_words: u64 = fleet.ranks.iter().map(|o| o.mux_words).sum();
+    assert_eq!(fleet.bytes, mux_words * 4, "raw fabric bytes == muxed words");
+    for o in &fleet.ranks {
+        assert!(o.ctrl_words > 0, "control stream is accounted");
+        assert!(o.ctrl_words <= o.mux_words);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Kill → reshape → bit-identical continuation (the acceptance pin)
+// ---------------------------------------------------------------------
+
+/// Shared body: 4 ranks, rank 2 killed at step 6 of 12; survivors must
+/// reshape to a 3-rank world and match a fresh 3-rank run resumed from
+/// their reshape checkpoints, bit for bit.
+fn kill_reshape_case(pipeline: bool, tcp: bool) {
+    let world = 4;
+    let prefix = tmp_prefix(&format!("kill_p{}_t{}", pipeline as u8, tcp as u8));
+    let mut o = opts(12, pipeline);
+    o.kill = vec![FaultSpec { rank: 2, step: 6 }];
+    o.ckpt_prefix = Some(prefix.clone());
+
+    let ranks: Vec<RankOutcome> =
+        if tcp { run_tcp(world, &o) } else { run_local(world, &o).ranks };
+
+    assert_eq!(ranks[2].status, ElasticStatus::Killed);
+    let mut survivor_hash = None;
+    for r in [0usize, 1, 3] {
+        let out = &ranks[r];
+        assert_eq!(out.status, ElasticStatus::Finished, "rank {r}");
+        assert!(out.replicas_consistent, "rank {r}");
+        assert_eq!(out.view, vec![0, 1, 3], "rank {r} final view");
+        assert_eq!(out.epoch, 1, "rank {r} final epoch");
+        assert_eq!(out.events.len(), 1, "rank {r} events");
+        let e = &out.events[0];
+        assert_eq!(e.lost, vec![2]);
+        assert_eq!(e.world_after, 3);
+        assert_eq!(e.resume_step, 6, "all ranks completed exactly 6 steps");
+        // detection must happen within (a generous multiple of) the
+        // heartbeat lease — transport-level detection is near-immediate
+        assert!(e.detect_secs < 2.0, "detect took {}s", e.detect_secs);
+        match survivor_hash {
+            None => survivor_hash = Some(out.param_hash),
+            Some(h) => assert_eq!(out.param_hash, h, "survivors agree"),
+        }
+    }
+
+    // run B: a fresh 3-rank world started from the survivors' dumped
+    // reshape state (files keyed by the old world ranks; B's rank r
+    // takes over survivor members[r]) — from the barrier onward the
+    // trajectories must be bit-identical
+    let o_b = opts(12, pipeline);
+    let survivors = [0usize, 1, 3];
+    let b = run_local_resumed(3, &o_b, move |r| {
+        format!("{prefix}_reshape_e1_rank{}.rsck", survivors[r])
+    });
+    for (r, out) in b.ranks.iter().enumerate() {
+        assert_eq!(out.status, ElasticStatus::Finished, "B rank {r}");
+        assert!(out.replicas_consistent, "B rank {r}");
+        assert_eq!(out.epoch, 1, "B resumes inside view epoch 1");
+    }
+    assert_eq!(
+        b.ranks[0].param_hash,
+        survivor_hash.unwrap(),
+        "fresh 3-rank run from the reshape checkpoints must match the survivors bit-for-bit"
+    );
+
+    // the reporter's loss curves agree from the barrier on
+    let a_tail: Vec<(usize, f32)> = ranks[0]
+        .loss_curve
+        .iter()
+        .copied()
+        .filter(|&(s, _)| s >= 6)
+        .collect();
+    let b_tail: Vec<(usize, f32)> =
+        b.ranks[0].loss_curve.iter().copied().filter(|&(s, _)| s >= 6).collect();
+    assert_eq!(a_tail, b_tail, "post-barrier loss trajectories");
+}
+
+#[test]
+fn kill_reshape_bit_identity_local_sequential() {
+    kill_reshape_case(false, false);
+}
+
+#[test]
+fn kill_reshape_bit_identity_local_pipelined() {
+    kill_reshape_case(true, false);
+}
+
+#[test]
+fn kill_reshape_bit_identity_tcp_sequential() {
+    kill_reshape_case(false, true);
+}
+
+#[test]
+fn kill_reshape_bit_identity_tcp_pipelined() {
+    kill_reshape_case(true, true);
+}
+
+// ---------------------------------------------------------------------
+// Hierarchical schedule under loss
+// ---------------------------------------------------------------------
+
+#[test]
+fn hierarchical_survives_whole_node_loss() {
+    // 2x2 topology; both ranks of node 1 die at step 4: the survivors
+    // form a whole node, so the hierarchical schedule survives as 1x2
+    let world = 4;
+    let mut o = opts(10, false);
+    o.topology = Some(Topology::new(2, 2));
+    o.hierarchical = true;
+    o.kill = vec![FaultSpec { rank: 2, step: 4 }, FaultSpec { rank: 3, step: 4 }];
+    let fleet = run_local(world, &o);
+    for r in [0usize, 1] {
+        let out = &fleet.ranks[r];
+        assert_eq!(out.status, ElasticStatus::Finished, "rank {r}");
+        assert!(out.replicas_consistent, "rank {r}");
+        assert_eq!(out.view, vec![0, 1]);
+        let last = out.events.last().expect("events");
+        assert_eq!(last.world_after, 2);
+        let lost: Vec<usize> =
+            out.events.iter().flat_map(|e| e.lost.iter().copied()).collect();
+        assert_eq!(lost.len(), 2, "both node-1 ranks reported lost: {lost:?}");
+        assert!(lost.contains(&2) && lost.contains(&3));
+    }
+    assert_eq!(fleet.ranks[0].param_hash, fleet.ranks[1].param_hash);
+    assert_eq!(fleet.ranks[2].status, ElasticStatus::Killed);
+    assert_eq!(fleet.ranks[3].status, ElasticStatus::Killed);
+}
+
+// ---------------------------------------------------------------------
+// Stalls: short ones are ridden out, long ones get evicted (TCP)
+// ---------------------------------------------------------------------
+
+#[test]
+fn short_stall_is_ridden_out_without_membership_changes() {
+    let world = 3;
+    let mut with_stall = opts(8, false);
+    with_stall.heartbeat = Duration::from_millis(150); // lease 600ms
+    with_stall.stall = vec![StallSpec { rank: 1, step: 3, millis: 40 }];
+    let stalled = run_local(world, &with_stall);
+    let mut plain_opts = opts(8, false);
+    plain_opts.heartbeat = Duration::from_millis(150);
+    let plain = run_local(world, &plain_opts);
+    for o in &stalled.ranks {
+        assert_eq!(o.status, ElasticStatus::Finished);
+        assert!(o.events.is_empty(), "a sub-lease stall must not reshape");
+    }
+    assert_eq!(
+        stalled.ranks[0].param_hash, plain.ranks[0].param_hash,
+        "a ridden-out stall changes nothing"
+    );
+}
+
+#[test]
+fn long_stall_over_tcp_is_detected_and_evicted() {
+    // rank 2 freezes (monitor included — a SIGSTOP-faithful stall) for
+    // well over the lease: survivors sever the link, reshape to a
+    // 2-rank world and finish; the stalled rank wakes up evicted
+    let world = 3;
+    let mut o = opts(12, false);
+    o.heartbeat = Duration::from_millis(50); // lease 200ms
+    o.min_ranks = 2;
+    o.stall = vec![StallSpec { rank: 2, step: 4, millis: 1500 }];
+    let ranks = run_tcp(world, &o);
+    for r in [0usize, 1] {
+        let out = &ranks[r];
+        assert_eq!(out.status, ElasticStatus::Finished, "rank {r}");
+        assert!(out.replicas_consistent, "rank {r}");
+        assert_eq!(out.view, vec![0, 1], "rank {r}");
+        let e = out.events.last().expect("reshape event");
+        assert_eq!(e.lost, vec![2]);
+        assert_eq!(e.world_after, 2);
+    }
+    assert_eq!(ranks[0].param_hash, ranks[1].param_hash);
+    assert_eq!(
+        ranks[2].status,
+        ElasticStatus::Evicted,
+        "the stalled rank must discover its eviction"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Residual-preserving rejoin (the second acceptance pin)
+// ---------------------------------------------------------------------
+
+#[test]
+fn rejoin_restores_residual_and_momentum_bit_exactly() {
+    let world = 4;
+
+    // reference: an uninterrupted elastic run checkpointing at step 6
+    let ref_prefix = tmp_prefix("rejoin_ref");
+    let mut o_ref = opts(6, false);
+    o_ref.ckpt_prefix = Some(ref_prefix.clone());
+    o_ref.ckpt_every = 6;
+    let r = run_local(world, &o_ref);
+    for o in &r.ranks {
+        assert_eq!(o.status, ElasticStatus::Finished);
+    }
+    let reference =
+        Checkpoint::load(format!("{ref_prefix}_rank2.rsck")).expect("reference ckpt");
+    assert_eq!(reference.step, 6);
+
+    // faulted run: rank 2 dies at step 6 (right after its checkpoint),
+    // survivors shrink to 3 and run on; at step 12 rank 2 rejoins,
+    // restoring its own residual/momentum and streaming params from the
+    // donor; the full world then finishes step 18 together
+    let a_prefix = tmp_prefix("rejoin_a");
+    let mut o = opts(18, false);
+    o.kill = vec![FaultSpec { rank: 2, step: 6 }];
+    o.rejoin = vec![FaultSpec { rank: 2, step: 12 }];
+    o.ckpt_prefix = Some(a_prefix.clone());
+    o.ckpt_every = 6;
+    let fleet = run_local(world, &o);
+
+    for (rank, out) in fleet.ranks.iter().enumerate() {
+        assert_eq!(out.status, ElasticStatus::Finished, "rank {rank}");
+        assert!(out.replicas_consistent, "rank {rank}");
+        assert_eq!(out.view, vec![0, 1, 2, 3], "full world after rejoin");
+        assert_eq!(out.epoch, 2, "kill bumped to 1, rejoin to 2");
+    }
+    let survivors_events = &fleet.ranks[0].events;
+    assert!(
+        survivors_events.iter().any(|e| e.lost == vec![2] && e.epoch == 1),
+        "loss event: {survivors_events:?}"
+    );
+    assert!(
+        survivors_events.iter().any(|e| e.joined == vec![2] && e.epoch == 2),
+        "join event: {survivors_events:?}"
+    );
+
+    // the rejoiner's restored state: per-rank residual/momentum (and
+    // dense velocity) bit-identical to the uninterrupted run's
+    // checkpoint at the same step; params advanced to the barrier by
+    // the donor stream
+    let joined =
+        Checkpoint::load(format!("{a_prefix}_join_rank2.rsck")).expect("join ckpt");
+    assert_eq!(joined.step, 12, "rejoined at the barrier");
+    assert_eq!(joined.view_epoch, 2);
+    assert_eq!(reference.layers.len(), joined.layers.len());
+    for (li, (a, b)) in reference.layers.iter().zip(&joined.layers).enumerate() {
+        assert_eq!(
+            a.residual, b.residual,
+            "layer {li}: residual/momentum must survive the kill bit-for-bit"
+        );
+        assert_eq!(a.velocity, b.velocity, "layer {li}: dense velocity");
+    }
+    // and the donor stream really advanced the params past the checkpoint
+    assert_ne!(
+        reference.layers[0].params, joined.layers[0].params,
+        "params at step 12 differ from the step-6 checkpoint"
+    );
+}

@@ -497,3 +497,48 @@ fn prop_crossover_density_is_a_boundary() {
         Ok(())
     });
 }
+
+/// Elastic checkpoints carry the training trajectory (params, residual
+/// V + momentum U, dense velocity) across kills and rejoins, so the
+/// RSCK container must round-trip arbitrary shapes exactly and reject
+/// *every* single-bit corruption via its FNV trailer — the rejoin path
+/// restores residual state from these blobs blindly.
+#[test]
+fn prop_checkpoint_roundtrip_and_every_bitflip_rejected() {
+    use redsync::coordinator::{Checkpoint, LayerState};
+    check(12, |g| {
+        let n_layers = g.size(1..4);
+        let layers: Vec<LayerState> = (0..n_layers)
+            .map(|_| {
+                let n = g.size(1..9);
+                LayerState {
+                    params: g.vec_normal(n, 1.0),
+                    residual: if g.bool() {
+                        Some((g.vec_normal(n, 1.0), g.vec_normal(n, 1.0)))
+                    } else {
+                        None
+                    },
+                    velocity: if g.bool() { Some(g.vec_normal(n, 1.0)) } else { None },
+                }
+            })
+            .collect();
+        let ck = Checkpoint {
+            step: g.size(0..100_000) as u64,
+            seed: g.size(0..100_000) as u64,
+            view_epoch: g.size(0..8) as u64,
+            layers,
+        };
+        let bytes = ck.to_bytes();
+        let back = Checkpoint::from_bytes(&bytes).map_err(|e| format!("parse: {e}"))?;
+        ensure(back == ck, "roundtrip changed the state")?;
+        for bit in 0..bytes.len() * 8 {
+            let mut corrupt = bytes.clone();
+            corrupt[bit / 8] ^= 1 << (bit % 8);
+            ensure(
+                Checkpoint::from_bytes(&corrupt).is_err(),
+                format!("flipping bit {bit} of {} was accepted", bytes.len() * 8),
+            )?;
+        }
+        Ok(())
+    });
+}
