@@ -33,6 +33,14 @@
 //! elastic run mid-training and records the recovery timeline —
 //! detect → reshape → resume — plus the post-reshape consistency
 //! verdict, to `BENCH_elastic.json` (uploaded by CI).
+//!
+//! `--obs-smoke [OUT.json]` is the tracing A/B: the pipelined engine
+//! over loopback TCP with span rings off vs on (min of 3 reps each,
+//! overhead pinned < 2%), a cross-lane overlap check on the drained
+//! timeline (a comm lane's allgather in flight while another lane
+//! selects/packs), and a short elastic kill leg whose detect/reshape
+//! spans must land.  Writes `trace_obs.json` (Chrome/Perfetto) next to
+//! `BENCH_obs.json`; CI uploads both.
 
 use redsync::collectives::mux::TagMux;
 use redsync::collectives::{Algo, Gathered, Topology, Transport};
@@ -585,6 +593,141 @@ fn elastic_smoke(json_path: Option<&str>) {
     println!("{json}");
 }
 
+// ---------------------------------------------------------------------
+// Observability smoke: tracing overhead + cross-lane overlap
+// ---------------------------------------------------------------------
+
+const OBS_REPS: usize = 3;
+
+/// True iff some comm lane's allgather span overlaps a *different*
+/// lane's select or pack span on the same rank — the visible proof the
+/// pipelined engine actually overlaps communication with selection.
+fn has_cross_lane_overlap(dumps: &[redsync::obs::RankDump]) -> bool {
+    use redsync::obs::{SPAN_COMM_SPARSE, SPAN_PACK, SPAN_SELECT};
+    dumps.iter().any(|d| {
+        d.lanes.iter().any(|a| {
+            a.spans.iter().filter(|s| s.phase == SPAN_COMM_SPARSE).any(|s| {
+                d.lanes.iter().filter(|b| b.lane != a.lane).any(|b| {
+                    b.spans.iter().any(|o| {
+                        (o.phase == SPAN_SELECT || o.phase == SPAN_PACK)
+                            && o.t0_us < s.t1_us
+                            && s.t0_us < o.t1_us
+                    })
+                })
+            })
+        })
+    })
+}
+
+/// The observability A/B: span tracing must cost < 2% wall-clock on the
+/// pipelined engine, the drained timeline must show cross-lane overlap,
+/// and an elastic kill must land detect/reshape spans.
+fn obs_smoke(json_path: Option<&str>) {
+    use redsync::obs::{self, RankDump};
+
+    println!(
+        "# obs A/B: {SMOKE_WORLD} ranks x {SMOKE_STEPS} steps, pipelined, \
+         tracing off vs on, min of {OBS_REPS}"
+    );
+    let _ = smoke_run(true); // warm-up
+    let mut base = f64::MAX;
+    for _ in 0..OBS_REPS {
+        base = base.min(smoke_run(true).0);
+    }
+
+    obs::set_enabled(true);
+    let mut traced = f64::MAX;
+    let mut dumps: Vec<RankDump> = Vec::new();
+    for _ in 0..OBS_REPS {
+        traced = traced.min(smoke_run(true).0);
+        // keep the last rep's timeline; draining every rep also keeps
+        // the global registry from accumulating one ring set per engine
+        dumps = (0..SMOKE_WORLD)
+            .map(|r| RankDump { rank: r as u32, lanes: obs::drain_rank(r) })
+            .collect();
+    }
+    obs::set_enabled(false);
+
+    let spans = obs::span_count(&dumps);
+    let overlap = has_cross_lane_overlap(&dumps);
+    let overhead = traced / base - 1.0;
+    println!("{:>10} {:>10} {:>10}", "tracing", "wall(s)", "steps/s");
+    println!("{:>10} {:>10.3} {:>10.2}", "off", base, SMOKE_STEPS as f64 / base);
+    println!("{:>10} {:>10.3} {:>10.2}", "on", traced, SMOKE_STEPS as f64 / traced);
+    println!(
+        "tracing overhead: {:.2}%, {spans} spans, cross-lane overlap: {overlap}",
+        100.0 * overhead
+    );
+    assert!(spans > 0, "the traced run must record spans");
+    assert!(overlap, "comm must overlap another lane's select/pack (pipelined engine)");
+    assert!(
+        overhead < 0.02,
+        "tracing costs {:.2}% (> 2%): {base:.3}s off vs {traced:.3}s on",
+        100.0 * overhead
+    );
+
+    let trace_path = "trace_obs.json";
+    obs::write_chrome_trace(trace_path, &dumps).expect("write trace");
+    println!("wrote {trace_path} ({spans} spans)");
+
+    // short elastic kill leg: the recovery machinery must land its own
+    // spans (retrospective detect + the reshape guard on the driver lane)
+    use redsync::elastic::synthetic::{self, SyntheticWorkload};
+    use redsync::elastic::{
+        fresh_checkpoint, run_elastic_worker, ElasticOpts, ElasticStatus, FaultSpec,
+    };
+    use std::time::Duration;
+    const EWORLD: usize = 4;
+    let seed = 0xB0B5u64;
+    let opts = ElasticOpts {
+        steps: 12,
+        fusion_cap_elems: 3000,
+        heartbeat: Duration::from_millis(50),
+        log_every: 12,
+        kill: vec![FaultSpec { rank: 2, step: 6 }],
+        ..ElasticOpts::default()
+    };
+    obs::set_enabled(true);
+    let transports = tcp_fabric(EWORLD);
+    let handles: Vec<_> = transports
+        .into_iter()
+        .map(|t| {
+            let opts = opts.clone();
+            thread::spawn(move || {
+                let specs = synthetic::specs();
+                let init =
+                    fresh_checkpoint(synthetic::init_params(seed), &specs, opts.optimizer, seed);
+                let mut w = SyntheticWorkload { seed };
+                run_elastic_worker(&t, &specs, init, None, &opts, &mut w).expect("elastic rank")
+            })
+        })
+        .collect();
+    let outs: Vec<_> = handles.into_iter().map(|h| h.join().expect("rank")).collect();
+    obs::set_enabled(false);
+    assert_eq!(outs[2].status, ElasticStatus::Killed);
+    let elastic_lanes: Vec<_> = (0..EWORLD).flat_map(obs::drain_rank).collect();
+    let phase_count = |p: u32| {
+        elastic_lanes.iter().flat_map(|l| &l.spans).filter(|s| s.phase == p).count()
+    };
+    let detects = phase_count(obs::SPAN_DETECT);
+    let reshapes = phase_count(obs::SPAN_RESHAPE);
+    println!("elastic leg: {detects} detect spans, {reshapes} reshape spans");
+    assert!(reshapes > 0, "the kill must land at least one reshape span");
+
+    let json = format!(
+        "{{\"bench\":\"obs_smoke\",\"world\":{SMOKE_WORLD},\"steps\":{SMOKE_STEPS},\
+         \"reps\":{OBS_REPS},\"base_secs\":{base:.6},\"traced_secs\":{traced:.6},\
+         \"overhead_pct\":{:.4},\"spans\":{spans},\"cross_lane_overlap\":{overlap},\
+         \"detect_spans\":{detects},\"reshape_spans\":{reshapes}}}",
+        100.0 * overhead
+    );
+    if let Some(path) = json_path {
+        std::fs::write(path, format!("{json}\n")).expect("write bench json");
+        println!("wrote {path}");
+    }
+    println!("{json}");
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     if let Some(pos) = args.iter().position(|a| a == "--pipeline-smoke") {
@@ -601,6 +744,10 @@ fn main() {
     }
     if let Some(pos) = args.iter().position(|a| a == "--hotpath-smoke") {
         hotpath_smoke(args.get(pos + 1).map(String::as_str));
+        return;
+    }
+    if let Some(pos) = args.iter().position(|a| a == "--obs-smoke") {
+        obs_smoke(args.get(pos + 1).map(String::as_str));
         return;
     }
     if redsync::models::schema::Manifest::load(

@@ -114,6 +114,13 @@ impl<T: Transport> TagMux<T> {
         &self.stats[tag as usize]
     }
 
+    /// Outbound bytes per logical channel, indexed by tag — the
+    /// observability view of the same counters `tag_stats` exposes
+    /// (reads only; accounting is untouched).
+    pub fn per_tag_bytes(&self) -> Vec<u64> {
+        (0..self.n_tags).map(|t| self.tag_stats(t).bytes()).collect()
+    }
+
     /// Aggregate outbound `(messages, words)` across every channel of
     /// this mux — by construction exactly what the muxed streams added
     /// to the underlying fabric's counters.

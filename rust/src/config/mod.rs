@@ -203,6 +203,16 @@ pub struct TrainConfig {
     /// the produce hot path, for models whose micro-layers would
     /// otherwise be dominated by timer overhead.
     pub phase_timing: bool,
+    /// Write a Chrome trace-event JSON of every rank's span timeline
+    /// here after the run (`None` = tracing off; the disabled path is
+    /// one relaxed atomic load per probe).
+    pub trace_out: Option<String>,
+    /// Serve a Prometheus-format metrics scrape endpoint on this
+    /// address (rank 0 only; `None` = off).
+    pub metrics_addr: Option<String>,
+    /// Gather per-rank step-latency histograms to rank 0 every this
+    /// many steps for cross-rank aggregation (p50/p99/skew); 0 = never.
+    pub obs_every: usize,
     /// Fabric carrying the synchronization traffic.
     pub transport: TransportKind,
     /// This process's rank (TCP transport only; `launch` sets it per
@@ -248,6 +258,9 @@ impl Default for TrainConfig {
             pipeline: false,
             inflight: 2,
             phase_timing: true,
+            trace_out: None,
+            metrics_addr: None,
+            obs_every: 0,
             transport: TransportKind::Local,
             rank: 0,
             rendezvous: "127.0.0.1:29500".into(),
@@ -395,6 +408,15 @@ impl TrainConfig {
                     .as_bool()
                     .ok_or_else(|| ConfigError::Invalid("phase_timing: expected bool".into()))?
             }
+            "trace_out" => {
+                let p = as_str()?.to_string();
+                self.trace_out = if p.is_empty() { None } else { Some(p) };
+            }
+            "metrics_addr" => {
+                let a = as_str()?.to_string();
+                self.metrics_addr = if a.is_empty() { None } else { Some(a) };
+            }
+            "obs_every" => self.obs_every = as_usize()?,
             "transport" => self.transport = parse_transport(as_str()?)?,
             "rank" => self.rank = as_usize()?,
             "rendezvous" => self.rendezvous = as_str()?.to_string(),
@@ -484,6 +506,9 @@ impl TrainConfig {
             ("pipeline", Value::Bool(self.pipeline)),
             ("inflight", json::num(self.inflight as f64)),
             ("phase_timing", Value::Bool(self.phase_timing)),
+            ("trace_out", json::s(self.trace_out.clone().unwrap_or_default())),
+            ("metrics_addr", json::s(self.metrics_addr.clone().unwrap_or_default())),
+            ("obs_every", json::num(self.obs_every as f64)),
             ("transport", json::s(self.transport.label())),
             ("rank", json::num(self.rank as f64)),
             ("rendezvous", json::s(self.rendezvous.clone())),
@@ -816,6 +841,30 @@ mod tests {
         cfg.apply_overrides(&["phase_timing=false".into()]).unwrap();
         assert!(!cfg.phase_timing);
         assert!(cfg.apply_overrides(&["phase_timing=7".into()]).is_err());
+    }
+
+    #[test]
+    fn observability_knobs_apply() {
+        let mut cfg = TrainConfig::default();
+        assert_eq!(cfg.trace_out, None, "tracing is off by default");
+        assert_eq!(cfg.metrics_addr, None);
+        assert_eq!(cfg.obs_every, 0);
+        cfg.apply_overrides(&[
+            "trace_out=out/trace.json".into(),
+            "metrics_addr=127.0.0.1:9900".into(),
+            "obs_every=25".into(),
+        ])
+        .unwrap();
+        assert_eq!(cfg.trace_out.as_deref(), Some("out/trace.json"));
+        assert_eq!(cfg.metrics_addr.as_deref(), Some("127.0.0.1:9900"));
+        assert_eq!(cfg.obs_every, 25);
+        // empty strings clear the knobs again
+        cfg.apply_overrides(&["trace_out=".into(), "metrics_addr=".into()]).unwrap();
+        assert_eq!(cfg.trace_out, None);
+        assert_eq!(cfg.metrics_addr, None);
+        let s = cfg.to_json().to_json();
+        assert!(s.contains("\"obs_every\""));
+        assert!(s.contains("\"trace_out\""));
     }
 
     #[test]

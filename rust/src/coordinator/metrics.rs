@@ -98,6 +98,13 @@ pub struct WorkerResult {
     /// Membership changes this worker lived through (elastic runs;
     /// empty otherwise).
     pub membership: Vec<MembershipEvent>,
+    /// Cluster step-latency quantiles (µs) from the cross-rank metric
+    /// gather (rank 0 only; 0 when `--obs-every` is off).
+    pub step_p50_us: u64,
+    pub step_p99_us: u64,
+    /// Straggler skew: slowest rank's mean step latency over the
+    /// fastest's (1.0 = perfectly even, 0.0 = unmeasured).
+    pub rank_skew: f64,
 }
 
 /// FNV-1a over f32 bit patterns.
@@ -151,9 +158,25 @@ pub struct TrainReport {
     /// the view): the launcher treats such ranks as clean exits, and
     /// the summary says why instead of claiming replica consistency.
     pub status_note: Option<String>,
+    /// Cluster step-latency quantiles in µs from the `--obs-every`
+    /// cross-rank gather (0 when aggregation was off).
+    pub step_p50_us: u64,
+    pub step_p99_us: u64,
+    /// Straggler skew: max/min of per-rank mean step latency
+    /// (1.0 = even, 0.0 = unmeasured).
+    pub rank_skew: f64,
 }
 
 impl TrainReport {
+    /// Column names matching [`csv_row`](TrainReport::csv_row).
+    pub const CSV_HEADER: &'static str = "model,world,strategy,steps,final_loss,bytes,messages,\
+         wall_secs,mux_bytes,union_density,membership_events,step_p50_us,step_p99_us,rank_skew";
+
+    /// The header line for CSV output (bench harnesses print it once
+    /// before the first [`csv_row`](TrainReport::csv_row)).
+    pub fn csv_header() -> &'static str {
+        Self::CSV_HEADER
+    }
     /// Mean traffic bytes per step per rank.
     pub fn bytes_per_step_per_rank(&self) -> f64 {
         self.bytes as f64 / (self.steps.max(1) * self.world) as f64
@@ -211,6 +234,15 @@ impl TrainReport {
         if let Some(&(_, d)) = self.union_density.last() {
             let _ = writeln!(s, "  union density of synced residual: {:.3}%", d * 100.0);
         }
+        if self.step_p50_us > 0 {
+            let _ = writeln!(
+                s,
+                "  cluster step latency: p50 {:.1}ms  p99 {:.1}ms  rank skew {:.2}x",
+                self.step_p50_us as f64 / 1e3,
+                self.step_p99_us as f64 / 1e3,
+                self.rank_skew
+            );
+        }
         if !self.membership.is_empty() {
             let _ = writeln!(s, "  membership events:");
             for e in &self.membership {
@@ -223,10 +255,11 @@ impl TrainReport {
         s
     }
 
-    /// One-line CSV row (for the bench harnesses).
+    /// One-line CSV row (for the bench harnesses); columns are
+    /// [`CSV_HEADER`](TrainReport::CSV_HEADER).
     pub fn csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{:.6},{},{},{:.3}",
+            "{},{},{},{},{:.6},{},{},{:.3},{},{:.6},{},{},{},{:.4}",
             self.model,
             self.world,
             self.strategy,
@@ -234,7 +267,13 @@ impl TrainReport {
             self.final_loss,
             self.bytes,
             self.messages,
-            self.wall_secs
+            self.wall_secs,
+            self.mux_bytes,
+            self.union_density.last().map(|&(_, d)| d).unwrap_or(0.0),
+            self.membership.len(),
+            self.step_p50_us,
+            self.step_p99_us,
+            self.rank_skew
         )
     }
 }
@@ -285,6 +324,9 @@ mod tests {
                 world_after: 3,
             }],
             status_note: Some("evicted from the view at epoch 1".into()),
+            step_p50_us: 1500,
+            step_p99_us: 4000,
+            rank_skew: 1.25,
         };
         assert!((r.phase_fraction(phase::COMPUTE) - 0.75).abs() < 1e-12);
         assert_eq!(r.bytes_per_step_per_rank(), 4096.0 / 20.0);
@@ -294,6 +336,15 @@ mod tests {
         assert!(s.contains("membership events"), "{s}");
         assert!(s.contains("lost [2] -> 3 ranks"), "{s}");
         assert!(s.contains("elastic status: evicted"), "{s}");
+        assert!(s.contains("cluster step latency"), "{s}");
+        // csv row tracks the header column-for-column
+        let row = r.csv_row();
+        assert_eq!(
+            row.split(',').count(),
+            TrainReport::csv_header().split(',').count(),
+            "{row}"
+        );
+        assert!(row.ends_with(",1,1500,4000,1.2500"), "{row}");
     }
 
     #[test]

@@ -138,6 +138,9 @@ impl Trainer {
             replicas_consistent,
             membership: rank0.membership,
             status_note: None,
+            step_p50_us: rank0.step_p50_us,
+            step_p99_us: rank0.step_p99_us,
+            rank_skew: rank0.rank_skew,
         })
     }
 
@@ -222,6 +225,9 @@ impl Trainer {
             replicas_consistent,
             membership: lead.events.clone(),
             status_note: None,
+            step_p50_us: 0,
+            step_p99_us: 0,
+            rank_skew: 0.0,
         })
     }
 }
@@ -275,6 +281,9 @@ impl Trainer {
             replicas_consistent,
             membership: result.membership,
             status_note: None,
+            step_p50_us: result.step_p50_us,
+            step_p99_us: result.step_p99_us,
+            rank_skew: result.rank_skew,
         })
     }
 
@@ -325,6 +334,9 @@ impl Trainer {
             replicas_consistent: out.replicas_consistent,
             membership: result.membership,
             status_note,
+            step_p50_us: 0,
+            step_p99_us: 0,
+            rank_skew: 0.0,
         })
     }
 }

@@ -23,6 +23,7 @@ use crate::costmodel;
 use crate::data::{ClusterDataset, ZipfMarkovCorpus};
 use crate::elastic::{self, ElasticOpts, ElasticStatus, RankOutcome, ShardKey, Workload};
 use crate::models::schema::ModelSchema;
+use crate::obs;
 use crate::optim::{clip_by_global_norm, local_clip_factor, DenseOptState};
 use crate::pipeline::{
     build_buckets, BucketDone, LayerSpec, Pipelined, Sequential, SyncEngine, BUCKET_TAG_BASE,
@@ -131,6 +132,11 @@ pub fn run_worker<T: Transport + Sync>(
 ) -> Result<WorkerResult, String> {
     let rank = transport.rank();
     let world = transport.world();
+    // spans are recorded only when a trace sink exists; the switch must
+    // flip before any engine is built (rings register at construction)
+    if cfg.trace_out.is_some() {
+        obs::set_enabled(true);
+    }
     let rt = Runtime::new().map_err(|e| format!("rank {rank}: runtime: {e}"))?;
     let runner = StepRunner::new(&rt, schema).map_err(|e| format!("rank {rank}: load: {e}"))?;
 
@@ -243,6 +249,29 @@ pub fn run_worker<T: Transport + Sync>(
         comm = transport;
     }
 
+    // Observability surfaces: the main lane's span ring (tracing), the
+    // metric registry (aggregation/scrape) and rank 0's scrape endpoint.
+    // All None/off by default — the steady state is then byte-identical
+    // to the uninstrumented loop.
+    let ring = obs::enabled().then(|| obs::ring(rank, obs::LANE_MAIN, obs::DEFAULT_CAP));
+    let want_metrics =
+        cfg.obs_every > 0 || cfg.metrics_addr.is_some() || cfg.trace_out.is_some();
+    let reg = want_metrics.then(|| Arc::new(obs::Registry::new()));
+    let mut scraper = None;
+    if rank == 0 {
+        if let (Some(addr), Some(reg)) = (&cfg.metrics_addr, &reg) {
+            match obs::serve(addr, Arc::clone(reg)) {
+                Ok(s) => {
+                    crate::log_info!("metrics endpoint listening on {}", s.addr);
+                    scraper = Some(s);
+                }
+                Err(e) => crate::log_warn!("metrics endpoint: {e}"),
+            }
+        }
+    }
+    let mut cluster: Option<obs::ClusterStats> = None;
+    let mut metrics_lines: Vec<String> = Vec::new();
+
     let mut timer = crate::util::timer::PhaseTimer::new();
     let mut loss_curve = Vec::new();
     let mut eval_curve = Vec::new();
@@ -261,9 +290,20 @@ pub fn run_worker<T: Transport + Sync>(
         let lr = cfg.lr.lr_at(step);
         let log_step = step % cfg.log_every == 0 || step + 1 == cfg.steps;
 
+        let _step_span = ring.as_ref().map(|r| r.guard(obs::SPAN_STEP, step as u32, 0));
+        let step_t0 = reg.is_some().then(Instant::now);
+
         let batch = data.batch(schema, rank, world, step);
-        let (loss, mut grads) = timer.time(phase::COMPUTE, || runner.step(&rt, &params, &batch))
-            .map_err(|e| format!("rank {rank} step {step}: {e}"))?;
+        let (loss, mut grads) = obs::time_phase(
+            ring.as_ref(),
+            obs::SPAN_COMPUTE,
+            step as u32,
+            0,
+            &mut timer,
+            phase::COMPUTE,
+            || runner.step(&rt, &params, &batch),
+        )
+        .map_err(|e| format!("rank {rank} step {step}: {e}"))?;
 
         // DGC local clipping (before residual accumulation)
         if let Some(max_norm) = cfg.clip {
@@ -284,7 +324,15 @@ pub fn run_worker<T: Transport + Sync>(
         // bucket by bucket.
         if dense_step {
             for li in (0..params.len()).rev() {
-                timer.time(phase::COMM_DENSE, || allreduce_mean(&comm, &mut grads[li]));
+                obs::time_phase(
+                    ring.as_ref(),
+                    obs::SPAN_COMM_DENSE,
+                    step as u32,
+                    li as u32,
+                    &mut timer,
+                    phase::COMM_DENSE,
+                    || allreduce_mean(&comm, &mut grads[li]),
+                );
                 timer.time(phase::UPDATE, || {
                     plans[li].dense_state.apply(cfg.optimizer, &mut params[li], &grads[li], lr)
                 });
@@ -294,7 +342,15 @@ pub fn run_worker<T: Transport + Sync>(
                 if plans[li].method != Method::Dense {
                     continue;
                 }
-                timer.time(phase::COMM_DENSE, || allreduce_mean(&comm, &mut grads[li]));
+                obs::time_phase(
+                    ring.as_ref(),
+                    obs::SPAN_COMM_DENSE,
+                    step as u32,
+                    li as u32,
+                    &mut timer,
+                    phase::COMM_DENSE,
+                    || allreduce_mean(&comm, &mut grads[li]),
+                );
                 timer.time(phase::UPDATE, || {
                     plans[li].dense_state.apply(cfg.optimizer, &mut params[li], &grads[li], lr)
                 });
@@ -307,7 +363,11 @@ pub fn run_worker<T: Transport + Sync>(
             {
                 let params = &mut params;
                 let seen = &mut seen;
+                let ring = &ring;
                 let mut apply = |done: BucketDone| -> Result<(), String> {
+                    let _g = ring
+                        .as_ref()
+                        .map(|r| r.guard(obs::SPAN_UNPACK, step as u32, done.bucket as u32));
                     let t0 = Instant::now();
                     done.apply_to(params, scale)?;
                     unpack_secs += t0.elapsed().as_secs_f64();
@@ -338,16 +398,54 @@ pub fn run_worker<T: Transport + Sync>(
                     sent_density
                         .push((step, selected_elems as f64 / sparse_elems as f64));
                     union_density.push((step, union_elems as f64 / sparse_elems as f64));
+                    if let Some(reg) = &reg {
+                        reg.gauge("sent_density", selected_elems as f64 / sparse_elems as f64);
+                        reg.gauge("union_density", union_elems as f64 / sparse_elems as f64);
+                    }
                 }
             }
         }
 
         if cfg.eval_every > 0 && (step % cfg.eval_every == 0 || step + 1 == cfg.steps) && rank == 0
         {
-            let metric = timer
-                .time(phase::EVAL, || eval_metric(&rt, &runner, schema, &params, &data, world))
-                .map_err(|e| format!("rank {rank} eval: {e}"))?;
+            let metric = obs::time_phase(
+                ring.as_ref(),
+                obs::SPAN_EVAL,
+                step as u32,
+                0,
+                &mut timer,
+                phase::EVAL,
+                || eval_metric(&rt, &runner, schema, &params, &data, world),
+            )
+            .map_err(|e| format!("rank {rank} eval: {e}"))?;
             eval_curve.push((step, metric));
+        }
+
+        if let (Some(reg), Some(t0)) = (&reg, step_t0) {
+            reg.observe_us("step_latency_us", t0.elapsed().as_micros() as u64);
+            reg.inc("steps_total", 1);
+        }
+
+        // cross-rank metric aggregation window: every rank's cumulative
+        // step-latency histogram flows to rank 0 over the control
+        // channel (deterministic schedule — config is identical on all
+        // ranks, so no rank ever waits on a message that never comes)
+        if cfg.obs_every > 0 && (step + 1) % cfg.obs_every == 0 {
+            if let Some(reg) = &reg {
+                let _g = ring.as_ref().map(|r| r.guard(obs::SPAN_GATHER, step as u32, 0));
+                if let Some(stats) = gather_step_hist(rank, world, comm, reg)
+                    .map_err(|e| format!("rank {rank} step {step}: {e}"))?
+                {
+                    crate::log_debug!(
+                        "obs window @{step}: step p50 {}us p99 {}us skew {:.2}x",
+                        stats.step_p50_us,
+                        stats.step_p99_us,
+                        stats.rank_skew
+                    );
+                    metrics_lines.push(reg.snapshot().to_json().to_json());
+                    cluster = Some(stats);
+                }
+            }
         }
     }
 
@@ -363,6 +461,84 @@ pub fn run_worker<T: Transport + Sync>(
         None => (0, 0),
     };
 
+    // End-of-run registry fill: the Fig. 10 phase seconds, the per-tag
+    // traffic split, and one last aggregation window if the schedule
+    // didn't land on the final step.
+    if cfg.obs_every > 0 && cfg.steps % cfg.obs_every != 0 {
+        if let Some(reg) = &reg {
+            if let Some(stats) = gather_step_hist(rank, world, comm, reg)
+                .map_err(|e| format!("rank {rank}: {e}"))?
+            {
+                cluster = Some(stats);
+            }
+        }
+    }
+    if let Some(reg) = &reg {
+        for &p in phase::ALL {
+            let secs = timer.total(p);
+            if secs > 0.0 {
+                reg.gauge(&format!("phase_{p}_seconds"), secs);
+            }
+        }
+        if let Some(m) = &mux_handle {
+            for (tag, b) in m.per_tag_bytes().into_iter().enumerate() {
+                if b > 0 {
+                    reg.inc(&format!("mux_tag_{tag}_bytes"), b);
+                }
+            }
+        }
+        if rank == 0 {
+            metrics_lines.push(reg.snapshot().to_json().to_json());
+            if let Some(stem) = &cfg.trace_out {
+                let path = format!("{stem}.metrics.jsonl");
+                let body = metrics_lines.join("\n") + "\n";
+                if let Err(e) = std::fs::write(&path, body) {
+                    crate::log_warn!("metrics flush {path}: {e}");
+                }
+            }
+        }
+    }
+    drop(scraper);
+
+    // Trace export: every rank drains its span rings (worker main lane,
+    // engine comm lanes) and ships them to rank 0 over the control
+    // channel; rank 0 merges all ranks into one Chrome-trace timeline.
+    if let Some(path) = &cfg.trace_out {
+        let dumps = obs::drain_rank(rank);
+        if rank != 0 {
+            comm.send(0, obs::encode_dumps(rank as u32, &dumps));
+        } else {
+            let mut ranks = vec![obs::RankDump { rank: 0, lanes: dumps }];
+            for peer in 1..world {
+                let w = comm
+                    .recv_checked(peer)
+                    .map_err(|e| format!("trace gather: rank {peer}: {e}"))?;
+                let (r, lanes) =
+                    obs::decode_dumps(&w).map_err(|e| format!("trace gather: rank {peer}: {e}"))?;
+                ranks.push(obs::RankDump { rank: r, lanes });
+            }
+            match obs::write_chrome_trace(path, &ranks) {
+                Ok(()) => crate::log_info!(
+                    "wrote {} spans from {} ranks to {path}",
+                    obs::span_count(&ranks),
+                    ranks.len()
+                ),
+                Err(e) => crate::log_warn!("{e}"),
+            }
+        }
+    }
+
+    let (step_p50_us, step_p99_us, rank_skew) = match cluster {
+        Some(c) => (c.step_p50_us, c.step_p99_us, c.rank_skew),
+        None => match (&reg, rank) {
+            (Some(reg), 0) => {
+                let h = reg.hist("step_latency_us").unwrap_or_default();
+                (h.p50(), h.p99(), 0.0)
+            }
+            _ => (0, 0, 0.0),
+        },
+    };
+
     Ok(WorkerResult {
         rank,
         timer,
@@ -375,7 +551,34 @@ pub fn run_worker<T: Transport + Sync>(
         mux_bytes,
         mux_ctrl_bytes,
         membership: Vec::new(),
+        step_p50_us,
+        step_p99_us,
+        rank_skew,
     })
+}
+
+/// One aggregation window: every rank sends its cumulative step-latency
+/// histogram (fixed 133-word frame) to rank 0, which merges them into
+/// cluster quantiles + straggler skew.  Returns `None` on ranks > 0.
+fn gather_step_hist(
+    rank: usize,
+    world: usize,
+    comm: &dyn Transport,
+    reg: &obs::Registry,
+) -> Result<Option<obs::ClusterStats>, String> {
+    let local = reg.hist("step_latency_us").unwrap_or_default();
+    if rank != 0 {
+        comm.send(0, local.encode(rank as u32));
+        return Ok(None);
+    }
+    let mut hists = vec![(0u32, local)];
+    for peer in 1..world {
+        let w = comm
+            .recv_checked(peer)
+            .map_err(|e| format!("metrics gather: rank {peer}: {e}"))?;
+        hists.push(obs::Hist::decode(&w).map_err(|e| format!("metrics gather: {e}"))?);
+    }
+    Ok(Some(obs::aggregate_step_hists(&hists)))
 }
 
 // ---------------------------------------------------------------------
@@ -502,6 +705,24 @@ pub fn worker_result_from(rank: usize, o: &RankOutcome) -> WorkerResult {
         mux_bytes: o.mux_words * 4,
         mux_ctrl_bytes: o.ctrl_words * 4,
         membership: o.events.clone(),
+        step_p50_us: 0,
+        step_p99_us: 0,
+        rank_skew: 0.0,
+    }
+}
+
+/// Per-rank trace path of an elastic run: `{stem}_rank{r}{ext}`.
+/// Membership can change mid-run, so a wire gather to rank 0 is unsafe
+/// (rank 0 itself may be the one that died) — each survivor writes its
+/// own timeline and Perfetto merges them.
+pub fn rank_trace_path(out: &str, rank: usize) -> String {
+    let name = out.rfind('/').map(|i| i + 1).unwrap_or(0);
+    match out[name..].rfind('.') {
+        Some(d) if d > 0 => {
+            let dot = name + d;
+            format!("{}_rank{rank}{}", &out[..dot], &out[dot..])
+        }
+        _ => format!("{out}_rank{rank}"),
     }
 }
 
@@ -515,6 +736,9 @@ pub fn run_worker_elastic<T: Transport + Sync>(
     transport: &T,
 ) -> Result<(WorkerResult, RankOutcome), String> {
     let rank = transport.rank();
+    if cfg.trace_out.is_some() {
+        obs::set_enabled(true);
+    }
     let specs = elastic_specs(cfg, schema);
     let init = elastic_init(cfg, schema, &specs, rank)?;
     let mut workload =
@@ -524,6 +748,25 @@ pub fn run_worker_elastic<T: Transport + Sync>(
         .map_err(|e| format!("rank {rank}: {e}"))?;
     if out.status == ElasticStatus::Killed {
         crate::log_warn!("rank {rank}: exited by injected kill");
+    }
+    if let Some(stem) = &cfg.trace_out {
+        // engine rings register under the *group-local* rank (the view's
+        // fabric), driver rings under the world rank; this process owns
+        // both, so sweep every key in its registry
+        let mut dumps = obs::drain_rank(rank);
+        for r in 0..transport.world() {
+            if r != rank {
+                dumps.extend(obs::drain_rank(r));
+            }
+        }
+        if !dumps.is_empty() {
+            let path = rank_trace_path(stem, rank);
+            let rd = obs::RankDump { rank: rank as u32, lanes: dumps };
+            match obs::write_chrome_trace(&path, std::slice::from_ref(&rd)) {
+                Ok(()) => crate::log_info!("rank {rank}: wrote trace to {path}"),
+                Err(e) => crate::log_warn!("{e}"),
+            }
+        }
     }
     Ok((worker_result_from(rank, &out), out))
 }
@@ -640,6 +883,13 @@ mod tests {
             blob
         };
         vec![mk(vec![0, 2, 4], vec![1, 3]), mk(vec![2, 6], vec![3, 5, 7])]
+    }
+
+    #[test]
+    fn rank_trace_paths_keep_the_extension() {
+        assert_eq!(rank_trace_path("trace.json", 2), "trace_rank2.json");
+        assert_eq!(rank_trace_path("out/run.trace.json", 0), "out/run.trace_rank0.json");
+        assert_eq!(rank_trace_path("trace", 3), "trace_rank3");
     }
 
     #[test]

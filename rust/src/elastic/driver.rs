@@ -42,6 +42,7 @@ use crate::collectives::{allgather, allreduce_mean, Transport};
 use crate::compression::{CompressorConfig, Method};
 use crate::coordinator::checkpoint::{Checkpoint, LayerState};
 use crate::coordinator::metrics::{param_hash, phase, MembershipEvent};
+use crate::obs;
 use crate::optim::{clip_by_global_norm, local_clip_factor, DenseOptState, LrSchedule, Optimizer};
 use crate::pipeline::{
     build_buckets, BucketDone, BucketState, LayerSpec, Pipelined, Sequential, SyncEngine,
@@ -428,6 +429,9 @@ where
     let mut totals = (0u64, 0u64, 0u64); // (messages, words, non-bucket words)
     let mut final_loss = f32::NAN;
     let mut join_once = join;
+    // driver lane: retrospective fault-detection spans and the reshape
+    // stall, so the timeline shows why training paused
+    let drv_ring = obs::enabled().then(|| obs::ring(my, obs::LANE_DRIVER, obs::DEFAULT_CAP));
 
     let outcome = |status: ElasticStatus,
                    consistent: bool,
@@ -525,6 +529,21 @@ where
             }
             EpochEnd::Fault { suspects, pending, detect_secs } => {
                 let t0 = Instant::now();
+                if let Some(r) = &drv_ring {
+                    // retrospective: detection ran from the last healthy
+                    // step boundary until the fault surfaced (now)
+                    let now = obs::now_us();
+                    r.record(obs::Span {
+                        phase: obs::SPAN_DETECT,
+                        step: state.done as u32,
+                        tag: state.epoch as u32,
+                        t0_us: now.saturating_sub((detect_secs * 1e6) as u64),
+                        t1_us: now,
+                    });
+                }
+                let reshape_guard = drv_ring
+                    .as_ref()
+                    .map(|r| r.guard(obs::SPAN_RESHAPE, state.done as u32, state.epoch as u32));
                 let agreement = agree(
                     transport,
                     my,
@@ -536,6 +555,7 @@ where
                     opts.lease(),
                     opts.min_ranks,
                 )?;
+                drop(reshape_guard);
                 match agreement {
                     Agreement::Evicted(why) => {
                         crate::log_warn!("rank {my}: evicted from the view: {why}");
@@ -640,6 +660,12 @@ where
     let ctrl = TagChannel::new(Arc::clone(&mux), CTRL_TAG);
     let hb = TagChannel::new(Arc::clone(&mux), hb_tag);
 
+    // per-epoch span rings, keyed by the *world* rank so the per-rank
+    // trace export finds them; engine-registered rings use the group-
+    // local rank and are swept up by the same export
+    let epoch_ring = obs::enabled().then(|| obs::ring(my, obs::LANE_MAIN, obs::DEFAULT_CAP));
+    let hb_ring = obs::enabled().then(|| obs::ring(my, obs::LANE_HEARTBEAT, obs::DEFAULT_CAP));
+
     let mut last_ok = Instant::now();
     let mark: Result<EpochMark, String> = thread::scope(|s| {
         let monitor = spawn_monitor(
@@ -649,6 +675,7 @@ where
             Arc::clone(freezer),
             opts.heartbeat,
             opts.lease(),
+            hb_ring,
         );
         let run = (|| -> Result<EpochMark, String> {
             let mut seq_engine;
@@ -727,6 +754,8 @@ where
                     return Ok(EpochMark::Fault);
                 }
 
+                let step_guard =
+                    epoch_ring.as_ref().map(|r| r.guard(obs::SPAN_STEP, step as u32, 0));
                 let attempt = panic::catch_unwind(AssertUnwindSafe(|| {
                     run_step(
                         &ctrl,
@@ -743,6 +772,7 @@ where
                         &mut *workload,
                     )
                 }));
+                drop(step_guard);
                 match attempt {
                     Ok(Ok(())) => {
                         state.done += 1;

@@ -22,6 +22,7 @@
 use super::FailBoard;
 use crate::collectives::mux::TagChannel;
 use crate::collectives::transport::{PeerLostCause, Transport};
+use crate::obs::{self, SpanRing};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread;
@@ -71,7 +72,10 @@ impl MonitorHandle {
 
 /// Spawn the epoch's monitor on `scope`.  `chan` is the reserved
 /// heartbeat channel (group-local peer ids); `board` the epoch's
-/// failure record; `freezer` the fault-injection switch.
+/// failure record; `freezer` the fault-injection switch; `ring` the
+/// heartbeat lane's span ring when tracing is on (each beat sweep
+/// records one `heartbeat` span, so the timeline shows the detector's
+/// cadence next to the training lanes).
 pub fn spawn_monitor<'scope, T>(
     scope: &'scope thread::Scope<'scope, '_>,
     chan: TagChannel<T>,
@@ -79,6 +83,7 @@ pub fn spawn_monitor<'scope, T>(
     freezer: Arc<Freezer>,
     interval: Duration,
     lease: Duration,
+    ring: Option<SpanRing>,
 ) -> MonitorHandle
 where
     T: Transport + Send + Sync + 'scope,
@@ -89,6 +94,7 @@ where
         let me = chan.rank();
         let world = chan.world();
         let mut last_seen = vec![Instant::now(); world];
+        let mut sweep = 0u32;
         loop {
             if flag.load(Ordering::Relaxed) {
                 return;
@@ -98,6 +104,8 @@ where
                 thread::sleep(Duration::from_millis(1));
                 continue;
             }
+            let guard = ring.as_ref().map(|r| r.guard(obs::SPAN_HEARTBEAT, sweep, 0));
+            sweep = sweep.wrapping_add(1);
             for peer in 0..world {
                 if peer == me || board.is_suspect_local(peer) {
                     continue;
@@ -133,6 +141,7 @@ where
                     chan.sever(peer);
                 }
             }
+            drop(guard);
             thread::sleep(interval);
         }
     });
@@ -178,6 +187,7 @@ mod tests {
                         Arc::new(Freezer::new()),
                         interval,
                         lease,
+                        None,
                     )
                 })
                 .collect();
@@ -209,6 +219,7 @@ mod tests {
                 Arc::new(Freezer::new()),
                 Duration::from_millis(5),
                 Duration::from_millis(40),
+                None,
             );
             drop(dead); // rank 1 dies: the next beat send fails
             let deadline = Instant::now() + Duration::from_secs(5);

@@ -29,6 +29,7 @@ pub mod data;
 pub mod elastic;
 pub mod models;
 pub mod net;
+pub mod obs;
 pub mod optim;
 pub mod pipeline;
 pub mod ps;

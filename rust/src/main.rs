@@ -55,6 +55,9 @@ SUBCOMMANDS:
   select     micro-benchmark selection algorithms (paper Fig. 3)
   info       list models, artifacts and machine presets
 
+ENVIRONMENT:
+  REDSYNC_LOG   log verbosity: error|warn|info|debug|trace (default info)
+
 Presets for train: {}",
         preset_names().join(", ")
     );
@@ -81,6 +84,9 @@ fn cmd_train(argv: &[String]) -> i32 {
         .opt("ckpt", "", "elastic: RSCK checkpoint path prefix")
         .opt("ckpt-every", "", "elastic: periodic checkpoint cadence in steps (0 = never)")
         .opt("resume", "", "elastic: resume every rank from PREFIX_rank{R}.rsck")
+        .opt("trace-out", "", "write a Chrome trace-event JSON of every rank's spans here")
+        .opt("metrics-addr", "", "serve a Prometheus scrape endpoint on this address (rank 0)")
+        .opt("obs-every", "", "gather cross-rank step-latency stats every N steps (0 = never)")
         .flag("elastic", "survive worker loss: heartbeats, world reshape, rejoin")
         .flag("pipeline", "overlap bucket selection + collectives on a comm thread pool")
         .flag("csv", "print a CSV row instead of the summary");
@@ -125,6 +131,9 @@ fn cmd_train(argv: &[String]) -> i32 {
         ("ckpt", "ckpt"),
         ("ckpt-every", "ckpt_every"),
         ("resume", "resume"),
+        ("trace-out", "trace_out"),
+        ("metrics-addr", "metrics_addr"),
+        ("obs-every", "obs_every"),
     ] {
         if !parsed.get(flag).is_empty() {
             overrides.push(format!("{key}={}", parsed.get(flag)));
@@ -164,6 +173,7 @@ fn cmd_train(argv: &[String]) -> i32 {
             match trainer.run() {
                 Ok(report) => {
                     if parsed.get_flag("csv") {
+                        println!("{}", redsync::coordinator::metrics::TrainReport::csv_header());
                         println!("{}", report.csv_row());
                     } else {
                         print!("{}", report.summary());
@@ -183,6 +193,7 @@ fn cmd_train(argv: &[String]) -> i32 {
 /// Run this process's single rank of a TCP job.
 fn train_tcp_rank(manifest: &Manifest, cfg: TrainConfig, csv: bool) -> i32 {
     let rank = cfg.rank;
+    logging::set_rank(rank);
     if let Err(e) = cfg.validate() {
         eprintln!("{e}");
         return 2;
@@ -210,6 +221,7 @@ fn train_tcp_rank(manifest: &Manifest, cfg: TrainConfig, csv: bool) -> i32 {
         Ok(report) => {
             if rank == 0 {
                 if csv {
+                    println!("{}", redsync::coordinator::metrics::TrainReport::csv_header());
                     println!("{}", report.csv_row());
                 } else {
                     print!("{}", report.summary());
@@ -259,6 +271,9 @@ fn cmd_launch(argv: &[String]) -> i32 {
         .opt("min-ranks", "", "elastic: minimum surviving view size, forwarded to every rank")
         .opt("kill-rank", "", "fault injection: kill rank R at step S (R@S), forwarded")
         .opt("stall-rank", "", "fault injection: stall rank R at step S for MS ms (R@S:MS), forwarded")
+        .opt("trace-out", "", "Chrome trace-event JSON path, forwarded to every rank")
+        .opt("metrics-addr", "", "Prometheus scrape address (rank 0 serves it), forwarded")
+        .opt("obs-every", "", "cross-rank stats gather cadence in steps, forwarded")
         .flag("elastic", "every rank survives worker loss (heartbeats + world reshape)")
         .flag("pipeline", "every rank runs the pipelined sync engine")
         .flag("csv", "rank 0 prints a CSV row instead of the summary");
@@ -309,6 +324,9 @@ fn cmd_launch(argv: &[String]) -> i32 {
             ("min-ranks", "min_ranks"),
             ("kill-rank", "kill_rank"),
             ("stall-rank", "stall_rank"),
+            ("trace-out", "trace_out"),
+            ("metrics-addr", "metrics_addr"),
+            ("obs-every", "obs_every"),
         ] {
             if !parsed.get(flag).is_empty() {
                 set.push_str(&format!(",{key}={}", parsed.get(flag)));

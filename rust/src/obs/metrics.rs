@@ -1,0 +1,355 @@
+//! Metrics registry: counters, gauges and log₂-bucketed histograms,
+//! snapshotted per aggregation window and exposed three ways — the
+//! cross-rank gather (rank 0 merges step-latency histograms into
+//! cluster p50/p99 + per-rank skew for `TrainReport`), the Prometheus
+//! text exposition behind `--metrics-addr`, and a JSONL flush for the
+//! bench harnesses.
+//!
+//! Histograms bucket a `u64` microsecond value by bit width (64
+//! buckets), so a quantile is exact to within 2× — the right fidelity
+//! for "which rank is the straggler" at zero dependencies and a
+//! fixed-size wire encoding.
+
+use crate::util::json::{self, Value};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+pub const HIST_BUCKETS: usize = 64;
+
+/// Log₂-bucketed histogram of microsecond values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Hist {
+    pub count: u64,
+    pub sum_us: u64,
+    /// `buckets[i]` counts values of bit width `i` (0 counts zeros).
+    pub buckets: Vec<u64>,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist { count: 0, sum_us: 0, buckets: vec![0; HIST_BUCKETS] }
+    }
+}
+
+fn bit_width(v: u64) -> usize {
+    (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+}
+
+impl Hist {
+    pub fn observe(&mut self, us: u64) {
+        self.buckets[bit_width(us)] += 1;
+        self.count += 1;
+        self.sum_us += us;
+    }
+
+    pub fn merge(&mut self, other: &Hist) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+    }
+
+    /// Upper bound of the bucket containing quantile `q` (0 if empty).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i == 0 { 0 } else { (1u64 << i) - 1 };
+            }
+        }
+        u64::MAX
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.5)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Fixed-size wire form for the cross-rank gather:
+    /// `[rank, count lo/hi, sum lo/hi, 64 × bucket lo/hi]`.
+    pub fn encode(&self, rank: u32) -> Vec<u32> {
+        let mut w = Vec::with_capacity(5 + 2 * HIST_BUCKETS);
+        w.push(rank);
+        w.push(self.count as u32);
+        w.push((self.count >> 32) as u32);
+        w.push(self.sum_us as u32);
+        w.push((self.sum_us >> 32) as u32);
+        for &b in &self.buckets {
+            w.push(b as u32);
+            w.push((b >> 32) as u32);
+        }
+        w
+    }
+
+    pub fn decode(w: &[u32]) -> Result<(u32, Hist), String> {
+        if w.len() != 5 + 2 * HIST_BUCKETS {
+            return Err(format!("hist frame has {} words, want {}", w.len(), 5 + 2 * HIST_BUCKETS));
+        }
+        let u64_at = |i: usize| w[i] as u64 | (w[i + 1] as u64) << 32;
+        let mut h = Hist {
+            count: u64_at(1),
+            sum_us: u64_at(3),
+            ..Default::default()
+        };
+        for i in 0..HIST_BUCKETS {
+            h.buckets[i] = u64_at(5 + 2 * i);
+        }
+        Ok((w[0], h))
+    }
+}
+
+// ------------------------------------------------------------ registry
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Hist>,
+}
+
+/// Thread-safe metric store; one per worker, shared with the scrape
+/// thread via `Arc`.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(c) = g.counters.get_mut(name) {
+            *c += by;
+        } else {
+            g.counters.insert(name.to_string(), by);
+        }
+    }
+
+    pub fn gauge(&self, name: &str, v: f64) {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(slot) = g.gauges.get_mut(name) {
+            *slot = v;
+        } else {
+            g.gauges.insert(name.to_string(), v);
+        }
+    }
+
+    pub fn observe_us(&self, name: &str, us: u64) {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(h) = g.hists.get_mut(name) {
+            h.observe(us);
+        } else {
+            let mut h = Hist::default();
+            h.observe(us);
+            g.hists.insert(name.to_string(), h);
+        }
+    }
+
+    pub fn hist(&self, name: &str) -> Option<Hist> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).hists.get(name).cloned()
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        Snapshot {
+            counters: g.counters.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+            gauges: g.gauges.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+            hists: g.hists.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
+        }
+    }
+}
+
+/// Point-in-time copy of a registry.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub hists: Vec<(String, Hist)>,
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect()
+}
+
+impl Snapshot {
+    /// One JSON object per snapshot — the JSONL flush line.
+    pub fn to_json(&self) -> Value {
+        let counters =
+            json::obj(self.counters.iter().map(|(k, v)| (k.as_str(), json::num(*v as f64))).collect());
+        let gauges =
+            json::obj(self.gauges.iter().map(|(k, v)| (k.as_str(), json::num(*v))).collect());
+        let hists = json::obj(
+            self.hists
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        k.as_str(),
+                        json::obj(vec![
+                            ("count", json::num(h.count as f64)),
+                            ("sum_us", json::num(h.sum_us as f64)),
+                            ("p50_us", json::num(h.p50() as f64)),
+                            ("p99_us", json::num(h.p99() as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        json::obj(vec![("counters", counters), ("gauges", gauges), ("hists", hists)])
+    }
+
+    /// Prometheus text exposition format 0.0.4 (`--metrics-addr`).
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            let n = sanitize(k);
+            out.push_str(&format!("# TYPE {n} counter\n{n} {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            let n = sanitize(k);
+            out.push_str(&format!("# TYPE {n} gauge\n{n} {v}\n"));
+        }
+        for (k, h) in &self.hists {
+            let n = sanitize(k);
+            out.push_str(&format!("# TYPE {n} summary\n"));
+            out.push_str(&format!("{n}{{quantile=\"0.5\"}} {}\n", h.p50()));
+            out.push_str(&format!("{n}{{quantile=\"0.99\"}} {}\n", h.p99()));
+            out.push_str(&format!("{n}_sum {}\n", h.sum_us));
+            out.push_str(&format!("{n}_count {}\n", h.count));
+        }
+        out
+    }
+}
+
+// ------------------------------------------------------------ aggregation
+
+/// What rank 0 derives from the gathered per-rank step histograms.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ClusterStats {
+    pub step_p50_us: u64,
+    pub step_p99_us: u64,
+    /// Max/min of per-rank mean step latency: 1.0 = perfectly even,
+    /// 0.0 = never measured.
+    pub rank_skew: f64,
+}
+
+/// Merge per-rank step-latency histograms into cluster quantiles and
+/// the straggler skew ratio.
+pub fn aggregate_step_hists(hists: &[(u32, Hist)]) -> ClusterStats {
+    let mut merged = Hist::default();
+    let mut means: Vec<f64> = Vec::new();
+    for (_, h) in hists {
+        merged.merge(h);
+        if h.count > 0 {
+            means.push(h.mean_us());
+        }
+    }
+    let rank_skew = match (
+        means.iter().cloned().fold(f64::INFINITY, f64::min),
+        means.iter().cloned().fold(0.0f64, f64::max),
+    ) {
+        (min, max) if min.is_finite() && min > 0.0 => max / min,
+        _ if !means.is_empty() => 1.0,
+        _ => 0.0,
+    };
+    ClusterStats { step_p50_us: merged.p50(), step_p99_us: merged.p99(), rank_skew }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_buckets_by_bit_width() {
+        let mut h = Hist::default();
+        h.observe(0); // bucket 0
+        h.observe(1); // bucket 1
+        h.observe(1000); // bucket 10
+        assert_eq!(h.count, 3);
+        assert_eq!(h.sum_us, 1001);
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[1], 1);
+        assert_eq!(h.buckets[10], 1);
+    }
+
+    #[test]
+    fn quantiles_walk_cumulative_counts() {
+        let mut h = Hist::default();
+        for _ in 0..99 {
+            h.observe(100); // bucket 7, bound 127
+        }
+        h.observe(1_000_000); // bucket 20, bound ~1M
+        assert_eq!(h.p50(), 127);
+        assert!(h.p99() >= 127);
+        assert!(h.quantile(1.0) >= 1_000_000 - 1);
+        assert_eq!(Hist::default().p50(), 0);
+    }
+
+    #[test]
+    fn hist_codec_round_trips() {
+        let mut h = Hist::default();
+        h.observe(5);
+        h.observe(500_000);
+        let w = h.encode(2);
+        let (rank, back) = Hist::decode(&w).unwrap();
+        assert_eq!(rank, 2);
+        assert_eq!(back, h);
+        assert!(Hist::decode(&w[1..]).is_err());
+    }
+
+    #[test]
+    fn registry_snapshot_and_exposition() {
+        let r = Registry::new();
+        r.inc("mux_bytes_total", 40);
+        r.inc("mux_bytes_total", 2);
+        r.gauge("union density", 0.03);
+        r.observe_us("step_latency_us", 900);
+        let snap = r.snapshot();
+        assert_eq!(snap.counters, vec![("mux_bytes_total".to_string(), 42)]);
+        let text = snap.prometheus();
+        assert!(text.contains("mux_bytes_total 42"), "{text}");
+        assert!(text.contains("union_density 0.03"), "sanitized name: {text}");
+        assert!(text.contains("step_latency_us{quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("step_latency_us_count 1"), "{text}");
+        let line = snap.to_json().to_json();
+        assert!(line.contains("\"p99_us\""), "{line}");
+    }
+
+    #[test]
+    fn aggregation_merges_and_measures_skew() {
+        let mut fast = Hist::default();
+        let mut slow = Hist::default();
+        for _ in 0..10 {
+            fast.observe(1_000);
+            slow.observe(4_000);
+        }
+        let stats = aggregate_step_hists(&[(0, fast.clone()), (1, slow)]);
+        assert!((stats.rank_skew - 4.0).abs() < 1e-9, "{stats:?}");
+        assert!(stats.step_p50_us >= 1_023);
+        assert!(stats.step_p99_us >= stats.step_p50_us);
+        // single rank: skew pins to 1.0; empty: 0.0
+        assert_eq!(aggregate_step_hists(&[(0, fast)]).rank_skew, 1.0);
+        assert_eq!(aggregate_step_hists(&[]).rank_skew, 0.0);
+    }
+}

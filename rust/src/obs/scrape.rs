@@ -1,0 +1,98 @@
+//! Live metrics scrape endpoint (`--metrics-addr`): a std-only
+//! `TcpListener` serving the registry's Prometheus text exposition.
+//!
+//! One background thread, non-blocking accept with a 10 ms idle nap,
+//! HTTP/1.0 close-after-response — enough for `curl`/Prometheus, zero
+//! dependencies, and a clean stop on drop (the worker owns the
+//! [`Scraper`] for the run's duration).
+
+use super::metrics::Registry;
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Handle to a running scrape server; dropping it stops the thread.
+pub struct Scraper {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+    /// The bound address (resolves port 0).
+    pub addr: String,
+}
+
+/// Bind `addr` and serve `reg` until the returned handle is dropped.
+pub fn serve(addr: &str, reg: Arc<Registry>) -> Result<Scraper, String> {
+    let listener = TcpListener::bind(addr).map_err(|e| format!("metrics bind {addr}: {e}"))?;
+    let bound = listener.local_addr().map(|a| a.to_string()).unwrap_or_else(|_| addr.to_string());
+    listener.set_nonblocking(true).map_err(|e| format!("metrics listener: {e}"))?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let flag = Arc::clone(&stop);
+    let handle = std::thread::spawn(move || loop {
+        if flag.load(Ordering::Relaxed) {
+            return;
+        }
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                // drain (part of) the request; the path is irrelevant —
+                // every GET gets the full exposition
+                let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+                let mut buf = [0u8; 1024];
+                let _ = stream.read(&mut buf);
+                let body = reg.snapshot().prometheus();
+                let resp = format!(
+                    "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+                     Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+                    body.len(),
+                    body
+                );
+                let _ = stream.write_all(resp.as_bytes());
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    });
+    Ok(Scraper { stop, handle: Some(handle), addr: bound })
+}
+
+impl Scraper {
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Scraper {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpStream;
+
+    #[test]
+    fn scrape_serves_prometheus_text() {
+        let reg = Arc::new(Registry::new());
+        reg.inc("steps_total", 7);
+        reg.observe_us("step_latency_us", 1234);
+        let mut scraper = serve("127.0.0.1:0", Arc::clone(&reg)).expect("bind");
+        let mut stream = TcpStream::connect(&scraper.addr).expect("connect");
+        stream.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        stream.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.0 200 OK"), "{resp}");
+        assert!(resp.contains("text/plain; version=0.0.4"), "{resp}");
+        assert!(resp.contains("steps_total 7"), "{resp}");
+        assert!(resp.contains("step_latency_us_count 1"), "{resp}");
+        // shutdown joins the accept thread (Drop would too)
+        scraper.shutdown();
+    }
+}

@@ -1,0 +1,561 @@
+//! Span tracer: per-rank, per-lane fixed-capacity ring buffers of
+//! phase-interval events, recorded behind a single global atomic so the
+//! disabled path is one relaxed load and zero allocation.
+//!
+//! A [`Span`] is `(phase, step, tag, t_start_us, t_end_us)` — `Copy`,
+//! 7 words on the wire, timestamps in wall-aligned microseconds so
+//! spans from different *processes* (the TCP fabric) land on one
+//! timeline: every process anchors a monotonic [`Instant`] to wall
+//! time once ([`now_us`]) and derives all timestamps from that anchor,
+//! so within a process ordering is monotonic while across processes
+//! clocks agree to wall-clock sync error.
+//!
+//! Rings are preallocated at creation ([`SpanRing::new`]) and overwrite
+//! the oldest span when full (the `dropped` counter says how many) —
+//! recording in steady state touches no allocator, which
+//! `tests/alloc_steady.rs` pins.  [`ring`] additionally registers the
+//! ring in a process-global registry keyed by rank, so in-process
+//! multi-rank fleets (threads over `LocalFabric`) and one-process-per-
+//! rank fleets (TCP) drain through the same [`drain_rank`] call.
+
+use crate::util::timer::PhaseTimer;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+// ------------------------------------------------------------ enable gate
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn tracing on/off globally.  Enabling also anchors the time origin
+/// so no later span can predate it.
+pub fn set_enabled(on: bool) {
+    if on {
+        origin();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// The one check every record site performs: a single relaxed load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+// ------------------------------------------------------------ time origin
+
+static ORIGIN: OnceLock<(Instant, u64)> = OnceLock::new();
+
+fn origin() -> &'static (Instant, u64) {
+    ORIGIN.get_or_init(|| {
+        let wall = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+        (Instant::now(), wall.as_micros() as u64)
+    })
+}
+
+/// Current wall-aligned microsecond timestamp (monotonic in-process).
+pub fn now_us() -> u64 {
+    let (anchor, base) = origin();
+    base + anchor.elapsed().as_micros() as u64
+}
+
+/// Convert an already-taken [`Instant`] to the span timebase.
+pub fn instant_us(at: Instant) -> u64 {
+    let (anchor, base) = origin();
+    base + at.saturating_duration_since(*anchor).as_micros() as u64
+}
+
+// ------------------------------------------------------------ phases/lanes
+
+pub const SPAN_STEP: u32 = 0;
+pub const SPAN_COMPUTE: u32 = 1;
+pub const SPAN_MASK: u32 = 2;
+pub const SPAN_SELECT: u32 = 3;
+pub const SPAN_PACK: u32 = 4;
+pub const SPAN_COMM_SPARSE: u32 = 5;
+pub const SPAN_COMM_DENSE: u32 = 6;
+pub const SPAN_UNPACK: u32 = 7;
+pub const SPAN_UPDATE: u32 = 8;
+pub const SPAN_EVAL: u32 = 9;
+pub const SPAN_HEARTBEAT: u32 = 10;
+pub const SPAN_DETECT: u32 = 11;
+pub const SPAN_RESHAPE: u32 = 12;
+pub const SPAN_GATHER: u32 = 13;
+
+/// Display name for a span phase — aligned with
+/// `coordinator::metrics::phase` names so the trace and the Fig-10
+/// aggregation speak one vocabulary.
+pub fn span_name(phase: u32) -> &'static str {
+    match phase {
+        SPAN_STEP => "step",
+        SPAN_COMPUTE => "compute",
+        SPAN_MASK => "mask",
+        SPAN_SELECT => "select",
+        SPAN_PACK => "pack",
+        SPAN_COMM_SPARSE => "comm_sparse",
+        SPAN_COMM_DENSE => "comm_dense",
+        SPAN_UNPACK => "unpack",
+        SPAN_UPDATE => "update",
+        SPAN_EVAL => "eval",
+        SPAN_HEARTBEAT => "heartbeat",
+        SPAN_DETECT => "detect",
+        SPAN_RESHAPE => "reshape",
+        SPAN_GATHER => "gather",
+        _ => "span",
+    }
+}
+
+/// Lane codes (Chrome-trace `tid` per rank): the worker/compute thread,
+/// the `Pipelined` comm pool lanes, and the elastic service threads.
+pub const LANE_MAIN: u32 = 0;
+pub const LANE_COMM_BASE: u32 = 1;
+pub const LANE_HEARTBEAT: u32 = 100;
+pub const LANE_DRIVER: u32 = 101;
+
+pub fn lane_name(lane: u32) -> String {
+    match lane {
+        LANE_MAIN => "main".to_string(),
+        LANE_HEARTBEAT => "heartbeat".to_string(),
+        LANE_DRIVER => "driver".to_string(),
+        l if (LANE_COMM_BASE..LANE_HEARTBEAT).contains(&l) => {
+            format!("comm-{}", l - LANE_COMM_BASE)
+        }
+        l => format!("lane-{l}"),
+    }
+}
+
+/// Default ring capacity: 8192 spans × 40 B ≈ 320 KiB per lane; long
+/// runs keep the most recent window (overwrite-oldest).
+pub const DEFAULT_CAP: usize = 8192;
+
+// ------------------------------------------------------------ span + ring
+
+/// One timed interval.  `tag` is context-dependent: bucket id for
+/// engine phases, epoch for elastic phases, 0 otherwise.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub phase: u32,
+    pub step: u32,
+    pub tag: u32,
+    pub t0_us: u64,
+    pub t1_us: u64,
+}
+
+struct RingBuf {
+    spans: Vec<Span>,
+    next: usize,
+    dropped: u64,
+}
+
+struct RingInner {
+    lane: u32,
+    buf: Mutex<RingBuf>,
+}
+
+/// A fixed-capacity, overwrite-oldest span buffer; `Clone` shares the
+/// underlying ring (comm threads clone, the owner drains).
+#[derive(Clone)]
+pub struct SpanRing {
+    inner: Arc<RingInner>,
+}
+
+impl SpanRing {
+    /// Fresh unregistered ring (tests, ad-hoc use); `capacity` is the
+    /// only allocation this ring will ever make.
+    pub fn new(lane: u32, capacity: usize) -> SpanRing {
+        SpanRing {
+            inner: Arc::new(RingInner {
+                lane,
+                buf: Mutex::new(RingBuf {
+                    spans: Vec::with_capacity(capacity),
+                    next: 0,
+                    dropped: 0,
+                }),
+            }),
+        }
+    }
+
+    pub fn lane(&self) -> u32 {
+        self.inner.lane
+    }
+
+    /// Record a finished span: writes into a preallocated slot, never
+    /// allocates.  Full ring overwrites the oldest entry.
+    pub fn record(&self, span: Span) {
+        let mut b = self.inner.buf.lock().unwrap_or_else(|e| e.into_inner());
+        let cap = b.spans.capacity();
+        if cap == 0 {
+            b.dropped += 1;
+            return;
+        }
+        if b.spans.len() < cap {
+            b.spans.push(span);
+        } else {
+            let i = b.next % cap;
+            b.spans[i] = span;
+            b.dropped += 1;
+        }
+        b.next = b.next.wrapping_add(1);
+    }
+
+    /// RAII guard recording `[now, drop]` as one span.
+    pub fn guard(&self, phase: u32, step: u32, tag: u32) -> SpanGuard<'_> {
+        SpanGuard { ring: self, phase, step, tag, t0: Instant::now() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.buf.lock().unwrap_or_else(|e| e.into_inner()).spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Take every recorded span (oldest first) plus the overwrite
+    /// count, resetting the ring (capacity is kept).
+    pub fn drain(&self) -> (Vec<Span>, u64) {
+        let mut b = self.inner.buf.lock().unwrap_or_else(|e| e.into_inner());
+        let cap = b.spans.capacity();
+        let dropped = b.dropped;
+        let mut out = Vec::with_capacity(b.spans.len());
+        if dropped > 0 && b.spans.len() == cap && cap > 0 {
+            let start = b.next % cap;
+            out.extend_from_slice(&b.spans[start..]);
+            out.extend_from_slice(&b.spans[..start]);
+        } else {
+            out.extend_from_slice(&b.spans);
+        }
+        b.spans.clear();
+        b.next = 0;
+        b.dropped = 0;
+        (out, dropped)
+    }
+}
+
+/// Scope guard from [`SpanRing::guard`].
+pub struct SpanGuard<'a> {
+    ring: &'a SpanRing,
+    phase: u32,
+    step: u32,
+    tag: u32,
+    t0: Instant,
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        self.ring.record(Span {
+            phase: self.phase,
+            step: self.step,
+            tag: self.tag,
+            t0_us: instant_us(self.t0),
+            t1_us: now_us(),
+        });
+    }
+}
+
+// ------------------------------------------------------------ registry
+
+struct Entry {
+    rank: usize,
+    ring: SpanRing,
+}
+
+static REGISTRY: Mutex<Vec<Entry>> = Mutex::new(Vec::new());
+
+/// Create a ring and register it under `rank` for [`drain_rank`].
+pub fn ring(rank: usize, lane: u32, capacity: usize) -> SpanRing {
+    let r = SpanRing::new(lane, capacity);
+    REGISTRY.lock().unwrap_or_else(|e| e.into_inner()).push(Entry { rank, ring: r.clone() });
+    r
+}
+
+/// One lane's drained spans.
+#[derive(Clone, Debug)]
+pub struct LaneDump {
+    pub lane: u32,
+    pub dropped: u64,
+    pub spans: Vec<Span>,
+}
+
+/// Drain and deregister every ring recorded under `rank` (engines,
+/// worker, heartbeat, driver — across elastic epochs).
+pub fn drain_rank(rank: usize) -> Vec<LaneDump> {
+    let mut reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    let mut dumps = Vec::new();
+    reg.retain(|e| {
+        if e.rank != rank {
+            return true;
+        }
+        let (spans, dropped) = e.ring.drain();
+        dumps.push(LaneDump { lane: e.ring.lane(), dropped, spans });
+        false
+    });
+    dumps
+}
+
+// ------------------------------------------------------------ wire codec
+
+/// Encode a rank's lane dumps for the control-channel trace gather:
+/// `[rank, n_lanes, { lane, dropped_lo, dropped_hi, n_spans, 7·n span
+/// words }…]`.
+pub fn encode_dumps(rank: u32, dumps: &[LaneDump]) -> Vec<u32> {
+    let spans: usize = dumps.iter().map(|d| d.spans.len()).sum();
+    let mut w = Vec::with_capacity(2 + dumps.len() * 4 + spans * 7);
+    w.push(rank);
+    w.push(dumps.len() as u32);
+    for d in dumps {
+        w.push(d.lane);
+        w.push(d.dropped as u32);
+        w.push((d.dropped >> 32) as u32);
+        w.push(d.spans.len() as u32);
+        for s in &d.spans {
+            w.push(s.phase);
+            w.push(s.step);
+            w.push(s.tag);
+            w.push(s.t0_us as u32);
+            w.push((s.t0_us >> 32) as u32);
+            w.push(s.t1_us as u32);
+            w.push((s.t1_us >> 32) as u32);
+        }
+    }
+    w
+}
+
+pub fn decode_dumps(w: &[u32]) -> Result<(u32, Vec<LaneDump>), String> {
+    fn take(w: &[u32], pos: &mut usize) -> Result<u32, String> {
+        let v = w.get(*pos).copied().ok_or("truncated span dump")?;
+        *pos += 1;
+        Ok(v)
+    }
+    fn take64(w: &[u32], pos: &mut usize) -> Result<u64, String> {
+        let lo = take(w, pos)? as u64;
+        let hi = take(w, pos)? as u64;
+        Ok(lo | (hi << 32))
+    }
+    let mut pos = 0usize;
+    let rank = take(w, &mut pos)?;
+    let n_lanes = take(w, &mut pos)? as usize;
+    let mut dumps = Vec::with_capacity(n_lanes);
+    for _ in 0..n_lanes {
+        let lane = take(w, &mut pos)?;
+        let dropped = take64(w, &mut pos)?;
+        let n = take(w, &mut pos)? as usize;
+        let mut spans = Vec::with_capacity(n);
+        for _ in 0..n {
+            let phase = take(w, &mut pos)?;
+            let step = take(w, &mut pos)?;
+            let tag = take(w, &mut pos)?;
+            let t0_us = take64(w, &mut pos)?;
+            let t1_us = take64(w, &mut pos)?;
+            spans.push(Span { phase, step, tag, t0_us, t1_us });
+        }
+        dumps.push(LaneDump { lane, dropped, spans });
+    }
+    if pos != w.len() {
+        return Err(format!("span dump has {} trailing words", w.len() - pos));
+    }
+    Ok((rank, dumps))
+}
+
+// ------------------------------------------------------------ timing glue
+
+/// Per-lap phase clock: one `Instant::now()` per boundary when enabled,
+/// zero clock reads when disabled (the `CompressorConfig::timing` gate
+/// `tests/alloc_steady.rs` and the bucket timing-gate test pin).
+pub struct PhaseClock {
+    mark: Option<Instant>,
+}
+
+impl PhaseClock {
+    pub fn start(enabled: bool) -> PhaseClock {
+        PhaseClock { mark: enabled.then(Instant::now) }
+    }
+
+    /// Seconds since the previous boundary (0.0 when disabled);
+    /// re-marks.
+    pub fn lap(&mut self) -> f64 {
+        match self.mark {
+            Some(t0) => {
+                let t1 = Instant::now();
+                self.mark = Some(t1);
+                (t1 - t0).as_secs_f64()
+            }
+            None => 0.0,
+        }
+    }
+
+    /// Lap that also records the interval as a span when a trace
+    /// context is present — the single source both the Fig-10 totals
+    /// and the timeline draw from.
+    pub fn lap_span(&mut self, ctx: Option<&SpanCtx<'_>>, phase: u32) -> f64 {
+        match self.mark {
+            Some(t0) => {
+                let t1 = Instant::now();
+                self.mark = Some(t1);
+                if let Some(c) = ctx {
+                    c.ring.record(Span {
+                        phase,
+                        step: c.step,
+                        tag: c.tag,
+                        t0_us: instant_us(t0),
+                        t1_us: instant_us(t1),
+                    });
+                }
+                (t1 - t0).as_secs_f64()
+            }
+            None => 0.0,
+        }
+    }
+}
+
+/// Where a compressor-produce call should record its phase spans.
+#[derive(Clone, Copy)]
+pub struct SpanCtx<'a> {
+    pub ring: &'a SpanRing,
+    pub step: u32,
+    pub tag: u32,
+}
+
+/// Time a closure into a [`PhaseTimer`] phase and (when `ring` is set)
+/// record the same interval as a span — the unified accounting path
+/// for loop-level phases (compute/dense/eval/…).
+pub fn time_phase<T>(
+    ring: Option<&SpanRing>,
+    phase: u32,
+    step: u32,
+    tag: u32,
+    timer: &mut PhaseTimer,
+    name: &str,
+    f: impl FnOnce() -> T,
+) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    let dur = t0.elapsed();
+    timer.add(name, dur.as_secs_f64());
+    if let Some(r) = ring {
+        let t0_us = instant_us(t0);
+        r.record(Span { phase, step, tag, t0_us, t1_us: t0_us + dur.as_micros() as u64 });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(phase: u32, t0: u64) -> Span {
+        Span { phase, step: 0, tag: 0, t0_us: t0, t1_us: t0 + 1 }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_when_full() {
+        let r = SpanRing::new(LANE_MAIN, 4);
+        for i in 0..6 {
+            r.record(span(i, i as u64));
+        }
+        let (spans, dropped) = r.drain();
+        assert_eq!(dropped, 2);
+        assert_eq!(spans.len(), 4);
+        // oldest-first: 0 and 1 were overwritten by 4 and 5
+        let phases: Vec<u32> = spans.iter().map(|s| s.phase).collect();
+        assert_eq!(phases, vec![2, 3, 4, 5]);
+        // drained ring is reusable
+        r.record(span(9, 9));
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn dump_codec_round_trips() {
+        let dumps = vec![
+            LaneDump {
+                lane: LANE_MAIN,
+                dropped: 3,
+                spans: vec![
+                    Span { phase: SPAN_STEP, step: 7, tag: 2, t0_us: 10, t1_us: 90 },
+                    Span {
+                        phase: SPAN_COMM_SPARSE,
+                        step: 7,
+                        tag: 1,
+                        t0_us: u64::MAX - 5,
+                        t1_us: u64::MAX,
+                    },
+                ],
+            },
+            LaneDump { lane: LANE_COMM_BASE, dropped: 0, spans: vec![] },
+        ];
+        let words = encode_dumps(3, &dumps);
+        let (rank, back) = decode_dumps(&words).unwrap();
+        assert_eq!(rank, 3);
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].dropped, 3);
+        assert_eq!(back[0].spans, dumps[0].spans);
+        assert_eq!(back[1].lane, LANE_COMM_BASE);
+        assert!(decode_dumps(&words[..words.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn disabled_clock_reads_zero() {
+        let mut c = PhaseClock::start(false);
+        assert_eq!(c.lap(), 0.0);
+        assert_eq!(c.lap_span(None, SPAN_MASK), 0.0);
+    }
+
+    #[test]
+    fn lap_span_records_into_ring() {
+        let r = SpanRing::new(LANE_MAIN, 8);
+        let ctx = SpanCtx { ring: &r, step: 4, tag: 1 };
+        let mut c = PhaseClock::start(true);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let secs = c.lap_span(Some(&ctx), SPAN_SELECT);
+        assert!(secs > 0.0);
+        let (spans, dropped) = r.drain();
+        assert_eq!(dropped, 0);
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].phase, SPAN_SELECT);
+        assert_eq!(spans[0].step, 4);
+        assert!(spans[0].t1_us >= spans[0].t0_us);
+    }
+
+    #[test]
+    fn guard_records_enclosing_interval() {
+        let r = SpanRing::new(LANE_DRIVER, 8);
+        {
+            let _g = r.guard(SPAN_RESHAPE, 2, 1);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let (spans, _) = r.drain();
+        assert_eq!(spans.len(), 1);
+        assert!(spans[0].t1_us > spans[0].t0_us);
+    }
+
+    #[test]
+    fn registry_drains_by_rank() {
+        // ranks chosen to be out of any real fleet's range so parallel
+        // tests can't interleave with these entries
+        let a = ring(9001, LANE_MAIN, 4);
+        let b = ring(9002, LANE_MAIN, 4);
+        a.record(span(1, 1));
+        b.record(span(2, 2));
+        let d = drain_rank(9001);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].spans.len(), 1);
+        assert_eq!(d[0].spans[0].phase, 1);
+        assert!(drain_rank(9001).is_empty(), "drain deregisters");
+        let d2 = drain_rank(9002);
+        assert_eq!(d2[0].spans[0].phase, 2);
+    }
+
+    #[test]
+    fn time_phase_feeds_timer_and_ring() {
+        let r = SpanRing::new(LANE_MAIN, 8);
+        let mut timer = PhaseTimer::new();
+        let v = time_phase(Some(&r), SPAN_COMPUTE, 1, 0, &mut timer, "compute", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(timer.count("compute"), 1);
+        assert_eq!(r.len(), 1);
+        // without a ring only the timer moves
+        let mut t2 = PhaseTimer::new();
+        time_phase(None, SPAN_COMPUTE, 1, 0, &mut t2, "compute", || ());
+        assert_eq!(t2.count("compute"), 1);
+    }
+}

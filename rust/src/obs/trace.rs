@@ -1,0 +1,179 @@
+//! Chrome trace-event exporter: merges every rank's span rings into one
+//! Perfetto-loadable timeline (`chrome://tracing` / ui.perfetto.dev).
+//!
+//! Mapping: rank → process (`pid`), lane → thread (`tid`, named via
+//! metadata events), span → one `"ph":"X"` complete event with `ts`
+//! and `dur` in microseconds, normalized to the earliest span so the
+//! timeline starts at zero.  `args` carry the step and the
+//! bucket/epoch tag so overlap questions ("is bucket 3's allgather in
+//! flight while lane 2 selects bucket 1?") are answerable by hover.
+
+use super::span::{lane_name, span_name, LaneDump};
+use crate::util::json::{self, Value};
+use std::collections::BTreeSet;
+
+/// All drained lanes of one rank.
+#[derive(Clone, Debug)]
+pub struct RankDump {
+    pub rank: u32,
+    pub lanes: Vec<LaneDump>,
+}
+
+/// Total spans across a dump set (bench/report bookkeeping).
+pub fn span_count(dumps: &[RankDump]) -> usize {
+    dumps.iter().flat_map(|d| &d.lanes).map(|l| l.spans.len()).sum()
+}
+
+/// Build the `{"traceEvents": […]}` document.
+pub fn chrome_trace(dumps: &[RankDump]) -> Value {
+    let mut min_us = u64::MAX;
+    for d in dumps {
+        for l in &d.lanes {
+            for s in &l.spans {
+                min_us = min_us.min(s.t0_us);
+            }
+        }
+    }
+    if min_us == u64::MAX {
+        min_us = 0;
+    }
+
+    let mut meta: Vec<Value> = Vec::new();
+    let mut events: Vec<(u64, Value)> = Vec::new();
+    let mut seen_proc: BTreeSet<u32> = BTreeSet::new();
+    let mut seen_lane: BTreeSet<(u32, u32)> = BTreeSet::new();
+    for d in dumps {
+        if seen_proc.insert(d.rank) {
+            meta.push(json::obj(vec![
+                ("name", json::s("process_name")),
+                ("ph", json::s("M")),
+                ("pid", json::num(d.rank as f64)),
+                ("tid", json::num(0.0)),
+                ("args", json::obj(vec![("name", json::s(format!("rank {}", d.rank)))])),
+            ]));
+        }
+        for l in &d.lanes {
+            if seen_lane.insert((d.rank, l.lane)) {
+                meta.push(json::obj(vec![
+                    ("name", json::s("thread_name")),
+                    ("ph", json::s("M")),
+                    ("pid", json::num(d.rank as f64)),
+                    ("tid", json::num(l.lane as f64)),
+                    ("args", json::obj(vec![("name", json::s(lane_name(l.lane)))])),
+                ]));
+            }
+            for sp in &l.spans {
+                let ts = sp.t0_us.saturating_sub(min_us);
+                let dur = sp.t1_us.saturating_sub(sp.t0_us);
+                events.push((
+                    ts,
+                    json::obj(vec![
+                        ("name", json::s(span_name(sp.phase))),
+                        ("ph", json::s("X")),
+                        ("pid", json::num(d.rank as f64)),
+                        ("tid", json::num(l.lane as f64)),
+                        ("ts", json::num(ts as f64)),
+                        ("dur", json::num(dur as f64)),
+                        (
+                            "args",
+                            json::obj(vec![
+                                ("step", json::num(sp.step as f64)),
+                                ("tag", json::num(sp.tag as f64)),
+                            ]),
+                        ),
+                    ]),
+                ));
+            }
+        }
+    }
+    events.sort_by_key(|(ts, _)| *ts);
+
+    let mut all = meta;
+    all.extend(events.into_iter().map(|(_, v)| v));
+    json::obj(vec![
+        ("traceEvents", json::arr(all)),
+        ("displayTimeUnit", json::s("ms")),
+    ])
+}
+
+/// Write the merged timeline to `path`.
+pub fn write_chrome_trace(path: &str, dumps: &[RankDump]) -> Result<(), String> {
+    std::fs::write(path, chrome_trace(dumps).to_json()).map_err(|e| format!("trace {path}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::{Span, LANE_COMM_BASE, LANE_MAIN, SPAN_COMM_SPARSE, SPAN_STEP};
+
+    fn dump() -> Vec<RankDump> {
+        vec![
+            RankDump {
+                rank: 0,
+                lanes: vec![
+                    LaneDump {
+                        lane: LANE_MAIN,
+                        dropped: 0,
+                        spans: vec![Span {
+                            phase: SPAN_STEP,
+                            step: 0,
+                            tag: 0,
+                            t0_us: 1_000,
+                            t1_us: 1_900,
+                        }],
+                    },
+                    LaneDump {
+                        lane: LANE_COMM_BASE,
+                        dropped: 1,
+                        spans: vec![Span {
+                            phase: SPAN_COMM_SPARSE,
+                            step: 0,
+                            tag: 2,
+                            t0_us: 1_200,
+                            t1_us: 1_700,
+                        }],
+                    },
+                ],
+            },
+            RankDump {
+                rank: 1,
+                lanes: vec![LaneDump {
+                    lane: LANE_MAIN,
+                    dropped: 0,
+                    spans: vec![Span {
+                        phase: SPAN_STEP,
+                        step: 0,
+                        tag: 0,
+                        t0_us: 1_050,
+                        t1_us: 1_950,
+                    }],
+                }],
+            },
+        ]
+    }
+
+    #[test]
+    fn trace_normalizes_sorts_and_names() {
+        let v = chrome_trace(&dump());
+        let events = v.at(&["traceEvents"]).and_then(|e| e.as_arr()).unwrap();
+        // 2 process + 3 thread metadata events, then 3 X events
+        let xs: Vec<_> = events
+            .iter()
+            .filter(|e| e.at(&["ph"]).and_then(|p| p.as_str()) == Some("X"))
+            .collect();
+        assert_eq!(xs.len(), 3);
+        let ts: Vec<f64> = xs.iter().map(|e| e.at(&["ts"]).unwrap().as_f64().unwrap()).collect();
+        assert_eq!(ts[0], 0.0, "earliest span anchors the timeline");
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "X events sorted by ts: {ts:?}");
+        let names: Vec<_> = events
+            .iter()
+            .filter(|e| e.at(&["name"]).and_then(|n| n.as_str()) == Some("process_name"))
+            .collect();
+        assert_eq!(names.len(), 2, "one process_name per rank");
+    }
+
+    #[test]
+    fn span_count_sums_lanes() {
+        assert_eq!(span_count(&dump()), 3);
+    }
+}

@@ -17,8 +17,8 @@ use crate::compression::{
     exact_topk_into, threshold_binary_search_into, trimmed_topk_into, Accumulation,
     CompressorConfig, Method, ResidualState, SelectScratch, SignAlternator,
 };
+use crate::obs::{self, PhaseClock, SpanCtx};
 use crate::runtime::DeviceSelector;
-use std::time::Instant;
 
 /// Static description of one compressed layer (everything `produce`
 /// needs besides the evolving state).
@@ -79,31 +79,6 @@ pub struct Produced {
     pub mask_secs: f64,
     pub select_secs: f64,
     pub pack_secs: f64,
-}
-
-/// Cheap per-phase stopwatch for the produce loop: one `lap()` per phase
-/// boundary instead of paired `Instant::now()` calls, and a disabled
-/// clock (`CompressorConfig::timing = false`) never touches the OS timer
-/// — so micro-layer buckets aren't dominated by clock reads.
-struct PhaseClock(Option<Instant>);
-
-impl PhaseClock {
-    fn start(enabled: bool) -> PhaseClock {
-        PhaseClock(enabled.then(Instant::now))
-    }
-
-    /// Seconds since the previous lap (0 when disabled).
-    fn lap(&mut self) -> f64 {
-        match &mut self.0 {
-            Some(last) => {
-                let now = Instant::now();
-                let d = now.duration_since(*last).as_secs_f64();
-                *last = now;
-                d
-            }
-            None => 0.0,
-        }
-    }
 }
 
 /// Group compressed-layer specs (already in backward order) into fusion
@@ -217,11 +192,30 @@ impl BucketState {
         cc: &CompressorConfig,
         device: Option<&DeviceSelector>,
     ) -> Result<Produced, String> {
+        self.produce_traced(grads, density, cc, device, None)
+    }
+
+    /// [`produce`](Self::produce) with an optional trace context: when
+    /// `ctx` is set, every phase lap is also recorded as a span on the
+    /// caller's ring — the phase-seconds totals and the timeline come
+    /// from the *same* clock reads (obs's `PhaseClock` is the one
+    /// stopwatch; the old private copy here is gone).  Tracing implies
+    /// timing: a span needs the interval whether or not
+    /// `CompressorConfig::timing` asked for seconds.
+    pub fn produce_traced(
+        &mut self,
+        grads: &[&[f32]],
+        density: f64,
+        cc: &CompressorConfig,
+        device: Option<&DeviceSelector>,
+        ctx: Option<SpanCtx<'_>>,
+    ) -> Result<Produced, String> {
         assert_eq!(grads.len(), self.layers.len(), "one gradient per bucket layer");
         self.blob.clear();
         let mut out =
             Produced { selected: 0, elems: 0, mask_secs: 0.0, select_secs: 0.0, pack_secs: 0.0 };
-        let mut clock = PhaseClock::start(cc.timing);
+        let ctx = ctx.as_ref();
+        let mut clock = PhaseClock::start(cc.timing || ctx.is_some());
         for (layer, grad) in self.layers.iter_mut().zip(grads) {
             let n = layer.spec.n;
             debug_assert_eq!(grad.len(), n);
@@ -248,17 +242,17 @@ impl BucketState {
             } else {
                 layer.residual.accumulate(grad);
             }
-            out.mask_secs += clock.lap();
+            out.mask_secs += clock.lap_span(ctx, obs::SPAN_MASK);
 
             let k = k_for(n, density);
             let sign =
                 if layer.spec.quantize { Some(layer.alternator.next_sign()) } else { None };
             layer.select_into(device, k, sign, cc, &mut self.scratch)?;
-            out.select_secs += clock.lap();
+            out.select_secs += clock.lap_span(ctx, obs::SPAN_SELECT);
 
             let sel = self.scratch.selected();
             layer.residual.mask(sel);
-            out.mask_secs += clock.lap();
+            out.mask_secs += clock.lap_span(ctx, obs::SPAN_MASK);
             out.selected += sel.len();
             out.elems += n;
 
@@ -270,7 +264,7 @@ impl BucketState {
             } else {
                 pack_plain_into(sel, &mut self.blob);
             }
-            out.pack_secs += clock.lap();
+            out.pack_secs += clock.lap_span(ctx, obs::SPAN_PACK);
         }
         Ok(out)
     }

@@ -33,6 +33,7 @@ use crate::collectives::mux::{TagChannel, TagMux};
 use crate::collectives::{Gathered, Transport};
 use crate::compression::CompressorConfig;
 use crate::coordinator::metrics::phase;
+use crate::obs::{self, SpanCtx, SpanRing};
 use crate::util::timer::PhaseTimer;
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc::channel;
@@ -76,6 +77,11 @@ pub struct Pipelined<T: Transport + Send + Sync> {
     groups: Vec<Vec<(usize, bool)>>,
     inflight: usize,
     cc: CompressorConfig,
+    /// One registered span ring per comm lane when tracing is on
+    /// (created once at construction — the per-step thread scope only
+    /// clones `Arc`s, keeping the traced steady state allocation-free).
+    rings: Vec<SpanRing>,
+    step: u32,
 }
 
 impl<T: Transport + Send + Sync> Pipelined<T> {
@@ -114,10 +120,19 @@ impl<T: Transport + Send + Sync> Pipelined<T> {
             "mux reserves too few tags for {} buckets",
             buckets.len()
         );
-        let groups = buckets
+        let groups: Vec<Vec<(usize, bool)>> = buckets
             .iter()
             .map(|b| b.specs().map(|s| (s.li, s.quantize)).collect())
             .collect();
+        let rings = if obs::enabled() {
+            (0..inflight.min(buckets.len()))
+                .map(|lane| {
+                    obs::ring(mux.rank(), obs::LANE_COMM_BASE + lane as u32, obs::DEFAULT_CAP)
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
         Pipelined {
             mux,
             topo,
@@ -125,6 +140,8 @@ impl<T: Transport + Send + Sync> Pipelined<T> {
             groups,
             inflight,
             cc,
+            rings,
+            step: 0,
         }
     }
 }
@@ -177,18 +194,25 @@ impl<T: Transport + Send + Sync> SyncEngine for Pipelined<T> {
         let queue = Mutex::new(tasks);
         let (res_tx, res_rx) = channel::<(usize, Result<TaskOut, String>)>();
         let workers = self.inflight.min(n);
+        let step = self.step;
+        self.step = self.step.wrapping_add(1);
 
         thread::scope(|s| -> Result<(), String> {
-            for _ in 0..workers {
+            for lane in 0..workers {
                 let mux = Arc::clone(&self.mux);
                 let tx = res_tx.clone();
                 let cc = self.cc;
                 let topo = self.topo;
                 let queue = &queue;
+                let ring = self.rings.get(lane).cloned();
                 s.spawn(move || loop {
                     let task = queue.lock().unwrap().pop_front();
                     let Some(mut task) = task else { return };
-                    let out = match task.state.produce(&task.grads, density, &cc, None) {
+                    let ctx = ring
+                        .as_ref()
+                        .map(|r| SpanCtx { ring: r, step, tag: task.bucket as u32 });
+                    let out = match task.state.produce_traced(&task.grads, density, &cc, None, ctx)
+                    {
                         Ok(p) => {
                             let chan = TagChannel::new(
                                 Arc::clone(&mux),
@@ -198,7 +222,11 @@ impl<T: Transport + Send + Sync> SyncEngine for Pipelined<T> {
                             let t0 = Instant::now();
                             // borrows the bucket's persistent blob; the
                             // state (blob included) moves back afterwards
+                            let guard = ring
+                                .as_ref()
+                                .map(|r| r.guard(obs::SPAN_COMM_SPARSE, step, task.bucket as u32));
                             let gathered = comm.allgather(task.state.algo(), task.state.blob());
+                            drop(guard);
                             Ok(TaskOut {
                                 state: task.state,
                                 gathered,

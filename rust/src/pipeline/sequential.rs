@@ -7,6 +7,7 @@ use crate::collectives::group::{Communicator, Topology};
 use crate::collectives::Transport;
 use crate::compression::CompressorConfig;
 use crate::coordinator::metrics::phase;
+use crate::obs::{self, SpanCtx, SpanRing};
 use crate::runtime::DeviceSelector;
 use crate::util::timer::PhaseTimer;
 
@@ -20,6 +21,10 @@ pub struct Sequential<'a, T: Transport> {
     device: Option<DeviceSelector<'a>>,
     buckets: Vec<BucketState>,
     cc: CompressorConfig,
+    /// Registered span ring (main lane) when tracing is on; `None` keeps
+    /// the steady state identical to the pre-obs engine.
+    ring: Option<SpanRing>,
+    step: u32,
 }
 
 impl<'a, T: Transport> Sequential<'a, T> {
@@ -45,7 +50,9 @@ impl<'a, T: Transport> Sequential<'a, T> {
         buckets: Vec<BucketState>,
         cc: CompressorConfig,
     ) -> Sequential<'a, T> {
-        Sequential { comm: Communicator::new(transport, topo), device, buckets, cc }
+        let ring =
+            obs::enabled().then(|| obs::ring(transport.rank(), obs::LANE_MAIN, obs::DEFAULT_CAP));
+        Sequential { comm: Communicator::new(transport, topo), device, buckets, cc, ring, step: 0 }
     }
 }
 
@@ -72,18 +79,23 @@ impl<T: Transport> SyncEngine for Sequential<'_, T> {
         timer: &mut PhaseTimer,
         apply: &mut dyn FnMut(BucketDone) -> Result<(), String>,
     ) -> Result<(), String> {
+        let step = self.step;
+        self.step = self.step.wrapping_add(1);
         for (b, state) in self.buckets.iter_mut().enumerate() {
+            let ctx = self.ring.as_ref().map(|r| SpanCtx { ring: r, step, tag: b as u32 });
             let grefs: Vec<&[f32]> = state.specs().map(|s| grads[s.li].as_slice()).collect();
             let produced = state
-                .produce(&grefs, density, &self.cc, self.device.as_ref())
+                .produce_traced(&grefs, density, &self.cc, self.device.as_ref(), ctx)
                 .map_err(|e| format!("bucket {b}: {e}"))?;
             timer.add(phase::MASK, produced.mask_secs);
             timer.add(phase::SELECT, produced.select_secs);
             timer.add(phase::PACK, produced.pack_secs);
             let algo = state.algo();
             // the collective borrows the bucket's persistent blob
+            let _g = self.ring.as_ref().map(|r| r.guard(obs::SPAN_COMM_SPARSE, step, b as u32));
             let gathered =
                 timer.time(phase::COMM_SPARSE, || self.comm.allgather(algo, state.blob()));
+            drop(_g);
             apply(BucketDone {
                 bucket: b,
                 layers: state.specs().map(|s| (s.li, s.quantize)).collect(),

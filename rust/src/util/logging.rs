@@ -3,7 +3,9 @@
 //! Not `log`/`env_logger` (not vendored); a minimal equivalent whose level
 //! is set once by the CLI (`--log-level`) or the `REDSYNC_LOG` env var.
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
@@ -16,6 +18,19 @@ pub enum Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Rank attributed to this process's log lines (multi-process fleets
+/// interleave on stderr); `usize::MAX` = unset, legacy prefix-free format.
+static RANK: AtomicUsize = AtomicUsize::new(usize::MAX);
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Tag this process's log lines with `rank` and start the wall-clock
+/// offset (seconds since this call) shown in each prefix — call once
+/// per rank before training so interleaved fleet stderr is attributable.
+pub fn set_rank(rank: usize) {
+    RANK.store(rank, Ordering::Relaxed);
+    let _ = START.get_or_init(Instant::now);
+}
 
 impl Level {
     pub fn from_str_loose(s: &str) -> Option<Level> {
@@ -54,7 +69,13 @@ pub fn enabled(level: Level) -> bool {
 
 pub fn log(level: Level, args: std::fmt::Arguments) {
     if enabled(level) {
-        eprintln!("[{}] {}", level.tag(), args);
+        let rank = RANK.load(Ordering::Relaxed);
+        if rank == usize::MAX {
+            eprintln!("[{}] {}", level.tag(), args);
+        } else {
+            let secs = START.get().map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+            eprintln!("[r{rank} +{secs:.3}s] [{}] {}", level.tag(), args);
+        }
     }
 }
 
@@ -66,6 +87,8 @@ macro_rules! log_warn { ($($t:tt)*) => { $crate::util::logging::log($crate::util
 macro_rules! log_info { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($t)*)) } }
 #[macro_export]
 macro_rules! log_debug { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Trace, format_args!($($t)*)) } }
 
 #[cfg(test)]
 mod tests {

@@ -7,6 +7,12 @@ use std::time::Instant;
 
 /// Accumulates wall time per named phase.  Used by the coordinator to
 /// produce the paper's Fig-10 time decomposition.
+///
+/// This is the *aggregation* view of the run: each phase total is the
+/// sum of the same intervals `obs::span` records as individual timeline
+/// entries (`obs::time_phase` measures once and feeds both).  Use the
+/// timer for end-of-run breakdowns; use the span rings when you need
+/// the per-step, per-lane timeline (`--trace-out`).
 #[derive(Default, Debug, Clone)]
 pub struct PhaseTimer {
     totals: BTreeMap<String, f64>,

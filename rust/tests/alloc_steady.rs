@@ -138,6 +138,35 @@ fn steady_state_step_allocations_are_independent_of_k() {
     );
 }
 
+/// Tracing on must not add steady-state allocations: the span ring is
+/// pre-allocated once at engine construction and `record`/guard drops
+/// write into it in place, so the traced per-step count must sit within
+/// the same realloc slack as the disabled baseline.
+#[test]
+fn tracing_enabled_steady_state_allocates_like_disabled() {
+    let _serial = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (_, a0, a1) = run_single_rank(0.004, WARMUP + MEASURED);
+    let base = (a1 - a0) / MEASURED;
+
+    redsync::obs::set_enabled(true);
+    let (_, b0, b1) = run_single_rank(0.004, WARMUP + MEASURED);
+    redsync::obs::set_enabled(false);
+    let traced = (b1 - b0) / MEASURED;
+
+    // the traced engine registered a ring under rank 0 and filled it;
+    // drain deregisters it so later tests see a clean registry
+    let dumps = redsync::obs::drain_rank(0);
+    assert!(
+        dumps.iter().any(|d| !d.spans.is_empty()),
+        "the traced run must have recorded spans"
+    );
+
+    assert!(
+        traced.abs_diff(base) <= 4,
+        "tracing adds steady-state allocations: {base} disabled vs {traced} enabled"
+    );
+}
+
 /// 4-rank in-process fabric: the collective's own bookkeeping joins the
 /// count (pack/unpack block lists, channel nodes), all O(messages) —
 /// still independent of k.  Measured differentially (short run vs long

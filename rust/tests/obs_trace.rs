@@ -1,0 +1,169 @@
+//! End-to-end pin for the Chrome trace exporter: rings → drain →
+//! `write_chrome_trace` → parse the file back with `util::json` and
+//! check the structural invariants a Perfetto load relies on
+//! (metadata first, X events time-sorted and zero-anchored, rank→pid /
+//! lane→tid mapping, step/tag args, spans nested inside their step).
+
+use redsync::obs::{self, LaneDump, RankDump, Span};
+use redsync::util::json::Value;
+
+/// A deterministic two-rank timeline shaped like one pipelined step:
+/// the main lane's `step` span encloses two comm lanes whose
+/// select/pack/allgather intervals overlap each other.
+fn synthetic_dumps() -> Vec<RankDump> {
+    let base = 10_000u64; // non-zero so the exporter's normalization is visible
+    let span = |phase, step, tag, t0: u64, t1: u64| Span {
+        phase,
+        step,
+        tag,
+        t0_us: base + t0,
+        t1_us: base + t1,
+    };
+    vec![
+        RankDump {
+            rank: 0,
+            lanes: vec![
+                LaneDump {
+                    lane: obs::LANE_MAIN,
+                    dropped: 0,
+                    spans: vec![span(obs::SPAN_STEP, 3, 0, 0, 1_000)],
+                },
+                LaneDump {
+                    lane: obs::LANE_COMM_BASE,
+                    dropped: 0,
+                    spans: vec![
+                        span(obs::SPAN_SELECT, 3, 0, 100, 300),
+                        span(obs::SPAN_PACK, 3, 0, 300, 380),
+                        span(obs::SPAN_COMM_SPARSE, 3, 0, 380, 900),
+                    ],
+                },
+                LaneDump {
+                    lane: obs::LANE_COMM_BASE + 1,
+                    dropped: 0,
+                    spans: vec![
+                        span(obs::SPAN_SELECT, 3, 1, 150, 420),
+                        span(obs::SPAN_COMM_SPARSE, 3, 1, 430, 950),
+                    ],
+                },
+            ],
+        },
+        RankDump {
+            rank: 1,
+            lanes: vec![LaneDump {
+                lane: obs::LANE_MAIN,
+                dropped: 0,
+                spans: vec![span(obs::SPAN_STEP, 3, 0, 40, 1_020)],
+            }],
+        },
+    ]
+}
+
+fn num(v: &Value, key: &str) -> f64 {
+    v.at(&[key]).and_then(|x| x.as_f64()).unwrap_or_else(|| panic!("missing {key}"))
+}
+
+fn name(v: &Value) -> &str {
+    v.at(&["name"]).and_then(|x| x.as_str()).unwrap_or("")
+}
+
+#[test]
+fn trace_export_roundtrips_through_json() {
+    let dumps = synthetic_dumps();
+    assert_eq!(obs::span_count(&dumps), 6);
+
+    let path = std::env::temp_dir().join("redsync_obs_trace_roundtrip.json");
+    let path = path.to_str().expect("utf-8 temp path");
+    obs::write_chrome_trace(path, &dumps).expect("trace write");
+    let text = std::fs::read_to_string(path).expect("trace readback");
+    let _ = std::fs::remove_file(path);
+    let doc = Value::parse(&text).expect("exported trace must be valid JSON");
+
+    assert_eq!(
+        doc.at(&["displayTimeUnit"]).and_then(|v| v.as_str()),
+        Some("ms"),
+        "display unit tag"
+    );
+    let events = doc.at(&["traceEvents"]).and_then(|v| v.as_arr()).expect("traceEvents array");
+
+    // metadata strictly precedes every X event
+    let first_x = events
+        .iter()
+        .position(|e| e.at(&["ph"]).and_then(|p| p.as_str()) == Some("X"))
+        .expect("at least one X event");
+    for (i, e) in events.iter().enumerate() {
+        let ph = e.at(&["ph"]).and_then(|p| p.as_str()).unwrap();
+        if i < first_x {
+            assert_eq!(ph, "M", "event {i} before the first X must be metadata");
+        } else {
+            assert_eq!(ph, "X", "event {i} after the first X must be a span");
+        }
+    }
+    // 2 process_name + 4 thread_name metadata events
+    assert_eq!(events.iter().filter(|e| name(e) == "process_name").count(), 2);
+    assert_eq!(events.iter().filter(|e| name(e) == "thread_name").count(), 4);
+
+    let xs: Vec<&Value> = events[first_x..].iter().collect();
+    assert_eq!(xs.len(), 6, "one X event per span");
+
+    // zero-anchored and time-sorted
+    assert_eq!(num(xs[0], "ts"), 0.0, "earliest span anchors the timeline");
+    let ts: Vec<f64> = xs.iter().map(|e| num(e, "ts")).collect();
+    assert!(ts.windows(2).all(|w| w[0] <= w[1]), "X events sorted by ts: {ts:?}");
+
+    // rank -> pid, lane -> tid, phase -> name, step/tag -> args
+    for e in &xs {
+        let pid = num(e, "pid") as u32;
+        let tid = num(e, "tid") as u32;
+        assert!(pid <= 1, "pid is the rank");
+        if pid == 1 {
+            assert_eq!(tid, obs::LANE_MAIN, "rank 1 only recorded on main");
+        }
+        assert_eq!(num(e.at(&["args"]).unwrap(), "step") as u32, 3);
+    }
+    let comm: Vec<&&Value> = xs.iter().filter(|e| name(e) == "comm_sparse").collect();
+    assert_eq!(comm.len(), 2);
+    let tags: Vec<u32> =
+        comm.iter().map(|e| num(e.at(&["args"]).unwrap(), "tag") as u32).collect();
+    assert_eq!(tags, vec![0, 1], "bucket tags survive export");
+
+    // nesting: every rank-0 comm-lane span lies inside rank 0's step span
+    let step0 = xs
+        .iter()
+        .find(|e| name(e) == "step" && num(e, "pid") == 0.0)
+        .expect("rank 0 step span");
+    let (s0, s1) = (num(step0, "ts"), num(step0, "ts") + num(step0, "dur"));
+    for e in xs.iter().filter(|e| num(e, "pid") == 0.0 && num(e, "tid") > 0.0) {
+        let (t0, t1) = (num(e, "ts"), num(e, "ts") + num(e, "dur"));
+        assert!(s0 <= t0 && t1 <= s1, "{} [{t0},{t1}] outside step [{s0},{s1}]", name(e));
+    }
+    // and the two comm lanes genuinely overlap each other
+    let (a0, a1) = (num(comm[0], "ts"), num(comm[0], "ts") + num(comm[0], "dur"));
+    let (b0, b1) = (num(comm[1], "ts"), num(comm[1], "ts") + num(comm[1], "dur"));
+    assert!(a0 < b1 && b0 < a1, "comm lanes must overlap: [{a0},{a1}] vs [{b0},{b1}]");
+}
+
+#[test]
+fn guards_feed_registered_rings_end_to_end() {
+    obs::set_enabled(true);
+    // rank id 7: private to this test, so drain_rank cannot race other
+    // tests in this binary
+    let ring = obs::ring(7, obs::LANE_MAIN, 16);
+    {
+        let _g = ring.guard(obs::SPAN_COMPUTE, 5, 2);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    obs::set_enabled(false);
+    let lanes = obs::drain_rank(7);
+    assert_eq!(lanes.len(), 1);
+    assert_eq!(lanes[0].lane, obs::LANE_MAIN);
+    assert_eq!(lanes[0].spans.len(), 1);
+    let s = &lanes[0].spans[0];
+    assert_eq!((s.phase, s.step, s.tag), (obs::SPAN_COMPUTE, 5, 2));
+    assert!(s.t1_us > s.t0_us, "guard records a positive interval");
+    assert!(obs::drain_rank(7).is_empty(), "drain deregisters the ring");
+
+    // the drained guard span exports cleanly too
+    let doc = obs::chrome_trace(&[RankDump { rank: 7, lanes: vec![lanes[0].clone()] }]);
+    let events = doc.at(&["traceEvents"]).and_then(|v| v.as_arr()).unwrap();
+    assert!(events.iter().any(|e| name(e) == "compute"));
+}
