@@ -27,7 +27,11 @@
 //! network at all): pack + §5.4 apply for 8 ranks at density 0.01
 //! through the historical owned-decode walk vs the borrowed-view /
 //! pack-in-place walk, asserting bit-identical parameters and reporting
-//! the speedup.  CI runs this and uploads `BENCH_hotpath.json`.
+//! the speedup.  It then runs the scalar-vs-SIMD kernel A/B: the
+//! select→pack→apply chain through each runtime-detected backend
+//! (scalar / SSE2 / AVX2), pinning bit-parity against the scalar oracle
+//! and that no SIMD backend is slower than scalar.  CI runs this and
+//! uploads `BENCH_hotpath.json`.
 //!
 //! `--elastic-smoke [OUT.json]` kills rank 2 of a 4-rank loopback-TCP
 //! elastic run mid-training and records the recovery timeline —
@@ -48,6 +52,7 @@ use redsync::compression::message::{
     merge_plain, pack_plain, pack_plain_into, pack_quant, pack_quant_into, plain_words,
     unpack_plain, unpack_quant,
 };
+use redsync::compression::simd;
 use redsync::compression::{trimmed_topk, Accumulation, CompressorConfig, Method, QuantizedSet};
 use redsync::tensor::SparseTensor;
 use redsync::config::{preset, TrainConfig};
@@ -500,11 +505,95 @@ fn hotpath_smoke(json_path: Option<&str>) {
     );
     println!("zero-copy speedup on pack+apply: {speedup:.2}x, bit_identical: {bit_identical}");
 
+    // ---- scalar vs SIMD kernel A/B: select -> pack -> apply per backend
+    let n = 1 << 18;
+    let x = {
+        let mut rng = redsync::util::rng::Pcg32::seeded(0x51AD);
+        let mut v = vec![0f32; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    };
+    let k = ((n as f64 * HOT_DENSITY).ceil() as usize).max(1);
+    let thr = trimmed_topk(&x, k, 0.2, None).threshold;
+    let backends = simd::available();
+    println!(
+        "# kernel A/B: select+pack+apply, n={n}, thr={thr:.4}, active backend: {}",
+        simd::active().name()
+    );
+
+    // untimed parity pass: every backend's full chain, bit-for-bit
+    // against the scalar oracle
+    let chain = |b: simd::Backend| -> (SparseTensor, Vec<u32>, Vec<f32>) {
+        let mut sel = SparseTensor::default();
+        simd::compact_gt_abs(b, &x, thr, &mut sel);
+        let mut blob = Vec::new();
+        simd::extend_value_bits(b, &sel.values, &mut blob);
+        let mut dense = vec![0f32; n];
+        simd::scatter_add_bits(b, &sel.indices, &blob, &mut dense, scale);
+        (sel, blob, dense)
+    };
+    let (oracle_sel, oracle_blob, oracle_dense) = chain(simd::Backend::Scalar);
+    for &b in &backends {
+        let (sel, blob, dense) = chain(b);
+        assert_eq!(sel.indices, oracle_sel.indices, "{b:?} select diverged");
+        assert_eq!(blob, oracle_blob, "{b:?} pack diverged");
+        assert!(
+            dense.iter().zip(&oracle_dense).all(|(a, c)| a.to_bits() == c.to_bits()),
+            "{b:?} apply diverged from scalar oracle"
+        );
+    }
+
+    println!("{:>14} {:>12} {:>12} {:>10}", "backend", "median", "min", "vs scalar");
+    let mut backend_rows = Vec::new();
+    let mut scalar_median = 0.0f64;
+    for &b in &backends {
+        let mut sel = SparseTensor::default();
+        let mut blob: Vec<u32> = Vec::new();
+        let mut dense = vec![0f32; n];
+        let t = redsync::util::timer::bench(HOT_REPS, || {
+            let c = simd::count_gt_abs(b, &x, thr);
+            sel.clear();
+            simd::compact_gt_abs(b, &x, thr, &mut sel);
+            assert_eq!(c, sel.len(), "count/compact disagree on {b:?}");
+            blob.clear();
+            simd::extend_value_bits(b, &sel.values, &mut blob);
+            simd::scatter_add_bits(b, &sel.indices, &blob, &mut dense, scale);
+        });
+        if b == simd::Backend::Scalar {
+            scalar_median = t.median;
+        }
+        let vs_scalar = scalar_median / t.median;
+        println!(
+            "{:>14} {:>12} {:>12} {:>9.2}x",
+            b.name(),
+            redsync::util::timer::fmt_secs(t.median),
+            redsync::util::timer::fmt_secs(t.min),
+            vs_scalar
+        );
+        // acceptance: SIMD must never lose to scalar (5% jitter allowance)
+        assert!(
+            vs_scalar >= 0.95,
+            "{b:?} kernels slower than scalar ({vs_scalar:.2}x); \
+             set REDSYNC_NO_SIMD=1 to force scalar while triaging"
+        );
+        backend_rows.push(format!(
+            "{{\"backend\":\"{}\",\"median_secs\":{:.9},\"min_secs\":{:.9},\
+             \"speedup_vs_scalar\":{vs_scalar:.4}}}",
+            b.name(),
+            t.median,
+            t.min
+        ));
+    }
+
     let json = format!(
         "{{\"bench\":\"hotpath_smoke\",\"world\":{HOT_WORLD},\"density\":{HOT_DENSITY},\
          \"reps\":{HOT_REPS},\"owned_secs\":{:.9},\"view_secs\":{:.9},\
-         \"speedup\":{speedup:.4},\"bit_identical\":{bit_identical}}}",
-        owned.median, view.median
+         \"speedup\":{speedup:.4},\"bit_identical\":{bit_identical},\
+         \"simd_active\":\"{}\",\"backends\":[{}]}}",
+        owned.median,
+        view.median,
+        simd::active().name(),
+        backend_rows.join(",")
     );
     if let Some(path) = json_path {
         std::fs::write(path, format!("{json}\n")).expect("write bench json");

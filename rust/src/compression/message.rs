@@ -60,7 +60,9 @@ pub fn pack_plain_into(s: &SparseTensor, out: &mut Vec<u32>) {
     out.reserve(plain_words(s.len()));
     out.push(s.len() as u32);
     out.extend_from_slice(&s.indices);
-    out.extend(s.values.iter().map(|v| v.to_bits()));
+    // value section: `to_bits` per element == one bulk bit copy on the
+    // SIMD backends (bit-identical, NaN payloads and -0.0 included)
+    super::simd::extend_value_bits(super::simd::active(), &s.values, out);
 }
 
 /// Encode a quantized (indices + mean) message.

@@ -4,6 +4,8 @@
 //! * [`quant`]    — same-sign mean quantization (§5.2.3)
 //! * [`message`]  — single-message wire format `(len, idx…, val…)` (§5.3)
 //! * [`residual`] — residual store + momentum correction/masking (Alg. 4)
+//! * [`simd`]     — SSE2/AVX2 kernels for the select/pack/apply walks,
+//!   runtime-dispatched, scalar path as bit-identity oracle
 //!
 //! [`LayerCompressor`] ties them together as the per-layer pipeline the
 //! coordinator drives: accumulate → select → (quantize) → pack, plus the
@@ -14,6 +16,7 @@ pub mod message;
 pub mod quant;
 pub mod residual;
 pub mod select;
+pub mod simd;
 
 pub use quant::{QuantizedSet, SignAlternator};
 pub use residual::{Accumulation, ResidualState};

@@ -48,6 +48,12 @@ pub struct QuantizedSet {
 
 impl QuantizedSet {
     /// Quantize a (single-signed) selection: mean of its values.
+    ///
+    /// The sum deliberately stays scalar (`value_sum` is a sequential
+    /// fold): a lane-parallel reduction would reorder float accumulation
+    /// and break the cross-engine bit-identity pins on the wire mean.
+    /// The selection walk that *feeds* this (signed compaction) is the
+    /// SIMD-dispatched part (DESIGN.md §SIMD-Kernels).
     pub fn from_sparse(s: &SparseTensor) -> Self {
         let mean = if s.is_empty() { 0.0 } else { s.value_sum() / s.len() as f32 };
         QuantizedSet { indices: s.indices.clone(), mean }

@@ -18,6 +18,22 @@
 //! All selectors come in magnitude (`sign = None`) and signed
 //! (`sign = Some(±1.0)`) flavors; the signed ones power quantized RGC
 //! (§5.2.3) where the communication-set must be single-signed.
+//!
+//! # NaN policy
+//!
+//! A non-finite gradient must never abort the rank.  Selection orders
+//! keys with a *total* order in which **NaN sorts last and is never
+//! selected while finite candidates remain** (see [`cmp_keys_desc`]):
+//! rank-based selectors treat a NaN key as below every real key, and
+//! threshold compares are IEEE *ordered* `>` — a NaN key fails them.
+//! The SIMD kernels in [`crate::compression::simd`] use ordered vector
+//! compares (`_CMP_GT_OQ`) and therefore implement the identical
+//! semantics; the scalar path stays the bit-identity oracle.  The only
+//! NaN-selected case is the deliberate `k >= n` pass-through, which
+//! returns the whole layer verbatim.  Non-finite values also poison the
+//! `(mean, max)` statistics that Alg. 3's threshold interpolation needs,
+//! so degenerate stats (NaN/Inf mean or max, or an all-zero layer) fall
+//! back to the exact selector, which is well-defined for every input.
 
 use crate::tensor::{abs_mean_max, SparseTensor};
 
@@ -109,6 +125,26 @@ fn key_of(v: f32, sign: Option<f32>) -> f32 {
     }
 }
 
+/// Map a selection key into the total order used for ranking: NaN sorts
+/// below every real key (including -∞), so it is never selected while a
+/// finite candidate remains — the module-level NaN policy.
+#[inline]
+fn nan_last_key(v: f32) -> f32 {
+    if v.is_nan() {
+        f32::NEG_INFINITY
+    } else {
+        v
+    }
+}
+
+/// Descending total-order comparator on selection keys, NaN last.
+/// Every rank-based pass in this module sorts with this — a single
+/// NaN/Inf gradient element must never panic a `partial_cmp` unwrap.
+#[inline]
+fn cmp_keys_desc(a: &f32, b: &f32) -> std::cmp::Ordering {
+    nan_last_key(*b).total_cmp(&nan_last_key(*a))
+}
+
 fn compact(x: &[f32], thr: f32, sign: Option<f32>) -> SparseTensor {
     match sign {
         None => SparseTensor::compact_above(x, thr),
@@ -149,6 +185,17 @@ fn key_stats(x: &[f32], sign: Option<f32>) -> (f32, f32) {
 
 /// Strided sample of selection keys (§Perf) into a reused buffer.
 fn sample_keys_into(x: &[f32], stride: usize, sign: Option<f32>, keys: &mut Vec<f32>) {
+    if stride == 1 {
+        // dense sample: the abs/scaled key materialization vectorizes
+        // (resize on the warm scratch Vec allocates nothing steady-state)
+        let b = super::simd::active();
+        keys.resize(x.len(), 0.0);
+        match sign {
+            None => super::simd::abs_keys(b, x, keys),
+            Some(s) => super::simd::scaled_keys(b, x, s, keys),
+        }
+        return;
+    }
     keys.clear();
     match sign {
         None => keys.extend(x.iter().step_by(stride).map(|v| v.abs())),
@@ -178,10 +225,11 @@ fn sample_trim_threshold(
     if keys.is_empty() {
         return None;
     }
-    let rank = (2 * k / stride).min(keys.len() - 1);
-    let (_, kth, _) =
-        keys.select_nth_unstable_by(rank, |a, b| b.partial_cmp(a).unwrap());
+    let rank = (2usize.saturating_mul(k) / stride).min(keys.len() - 1);
+    let (_, kth, _) = keys.select_nth_unstable_by(rank, cmp_keys_desc);
     let thr = *kth;
+    // ordered compare: a NaN or non-positive quantile means the sample is
+    // degenerate — caller falls back to the exact selector
     (thr > 0.0).then_some(thr)
 }
 
@@ -222,11 +270,10 @@ fn exact_topk_core(
     }
     idx.clear();
     idx.extend(0..n as u32);
-    // descending by key: element k-1 is the kth largest after the call
+    // descending by key, NaN last: element k-1 is the kth largest real
+    // key after the call
     idx.select_nth_unstable_by(k - 1, |&a, &b| {
-        key_of(x[b as usize], sign)
-            .partial_cmp(&key_of(x[a as usize], sign))
-            .unwrap()
+        cmp_keys_desc(&key_of(x[a as usize], sign), &key_of(x[b as usize], sign))
     });
     let threshold = key_of(x[idx[k - 1] as usize], sign);
     idx[..k].sort_unstable();
@@ -360,9 +407,13 @@ pub fn threshold_binary_search_into(
         return thr;
     }
     let (mean, max) = key_stats(x, sign);
-    if max == 0.0 {
-        out.clear();
-        return 0.0;
+    if max <= 0.0 || !mean.is_finite() || !max.is_finite() {
+        // degenerate stats: an all-zero / wrong-signed layer (max == 0),
+        // or a non-finite gradient poisoning mean/max — the mean..max
+        // threshold interpolation is meaningless, so fall back to the
+        // exact selector, which is well-defined for every input (NaN
+        // keys last, see module docs)
+        return exact_topk_core(x, k, sign, idx, out);
     }
     // Fallback: J-way bisection — each counting pass probes `p.probes`
     // interior ratios at once, shrinking the bracket by (probes+1)x per
@@ -447,9 +498,9 @@ fn sample_guided_threshold(
     // top (2.4k/stride) sample keys, sorted descending: rank r in this
     // prefix estimates a threshold with ~r·stride true survivors
     let prefix = ((24 * k / stride) / 10 + 1).min(m - 1);
-    keys.select_nth_unstable_by(prefix, |a, b| b.partial_cmp(a).unwrap());
+    keys.select_nth_unstable_by(prefix, cmp_keys_desc);
     keys.truncate(prefix + 1);
-    keys.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    keys.sort_unstable_by(cmp_keys_desc);
     const J: usize = 8;
     let mut thrs = [0f32; J];
     let mut nt = 0;
@@ -458,7 +509,10 @@ fn sample_guided_threshold(
         let target = (1.1 + 0.8 * i as f64 / (J - 1) as f64) * k as f64;
         let r = ((target / stride as f64) as usize).min(keys.len() - 1);
         let t = keys[r];
-        if t <= 0.0 {
+        // the quantile can be NaN (NaN keys sort last, so a deep rank can
+        // reach them) — a NaN candidate threshold must stop the ladder
+        // exactly like a non-positive one
+        if t.is_nan() || t <= 0.0 {
             break;
         }
         if nt == 0 || thrs[nt - 1] != t {
@@ -491,28 +545,36 @@ impl CachedThresholdSelector {
         CachedThresholdSelector { interval, params, counter: 0, cached_thr: None }
     }
 
-    /// True if the next call will run a full binary search.
+    /// True if the next call will run a full binary search.  The cache
+    /// counts as cold when it holds no threshold *or* a non-finite one
+    /// (an exact-fallback sentinel such as ±∞, or NaN after a degenerate
+    /// step) — reusing those could never produce a k-sized set.
     pub fn will_search(&self) -> bool {
-        self.counter == 0 || self.cached_thr.is_none()
+        self.counter == 0 || !self.cached_thr.is_some_and(f32::is_finite)
     }
 
     pub fn select(&mut self, x: &[f32], k: usize, sign: Option<f32>) -> Selection {
-        let out = if self.will_search() {
-            let sel = threshold_binary_search(x, k, self.params, sign);
-            self.cached_thr = Some(sel.threshold);
-            sel
-        } else {
-            let thr = self.cached_thr.unwrap();
-            let sparse = compact(x, thr, sign);
-            if sparse.is_empty() || sparse.len() > 4 * k {
-                // distribution drifted under the cached threshold (the
-                // paper's "far more than expected" case): re-search
+        // no unwrap: a cold cache (None / non-finite, e.g. right after an
+        // elastic reshape reset) takes the search arm structurally
+        let reusable = if self.will_search() { None } else { self.cached_thr };
+        let out = match reusable {
+            Some(thr) => {
+                let sparse = compact(x, thr, sign);
+                if sparse.is_empty() || sparse.len() > 4 * k {
+                    // distribution drifted under the cached threshold (the
+                    // paper's "far more than expected" case): re-search
+                    let sel = threshold_binary_search(x, k, self.params, sign);
+                    self.cached_thr = Some(sel.threshold);
+                    self.counter = 0;
+                    sel
+                } else {
+                    Selection { sparse, threshold: thr }
+                }
+            }
+            None => {
                 let sel = threshold_binary_search(x, k, self.params, sign);
                 self.cached_thr = Some(sel.threshold);
-                self.counter = 0;
                 sel
-            } else {
-                Selection { sparse, threshold: thr }
             }
         };
         self.counter = (self.counter + 1) % self.interval;
@@ -540,7 +602,7 @@ mod tests {
 
     fn brute_topk_keys(x: &[f32], k: usize) -> Vec<f32> {
         let mut keys: Vec<f32> = x.iter().map(|v| v.abs()).collect();
-        keys.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        keys.sort_by(cmp_keys_desc);
         keys[..k.min(keys.len())].to_vec()
     }
 
@@ -550,7 +612,7 @@ mod tests {
         let k = 10;
         let sel = exact_topk(&x, k, None);
         let mut got: Vec<f32> = sel.sparse.values.iter().map(|v| v.abs()).collect();
-        got.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        got.sort_by(cmp_keys_desc);
         assert_eq!(got, brute_topk_keys(&x, k));
     }
 
@@ -592,8 +654,8 @@ mod tests {
         // same multiset of |values| (ties may swap indices)
         let mut ka: Vec<f32> = a.sparse.values.iter().map(|v| v.abs()).collect();
         let mut kb: Vec<f32> = b.sparse.values.iter().map(|v| v.abs()).collect();
-        ka.sort_by(|x, y| x.partial_cmp(y).unwrap());
-        kb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        ka.sort_by(f32::total_cmp);
+        kb.sort_by(f32::total_cmp);
         assert_eq!(ka, kb);
     }
 

@@ -1,0 +1,886 @@
+//! SIMD selection/quantization kernels — the compute half of the paper's
+//! Fig. 3 argument, vectorized.
+//!
+//! Top-k threshold selection is RedSync's compute hot spot: after the
+//! zero-copy PR the remaining per-step cost is the scalar walks over the
+//! residual (abs-key + threshold compare + compress-store), the
+//! `[len][idx…][bits…]` value packing, and the §5.4 scatter-add apply.
+//! This module owns `std::arch` SSE2/AVX2 implementations of exactly
+//! those walks behind runtime feature detection — zero new dependencies,
+//! `unsafe` confined to this file.
+//!
+//! **The scalar path is the bit-identity oracle.**  Every kernel exists
+//! in a scalar form and the SIMD forms are constructed to be
+//! bit-identical to it:
+//!
+//! * threshold compares are IEEE *ordered* `>` in both worlds (`v.abs() >
+//!   thr` scalar, `_CMP_GT_OQ` / `cmpgt` vector) — a NaN key never
+//!   qualifies on either path, which is also the selection NaN policy
+//!   (see `select.rs`);
+//! * `|x|` is a sign-bit mask on both paths (`f32::abs` is defined as
+//!   exactly that), and the signed key `x * sign` with `sign = ±1.0` is
+//!   the same single IEEE multiply;
+//! * survivors are copied verbatim (no arithmetic on the values), in
+//!   ascending index order on both paths;
+//! * the apply walk computes the per-element product `scale * v` lanewise
+//!   (IEEE multiply is lanewise-identical to scalar) and performs the
+//!   `dense[i] += …` additions strictly in message order, so float
+//!   summation order never changes;
+//! * value packing is a bit copy (`f32::to_bits` *is* the transmute).
+//!
+//! Quantization's mean (`Σ values / k`) deliberately stays scalar:
+//! a lane-parallel sum would change float accumulation order and break
+//! the cross-engine bit-identity pins.
+//!
+//! **Dispatch.**  [`Backend::detect`] picks the widest instruction set
+//! the host supports (`is_x86_feature_detected!`), demotable to scalar
+//! with the `REDSYNC_NO_SIMD=1` env knob (CI runs the suite both ways).
+//! [`active`] caches the decision process-wide; selectors and packers
+//! read it once at plan time and the worker records it in
+//! `TrainReport::simd_backend`.  Every kernel also takes an explicit
+//! [`Backend`] so tests and the `--hotpath-smoke` A/B can pin
+//! scalar-vs-SIMD parity and throughput side by side.
+
+use crate::tensor::SparseTensor;
+use std::sync::OnceLock;
+
+/// Instruction-set backend for the selection/pack/apply kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Portable scalar loops — the bit-identity oracle.
+    Scalar,
+    /// 4-lane `std::arch` x86-64 SSE2 (baseline on every x86-64).
+    Sse2,
+    /// 8-lane `std::arch` x86-64 AVX2.
+    Avx2,
+}
+
+static ACTIVE: OnceLock<Backend> = OnceLock::new();
+
+/// The process-wide backend, detected once on first use ("plan time"):
+/// the widest supported instruction set, unless `REDSYNC_NO_SIMD` is
+/// set to anything but `0`/empty.
+pub fn active() -> Backend {
+    *ACTIVE.get_or_init(Backend::detect)
+}
+
+impl Backend {
+    /// Runtime detection: scalar when `REDSYNC_NO_SIMD` forces it,
+    /// otherwise the widest feature set the CPU reports.
+    pub fn detect() -> Backend {
+        if scalar_forced() {
+            return Backend::Scalar;
+        }
+        Backend::widest_hardware()
+    }
+
+    /// The widest backend this CPU supports, ignoring the env knob.
+    pub fn widest_hardware() -> Backend {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return Backend::Avx2;
+            }
+            if std::arch::is_x86_feature_detected!("sse2") {
+                return Backend::Sse2;
+            }
+        }
+        Backend::Scalar
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Sse2 => "sse2",
+            Backend::Avx2 => "avx2",
+        }
+    }
+}
+
+fn scalar_forced() -> bool {
+    std::env::var("REDSYNC_NO_SIMD").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+/// Every backend this host can run, scalar first — what the parity
+/// tests and the `--hotpath-smoke` per-backend rows iterate over
+/// (independent of the env knob, so a scalar-forced run still *tests*
+/// the vector kernels it refuses to *use*).
+pub fn available() -> Vec<Backend> {
+    let mut v = vec![Backend::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("sse2") {
+            v.push(Backend::Sse2);
+        }
+        if std::arch::is_x86_feature_detected!("avx2") {
+            v.push(Backend::Avx2);
+        }
+    }
+    v
+}
+
+// ---------------------------------------------------------------------
+// Compress-store: threshold partition of a dense residual
+// ---------------------------------------------------------------------
+
+/// Append `(i, x[i])` for every `|x[i]| > thr` to `out`, ascending — the
+/// trimmed-threshold partition pass.  NaN keys never qualify (ordered
+/// compare) on any backend.
+pub fn compact_gt_abs(b: Backend, x: &[f32], thr: f32, out: &mut SparseTensor) {
+    match b {
+        Backend::Scalar => compact_gt_abs_scalar(x, thr, out),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Sse2 => unsafe { x86::compact_gt_abs_sse2(x, thr, out) },
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { x86::compact_gt_abs_avx2(x, thr, out) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => compact_gt_abs_scalar(x, thr, out),
+    }
+}
+
+/// Signed flavor for quantized RGC: keeps `x[i] * sign > thr`
+/// (`sign = ±1.0`), ascending.
+pub fn compact_gt_signed(b: Backend, x: &[f32], thr: f32, sign: f32, out: &mut SparseTensor) {
+    match b {
+        Backend::Scalar => compact_gt_signed_scalar(x, thr, sign, out),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Sse2 => unsafe { x86::compact_gt_signed_sse2(x, thr, sign, out) },
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { x86::compact_gt_signed_avx2(x, thr, sign, out) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => compact_gt_signed_scalar(x, thr, sign, out),
+    }
+}
+
+fn compact_gt_abs_scalar(x: &[f32], thr: f32, out: &mut SparseTensor) {
+    for (i, &v) in x.iter().enumerate() {
+        if v.abs() > thr {
+            out.push(i as u32, v);
+        }
+    }
+}
+
+fn compact_gt_signed_scalar(x: &[f32], thr: f32, sign: f32, out: &mut SparseTensor) {
+    for (i, &v) in x.iter().enumerate() {
+        if v * sign > thr {
+            out.push(i as u32, v);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Threshold counting (the Alg. 3 probe passes)
+// ---------------------------------------------------------------------
+
+/// `#{ i : |x[i]| > thr }` — exact on every backend (popcount of the
+/// compare mask).
+pub fn count_gt_abs(b: Backend, x: &[f32], thr: f32) -> usize {
+    match b {
+        Backend::Scalar => x.iter().filter(|v| v.abs() > thr).count(),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Sse2 => unsafe { x86::count_gt_abs_sse2(x, thr) },
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { x86::count_gt_abs_avx2(x, thr) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => x.iter().filter(|v| v.abs() > thr).count(),
+    }
+}
+
+/// `#{ i : x[i] * sign > thr }` for `sign = ±1.0`.
+pub fn count_gt_signed(b: Backend, x: &[f32], thr: f32, sign: f32) -> usize {
+    match b {
+        Backend::Scalar => x.iter().filter(|&&v| v * sign > thr).count(),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Sse2 => unsafe { x86::count_gt_signed_sse2(x, thr, sign) },
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { x86::count_gt_signed_avx2(x, thr, sign) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => x.iter().filter(|&&v| v * sign > thr).count(),
+    }
+}
+
+/// `#{ i : keys[i] > thr }` over pre-materialized keys (the blocked
+/// multi-threshold counting pass reuses one key tile for J thresholds).
+pub fn count_gt(b: Backend, keys: &[f32], thr: f32) -> usize {
+    match b {
+        Backend::Scalar => keys.iter().filter(|&&a| a > thr).count(),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Sse2 => unsafe { x86::count_gt_sse2(keys, thr) },
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { x86::count_gt_avx2(keys, thr) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => keys.iter().filter(|&&a| a > thr).count(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Key materialization (sampling / blocked counting tiles)
+// ---------------------------------------------------------------------
+
+/// `out[i] = |x[i]|` (slices must have equal length).
+pub fn abs_keys(b: Backend, x: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), out.len());
+    match b {
+        Backend::Scalar => {
+            for (o, &v) in out.iter_mut().zip(x) {
+                *o = v.abs();
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        Backend::Sse2 => unsafe { x86::abs_keys_sse2(x, out) },
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { x86::abs_keys_avx2(x, out) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => {
+            for (o, &v) in out.iter_mut().zip(x) {
+                *o = v.abs();
+            }
+        }
+    }
+}
+
+/// `out[i] = x[i] * sign` (slices must have equal length).
+pub fn scaled_keys(b: Backend, x: &[f32], sign: f32, out: &mut [f32]) {
+    assert_eq!(x.len(), out.len());
+    match b {
+        Backend::Scalar => {
+            for (o, &v) in out.iter_mut().zip(x) {
+                *o = v * sign;
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        Backend::Sse2 => unsafe { x86::scaled_keys_sse2(x, sign, out) },
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { x86::scaled_keys_avx2(x, sign, out) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => {
+            for (o, &v) in out.iter_mut().zip(x) {
+                *o = v * sign;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire packing: the [len][idx…][bits…] value section
+// ---------------------------------------------------------------------
+
+/// Append `v.to_bits()` for every value — the value section of a plain
+/// message.  `to_bits` is a transmute, so the vector form is one bulk
+/// bit copy; NaN payloads, -0.0 and denormals survive exactly on every
+/// backend.
+pub fn extend_value_bits(b: Backend, values: &[f32], out: &mut Vec<u32>) {
+    match b {
+        Backend::Scalar => out.extend(values.iter().map(|v| v.to_bits())),
+        // f32 and u32 share size and alignment; a bulk copy of the raw
+        // words is exactly per-element `to_bits`.
+        _ => out.extend_from_slice(f32_words(values)),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Apply: the §5.4 scatter-add decompression walk
+// ---------------------------------------------------------------------
+
+/// `dense[idx[i]] += scale * from_bits(bits[i])` in message order — the
+/// borrowed-view apply walk.  The products are computed lanewise (IEEE
+/// multiply is per-lane identical to scalar) and added strictly in
+/// ascending message order, so the result is bit-identical to the
+/// scalar walk.  Out-of-range indices panic on every backend (bounds
+/// checks are kept — malformed blobs must not scribble).
+pub fn scatter_add_bits(b: Backend, indices: &[u32], bits: &[u32], dense: &mut [f32], scale: f32) {
+    assert_eq!(indices.len(), bits.len());
+    match b {
+        Backend::Scalar => {
+            for (&i, &w) in indices.iter().zip(bits) {
+                dense[i as usize] += scale * f32::from_bits(w);
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        Backend::Sse2 => unsafe { x86::scatter_add_bits_sse2(indices, bits, dense, scale) },
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { x86::scatter_add_bits_avx2(indices, bits, dense, scale) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => {
+            for (&i, &w) in indices.iter().zip(bits) {
+                dense[i as usize] += scale * f32::from_bits(w);
+            }
+        }
+    }
+}
+
+/// Owned-tensor flavor of [`scatter_add_bits`]: `dense[idx[i]] +=
+/// scale * values[i]`, same ordering and bounds-check guarantees.
+pub fn scatter_add_values(
+    b: Backend,
+    indices: &[u32],
+    values: &[f32],
+    dense: &mut [f32],
+    scale: f32,
+) {
+    assert_eq!(indices.len(), values.len());
+    match b {
+        Backend::Scalar => {
+            for (&i, &v) in indices.iter().zip(values) {
+                dense[i as usize] += scale * v;
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        Backend::Sse2 => unsafe {
+            x86::scatter_add_bits_sse2(indices, f32_words(values), dense, scale)
+        },
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe {
+            x86::scatter_add_bits_avx2(indices, f32_words(values), dense, scale)
+        },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => {
+            for (&i, &v) in indices.iter().zip(values) {
+                dense[i as usize] += scale * v;
+            }
+        }
+    }
+}
+
+/// View an f32 slice as its raw u32 words (same size and alignment;
+/// the inverse of the wire's `from_bits` decode).
+fn f32_words(values: &[f32]) -> &[u32] {
+    unsafe { std::slice::from_raw_parts(values.as_ptr().cast::<u32>(), values.len()) }
+}
+
+// ---------------------------------------------------------------------
+// x86-64 kernels
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::SparseTensor;
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Requires AVX2 (the dispatcher checks at detection time).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn compact_gt_abs_avx2(x: &[f32], thr: f32, out: &mut SparseTensor) {
+        let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF));
+        let t = _mm256_set1_ps(thr);
+        let n = x.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            let m = _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_GT_OQ>(_mm256_and_ps(v, absmask), t));
+            push_lanes(x, i, m as u32, out);
+            i += 8;
+        }
+        for (j, &v) in x.iter().enumerate().skip(i) {
+            if v.abs() > thr {
+                out.push(j as u32, v);
+            }
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn compact_gt_signed_avx2(x: &[f32], thr: f32, sign: f32, out: &mut SparseTensor) {
+        let s = _mm256_set1_ps(sign);
+        let t = _mm256_set1_ps(thr);
+        let n = x.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            let m = _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_GT_OQ>(_mm256_mul_ps(v, s), t));
+            push_lanes(x, i, m as u32, out);
+            i += 8;
+        }
+        for (j, &v) in x.iter().enumerate().skip(i) {
+            if v * sign > thr {
+                out.push(j as u32, v);
+            }
+        }
+    }
+
+    /// # Safety
+    /// Requires SSE2.
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn compact_gt_abs_sse2(x: &[f32], thr: f32, out: &mut SparseTensor) {
+        let absmask = _mm_castsi128_ps(_mm_set1_epi32(0x7FFF_FFFF));
+        let t = _mm_set1_ps(thr);
+        let n = x.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            let v = _mm_loadu_ps(x.as_ptr().add(i));
+            let m = _mm_movemask_ps(_mm_cmpgt_ps(_mm_and_ps(v, absmask), t));
+            push_lanes(x, i, m as u32, out);
+            i += 4;
+        }
+        for (j, &v) in x.iter().enumerate().skip(i) {
+            if v.abs() > thr {
+                out.push(j as u32, v);
+            }
+        }
+    }
+
+    /// # Safety
+    /// Requires SSE2.
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn compact_gt_signed_sse2(x: &[f32], thr: f32, sign: f32, out: &mut SparseTensor) {
+        let s = _mm_set1_ps(sign);
+        let t = _mm_set1_ps(thr);
+        let n = x.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            let v = _mm_loadu_ps(x.as_ptr().add(i));
+            let m = _mm_movemask_ps(_mm_cmpgt_ps(_mm_mul_ps(v, s), t));
+            push_lanes(x, i, m as u32, out);
+            i += 4;
+        }
+        for (j, &v) in x.iter().enumerate().skip(i) {
+            if v * sign > thr {
+                out.push(j as u32, v);
+            }
+        }
+    }
+
+    /// Compress-store the survivors of one compare mask: walk the set
+    /// bits in lane order (= ascending index) and push verbatim values.
+    #[inline(always)]
+    fn push_lanes(x: &[f32], base: usize, mut mask: u32, out: &mut SparseTensor) {
+        while mask != 0 {
+            let l = mask.trailing_zeros() as usize;
+            out.push((base + l) as u32, x[base + l]);
+            mask &= mask - 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn count_gt_abs_avx2(x: &[f32], thr: f32) -> usize {
+        let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF));
+        let t = _mm256_set1_ps(thr);
+        let n = x.len();
+        let mut cnt = 0usize;
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            let m = _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_GT_OQ>(_mm256_and_ps(v, absmask), t));
+            cnt += (m as u32).count_ones() as usize;
+            i += 8;
+        }
+        cnt + x[i..].iter().filter(|v| v.abs() > thr).count()
+    }
+
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn count_gt_signed_avx2(x: &[f32], thr: f32, sign: f32) -> usize {
+        let s = _mm256_set1_ps(sign);
+        let t = _mm256_set1_ps(thr);
+        let n = x.len();
+        let mut cnt = 0usize;
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            let m = _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_GT_OQ>(_mm256_mul_ps(v, s), t));
+            cnt += (m as u32).count_ones() as usize;
+            i += 8;
+        }
+        cnt + x[i..].iter().filter(|&&v| v * sign > thr).count()
+    }
+
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn count_gt_avx2(keys: &[f32], thr: f32) -> usize {
+        let t = _mm256_set1_ps(thr);
+        let n = keys.len();
+        let mut cnt = 0usize;
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(keys.as_ptr().add(i));
+            let m = _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_GT_OQ>(v, t));
+            cnt += (m as u32).count_ones() as usize;
+            i += 8;
+        }
+        cnt + keys[i..].iter().filter(|&&a| a > thr).count()
+    }
+
+    /// # Safety
+    /// Requires SSE2.
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn count_gt_abs_sse2(x: &[f32], thr: f32) -> usize {
+        let absmask = _mm_castsi128_ps(_mm_set1_epi32(0x7FFF_FFFF));
+        let t = _mm_set1_ps(thr);
+        let n = x.len();
+        let mut cnt = 0usize;
+        let mut i = 0;
+        while i + 4 <= n {
+            let v = _mm_loadu_ps(x.as_ptr().add(i));
+            let m = _mm_movemask_ps(_mm_cmpgt_ps(_mm_and_ps(v, absmask), t));
+            cnt += (m as u32).count_ones() as usize;
+            i += 4;
+        }
+        cnt + x[i..].iter().filter(|v| v.abs() > thr).count()
+    }
+
+    /// # Safety
+    /// Requires SSE2.
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn count_gt_signed_sse2(x: &[f32], thr: f32, sign: f32) -> usize {
+        let s = _mm_set1_ps(sign);
+        let t = _mm_set1_ps(thr);
+        let n = x.len();
+        let mut cnt = 0usize;
+        let mut i = 0;
+        while i + 4 <= n {
+            let v = _mm_loadu_ps(x.as_ptr().add(i));
+            let m = _mm_movemask_ps(_mm_cmpgt_ps(_mm_mul_ps(v, s), t));
+            cnt += (m as u32).count_ones() as usize;
+            i += 4;
+        }
+        cnt + x[i..].iter().filter(|&&v| v * sign > thr).count()
+    }
+
+    /// # Safety
+    /// Requires SSE2.
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn count_gt_sse2(keys: &[f32], thr: f32) -> usize {
+        let t = _mm_set1_ps(thr);
+        let n = keys.len();
+        let mut cnt = 0usize;
+        let mut i = 0;
+        while i + 4 <= n {
+            let v = _mm_loadu_ps(keys.as_ptr().add(i));
+            let m = _mm_movemask_ps(_mm_cmpgt_ps(v, t));
+            cnt += (m as u32).count_ones() as usize;
+            i += 4;
+        }
+        cnt + keys[i..].iter().filter(|&&a| a > thr).count()
+    }
+
+    /// # Safety
+    /// Requires AVX2; `x.len() == out.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn abs_keys_avx2(x: &[f32], out: &mut [f32]) {
+        let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF));
+        let n = x.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_and_ps(v, absmask));
+            i += 8;
+        }
+        for (o, &v) in out[i..].iter_mut().zip(&x[i..]) {
+            *o = v.abs();
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2; `x.len() == out.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scaled_keys_avx2(x: &[f32], sign: f32, out: &mut [f32]) {
+        let s = _mm256_set1_ps(sign);
+        let n = x.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(v, s));
+            i += 8;
+        }
+        for (o, &v) in out[i..].iter_mut().zip(&x[i..]) {
+            *o = v * sign;
+        }
+    }
+
+    /// # Safety
+    /// Requires SSE2; `x.len() == out.len()`.
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn abs_keys_sse2(x: &[f32], out: &mut [f32]) {
+        let absmask = _mm_castsi128_ps(_mm_set1_epi32(0x7FFF_FFFF));
+        let n = x.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            let v = _mm_loadu_ps(x.as_ptr().add(i));
+            _mm_storeu_ps(out.as_mut_ptr().add(i), _mm_and_ps(v, absmask));
+            i += 4;
+        }
+        for (o, &v) in out[i..].iter_mut().zip(&x[i..]) {
+            *o = v.abs();
+        }
+    }
+
+    /// # Safety
+    /// Requires SSE2; `x.len() == out.len()`.
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn scaled_keys_sse2(x: &[f32], sign: f32, out: &mut [f32]) {
+        let s = _mm_set1_ps(sign);
+        let n = x.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            let v = _mm_loadu_ps(x.as_ptr().add(i));
+            _mm_storeu_ps(out.as_mut_ptr().add(i), _mm_mul_ps(v, s));
+            i += 4;
+        }
+        for (o, &v) in out[i..].iter_mut().zip(&x[i..]) {
+            *o = v * sign;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2; `indices.len() == bits.len()`.  Dense indexing
+    /// stays bounds-checked (panics on out-of-range, like scalar).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scatter_add_bits_avx2(
+        indices: &[u32],
+        bits: &[u32],
+        dense: &mut [f32],
+        scale: f32,
+    ) {
+        let s = _mm256_set1_ps(scale);
+        let mut prod = [0f32; 8];
+        let n = indices.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            // the wire words ARE f32 bit patterns: a vector load of the
+            // u32 slice is `from_bits` on every lane
+            let v = _mm256_loadu_ps(bits.as_ptr().add(i).cast::<f32>());
+            _mm256_storeu_ps(prod.as_mut_ptr(), _mm256_mul_ps(v, s));
+            for (l, &p) in prod.iter().enumerate() {
+                dense[indices[i + l] as usize] += p;
+            }
+            i += 8;
+        }
+        for (&ix, &w) in indices[i..].iter().zip(&bits[i..]) {
+            dense[ix as usize] += scale * f32::from_bits(w);
+        }
+    }
+
+    /// # Safety
+    /// Requires SSE2; `indices.len() == bits.len()`.
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn scatter_add_bits_sse2(
+        indices: &[u32],
+        bits: &[u32],
+        dense: &mut [f32],
+        scale: f32,
+    ) {
+        let s = _mm_set1_ps(scale);
+        let mut prod = [0f32; 4];
+        let n = indices.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            let v = _mm_loadu_ps(bits.as_ptr().add(i).cast::<f32>());
+            _mm_storeu_ps(prod.as_mut_ptr(), _mm_mul_ps(v, s));
+            for (l, &p) in prod.iter().enumerate() {
+                dense[indices[i + l] as usize] += p;
+            }
+            i += 4;
+        }
+        for (&ix, &w) in indices[i..].iter().zip(&bits[i..]) {
+            dense[ix as usize] += scale * f32::from_bits(w);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// Random data salted with every special the wire can carry.
+    fn specials(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Pcg32::seeded(seed);
+        let mut v = vec![0f32; n];
+        r.fill_normal(&mut v, 1.0);
+        let salt = [
+            f32::NAN,
+            -f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            -0.0,
+            0.0,
+            f32::MIN_POSITIVE,
+            -f32::MIN_POSITIVE,
+            1e-42, // denormal
+            f32::MAX,
+            f32::MIN,
+        ];
+        for (k, &s) in salt.iter().enumerate() {
+            let at = (k * 37 + 5) % n.max(1);
+            v[at] = s;
+        }
+        v
+    }
+
+    fn eq_bits(a: &SparseTensor, b: &SparseTensor) -> bool {
+        a.indices == b.indices
+            && a.values.len() == b.values.len()
+            && a.values.iter().zip(&b.values).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn backend_detect_and_names() {
+        let b = Backend::detect();
+        assert!(!b.name().is_empty());
+        let avail = available();
+        assert_eq!(avail[0], Backend::Scalar);
+        // the active backend is always runnable here
+        assert!(available().contains(&active()) || active() == Backend::Scalar);
+    }
+
+    #[test]
+    fn env_knob_forces_scalar() {
+        // detect() (not active(): the cache must stay untouched) honors
+        // the knob both ways
+        std::env::set_var("REDSYNC_NO_SIMD", "1");
+        assert_eq!(Backend::detect(), Backend::Scalar);
+        std::env::set_var("REDSYNC_NO_SIMD", "0");
+        assert_eq!(Backend::detect(), Backend::widest_hardware());
+        std::env::remove_var("REDSYNC_NO_SIMD");
+        assert_eq!(Backend::detect(), Backend::widest_hardware());
+    }
+
+    #[test]
+    fn compact_parity_all_backends() {
+        for seed in 0..6u64 {
+            let x = specials(257 + seed as usize * 13, seed);
+            for thr in [0.0f32, 0.5, -1.0, f32::NAN, f32::INFINITY] {
+                let mut oracle = SparseTensor::default();
+                compact_gt_abs(Backend::Scalar, &x, thr, &mut oracle);
+                // NaN values never qualify under an ordered compare
+                assert!(oracle.values.iter().all(|v| !v.is_nan()));
+                for &b in &available() {
+                    let mut got = SparseTensor::default();
+                    compact_gt_abs(b, &x, thr, &mut got);
+                    assert!(eq_bits(&oracle, &got), "abs backend {b:?} thr {thr}");
+                }
+                for sign in [1.0f32, -1.0] {
+                    let mut oracle = SparseTensor::default();
+                    compact_gt_signed(Backend::Scalar, &x, thr, sign, &mut oracle);
+                    for &b in &available() {
+                        let mut got = SparseTensor::default();
+                        compact_gt_signed(b, &x, thr, sign, &mut got);
+                        assert!(eq_bits(&oracle, &got), "signed backend {b:?} thr {thr}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn count_parity_all_backends() {
+        for seed in 0..6u64 {
+            let x = specials(511 + seed as usize * 7, 100 + seed);
+            for thr in [0.0f32, 0.3, 2.0, f32::NAN] {
+                let want_abs = count_gt_abs(Backend::Scalar, &x, thr);
+                let want_plain = count_gt(Backend::Scalar, &x, thr);
+                for &b in &available() {
+                    assert_eq!(count_gt_abs(b, &x, thr), want_abs, "{b:?} abs thr {thr}");
+                    assert_eq!(count_gt(b, &x, thr), want_plain, "{b:?} plain thr {thr}");
+                    for sign in [1.0f32, -1.0] {
+                        assert_eq!(
+                            count_gt_signed(b, &x, thr, sign),
+                            count_gt_signed(Backend::Scalar, &x, thr, sign),
+                            "{b:?} signed thr {thr}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn keys_parity_all_backends() {
+        let x = specials(301, 7);
+        let mut oracle = vec![0f32; x.len()];
+        abs_keys(Backend::Scalar, &x, &mut oracle);
+        for &b in &available() {
+            let mut got = vec![0f32; x.len()];
+            abs_keys(b, &x, &mut got);
+            assert!(
+                oracle.iter().zip(&got).all(|(a, c)| a.to_bits() == c.to_bits()),
+                "abs keys {b:?}"
+            );
+            for sign in [1.0f32, -1.0] {
+                let mut want = vec![0f32; x.len()];
+                scaled_keys(Backend::Scalar, &x, sign, &mut want);
+                let mut got = vec![0f32; x.len()];
+                scaled_keys(b, &x, sign, &mut got);
+                assert!(
+                    want.iter().zip(&got).all(|(a, c)| a.to_bits() == c.to_bits()),
+                    "scaled keys {b:?} sign {sign}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn value_bits_parity_all_backends() {
+        let x = specials(101, 9);
+        let mut oracle = vec![0xFEEDu32];
+        extend_value_bits(Backend::Scalar, &x, &mut oracle);
+        assert_eq!(oracle.len(), 1 + x.len());
+        for &b in &available() {
+            let mut got = vec![0xFEEDu32];
+            extend_value_bits(b, &x, &mut got);
+            assert_eq!(oracle, got, "value bits {b:?}");
+        }
+    }
+
+    #[test]
+    fn scatter_parity_all_backends() {
+        let mut r = Pcg32::seeded(11);
+        let vals = specials(97, 13);
+        let dim = 200usize;
+        // ascending unique indices, like every wire message
+        let mut indices: Vec<u32> = Vec::new();
+        let mut at = 0u32;
+        for _ in 0..vals.len() {
+            at += 1 + (r.next_u32() % 2);
+            indices.push(at % dim as u32);
+        }
+        indices.sort_unstable();
+        indices.dedup();
+        let vals = &vals[..indices.len()];
+        let bits: Vec<u32> = vals.iter().map(|v| v.to_bits()).collect();
+        let mut init = vec![0f32; dim];
+        r.fill_normal(&mut init, 0.5);
+        for scale in [1.0f32, -0.125, 0.3] {
+            let mut oracle = init.clone();
+            scatter_add_bits(Backend::Scalar, &indices, &bits, &mut oracle, scale);
+            for &b in &available() {
+                let mut got = init.clone();
+                scatter_add_bits(b, &indices, &bits, &mut got, scale);
+                assert!(
+                    oracle.iter().zip(&got).all(|(a, c)| a.to_bits() == c.to_bits()),
+                    "scatter bits {b:?} scale {scale}"
+                );
+                let mut got = init.clone();
+                scatter_add_values(b, &indices, vals, &mut got, scale);
+                assert!(
+                    oracle.iter().zip(&got).all(|(a, c)| a.to_bits() == c.to_bits()),
+                    "scatter values {b:?} scale {scale}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        for &b in &available() {
+            let mut out = SparseTensor::default();
+            compact_gt_abs(b, &[], 0.0, &mut out);
+            assert!(out.is_empty());
+            compact_gt_abs(b, &[2.0], 1.0, &mut out);
+            assert_eq!(out.indices, [0]);
+            assert_eq!(count_gt_abs(b, &[], 1.0), 0);
+            assert_eq!(count_gt_abs(b, &[1.5], 1.0), 1);
+            let mut dense = [0f32; 1];
+            scatter_add_bits(b, &[0], &[1.0f32.to_bits()], &mut dense, 2.0);
+            assert_eq!(dense[0], 2.0);
+            let mut packed = Vec::new();
+            extend_value_bits(b, &[], &mut packed);
+            assert!(packed.is_empty());
+        }
+    }
+}

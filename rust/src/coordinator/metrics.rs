@@ -105,6 +105,10 @@ pub struct WorkerResult {
     /// Straggler skew: slowest rank's mean step latency over the
     /// fastest's (1.0 = perfectly even, 0.0 = unmeasured).
     pub rank_skew: f64,
+    /// The select/pack/apply kernel backend this worker dispatched to
+    /// ("scalar" / "sse2" / "avx2"), picked once at plan time
+    /// (DESIGN.md §SIMD-Kernels).
+    pub simd_backend: &'static str,
 }
 
 /// FNV-1a over f32 bit patterns.
@@ -165,6 +169,9 @@ pub struct TrainReport {
     /// Straggler skew: max/min of per-rank mean step latency
     /// (1.0 = even, 0.0 = unmeasured).
     pub rank_skew: f64,
+    /// Hot-path kernel backend the workers ran ("scalar" / "sse2" /
+    /// "avx2") — summary-only, deliberately NOT a CSV column.
+    pub simd_backend: &'static str,
 }
 
 impl TrainReport {
@@ -215,6 +222,9 @@ impl TrainReport {
             self.messages,
             self.replicas_consistent
         );
+        if !self.simd_backend.is_empty() {
+            let _ = writeln!(s, "  hot-path kernels: {}", self.simd_backend);
+        }
         let mut parts: Vec<String> = Vec::new();
         for &p in phase::ALL {
             let t = self.phases.total(p);
@@ -327,6 +337,7 @@ mod tests {
             step_p50_us: 1500,
             step_p99_us: 4000,
             rank_skew: 1.25,
+            simd_backend: "avx2",
         };
         assert!((r.phase_fraction(phase::COMPUTE) - 0.75).abs() < 1e-12);
         assert_eq!(r.bytes_per_step_per_rank(), 4096.0 / 20.0);
@@ -337,6 +348,7 @@ mod tests {
         assert!(s.contains("lost [2] -> 3 ranks"), "{s}");
         assert!(s.contains("elastic status: evicted"), "{s}");
         assert!(s.contains("cluster step latency"), "{s}");
+        assert!(s.contains("hot-path kernels: avx2"), "{s}");
         // csv row tracks the header column-for-column
         let row = r.csv_row();
         assert_eq!(

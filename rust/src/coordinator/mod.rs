@@ -141,6 +141,7 @@ impl Trainer {
             step_p50_us: rank0.step_p50_us,
             step_p99_us: rank0.step_p99_us,
             rank_skew: rank0.rank_skew,
+            simd_backend: rank0.simd_backend,
         })
     }
 
@@ -228,6 +229,7 @@ impl Trainer {
             step_p50_us: 0,
             step_p99_us: 0,
             rank_skew: 0.0,
+            simd_backend: crate::compression::simd::active().name(),
         })
     }
 }
@@ -284,6 +286,7 @@ impl Trainer {
             step_p50_us: result.step_p50_us,
             step_p99_us: result.step_p99_us,
             rank_skew: result.rank_skew,
+            simd_backend: result.simd_backend,
         })
     }
 
@@ -337,6 +340,7 @@ impl Trainer {
             step_p50_us: 0,
             step_p99_us: 0,
             rank_skew: 0.0,
+            simd_backend: result.simd_backend,
         })
     }
 }

@@ -554,6 +554,7 @@ pub fn run_worker<T: Transport + Sync>(
         step_p50_us,
         step_p99_us,
         rank_skew,
+        simd_backend: crate::compression::simd::active().name(),
     })
 }
 
@@ -708,6 +709,7 @@ pub fn worker_result_from(rank: usize, o: &RankOutcome) -> WorkerResult {
         step_p50_us: 0,
         step_p99_us: 0,
         rank_skew: 0.0,
+        simd_backend: crate::compression::simd::active().name(),
     }
 }
 

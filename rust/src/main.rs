@@ -56,7 +56,9 @@ SUBCOMMANDS:
   info       list models, artifacts and machine presets
 
 ENVIRONMENT:
-  REDSYNC_LOG   log verbosity: error|warn|info|debug|trace (default info)
+  REDSYNC_LOG       log verbosity: error|warn|info|debug|trace (default info)
+  REDSYNC_NO_SIMD   set to 1 to force the scalar select/pack/apply kernels
+                    (bit-identical to SSE2/AVX2; for debugging and A/B runs)
 
 Presets for train: {}",
         preset_names().join(", ")

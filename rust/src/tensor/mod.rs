@@ -8,6 +8,8 @@ pub mod sparse;
 
 pub use sparse::{SparseTensor, SparseView};
 
+use crate::compression::simd;
+
 /// Dense f32 tensor.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
@@ -145,14 +147,15 @@ pub fn abs_mean_max(x: &[f32]) -> (f32, f32) {
     ((sum / x.len() as f64) as f32, max)
 }
 
-/// Count of |x| strictly above `thr` — host mirror of `threshold_count`.
+/// Count of |x| strictly above `thr` — host mirror of `threshold_count`,
+/// dispatched through the active SIMD backend (mask popcount; exact).
 pub fn count_above(x: &[f32], thr: f32) -> usize {
-    x.iter().filter(|v| v.abs() > thr).count()
+    simd::count_gt_abs(simd::active(), x, thr)
 }
 
 /// Signed variant for quantized selection: counts x*sign > thr.
 pub fn count_above_signed(x: &[f32], thr: f32, sign: f32) -> usize {
-    x.iter().filter(|&&v| v * sign > thr).count()
+    simd::count_gt_signed(simd::active(), x, thr, sign)
 }
 
 /// L1-cache chunk size (elements) for the blocked streaming kernels —
@@ -185,11 +188,12 @@ pub fn count_above_multi_into(x: &[f32], thrs: &[f32], sign: Option<f32>, counts
         return;
     }
     counts.resize(j, 0);
+    let b = simd::active();
     match sign {
         None => {
             for chunk in x.chunks(CHUNK) {
                 for (c, &t) in counts.iter_mut().zip(thrs) {
-                    *c += chunk.iter().filter(|&&v| v.abs() > t).count();
+                    *c += simd::count_gt_abs(b, chunk, t);
                 }
             }
         }
@@ -197,11 +201,9 @@ pub fn count_above_multi_into(x: &[f32], thrs: &[f32], sign: Option<f32>, counts
             let mut keys = [0f32; CHUNK];
             for chunk in x.chunks(CHUNK) {
                 let m = chunk.len();
-                for (kk, &v) in keys[..m].iter_mut().zip(chunk) {
-                    *kk = v * s;
-                }
+                simd::scaled_keys(b, chunk, s, &mut keys[..m]);
                 for (c, &t) in counts.iter_mut().zip(thrs) {
-                    *c += keys[..m].iter().filter(|&&a| a > t).count();
+                    *c += simd::count_gt(b, &keys[..m], t);
                 }
             }
         }

@@ -10,6 +10,13 @@
 //! indices as a slice of the blob, values decoded via `f32::from_bits`
 //! on the fly — so the decompression walk never copies p·k words per
 //! bucket onto the heap (DESIGN.md §Zero-Copy-Hot-Path).
+//!
+//! The compaction and scatter walks are dispatched through the
+//! [`crate::compression::simd`] kernels (DESIGN.md §SIMD-Kernels): the
+//! active backend's output is pinned bit-identical to the scalar loops
+//! these methods used to be.
+
+use crate::compression::simd;
 
 /// Compressed communication-set: sorted-by-extraction indices + values.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -53,11 +60,10 @@ impl<'a> SparseView<'a> {
 
     /// dense[idx] += scale * val straight off the wire words — float-op
     /// for float-op identical to `SparseTensor::scatter_add` on the
-    /// decoded copy (the bit-identity pins rest on this).
+    /// decoded copy (the bit-identity pins rest on this).  The §5.4
+    /// apply walk behind `BucketDone::apply_to`, vectorized.
     pub fn scatter_add(&self, dense: &mut [f32], scale: f32) {
-        for (&i, &b) in self.indices.iter().zip(self.value_bits) {
-            dense[i as usize] += scale * f32::from_bits(b);
-        }
+        simd::scatter_add_bits(simd::active(), self.indices, self.value_bits, dense, scale);
     }
 
     /// Materialize an owned copy (compat / diagnostics — not the hot path).
@@ -104,13 +110,12 @@ impl SparseTensor {
 
     /// [`compact_above`](Self::compact_above) into a reused buffer
     /// (cleared first) — the allocation-free steady-state form.
+    /// Vectorized via the active [`crate::compression::simd`] backend
+    /// (bit-identical to the scalar walk; NaN never passes the ordered
+    /// compare on either path).
     pub fn compact_above_into(dense: &[f32], thr: f32, out: &mut SparseTensor) {
         out.clear();
-        for (i, &v) in dense.iter().enumerate() {
-            if v.abs() > thr {
-                out.push(i as u32, v);
-            }
-        }
+        simd::compact_gt_abs(simd::active(), dense, thr, out);
     }
 
     /// Signed compaction for quantized selection: keeps v*sign > thr.
@@ -123,11 +128,7 @@ impl SparseTensor {
     /// Signed compaction into a reused buffer (cleared first).
     pub fn compact_above_signed_into(dense: &[f32], thr: f32, sign: f32, out: &mut SparseTensor) {
         out.clear();
-        for (i, &v) in dense.iter().enumerate() {
-            if v * sign > thr {
-                out.push(i as u32, v);
-            }
-        }
+        simd::compact_gt_signed(simd::active(), dense, thr, sign, out);
     }
 
     /// Extract elements where mask > 0.5 (device-produced masks).
@@ -143,10 +144,10 @@ impl SparseTensor {
     }
 
     /// dense[idx] += scale * val for every element (the `axpyi` of §5.4).
+    /// Vectorized products, scalar-ordered adds — bit-identical to the
+    /// plain loop; out-of-range indices still panic.
     pub fn scatter_add(&self, dense: &mut [f32], scale: f32) {
-        for (&i, &v) in self.indices.iter().zip(&self.values) {
-            dense[i as usize] += scale * v;
-        }
+        simd::scatter_add_values(simd::active(), &self.indices, &self.values, dense, scale);
     }
 
     /// Zero out `dense` at this tensor's indices (momentum factor masking).
