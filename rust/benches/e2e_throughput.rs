@@ -45,9 +45,16 @@
 //! selects/packs), and a short elastic kill leg whose detect/reshape
 //! spans must land.  Writes `trace_obs.json` (Chrome/Perfetto) next to
 //! `BENCH_obs.json`; CI uploads both.
+//!
+//! `--fabric-smoke [OUT.json]` is the link-class A/B: the pipelined
+//! engine's small-frame storm over loopback TCP frame-per-write vs TCP
+//! batched `writev` vs Unix sockets — bit-identical parameters,
+//! identical socket frames, strictly fewer write syscalls when batching
+//! — plus a bulk-push leg pinning Unix intra-node throughput against
+//! loopback TCP.  CI runs this and uploads `BENCH_fabric.json`.
 
 use redsync::collectives::mux::TagMux;
-use redsync::collectives::{Algo, Gathered, Topology, Transport};
+use redsync::collectives::{Algo, Gathered, LinkClass, Topology, Transport};
 use redsync::compression::message::{
     merge_plain, pack_plain, pack_plain_into, pack_quant, pack_quant_into, plain_words,
     unpack_plain, unpack_quant,
@@ -58,7 +65,9 @@ use redsync::tensor::SparseTensor;
 use redsync::config::{preset, TrainConfig};
 use redsync::coordinator::metrics::{param_hash, phase};
 use redsync::coordinator::train;
-use redsync::net::{free_loopback_addr, TcpOptions, TcpTransport};
+use redsync::net::{
+    free_loopback_addr, LinkClassStats, TcpOptions, TcpTransport, UnixOptions, UnixTransport,
+};
 use redsync::pipeline::{
     build_buckets, BucketDone, LayerSpec, Pipelined, Sequential, SyncEngine, BUCKET_TAG_BASE,
 };
@@ -817,6 +826,200 @@ fn obs_smoke(json_path: Option<&str>) {
     println!("{json}");
 }
 
+// ---------------------------------------------------------------------
+// Fabric A/B: frame-per-write vs batched writev, loopback TCP vs Unix
+// ---------------------------------------------------------------------
+
+const BULK_FRAME_WORDS: usize = 1 << 18; // 1 MiB of payload per frame
+const BULK_FRAMES: usize = 48;
+
+/// Unique Unix-socket namespace per leg, so a leg never trips over the
+/// previous one's rendezvous file.
+fn bench_ns(tag: &str) -> String {
+    format!("/tmp/rs-bench-fab-{}-{tag}", std::process::id())
+}
+
+/// Loopback TCP mesh with an explicit write-batching setting.
+fn tcp_fabric_batched(world: usize, batch: bool) -> Vec<TcpTransport> {
+    let addr = free_loopback_addr();
+    let handles: Vec<_> = (0..world)
+        .map(|rank| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                let mut opts = TcpOptions::new(world, rank, addr);
+                opts.batch = batch;
+                TcpTransport::connect(&opts).expect("tcp bootstrap")
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Same-host Unix-socket mesh, batched writes on.
+fn unix_fabric(world: usize, ns: &str) -> Vec<UnixTransport> {
+    let handles: Vec<_> = (0..world)
+        .map(|rank| {
+            let ns = ns.to_string();
+            thread::spawn(move || {
+                let mut opts = UnixOptions::new(world, rank, ns);
+                opts.batch = true;
+                UnixTransport::connect(&opts).expect("unix bootstrap")
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Run the pipelined smoke schedule on every rank of `transports`;
+/// returns (wall secs, per-rank hashes, socket frames, write syscalls).
+/// The transports drop inside the rank threads (writers joined), so the
+/// syscall counts read from `link_stats` afterwards are final.
+fn fabric_engine_run<T: Transport + Send + 'static>(
+    transports: Vec<T>,
+    link_stats: Vec<Arc<LinkClassStats>>,
+) -> (f64, Vec<u64>, u64, u64) {
+    let cc = CompressorConfig { density: SMOKE_DENSITY, ..Default::default() };
+    let acc = smoke_acc();
+    let start = Instant::now();
+    let handles: Vec<_> = transports
+        .into_iter()
+        .map(|t| {
+            thread::spawn(move || {
+                let (rank, world) = (t.rank(), t.world());
+                let buckets = build_buckets(&smoke_specs(), SMOKE_FUSION_CAP, acc);
+                let n = buckets.len() as u32;
+                let mux = Arc::new(TagMux::new(t, BUCKET_TAG_BASE + n));
+                let mut engine = Pipelined::new(mux, buckets, SMOKE_INFLIGHT, cc);
+                smoke_steps(&mut engine, rank, world)
+            })
+        })
+        .collect();
+    let hashes: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let secs = start.elapsed().as_secs_f64();
+    let socket: Vec<_> = link_stats
+        .iter()
+        .flat_map(|s| s.snapshot())
+        .filter(|l| l.class != LinkClass::Mem)
+        .collect();
+    let frames: u64 = socket.iter().map(|l| l.frames).sum();
+    let writes: u64 = socket.iter().map(|l| l.writes).sum();
+    (secs, hashes, frames, writes)
+}
+
+/// Push [`BULK_FRAMES`] 1-MiB frames rank 0 -> rank 1 and wait for the
+/// ack; returns elapsed seconds.
+fn bulk_push_secs<T: Transport + Send + 'static>(pair: Vec<T>) -> f64 {
+    let mut it = pair.into_iter();
+    let t0 = it.next().expect("rank 0");
+    let t1 = it.next().expect("rank 1");
+    let start = Instant::now();
+    let h = thread::spawn(move || {
+        let msg = Arc::new((0..BULK_FRAME_WORDS as u32).collect::<Vec<u32>>());
+        for _ in 0..BULK_FRAMES {
+            t0.send_shared(1, &msg);
+        }
+        t0.recv(1)
+    });
+    for i in 0..BULK_FRAMES {
+        assert_eq!(t1.recv(0).len(), BULK_FRAME_WORDS, "bulk frame {i} truncated");
+    }
+    t1.send(0, vec![1]);
+    assert_eq!(h.join().unwrap(), vec![1]);
+    start.elapsed().as_secs_f64()
+}
+
+/// The fabric A/B (acceptance for the link-class fabrics): same
+/// pipelined schedule, three wire setups, bit-identical parameters and
+/// identical socket frames — only the syscall count and the wall clock
+/// may move.
+fn fabric_smoke(json_path: Option<&str>) {
+    println!(
+        "# fabric A/B: {SMOKE_WORLD} ranks x {SMOKE_STEPS} steps pipelined, \
+         tcp frame-per-write vs tcp batched vs unix batched"
+    );
+    let run_tcp = |batch: bool| {
+        let ts = tcp_fabric_batched(SMOKE_WORLD, batch);
+        let ls: Vec<_> = ts.iter().map(|t| t.link_stats()).collect();
+        fabric_engine_run(ts, ls)
+    };
+    let run_unix = |tag: &str| {
+        let ts = unix_fabric(SMOKE_WORLD, &bench_ns(tag));
+        let ls: Vec<_> = ts.iter().map(|t| t.link_stats()).collect();
+        fabric_engine_run(ts, ls)
+    };
+    let _ = run_tcp(true); // warm-up
+    let (plain_secs, plain_hashes, plain_frames, plain_writes) = run_tcp(false);
+    let (batch_secs, batch_hashes, batch_frames, batch_writes) = run_tcp(true);
+    let (unix_secs, unix_hashes, unix_frames, unix_writes) = run_unix("engine");
+
+    let consistent = [&plain_hashes, &batch_hashes, &unix_hashes]
+        .iter()
+        .all(|h| h.iter().all(|&x| x == h[0]));
+    let bit_identical =
+        consistent && plain_hashes[0] == batch_hashes[0] && batch_hashes[0] == unix_hashes[0];
+    assert!(bit_identical, "fabrics must stay bit-identical (see tests/fabric.rs)");
+    assert_eq!(plain_frames, batch_frames, "batching must never move frame boundaries");
+    assert_eq!(plain_frames, unix_frames, "the unix fabric must ship the same frames");
+    assert_eq!(plain_writes, plain_frames, "frame-per-write is exactly one syscall per frame");
+    assert!(
+        batch_writes < plain_writes,
+        "batched writev must take strictly fewer syscalls ({batch_writes} vs {plain_writes})"
+    );
+    assert!(
+        unix_writes < plain_writes,
+        "unix batched writes must take strictly fewer syscalls ({unix_writes} vs {plain_writes})"
+    );
+
+    let fpw = |frames: u64, writes: u64| frames as f64 / writes.max(1) as f64;
+    println!(
+        "{:>16} {:>10} {:>10} {:>10} {:>13}",
+        "fabric", "wall(s)", "frames", "writes", "frames/write"
+    );
+    for (label, secs, frames, writes) in [
+        ("tcp frame/write", plain_secs, plain_frames, plain_writes),
+        ("tcp batched", batch_secs, batch_frames, batch_writes),
+        ("unix batched", unix_secs, unix_frames, unix_writes),
+    ] {
+        println!(
+            "{label:>16} {secs:>10.3} {frames:>10} {writes:>10} {:>13.2}",
+            fpw(frames, writes)
+        );
+    }
+
+    // bulk push: the raw bandwidth question, min of 3 to damp scheduler
+    // noise on shared CI hosts
+    let mut tcp_bulk = f64::MAX;
+    let mut unix_bulk = f64::MAX;
+    for rep in 0..3 {
+        tcp_bulk = tcp_bulk.min(bulk_push_secs(tcp_fabric_batched(2, true)));
+        let ns = bench_ns(&format!("bulk{rep}"));
+        unix_bulk = unix_bulk.min(bulk_push_secs(unix_fabric(2, &ns)));
+    }
+    let mb = (BULK_FRAMES * BULK_FRAME_WORDS * 4) as f64 / 1e6;
+    let tcp_mbps = mb / tcp_bulk;
+    let unix_mbps = mb / unix_bulk;
+    println!("bulk push ({mb:.0} MB): tcp {tcp_mbps:.0} MB/s, unix {unix_mbps:.0} MB/s");
+    assert!(
+        unix_mbps >= 0.9 * tcp_mbps,
+        "unix intra-node throughput regressed below loopback tcp: \
+         {unix_mbps:.0} vs {tcp_mbps:.0} MB/s"
+    );
+
+    let json = format!(
+        "{{\"bench\":\"fabric_smoke\",\"world\":{SMOKE_WORLD},\"steps\":{SMOKE_STEPS},\
+         \"tcp_unbatched_secs\":{plain_secs:.6},\"tcp_batched_secs\":{batch_secs:.6},\
+         \"unix_secs\":{unix_secs:.6},\"socket_frames\":{plain_frames},\
+         \"tcp_unbatched_writes\":{plain_writes},\"tcp_batched_writes\":{batch_writes},\
+         \"unix_writes\":{unix_writes},\"tcp_bulk_mbps\":{tcp_mbps:.1},\
+         \"unix_bulk_mbps\":{unix_mbps:.1},\"bit_identical\":{bit_identical}}}"
+    );
+    if let Some(path) = json_path {
+        std::fs::write(path, format!("{json}\n")).expect("write bench json");
+        println!("wrote {path}");
+    }
+    println!("{json}");
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     if let Some(pos) = args.iter().position(|a| a == "--pipeline-smoke") {
@@ -837,6 +1040,10 @@ fn main() {
     }
     if let Some(pos) = args.iter().position(|a| a == "--obs-smoke") {
         obs_smoke(args.get(pos + 1).map(String::as_str));
+        return;
+    }
+    if let Some(pos) = args.iter().position(|a| a == "--fabric-smoke") {
+        fabric_smoke(args.get(pos + 1).map(String::as_str));
         return;
     }
     if redsync::models::schema::Manifest::load(

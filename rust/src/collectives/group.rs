@@ -113,6 +113,13 @@ impl Topology {
         rank / self.ranks_per_node
     }
 
+    /// Whether two world ranks share a physical node — the link-class
+    /// predicate the mixed fabric uses to pick Unix sockets over TCP
+    /// (`net::mixed`).
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
     pub fn local_of(&self, rank: usize) -> usize {
         rank % self.ranks_per_node
     }
@@ -329,6 +336,7 @@ mod tests {
         assert_eq!(t.local_of(5), 1);
         assert_eq!(t.world_rank(1, 1), 5);
         assert_eq!(t.leader_of(6), 4);
+        assert!(t.same_node(4, 7) && !t.same_node(3, 4));
         assert!(t.is_leader(4) && !t.is_leader(7));
         assert_eq!(t.node_members(1), vec![4, 5, 6, 7]);
         assert_eq!(t.leaders(), vec![0, 4]);

@@ -53,7 +53,9 @@ pub use hierarchical::{
     hierarchical_allgather, hierarchical_allgather_ref, hierarchical_traffic_words,
 };
 pub use mux::{TagChannel, TagMux, OOB_TAG};
-pub use transport::{LocalFabric, LocalTransport, PeerLostCause, Transport, TransportError};
+pub use transport::{
+    LinkClass, LinkTraffic, LocalFabric, LocalTransport, PeerLostCause, Transport, TransportError,
+};
 
 #[cfg(test)]
 mod tests {

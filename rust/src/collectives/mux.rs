@@ -14,11 +14,14 @@
 //!
 //! ## Why frames never interleave
 //!
-//! Both real fabrics send each message atomically — one mpsc element
+//! Every real fabric sends each message atomically — one mpsc element
 //! in-process, one length-prefixed frame written by the peer's single
-//! writer thread over TCP (`net::tcp`) — so concurrent tagged senders
-//! interleave whole messages, never words inside one.  The tag word is
-//! all the demux needs.
+//! writer thread on the socket fabrics (`net::fabric`, TCP and Unix
+//! alike) — so concurrent tagged senders interleave whole messages,
+//! never words inside one.  The writer's batched vectored writes
+//! coalesce whole frames into fewer syscalls without ever moving a
+//! frame boundary, so this invariant survives batching.  The tag word
+//! is all the demux needs.
 //!
 //! ## Why tags may be reused across steps
 //!

@@ -102,6 +102,61 @@ impl std::fmt::Display for TransportError {
 
 impl std::error::Error for TransportError {}
 
+/// Physical link class a peer connection rides on.  The socket fabrics
+/// (`net`) classify every peer link so reports can show where the bytes
+/// actually went, and the cost model prices intra-host unix-socket hops
+/// differently from loopback TCP (`simnet::IntraLink` is the pricing
+/// counterpart of this wire-level vocabulary).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LinkClass {
+    /// In-memory channel: the self-link of a socket fabric (and all of
+    /// `LocalFabric`).  No wire, no syscalls.
+    Mem,
+    /// Unix-domain socket between processes on one host.
+    Unix,
+    /// TCP socket — loopback or cross-node.
+    Tcp,
+}
+
+impl LinkClass {
+    pub fn label(&self) -> &'static str {
+        match self {
+            LinkClass::Mem => "mem",
+            LinkClass::Unix => "unix",
+            LinkClass::Tcp => "tcp",
+        }
+    }
+}
+
+/// Traffic summary for one link class of a fabric: what crossed links of
+/// that class and in how many write syscalls — the visible record of the
+/// writer threads' frame coalescing (`frames / writes` is the mean
+/// syscall batch size).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinkTraffic {
+    pub class: LinkClass,
+    /// Frames sent over links of this class (one per `send`).
+    pub frames: u64,
+    /// Payload bytes sent (`4 * words`, the `TrafficStats` convention;
+    /// framing adds 4 bytes per frame on the wire).
+    pub bytes: u64,
+    /// Write syscalls the writer threads issued (0 for [`LinkClass::Mem`]
+    /// — in-memory links never enter the kernel).
+    pub writes: u64,
+}
+
+impl LinkTraffic {
+    /// Mean frames coalesced per write syscall (0.0 when nothing was
+    /// written through the kernel).
+    pub fn frames_per_write(&self) -> f64 {
+        if self.writes == 0 {
+            0.0
+        } else {
+            self.frames as f64 / self.writes as f64
+        }
+    }
+}
+
 /// One queued fabric message: owned, or shared for broadcast fan-out
 /// (the hierarchical intra-node broadcast ships one buffer to s-1 peers
 /// without cloning it per peer).
@@ -188,6 +243,14 @@ pub trait Transport {
         self.send(peer, msg);
         self.recv(peer)
     }
+
+    /// Per-link-class traffic snapshot (frames / bytes / write syscalls
+    /// per [`LinkClass`]).  The socket fabrics report what each class
+    /// carried; the default empty vec suits in-process fabrics whose
+    /// links never touch the kernel.
+    fn link_traffic(&self) -> Vec<LinkTraffic> {
+        Vec::new()
+    }
 }
 
 /// References forward to the underlying transport, so generic code can
@@ -231,6 +294,10 @@ impl<T: Transport + ?Sized> Transport for &T {
 
     fn exchange(&self, peer: usize, msg: Vec<u32>) -> Vec<u32> {
         (**self).exchange(peer, msg)
+    }
+
+    fn link_traffic(&self) -> Vec<LinkTraffic> {
+        (**self).link_traffic()
     }
 }
 

@@ -97,6 +97,14 @@ pub enum TransportKind {
     /// process runs the single rank in [`TrainConfig::rank`] and meets
     /// the others at [`TrainConfig::rendezvous`].
     Tcp,
+    /// Unix-domain sockets between same-host worker processes
+    /// (`net::UnixTransport`); the rendezvous string seeds the socket
+    /// path namespace (`net::socket_base`).
+    Unix,
+    /// Link-class-aware mix (`net::MixedFabric`): Unix sockets to
+    /// same-node peers, TCP across nodes, chosen per pair from the
+    /// topology (flat topology = all Unix).
+    Auto,
 }
 
 impl TransportKind {
@@ -104,7 +112,15 @@ impl TransportKind {
         match self {
             TransportKind::Local => "local",
             TransportKind::Tcp => "tcp",
+            TransportKind::Unix => "unix",
+            TransportKind::Auto => "auto",
         }
+    }
+
+    /// A socket fabric between processes (anything but the in-process
+    /// `LocalFabric`) — these need a rank + rendezvous to bootstrap.
+    pub fn is_socket(&self) -> bool {
+        *self != TransportKind::Local
     }
 }
 
@@ -276,6 +292,8 @@ fn parse_transport(s: &str) -> Result<TransportKind, ConfigError> {
     match s {
         "local" | "threads" => Ok(TransportKind::Local),
         "tcp" | "net" => Ok(TransportKind::Tcp),
+        "unix" | "uds" => Ok(TransportKind::Unix),
+        "auto" | "mixed" => Ok(TransportKind::Auto),
         other => Err(ConfigError::Invalid(format!("unknown transport '{other}'"))),
     }
 }
@@ -595,7 +613,7 @@ impl TrainConfig {
                 ));
             }
         }
-        if self.transport == TransportKind::Tcp {
+        if self.transport.is_socket() {
             if self.rank >= self.world {
                 return Err(ConfigError::Invalid(format!(
                     "rank {} out of world {}",
@@ -603,7 +621,10 @@ impl TrainConfig {
                 )));
             }
             if self.rendezvous.is_empty() {
-                return Err(ConfigError::Invalid("tcp transport needs a rendezvous".into()));
+                return Err(ConfigError::Invalid(format!(
+                    "{} transport needs a rendezvous",
+                    self.transport.label()
+                )));
             }
         }
         if let Some(t) = self.topology {
@@ -719,7 +740,7 @@ impl TrainConfig {
             if self.transport != TransportKind::Local {
                 return Err(ConfigError::Invalid(
                     "rejoin is orchestrated by the in-process trainer (transport=local); \
-                     TCP fleets support shrink only"
+                     socket fleets support shrink only"
                         .into(),
                 ));
             }
@@ -816,6 +837,18 @@ mod tests {
         cfg.rendezvous.clear();
         assert!(cfg.validate().is_err(), "tcp needs a rendezvous");
         assert!(cfg.apply_overrides(&["transport=bogus".into()]).is_err());
+        // the socket-fabric checks cover the unix and auto kinds too
+        cfg.apply_overrides(&["transport=unix".into()]).unwrap();
+        assert_eq!(cfg.transport, TransportKind::Unix);
+        assert!(cfg.transport.is_socket());
+        assert!(cfg.validate().is_err(), "unix needs a rendezvous");
+        cfg.rendezvous = "127.0.0.1:4242".into();
+        cfg.validate().unwrap();
+        cfg.apply_overrides(&["transport=auto".into()]).unwrap();
+        assert_eq!(cfg.transport, TransportKind::Auto);
+        cfg.validate().unwrap();
+        assert_eq!(TransportKind::Auto.label(), "auto");
+        assert!(!TransportKind::Local.is_socket());
     }
 
     #[test]

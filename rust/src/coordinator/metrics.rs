@@ -1,6 +1,7 @@
 //! Run metrics: per-phase timing (the Fig. 10 decomposition), loss and
 //! eval curves, traffic accounting and the final run report.
 
+use crate::collectives::transport::LinkTraffic;
 use crate::util::timer::PhaseTimer;
 
 /// Phase names used by the workers (Fig. 10 vocabulary).
@@ -109,6 +110,33 @@ pub struct WorkerResult {
     /// ("scalar" / "sse2" / "avx2"), picked once at plan time
     /// (DESIGN.md §SIMD-Kernels).
     pub simd_backend: &'static str,
+    /// Per-link-class traffic of this worker's fabric endpoint (frames /
+    /// bytes / write syscalls per class) — empty on in-process fabrics,
+    /// whose links never touch the kernel.
+    pub link_traffic: Vec<LinkTraffic>,
+}
+
+/// Sum per-worker [`LinkTraffic`] vectors class-by-class, keeping the
+/// `mem < unix < tcp` display order.
+pub fn merge_link_traffic<I>(parts: I) -> Vec<LinkTraffic>
+where
+    I: IntoIterator<Item = Vec<LinkTraffic>>,
+{
+    let mut merged: Vec<LinkTraffic> = Vec::new();
+    for part in parts {
+        for lt in part {
+            match merged.iter_mut().find(|m| m.class == lt.class) {
+                Some(m) => {
+                    m.frames += lt.frames;
+                    m.bytes += lt.bytes;
+                    m.writes += lt.writes;
+                }
+                None => merged.push(lt),
+            }
+        }
+    }
+    merged.sort_by_key(|m| m.class);
+    merged
 }
 
 /// FNV-1a over f32 bit patterns.
@@ -172,6 +200,11 @@ pub struct TrainReport {
     /// Hot-path kernel backend the workers ran ("scalar" / "sse2" /
     /// "avx2") — summary-only, deliberately NOT a CSV column.
     pub simd_backend: &'static str,
+    /// Per-link-class fabric traffic summed over this process's workers
+    /// (frames / bytes / write syscalls, DESIGN.md
+    /// §Transport-Link-Classes).  Empty on in-process fabrics; like
+    /// `simd_backend`, summary-only and deliberately NOT a CSV column.
+    pub link_traffic: Vec<LinkTraffic>,
 }
 
 impl TrainReport {
@@ -224,6 +257,29 @@ impl TrainReport {
         );
         if !self.simd_backend.is_empty() {
             let _ = writeln!(s, "  hot-path kernels: {}", self.simd_backend);
+        }
+        if !self.link_traffic.is_empty() {
+            let links: Vec<String> = self
+                .link_traffic
+                .iter()
+                .map(|l| {
+                    let mut part = format!(
+                        "{} {} / {} frames",
+                        l.class.label(),
+                        crate::util::fmt_bytes(l.bytes as usize),
+                        l.frames,
+                    );
+                    if l.writes > 0 {
+                        part.push_str(&format!(
+                            " / {} writes ({:.1} frames/write)",
+                            l.writes,
+                            l.frames_per_write()
+                        ));
+                    }
+                    part
+                })
+                .collect();
+            let _ = writeln!(s, "  fabric links: {}", links.join("  "));
         }
         let mut parts: Vec<String> = Vec::new();
         for &p in phase::ALL {
@@ -291,6 +347,7 @@ impl TrainReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collectives::transport::LinkClass;
 
     #[test]
     fn param_hash_sensitive_and_stable() {
@@ -338,6 +395,10 @@ mod tests {
             step_p99_us: 4000,
             rank_skew: 1.25,
             simd_backend: "avx2",
+            link_traffic: vec![
+                LinkTraffic { class: LinkClass::Mem, frames: 10, bytes: 400, writes: 0 },
+                LinkTraffic { class: LinkClass::Unix, frames: 40, bytes: 1600, writes: 10 },
+            ],
         };
         assert!((r.phase_fraction(phase::COMPUTE) - 0.75).abs() < 1e-12);
         assert_eq!(r.bytes_per_step_per_rank(), 4096.0 / 20.0);
@@ -349,6 +410,10 @@ mod tests {
         assert!(s.contains("elastic status: evicted"), "{s}");
         assert!(s.contains("cluster step latency"), "{s}");
         assert!(s.contains("hot-path kernels: avx2"), "{s}");
+        // per-class line: mem has no syscalls (no writes suffix), the
+        // unix link shows the coalescing ratio
+        assert!(s.contains("fabric links: mem"), "{s}");
+        assert!(s.contains("unix") && s.contains("(4.0 frames/write)"), "{s}");
         // csv row tracks the header column-for-column
         let row = r.csv_row();
         assert_eq!(
@@ -357,6 +422,28 @@ mod tests {
             "{row}"
         );
         assert!(row.ends_with(",1,1500,4000,1.2500"), "{row}");
+    }
+
+    #[test]
+    fn link_traffic_merges_by_class_in_display_order() {
+        let a = vec![
+            LinkTraffic { class: LinkClass::Tcp, frames: 5, bytes: 100, writes: 2 },
+            LinkTraffic { class: LinkClass::Mem, frames: 1, bytes: 8, writes: 0 },
+        ];
+        let b = vec![
+            LinkTraffic { class: LinkClass::Unix, frames: 3, bytes: 60, writes: 1 },
+            LinkTraffic { class: LinkClass::Tcp, frames: 7, bytes: 140, writes: 3 },
+        ];
+        let m = merge_link_traffic([a, b]);
+        assert_eq!(
+            m,
+            vec![
+                LinkTraffic { class: LinkClass::Mem, frames: 1, bytes: 8, writes: 0 },
+                LinkTraffic { class: LinkClass::Unix, frames: 3, bytes: 60, writes: 1 },
+                LinkTraffic { class: LinkClass::Tcp, frames: 12, bytes: 240, writes: 5 },
+            ]
+        );
+        assert!(merge_link_traffic(std::iter::empty::<Vec<LinkTraffic>>()).is_empty());
     }
 
     #[test]

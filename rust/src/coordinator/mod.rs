@@ -113,6 +113,8 @@ impl Trainer {
         }
         let h0 = results[0].param_hash;
         let replicas_consistent = results.iter().all(|r| r.param_hash == h0);
+        let link_traffic =
+            metrics::merge_link_traffic(results.iter().map(|r| r.link_traffic.clone()));
         let rank0 = results
             .into_iter()
             .find(|r| r.rank == 0)
@@ -142,6 +144,7 @@ impl Trainer {
             step_p99_us: rank0.step_p99_us,
             rank_skew: rank0.rank_skew,
             simd_backend: rank0.simd_backend,
+            link_traffic,
         })
     }
 
@@ -230,6 +233,7 @@ impl Trainer {
             step_p99_us: 0,
             rank_skew: 0.0,
             simd_backend: crate::compression::simd::active().name(),
+            link_traffic: Vec::new(),
         })
     }
 }
@@ -287,6 +291,7 @@ impl Trainer {
             step_p99_us: result.step_p99_us,
             rank_skew: result.rank_skew,
             simd_backend: result.simd_backend,
+            link_traffic: result.link_traffic,
         })
     }
 
@@ -341,6 +346,7 @@ impl Trainer {
             step_p99_us: 0,
             rank_skew: 0.0,
             simd_backend: result.simd_backend,
+            link_traffic: result.link_traffic,
         })
     }
 }

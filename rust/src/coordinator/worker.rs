@@ -18,7 +18,7 @@ use crate::collectives::mux::{TagChannel, TagMux};
 use crate::collectives::{allreduce_mean, Gathered, Transport};
 use crate::compression::message::{view_plain, view_quant};
 use crate::compression::{CompressorConfig, Method};
-use crate::config::{AlgoMode, TrainConfig};
+use crate::config::{AlgoMode, TrainConfig, TransportKind};
 use crate::costmodel;
 use crate::data::{ClusterDataset, ZipfMarkovCorpus};
 use crate::elastic::{self, ElasticOpts, ElasticStatus, RankOutcome, ShardKey, Workload};
@@ -198,18 +198,40 @@ pub fn run_worker<T: Transport + Sync>(
         AlgoMode::Auto => {
             let machine = Machine::by_name(&cfg.machine)
                 .ok_or_else(|| format!("rank {rank}: unknown machine '{}'", cfg.machine))?;
+            // Price intra-host traffic on the link class the configured
+            // fabric actually rides (costmodel::pick_algo_on): loopback
+            // TCP for --transport tcp, AF_UNIX for unix/auto.  The
+            // in-process LocalFabric keeps the legacy picker verbatim —
+            // identical decisions to every run before link classes
+            // existed.  The mapping is pure config, so it stays
+            // rank-deterministic.
+            let link = match cfg.transport {
+                TransportKind::Local => None,
+                TransportKind::Tcp => Some(costmodel::IntraLink::Loopback),
+                TransportKind::Unix | TransportKind::Auto => Some(costmodel::IntraLink::Unix),
+            };
             let mut kept = Vec::with_capacity(buckets.len());
             for mut b in buckets {
                 let layers: Vec<(usize, Method, bool)> =
                     b.specs().map(|s| (s.n, s.method, s.quantize)).collect();
                 let cost = costmodel::bucket_cost(&machine, &layers, cfg.density);
-                let (algo, _times) = costmodel::pick_algo(
-                    &machine,
-                    topo.nodes,
-                    topo.ranks_per_node,
-                    &cost,
-                    cfg.density,
-                );
+                let (algo, _times) = match link {
+                    None => costmodel::pick_algo(
+                        &machine,
+                        topo.nodes,
+                        topo.ranks_per_node,
+                        &cost,
+                        cfg.density,
+                    ),
+                    Some(link) => costmodel::pick_algo_on(
+                        &machine,
+                        link,
+                        topo.nodes,
+                        topo.ranks_per_node,
+                        &cost,
+                        cfg.density,
+                    ),
+                };
                 if algo == Algo::Dense {
                     for s in b.specs() {
                         plans[s.li].method = Method::Dense;
@@ -555,6 +577,7 @@ pub fn run_worker<T: Transport + Sync>(
         step_p99_us,
         rank_skew,
         simd_backend: crate::compression::simd::active().name(),
+        link_traffic: transport.link_traffic(),
     })
 }
 
@@ -710,6 +733,7 @@ pub fn worker_result_from(rank: usize, o: &RankOutcome) -> WorkerResult {
         step_p99_us: 0,
         rank_skew: 0.0,
         simd_backend: crate::compression::simd::active().name(),
+        link_traffic: Vec::new(),
     }
 }
 

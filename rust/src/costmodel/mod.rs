@@ -21,6 +21,7 @@
 use crate::collectives::group::Algo;
 use crate::compression::Method;
 use crate::simnet::Machine;
+pub use crate::simnet::IntraLink;
 
 /// Wire bytes per selected element.
 pub const PLAIN_WIRE_BYTES: f64 = 8.0;
@@ -40,25 +41,68 @@ pub fn t_sparse(
     t_select: f64,
     wire_bytes: f64,
 ) -> f64 {
+    t_sparse_ab(machine, machine.alpha, machine.beta, p, m_elems, density, t_select, wire_bytes)
+}
+
+/// Eq. 1 with the transfer terms priced on an explicit intra-host link
+/// class — what a flat sparse allgather costs when the whole world sits
+/// on one host over `net::UnixTransport` or loopback TCP.
+pub fn t_sparse_on(
+    machine: &Machine,
+    link: IntraLink,
+    p: usize,
+    m_elems: f64,
+    density: f64,
+    t_select: f64,
+    wire_bytes: f64,
+) -> f64 {
+    let (alpha, beta) = machine.link_params(link);
+    t_sparse_ab(machine, alpha, beta, p, m_elems, density, t_select, wire_bytes)
+}
+
+/// Eq. 1 over an explicit α-β link (γ₁ stays a device property).
+#[allow(clippy::too_many_arguments)]
+fn t_sparse_ab(
+    machine: &Machine,
+    alpha: f64,
+    beta: f64,
+    p: usize,
+    m_elems: f64,
+    density: f64,
+    t_select: f64,
+    wire_bytes: f64,
+) -> f64 {
     if p <= 1 {
         return t_select;
     }
     let pf = p as f64;
     let md = m_elems * density;
     t_select
-        + pf.log2() * machine.alpha
-        + (pf - 1.0) * md * wire_bytes * machine.beta
+        + pf.log2() * alpha
+        + (pf - 1.0) * md * wire_bytes * beta
         + pf * md * machine.gamma_decompress
 }
 
 /// Eq. 2 — dense allreduce cost (seconds); 4 bytes per element.
 pub fn t_dense(machine: &Machine, p: usize, m_elems: f64) -> f64 {
+    t_dense_ab(machine, machine.alpha, machine.beta, p, m_elems)
+}
+
+/// Eq. 2 on an explicit intra-host link class (single-host dense
+/// baseline over Unix sockets / loopback TCP).
+pub fn t_dense_on(machine: &Machine, link: IntraLink, p: usize, m_elems: f64) -> f64 {
+    let (alpha, beta) = machine.link_params(link);
+    t_dense_ab(machine, alpha, beta, p, m_elems)
+}
+
+/// Eq. 2 over an explicit α-β link (γ₂ stays a device property).
+fn t_dense_ab(machine: &Machine, alpha: f64, beta: f64, p: usize, m_elems: f64) -> f64 {
     if p <= 1 {
         return 0.0;
     }
     let pf = p as f64;
-    2.0 * pf.log2() * machine.alpha
-        + 2.0 * (pf - 1.0) / pf * (4.0 * m_elems) * machine.beta
+    2.0 * pf.log2() * alpha
+        + 2.0 * (pf - 1.0) / pf * (4.0 * m_elems) * beta
         + (pf - 1.0) / pf * m_elems * machine.gamma_reduce
 }
 
@@ -120,6 +164,35 @@ pub fn t_hierarchical(
     t_select: f64,
     wire_bytes: f64,
 ) -> f64 {
+    t_hierarchical_on(
+        machine,
+        IntraLink::Smp,
+        nodes,
+        ranks_per_node,
+        m_elems,
+        density,
+        t_select,
+        wire_bytes,
+    )
+}
+
+/// [`t_hierarchical`] with the gather/broadcast phases priced on an
+/// explicit intra-host link class (`Smp` reproduces the historical form
+/// exactly; `Unix`/`Loopback` match what a process-per-rank
+/// `--transport unix`/`tcp` run pays on-node).  The leader exchange
+/// always rides the inter-node `alpha`/`beta`.
+#[allow(clippy::too_many_arguments)]
+pub fn t_hierarchical_on(
+    machine: &Machine,
+    link: IntraLink,
+    nodes: usize,
+    ranks_per_node: usize,
+    m_elems: f64,
+    density: f64,
+    t_select: f64,
+    wire_bytes: f64,
+) -> f64 {
+    let (ia, ib) = machine.link_params(link);
     let p = nodes * ranks_per_node;
     if p <= 1 {
         return t_select;
@@ -128,12 +201,12 @@ pub fn t_hierarchical(
     let msg_bytes = md * wire_bytes;
     let (n, s, pf) = (nodes as f64, ranks_per_node as f64, p as f64);
     let mut t = t_select;
-    t += (s - 1.0) * (machine.intra_alpha + msg_bytes * machine.intra_beta);
+    t += (s - 1.0) * (ia + msg_bytes * ib);
     if nodes > 1 {
         let rounds = if nodes.is_power_of_two() { n.log2() } else { n - 1.0 };
         t += rounds * machine.alpha + (n - 1.0) * s * msg_bytes * machine.beta;
     }
-    t += (s - 1.0) * (machine.intra_alpha + pf * msg_bytes * machine.intra_beta);
+    t += (s - 1.0) * (ia + pf * msg_bytes * ib);
     t + pf * md * machine.gamma_decompress
 }
 
@@ -228,6 +301,54 @@ pub fn pick_algo(
     let ts = t_sparse(machine, p, cost.m_elems, density, cost.t_select, cost.wire_bytes);
     let th = t_hierarchical(
         machine,
+        nodes,
+        ranks_per_node,
+        cost.m_elems,
+        density,
+        cost.t_select,
+        cost.wire_bytes,
+    );
+    let algo = if td <= ts && td <= th {
+        Algo::Dense
+    } else if ts <= th {
+        Algo::Sparse
+    } else {
+        Algo::Hierarchical
+    };
+    (algo, [td, ts, th])
+}
+
+/// [`pick_algo`] made link-class-aware: price the schedules against the
+/// intra-host link the configured `--transport` actually uses (see
+/// [`IntraLink`]).  Single-host worlds (`nodes <= 1`) run *every*
+/// schedule — flat dense, flat sparse, degenerate hierarchical — over
+/// the intra link, so all three terms reprice; multi-node worlds keep
+/// the flat schedules on the inter-node fabric and reprice only the
+/// hierarchical gather/broadcast phases — so for multi-node worlds
+/// `pick_algo_on(.., Smp, ..)` is exactly [`pick_algo`] (pinned below).
+pub fn pick_algo_on(
+    machine: &Machine,
+    link: IntraLink,
+    nodes: usize,
+    ranks_per_node: usize,
+    cost: &BucketCost,
+    density: f64,
+) -> (Algo, [f64; 3]) {
+    let p = nodes * ranks_per_node;
+    let (td, ts) = if nodes <= 1 {
+        (
+            t_dense_on(machine, link, p, cost.m_elems),
+            t_sparse_on(machine, link, p, cost.m_elems, density, cost.t_select, cost.wire_bytes),
+        )
+    } else {
+        (
+            t_dense(machine, p, cost.m_elems),
+            t_sparse(machine, p, cost.m_elems, density, cost.t_select, cost.wire_bytes),
+        )
+    };
+    let th = t_hierarchical_on(
+        machine,
+        link,
         nodes,
         ranks_per_node,
         cost.m_elems,
@@ -364,6 +485,82 @@ mod tests {
                 crate::simnet::hierarchical_allgather_time(&m, nodes, s, elems * d * PLAIN_WIRE_BYTES);
             ensure_close(closed, walked, 1e-9, "T_hier vs schedule")
         });
+    }
+
+    #[test]
+    fn link_class_closed_forms_match_the_walks() {
+        // the _on closed forms stay pinned to the walked schedules on
+        // every link class, exactly like the legacy Smp pins above
+        use crate::simnet::{allgather_time_on, allreduce_time_on, hierarchical_allgather_time_on};
+        let m = Machine::muradin();
+        check(40, |g| {
+            let link = [IntraLink::Smp, IntraLink::Unix, IntraLink::Loopback][g.size(0..3)];
+            let p = 1usize << g.size(1..8);
+            let elems = g.size(1024..4_000_000) as f64;
+            let d = g.f32(0.0001..0.02) as f64;
+            let closed = t_sparse_on(&m, link, p, elems, d, 0.0, PLAIN_WIRE_BYTES)
+                - p as f64 * elems * d * m.gamma_decompress;
+            let walked = allgather_time_on(&m, link, p, elems * d * PLAIN_WIRE_BYTES);
+            ensure_close(closed, walked, 1e-9, "Eq1 on link vs schedule")?;
+            let closed = t_dense_on(&m, link, p, elems);
+            let walked = allreduce_time_on(&m, link, p, elems * 4.0);
+            ensure_close(closed, walked, 1e-9, "Eq2 on link vs schedule")?;
+            let nodes = g.size(1..13);
+            let s = g.size(1..9);
+            if nodes * s == 1 {
+                return Ok(());
+            }
+            let pf = (nodes * s) as f64;
+            let closed = t_hierarchical_on(&m, link, nodes, s, elems, d, 0.0, PLAIN_WIRE_BYTES)
+                - pf * elems * d * m.gamma_decompress;
+            let walked =
+                hierarchical_allgather_time_on(&m, link, nodes, s, elems * d * PLAIN_WIRE_BYTES);
+            ensure_close(closed, walked, 1e-9, "T_hier on link vs schedule")
+        });
+    }
+
+    #[test]
+    fn pick_algo_on_smp_is_pick_algo_across_nodes() {
+        // multi-node: Smp delegation must reproduce the legacy picker
+        // bit-for-bit (same argmin, same three modeled times)
+        let m = Machine::fatnode();
+        check(40, |g| {
+            let nodes = g.size(2..9);
+            let s = g.size(1..9);
+            let cost = BucketCost {
+                m_elems: g.size(10_000..40_000_000) as f64,
+                t_select: g.f32(0.0..0.01) as f64,
+                wire_bytes: if g.size(0..2) == 0 { 8.0 } else { 4.0 },
+            };
+            let d = g.f32(0.0001..0.02) as f64;
+            let (a0, t0) = pick_algo(&m, nodes, s, &cost, d);
+            let (a1, t1) = pick_algo_on(&m, IntraLink::Smp, nodes, s, &cost, d);
+            ensure(a0 == a1, format!("algo {a0:?} vs {a1:?}"))?;
+            ensure(t0 == t1, format!("times {t0:?} vs {t1:?}"))
+        });
+    }
+
+    #[test]
+    fn single_host_picker_prices_the_actual_fabric() {
+        // one host, 8 ranks, a big bucket: over the fast SMP link the
+        // bandwidth term is cheap and selection overhead looms larger
+        // than over loopback TCP, so the unix/loopback prices must sit
+        // strictly above smp and below/above each other in preset order
+        let m = Machine::muradin();
+        let big = BucketCost { m_elems: 40e6, t_select: 40e6 * m.sel_bs_per_elem, wire_bytes: 8.0 };
+        let d = 1e-3;
+        let smp = pick_algo_on(&m, IntraLink::Smp, 1, 8, &big, d).1;
+        let uds = pick_algo_on(&m, IntraLink::Unix, 1, 8, &big, d).1;
+        let lo = pick_algo_on(&m, IntraLink::Loopback, 1, 8, &big, d).1;
+        for i in 0..2 {
+            // dense + sparse transfer terms: smp < unix < loopback
+            assert!(smp[i] < uds[i] && uds[i] < lo[i], "term {i}: {smp:?} {uds:?} {lo:?}");
+        }
+        // and with nodes=1 the "hierarchy" degenerates to a serial
+        // gather+broadcast on the same link — strictly worse than the
+        // recursive-doubling flat schedule, so the picker never invents
+        // a hierarchy the topology cannot pay for
+        assert!(uds[1] < uds[2], "{uds:?}");
     }
 
     #[test]

@@ -2,17 +2,21 @@
 //!
 //! Subcommands:
 //!   train       run a data-parallel training job (real execution)
-//!   launch      spawn a multi-process job over the TCP fabric
+//!   launch      spawn a multi-process job over a socket fabric
 //!   simulate    virtual-time scalability simulation (Figs. 7-10)
 //!   costmodel   evaluate the §5.5 analytic cost model (Eq. 1/2)
 //!   select      micro-benchmark the selection algorithms (Fig. 3)
 //!   info        list artifacts, models, machine presets
 
+use redsync::collectives::{Topology, Transport};
 use redsync::config::{preset, presets::preset_names, TrainConfig, TransportKind};
 use redsync::coordinator::Trainer;
 use redsync::models::schema::Manifest;
 use redsync::models::zoo;
-use redsync::net::{free_loopback_addr, TcpOptions, TcpTransport};
+use redsync::net::{
+    free_loopback_addr, MixedFabric, MixedOptions, TcpOptions, TcpTransport, UnixOptions,
+    UnixTransport,
+};
 use redsync::simnet::iteration::{simulate_iteration, speedup, SimConfig, Strategy};
 use redsync::simnet::Machine;
 use redsync::util::argparse::Args;
@@ -48,8 +52,8 @@ fn print_usage() {
 USAGE: redsync <subcommand> [flags]
 
 SUBCOMMANDS:
-  train      run a training job (in-process fabric, or one TCP rank)
-  launch     spawn a multi-process training job over the TCP fabric
+  train      run a training job (in-process fabric, or one socket rank)
+  launch     spawn a multi-process training job (tcp, unix or auto fabric)
   simulate   virtual-time scalability simulation (paper Figs. 7-10)
   costmodel  evaluate the Eq. 1/2 analytic model for a layer size
   select     micro-benchmark selection algorithms (paper Fig. 3)
@@ -70,7 +74,12 @@ fn cmd_train(argv: &[String]) -> i32 {
         .opt("preset", "smoke", "named preset (see `redsync info`)")
         .opt("config", "", "JSON config file applied over the preset")
         .opt("set", "", "comma-separated key=value overrides")
-        .opt("transport", "", "fabric: local (threads) or tcp (this process = one rank)")
+        .opt(
+            "transport",
+            "",
+            "fabric: local (threads), or one rank per process over tcp, unix \
+             (same-host AF_UNIX sockets) or auto (unix intra-node, tcp across nodes)",
+        )
         .opt("rank", "", "this process's rank (tcp transport)")
         .opt("port", "", "loopback rendezvous port (shorthand for --rendezvous 127.0.0.1:PORT)")
         .opt("rendezvous", "", "rendezvous address rank 0 listens on (tcp transport)")
@@ -188,12 +197,16 @@ fn cmd_train(argv: &[String]) -> i32 {
                 }
             }
         }
-        TransportKind::Tcp => train_tcp_rank(&manifest, cfg, parsed.get_flag("csv")),
+        TransportKind::Tcp | TransportKind::Unix | TransportKind::Auto => {
+            train_socket_rank(&manifest, cfg, parsed.get_flag("csv"))
+        }
     }
 }
 
-/// Run this process's single rank of a TCP job.
-fn train_tcp_rank(manifest: &Manifest, cfg: TrainConfig, csv: bool) -> i32 {
+/// Run this process's single rank of a socket-fabric job: bootstrap the
+/// transport kind the config picked, then hand the connected endpoint
+/// to the generic per-rank trainer.
+fn train_socket_rank(manifest: &Manifest, cfg: TrainConfig, csv: bool) -> i32 {
     let rank = cfg.rank;
     logging::set_rank(rank);
     if let Err(e) = cfg.validate() {
@@ -203,15 +216,59 @@ fn train_tcp_rank(manifest: &Manifest, cfg: TrainConfig, csv: bool) -> i32 {
     if rank == 0 {
         println!("config: {}", cfg.to_json().to_json());
     }
-    let opts = TcpOptions::new(cfg.world, rank, cfg.rendezvous.clone());
-    let transport = match TcpTransport::connect(&opts) {
-        Ok(t) => t,
-        Err(e) => {
-            eprintln!("rank {rank}: tcp fabric bootstrap failed: {e}");
-            return 1;
+    let label = cfg.transport.label();
+    match cfg.transport {
+        TransportKind::Tcp => {
+            let opts = TcpOptions::new(cfg.world, rank, cfg.rendezvous.clone());
+            match TcpTransport::connect(&opts) {
+                Ok(t) => {
+                    let stats = std::sync::Arc::clone(&t.stats);
+                    run_connected_rank(manifest, cfg, csv, &t, &stats, label)
+                }
+                Err(e) => bootstrap_failed(rank, label, &e),
+            }
         }
-    };
-    let stats = std::sync::Arc::clone(&transport.stats);
+        TransportKind::Unix => {
+            let opts = UnixOptions::new(cfg.world, rank, cfg.rendezvous.clone());
+            match UnixTransport::connect(&opts) {
+                Ok(t) => {
+                    let stats = std::sync::Arc::clone(&t.stats);
+                    run_connected_rank(manifest, cfg, csv, &t, &stats, label)
+                }
+                Err(e) => bootstrap_failed(rank, label, &e),
+            }
+        }
+        TransportKind::Auto => {
+            let topo = cfg.topology.unwrap_or_else(|| Topology::flat(cfg.world));
+            let opts = MixedOptions::new(cfg.world, rank, cfg.rendezvous.clone(), topo);
+            match MixedFabric::connect(&opts) {
+                Ok(t) => {
+                    let stats = std::sync::Arc::clone(&t.stats);
+                    run_connected_rank(manifest, cfg, csv, &t, &stats, label)
+                }
+                Err(e) => bootstrap_failed(rank, label, &e),
+            }
+        }
+        TransportKind::Local => unreachable!("local transport dispatches to Trainer::run"),
+    }
+}
+
+fn bootstrap_failed(rank: usize, label: &str, e: &std::io::Error) -> i32 {
+    eprintln!("rank {rank}: {label} fabric bootstrap failed: {e}");
+    1
+}
+
+/// The transport-generic tail of a socket rank: build the trainer, run
+/// this rank, report.
+fn run_connected_rank<T: Transport + Sync>(
+    manifest: &Manifest,
+    cfg: TrainConfig,
+    csv: bool,
+    transport: &T,
+    stats: &redsync::collectives::transport::TrafficStats,
+    label: &str,
+) -> i32 {
+    let rank = cfg.rank;
     let trainer = match Trainer::new(manifest, cfg) {
         Ok(t) => t,
         Err(e) => {
@@ -219,7 +276,7 @@ fn train_tcp_rank(manifest: &Manifest, cfg: TrainConfig, csv: bool) -> i32 {
             return 1;
         }
     };
-    match trainer.run_rank(&transport, Some(&stats)) {
+    match trainer.run_rank(transport, Some(stats)) {
         Ok(report) => {
             if rank == 0 {
                 if csv {
@@ -230,12 +287,12 @@ fn train_tcp_rank(manifest: &Manifest, cfg: TrainConfig, csv: bool) -> i32 {
                 }
             } else if let Some(note) = &report.status_note {
                 eprintln!(
-                    "rank {rank}: {note} ({} sent over tcp)",
+                    "rank {rank}: {note} ({} sent over {label})",
                     fmt_bytes(report.bytes as usize)
                 );
             } else {
                 eprintln!(
-                    "rank {rank}: done ({} sent over tcp, replicas {})",
+                    "rank {rank}: done ({} sent over {label}, replicas {})",
                     fmt_bytes(report.bytes as usize),
                     if report.replicas_consistent { "consistent" } else { "DRIFTED" }
                 );
@@ -256,11 +313,12 @@ fn train_tcp_rank(manifest: &Manifest, cfg: TrainConfig, csv: bool) -> i32 {
     }
 }
 
-/// Spawn one `redsync train` process per rank over the loopback TCP
-/// fabric and wait for the fleet.
+/// Spawn one `redsync train` process per rank over a socket fabric on
+/// this host and wait for the fleet.
 fn cmd_launch(argv: &[String]) -> i32 {
-    let args = Args::new("redsync launch", "spawn a multi-process TCP training job on this host")
+    let args = Args::new("redsync launch", "spawn a multi-process training job on this host")
         .opt("world", "2", "number of worker processes (one rank each)")
+        .opt("transport", "tcp", "socket fabric: tcp | unix (AF_UNIX sockets) | auto (mixed)")
         .opt("port", "0", "rendezvous port on 127.0.0.1 (0 = pick a free one)")
         .opt("preset", "smoke", "named preset forwarded to every rank")
         .opt("config", "", "JSON config file forwarded to every rank")
@@ -291,6 +349,11 @@ fn cmd_launch(argv: &[String]) -> i32 {
         eprintln!("--world must be >= 1");
         return 2;
     }
+    let transport = parsed.get("transport");
+    if !matches!(transport, "tcp" | "unix" | "uds" | "auto" | "mixed") {
+        eprintln!("--transport must be tcp, unix or auto (got '{transport}')");
+        return 2;
+    }
     let rendezvous = match parsed.get("port") {
         "" | "0" => free_loopback_addr(),
         port => format!("127.0.0.1:{port}"),
@@ -303,10 +366,11 @@ fn cmd_launch(argv: &[String]) -> i32 {
         }
     };
 
-    eprintln!("launching {world} workers over tcp, rendezvous {rendezvous}");
+    eprintln!("launching {world} workers over {transport}, rendezvous {rendezvous}");
     let mut children = Vec::with_capacity(world);
     for rank in 0..world {
-        let mut set = format!("world={world},transport=tcp,rank={rank},rendezvous={rendezvous}");
+        let mut set =
+            format!("world={world},transport={transport},rank={rank},rendezvous={rendezvous}");
         if parsed.get_flag("pipeline") {
             set.push_str(",pipeline=true");
         }

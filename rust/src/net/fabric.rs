@@ -1,0 +1,774 @@
+//! Shared stream data plane for the socket fabrics.
+//!
+//! [`StreamTransport`] is the rank-local endpoint the TCP
+//! ([`super::tcp`]), Unix-socket ([`super::unix`]) and mixed
+//! ([`super::mixed`]) fabrics all wrap: per-peer writer/reader threads
+//! over any [`LinkStream`], the length-prefixed framing of
+//! [`super::frame`], [`super::pool::BytePool`] scratch recycling,
+//! first-wins loss-cause classification, and clean flush+FIN shutdown.
+//! Bootstrap — who dials whom, over which socket family — is the only
+//! thing the fabrics do differently.
+//!
+//! ## Batched vectored writes
+//!
+//! Each writer thread drains its outgoing channel greedily: the first
+//! `recv` blocks, then every message already queued behind it joins the
+//! same batch (bounded by [`MAX_BATCH_WORDS`]).  The batch leaves
+//! through `write_vectored` — length prefixes and payloads as separate
+//! `IoSlice`s, partial writes resumed mid-slice — and the stream is
+//! flushed once per drain, exactly when the channel is momentarily
+//! empty.  A pipelined step's many small `TagMux` frames therefore cost
+//! a few `writev` syscalls instead of one write + flush each.
+//! `REDSYNC_NO_WRITE_BATCH=1` falls back to frame-per-write (the
+//! fallback, too, flushes once per drain, not once per frame).  Wire
+//! bytes are identical either way — batching moves syscall boundaries,
+//! never frame boundaries, so concurrent senders still never interleave
+//! words inside a frame.
+//!
+//! ## Link classes
+//!
+//! Every peer link is classified ([`LinkClass`]) and its traffic —
+//! frames, payload bytes, and actual write syscalls — is accounted per
+//! class in [`LinkClassStats`], surfaced through
+//! [`Transport::link_traffic`] into the train report.  `frames /
+//! writes` is the measured syscall batch size, the visible record of
+//! the coalescing above.
+
+use super::frame::{read_frame_with, write_frame_with, write_frames_vectored};
+use super::pool::BytePool;
+use crate::collectives::transport::{
+    lock_ok, LinkClass, LinkTraffic, Payload, PeerLostCause, TrafficStats, Transport,
+    TransportError,
+};
+use std::io::{self, BufReader, IoSlice, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+
+/// Upper bound on the payload words one writer-thread drain coalesces
+/// into a single vectored batch (4 MiB of payload): keeps the staging
+/// scratch within [`BytePool`]'s recycling cap and bounds the latency
+/// of the first frame in a batch behind a deep queue.
+pub(crate) const MAX_BATCH_WORDS: usize = 1 << 20;
+
+/// Whether writer threads coalesce queued frames into vectored batches
+/// (the default) or write frame-per-syscall.  `REDSYNC_NO_WRITE_BATCH=1`
+/// forces the fallback — the A/B lever the fabric bench and CI use.
+pub(crate) fn batching_enabled() -> bool {
+    std::env::var("REDSYNC_NO_WRITE_BATCH").map(|v| v != "1").unwrap_or(true)
+}
+
+/// One established peer connection of either socket family.  Exists so
+/// the data plane is written once: reads, writes and shutdown forward
+/// to the underlying stream.  `write_vectored` is forwarded explicitly
+/// — the `Write` default would degrade every batch to its first slice.
+pub enum LinkStream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl LinkStream {
+    pub fn class(&self) -> LinkClass {
+        match self {
+            LinkStream::Tcp(_) => LinkClass::Tcp,
+            LinkStream::Unix(_) => LinkClass::Unix,
+        }
+    }
+
+    pub fn try_clone(&self) -> io::Result<LinkStream> {
+        match self {
+            LinkStream::Tcp(s) => s.try_clone().map(LinkStream::Tcp),
+            LinkStream::Unix(s) => s.try_clone().map(LinkStream::Unix),
+        }
+    }
+
+    pub fn shutdown(&self, how: Shutdown) -> io::Result<()> {
+        match self {
+            LinkStream::Tcp(s) => s.shutdown(how),
+            LinkStream::Unix(s) => s.shutdown(how),
+        }
+    }
+}
+
+impl Read for LinkStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            LinkStream::Tcp(s) => s.read(buf),
+            LinkStream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for LinkStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            LinkStream::Tcp(s) => s.write(buf),
+            LinkStream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn write_vectored(&mut self, bufs: &[IoSlice<'_>]) -> io::Result<usize> {
+        match self {
+            LinkStream::Tcp(s) => s.write_vectored(bufs),
+            LinkStream::Unix(s) => s.write_vectored(bufs),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            LinkStream::Tcp(s) => s.flush(),
+            LinkStream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+fn cidx(c: LinkClass) -> usize {
+    match c {
+        LinkClass::Mem => 0,
+        LinkClass::Unix => 1,
+        LinkClass::Tcp => 2,
+    }
+}
+
+const CLASSES: [LinkClass; 3] = [LinkClass::Mem, LinkClass::Unix, LinkClass::Tcp];
+
+/// Per-link-class traffic counters for one endpoint: frames and payload
+/// words at `send` (the peer's class), write syscalls from the writer
+/// threads.  Same relaxed-atomic discipline as [`TrafficStats`], which
+/// keeps counting the class-blind totals unchanged next to this.
+#[derive(Default, Debug)]
+pub struct LinkClassStats {
+    frames: [AtomicU64; 3],
+    words: [AtomicU64; 3],
+    writes: [AtomicU64; 3],
+}
+
+impl LinkClassStats {
+    fn count(&self, class: LinkClass, words: u64) {
+        self.frames[cidx(class)].fetch_add(1, Ordering::Relaxed);
+        self.words[cidx(class)].fetch_add(words, Ordering::Relaxed);
+    }
+
+    fn add_writes(&self, class: LinkClass, n: u64) {
+        self.writes[cidx(class)].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Snapshot of every class that carried traffic, in
+    /// `Mem < Unix < Tcp` order.  Bytes are payload bytes (`4 * words`),
+    /// matching the [`TrafficStats`] convention.
+    pub fn snapshot(&self) -> Vec<LinkTraffic> {
+        CLASSES
+            .iter()
+            .filter_map(|&class| {
+                let i = cidx(class);
+                let frames = self.frames[i].load(Ordering::Relaxed);
+                if frames == 0 {
+                    return None;
+                }
+                Some(LinkTraffic {
+                    class,
+                    frames,
+                    bytes: self.words[i].load(Ordering::Relaxed) * 4,
+                    writes: self.writes[i].load(Ordering::Relaxed),
+                })
+            })
+            .collect()
+    }
+}
+
+/// The cause a peer's reader thread recorded before closing its inbox,
+/// shared between the reader, `recv_checked` and `sever`.
+pub(crate) type CauseCell = Arc<Mutex<Option<(PeerLostCause, String)>>>;
+
+/// Record a loss cause exactly once: the first classification wins, so
+/// a sever-then-reset sequence keeps the sever's `Timeout` verdict and a
+/// reader racing a sever cannot overwrite it.
+pub(crate) fn record_cause(cell: &CauseCell, cause: PeerLostCause, reason: String) {
+    let mut slot = lock_ok(cell);
+    if slot.is_none() {
+        *slot = Some((cause, reason));
+    }
+}
+
+/// Classify a data-plane stream error into the structured
+/// [`PeerLostCause`] vocabulary: mid-frame EOF (peer vanished with data
+/// in flight) vs OS-level reset vs read deadline vs corrupt framing.
+pub(crate) fn classify_io(e: &io::Error) -> PeerLostCause {
+    match e.kind() {
+        io::ErrorKind::UnexpectedEof => PeerLostCause::MidStream,
+        io::ErrorKind::ConnectionReset
+        | io::ErrorKind::ConnectionAborted
+        | io::ErrorKind::BrokenPipe => PeerLostCause::Reset,
+        io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock => PeerLostCause::Timeout,
+        io::ErrorKind::InvalidData => PeerLostCause::Corrupt,
+        _ => PeerLostCause::Unknown,
+    }
+}
+
+/// One rank's endpoint over established per-peer streams: the engine
+/// room of `TcpTransport`, `UnixTransport` and `MixedFabric`.  The
+/// wrappers own bootstrap and delegate every `Transport` method here.
+pub struct StreamTransport {
+    rank: usize,
+    world: usize,
+    txs: Vec<Mutex<Sender<Payload>>>,
+    rxs: Vec<Mutex<Receiver<Payload>>>,
+    /// Why each peer's link died, for `recv_checked` reports and the
+    /// elastic layer's detection (set once, right before the inbox
+    /// closes — clean FIN vs mid-stream EOF vs reset vs corrupt frame).
+    causes: Vec<CauseCell>,
+    /// One extra handle per peer socket so [`Transport::sever`] can
+    /// force-close a stalled link from the monitor thread.
+    sever_handles: Vec<Option<LinkStream>>,
+    /// The wire class each peer link rides on (`Mem` for self).
+    classes: Vec<LinkClass>,
+    writers: Vec<JoinHandle<()>>,
+    /// Per-process traffic counters (same accounting as `LocalFabric`:
+    /// payload words at `send`; the 4-byte frame header is `4 *
+    /// message_count()` extra wire bytes).
+    pub stats: Arc<TrafficStats>,
+    /// Per-link-class breakdown of the same traffic, plus write-syscall
+    /// counts from the writer threads.
+    pub link_stats: Arc<LinkClassStats>,
+}
+
+impl StreamTransport {
+    /// Wire up the data plane over an established stream per peer
+    /// (`streams[rank]` is ignored; all others must be `Some`).
+    /// `batch` selects coalesced vectored writes vs frame-per-write.
+    pub fn from_streams(
+        rank: usize,
+        world: usize,
+        mut streams: Vec<Option<LinkStream>>,
+        batch: bool,
+    ) -> StreamTransport {
+        let stats = Arc::new(TrafficStats::default());
+        let link_stats = Arc::new(LinkClassStats::default());
+        // Framing scratch recycles through a shared free list: one
+        // buffer per writer/reader thread for its lifetime, returned on
+        // exit — steady-state framing never allocates staging bytes.
+        let pool = Arc::new(BytePool::new(2 * world.max(1)));
+        let mut txs = Vec::with_capacity(world);
+        let mut rxs = Vec::with_capacity(world);
+        let mut causes = Vec::with_capacity(world);
+        let mut sever_handles = Vec::with_capacity(world);
+        let mut classes = Vec::with_capacity(world);
+        let mut writers = Vec::with_capacity(world.saturating_sub(1));
+        for peer in 0..world {
+            let cause: CauseCell = Arc::new(Mutex::new(None));
+            causes.push(Arc::clone(&cause));
+            if peer == rank {
+                // self-channel: in-memory, like LocalFabric's self pair
+                let (tx, rx) = channel::<Payload>();
+                txs.push(Mutex::new(tx));
+                rxs.push(Mutex::new(rx));
+                sever_handles.push(None);
+                classes.push(LinkClass::Mem);
+                continue;
+            }
+            let stream = streams[peer].take().expect("bootstrap left a peer unconnected");
+            if let LinkStream::Tcp(s) = &stream {
+                let _ = s.set_nodelay(true);
+            }
+            let class = stream.class();
+            classes.push(class);
+            let reader_stream = stream.try_clone().expect("stream clone");
+            sever_handles.push(stream.try_clone().ok());
+
+            let (tx, writer_rx) = channel::<Payload>();
+            let writer_pool = Arc::clone(&pool);
+            let writer_link_stats = Arc::clone(&link_stats);
+            let writer = thread::Builder::new()
+                .name(format!("redsync-net-w{rank}-{peer}"))
+                .spawn(move || {
+                    write_loop(stream, writer_rx, &writer_pool, &writer_link_stats, class, batch, rank, peer)
+                })
+                .expect("spawn writer thread");
+
+            let (inbox_tx, inbox_rx) = channel::<Payload>();
+            let reader_pool = Arc::clone(&pool);
+            thread::Builder::new()
+                .name(format!("redsync-net-r{rank}-{peer}"))
+                .spawn(move || {
+                    let mut r = BufReader::new(reader_stream);
+                    let mut scratch = reader_pool.get();
+                    loop {
+                        match read_frame_with(&mut r, &mut scratch) {
+                            Ok(Some(msg)) => {
+                                if inbox_tx.send(Payload::Owned(msg)).is_err() {
+                                    break; // transport dropped
+                                }
+                            }
+                            // clean FIN: the peer shut down between frames
+                            Ok(None) => {
+                                record_cause(
+                                    &cause,
+                                    PeerLostCause::CleanFin,
+                                    "connection closed by peer".into(),
+                                );
+                                break;
+                            }
+                            // mid-frame EOF (peer crash), OS reset,
+                            // corrupt or oversized frame: distinct from
+                            // clean shutdown — classify and record the
+                            // cause for recv_checked (and the elastic
+                            // failure detector) before the inbox closes
+                            Err(e) => {
+                                crate::log_warn!(
+                                    "rank {rank}: recv stream from rank {peer} broke: {e}"
+                                );
+                                record_cause(&cause, classify_io(&e), format!("stream broke: {e}"));
+                                break;
+                            }
+                        }
+                    }
+                    reader_pool.put(scratch);
+                })
+                .expect("spawn reader thread");
+
+            txs.push(Mutex::new(tx));
+            rxs.push(Mutex::new(inbox_rx));
+            writers.push(writer);
+        }
+        StreamTransport {
+            rank,
+            world,
+            txs,
+            rxs,
+            causes,
+            sever_handles,
+            classes,
+            writers,
+            stats,
+            link_stats,
+        }
+    }
+
+    /// The wire class of the link to `peer` (`Mem` for the self-link).
+    pub fn class_of(&self, peer: usize) -> LinkClass {
+        self.classes[peer]
+    }
+
+    /// The recorded loss cause for `peer`'s link, if its reader has
+    /// already classified a failure.
+    pub fn peer_lost(&self, peer: usize) -> Option<(PeerLostCause, String)> {
+        lock_ok(&self.causes[peer]).clone()
+    }
+
+    /// Every peer whose link has died so far, with the classified cause
+    /// the reader thread recorded — the transport-level failure record
+    /// the elastic membership layer reads.
+    pub fn lost_peers(&self) -> Vec<(usize, PeerLostCause)> {
+        (0..self.world)
+            .filter_map(|p| self.peer_lost(p).map(|(cause, _)| (p, cause)))
+            .collect()
+    }
+
+    /// Build the error `recv_checked`/`try_recv` report for a closed
+    /// inbox from the reader's recorded classification.
+    fn lost_error(&self, from: usize) -> TransportError {
+        match self.peer_lost(from) {
+            Some((cause, reason)) => TransportError::with_cause(from, reason, cause),
+            None => TransportError::with_cause(from, "connection closed", PeerLostCause::Unknown),
+        }
+    }
+}
+
+/// One writer thread's life: greedily drain the outgoing channel,
+/// coalesce each drain into as few write syscalls as the stream takes
+/// (or frame-per-write when `batch` is off), flush once per drain, and
+/// on channel close flush + FIN.  Write failures end the thread — the
+/// recv side raises the loss.
+#[allow(clippy::too_many_arguments)]
+fn write_loop(
+    mut stream: LinkStream,
+    rx: Receiver<Payload>,
+    pool: &BytePool,
+    link_stats: &LinkClassStats,
+    class: LinkClass,
+    batch: bool,
+    rank: usize,
+    peer: usize,
+) {
+    let mut scratch = pool.get();
+    let mut pending: Vec<Payload> = Vec::new();
+    loop {
+        let Ok(first) = rx.recv() else { break };
+        pending.clear();
+        pending.push(first);
+        // greedy drain: everything queued while the last write was in
+        // flight joins this batch (bounded so staging stays poolable)
+        let mut words = pending[0].as_slice().len();
+        while words < MAX_BATCH_WORDS {
+            match rx.try_recv() {
+                Ok(m) => {
+                    words += m.as_slice().len();
+                    pending.push(m);
+                }
+                // empty or disconnected either way: write what we have
+                Err(_) => break,
+            }
+        }
+        let res: io::Result<usize> = if batch {
+            let msgs: Vec<&[u32]> = pending.iter().map(|p| p.as_slice()).collect();
+            write_frames_vectored(&mut stream, &msgs, &mut scratch)
+        } else {
+            // frame-per-write fallback: same wire bytes, one syscall
+            // per frame — but still one flush per drain, not per frame
+            let mut n = 0;
+            let mut out = Ok(());
+            for p in &pending {
+                out = write_frame_with(&mut stream, p.as_slice(), &mut scratch);
+                if out.is_err() {
+                    break;
+                }
+                n += 1;
+            }
+            out.map(|()| n)
+        };
+        let writes = match res {
+            Ok(n) => n,
+            Err(e) => {
+                // recv side raises the panic; keep the cause
+                crate::log_warn!("rank {rank}: send to rank {peer} failed: {e}");
+                pool.put(scratch);
+                return;
+            }
+        };
+        link_stats.add_writes(class, writes as u64);
+        // the channel is momentarily empty here: flush once per drain
+        if let Err(e) = stream.flush() {
+            crate::log_warn!("rank {rank}: send to rank {peer} failed: {e}");
+            pool.put(scratch);
+            return;
+        }
+    }
+    // channel closed: graceful shutdown — flush + FIN
+    let _ = stream.flush();
+    let _ = stream.shutdown(Shutdown::Write);
+    pool.put(scratch);
+}
+
+impl Transport for StreamTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send(&self, to: usize, msg: Vec<u32>) {
+        self.stats.messages.fetch_add(1, Ordering::Relaxed);
+        self.stats.words.fetch_add(msg.len() as u64, Ordering::Relaxed);
+        self.link_stats.count(self.classes[to], msg.len() as u64);
+        self.txs[to]
+            .lock()
+            .unwrap()
+            .send(Payload::Owned(msg))
+            .unwrap_or_else(|_| panic!("rank {}: connection to rank {to} closed", self.rank));
+    }
+
+    fn send_shared(&self, to: usize, msg: &Arc<Vec<u32>>) {
+        self.stats.messages.fetch_add(1, Ordering::Relaxed);
+        self.stats.words.fetch_add(msg.len() as u64, Ordering::Relaxed);
+        self.link_stats.count(self.classes[to], msg.len() as u64);
+        // the writer thread encodes straight from the shared buffer —
+        // the broadcast sender clones nothing
+        self.txs[to]
+            .lock()
+            .unwrap()
+            .send(Payload::Shared(Arc::clone(msg)))
+            .unwrap_or_else(|_| panic!("rank {}: connection to rank {to} closed", self.rank));
+    }
+
+    fn recv_checked(&self, from: usize) -> Result<Vec<u32>, TransportError> {
+        lock_ok(&self.rxs[from])
+            .recv()
+            .map(Payload::into_vec)
+            .map_err(|_| self.lost_error(from))
+    }
+
+    fn try_recv(&self, from: usize) -> Result<Option<Vec<u32>>, TransportError> {
+        match lock_ok(&self.rxs[from]).try_recv() {
+            Ok(p) => Ok(Some(p.into_vec())),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(self.lost_error(from)),
+        }
+    }
+
+    fn send_checked(&self, to: usize, msg: Vec<u32>) -> Result<(), TransportError> {
+        let words = msg.len() as u64;
+        match lock_ok(&self.txs[to]).send(Payload::Owned(msg)) {
+            Ok(()) => {
+                self.stats.messages.fetch_add(1, Ordering::Relaxed);
+                self.stats.words.fetch_add(words, Ordering::Relaxed);
+                self.link_stats.count(self.classes[to], words);
+                Ok(())
+            }
+            Err(_) => Err(self.lost_error(to)),
+        }
+    }
+
+    /// Force-close the stream to `peer`: its reader errors out (the
+    /// recorded cause stays `Timeout` — the sever's verdict), so a
+    /// receive blocked on a stalled peer fails instead of hanging.
+    fn sever(&self, peer: usize) {
+        if let Some(stream) = &self.sever_handles[peer] {
+            record_cause(
+                &self.causes[peer],
+                PeerLostCause::Timeout,
+                format!("link to rank {peer} severed after lease expiry"),
+            );
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+    }
+
+    fn recv(&self, from: usize) -> Vec<u32> {
+        self.recv_checked(from).unwrap_or_else(|e| {
+            panic!("rank {}: connection to rank {from} closed ({e})", self.rank)
+        })
+    }
+
+    fn link_traffic(&self) -> Vec<LinkTraffic> {
+        self.link_stats.snapshot()
+    }
+}
+
+impl Drop for StreamTransport {
+    fn drop(&mut self) {
+        // Close every writer channel, then join the writers: queued
+        // messages are flushed and each socket gets a clean FIN.
+        self.txs.clear();
+        for h in self.writers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Implement [`Transport`] for a fabric wrapper by delegating every
+/// method to its `inner: StreamTransport` field — the three socket
+/// fabrics differ only in bootstrap, never in data-plane behavior.
+macro_rules! delegate_transport {
+    ($t:ty) => {
+        impl crate::collectives::transport::Transport for $t {
+            fn rank(&self) -> usize {
+                crate::collectives::transport::Transport::rank(&self.inner)
+            }
+            fn world(&self) -> usize {
+                crate::collectives::transport::Transport::world(&self.inner)
+            }
+            fn send(&self, to: usize, msg: Vec<u32>) {
+                crate::collectives::transport::Transport::send(&self.inner, to, msg)
+            }
+            fn send_shared(&self, to: usize, msg: &std::sync::Arc<Vec<u32>>) {
+                crate::collectives::transport::Transport::send_shared(&self.inner, to, msg)
+            }
+            fn recv_checked(
+                &self,
+                from: usize,
+            ) -> Result<Vec<u32>, crate::collectives::transport::TransportError> {
+                crate::collectives::transport::Transport::recv_checked(&self.inner, from)
+            }
+            fn try_recv(
+                &self,
+                from: usize,
+            ) -> Result<Option<Vec<u32>>, crate::collectives::transport::TransportError> {
+                crate::collectives::transport::Transport::try_recv(&self.inner, from)
+            }
+            fn send_checked(
+                &self,
+                to: usize,
+                msg: Vec<u32>,
+            ) -> Result<(), crate::collectives::transport::TransportError> {
+                crate::collectives::transport::Transport::send_checked(&self.inner, to, msg)
+            }
+            fn sever(&self, peer: usize) {
+                crate::collectives::transport::Transport::sever(&self.inner, peer)
+            }
+            fn recv(&self, from: usize) -> Vec<u32> {
+                crate::collectives::transport::Transport::recv(&self.inner, from)
+            }
+            fn exchange(&self, peer: usize, msg: Vec<u32>) -> Vec<u32> {
+                crate::collectives::transport::Transport::exchange(&self.inner, peer, msg)
+            }
+            fn link_traffic(&self) -> Vec<crate::collectives::transport::LinkTraffic> {
+                crate::collectives::transport::Transport::link_traffic(&self.inner)
+            }
+        }
+    };
+}
+pub(crate) use delegate_transport;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A connected 2-rank fabric over a `UnixStream::pair` — no
+    /// filesystem paths, no bootstrap; pure data-plane surface.
+    fn pair(batch: bool) -> (StreamTransport, StreamTransport) {
+        let (a, b) = UnixStream::pair().expect("socketpair");
+        let t0 =
+            StreamTransport::from_streams(0, 2, vec![None, Some(LinkStream::Unix(a))], batch);
+        let t1 =
+            StreamTransport::from_streams(1, 2, vec![Some(LinkStream::Unix(b)), None], batch);
+        (t0, t1)
+    }
+
+    #[test]
+    fn batched_drain_delivers_all_frames_in_order() {
+        let (t0, t1) = pair(true);
+        for i in 0..300u32 {
+            t0.send(1, vec![i; 9]);
+        }
+        for i in 0..300u32 {
+            assert_eq!(t1.recv(0), vec![i; 9]);
+        }
+        drop(t1);
+        drop(t0);
+    }
+
+    #[test]
+    fn snapshot_reports_unix_class_with_batch_accounting() {
+        let (t0, t1) = pair(true);
+        for i in 0..100u32 {
+            t0.send(1, vec![i, i, i]);
+        }
+        for _ in 0..100 {
+            t1.recv(0);
+        }
+        assert!(t1.link_traffic().is_empty(), "receiver sent nothing");
+        // drop joins the writer thread, making the write counts final
+        let ls = Arc::clone(&t0.link_stats);
+        drop(t0);
+        let lt = ls.snapshot();
+        assert_eq!(lt.len(), 1);
+        assert_eq!(lt[0].class, LinkClass::Unix);
+        assert_eq!(lt[0].frames, 100);
+        assert_eq!(lt[0].bytes, 100 * 3 * 4);
+        assert!(lt[0].writes >= 1 && lt[0].writes <= 100, "syscalls never exceed frames");
+        drop(t1);
+    }
+
+    #[test]
+    fn unbatched_writer_is_frame_per_write() {
+        let (t0, t1) = pair(false);
+        for i in 0..50u32 {
+            t0.send(1, vec![i]);
+        }
+        for _ in 0..50 {
+            t1.recv(0);
+        }
+        let ls = Arc::clone(&t0.link_stats);
+        drop(t0); // join the writer: counts final
+        let lt = ls.snapshot();
+        assert_eq!(lt[0].frames, 50);
+        assert_eq!(lt[0].writes, 50, "fallback path writes one syscall per frame");
+        drop(t1);
+    }
+
+    #[test]
+    fn batched_writer_delivers_variable_length_frames_bitexact() {
+        let (t0, t1) = pair(true);
+        let mut expect = Vec::new();
+        for i in 0..200u32 {
+            let msg: Vec<u32> = (0..(i % 7)).map(|j| i * 31 + j).collect();
+            expect.push(msg.clone());
+            t0.send(1, msg);
+        }
+        for e in &expect {
+            assert_eq!(&t1.recv(0), e);
+        }
+        drop(t0);
+        drop(t1);
+    }
+
+    #[test]
+    fn mixed_classes_are_accounted_separately() {
+        // hand-build a 3-rank endpoint with one unix and one tcp peer
+        use crate::net::free_loopback_addr;
+        use std::net::TcpListener;
+        let (ua, ub) = UnixStream::pair().unwrap();
+        let addr = free_loopback_addr();
+        let listener = TcpListener::bind(&addr[..]).unwrap();
+        let client = TcpStream::connect(&addr[..]).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let t0 = StreamTransport::from_streams(
+            0,
+            3,
+            vec![None, Some(LinkStream::Unix(ua)), Some(LinkStream::Tcp(client))],
+            true,
+        );
+        let t1 =
+            StreamTransport::from_streams(1, 3, vec![Some(LinkStream::Unix(ub)), None, None], true);
+        let t2 = StreamTransport::from_streams(
+            2,
+            3,
+            vec![Some(LinkStream::Tcp(server)), None, None],
+            true,
+        );
+        assert_eq!(t0.class_of(0), LinkClass::Mem);
+        assert_eq!(t0.class_of(1), LinkClass::Unix);
+        assert_eq!(t0.class_of(2), LinkClass::Tcp);
+        t0.send(1, vec![1, 2]);
+        t0.send(2, vec![3, 4, 5]);
+        t0.send(0, vec![9]);
+        assert_eq!(t1.recv(0), vec![1, 2]);
+        assert_eq!(t2.recv(0), vec![3, 4, 5]);
+        assert_eq!(t0.recv(0), vec![9]);
+        let lt = t0.link_traffic();
+        assert_eq!(lt.len(), 3);
+        assert_eq!(lt[0].class, LinkClass::Mem);
+        assert_eq!((lt[0].frames, lt[0].bytes, lt[0].writes), (1, 4, 0));
+        assert_eq!(lt[1].class, LinkClass::Unix);
+        assert_eq!((lt[1].frames, lt[1].bytes), (1, 8));
+        assert_eq!(lt[2].class, LinkClass::Tcp);
+        assert_eq!((lt[2].frames, lt[2].bytes), (1, 12));
+        drop(t0);
+        drop(t1);
+        drop(t2);
+    }
+
+    #[test]
+    fn multi_megabyte_frames_cross_a_batched_unix_link() {
+        let (t0, t1) = pair(true);
+        // larger than MAX_BATCH_WORDS: a single frame may exceed the
+        // batch bound (the bound caps coalescing, not frame size)
+        let big: Vec<u32> = (0..(MAX_BATCH_WORDS as u32 + 1234)).collect();
+        let h = thread::spawn(move || {
+            t0.send(1, (0..(MAX_BATCH_WORDS as u32 + 1234)).collect());
+            t0.recv(1)
+        });
+        assert_eq!(t1.recv(0), big);
+        t1.send(0, vec![42]);
+        assert_eq!(h.join().unwrap(), vec![42]);
+        drop(t1);
+    }
+
+    #[test]
+    fn clean_fin_classified_over_unix_link() {
+        let (t0, t1) = pair(true);
+        drop(t1); // writers flush + FIN
+        let err = t0.recv_checked(1).unwrap_err();
+        assert_eq!(err.cause, PeerLostCause::CleanFin, "{err}");
+        assert_eq!(t0.lost_peers(), vec![(1, PeerLostCause::CleanFin)]);
+    }
+
+    #[test]
+    fn sever_works_on_a_unix_link() {
+        let (t0, t1) = pair(true);
+        t0.sever(1);
+        let err = t0.recv_checked(1).unwrap_err();
+        assert_eq!(err.cause, PeerLostCause::Timeout, "{err}");
+        drop(t1);
+    }
+
+    #[test]
+    fn stream_endpoint_is_sync() {
+        fn assert_share<T: Send + Sync>() {}
+        assert_share::<StreamTransport>();
+    }
+}

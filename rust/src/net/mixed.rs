@@ -1,0 +1,521 @@
+//! Mixed fabric: link-class-aware transport selection.
+//!
+//! [`MixedFabric`] consults the job's [`Topology`] and builds each
+//! peer link over the cheapest fabric that can reach it: same-node
+//! peers get Unix-domain sockets (`net::unix`), cross-node peers get
+//! TCP (`net::tcp`).  Both ride the same framing and the same
+//! [`StreamTransport`] data plane, so the choice is invisible to the
+//! collectives — bit-identical messages, different syscall cost — and
+//! visible to accounting as per-class [`LinkClassStats`].
+//!
+//! ## Bootstrap
+//!
+//! The rendezvous advertises both endpoints of rank 0: the TCP address
+//! (`--rendezvous`, dialable from every node) and a socket-path
+//! namespace derived from the same string ([`socket_base`] — identical
+//! on every host, and only same-host ranks ever dial each other's
+//! paths, so one shared seed namespaces both planes).  The protocol is
+//! the TCP fabric's `REG`/`DIR`/`MESH` with one twist: registration
+//! always runs over TCP (it must cross nodes), but a registration
+//! connection is *kept* as the `0 <-> i` data link only when ranks 0
+//! and `i` are on different nodes — same-node peers of rank 0 drop it
+//! after the directory and redial rank 0's Unix listener in the mesh
+//! phase.  Every rank binds its Unix listener *before* registering, so
+//! the directory go-signal implies every same-host path exists; mesh
+//! dials then pick Unix vs TCP per pair from the topology, and accepts
+//! poll both listeners under one deadline.
+
+use super::fabric::{
+    batching_enabled, delegate_transport, LinkClassStats, LinkStream, StreamTransport,
+};
+use super::frame::write_frame;
+use super::tcp::{
+    accept_deadline, bad_data, connect_retry, read_handshake, timed_out, DIR, MESH, REG,
+};
+use super::unix::{
+    accept_deadline_unix, bind_unix, check_paths, connect_unix_retry, read_handshake_unix,
+    socket_base, PathGuard,
+};
+use crate::collectives::transport::{LinkClass, PeerLostCause, TrafficStats};
+use crate::collectives::Topology;
+use std::io::{self, Write};
+use std::net::{IpAddr, Ipv4Addr, SocketAddrV4, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Bootstrap parameters for one rank of a mixed fabric.
+#[derive(Clone, Debug)]
+pub struct MixedOptions {
+    pub world: usize,
+    pub rank: usize,
+    /// Rank 0's TCP rendezvous address; also the socket-path namespace
+    /// seed for the intra-node plane (see [`socket_base`]).
+    pub rendezvous: String,
+    /// Physical placement — the link-class oracle: `topo.same_node(a, b)`
+    /// decides Unix vs TCP for every pair.
+    pub topo: Topology,
+    /// Bound on the whole bootstrap (connect retries, accepts, handshakes).
+    pub timeout: Duration,
+    /// Coalesce queued frames into vectored write batches (see
+    /// `net::fabric`); `false` falls back to frame-per-write.
+    pub batch: bool,
+}
+
+impl MixedOptions {
+    pub fn new(
+        world: usize,
+        rank: usize,
+        rendezvous: impl Into<String>,
+        topo: Topology,
+    ) -> MixedOptions {
+        MixedOptions {
+            world,
+            rank,
+            rendezvous: rendezvous.into(),
+            topo,
+            timeout: Duration::from_secs(30),
+            batch: batching_enabled(),
+        }
+    }
+}
+
+/// One rank's endpoint of a link-class-aware fabric: Unix sockets to
+/// same-node peers, TCP to cross-node peers, chosen per pair from the
+/// [`Topology`].  Construct with [`MixedFabric::connect`]; under the
+/// degenerate flat topology every link is Unix, which is what
+/// `--transport auto` resolves to for a single-host fleet.
+pub struct MixedFabric {
+    inner: StreamTransport,
+    topo: Topology,
+    /// Per-process traffic counters — identical accounting to every
+    /// other fabric (payload words at `send`).
+    pub stats: Arc<TrafficStats>,
+}
+
+impl MixedFabric {
+    /// Run the bootstrap protocol and return this rank's live endpoint.
+    /// Blocks until the full mesh is up or `opts.timeout` expires.
+    pub fn connect(opts: &MixedOptions) -> io::Result<MixedFabric> {
+        if opts.world == 0 {
+            return Err(bad_data("world must be >= 1".into()));
+        }
+        if opts.rank >= opts.world {
+            return Err(bad_data(format!("rank {} out of world {}", opts.rank, opts.world)));
+        }
+        if opts.topo.world() != opts.world {
+            return Err(bad_data(format!(
+                "topology {} covers {} ranks, world is {}",
+                opts.topo.label(),
+                opts.topo.world(),
+                opts.world
+            )));
+        }
+        let base = socket_base(&opts.rendezvous);
+        check_paths(&base, opts.world)?;
+        let deadline = Instant::now() + opts.timeout;
+        let streams = if opts.world == 1 {
+            Vec::new()
+        } else if opts.rank == 0 {
+            bootstrap_rank0(opts, &base, deadline)?
+        } else {
+            bootstrap_peer(opts, &base, deadline)?
+        };
+        let inner = StreamTransport::from_streams(opts.rank, opts.world, streams, opts.batch);
+        let stats = Arc::clone(&inner.stats);
+        Ok(MixedFabric { inner, topo: opts.topo, stats })
+    }
+
+    /// The link class serving `peer`: `Mem` for self, `Unix` for
+    /// same-node peers, `Tcp` across nodes.
+    pub fn class_of(&self, peer: usize) -> LinkClass {
+        self.inner.class_of(peer)
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.topo
+    }
+
+    /// Per-link-class counters (frames / words / write syscalls).
+    pub fn link_stats(&self) -> Arc<LinkClassStats> {
+        Arc::clone(&self.inner.link_stats)
+    }
+
+    /// The recorded loss cause for `peer`'s link, if its reader has
+    /// already classified a failure.
+    pub fn peer_lost(&self, peer: usize) -> Option<(PeerLostCause, String)> {
+        self.inner.peer_lost(peer)
+    }
+
+    /// Every peer whose link has died so far, with the classified cause.
+    pub fn lost_peers(&self) -> Vec<(usize, PeerLostCause)> {
+        self.inner.lost_peers()
+    }
+}
+
+delegate_transport!(MixedFabric);
+
+/// Does `rank` need a Unix listener — i.e. will any *higher* rank on
+/// the same node dial it in the mesh phase?  (Rank 0's same-node peers
+/// all count, since they redial over Unix instead of keeping the
+/// registration connection.)
+fn needs_unix_listener(topo: &Topology, rank: usize, world: usize) -> bool {
+    (rank + 1..world).any(|p| topo.same_node(rank, p))
+}
+
+/// Rank 0: TCP registration exactly as the TCP fabric, but same-node
+/// registration connections are dropped after the directory and
+/// replaced by Unix mesh accepts.
+fn bootstrap_rank0(
+    opts: &MixedOptions,
+    base: &str,
+    deadline: Instant,
+) -> io::Result<Vec<Option<LinkStream>>> {
+    let world = opts.world;
+    let topo = &opts.topo;
+    // bind the Unix listener before anyone can learn the directory, so
+    // a same-node peer's mesh dial never races the bind
+    let unix_listener = if needs_unix_listener(topo, 0, world) {
+        Some(bind_unix(&format!("{base}.r0"))?)
+    } else {
+        None
+    };
+    let listener = TcpListener::bind(&opts.rendezvous[..])?;
+    let mut regs: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
+    let mut endpoints: Vec<Option<(Ipv4Addr, u32)>> = (0..world).map(|_| None).collect();
+
+    for _ in 1..world {
+        let mut s = accept_deadline(&listener, deadline)?;
+        let frame = read_handshake(&mut s, deadline, "registration")?;
+        if frame.len() != 4 || frame[0] != REG {
+            return Err(bad_data(format!("bad registration frame {frame:?}")));
+        }
+        let (w, r, port) = (frame[1], frame[2], frame[3]);
+        if w as usize != world {
+            return Err(bad_data(format!("peer expects world {w}, rank 0 has {world}")));
+        }
+        let r = r as usize;
+        if r == 0 || r >= world {
+            return Err(bad_data(format!("registration from invalid rank {r}")));
+        }
+        if regs[r].is_some() {
+            return Err(bad_data(format!("duplicate registration for rank {r}")));
+        }
+        let IpAddr::V4(ip) = s.peer_addr()?.ip() else {
+            return Err(bad_data("mixed fabric directory is IPv4-only".into()));
+        };
+        endpoints[r] = Some((ip, port));
+        regs[r] = Some(s);
+    }
+
+    let mut dir = Vec::with_capacity(2 + 2 * (world - 1));
+    dir.push(DIR);
+    dir.push(world as u32);
+    for e in endpoints.into_iter().skip(1) {
+        let (ip, port) = e.expect("all ranks registered");
+        dir.push(u32::from(ip));
+        dir.push(port);
+    }
+    for s in regs.iter_mut().skip(1) {
+        let s = s.as_mut().expect("all ranks registered");
+        write_frame(s, &dir)?;
+        s.flush()?;
+    }
+
+    // cross-node registration connections become the 0 <-> i data
+    // links; same-node ones are dropped — those peers redial over Unix
+    let mut streams: Vec<Option<LinkStream>> = (0..world).map(|_| None).collect();
+    for (r, reg) in regs.into_iter().enumerate().skip(1) {
+        if !topo.same_node(0, r) {
+            streams[r] = Some(LinkStream::Tcp(reg.expect("all ranks registered")));
+        }
+    }
+    if let Some((listener, _guard)) = &unix_listener {
+        let expected = (1..world).filter(|&p| topo.same_node(0, p)).count();
+        for _ in 0..expected {
+            let mut s = accept_deadline_unix(listener, deadline)?;
+            let frame = read_handshake_unix(&mut s, deadline, "mesh")?;
+            let peer = validate_mesh(&frame, world, 0)?;
+            if !topo.same_node(0, peer) {
+                return Err(bad_data(format!(
+                    "rank {peer} dialed the unix plane but lives on another node"
+                )));
+            }
+            if streams[peer].is_some() {
+                return Err(bad_data(format!("duplicate mesh connection from rank {peer}")));
+            }
+            streams[peer] = Some(LinkStream::Unix(s));
+        }
+    }
+    Ok(streams)
+}
+
+/// Nonzero rank: TCP-register with rank 0, then dial every lower rank
+/// over the class the topology picks and accept every higher one on
+/// both listeners under one deadline.
+fn bootstrap_peer(
+    opts: &MixedOptions,
+    base: &str,
+    deadline: Instant,
+) -> io::Result<Vec<Option<LinkStream>>> {
+    let (world, rank) = (opts.world, opts.rank);
+    let topo = &opts.topo;
+    let tcp_listener = TcpListener::bind((Ipv4Addr::UNSPECIFIED, 0))?;
+    let my_port = tcp_listener.local_addr()?.port();
+    let unix_listener = if needs_unix_listener(topo, rank, world) {
+        Some(bind_unix(&format!("{base}.r{rank}"))?)
+    } else {
+        None
+    };
+
+    let mut to_zero = connect_retry(&opts.rendezvous[..], deadline)?;
+    write_frame(&mut to_zero, &[REG, world as u32, rank as u32, my_port as u32])?;
+    to_zero.flush()?;
+    let dir = read_handshake(&mut to_zero, deadline, "directory")?;
+    if dir.len() != 2 + 2 * (world - 1) || dir[0] != DIR || dir[1] as usize != world {
+        return Err(bad_data(format!("bad directory frame (len {})", dir.len())));
+    }
+
+    let mut streams: Vec<Option<LinkStream>> = (0..world).map(|_| None).collect();
+    // the registration connection survives as the 0-link only across
+    // nodes; same-node ranks redial rank 0 over its Unix listener below
+    if !topo.same_node(rank, 0) {
+        streams[0] = Some(LinkStream::Tcp(to_zero));
+    } else {
+        drop(to_zero);
+    }
+
+    for peer in 0..rank {
+        if topo.same_node(rank, peer) {
+            let mut s = connect_unix_retry(&format!("{base}.r{peer}"), deadline)?;
+            write_frame(&mut s, &[MESH, world as u32, rank as u32])?;
+            s.flush()?;
+            streams[peer] = Some(LinkStream::Unix(s));
+        } else if peer > 0 {
+            let ip = Ipv4Addr::from(dir[2 * peer]);
+            let port = dir[2 * peer + 1] as u16;
+            let mut s = connect_retry(SocketAddrV4::new(ip, port), deadline)?;
+            write_frame(&mut s, &[MESH, world as u32, rank as u32])?;
+            s.flush()?;
+            streams[peer] = Some(LinkStream::Tcp(s));
+        } // peer == 0 cross-node: registration connection already kept
+    }
+
+    let want_unix = (rank + 1..world).filter(|&p| topo.same_node(rank, p)).count();
+    let want_tcp = (rank + 1..world).filter(|&p| !topo.same_node(rank, p)).count();
+    accept_both(
+        &tcp_listener,
+        unix_listener.as_ref().map(|(l, _)| l),
+        want_tcp,
+        want_unix,
+        deadline,
+        topo,
+        rank,
+        world,
+        &mut streams,
+    )?;
+    Ok(streams)
+}
+
+fn validate_mesh(frame: &[u32], world: usize, rank: usize) -> io::Result<usize> {
+    if frame.len() != 3 || frame[0] != MESH {
+        return Err(bad_data(format!("bad mesh frame {frame:?}")));
+    }
+    let (w, peer) = (frame[1], frame[2] as usize);
+    if w as usize != world || peer <= rank || peer >= world {
+        return Err(bad_data(format!("mesh handshake from invalid rank {peer}")));
+    }
+    Ok(peer)
+}
+
+/// Poll both listeners (nonblocking, 5ms) until every expected mesh
+/// connection has arrived — higher ranks dial in arbitrary order and
+/// class, so a single blocking accept on either listener could deadlock
+/// the other plane.
+#[allow(clippy::too_many_arguments)]
+fn accept_both(
+    tcp: &TcpListener,
+    unix: Option<&UnixListener>,
+    mut want_tcp: usize,
+    mut want_unix: usize,
+    deadline: Instant,
+    topo: &Topology,
+    rank: usize,
+    world: usize,
+    streams: &mut [Option<LinkStream>],
+) -> io::Result<()> {
+    tcp.set_nonblocking(true)?;
+    if let Some(l) = unix {
+        l.set_nonblocking(true)?;
+    }
+    while want_tcp > 0 || want_unix > 0 {
+        let mut progressed = false;
+        if want_tcp > 0 {
+            match tcp.accept() {
+                Ok((mut s, _)) => {
+                    s.set_nonblocking(false)?;
+                    let frame = read_handshake(&mut s, deadline, "mesh")?;
+                    let peer = validate_mesh(&frame, world, rank)?;
+                    if topo.same_node(rank, peer) {
+                        return Err(bad_data(format!(
+                            "same-node rank {peer} dialed over tcp instead of unix"
+                        )));
+                    }
+                    if streams[peer].is_some() {
+                        return Err(bad_data(format!(
+                            "duplicate mesh connection from rank {peer}"
+                        )));
+                    }
+                    streams[peer] = Some(LinkStream::Tcp(s));
+                    want_tcp -= 1;
+                    progressed = true;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {}
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        if want_unix > 0 {
+            let l = unix.expect("unix accepts expected only with a bound listener");
+            match l.accept() {
+                Ok((mut s, _)) => {
+                    s.set_nonblocking(false)?;
+                    let frame = read_handshake_unix(&mut s, deadline, "mesh")?;
+                    let peer = validate_mesh(&frame, world, rank)?;
+                    if !topo.same_node(rank, peer) {
+                        return Err(bad_data(format!(
+                            "rank {peer} dialed the unix plane but lives on another node"
+                        )));
+                    }
+                    if streams[peer].is_some() {
+                        return Err(bad_data(format!(
+                            "duplicate mesh connection from rank {peer}"
+                        )));
+                    }
+                    streams[peer] = Some(LinkStream::Unix(s));
+                    want_unix -= 1;
+                    progressed = true;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {}
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        if !progressed {
+            if Instant::now() >= deadline {
+                return Err(timed_out("timed out waiting for mesh connections"));
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::transport::Transport;
+    use crate::net::free_loopback_addr;
+
+    fn fabric(topo: Topology, addr: &str) -> Vec<MixedFabric> {
+        let world = topo.world();
+        let handles: Vec<_> = (0..world)
+            .map(|rank| {
+                let opts = MixedOptions::new(world, rank, addr, topo);
+                thread::spawn(move || MixedFabric::connect(&opts).unwrap())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn flat_topology_selects_unix_for_every_peer() {
+        let addr = free_loopback_addr();
+        let ts = fabric(Topology::flat(3), &addr);
+        for (rank, t) in ts.iter().enumerate() {
+            for peer in 0..3 {
+                let want = if peer == rank { LinkClass::Mem } else { LinkClass::Unix };
+                assert_eq!(t.class_of(peer), want, "rank {rank} -> {peer}");
+            }
+        }
+        drop(ts);
+    }
+
+    #[test]
+    fn two_by_two_topology_splits_classes_by_node() {
+        // ranks 0,1 on "node 0"; ranks 2,3 on "node 1" — all in this
+        // process, but the fabric must still route by declared placement
+        let addr = free_loopback_addr();
+        let ts = fabric(Topology::new(2, 2), &addr);
+        assert_eq!(ts[0].class_of(1), LinkClass::Unix);
+        assert_eq!(ts[0].class_of(2), LinkClass::Tcp);
+        assert_eq!(ts[0].class_of(3), LinkClass::Tcp);
+        assert_eq!(ts[3].class_of(2), LinkClass::Unix);
+        assert_eq!(ts[3].class_of(0), LinkClass::Tcp);
+        assert_eq!(ts[1].class_of(1), LinkClass::Mem);
+        drop(ts);
+    }
+
+    #[test]
+    fn all_pairs_exchange_across_mixed_classes() {
+        let addr = free_loopback_addr();
+        let ts = fabric(Topology::new(2, 2), &addr);
+        let world = 4;
+        let handles: Vec<_> = ts
+            .into_iter()
+            .enumerate()
+            .map(|(rank, t)| {
+                thread::spawn(move || {
+                    for peer in 0..world {
+                        t.send(peer, vec![(rank * 10 + peer) as u32; 5]);
+                    }
+                    for peer in 0..world {
+                        assert_eq!(t.recv(peer), vec![(peer * 10 + rank) as u32; 5]);
+                    }
+                    t
+                })
+            })
+            .collect();
+        let ts: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // rank 0 sent one 5-word frame to each class: itself (mem), 1
+        // (unix), 2 and 3 (tcp)
+        let lt = ts[0].link_traffic();
+        assert_eq!(lt.len(), 3, "all three classes active: {lt:?}");
+        assert_eq!((lt[0].class, lt[0].frames, lt[0].bytes), (LinkClass::Mem, 1, 20));
+        assert_eq!((lt[1].class, lt[1].frames, lt[1].bytes), (LinkClass::Unix, 1, 20));
+        assert_eq!((lt[2].class, lt[2].frames, lt[2].bytes), (LinkClass::Tcp, 2, 40));
+        assert_eq!(ts[0].stats.bytes(), 80, "class-blind totals agree");
+    }
+
+    #[test]
+    fn world_one_needs_no_sockets() {
+        let t =
+            MixedFabric::connect(&MixedOptions::new(1, 0, "127.0.0.1:1", Topology::flat(1)))
+                .unwrap();
+        t.send(0, vec![7]);
+        assert_eq!(t.recv(0), vec![7]);
+    }
+
+    #[test]
+    fn topology_must_cover_world() {
+        let err =
+            MixedFabric::connect(&MixedOptions::new(4, 0, "127.0.0.1:1", Topology::new(2, 4)))
+                .unwrap_err();
+        assert!(err.to_string().contains("covers"), "{err}");
+    }
+
+    #[test]
+    fn socket_files_cleaned_after_mixed_bootstrap() {
+        let addr = free_loopback_addr();
+        let base = socket_base(&addr);
+        let ts = fabric(Topology::flat(3), &addr);
+        for rank in 0..2 {
+            assert!(
+                !std::path::Path::new(&format!("{base}.r{rank}")).exists(),
+                "unix listener path for rank {rank} must be unlinked"
+            );
+        }
+        drop(ts);
+    }
+}

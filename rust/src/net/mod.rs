@@ -1,4 +1,4 @@
-//! Real network transport: TCP sockets between worker *processes*.
+//! Real network transport: sockets between worker *processes*.
 //!
 //! This is the third rung of the transport hierarchy (see DESIGN.md
 //! §Transports and `collectives/mod.rs`):
@@ -6,29 +6,46 @@
 //! * `collectives::LocalFabric` — in-process channels between threads;
 //!   real numerics, zero wire cost.  The default for tests and
 //!   single-host runs.
-//! * [`TcpTransport`] (here) — real sockets between processes, one per
-//!   rank, with length-prefixed framing ([`frame`]) and a rank-0
-//!   rendezvous bootstrap ([`tcp`]).  This is where the paper's
-//!   synchronization traffic actually crosses a network stack, so the
-//!   Eq. 1/2 bandwidth terms meet real wire behavior.
+//! * the socket fabrics (here) — real sockets between processes, one
+//!   per rank, with length-prefixed framing ([`frame`]) and a rank-0
+//!   rendezvous bootstrap.  This is where the paper's synchronization
+//!   traffic actually crosses a kernel socket layer, so the Eq. 1/2
+//!   bandwidth terms meet real wire behavior.
 //! * `simnet` — no data at all; virtual-time replay of layer profiles for
 //!   the 128-GPU scalability figures.
 //!
-//! Both real fabrics implement `collectives::Transport`, so every
-//! collective (`allgather`, `allreduce_*`) and the whole coordinator run
-//! unchanged over either; a loopback integration test
-//! (`tests/tcp_loopback.rs`) holds them bit-identical.
+//! The socket fabrics share one data plane ([`fabric::StreamTransport`]:
+//! writer/reader threads, batched vectored frame writes, per-link-class
+//! accounting) under three bootstraps:
+//!
+//! | fabric | link | reaches | picked by |
+//! |---|---|---|---|
+//! | [`TcpTransport`] ([`tcp`]) | TCP | any node | `--transport tcp` |
+//! | [`UnixTransport`] ([`unix`]) | `AF_UNIX` | same host only | `--transport unix` |
+//! | [`MixedFabric`] ([`mixed`]) | per-pair Unix/TCP from the `Topology` | any node | `--transport auto` |
+//!
+//! All of them implement `collectives::Transport` and frame messages
+//! identically, so every collective (`allgather`, `allreduce_*`) and the
+//! whole coordinator run unchanged over any; loopback integration tests
+//! (`tests/tcp_loopback.rs`, `tests/fabric.rs`) hold them bit-identical
+//! to each other and to `LocalFabric`.
 //!
 //! Entry points: `redsync launch --world N` forks one worker process per
 //! rank and wires them up; `redsync train --set transport=tcp,rank=R`
 //! runs a single rank by hand (see `main.rs`).
 
+pub mod fabric;
 pub mod frame;
+pub mod mixed;
 pub mod pool;
 pub mod tcp;
+pub mod unix;
 
+pub use fabric::{LinkClassStats, LinkStream, StreamTransport};
+pub use mixed::{MixedFabric, MixedOptions};
 pub use pool::BytePool;
 pub use tcp::{TcpOptions, TcpTransport};
+pub use unix::{socket_base, UnixOptions, UnixTransport};
 
 /// Pick a free loopback `ip:port` by binding port 0 and releasing it.
 /// Small bind race window (the port could be reused before the caller

@@ -15,49 +15,34 @@
 //!
 //! ## Data plane
 //!
-//! One writer thread and one reader thread per peer socket: `send`
-//! enqueues to the writer's unbounded channel and never blocks — the same
+//! The data plane lives in [`super::fabric::StreamTransport`], shared
+//! with the Unix-socket and mixed fabrics: one writer and one reader
+//! thread per peer socket, batched vectored frame writes (flush once
+//! per channel drain), per-link-class traffic accounting, loss-cause
+//! classification, and flush+FIN graceful shutdown.  `send` enqueues to
+//! the writer's unbounded channel and never blocks — the same
 //! buffered-fabric contract as `LocalFabric`, which is what makes the
-//! collectives' symmetric `exchange` deadlock-free.  Readers demultiplex
-//! inbound frames into per-peer inboxes consumed by `recv`.
+//! collectives' symmetric `exchange` deadlock-free.
 //!
 //! Every message crosses the wire as one atomic frame written by that
 //! peer's single writer thread, so concurrent senders (the pipelined sync
 //! engine's comm pool, multiplexed by `collectives::mux::TagMux` bucket
-//! tags) never interleave words *inside* a frame — the tag word at the
-//! end of each message is all the demux above needs.  The endpoint is
-//! `Sync` for exactly that sharing: channel ends sit behind mutexes,
-//! uncontended in single-threaded (sequential-engine) use.
-//!
-//! When a stream dies — truncated frame, oversized length prefix, peer
-//! FIN mid-message, or a clean FIN — the reader records the cause and
-//! closes the inbox; `recv_checked` then reports it as a clean
-//! [`TransportError`] instead of hanging (`recv` still panics, the
-//! collective contract).
-//!
-//! ## Shutdown
-//!
-//! Dropping the transport closes the writer channels; each writer flushes
-//! its stream and half-closes (`FIN`) the socket, and the drop joins the
-//! writer threads so queued messages are never lost.  Reader threads are
-//! left to exit on the peer's `FIN` — joining them would make rank A's
-//! drop wait on rank B's, an avoidable shutdown barrier.
+//! tags) never interleave words *inside* a frame — write batching
+//! coalesces whole frames only, so the tag word at the end of each
+//! message is still all the demux above needs.
 
-use super::frame::{read_frame, read_frame_with, write_frame, write_frame_with};
-use super::pool::BytePool;
-use crate::collectives::transport::{
-    lock_ok, Payload, PeerLostCause, TrafficStats, Transport, TransportError,
-};
-use std::io::{self, BufReader, BufWriter, Write};
-use std::net::{IpAddr, Ipv4Addr, Shutdown, SocketAddrV4, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::thread::{self, JoinHandle};
+use super::fabric::{batching_enabled, delegate_transport, LinkClassStats, LinkStream, StreamTransport};
+use super::frame::{read_frame, write_frame};
+use crate::collectives::transport::{PeerLostCause, TrafficStats};
+use std::io::{self, Write};
+use std::net::{IpAddr, Ipv4Addr, SocketAddrV4, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::Arc;
+use std::thread;
 use std::time::{Duration, Instant};
 
-const REG: u32 = 0x5244_5301; // "RDS" + frame kind
-const DIR: u32 = 0x5244_5302;
-const MESH: u32 = 0x5244_5303;
+pub(crate) const REG: u32 = 0x5244_5301; // "RDS" + frame kind
+pub(crate) const DIR: u32 = 0x5244_5302;
+pub(crate) const MESH: u32 = 0x5244_5303;
 
 /// Bootstrap parameters for one rank of a TCP fabric.
 #[derive(Clone, Debug)]
@@ -68,28 +53,38 @@ pub struct TcpOptions {
     pub rendezvous: String,
     /// Bound on the whole bootstrap (connect retries, accepts, handshakes).
     pub timeout: Duration,
+    /// Coalesce queued frames into vectored write batches (default; see
+    /// `net::fabric`).  `false` falls back to frame-per-write — the A/B
+    /// lever of the fabric bench.
+    pub batch: bool,
 }
 
 impl TcpOptions {
     pub fn new(world: usize, rank: usize, rendezvous: impl Into<String>) -> TcpOptions {
-        TcpOptions { world, rank, rendezvous: rendezvous.into(), timeout: Duration::from_secs(30) }
+        TcpOptions {
+            world,
+            rank,
+            rendezvous: rendezvous.into(),
+            timeout: Duration::from_secs(30),
+            batch: batching_enabled(),
+        }
     }
 }
 
-fn bad_data(msg: String) -> io::Error {
+pub(crate) fn bad_data(msg: String) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg)
 }
 
-fn timed_out(msg: &str) -> io::Error {
+pub(crate) fn timed_out(msg: &str) -> io::Error {
     io::Error::new(io::ErrorKind::TimedOut, msg.to_string())
 }
 
 /// First retry delay of [`connect_retry`]; doubles per refused attempt.
-const CONNECT_BACKOFF_START: Duration = Duration::from_millis(10);
+pub(crate) const CONNECT_BACKOFF_START: Duration = Duration::from_millis(10);
 /// Backoff ceiling: late attempts poll at this period until the
 /// deadline, so a rank that comes up seconds late is still caught
 /// promptly without hammering the host with SYNs.
-const CONNECT_BACKOFF_CAP: Duration = Duration::from_millis(400);
+pub(crate) const CONNECT_BACKOFF_CAP: Duration = Duration::from_millis(400);
 
 /// Dial with bounded exponential backoff until `deadline`: during
 /// bootstrap the target's listener may simply not be bound yet (ranks
@@ -97,7 +92,10 @@ const CONNECT_BACKOFF_CAP: Duration = Duration::from_millis(400);
 /// connects are retried — 10ms, 20ms, ... capped at 400ms — rather than
 /// failing on the first `ECONNREFUSED`.  On timeout the error reports
 /// the attempt count and the last underlying cause.
-fn connect_retry<A: ToSocketAddrs + Clone>(addr: A, deadline: Instant) -> io::Result<TcpStream> {
+pub(crate) fn connect_retry<A: ToSocketAddrs + Clone>(
+    addr: A,
+    deadline: Instant,
+) -> io::Result<TcpStream> {
     let mut delay = CONNECT_BACKOFF_START;
     let mut attempts = 0u32;
     loop {
@@ -122,7 +120,7 @@ fn connect_retry<A: ToSocketAddrs + Clone>(addr: A, deadline: Instant) -> io::Re
 }
 
 /// Accept with a deadline (listener switched to non-blocking polling).
-fn accept_deadline(listener: &TcpListener, deadline: Instant) -> io::Result<TcpStream> {
+pub(crate) fn accept_deadline(listener: &TcpListener, deadline: Instant) -> io::Result<TcpStream> {
     listener.set_nonblocking(true)?;
     loop {
         match listener.accept() {
@@ -145,7 +143,11 @@ fn accept_deadline(listener: &TcpListener, deadline: Instant) -> io::Result<TcpS
 /// Read one bootstrap frame, bounded by the *remaining* shared deadline
 /// — `TcpOptions::timeout` caps the whole bootstrap, so a stalled (or
 /// stray) peer must not get a fresh full timeout per socket.
-fn read_handshake(s: &mut TcpStream, deadline: Instant, what: &str) -> io::Result<Vec<u32>> {
+pub(crate) fn read_handshake(
+    s: &mut TcpStream,
+    deadline: Instant,
+    what: &str,
+) -> io::Result<Vec<u32>> {
     let remaining = deadline.saturating_duration_since(Instant::now());
     if remaining.is_zero() {
         return Err(timed_out("bootstrap deadline expired"));
@@ -157,51 +159,12 @@ fn read_handshake(s: &mut TcpStream, deadline: Instant, what: &str) -> io::Resul
     Ok(frame)
 }
 
-/// The cause a peer's reader thread recorded before closing its inbox,
-/// shared between the reader, `recv_checked` and [`TcpTransport::sever`].
-type CauseCell = Arc<Mutex<Option<(PeerLostCause, String)>>>;
-
-/// Record a loss cause exactly once: the first classification wins, so
-/// a sever-then-reset sequence keeps the sever's `Timeout` verdict and a
-/// reader racing a sever cannot overwrite it.
-fn record_cause(cell: &CauseCell, cause: PeerLostCause, reason: String) {
-    let mut slot = lock_ok(cell);
-    if slot.is_none() {
-        *slot = Some((cause, reason));
-    }
-}
-
-/// Classify a data-plane stream error into the structured
-/// [`PeerLostCause`] vocabulary: mid-frame EOF (peer vanished with data
-/// in flight) vs OS-level reset vs read deadline vs corrupt framing.
-fn classify_io(e: &io::Error) -> PeerLostCause {
-    match e.kind() {
-        io::ErrorKind::UnexpectedEof => PeerLostCause::MidStream,
-        io::ErrorKind::ConnectionReset
-        | io::ErrorKind::ConnectionAborted
-        | io::ErrorKind::BrokenPipe => PeerLostCause::Reset,
-        io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock => PeerLostCause::Timeout,
-        io::ErrorKind::InvalidData => PeerLostCause::Corrupt,
-        _ => PeerLostCause::Unknown,
-    }
-}
-
 /// One rank's endpoint of a TCP fabric.  Construct with
 /// [`TcpTransport::connect`]; every rank of the job calls it with the same
-/// `world` and rendezvous address and its own `rank`.
+/// `world` and rendezvous address and its own `rank`.  A thin bootstrap
+/// wrapper over [`StreamTransport`], which owns the data plane.
 pub struct TcpTransport {
-    rank: usize,
-    world: usize,
-    txs: Vec<Mutex<Sender<Payload>>>,
-    rxs: Vec<Mutex<Receiver<Payload>>>,
-    /// Why each peer's link died, for `recv_checked` reports and the
-    /// elastic layer's detection (set once, right before the inbox
-    /// closes — clean FIN vs mid-stream EOF vs reset vs corrupt frame).
-    causes: Vec<CauseCell>,
-    /// One extra handle per peer socket so [`Transport::sever`] can
-    /// force-close a stalled link from the monitor thread.
-    sever_handles: Vec<Option<TcpStream>>,
-    writers: Vec<JoinHandle<()>>,
+    inner: StreamTransport,
     /// Per-process traffic counters (same accounting as `LocalFabric`:
     /// payload words at `send`; the 4-byte frame header is `4 *
     /// message_count()` extra wire bytes).
@@ -226,144 +189,53 @@ impl TcpTransport {
         } else {
             bootstrap_peer(opts, deadline)?
         };
-        Ok(Self::from_streams(opts.rank, opts.world, streams))
+        Ok(Self::from_streams_batched(opts.rank, opts.world, streams, opts.batch))
     }
 
     /// Wire up the data plane over an established socket per peer
-    /// (`streams[rank]` is ignored; all others must be `Some`).
-    fn from_streams(
+    /// (`streams[rank]` is ignored; all others must be `Some`).  Public
+    /// for fault-injection tests that hand-craft one side of a link.
+    pub fn from_streams(
         rank: usize,
         world: usize,
-        mut streams: Vec<Option<TcpStream>>,
+        streams: Vec<Option<TcpStream>>,
     ) -> TcpTransport {
-        let stats = Arc::new(TrafficStats::default());
-        // Framing scratch recycles through a shared free list: one
-        // buffer per writer/reader thread for its lifetime, returned on
-        // exit — steady-state framing never allocates staging bytes.
-        let pool = Arc::new(BytePool::new(2 * world.max(1)));
-        let mut txs = Vec::with_capacity(world);
-        let mut rxs = Vec::with_capacity(world);
-        let mut causes = Vec::with_capacity(world);
-        let mut sever_handles = Vec::with_capacity(world);
-        let mut writers = Vec::with_capacity(world.saturating_sub(1));
-        for peer in 0..world {
-            let cause: CauseCell = Arc::new(Mutex::new(None));
-            causes.push(Arc::clone(&cause));
-            if peer == rank {
-                // self-channel: in-memory, like LocalFabric's self pair
-                let (tx, rx) = channel::<Payload>();
-                txs.push(Mutex::new(tx));
-                rxs.push(Mutex::new(rx));
-                sever_handles.push(None);
-                continue;
-            }
-            let stream = streams[peer].take().expect("bootstrap left a peer unconnected");
-            let _ = stream.set_nodelay(true);
-            let reader_stream = stream.try_clone().expect("tcp stream clone");
-            sever_handles.push(stream.try_clone().ok());
+        Self::from_streams_batched(rank, world, streams, batching_enabled())
+    }
 
-            let (tx, writer_rx) = channel::<Payload>();
-            let writer_pool = Arc::clone(&pool);
-            let writer = thread::Builder::new()
-                .name(format!("redsync-net-w{rank}-{peer}"))
-                .spawn(move || {
-                    let mut w = BufWriter::new(stream);
-                    let mut scratch = writer_pool.get();
-                    for msg in writer_rx {
-                        let mut res = write_frame_with(&mut w, msg.as_slice(), &mut scratch);
-                        if res.is_ok() {
-                            res = w.flush();
-                        }
-                        if let Err(e) = res {
-                            // recv side raises the panic; keep the cause
-                            crate::log_warn!("rank {rank}: send to rank {peer} failed: {e}");
-                            writer_pool.put(scratch);
-                            return;
-                        }
-                    }
-                    // channel closed: graceful shutdown — flush + FIN
-                    let _ = w.flush();
-                    let _ = w.get_ref().shutdown(Shutdown::Write);
-                    writer_pool.put(scratch);
-                })
-                .expect("spawn writer thread");
+    fn from_streams_batched(
+        rank: usize,
+        world: usize,
+        streams: Vec<Option<TcpStream>>,
+        batch: bool,
+    ) -> TcpTransport {
+        let links = streams.into_iter().map(|s| s.map(LinkStream::Tcp)).collect();
+        let inner = StreamTransport::from_streams(rank, world, links, batch);
+        let stats = Arc::clone(&inner.stats);
+        TcpTransport { inner, stats }
+    }
 
-            let (inbox_tx, inbox_rx) = channel::<Payload>();
-            let reader_pool = Arc::clone(&pool);
-            thread::Builder::new()
-                .name(format!("redsync-net-r{rank}-{peer}"))
-                .spawn(move || {
-                    let mut r = BufReader::new(reader_stream);
-                    let mut scratch = reader_pool.get();
-                    loop {
-                        match read_frame_with(&mut r, &mut scratch) {
-                            Ok(Some(msg)) => {
-                                if inbox_tx.send(Payload::Owned(msg)).is_err() {
-                                    break; // transport dropped
-                                }
-                            }
-                            // clean FIN: the peer shut down between frames
-                            Ok(None) => {
-                                record_cause(
-                                    &cause,
-                                    PeerLostCause::CleanFin,
-                                    "connection closed by peer".into(),
-                                );
-                                break;
-                            }
-                            // mid-frame EOF (peer crash), OS reset,
-                            // corrupt or oversized frame: distinct from
-                            // clean shutdown — classify and record the
-                            // cause for recv_checked (and the elastic
-                            // failure detector) before the inbox closes
-                            Err(e) => {
-                                crate::log_warn!(
-                                    "rank {rank}: recv stream from rank {peer} broke: {e}"
-                                );
-                                record_cause(&cause, classify_io(&e), format!("stream broke: {e}"));
-                                break;
-                            }
-                        }
-                    }
-                    reader_pool.put(scratch);
-                })
-                .expect("spawn reader thread");
-
-            txs.push(Mutex::new(tx));
-            rxs.push(Mutex::new(inbox_rx));
-            writers.push(writer);
-        }
-        TcpTransport { rank, world, txs, rxs, causes, sever_handles, writers, stats }
+    /// Per-link-class counters (frames / words / write syscalls) — the
+    /// fabric bench reads the syscall-batching effect from here.
+    pub fn link_stats(&self) -> Arc<LinkClassStats> {
+        Arc::clone(&self.inner.link_stats)
     }
 
     /// The recorded loss cause for `peer`'s link, if its reader has
     /// already classified a failure.
     pub fn peer_lost(&self, peer: usize) -> Option<(PeerLostCause, String)> {
-        lock_ok(&self.causes[peer]).clone()
+        self.inner.peer_lost(peer)
     }
 
     /// Every peer whose link has died so far, with the classified cause
     /// the reader thread recorded — the transport-level failure record
     /// the elastic membership layer reads.
     pub fn lost_peers(&self) -> Vec<(usize, PeerLostCause)> {
-        (0..self.world)
-            .filter_map(|p| self.peer_lost(p).map(|(cause, _)| (p, cause)))
-            .collect()
-    }
-
-    /// Build the error `recv_checked`/`try_recv` report for a closed
-    /// inbox from the reader's recorded classification.
-    fn lost_error(&self, from: usize) -> TransportError {
-        match self.peer_lost(from) {
-            Some((cause, reason)) => TransportError::with_cause(from, reason, cause),
-            None => TransportError::with_cause(
-                from,
-                "connection closed",
-                PeerLostCause::Unknown,
-            ),
-        }
+        self.inner.lost_peers()
     }
 }
+
+delegate_transport!(TcpTransport);
 
 /// Rank 0: accept `world - 1` registrations, then publish the directory.
 /// The registration connections become the `0 <-> i` mesh links.
@@ -458,103 +330,10 @@ fn bootstrap_peer(opts: &TcpOptions, deadline: Instant) -> io::Result<Vec<Option
     Ok(streams)
 }
 
-impl Transport for TcpTransport {
-    fn rank(&self) -> usize {
-        self.rank
-    }
-
-    fn world(&self) -> usize {
-        self.world
-    }
-
-    fn send(&self, to: usize, msg: Vec<u32>) {
-        use std::sync::atomic::Ordering;
-        self.stats.messages.fetch_add(1, Ordering::Relaxed);
-        self.stats.words.fetch_add(msg.len() as u64, Ordering::Relaxed);
-        self.txs[to]
-            .lock()
-            .unwrap()
-            .send(Payload::Owned(msg))
-            .unwrap_or_else(|_| panic!("rank {}: connection to rank {to} closed", self.rank));
-    }
-
-    fn send_shared(&self, to: usize, msg: &Arc<Vec<u32>>) {
-        use std::sync::atomic::Ordering;
-        self.stats.messages.fetch_add(1, Ordering::Relaxed);
-        self.stats.words.fetch_add(msg.len() as u64, Ordering::Relaxed);
-        // the writer thread encodes straight from the shared buffer —
-        // the broadcast sender clones nothing
-        self.txs[to]
-            .lock()
-            .unwrap()
-            .send(Payload::Shared(Arc::clone(msg)))
-            .unwrap_or_else(|_| panic!("rank {}: connection to rank {to} closed", self.rank));
-    }
-
-    fn recv_checked(&self, from: usize) -> Result<Vec<u32>, TransportError> {
-        lock_ok(&self.rxs[from])
-            .recv()
-            .map(Payload::into_vec)
-            .map_err(|_| self.lost_error(from))
-    }
-
-    fn try_recv(&self, from: usize) -> Result<Option<Vec<u32>>, TransportError> {
-        use std::sync::mpsc::TryRecvError;
-        match lock_ok(&self.rxs[from]).try_recv() {
-            Ok(p) => Ok(Some(p.into_vec())),
-            Err(TryRecvError::Empty) => Ok(None),
-            Err(TryRecvError::Disconnected) => Err(self.lost_error(from)),
-        }
-    }
-
-    fn send_checked(&self, to: usize, msg: Vec<u32>) -> Result<(), TransportError> {
-        use std::sync::atomic::Ordering;
-        let words = msg.len() as u64;
-        match lock_ok(&self.txs[to]).send(Payload::Owned(msg)) {
-            Ok(()) => {
-                self.stats.messages.fetch_add(1, Ordering::Relaxed);
-                self.stats.words.fetch_add(words, Ordering::Relaxed);
-                Ok(())
-            }
-            Err(_) => Err(self.lost_error(to)),
-        }
-    }
-
-    /// Force-close the socket to `peer`: its reader errors out (the
-    /// recorded cause stays `Timeout` — the sever's verdict), so a
-    /// receive blocked on a stalled peer fails instead of hanging.
-    fn sever(&self, peer: usize) {
-        if let Some(stream) = &self.sever_handles[peer] {
-            record_cause(
-                &self.causes[peer],
-                PeerLostCause::Timeout,
-                format!("link to rank {peer} severed after lease expiry"),
-            );
-            let _ = stream.shutdown(Shutdown::Both);
-        }
-    }
-
-    fn recv(&self, from: usize) -> Vec<u32> {
-        self.recv_checked(from).unwrap_or_else(|e| {
-            panic!("rank {}: connection to rank {from} closed ({e})", self.rank)
-        })
-    }
-}
-
-impl Drop for TcpTransport {
-    fn drop(&mut self) {
-        // Close every writer channel, then join the writers: queued
-        // messages are flushed and each socket gets a clean FIN.
-        self.txs.clear();
-        for h in self.writers.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collectives::transport::Transport;
     use crate::net::free_loopback_addr;
 
     fn pair(addr: &str) -> (thread::JoinHandle<TcpTransport>, TcpTransport) {
@@ -639,6 +418,22 @@ mod tests {
         assert_eq!(t1.stats.message_count(), 1);
         assert_eq!(t1.stats.bytes(), 40);
         assert_eq!(t0.stats.bytes(), 0, "recv side counts nothing, like LocalFabric");
+    }
+
+    #[test]
+    fn link_traffic_reports_the_tcp_class() {
+        use crate::collectives::transport::LinkClass;
+        let addr = free_loopback_addr();
+        let (h0, t1) = pair(&addr);
+        let t0 = h0.join().unwrap();
+        t1.send(0, vec![0; 10]);
+        assert_eq!(t0.recv(1).len(), 10);
+        let lt = t1.link_traffic();
+        assert_eq!(lt.len(), 1);
+        assert_eq!(lt[0].class, LinkClass::Tcp);
+        assert_eq!(lt[0].frames, 1);
+        assert_eq!(lt[0].bytes, 40);
+        assert!(t0.link_traffic().is_empty(), "recv side counts nothing");
     }
 
     #[test]

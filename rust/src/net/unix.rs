@@ -1,0 +1,554 @@
+//! Unix-domain-socket fabric: intra-node transport for same-host ranks.
+//!
+//! Wire-identical to the TCP fabric — same length-prefixed frames
+//! ([`super::frame`]), same bootstrap frame shapes, same data plane
+//! ([`super::fabric::StreamTransport`]) — but over `AF_UNIX` stream
+//! sockets, which skip loopback-TCP's per-segment protocol work
+//! entirely.  This is the transport-level counterpart of the paper's
+//! §5.3 observation that intra-node links are far cheaper than
+//! inter-node links: the regime the hierarchical allgather optimizes is
+//! now also the regime the fabric serves best.
+//!
+//! ## Socket-path namespacing
+//!
+//! All paths derive from one *base*: a rendezvous string containing `/`
+//! is used as the base verbatim; anything else (e.g. the TCP rendezvous
+//! `127.0.0.1:29500`) is sanitized into `/tmp/redsync-<seed>`, so
+//! `--transport unix` works with an unchanged `--rendezvous` flag.
+//! Rank 0 listens on `<base>.rdv`; every nonzero rank binds its data
+//! listener on `<base>.r<rank>` *before* registering, so once rank 0's
+//! directory go-signal arrives, every mesh listener provably exists —
+//! peer addresses are derived from the shared base, not advertised.
+//!
+//! ## Failure classification + cleanup
+//!
+//! `sockaddr_un` paths are capped (~107 bytes), sockets outlive crashed
+//! processes as stale filesystem entries, and `/tmp` permissions vary —
+//! all three surface as actionable bootstrap errors here: paths are
+//! length-checked up front, a stale socket file (bind says `AddrInUse`
+//! but nothing accepts) is reclaimed and rebound automatically, and
+//! `PermissionDenied` says which path to move where.  Every listener
+//! path is unlinked when bootstrap finishes, successfully or not — only
+//! the (invisible, unlinked) connected sockets outlive `connect`.
+
+use super::fabric::{
+    batching_enabled, delegate_transport, LinkClassStats, LinkStream, StreamTransport,
+};
+use super::frame::{read_frame, write_frame};
+use super::tcp::{bad_data, timed_out, CONNECT_BACKOFF_CAP, CONNECT_BACKOFF_START, DIR, MESH, REG};
+use crate::collectives::transport::{PeerLostCause, TrafficStats};
+use std::io::{self, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// `sockaddr_un.sun_path` holds 108 bytes including the trailing NUL on
+/// Linux — longer paths fail at bind/connect with an unhelpful error,
+/// so they are rejected up front with an actionable one.
+const MAX_SOCKET_PATH: usize = 107;
+
+/// Derive the socket-path base from a rendezvous string: a string with
+/// `/` is a filesystem prefix already; anything else is sanitized
+/// (non-alphanumeric -> `-`) under `/tmp`.
+pub fn socket_base(rendezvous: &str) -> String {
+    if rendezvous.contains('/') {
+        return rendezvous.to_string();
+    }
+    let san: String = rendezvous
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '-' })
+        .collect();
+    format!("/tmp/redsync-{san}")
+}
+
+/// Bootstrap parameters for one rank of a Unix-socket fabric.
+#[derive(Clone, Debug)]
+pub struct UnixOptions {
+    pub world: usize,
+    pub rank: usize,
+    /// Socket-path namespace seed (see [`socket_base`]); every rank of
+    /// the job must pass the same string.
+    pub rendezvous: String,
+    /// Bound on the whole bootstrap (connect retries, accepts, handshakes).
+    pub timeout: Duration,
+    /// Coalesce queued frames into vectored write batches (see
+    /// `net::fabric`); `false` falls back to frame-per-write.
+    pub batch: bool,
+}
+
+impl UnixOptions {
+    pub fn new(world: usize, rank: usize, rendezvous: impl Into<String>) -> UnixOptions {
+        UnixOptions {
+            world,
+            rank,
+            rendezvous: rendezvous.into(),
+            timeout: Duration::from_secs(30),
+            batch: batching_enabled(),
+        }
+    }
+}
+
+/// Unlink a socket path when bootstrap leaves scope — success or error:
+/// listener paths are rendezvous-only artifacts; the connected sockets
+/// keep working after the filesystem name is gone.
+pub(crate) struct PathGuard(PathBuf);
+
+impl Drop for PathGuard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
+fn path_too_long(path: &str) -> io::Error {
+    io::Error::new(
+        io::ErrorKind::InvalidInput,
+        format!(
+            "socket path '{path}' is {} bytes; sockaddr_un caps paths at {MAX_SOCKET_PATH} — \
+             pass a shorter base via --rendezvous (e.g. /tmp/rs)",
+            path.len()
+        ),
+    )
+}
+
+pub(crate) fn check_paths(base: &str, world: usize) -> io::Result<()> {
+    // the longest names this job will bind/dial
+    for p in [format!("{base}.rdv"), format!("{base}.r{}", world.saturating_sub(1))] {
+        if p.len() > MAX_SOCKET_PATH {
+            return Err(path_too_long(&p));
+        }
+    }
+    Ok(())
+}
+
+/// Bind a listener, reclaiming a stale socket file if the path is
+/// occupied by a dead process: `AddrInUse` is probed with a connect —
+/// refusal means no listener lives behind the file, so it is removed
+/// and bound again; an accepted probe means a live collision.
+pub(crate) fn bind_unix(path: &str) -> io::Result<(UnixListener, PathGuard)> {
+    match UnixListener::bind(path) {
+        Ok(l) => Ok((l, PathGuard(PathBuf::from(path)))),
+        Err(e) if e.kind() == io::ErrorKind::AddrInUse => match UnixStream::connect(path) {
+            Ok(_) => Err(io::Error::new(
+                io::ErrorKind::AddrInUse,
+                format!(
+                    "socket path '{path}' is in use by a live process — \
+                     is another fleet running? pick a different --rendezvous"
+                ),
+            )),
+            Err(_) => {
+                // stale file from a crashed run: reclaim and retry once
+                std::fs::remove_file(path)?;
+                let l = UnixListener::bind(path)?;
+                Ok((l, PathGuard(PathBuf::from(path))))
+            }
+        },
+        Err(e) if e.kind() == io::ErrorKind::PermissionDenied => Err(io::Error::new(
+            io::ErrorKind::PermissionDenied,
+            format!(
+                "permission denied binding unix socket at '{path}' — \
+                 point --rendezvous at a directory this user can write"
+            ),
+        )),
+        Err(e) => Err(e),
+    }
+}
+
+/// Dial with the same bounded backoff as the TCP fabric's
+/// `connect_retry`: `NotFound` (listener not bound yet) and
+/// `ConnectionRefused` (stale file about to be reclaimed by its owner)
+/// are retried until the deadline; `PermissionDenied` fails fast with
+/// directions.
+pub(crate) fn connect_unix_retry(path: &str, deadline: Instant) -> io::Result<UnixStream> {
+    let mut delay = CONNECT_BACKOFF_START;
+    let mut attempts = 0u32;
+    loop {
+        attempts += 1;
+        match UnixStream::connect(path) {
+            Ok(s) => return Ok(s),
+            Err(e) if e.kind() == io::ErrorKind::PermissionDenied => {
+                return Err(io::Error::new(
+                    io::ErrorKind::PermissionDenied,
+                    format!(
+                        "permission denied dialing unix socket '{path}' — \
+                         every rank must run as a user that can reach the rendezvous directory"
+                    ),
+                ));
+            }
+            Err(e) => {
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(io::Error::new(
+                        e.kind(),
+                        format!(
+                            "giving up after {attempts} connect attempts on '{path}': {e} \
+                             (peer not started, or its socket file was never created?)"
+                        ),
+                    ));
+                }
+                thread::sleep(delay.min(deadline.saturating_duration_since(now)));
+                delay = (delay * 2).min(CONNECT_BACKOFF_CAP);
+            }
+        }
+    }
+}
+
+/// Accept with a deadline (listener switched to non-blocking polling);
+/// mirror of the TCP fabric's `accept_deadline`.
+pub(crate) fn accept_deadline_unix(
+    listener: &UnixListener,
+    deadline: Instant,
+) -> io::Result<UnixStream> {
+    listener.set_nonblocking(true)?;
+    loop {
+        match listener.accept() {
+            Ok((s, _)) => {
+                s.set_nonblocking(false)?;
+                return Ok(s);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(timed_out("timed out waiting for a peer connection"));
+                }
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Read one bootstrap frame bounded by the remaining shared deadline;
+/// mirror of the TCP fabric's `read_handshake`.
+pub(crate) fn read_handshake_unix(
+    s: &mut UnixStream,
+    deadline: Instant,
+    what: &str,
+) -> io::Result<Vec<u32>> {
+    let remaining = deadline.saturating_duration_since(Instant::now());
+    if remaining.is_zero() {
+        return Err(timed_out("bootstrap deadline expired"));
+    }
+    s.set_read_timeout(Some(remaining))?;
+    let frame = read_frame(s)?
+        .ok_or_else(|| bad_data(format!("peer closed during {what} handshake")))?;
+    s.set_read_timeout(None)?;
+    Ok(frame)
+}
+
+/// One rank's endpoint of a Unix-socket fabric.  Construct with
+/// [`UnixTransport::connect`]; every rank of the same-host job calls it
+/// with the same `world` and rendezvous seed and its own `rank`.  A
+/// thin bootstrap wrapper over [`StreamTransport`].
+pub struct UnixTransport {
+    inner: StreamTransport,
+    /// Per-process traffic counters — identical accounting to
+    /// `TcpTransport` and `LocalFabric` (payload words at `send`).
+    pub stats: Arc<TrafficStats>,
+}
+
+impl UnixTransport {
+    /// Run the bootstrap protocol and return this rank's live endpoint.
+    /// Blocks until the full mesh is up or `opts.timeout` expires.
+    pub fn connect(opts: &UnixOptions) -> io::Result<UnixTransport> {
+        if opts.world == 0 {
+            return Err(bad_data("world must be >= 1".into()));
+        }
+        if opts.rank >= opts.world {
+            return Err(bad_data(format!("rank {} out of world {}", opts.rank, opts.world)));
+        }
+        let base = socket_base(&opts.rendezvous);
+        check_paths(&base, opts.world)?;
+        let deadline = Instant::now() + opts.timeout;
+        let streams = if opts.world == 1 {
+            Vec::new()
+        } else if opts.rank == 0 {
+            bootstrap_rank0(opts, &base, deadline)?
+        } else {
+            bootstrap_peer(opts, &base, deadline)?
+        };
+        Ok(Self::from_streams_batched(opts.rank, opts.world, streams, opts.batch))
+    }
+
+    /// Wire up the data plane over an established socket per peer
+    /// (`streams[rank]` is ignored; all others must be `Some`).  Public
+    /// for fault-injection tests that hand-craft one side of a link
+    /// (e.g. over `UnixStream::pair`).
+    pub fn from_streams(
+        rank: usize,
+        world: usize,
+        streams: Vec<Option<UnixStream>>,
+    ) -> UnixTransport {
+        Self::from_streams_batched(rank, world, streams, batching_enabled())
+    }
+
+    fn from_streams_batched(
+        rank: usize,
+        world: usize,
+        streams: Vec<Option<UnixStream>>,
+        batch: bool,
+    ) -> UnixTransport {
+        let links = streams.into_iter().map(|s| s.map(LinkStream::Unix)).collect();
+        let inner = StreamTransport::from_streams(rank, world, links, batch);
+        let stats = Arc::clone(&inner.stats);
+        UnixTransport { inner, stats }
+    }
+
+    /// Per-link-class counters (frames / words / write syscalls).
+    pub fn link_stats(&self) -> Arc<LinkClassStats> {
+        Arc::clone(&self.inner.link_stats)
+    }
+
+    /// The recorded loss cause for `peer`'s link, if its reader has
+    /// already classified a failure.
+    pub fn peer_lost(&self, peer: usize) -> Option<(PeerLostCause, String)> {
+        self.inner.peer_lost(peer)
+    }
+
+    /// Every peer whose link has died so far, with the classified cause.
+    pub fn lost_peers(&self) -> Vec<(usize, PeerLostCause)> {
+        self.inner.lost_peers()
+    }
+}
+
+delegate_transport!(UnixTransport);
+
+/// Rank 0: accept `world - 1` registrations on `<base>.rdv`, then send
+/// every peer the `[DIR, world]` go-signal — peer addresses are derived
+/// from the shared base, so unlike TCP the directory carries no
+/// endpoints, but it still guarantees every data listener is bound
+/// before anyone dials the mesh.  The registration connections become
+/// the `0 <-> i` links.
+fn bootstrap_rank0(
+    opts: &UnixOptions,
+    base: &str,
+    deadline: Instant,
+) -> io::Result<Vec<Option<UnixStream>>> {
+    let world = opts.world;
+    let (listener, _rdv_guard) = bind_unix(&format!("{base}.rdv"))?;
+    let mut streams: Vec<Option<UnixStream>> = (0..world).map(|_| None).collect();
+
+    for _ in 1..world {
+        let mut s = accept_deadline_unix(&listener, deadline)?;
+        let frame = read_handshake_unix(&mut s, deadline, "registration")?;
+        if frame.len() != 4 || frame[0] != REG {
+            return Err(bad_data(format!("bad registration frame {frame:?}")));
+        }
+        let (w, r) = (frame[1], frame[2]);
+        if w as usize != world {
+            return Err(bad_data(format!("peer expects world {w}, rank 0 has {world}")));
+        }
+        let r = r as usize;
+        if r == 0 || r >= world {
+            return Err(bad_data(format!("registration from invalid rank {r}")));
+        }
+        if streams[r].is_some() {
+            return Err(bad_data(format!("duplicate registration for rank {r}")));
+        }
+        streams[r] = Some(s);
+    }
+
+    for s in streams.iter_mut().skip(1) {
+        let s = s.as_mut().expect("all ranks registered");
+        write_frame(s, &[DIR, world as u32])?;
+        s.flush()?;
+    }
+    Ok(streams)
+}
+
+/// Nonzero rank: bind the data listener *first* (so the go-signal
+/// implies it exists), register with rank 0, then dial every lower rank
+/// at its derived path and accept every higher one.
+fn bootstrap_peer(
+    opts: &UnixOptions,
+    base: &str,
+    deadline: Instant,
+) -> io::Result<Vec<Option<UnixStream>>> {
+    let (world, rank) = (opts.world, opts.rank);
+    // ranks above us dial our listener; the last rank needs none
+    let listener = if rank + 1 < world {
+        Some(bind_unix(&format!("{base}.r{rank}"))?)
+    } else {
+        None
+    };
+
+    let mut to_zero = connect_unix_retry(&format!("{base}.rdv"), deadline)?;
+    write_frame(&mut to_zero, &[REG, world as u32, rank as u32, 0])?;
+    to_zero.flush()?;
+    let dir = read_handshake_unix(&mut to_zero, deadline, "directory")?;
+    if dir.len() != 2 || dir[0] != DIR || dir[1] as usize != world {
+        return Err(bad_data(format!("bad directory frame {dir:?}")));
+    }
+
+    let mut streams: Vec<Option<UnixStream>> = (0..world).map(|_| None).collect();
+    streams[0] = Some(to_zero);
+
+    for peer in 1..rank {
+        let mut s = connect_unix_retry(&format!("{base}.r{peer}"), deadline)?;
+        write_frame(&mut s, &[MESH, world as u32, rank as u32])?;
+        s.flush()?;
+        streams[peer] = Some(s);
+    }
+    if let Some((listener, _guard)) = &listener {
+        for _ in rank + 1..world {
+            let mut s = accept_deadline_unix(listener, deadline)?;
+            let frame = read_handshake_unix(&mut s, deadline, "mesh")?;
+            if frame.len() != 3 || frame[0] != MESH {
+                return Err(bad_data(format!("bad mesh frame {frame:?}")));
+            }
+            let (w, peer) = (frame[1], frame[2]);
+            let peer = peer as usize;
+            if w as usize != world || peer <= rank || peer >= world {
+                return Err(bad_data(format!("mesh handshake from invalid rank {peer}")));
+            }
+            if streams[peer].is_some() {
+                return Err(bad_data(format!("duplicate mesh connection from rank {peer}")));
+            }
+            streams[peer] = Some(s);
+        }
+    }
+    Ok(streams)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::transport::{LinkClass, Transport};
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    /// A unique per-test socket base: unix tests in one binary run
+    /// concurrently and must not share rendezvous paths.
+    fn test_base() -> String {
+        static NEXT: AtomicU32 = AtomicU32::new(0);
+        format!("/tmp/rs-ut-{}-{}", std::process::id(), NEXT.fetch_add(1, Ordering::Relaxed))
+    }
+
+    fn fabric(world: usize, base: &str) -> Vec<UnixTransport> {
+        let handles: Vec<_> = (0..world)
+            .map(|rank| {
+                let opts = UnixOptions::new(world, rank, base);
+                thread::spawn(move || UnixTransport::connect(&opts).unwrap())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn send_recv_pair_over_unix() {
+        let base = test_base();
+        let mut ts = fabric(2, &base);
+        let t1 = ts.pop().unwrap();
+        let t0 = ts.pop().unwrap();
+        let h = thread::spawn(move || {
+            t1.send(0, vec![1, 2, 3]);
+            t1.recv(0)
+        });
+        assert_eq!(t0.recv(1), vec![1, 2, 3]);
+        t0.send(1, vec![9]);
+        assert_eq!(h.join().unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn four_rank_mesh_over_unix_all_pairs() {
+        let base = test_base();
+        let ts = fabric(4, &base);
+        let handles: Vec<_> = ts
+            .into_iter()
+            .enumerate()
+            .map(|(rank, t)| {
+                thread::spawn(move || {
+                    for peer in 0..4 {
+                        t.send(peer, vec![rank as u32 * 10 + peer as u32]);
+                    }
+                    for peer in 0..4 {
+                        assert_eq!(t.recv(peer), vec![peer as u32 * 10 + rank as u32]);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn socket_files_are_cleaned_up_after_bootstrap() {
+        let base = test_base();
+        let ts = fabric(3, &base);
+        for suffix in [".rdv", ".r1", ".r2"] {
+            assert!(
+                !std::path::Path::new(&format!("{base}{suffix}")).exists(),
+                "listener path {base}{suffix} must be unlinked once the mesh is up"
+            );
+        }
+        drop(ts);
+    }
+
+    #[test]
+    fn stale_socket_file_is_reclaimed() {
+        let base = test_base();
+        let path = format!("{base}.rdv");
+        // a dead run's leftover: a bound-then-abandoned socket file
+        let l = UnixListener::bind(&path).unwrap();
+        drop(l); // closes the listener but leaves the file behind
+        assert!(std::path::Path::new(&path).exists(), "stale file is the precondition");
+        let (l2, _guard) = bind_unix(&path).expect("stale socket file must be reclaimed");
+        drop(l2);
+    }
+
+    #[test]
+    fn live_socket_collision_is_actionable() {
+        let base = test_base();
+        let path = format!("{base}.rdv");
+        let (_live, _guard) = bind_unix(&path).unwrap();
+        let err = bind_unix(&path).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::AddrInUse);
+        assert!(err.to_string().contains("live process"), "{err}");
+    }
+
+    #[test]
+    fn overlong_socket_path_is_rejected_up_front() {
+        let base = format!("/tmp/{}", "x".repeat(120));
+        let opts = UnixOptions::new(2, 0, base);
+        let err = UnixTransport::connect(&opts).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+        assert!(err.to_string().contains("sockaddr_un"), "{err}");
+    }
+
+    #[test]
+    fn non_path_rendezvous_is_namespaced_under_tmp() {
+        assert_eq!(socket_base("127.0.0.1:29500"), "/tmp/redsync-127-0-0-1-29500");
+        assert_eq!(socket_base("/run/rs/base"), "/run/rs/base");
+    }
+
+    #[test]
+    fn self_channel_without_sockets() {
+        let t = UnixTransport::connect(&UnixOptions::new(1, 0, test_base())).unwrap();
+        t.send(0, vec![7]);
+        assert_eq!(t.recv(0), vec![7]);
+        assert_eq!(t.exchange(0, vec![8]), vec![8]);
+    }
+
+    #[test]
+    fn link_traffic_reports_the_unix_class() {
+        let base = test_base();
+        let mut ts = fabric(2, &base);
+        let t1 = ts.pop().unwrap();
+        let t0 = ts.pop().unwrap();
+        t0.send(1, vec![0; 25]);
+        assert_eq!(t1.recv(0).len(), 25);
+        let lt = t0.link_traffic();
+        assert_eq!(lt.len(), 1);
+        assert_eq!(lt[0].class, LinkClass::Unix);
+        assert_eq!((lt[0].frames, lt[0].bytes), (1, 100));
+        assert_eq!(t0.stats.bytes(), 100, "class-blind totals agree");
+        drop(t1);
+    }
+
+    #[test]
+    fn invalid_options_rejected() {
+        assert!(UnixTransport::connect(&UnixOptions::new(0, 0, test_base())).is_err());
+        assert!(UnixTransport::connect(&UnixOptions::new(2, 5, test_base())).is_err());
+    }
+}

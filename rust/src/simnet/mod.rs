@@ -15,6 +15,34 @@
 
 pub mod iteration;
 
+/// Which physical link class carries *intra-host* traffic — the
+/// transport-level counterpart of `net`'s fabric choice.  The α-β
+/// parameters differ per class ([`Machine::link_params`]): shared-memory
+/// channels (the in-process `LocalFabric` / NCCL-style SMP transfers)
+/// are cheapest, Unix-domain sockets skip loopback-TCP's per-segment
+/// protocol work, and loopback TCP pays the full stack.  `--algo auto`
+/// prices single-host schedules against the class the configured
+/// `--transport` actually uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IntraLink {
+    /// Shared-memory / PCIe-class transfers (in-process fabric).
+    Smp,
+    /// `AF_UNIX` stream sockets between same-host processes.
+    Unix,
+    /// TCP over the loopback interface.
+    Loopback,
+}
+
+impl IntraLink {
+    pub fn label(&self) -> &'static str {
+        match self {
+            IntraLink::Smp => "smp",
+            IntraLink::Unix => "unix",
+            IntraLink::Loopback => "loopback",
+        }
+    }
+}
+
 /// Device + network parameters of one simulated machine.
 #[derive(Clone, Debug)]
 pub struct Machine {
@@ -28,6 +56,17 @@ pub struct Machine {
     pub intra_alpha: f64,
     /// Per-byte transfer time of the intra-node link.
     pub intra_beta: f64,
+    /// Per-message latency of a Unix-domain socket between same-host
+    /// processes (`net::UnixTransport`): one kernel crossing per write,
+    /// no loopback-TCP segmentation/ack work.
+    pub uds_alpha: f64,
+    /// Per-byte transfer time over a Unix-domain socket.
+    pub uds_beta: f64,
+    /// Per-message latency of loopback TCP between same-host processes
+    /// (`net::TcpTransport` on 127.0.0.1).
+    pub lo_alpha: f64,
+    /// Per-byte transfer time over loopback TCP.
+    pub lo_beta: f64,
     /// Reduction cost per element (dense allreduce γ₂ contribution).
     pub gamma_reduce: f64,
     /// Sparse decompression (scatter-add) cost per element (γ₁).
@@ -72,6 +111,12 @@ impl Machine {
             // complex NCCL already uses, slightly faster point-to-point
             intra_alpha: 5e-6,
             intra_beta: 1.0 / 12e9,
+            // process-to-process on the same host: AF_UNIX clearly beats
+            // loopback TCP (no segmentation, single kernel crossing)
+            uds_alpha: 3e-6,
+            uds_beta: 1.0 / 9e9,
+            lo_alpha: 12e-6,
+            lo_beta: 1.0 / 4e9,
             gamma_reduce: 2.0e-11,
             gamma_decompress: 1.0e-10,
             sel_launch: 30e-6,
@@ -97,6 +142,10 @@ impl Machine {
             // so hierarchy degenerates there): NVLink-class local link
             intra_alpha: 5e-6,
             intra_beta: 1.0 / 10e9,
+            uds_alpha: 3e-6,
+            uds_beta: 1.0 / 8e9,
+            lo_alpha: 15e-6,
+            lo_beta: 1.0 / 3e9,
             gamma_reduce: 2.0e-11,
             gamma_decompress: 1.0e-10,
             sel_launch: 30e-6,
@@ -123,6 +172,10 @@ impl Machine {
             beta: 1.0 / 1.25e9,
             intra_alpha: 3e-6,
             intra_beta: 1.0 / 50e9,
+            uds_alpha: 2e-6,
+            uds_beta: 1.0 / 12e9,
+            lo_alpha: 10e-6,
+            lo_beta: 1.0 / 5e9,
             gamma_reduce: 2.0e-11,
             gamma_decompress: 1.0e-10,
             sel_launch: 30e-6,
@@ -145,12 +198,21 @@ impl Machine {
             _ => None,
         }
     }
+
+    /// The α-β parameters of one intra-host link class.  `Smp` is the
+    /// historical `intra_alpha`/`intra_beta` pair — the shared-memory
+    /// link the hierarchical closed form has always priced.
+    pub fn link_params(&self, link: IntraLink) -> (f64, f64) {
+        match link {
+            IntraLink::Smp => (self.intra_alpha, self.intra_beta),
+            IntraLink::Unix => (self.uds_alpha, self.uds_beta),
+            IntraLink::Loopback => (self.lo_alpha, self.lo_beta),
+        }
+    }
 }
 
-/// Virtual time of a recursive-doubling allgather where every rank
-/// contributes `bytes_per_rank`.  Walks the actual schedule: step s moves
-/// 2^s · m bytes, so Σ = lg(p)·α + (p-1)·m·β — Eq. 1's transfer term.
-pub fn allgather_time(machine: &Machine, p: usize, bytes_per_rank: f64) -> f64 {
+/// The recursive-doubling allgather walk over an explicit α-β link.
+fn allgather_time_ab(alpha: f64, beta: f64, p: usize, bytes_per_rank: f64) -> f64 {
     assert!(p >= 1);
     if p == 1 {
         return 0.0;
@@ -159,8 +221,55 @@ pub fn allgather_time(machine: &Machine, p: usize, bytes_per_rank: f64) -> f64 {
     let mut have = bytes_per_rank; // bytes accumulated so far
     let mut dist = 1;
     while dist < p {
-        t += machine.alpha + have * machine.beta;
+        t += alpha + have * beta;
         have *= 2.0;
+        dist <<= 1;
+    }
+    t
+}
+
+/// Virtual time of a recursive-doubling allgather where every rank
+/// contributes `bytes_per_rank`.  Walks the actual schedule: step s moves
+/// 2^s · m bytes, so Σ = lg(p)·α + (p-1)·m·β — Eq. 1's transfer term.
+pub fn allgather_time(machine: &Machine, p: usize, bytes_per_rank: f64) -> f64 {
+    allgather_time_ab(machine.alpha, machine.beta, p, bytes_per_rank)
+}
+
+/// [`allgather_time`] over one *intra-host* link class — what a flat
+/// sparse allgather costs when the whole world lives on one host and
+/// the fabric is Unix sockets or loopback TCP instead of the inter-node
+/// network.
+pub fn allgather_time_on(
+    machine: &Machine,
+    link: IntraLink,
+    p: usize,
+    bytes_per_rank: f64,
+) -> f64 {
+    let (alpha, beta) = machine.link_params(link);
+    allgather_time_ab(alpha, beta, p, bytes_per_rank)
+}
+
+/// The Rabenseifner allreduce walk over an explicit α-β link.
+fn allreduce_time_ab(machine: &Machine, alpha: f64, beta: f64, p: usize, bytes: f64) -> f64 {
+    assert!(p >= 1);
+    if p == 1 {
+        return 0.0;
+    }
+    let mut t = 0.0;
+    // reduce-scatter: step sizes M/2, M/4, ... M/p
+    let mut part = bytes / 2.0;
+    let mut dist = p / 2;
+    while dist >= 1 {
+        t += alpha + part * beta + (part / 4.0) * machine.gamma_reduce;
+        part /= 2.0;
+        dist /= 2;
+    }
+    // allgather: step sizes M/p, 2M/p, ... M/2
+    let mut part = bytes / p as f64;
+    let mut dist = 1;
+    while dist < p {
+        t += alpha + part * beta;
+        part *= 2.0;
         dist <<= 1;
     }
     t
@@ -170,30 +279,14 @@ pub fn allgather_time(machine: &Machine, p: usize, bytes_per_rank: f64) -> f64 {
 /// reduce-scatter (recursive halving, with per-element reduction) +
 /// allgather (recursive doubling) — Eq. 2's schedule.
 pub fn allreduce_time(machine: &Machine, p: usize, bytes: f64) -> f64 {
-    assert!(p >= 1);
-    if p == 1 {
-        return 0.0;
-    }
-    let elems = bytes / 4.0;
-    let mut t = 0.0;
-    // reduce-scatter: step sizes M/2, M/4, ... M/p
-    let mut part = bytes / 2.0;
-    let mut dist = p / 2;
-    while dist >= 1 {
-        t += machine.alpha + part * machine.beta + (part / 4.0) * machine.gamma_reduce;
-        part /= 2.0;
-        dist /= 2;
-    }
-    // allgather: step sizes M/p, 2M/p, ... M/2
-    let mut part = bytes / p as f64;
-    let mut dist = 1;
-    while dist < p {
-        t += machine.alpha + part * machine.beta;
-        part *= 2.0;
-        dist <<= 1;
-    }
-    let _ = elems;
-    t
+    allreduce_time_ab(machine, machine.alpha, machine.beta, p, bytes)
+}
+
+/// [`allreduce_time`] over one intra-host link class (single-host dense
+/// baseline over Unix sockets / loopback TCP).
+pub fn allreduce_time_on(machine: &Machine, link: IntraLink, p: usize, bytes: f64) -> f64 {
+    let (alpha, beta) = machine.link_params(link);
+    allreduce_time_ab(machine, alpha, beta, p, bytes)
 }
 
 /// Virtual time of one hierarchical allgather (`nodes` ×
@@ -209,6 +302,22 @@ pub fn hierarchical_allgather_time(
     ranks_per_node: usize,
     bytes_per_rank: f64,
 ) -> f64 {
+    hierarchical_allgather_time_on(machine, IntraLink::Smp, nodes, ranks_per_node, bytes_per_rank)
+}
+
+/// [`hierarchical_allgather_time`] with the intra-node phases priced on
+/// an explicit link class: `Smp` reproduces the historical walk exactly;
+/// `Unix`/`Loopback` price the gather/broadcast phases the way a
+/// process-per-rank `--transport unix`/`tcp` run actually pays them.
+/// The inter-node leader exchange always rides `alpha`/`beta`.
+pub fn hierarchical_allgather_time_on(
+    machine: &Machine,
+    link: IntraLink,
+    nodes: usize,
+    ranks_per_node: usize,
+    bytes_per_rank: f64,
+) -> f64 {
+    let (ia, ib) = machine.link_params(link);
     let p = nodes * ranks_per_node;
     assert!(p >= 1);
     if p == 1 {
@@ -217,7 +326,7 @@ pub fn hierarchical_allgather_time(
     let mut t = 0.0;
     // phase 1: the leader drains s-1 member messages one after another
     for _ in 1..ranks_per_node {
-        t += machine.intra_alpha + bytes_per_rank * machine.intra_beta;
+        t += ia + bytes_per_rank * ib;
     }
     // phase 2: the leader allgather dispatches like the real collective
     // — recursive doubling for power-of-two node counts (blobs double
@@ -239,7 +348,7 @@ pub fn hierarchical_allgather_time(
     // phase 3: the leader pushes the world blob to each member in turn
     let world_bytes = p as f64 * bytes_per_rank;
     for _ in 1..ranks_per_node {
-        t += machine.intra_alpha + world_bytes * machine.intra_beta;
+        t += ia + world_bytes * ib;
     }
     t
 }
@@ -361,6 +470,35 @@ mod tests {
         let small = allreduce_bandwidth(&m, 8, 4e3);
         let large = allreduce_bandwidth(&m, 8, 64e6);
         assert!(small < large / 3.0, "small={small:e} large={large:e}");
+    }
+
+    #[test]
+    fn link_classes_price_distinctly() {
+        // Smp delegation is exact (same code path, same floats), and on
+        // every preset AF_UNIX beats loopback TCP on both axes, so every
+        // schedule walked over Unix is strictly cheaper than Loopback.
+        for m in [Machine::muradin(), Machine::piz_daint(), Machine::fatnode()] {
+            assert_eq!(
+                hierarchical_allgather_time_on(&m, IntraLink::Smp, 4, 4, 1e6),
+                hierarchical_allgather_time(&m, 4, 4, 1e6),
+                "{}: Smp must reproduce the historical walk",
+                m.name
+            );
+            let (ua, ub) = m.link_params(IntraLink::Unix);
+            let (la, lb) = m.link_params(IntraLink::Loopback);
+            assert!(ua < la && ub < lb, "{}: unix must beat loopback", m.name);
+            for bytes in [4e3, 1e6, 64e6] {
+                let uds = allgather_time_on(&m, IntraLink::Unix, 8, bytes);
+                let lo = allgather_time_on(&m, IntraLink::Loopback, 8, bytes);
+                assert!(uds < lo, "{} allgather bytes={bytes}: {uds} !< {lo}", m.name);
+                let uds = allreduce_time_on(&m, IntraLink::Unix, 8, bytes);
+                let lo = allreduce_time_on(&m, IntraLink::Loopback, 8, bytes);
+                assert!(uds < lo, "{} allreduce bytes={bytes}: {uds} !< {lo}", m.name);
+            }
+        }
+        assert_eq!(IntraLink::Unix.label(), "unix");
+        assert_eq!(IntraLink::Smp.label(), "smp");
+        assert_eq!(IntraLink::Loopback.label(), "loopback");
     }
 
     #[test]

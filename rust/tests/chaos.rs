@@ -10,9 +10,10 @@
 use redsync::collectives::mux::{TagChannel, TagMux};
 use redsync::collectives::{LocalFabric, Transport};
 use redsync::net::frame::{read_frame, write_frame, MAX_FRAME_WORDS};
-use redsync::net::{free_loopback_addr, TcpOptions, TcpTransport};
+use redsync::net::{free_loopback_addr, TcpOptions, TcpTransport, UnixTransport};
 use std::io::Write;
 use std::net::{Shutdown, TcpStream};
+use std::os::unix::net::UnixStream;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::thread;
@@ -111,6 +112,28 @@ fn peer_fin_mid_message_is_clean_error() {
     fake.flush().unwrap();
     let _ = fake.shutdown(Shutdown::Write);
     let err = with_timeout(move || t0.recv_checked(1)).unwrap_err();
+    assert!(err.reason.contains("broke"), "{err}");
+    drop(fake);
+}
+
+#[test]
+fn unix_peer_fin_mid_message_is_clean_error() {
+    // same injection as the TCP test above, but over a Unix-socket link:
+    // the shared data plane must classify the mid-frame EOF identically
+    let (mine, theirs) = UnixStream::pair().expect("socketpair");
+    let t0 = UnixTransport::from_streams(0, 2, vec![None, Some(mine)]);
+    let mut fake = theirs;
+    // a valid header promising 8 words, 3 words of payload, then FIN
+    let mut partial = Vec::new();
+    partial.extend_from_slice(&8u32.to_le_bytes());
+    for w in [1u32, 2, 3] {
+        partial.extend_from_slice(&w.to_le_bytes());
+    }
+    fake.write_all(&partial).unwrap();
+    fake.flush().unwrap();
+    let _ = fake.shutdown(Shutdown::Write);
+    let err = with_timeout(move || t0.recv_checked(1)).unwrap_err();
+    assert_eq!(err.peer, 1);
     assert!(err.reason.contains("broke"), "{err}");
     drop(fake);
 }

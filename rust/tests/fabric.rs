@@ -1,0 +1,317 @@
+//! The fabric matrix: Unix-socket and mixed link-class fabrics against
+//! TCP and the in-process fabric.
+//!
+//! Every fabric frames messages identically, so each test runs the same
+//! collective schedule — sequential and mux-multiplexed, flat and
+//! hierarchical — over several fabrics and holds results bit-identical
+//! and the summed `TrafficStats` word-exact.  A watchdog turns would-be
+//! deadlocks into failures.  Socket paths are namespaced per test
+//! (pid + counter) so parallel tests never collide.
+
+use redsync::collectives::transport::TrafficStats;
+use redsync::collectives::{
+    allgather, allreduce_mean, concat, hierarchical_allgather, LinkClass, LocalFabric, TagChannel,
+    TagMux, Topology, Transport,
+};
+use redsync::net::{
+    free_loopback_addr, socket_base, MixedFabric, MixedOptions, TcpOptions, TcpTransport,
+    UnixOptions, UnixTransport,
+};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+static NEXT_NS: AtomicU32 = AtomicU32::new(0);
+
+/// Fresh socket-path namespace: unique per process *and* per call.
+fn test_base() -> String {
+    format!("/tmp/rs-fab-{}-{}", std::process::id(), NEXT_NS.fetch_add(1, Ordering::Relaxed))
+}
+
+/// Bootstrap a full TCP mesh on loopback; returned in rank order.
+fn tcp_fabric(world: usize) -> Vec<TcpTransport> {
+    let addr = free_loopback_addr();
+    let handles: Vec<_> = (0..world)
+        .map(|rank| {
+            let opts = TcpOptions::new(world, rank, addr.clone());
+            thread::spawn(move || TcpTransport::connect(&opts).expect("tcp bootstrap"))
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Bootstrap a full AF_UNIX mesh under a fresh namespace.
+fn unix_fabric(world: usize) -> Vec<UnixTransport> {
+    let base = test_base();
+    let handles: Vec<_> = (0..world)
+        .map(|rank| {
+            let opts = UnixOptions::new(world, rank, base.clone());
+            thread::spawn(move || UnixTransport::connect(&opts).expect("unix bootstrap"))
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Bootstrap a mixed fabric: Unix for same-node pairs, TCP across
+/// "nodes" (all on this host — the link-class split is what's under
+/// test, not actual placement).
+fn mixed_fabric(topo: Topology) -> Vec<MixedFabric> {
+    let world = topo.world();
+    let addr = free_loopback_addr();
+    let handles: Vec<_> = (0..world)
+        .map(|rank| {
+            let opts = MixedOptions::new(world, rank, addr.clone(), topo);
+            thread::spawn(move || MixedFabric::connect(&opts).expect("mixed bootstrap"))
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Run `f` once per rank on its own thread.  Panics (instead of hanging)
+/// if any rank is still blocked after 60s — the deadlock watchdog.
+fn run_ranks<T, F, R>(transports: Vec<T>, f: F) -> Vec<R>
+where
+    T: Transport + Send + 'static,
+    F: Fn(T) -> R + Send + Sync + 'static,
+    R: Send + 'static,
+{
+    let f = Arc::new(f);
+    let (done_tx, done_rx) = channel();
+    let handles: Vec<_> = transports
+        .into_iter()
+        .map(|t| {
+            let f = Arc::clone(&f);
+            let done = done_tx.clone();
+            thread::spawn(move || {
+                let r = f(t);
+                let _ = done.send(());
+                r
+            })
+        })
+        .collect();
+    drop(done_tx);
+    for _ in 0..handles.len() {
+        done_rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("a rank did not finish within 60s (deadlock or crash)");
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// The engine × algorithm matrix the coordinator can drive, as raw
+/// collectives: sequential and mux-multiplexed engines, flat and
+/// hierarchical schedules, plus a dense allreduce.  Returns every result
+/// word so the comparison is bit-exact, never float-approximate.
+fn engine_matrix<T: Transport + Sync>(t: &T, topo: Topology) -> Vec<u32> {
+    let mut out = Vec::new();
+    let msg: Vec<u32> = (0..t.rank() + 3).map(|i| (t.rank() * 1000 + i) as u32).collect();
+    // sequential × flat
+    out.extend(concat(allgather(t, msg.clone())));
+    // sequential × hierarchical
+    for blob in hierarchical_allgather(t, topo, msg.clone()) {
+        out.extend(blob);
+    }
+    // dense allreduce bits
+    let mut x: Vec<f32> =
+        (0..257).map(|i| (t.rank() + 1) as f32 * (i as f32 + 0.5) * 0.1).collect();
+    allreduce_mean(t, &mut x);
+    out.extend(x.iter().map(|v| v.to_bits()));
+    // pipelined engine surrogate: the same flat + hierarchical schedules
+    // through a mux bucket channel (every byte gains a tag word — on
+    // every fabric equally)
+    let mux = Arc::new(TagMux::new(t, 2));
+    let chan = TagChannel::new(Arc::clone(&mux), 1);
+    out.extend(concat(allgather(&chan, msg.clone())));
+    for blob in hierarchical_allgather(&chan, topo, msg) {
+        out.extend(blob);
+    }
+    out
+}
+
+/// Sum of per-endpoint traffic counters.
+fn total_words(stats: &[Arc<TrafficStats>]) -> (u64, u64) {
+    (
+        stats.iter().map(|s| s.bytes() / 4).sum(),
+        stats.iter().map(|s| s.message_count()).sum(),
+    )
+}
+
+#[test]
+fn engine_matrix_bitmatches_across_all_four_fabrics() {
+    let world = 4;
+    let topo = Topology::new(2, 2);
+
+    let mut local = LocalFabric::new(world);
+    let local_stats = Arc::clone(&local.stats);
+    let want = run_ranks(local.take_all(), move |t| engine_matrix(&t, topo));
+    let want_words = (local_stats.bytes() / 4, local_stats.message_count());
+
+    let tcp = tcp_fabric(world);
+    let tcp_stats: Vec<_> = tcp.iter().map(|t| Arc::clone(&t.stats)).collect();
+    let got_tcp = run_ranks(tcp, move |t| engine_matrix(&t, topo));
+
+    let unix = unix_fabric(world);
+    let unix_stats: Vec<_> = unix.iter().map(|t| Arc::clone(&t.stats)).collect();
+    let got_unix = run_ranks(unix, move |t| engine_matrix(&t, topo));
+
+    let mixed = mixed_fabric(topo);
+    let mixed_stats: Vec<_> = mixed.iter().map(|t| Arc::clone(&t.stats)).collect();
+    let got_mixed = run_ranks(mixed, move |t| engine_matrix(&t, topo));
+
+    for (name, got) in [("tcp", &got_tcp), ("unix", &got_unix), ("mixed", &got_mixed)] {
+        for (rank, (w, g)) in want.iter().zip(got.iter()).enumerate() {
+            assert_eq!(w, g, "rank {rank}: {name} fabric diverged from LocalFabric");
+        }
+    }
+    // identical schedules move identical words: every fabric's summed
+    // counters must equal the shared LocalFabric counter, word-exact
+    for (name, stats) in
+        [("tcp", &tcp_stats), ("unix", &unix_stats), ("mixed", &mixed_stats)]
+    {
+        assert_eq!(total_words(stats), want_words, "{name} traffic accounting differs");
+    }
+}
+
+#[test]
+fn multi_megabyte_exchange_over_unix() {
+    // 1.5M words = 6 MB each way: far beyond one socket buffer, so this
+    // exercises framing across partial reads/writes and the writer
+    // thread's batching under backpressure.
+    let n = 1_500_000usize;
+    let unix = unix_fabric(2);
+    let results = run_ranks(unix, move |t| {
+        let peer = 1 - t.rank();
+        let msg: Vec<u32> =
+            (0..n as u32).map(|i| i.wrapping_mul(0x9E37_79B9) ^ t.rank() as u32).collect();
+        t.exchange(peer, msg)
+    });
+    for (rank, got) in results.iter().enumerate() {
+        let peer = (1 - rank) as u32;
+        assert_eq!(got.len(), n);
+        for (i, &w) in got.iter().enumerate() {
+            assert_eq!(w, (i as u32).wrapping_mul(0x9E37_79B9) ^ peer, "word {i} corrupted");
+        }
+    }
+}
+
+#[test]
+fn unbatched_writes_move_identical_bytes_with_more_syscalls() {
+    // the REDSYNC_NO_WRITE_BATCH lever must change syscall counts only —
+    // never results, never payload accounting
+    let run = |batch: bool| {
+        let base = test_base();
+        let handles: Vec<_> = (0..2usize)
+            .map(|rank| {
+                let mut opts = UnixOptions::new(2, rank, base.clone());
+                opts.batch = batch;
+                thread::spawn(move || UnixTransport::connect(&opts).expect("unix bootstrap"))
+            })
+            .collect();
+        let ts: Vec<UnixTransport> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let stats: Vec<_> = ts.iter().map(|t| Arc::clone(&t.stats)).collect();
+        let links: Vec<_> = ts.iter().map(|t| t.link_stats()).collect();
+        let results = run_ranks(ts, |t| {
+            let peer = 1 - t.rank();
+            // a burst of small frames: the batched writer can coalesce,
+            // the unbatched one must not
+            let mut got = Vec::new();
+            for i in 0..64u32 {
+                t.send(peer, vec![t.rank() as u32, i]);
+            }
+            for _ in 0..64 {
+                got.extend(t.recv(peer));
+            }
+            got
+        });
+        let words: u64 = stats.iter().map(|s| s.bytes() / 4).sum();
+        let writes: u64 = links
+            .iter()
+            .flat_map(|l| l.snapshot())
+            .map(|lt| lt.writes)
+            .sum();
+        (results, words, writes)
+    };
+    let (batched, batched_words, batched_writes) = run(true);
+    let (unbatched, unbatched_words, unbatched_writes) = run(false);
+    assert_eq!(batched, unbatched, "batching changed the bits");
+    assert_eq!(batched_words, unbatched_words, "batching changed payload accounting");
+    assert!(
+        batched_writes <= unbatched_writes,
+        "batched {batched_writes} writes !<= unbatched {unbatched_writes}"
+    );
+}
+
+#[test]
+fn mixed_fabric_splits_link_classes_by_topology() {
+    // 2 "nodes" × 2 ranks: {0,1} and {2,3} share a node
+    let topo = Topology::new(2, 2);
+    let mixed = mixed_fabric(topo);
+    for t in &mixed {
+        let rank = t.rank();
+        for peer in 0..4usize {
+            let want = if peer == rank {
+                LinkClass::Mem
+            } else if topo.same_node(rank, peer) {
+                LinkClass::Unix
+            } else {
+                LinkClass::Tcp
+            };
+            assert_eq!(t.class_of(peer), want, "rank {rank} -> {peer}");
+        }
+    }
+    // all-pairs exchange: per-rank link classes account for every byte
+    let results = run_ranks(mixed, |t| {
+        for peer in 0..4usize {
+            let got = t.exchange(peer, vec![t.rank() as u32; 25]);
+            assert_eq!(got, vec![peer as u32; 25]);
+        }
+        let lt = t.link_traffic();
+        let class_bytes: u64 = lt.iter().map(|l| l.bytes).sum();
+        (lt, class_bytes, t.stats.bytes())
+    });
+    for (rank, (lt, class_bytes, total_bytes)) in results.iter().enumerate() {
+        assert_eq!(class_bytes, total_bytes, "rank {rank}: unclassified bytes");
+        // 4 sends of 25 words each: 1 self (mem), 1 same-node (unix),
+        // 2 cross-node (tcp)
+        let by = |c: LinkClass| lt.iter().find(|l| l.class == c).expect("class present");
+        assert_eq!((by(LinkClass::Mem).frames, by(LinkClass::Mem).bytes), (1, 100));
+        assert_eq!((by(LinkClass::Unix).frames, by(LinkClass::Unix).bytes), (1, 100));
+        assert_eq!((by(LinkClass::Tcp).frames, by(LinkClass::Tcp).bytes), (2, 200));
+        assert_eq!(by(LinkClass::Mem).writes, 0, "mem links never enter the kernel");
+    }
+}
+
+#[test]
+fn socket_files_are_gone_after_fabric_teardown() {
+    let base = test_base();
+    {
+        let handles: Vec<_> = (0..3usize)
+            .map(|rank| {
+                let opts = UnixOptions::new(3, rank, base.clone());
+                thread::spawn(move || UnixTransport::connect(&opts).expect("unix bootstrap"))
+            })
+            .collect();
+        let ts: Vec<UnixTransport> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        drop(ts);
+    }
+    let sb = socket_base(&base);
+    assert_eq!(sb, base, "a path-like rendezvous is used verbatim");
+    for suffix in [".rdv", ".r1", ".r2"] {
+        let path = format!("{base}{suffix}");
+        assert!(
+            !std::path::Path::new(&path).exists(),
+            "{path} left behind after bootstrap + teardown"
+        );
+    }
+}
+
+#[test]
+fn overlong_rendezvous_path_fails_fast_with_counsel() {
+    let base = format!("/tmp/{}", "x".repeat(120));
+    let err = UnixTransport::connect(&UnixOptions::new(2, 0, base)).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("sockaddr_un"), "want the why: {msg}");
+    assert!(msg.contains("--rendezvous"), "want the fix: {msg}");
+}
