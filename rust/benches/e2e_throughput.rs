@@ -52,6 +52,14 @@
 //! identical socket frames, strictly fewer write syscalls when batching
 //! — plus a bulk-push leg pinning Unix intra-node throughput against
 //! loopback TCP.  CI runs this and uploads `BENCH_fabric.json`.
+//!
+//! `--ckpt-smoke [OUT.json]` is the rejoin A/B over the in-process
+//! fleet: the same kill-then-rejoin schedule restored once by the
+//! full-image donor stream and once by the content-addressed delta
+//! rejoin (chunk repo + manifest diff), asserting bit-identical final
+//! state and strictly fewer join words on the delta path, and reporting
+//! chunk/dedup/verify counts.  CI runs this and uploads
+//! `BENCH_ckpt.json`.
 
 use redsync::collectives::mux::TagMux;
 use redsync::collectives::{Algo, Gathered, LinkClass, Topology, Transport};
@@ -692,6 +700,145 @@ fn elastic_smoke(json_path: Option<&str>) {
 }
 
 // ---------------------------------------------------------------------
+// Checkpoint-repository smoke: delta rejoin vs full-image A/B
+// ---------------------------------------------------------------------
+
+/// 4 ranks over the in-process fleet, rank 2 killed at step 6 and
+/// rejoined at step 12 of 18: restore the rejoiner once by the
+/// full-image donor stream and once by the content-addressed delta
+/// rejoin, assert bit-identical final state, and report the wire words
+/// each join moved plus the repo's chunk accounting.
+fn ckpt_smoke(json_path: Option<&str>) {
+    use redsync::elastic::synthetic::{self, FrozenWorkload};
+    use redsync::elastic::{
+        fresh_checkpoint, run_local_fleet, ElasticOpts, ElasticStatus, FaultSpec, FleetOutcome,
+    };
+    use std::time::Duration;
+
+    const WORLD: usize = 4;
+    const STEPS: usize = 18;
+    const KILL_AT: usize = 6;
+    const REJOIN_AT: usize = 12;
+    let seed = 0xE1A5u64;
+    // layers 0/3/4 frozen: their chunks survive the kill untouched, so
+    // the delta rejoin has real content to dedup (the Gaussian workload
+    // would dirty every chunk and degenerate to a full image)
+    let frozen = vec![0usize, 3, 4];
+    let dir = std::env::temp_dir().join(format!("redsync_ckpt_smoke_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("tmp dir");
+
+    let run = |tag: &str, full_image: bool| -> FleetOutcome {
+        let prefix = dir.join(tag).to_string_lossy().into_owned();
+        let opts = ElasticOpts {
+            steps: STEPS,
+            fusion_cap_elems: 3000,
+            heartbeat: Duration::from_millis(50),
+            log_every: STEPS,
+            kill: vec![FaultSpec { rank: 2, step: KILL_AT }],
+            rejoin: vec![FaultSpec { rank: 2, step: REJOIN_AT }],
+            ckpt_prefix: Some(prefix.clone()),
+            ckpt_every: KILL_AT,
+            ckpt_repo: Some(format!("{prefix}_repo")),
+            rejoin_full_image: full_image,
+            ..ElasticOpts::default()
+        };
+        let specs = synthetic::specs();
+        let frozen = frozen.clone();
+        run_local_fleet(
+            WORLD,
+            &specs,
+            &opts,
+            |_r| {
+                Ok(fresh_checkpoint(
+                    synthetic::init_params(seed),
+                    &synthetic::specs(),
+                    opts.optimizer,
+                    seed,
+                ))
+            },
+            move |_r| Ok(FrozenWorkload { seed, frozen: frozen.clone() }),
+        )
+        .expect("fleet")
+    };
+
+    println!(
+        "# ckpt smoke: {WORLD} ranks in-process, {STEPS} steps, kill rank 2 @ {KILL_AT}, \
+         rejoin @ {REJOIN_AT}; full-image vs chunk-delta rejoin"
+    );
+    let start = Instant::now();
+    let full = run("full", true);
+    let full_secs = start.elapsed().as_secs_f64();
+    let start = Instant::now();
+    let delta = run("delta", false);
+    let delta_secs = start.elapsed().as_secs_f64();
+
+    for (label, fleet) in [("full", &full), ("delta", &delta)] {
+        for (rank, out) in fleet.ranks.iter().enumerate() {
+            assert_eq!(out.status, ElasticStatus::Finished, "{label} rank {rank}");
+            assert!(out.replicas_consistent, "{label} rank {rank}");
+        }
+    }
+    let bit_identical = full.ranks[0].param_hash == delta.ranks[0].param_hash;
+    assert!(bit_identical, "both rejoin flavors must restore the same bytes");
+
+    let join_sum = |f: &FleetOutcome| -> u64 { f.ranks.iter().map(|o| o.rejoin.join_words).sum() };
+    let full_words = join_sum(&full);
+    let delta_words = join_sum(&delta);
+    assert!(
+        delta_words < full_words,
+        "delta rejoin must move fewer words ({delta_words} vs {full_words})"
+    );
+    let rj = &delta.ranks[2].rejoin;
+    let repo_sum = |pick: fn(&redsync::coordinator::metrics::RepoStats) -> u64| -> u64 {
+        delta.ranks.iter().map(|o| pick(&o.repo)).sum()
+    };
+
+    println!("{:>12} {:>12} {:>10}", "rejoin", "join words", "wall(s)");
+    println!("{:>12} {:>12} {:>10.3}", "full-image", full_words, full_secs);
+    println!("{:>12} {:>12} {:>10.3}", "delta", delta_words, delta_secs);
+    println!(
+        "delta moved {:.1}% of the full image: {} fetched / {} reused / {} verified chunks",
+        100.0 * delta_words as f64 / full_words as f64,
+        rj.fetched_chunks,
+        rj.reused_chunks,
+        rj.verified_chunks
+    );
+    println!(
+        "repo: {} manifests, {} chunks written / {} deduped / {} collected",
+        repo_sum(|r| r.manifests_written),
+        repo_sum(|r| r.chunks_written),
+        repo_sum(|r| r.chunks_deduped),
+        repo_sum(|r| r.chunks_collected)
+    );
+
+    let json = format!(
+        "{{\"bench\":\"ckpt_smoke\",\"world\":{WORLD},\"steps\":{STEPS},\
+         \"kill_step\":{KILL_AT},\"rejoin_step\":{REJOIN_AT},\
+         \"full_image_words\":{full_words},\"delta_words\":{delta_words},\
+         \"delta_fraction\":{:.6},\"fetched_chunks\":{},\"reused_chunks\":{},\
+         \"verified_chunks\":{},\"retries\":{},\"failovers\":{},\
+         \"chunks_written\":{},\"chunks_deduped\":{},\"chunks_collected\":{},\
+         \"manifests_written\":{},\"full_secs\":{full_secs:.6},\
+         \"delta_secs\":{delta_secs:.6},\"bit_identical\":{bit_identical}}}",
+        delta_words as f64 / full_words as f64,
+        rj.fetched_chunks,
+        rj.reused_chunks,
+        rj.verified_chunks,
+        rj.retries,
+        rj.failovers,
+        repo_sum(|r| r.chunks_written),
+        repo_sum(|r| r.chunks_deduped),
+        repo_sum(|r| r.chunks_collected),
+        repo_sum(|r| r.manifests_written)
+    );
+    if let Some(path) = json_path {
+        std::fs::write(path, format!("{json}\n")).expect("write bench json");
+        println!("wrote {path}");
+    }
+    println!("{json}");
+}
+
+// ---------------------------------------------------------------------
 // Observability smoke: tracing overhead + cross-lane overlap
 // ---------------------------------------------------------------------
 
@@ -1044,6 +1191,10 @@ fn main() {
     }
     if let Some(pos) = args.iter().position(|a| a == "--fabric-smoke") {
         fabric_smoke(args.get(pos + 1).map(String::as_str));
+        return;
+    }
+    if let Some(pos) = args.iter().position(|a| a == "--ckpt-smoke") {
+        ckpt_smoke(args.get(pos + 1).map(String::as_str));
         return;
     }
     if redsync::models::schema::Manifest::load(

@@ -40,6 +40,13 @@ pub struct ElasticConfig {
     pub ckpt_every: usize,
     /// Resume every rank from `{resume}_rank{R}.rsck`.
     pub resume: Option<String>,
+    /// Content-addressed chunk repository root (`--ckpt-repo`); each
+    /// rank keeps `{root}/rank{R}/{chunks,manifests}` and rejoins by
+    /// manifest delta instead of a full parameter image.
+    pub ckpt_repo: Option<String>,
+    /// How many surviving ranks serve a delta rejoin in parallel
+    /// (`--rejoin-donors`).
+    pub rejoin_donors: usize,
 }
 
 impl Default for ElasticConfig {
@@ -54,6 +61,8 @@ impl Default for ElasticConfig {
             ckpt: None,
             ckpt_every: 0,
             resume: None,
+            ckpt_repo: None,
+            rejoin_donors: 2,
         }
     }
 }
@@ -469,6 +478,11 @@ impl TrainConfig {
                 let p = as_str()?.to_string();
                 self.elastic.resume = if p.is_empty() { None } else { Some(p) };
             }
+            "ckpt_repo" => {
+                let p = as_str()?.to_string();
+                self.elastic.ckpt_repo = if p.is_empty() { None } else { Some(p) };
+            }
+            "rejoin_donors" => self.elastic.rejoin_donors = as_usize()?,
             other => return Err(ConfigError::Invalid(format!("unknown config key '{other}'"))),
         }
         Ok(())
@@ -575,6 +589,8 @@ impl TrainConfig {
             ("ckpt", json::s(self.elastic.ckpt.clone().unwrap_or_default())),
             ("ckpt_every", json::num(self.elastic.ckpt_every as f64)),
             ("resume", json::s(self.elastic.resume.clone().unwrap_or_default())),
+            ("ckpt_repo", json::s(self.elastic.ckpt_repo.clone().unwrap_or_default())),
+            ("rejoin_donors", json::num(self.elastic.rejoin_donors as f64)),
         ])
     }
 
@@ -662,11 +678,12 @@ impl TrainConfig {
                     "fault injection (kill/stall/rejoin) requires --elastic".into(),
                 ));
             }
-            if e.resume.is_some() || e.ckpt.is_some() || e.ckpt_every != 0 {
+            if e.resume.is_some() || e.ckpt.is_some() || e.ckpt_every != 0 || e.ckpt_repo.is_some()
+            {
                 // the plain trainer never reads these — accepting them
                 // would silently train from fresh state
                 return Err(ConfigError::Invalid(
-                    "resume/ckpt/ckpt_every are elastic-run knobs; add --elastic".into(),
+                    "resume/ckpt/ckpt_every/ckpt_repo are elastic-run knobs; add --elastic".into(),
                 ));
             }
             return Ok(());
@@ -674,6 +691,11 @@ impl TrainConfig {
         if e.ckpt_every > 0 && e.ckpt.is_none() {
             return Err(ConfigError::Invalid(
                 "ckpt_every > 0 writes nothing without a --ckpt prefix".into(),
+            ));
+        }
+        if e.rejoin_donors == 0 {
+            return Err(ConfigError::Invalid(
+                "rejoin_donors must be >= 1 (the delta rejoin needs a manifest source)".into(),
             ));
         }
         if self.world > MAX_ELASTIC_WORLD {
@@ -995,5 +1017,33 @@ mod tests {
         cfg.algo = AlgoMode::Auto;
         cfg.topology = Some(Topology::new(1, 4));
         assert!(cfg.validate().is_err(), "elastic forbids algo=auto");
+    }
+
+    #[test]
+    fn ckpt_repo_and_donor_knobs() {
+        // the chunk repo rides the elastic flag like the other
+        // checkpoint knobs; a plain run must not silently ignore it
+        let mut plain = TrainConfig::default();
+        plain.apply_overrides(&["ckpt_repo=/tmp/repo".into()]).unwrap();
+        assert!(plain.validate().is_err(), "ckpt_repo without --elastic is a silent no-op");
+        // ...but the rejoin_donors *default* (2) must not trip that
+        // guard on a plain run
+        TrainConfig::default().validate().unwrap();
+
+        let mut cfg = TrainConfig::default();
+        cfg.apply_overrides(&[
+            "elastic=true".into(),
+            "ckpt_repo=/tmp/repo".into(),
+            "rejoin_donors=3".into(),
+        ])
+        .unwrap();
+        assert_eq!(cfg.elastic.ckpt_repo.as_deref(), Some("/tmp/repo"));
+        assert_eq!(cfg.elastic.rejoin_donors, 3);
+        cfg.validate().unwrap();
+        let s = cfg.to_json().to_json();
+        assert!(s.contains("ckpt_repo"), "round-trips through the config dump: {s}");
+
+        cfg.apply_overrides(&["rejoin_donors=0".into()]).unwrap();
+        assert!(cfg.validate().is_err(), "a delta rejoin needs at least one donor");
     }
 }

@@ -6,39 +6,123 @@
 //! ```text
 //! magic "RSCK" | version u32 | step u64 | seed u64
 //! | view_epoch u64                                 (version >= 2)
+//! | chunk_elems u32                                (version >= 3)
 //! | n_layers u32
-//! per layer: n u64 | params f32[n] | flags u32
+//! per layer: n u64 | flags u32 | params f32[n]
 //!            [residual f32[n] | momentum f32[n]]   (flag bit 0)
 //!            [velocity f32[n]]                     (flag bit 1)
+//! digest table (version >= 3): per layer, per present section in
+//!            params/residual/momentum/velocity order:
+//!            n_chunks u32 | chunk digest u64 × n_chunks
 //! trailer: fnv hash u64 of everything above
 //! ```
 //!
-//! Version 2 adds the membership `view_epoch` (DESIGN.md
+//! Version 2 added the membership `view_epoch` (DESIGN.md
 //! §Elastic-Membership): resumes and rejoins re-key the data sharder by
 //! `(seed, view_epoch, rank)`, so the epoch must travel with the state.
-//! Version-1 blobs still parse (epoch 0).
+//!
+//! Version 3 adds the per-chunk digest table (DESIGN.md
+//! §Checkpoint-Repository): every section is chunked at `chunk_elems`
+//! f32 values and each chunk carries its streaming FNV-1a digest — the
+//! same content address the [`crate::elastic::repo`] store and the
+//! delta-rejoin protocol key on, so a checkpoint file *is* a manifest.
+//! Version-1 and version-2 blobs still parse (epoch 0 / no table).
+//!
+//! Writes are atomic: [`write_atomic`] goes temp-file → fsync → rename,
+//! so a crash mid-write can never shadow a previously good checkpoint.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 4] = b"RSCK";
-const VERSION: u32 = 2;
+use crate::elastic::chunk;
 
+const MAGIC: &[u8; 4] = b"RSCK";
+const VERSION: u32 = 3;
+
+/// Why a checkpoint could not be read, with the offending path and a
+/// remedy in the message. `Checkpoint::from_bytes` reports `path` as
+/// `<bytes>`; `Checkpoint::load` patches the real path in via [`CheckpointError::at`].
 #[derive(Debug)]
 pub enum CheckpointError {
     Io(std::io::Error),
-    BadMagic,
-    BadVersion(u32),
-    Corrupt(String),
+    /// No file at the path — nothing was ever saved there.
+    Missing { path: String },
+    /// File shorter than the fixed header + trailer: a torn or
+    /// interrupted write.
+    ShortRead { path: String, len: usize },
+    /// First four bytes are not "RSCK": not a checkpoint at all.
+    BadMagic { path: String },
+    /// A version this binary does not understand.
+    BadVersion { path: String, version: u32 },
+    /// Whole-file FNV trailer mismatch: bit corruption on disk.
+    Digest { path: String, stored: u64, computed: u64 },
+    /// Structurally inconsistent (truncated tensor, bad digest table, …).
+    Corrupt { path: String, detail: String },
+}
+
+fn p(path: &str) -> &str {
+    if path.is_empty() { "<bytes>" } else { path }
+}
+
+impl CheckpointError {
+    /// Attach the file path to an error produced while parsing bytes.
+    pub fn at(self, path: &str) -> Self {
+        let path = path.to_string();
+        match self {
+            CheckpointError::Io(e) => CheckpointError::Io(e),
+            CheckpointError::Missing { .. } => CheckpointError::Missing { path },
+            CheckpointError::ShortRead { len, .. } => CheckpointError::ShortRead { path, len },
+            CheckpointError::BadMagic { .. } => CheckpointError::BadMagic { path },
+            CheckpointError::BadVersion { version, .. } => {
+                CheckpointError::BadVersion { path, version }
+            }
+            CheckpointError::Digest { stored, computed, .. } => {
+                CheckpointError::Digest { path, stored, computed }
+            }
+            CheckpointError::Corrupt { detail, .. } => CheckpointError::Corrupt { path, detail },
+        }
+    }
 }
 
 impl std::fmt::Display for CheckpointError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             CheckpointError::Io(e) => write!(f, "io: {e}"),
-            CheckpointError::BadMagic => write!(f, "not a redsync checkpoint (bad magic)"),
-            CheckpointError::BadVersion(v) => write!(f, "unsupported checkpoint version {v}"),
-            CheckpointError::Corrupt(msg) => write!(f, "checkpoint corrupt: {msg}"),
+            CheckpointError::Missing { path } => write!(
+                f,
+                "checkpoint {} does not exist: nothing was saved under this prefix — \
+                 point --resume at a prefix a --ckpt run wrote, or drop --resume to start fresh",
+                p(path)
+            ),
+            CheckpointError::ShortRead { path, len } => write!(
+                f,
+                "checkpoint {} is only {len} bytes, shorter than a valid header: \
+                 a write was torn or interrupted — resume from the previous checkpoint \
+                 (atomic saves never overwrite it)",
+                p(path)
+            ),
+            CheckpointError::BadMagic { path } => write!(
+                f,
+                "{} is not a redsync checkpoint (bad magic): \
+                 check that --resume points at an .rsck file written by --ckpt",
+                p(path)
+            ),
+            CheckpointError::BadVersion { path, version } => write!(
+                f,
+                "checkpoint {} has unsupported version {version}: it was written by a \
+                 different redsync build — re-save it with this binary or upgrade",
+                p(path)
+            ),
+            CheckpointError::Digest { path, stored, computed } => write!(
+                f,
+                "checkpoint {} failed digest verification (stored {stored:#018x}, \
+                 computed {computed:#018x}): the file is bit-corrupt on disk — restore \
+                 it from the checkpoint repository (--ckpt-repo) or an older snapshot",
+                p(path)
+            ),
+            CheckpointError::Corrupt { path, detail } => {
+                write!(f, "checkpoint {} corrupt: {detail}", p(path))
+            }
         }
     }
 }
@@ -51,6 +135,28 @@ impl From<std::io::Error> for CheckpointError {
     }
 }
 
+fn corrupt(detail: impl Into<String>) -> CheckpointError {
+    CheckpointError::Corrupt { path: String::new(), detail: detail.into() }
+}
+
+/// Write `bytes` to `path` atomically: temp file in the same directory,
+/// fsync, then rename over the destination. A crash at any point leaves
+/// either the old file or the new one — never a torn mix.
+pub fn write_atomic(path: impl AsRef<Path>, bytes: &[u8]) -> std::io::Result<()> {
+    let path = path.as_ref();
+    let tmp = std::path::PathBuf::from(format!(
+        "{}.tmp.{}",
+        path.display(),
+        std::process::id()
+    ));
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
 /// One layer's persisted state.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct LayerState {
@@ -59,6 +165,22 @@ pub struct LayerState {
     pub residual: Option<(Vec<f32>, Vec<f32>)>,
     /// dense-path optimizer velocity.
     pub velocity: Option<Vec<f32>>,
+}
+
+impl LayerState {
+    /// The present sections in serialization order, with their names
+    /// (params / residual / momentum / velocity).
+    pub fn sections(&self) -> Vec<(&'static str, &[f32])> {
+        let mut out: Vec<(&'static str, &[f32])> = vec![("params", &self.params)];
+        if let Some((v, u)) = &self.residual {
+            out.push(("residual", v));
+            out.push(("momentum", u));
+        }
+        if let Some(vel) = &self.velocity {
+            out.push(("velocity", vel));
+        }
+        out
+    }
 }
 
 /// Full training state at a step boundary.
@@ -91,7 +213,7 @@ fn put_f32s(out: &mut Vec<u8>, h: &mut u64, xs: &[f32]) {
 fn get_f32s(buf: &[u8], pos: &mut usize, n: usize) -> Result<Vec<f32>, CheckpointError> {
     let need = n * 4;
     if buf.len() < *pos + need {
-        return Err(CheckpointError::Corrupt("truncated tensor".into()));
+        return Err(corrupt("truncated tensor"));
     }
     let out = buf[*pos..*pos + need]
         .chunks_exact(4)
@@ -102,8 +224,16 @@ fn get_f32s(buf: &[u8], pos: &mut usize, n: usize) -> Result<Vec<f32>, Checkpoin
 }
 
 impl Checkpoint {
-    /// Serialize to bytes (with trailer hash).
+    /// Serialize to bytes (version 3: digest table + trailer hash). The
+    /// digest table is computed at [`chunk::DEFAULT_CHUNK_ELEMS`]; it is
+    /// derived data, so it does not appear in the in-memory struct.
     pub fn to_bytes(&self) -> Vec<u8> {
+        self.to_bytes_chunked(chunk::DEFAULT_CHUNK_ELEMS)
+    }
+
+    /// Serialize with an explicit chunk width for the digest table.
+    pub fn to_bytes_chunked(&self, chunk_elems: usize) -> Vec<u8> {
+        assert!(chunk_elems > 0, "chunk_elems must be positive");
         let mut out = Vec::new();
         let mut h: u64 = 0xcbf29ce484222325;
         out.extend_from_slice(MAGIC);
@@ -111,6 +241,7 @@ impl Checkpoint {
         out.extend_from_slice(&self.step.to_le_bytes());
         out.extend_from_slice(&self.seed.to_le_bytes());
         out.extend_from_slice(&self.view_epoch.to_le_bytes());
+        out.extend_from_slice(&(chunk_elems as u32).to_le_bytes());
         out.extend_from_slice(&(self.layers.len() as u32).to_le_bytes());
         fnv(&mut h, &out[..]);
         for l in &self.layers {
@@ -129,26 +260,37 @@ impl Checkpoint {
                 put_f32s(&mut out, &mut h, vel);
             }
         }
+        for l in &self.layers {
+            for (_, xs) in l.sections() {
+                let digests = chunk::section_digests(xs, chunk_elems);
+                let start = out.len();
+                out.extend_from_slice(&(digests.len() as u32).to_le_bytes());
+                for d in &digests {
+                    out.extend_from_slice(&d.to_le_bytes());
+                }
+                fnv(&mut h, &out[start..]);
+            }
+        }
         out.extend_from_slice(&h.to_le_bytes());
         out
     }
 
-    /// Parse from bytes, verifying magic/version/hash.
+    /// Parse from bytes, verifying magic, version, the whole-file hash
+    /// and (version 3) every per-chunk digest.
     pub fn from_bytes(buf: &[u8]) -> Result<Checkpoint, CheckpointError> {
+        // v1 minimum: magic + version + step + seed + n_layers + trailer.
         if buf.len() < 4 + 4 + 8 + 8 + 4 + 8 {
-            return Err(CheckpointError::Corrupt("too short".into()));
+            return Err(CheckpointError::ShortRead { path: String::new(), len: buf.len() });
         }
         if &buf[..4] != MAGIC {
-            return Err(CheckpointError::BadMagic);
+            return Err(CheckpointError::BadMagic { path: String::new() });
         }
         let body = &buf[..buf.len() - 8];
         let mut h: u64 = 0xcbf29ce484222325;
         fnv(&mut h, body);
         let stored = u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
         if h != stored {
-            return Err(CheckpointError::Corrupt(format!(
-                "hash mismatch: {h:#x} vs {stored:#x}"
-            )));
+            return Err(CheckpointError::Digest { path: String::new(), stored, computed: h });
         }
         let mut pos = 4;
         let rd_u32 = |buf: &[u8], pos: &mut usize| {
@@ -163,26 +305,38 @@ impl Checkpoint {
         };
         let version = rd_u32(body, &mut pos);
         if version == 0 || version > VERSION {
-            return Err(CheckpointError::BadVersion(version));
+            return Err(CheckpointError::BadVersion { path: String::new(), version });
         }
         let step = rd_u64(body, &mut pos);
         let seed = rd_u64(body, &mut pos);
         let view_epoch = if version >= 2 {
             if body.len() < pos + 8 {
-                return Err(CheckpointError::Corrupt("truncated view epoch".into()));
+                return Err(corrupt("truncated view epoch"));
             }
             rd_u64(body, &mut pos)
         } else {
             0
         };
+        let chunk_elems = if version >= 3 {
+            if body.len() < pos + 4 {
+                return Err(corrupt("truncated chunk width"));
+            }
+            let c = rd_u32(body, &mut pos) as usize;
+            if c == 0 {
+                return Err(corrupt("zero chunk width"));
+            }
+            c
+        } else {
+            0
+        };
         if body.len() < pos + 4 {
-            return Err(CheckpointError::Corrupt("truncated layer count".into()));
+            return Err(corrupt("truncated layer count"));
         }
         let n_layers = rd_u32(body, &mut pos) as usize;
         let mut layers = Vec::with_capacity(n_layers);
         for _ in 0..n_layers {
             if body.len() < pos + 12 {
-                return Err(CheckpointError::Corrupt("truncated layer header".into()));
+                return Err(corrupt("truncated layer header"));
             }
             let n = rd_u64(body, &mut pos) as usize;
             let flags = rd_u32(body, &mut pos);
@@ -196,22 +350,63 @@ impl Checkpoint {
                 if flags & 2 != 0 { Some(get_f32s(body, &mut pos, n)?) } else { None };
             layers.push(LayerState { params, residual, velocity });
         }
+        if version >= 3 {
+            for (li, l) in layers.iter().enumerate() {
+                for (name, xs) in l.sections() {
+                    if body.len() < pos + 4 {
+                        return Err(corrupt("truncated digest table"));
+                    }
+                    let k = rd_u32(body, &mut pos) as usize;
+                    if k != chunk::chunk_count(xs.len(), chunk_elems) {
+                        return Err(corrupt(format!(
+                            "layer {li} {name}: digest table lists {k} chunks, \
+                             section has {}",
+                            chunk::chunk_count(xs.len(), chunk_elems)
+                        )));
+                    }
+                    for ci in 0..k {
+                        if body.len() < pos + 8 {
+                            return Err(corrupt("truncated digest table"));
+                        }
+                        let want = rd_u64(body, &mut pos);
+                        let (s, e) = chunk::chunk_range(xs.len(), chunk_elems, ci);
+                        let got = chunk::digest_f32(&xs[s..e]);
+                        if got != want {
+                            return Err(corrupt(format!(
+                                "layer {li} {name} chunk {ci}: digest mismatch \
+                                 ({got:#018x} vs stored {want:#018x})"
+                            )));
+                        }
+                    }
+                }
+            }
+        }
         if pos != body.len() {
-            return Err(CheckpointError::Corrupt("trailing bytes".into()));
+            return Err(corrupt("trailing bytes"));
         }
         Ok(Checkpoint { step, seed, view_epoch, layers })
     }
 
+    /// Save atomically (temp file → fsync → rename): a crash mid-write
+    /// never shadows a previously good checkpoint at `path`.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<(), CheckpointError> {
-        let mut f = std::fs::File::create(path)?;
-        f.write_all(&self.to_bytes())?;
+        write_atomic(path, &self.to_bytes())?;
         Ok(())
     }
 
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint, CheckpointError> {
+        let path = path.as_ref();
+        let shown = path.display().to_string();
         let mut buf = Vec::new();
-        std::fs::File::open(path)?.read_to_end(&mut buf)?;
-        Checkpoint::from_bytes(&buf)
+        let mut f = match std::fs::File::open(path) {
+            Ok(f) => f,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Err(CheckpointError::Missing { path: shown });
+            }
+            Err(e) => return Err(CheckpointError::Io(e)),
+        };
+        f.read_to_end(&mut buf)?;
+        Checkpoint::from_bytes(&buf).map_err(|e| e.at(&shown))
     }
 }
 
@@ -252,6 +447,14 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_bytes_odd_chunk_width() {
+        let ck = sample();
+        // chunk width that never divides the section sizes evenly
+        let back = Checkpoint::from_bytes(&ck.to_bytes_chunked(33)).unwrap();
+        assert_eq!(ck, back);
+    }
+
+    #[test]
     fn roundtrip_file() {
         let ck = sample();
         let path = std::env::temp_dir().join(format!("rsck_{}", std::process::id()));
@@ -265,12 +468,12 @@ mod tests {
     fn corruption_detected() {
         let ck = sample();
         let mut bytes = ck.to_bytes();
-        // flip a payload bit
+        // flip a payload bit: the whole-file trailer catches it first
         let mid = bytes.len() / 2;
         bytes[mid] ^= 1;
         assert!(matches!(
             Checkpoint::from_bytes(&bytes),
-            Err(CheckpointError::Corrupt(_))
+            Err(CheckpointError::Digest { .. })
         ));
     }
 
@@ -279,7 +482,10 @@ mod tests {
         let ck = sample();
         let mut bytes = ck.to_bytes();
         bytes[0] = b'X';
-        assert!(matches!(Checkpoint::from_bytes(&bytes), Err(CheckpointError::BadMagic)));
+        assert!(matches!(
+            Checkpoint::from_bytes(&bytes),
+            Err(CheckpointError::BadMagic { .. })
+        ));
         let mut bytes = ck.to_bytes();
         bytes[4] = 99;
         // version is inside the hash: corrupt hash fires first — either
@@ -299,6 +505,103 @@ mod tests {
     fn empty_checkpoint_roundtrips() {
         let ck = Checkpoint { step: 0, seed: 0, view_epoch: 0, layers: vec![] };
         assert_eq!(Checkpoint::from_bytes(&ck.to_bytes()).unwrap(), ck);
+    }
+
+    #[test]
+    fn resume_failures_are_distinct_and_name_the_path() {
+        let dir = std::env::temp_dir().join(format!("rsck_err_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // missing file
+        let missing = dir.join("never_written.rsck");
+        let e = Checkpoint::load(&missing).unwrap_err();
+        assert!(matches!(e, CheckpointError::Missing { .. }), "{e}");
+        assert!(e.to_string().contains("never_written.rsck"), "{e}");
+        assert!(e.to_string().contains("--resume"), "remedy missing: {e}");
+
+        // short read (torn write)
+        let short = dir.join("short.rsck");
+        std::fs::write(&short, b"RSCK\x03").unwrap();
+        let e = Checkpoint::load(&short).unwrap_err();
+        assert!(matches!(e, CheckpointError::ShortRead { len: 5, .. }), "{e}");
+        assert!(e.to_string().contains("short.rsck"), "{e}");
+
+        // bad magic
+        let junk = dir.join("junk.rsck");
+        std::fs::write(&junk, vec![0u8; 64]).unwrap();
+        let e = Checkpoint::load(&junk).unwrap_err();
+        assert!(matches!(e, CheckpointError::BadMagic { .. }), "{e}");
+        assert!(e.to_string().contains("junk.rsck"), "{e}");
+
+        // digest mismatch
+        let corrupt = dir.join("corrupt.rsck");
+        let mut bytes = sample().to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&corrupt, &bytes).unwrap();
+        let e = Checkpoint::load(&corrupt).unwrap_err();
+        assert!(matches!(e, CheckpointError::Digest { .. }), "{e}");
+        assert!(e.to_string().contains("corrupt.rsck"), "{e}");
+        assert!(e.to_string().contains("--ckpt-repo"), "remedy missing: {e}");
+
+        // future version
+        let future = dir.join("future.rsck");
+        let mut bytes = sample().to_bytes();
+        bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+        // re-seal the trailer so only the version check can fire
+        let mut h: u64 = 0xcbf29ce484222325;
+        let end = bytes.len() - 8;
+        fnv(&mut h, &bytes[..end]);
+        bytes[end..].copy_from_slice(&h.to_le_bytes());
+        std::fs::write(&future, &bytes).unwrap();
+        let e = Checkpoint::load(&future).unwrap_err();
+        assert!(matches!(e, CheckpointError::BadVersion { version: 99, .. }), "{e}");
+        assert!(e.to_string().contains("future.rsck"), "{e}");
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_write_never_shadows_prior_checkpoint() {
+        // Atomic saves write to `{path}.tmp.{pid}` then rename. Simulate
+        // a crash at every byte boundary of the temp write and assert the
+        // previously saved checkpoint still loads bit-identical.
+        let dir = std::env::temp_dir().join(format!("rsck_torn_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.rsck");
+
+        let prior = Checkpoint {
+            step: 6,
+            seed: 9,
+            view_epoch: 1,
+            layers: vec![LayerState {
+                params: vec![1.0, -2.0, 3.5],
+                residual: Some((vec![0.1, 0.2, 0.3], vec![0.0; 3])),
+                velocity: None,
+            }],
+        };
+        prior.save(&path).unwrap();
+
+        let mut next = prior.clone();
+        next.step = 12;
+        next.layers[0].params[0] = 7.25;
+        let next_bytes = next.to_bytes();
+        let tmp = format!("{}.tmp.{}", path.display(), std::process::id());
+
+        for cut in 0..=next_bytes.len() {
+            std::fs::write(&tmp, &next_bytes[..cut]).unwrap();
+            // crash here: the rename never happened
+            let loaded = Checkpoint::load(&path).unwrap();
+            assert_eq!(loaded, prior, "torn write at byte {cut} shadowed the prior checkpoint");
+            // and the torn temp itself must never parse as valid unless complete
+            if cut < next_bytes.len() {
+                assert!(Checkpoint::from_bytes(&next_bytes[..cut]).is_err(), "cut {cut}");
+            }
+        }
+        // a completed write (rename) does replace it
+        std::fs::rename(&tmp, &path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), next);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
@@ -334,5 +637,40 @@ mod tests {
         assert_eq!(back.view_epoch, 0, "v1 blobs predate membership epochs");
         assert_eq!(back.layers, ck.layers);
         assert_eq!((back.step, back.seed), (ck.step, ck.seed));
+    }
+
+    #[test]
+    fn version_2_blobs_still_parse_without_digest_table() {
+        // hand-build a v2 blob: view_epoch present, no chunk width or
+        // digest table
+        let ck = sample();
+        let mut out = Vec::new();
+        let mut h: u64 = 0xcbf29ce484222325;
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&2u32.to_le_bytes());
+        out.extend_from_slice(&ck.step.to_le_bytes());
+        out.extend_from_slice(&ck.seed.to_le_bytes());
+        out.extend_from_slice(&ck.view_epoch.to_le_bytes());
+        out.extend_from_slice(&(ck.layers.len() as u32).to_le_bytes());
+        fnv(&mut h, &out[..]);
+        for l in &ck.layers {
+            let mut head = Vec::with_capacity(12);
+            head.extend_from_slice(&(l.params.len() as u64).to_le_bytes());
+            let flags: u32 = (l.residual.is_some() as u32) | ((l.velocity.is_some() as u32) << 1);
+            head.extend_from_slice(&flags.to_le_bytes());
+            fnv(&mut h, &head);
+            out.extend_from_slice(&head);
+            put_f32s(&mut out, &mut h, &l.params);
+            if let Some((v, u)) = &l.residual {
+                put_f32s(&mut out, &mut h, v);
+                put_f32s(&mut out, &mut h, u);
+            }
+            if let Some(vel) = &l.velocity {
+                put_f32s(&mut out, &mut h, vel);
+            }
+        }
+        out.extend_from_slice(&h.to_le_bytes());
+        let back = Checkpoint::from_bytes(&out).unwrap();
+        assert_eq!(back, ck, "v2 blob must parse to the identical checkpoint");
     }
 }

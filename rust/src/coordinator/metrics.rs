@@ -72,6 +72,73 @@ impl MembershipEvent {
     }
 }
 
+/// Traffic accounting of the delta-rejoin protocol (DESIGN.md
+/// §Checkpoint-Repository): how many chunks the returning rank fetched
+/// over the ctrl channel vs satisfied locally, how many survived digest
+/// verification, and how the measured join traffic compares to what a
+/// full-image stream would have cost.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RejoinStats {
+    /// Chunks fetched from donors over the ctrl channel.
+    pub fetched_chunks: u64,
+    /// Chunks satisfied locally (stale checkpoint state or the local
+    /// repository) — no traffic.
+    pub reused_chunks: u64,
+    /// Fetched chunks that passed digest verification on receipt (equals
+    /// `fetched_chunks` on a clean transfer).
+    pub verified_chunks: u64,
+    /// Chunk re-requests after a digest mismatch or a lost donor.
+    pub retries: u64,
+    /// Donor failovers mid-transfer (a donor died or went suspect and
+    /// its outstanding chunks were re-striped over the survivors).
+    pub failovers: u64,
+    /// f32 words the join actually moved on the ctrl channel (tag words
+    /// included), sampled from the per-tag `TrafficStats`.
+    pub join_words: u64,
+    /// f32 words the legacy full-image stream would have moved for the
+    /// same state.
+    pub full_image_words: u64,
+}
+
+impl RejoinStats {
+    /// Field-wise sum (fleet aggregation).
+    pub fn absorb(&mut self, o: &RejoinStats) {
+        self.fetched_chunks += o.fetched_chunks;
+        self.reused_chunks += o.reused_chunks;
+        self.verified_chunks += o.verified_chunks;
+        self.retries += o.retries;
+        self.failovers += o.failovers;
+        self.join_words += o.join_words;
+        self.full_image_words += o.full_image_words;
+    }
+}
+
+/// Content-addressed checkpoint-repository accounting (DESIGN.md
+/// §Checkpoint-Repository): chunk dedup and garbage collection across
+/// the snapshot ring and across steps.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RepoStats {
+    /// Chunks written to the store (content previously unseen).
+    pub chunks_written: u64,
+    /// Chunks whose content was already present — refcounted, not
+    /// rewritten.
+    pub chunks_deduped: u64,
+    /// Zero-refcount chunks unlinked by manifest eviction.
+    pub chunks_collected: u64,
+    /// Manifests persisted (one per checkpointed step).
+    pub manifests_written: u64,
+}
+
+impl RepoStats {
+    /// Field-wise sum (fleet aggregation).
+    pub fn absorb(&mut self, o: &RepoStats) {
+        self.chunks_written += o.chunks_written;
+        self.chunks_deduped += o.chunks_deduped;
+        self.chunks_collected += o.chunks_collected;
+        self.manifests_written += o.manifests_written;
+    }
+}
+
 /// What one worker hands back after its training loop.
 #[derive(Debug)]
 pub struct WorkerResult {
@@ -114,6 +181,12 @@ pub struct WorkerResult {
     /// bytes / write syscalls per class) — empty on in-process fabrics,
     /// whose links never touch the kernel.
     pub link_traffic: Vec<LinkTraffic>,
+    /// Delta-rejoin traffic accounting (elastic runs with a rejoin;
+    /// all-zero otherwise).
+    pub rejoin: RejoinStats,
+    /// Checkpoint-repository accounting (runs with `--ckpt-repo`;
+    /// all-zero otherwise).
+    pub repo: RepoStats,
 }
 
 /// Sum per-worker [`LinkTraffic`] vectors class-by-class, keeping the
@@ -205,6 +278,12 @@ pub struct TrainReport {
     /// §Transport-Link-Classes).  Empty on in-process fabrics; like
     /// `simd_backend`, summary-only and deliberately NOT a CSV column.
     pub link_traffic: Vec<LinkTraffic>,
+    /// Delta-rejoin accounting summed over the fleet (all-zero when no
+    /// rank rejoined). Summary-only, deliberately NOT a CSV column.
+    pub rejoin: RejoinStats,
+    /// Checkpoint-repository accounting summed over the fleet (all-zero
+    /// without `--ckpt-repo`). Summary-only, NOT a CSV column.
+    pub repo: RepoStats,
 }
 
 impl TrainReport {
@@ -315,6 +394,30 @@ impl TrainReport {
                 let _ = writeln!(s, "    {}", e.describe());
             }
         }
+        if self.rejoin.join_words > 0 {
+            let _ = writeln!(
+                s,
+                "  rejoin: {} on the wire vs {} full-image ({} fetched / {} reused / {} \
+                 verified chunks, {} retries, {} failovers)",
+                crate::util::fmt_bytes(self.rejoin.join_words as usize * 4),
+                crate::util::fmt_bytes(self.rejoin.full_image_words as usize * 4),
+                self.rejoin.fetched_chunks,
+                self.rejoin.reused_chunks,
+                self.rejoin.verified_chunks,
+                self.rejoin.retries,
+                self.rejoin.failovers,
+            );
+        }
+        if self.repo.manifests_written > 0 {
+            let _ = writeln!(
+                s,
+                "  ckpt repo: {} manifests, {} chunks written / {} deduped / {} collected",
+                self.repo.manifests_written,
+                self.repo.chunks_written,
+                self.repo.chunks_deduped,
+                self.repo.chunks_collected,
+            );
+        }
         if let Some(note) = &self.status_note {
             let _ = writeln!(s, "  elastic status: {note}");
         }
@@ -399,6 +502,21 @@ mod tests {
                 LinkTraffic { class: LinkClass::Mem, frames: 10, bytes: 400, writes: 0 },
                 LinkTraffic { class: LinkClass::Unix, frames: 40, bytes: 1600, writes: 10 },
             ],
+            rejoin: RejoinStats {
+                fetched_chunks: 12,
+                reused_chunks: 20,
+                verified_chunks: 12,
+                retries: 1,
+                failovers: 1,
+                join_words: 3300,
+                full_image_words: 6606,
+            },
+            repo: RepoStats {
+                chunks_written: 30,
+                chunks_deduped: 18,
+                chunks_collected: 6,
+                manifests_written: 3,
+            },
         };
         assert!((r.phase_fraction(phase::COMPUTE) - 0.75).abs() < 1e-12);
         assert_eq!(r.bytes_per_step_per_rank(), 4096.0 / 20.0);
@@ -414,6 +532,19 @@ mod tests {
         // unix link shows the coalescing ratio
         assert!(s.contains("fabric links: mem"), "{s}");
         assert!(s.contains("unix") && s.contains("(4.0 frames/write)"), "{s}");
+        // rejoin + repo accounting are summary-only lines, not CSV columns
+        assert!(s.contains("12 fetched / 20 reused / 12 verified"), "{s}");
+        assert!(s.contains("1 retries, 1 failovers"), "{s}");
+        assert!(s.contains("ckpt repo: 3 manifests"), "{s}");
+        assert!(s.contains("30 chunks written / 18 deduped / 6 collected"), "{s}");
+        // absorb sums field-wise
+        let mut rj = r.rejoin;
+        rj.absorb(&r.rejoin);
+        assert_eq!(rj.fetched_chunks, 24);
+        assert_eq!(rj.full_image_words, 13212);
+        let mut rp = r.repo;
+        rp.absorb(&r.repo);
+        assert_eq!(rp.chunks_written, 60);
         // csv row tracks the header column-for-column
         let row = r.csv_row();
         assert_eq!(

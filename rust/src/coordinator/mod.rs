@@ -145,6 +145,8 @@ impl Trainer {
             rank_skew: rank0.rank_skew,
             simd_backend: rank0.simd_backend,
             link_traffic,
+            rejoin: rank0.rejoin,
+            repo: rank0.repo,
         })
     }
 
@@ -203,10 +205,14 @@ impl Trainer {
         let mut phases = PhaseTimer::new();
         let mut mux_bytes = 0u64;
         let mut mux_ctrl_bytes = 0u64;
+        let mut rejoin = metrics::RejoinStats::default();
+        let mut repo = metrics::RepoStats::default();
         for o in &fleet.ranks {
             phases.merge(&o.timer);
             mux_bytes += o.mux_words * 4;
             mux_ctrl_bytes += o.ctrl_words * 4;
+            rejoin.absorb(&o.rejoin);
+            repo.absorb(&o.repo);
         }
         let lead = &fleet.ranks[reporter];
         Ok(TrainReport {
@@ -234,6 +240,8 @@ impl Trainer {
             rank_skew: 0.0,
             simd_backend: crate::compression::simd::active().name(),
             link_traffic: Vec::new(),
+            rejoin,
+            repo,
         })
     }
 }
@@ -292,6 +300,8 @@ impl Trainer {
             rank_skew: result.rank_skew,
             simd_backend: result.simd_backend,
             link_traffic: result.link_traffic,
+            rejoin: result.rejoin,
+            repo: result.repo,
         })
     }
 
@@ -347,6 +357,8 @@ impl Trainer {
             rank_skew: 0.0,
             simd_backend: result.simd_backend,
             link_traffic: result.link_traffic,
+            rejoin: result.rejoin,
+            repo: result.repo,
         })
     }
 }

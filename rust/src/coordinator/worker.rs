@@ -12,7 +12,7 @@
 //! the endpoint.
 
 use super::checkpoint::Checkpoint;
-use super::metrics::{param_hash, phase, WorkerResult};
+use super::metrics::{param_hash, phase, RejoinStats, RepoStats, WorkerResult};
 use crate::collectives::group::{Algo, Topology};
 use crate::collectives::mux::{TagChannel, TagMux};
 use crate::collectives::{allreduce_mean, Gathered, Transport};
@@ -578,6 +578,8 @@ pub fn run_worker<T: Transport + Sync>(
         rank_skew,
         simd_backend: crate::compression::simd::active().name(),
         link_traffic: transport.link_traffic(),
+        rejoin: RejoinStats::default(),
+        repo: RepoStats::default(),
     })
 }
 
@@ -687,11 +689,14 @@ pub fn elastic_opts(cfg: &TrainConfig) -> ElasticOpts {
         rejoin: cfg.elastic.rejoin.clone(),
         ckpt_prefix: cfg.elastic.ckpt.clone(),
         ckpt_every: cfg.elastic.ckpt_every,
+        ckpt_repo: cfg.elastic.ckpt_repo.clone(),
+        rejoin_donors: cfg.elastic.rejoin_donors,
         cc: CompressorConfig {
             density: cfg.density,
             timing: cfg.phase_timing,
             ..Default::default()
         },
+        ..Default::default()
     }
 }
 
@@ -705,7 +710,8 @@ pub fn elastic_init(
 ) -> Result<Checkpoint, String> {
     if let Some(prefix) = &cfg.elastic.resume {
         let path = format!("{prefix}_rank{rank}.rsck");
-        return Checkpoint::load(&path).map_err(|e| format!("resume {path}: {e}"));
+        // CheckpointError already names the path and a remedy
+        return Checkpoint::load(&path).map_err(|e| format!("--resume: {e}"));
     }
     Ok(elastic::fresh_checkpoint(
         schema.init_params(cfg.seed),
@@ -734,6 +740,8 @@ pub fn worker_result_from(rank: usize, o: &RankOutcome) -> WorkerResult {
         rank_skew: 0.0,
         simd_backend: crate::compression::simd::active().name(),
         link_traffic: Vec::new(),
+        rejoin: o.rejoin,
+        repo: o.repo,
     }
 }
 

@@ -33,15 +33,16 @@
 //! runner under `coordinator::worker`.
 
 use super::heartbeat::{spawn_monitor, Freezer};
+use super::repo::CkptRepo;
 use super::reshape::{agree, Agreement};
-use super::{derive_topology, FailBoard, FaultSpec, StallSpec, Watched, MAX_ELASTIC_WORLD};
+use super::{chunk, derive_topology, FailBoard, FaultSpec, StallSpec, Watched, MAX_ELASTIC_WORLD};
 use crate::collectives::group::{Algo, ProcessGroup, Topology};
 use crate::collectives::mux::{TagChannel, TagMux};
 use crate::collectives::transport::{f32s_to_words, words_to_f32s};
 use crate::collectives::{allgather, allreduce_mean, Transport};
 use crate::compression::{CompressorConfig, Method};
 use crate::coordinator::checkpoint::{Checkpoint, LayerState};
-use crate::coordinator::metrics::{param_hash, phase, MembershipEvent};
+use crate::coordinator::metrics::{param_hash, phase, MembershipEvent, RejoinStats, RepoStats};
 use crate::obs;
 use crate::optim::{clip_by_global_norm, local_clip_factor, DenseOptState, LrSchedule, Optimizer};
 use crate::pipeline::{
@@ -78,14 +79,19 @@ pub trait Workload {
 
 /// Scheduled rejoin of a previously lost rank, executed at the start of
 /// a fresh fabric generation (`orchestrate::run_local_fleet`): the
-/// donor streams its current parameter image to the rejoiner over the
-/// control channel (the "delta" advancing the rejoiner's checkpoint to
-/// the barrier step); residual/momentum/velocity stay the rejoiner's
-/// own checkpointed per-rank state.
-#[derive(Clone, Copy, Debug)]
+/// rejoiner diffs its (checkpoint-stale) parameter image against the
+/// donors' resume manifest and fetches only the missing chunks over the
+/// control channel, digest-verified and striped across every listed
+/// donor with failover (DESIGN.md §Checkpoint-Repository) — or, with
+/// `rejoin_full_image`, the legacy full parameter stream from
+/// `donors[0]`.  Residual/momentum/velocity stay the rejoiner's own
+/// checkpointed per-rank state.
+#[derive(Clone, Debug)]
 pub struct JoinPlan {
     pub rejoiner: usize,
-    pub donor: usize,
+    /// Surviving ranks that can serve resume-state chunks, in
+    /// preference order; all replicas, so any subset suffices.
+    pub donors: Vec<usize>,
     pub resume_step: usize,
     pub epoch: u64,
 }
@@ -123,6 +129,24 @@ pub struct ElasticOpts {
     pub ckpt_prefix: Option<String>,
     /// Write a periodic checkpoint every this many steps (0 = never).
     pub ckpt_every: usize,
+    /// Root of the per-rank content-addressed checkpoint repository
+    /// (`{root}/rank{R}/…`); `None` disables the store and the delta
+    /// rejoin's local chunk reuse.
+    pub ckpt_repo: Option<String>,
+    /// Chunk width (f32 elements) for the repository and the delta
+    /// rejoin.
+    pub chunk_elems: usize,
+    /// How many donors a delta rejoin stripes its fetches across.
+    pub rejoin_donors: usize,
+    /// Use the legacy single-donor full parameter stream instead of the
+    /// chunked delta protocol (the traffic baseline in tests/benches).
+    pub rejoin_full_image: bool,
+    /// Fault injection: these world ranks die after serving one chunk of
+    /// a delta rejoin (mid-transfer donor loss).
+    pub join_kill: Vec<usize>,
+    /// Fault injection: these world ranks flip a bit in the first chunk
+    /// they serve (exercises digest verification + retry).
+    pub join_corrupt: Vec<usize>,
     pub cc: CompressorConfig,
 }
 
@@ -147,6 +171,12 @@ impl Default for ElasticOpts {
             rejoin: Vec::new(),
             ckpt_prefix: None,
             ckpt_every: 0,
+            ckpt_repo: None,
+            chunk_elems: chunk::DEFAULT_CHUNK_ELEMS,
+            rejoin_donors: 2,
+            rejoin_full_image: false,
+            join_kill: Vec::new(),
+            join_corrupt: Vec::new(),
             cc: CompressorConfig::default(),
         }
     }
@@ -193,6 +223,10 @@ pub struct RankOutcome {
     /// Final view (world ranks) and epoch.
     pub view: Vec<usize>,
     pub epoch: u64,
+    /// Delta-rejoin accounting (all-zero when this rank saw no rejoin).
+    pub rejoin: RejoinStats,
+    /// Checkpoint-repository accounting (all-zero without `ckpt_repo`).
+    pub repo: RepoStats,
 }
 
 /// Build the step-0 state for a fresh rank: zero residual/momentum for
@@ -428,6 +462,16 @@ where
     let mut stall_used = vec![false; opts.stall.len()];
     let mut totals = (0u64, 0u64, 0u64); // (messages, words, non-bucket words)
     let mut final_loss = f32::NAN;
+    let mut rejoin_stats = RejoinStats::default();
+    // the content-addressed store is per world rank: every snapshot the
+    // ring takes is also put into the repository, deduped and refcounted
+    let mut repo = match &opts.ckpt_repo {
+        Some(root) => Some(
+            CkptRepo::open(format!("{root}/rank{my}"), opts.chunk_elems.max(1), 2)
+                .map_err(|e| format!("rank {my}: {e}"))?,
+        ),
+        None => None,
+    };
     let mut join_once = join;
     // driver lane: retrospective fault-detection spans and the reshape
     // stall, so the timeline shows why training paused
@@ -442,7 +486,9 @@ where
                    timer: PhaseTimer,
                    totals: (u64, u64, u64),
                    members: Vec<usize>,
-                   final_loss: f32| RankOutcome {
+                   final_loss: f32,
+                   rejoin: RejoinStats,
+                   repo: RepoStats| RankOutcome {
         status,
         state: ring.latest().clone(),
         events,
@@ -456,6 +502,8 @@ where
         ctrl_words: totals.2,
         view: members,
         epoch: state.epoch,
+        rejoin,
+        repo,
     };
 
     loop {
@@ -482,6 +530,8 @@ where
             &mut stall_used,
             &mut totals,
             &mut final_loss,
+            &mut rejoin_stats,
+            repo.as_mut(),
             workload,
         )?;
         match end {
@@ -497,6 +547,8 @@ where
                     totals,
                     members,
                     final_loss,
+                    rejoin_stats,
+                    repo.as_ref().map(|r| r.stats()).unwrap_or_default(),
                 ));
             }
             EpochEnd::Paused => {
@@ -511,6 +563,8 @@ where
                     totals,
                     members,
                     final_loss,
+                    rejoin_stats,
+                    repo.as_ref().map(|r| r.stats()).unwrap_or_default(),
                 ));
             }
             EpochEnd::Killed => {
@@ -525,6 +579,8 @@ where
                     totals,
                     members,
                     final_loss,
+                    rejoin_stats,
+                    repo.as_ref().map(|r| r.stats()).unwrap_or_default(),
                 ));
             }
             EpochEnd::Fault { suspects, pending, detect_secs } => {
@@ -570,6 +626,8 @@ where
                             totals,
                             members,
                             final_loss,
+                            rejoin_stats,
+                            repo.as_ref().map(|r| r.stats()).unwrap_or_default(),
                         ));
                     }
                     Agreement::View { members: next, epoch, resume_step } => {
@@ -635,6 +693,8 @@ fn run_epoch<T, W>(
     stall_used: &mut [bool],
     totals: &mut (u64, u64, u64),
     final_loss: &mut f32,
+    rejoin_stats: &mut RejoinStats,
+    mut repo: Option<&mut CkptRepo>,
     workload: &mut W,
 ) -> Result<EpochEnd, String>
 where
@@ -694,12 +754,42 @@ where
                 &mut seq_engine
             };
 
-            // rejoin barrier entry: the donor streams its parameter
-            // image to the rejoiner before anyone steps
+            // rejoin barrier entry: the returning rank reconciles its
+            // checkpoint-stale parameters against the agreed resume
+            // image before anyone steps — either a full donor stream or
+            // a manifest-diffed chunk delta striped across the donors
             if let Some(j) = &join {
-                join_sync(&ctrl, members, me_local, j, state)?;
+                let killed = join_exchange(
+                    &ctrl,
+                    members,
+                    me_local,
+                    j,
+                    state,
+                    opts,
+                    repo.as_deref_mut(),
+                    rejoin_stats,
+                )?;
+                // the mux is rebuilt each epoch, so the ctrl tag's
+                // outbound counter right after the join IS the join
+                // traffic; the full-image figure is what join_sync
+                // would have moved (every layer + one tag word each)
+                rejoin_stats.join_words += mux.tag_stats(CTRL_TAG).bytes() / 4;
+                if my == j.rejoiner {
+                    rejoin_stats.full_image_words +=
+                        state.params.iter().map(|p| p.len() as u64 + 1).sum::<u64>();
+                }
+                if killed {
+                    // the outcome path reads ring.latest(); a donor dying
+                    // mid-join never reached the epoch's ring reset below
+                    ring.reset(state.done, make_snapshot(state, &*engine, specs, seed));
+                    monitor.stop();
+                    return Ok(EpochMark::Killed);
+                }
             }
             ring.reset(state.done, make_snapshot(state, &*engine, specs, seed));
+            if let Some(rp) = repo.as_deref_mut() {
+                rp.put_checkpoint(ring.latest()).map_err(|e| format!("ckpt repo: {e}"))?;
+            }
             if let Some(j) = &join {
                 if my == j.rejoiner {
                     if let Some(prefix) = &opts.ckpt_prefix {
@@ -778,6 +868,10 @@ where
                         state.done += 1;
                         last_ok = Instant::now();
                         ring.push(state.done, make_snapshot(state, &*engine, specs, seed));
+                        if let Some(rp) = repo.as_deref_mut() {
+                            rp.put_checkpoint(ring.latest())
+                                .map_err(|e| format!("ckpt repo: {e}"))?;
+                        }
                         if opts.ckpt_every > 0 && state.done % opts.ckpt_every == 0 {
                             if let Some(prefix) = &opts.ckpt_prefix {
                                 let path = format!("{prefix}_rank{my}.rsck");
@@ -909,11 +1003,11 @@ where
     Ok(())
 }
 
-/// The rejoin "delta" stream: the donor sends every layer's current
-/// parameter words to the rejoiner on the control channel; the rejoiner
-/// overwrites its (checkpoint-stale) parameters.  Per-link FIFO puts
-/// these frames ahead of the donor's first step traffic, so no barrier
-/// is needed for the other members.
+/// The full-image rejoin stream: the first donor sends every layer's
+/// current parameter words to the rejoiner on the control channel; the
+/// rejoiner overwrites its (checkpoint-stale) parameters.  Per-link
+/// FIFO puts these frames ahead of the donor's first step traffic, so
+/// no barrier is needed for the other members.
 fn join_sync<C: Transport>(
     ctrl: &C,
     members: &[usize],
@@ -921,10 +1015,11 @@ fn join_sync<C: Transport>(
     j: &JoinPlan,
     state: &mut TrainState,
 ) -> Result<(), String> {
+    let donor = *j.donors.first().ok_or("join plan has no donors")?;
     let donor_local = members
         .iter()
-        .position(|&r| r == j.donor)
-        .ok_or_else(|| format!("join donor {} not in the view", j.donor))?;
+        .position(|&r| r == donor)
+        .ok_or_else(|| format!("join donor {donor} not in the view"))?;
     let join_local = members
         .iter()
         .position(|&r| r == j.rejoiner)
@@ -950,6 +1045,334 @@ fn join_sync<C: Transport>(
         }
     }
     Ok(())
+}
+
+// Control-channel opcodes for the delta-rejoin exchange.  The high
+// bits keep them out of the way of hash words that happen to flow on
+// the ctrl tag during collectives (the exchange runs before any step,
+// so there is no ambiguity — the prefix is purely for debuggability).
+const OP_MFT_REQ: u32 = 0xE1A0_0001;
+const OP_MFT: u32 = 0xE1A0_0002;
+const OP_REQ: u32 = 0xE1A0_0003;
+const OP_CHUNK: u32 = 0xE1A0_0004;
+const OP_DONE: u32 = 0xE1A0_0005;
+
+/// Give up if the same chunks keep failing verification this many
+/// striping rounds in a row (each round backs off exponentially).
+const MAX_FETCH_ROUNDS: usize = 16;
+
+/// A chunk the rejoiner could not satisfy locally: layer index, chunk
+/// index within that layer, and the digest the manifest promises.
+struct NeedChunk {
+    li: usize,
+    ci: usize,
+    digest: u64,
+}
+
+/// Dispatch the rejoin exchange for this rank's role.  Returns true
+/// when a donor was fault-injected away mid-serve and the caller must
+/// exit the epoch as killed.
+#[allow(clippy::too_many_arguments)]
+fn join_exchange<C: Transport>(
+    ctrl: &C,
+    members: &[usize],
+    me_local: usize,
+    j: &JoinPlan,
+    state: &mut TrainState,
+    opts: &ElasticOpts,
+    repo: Option<&mut CkptRepo>,
+    stats: &mut RejoinStats,
+) -> Result<bool, String> {
+    if opts.rejoin_full_image {
+        join_sync(ctrl, members, me_local, j, state)?;
+        return Ok(false);
+    }
+    let my = members[me_local];
+    if my == j.rejoiner {
+        join_fetch_delta(ctrl, members, j, state, repo, stats)?;
+        Ok(false)
+    } else if j.donors.contains(&my) {
+        join_donate_delta(ctrl, members, my, j, state, opts)
+    } else {
+        Ok(false)
+    }
+}
+
+/// The rejoiner's side of the delta exchange: fetch a chunk manifest
+/// from the first answering donor, diff it against the local
+/// (checkpoint-stale) parameters and the content-addressed repo, then
+/// fetch only the missing chunks, striped round-robin across the live
+/// donors.  Every fetched chunk is digest-verified; a mismatch is
+/// retried with exponential backoff, a dead donor's outstanding chunks
+/// fail over to the survivors.
+fn join_fetch_delta<C: Transport>(
+    ctrl: &C,
+    members: &[usize],
+    j: &JoinPlan,
+    state: &mut TrainState,
+    mut repo: Option<&mut CkptRepo>,
+    stats: &mut RejoinStats,
+) -> Result<(), String> {
+    let donors: Vec<usize> = j
+        .donors
+        .iter()
+        .filter_map(|&d| members.iter().position(|&r| r == d))
+        .collect();
+    if donors.is_empty() {
+        return Err("delta rejoin: no donor is a member of the view".into());
+    }
+    let mut alive = vec![true; donors.len()];
+
+    // manifest from the first donor that answers, failing over in order
+    let mut mft: Option<Vec<u32>> = None;
+    for (di, &dl) in donors.iter().enumerate() {
+        let got = ctrl
+            .send_checked(dl, vec![OP_MFT_REQ])
+            .ok()
+            .and_then(|()| ctrl.recv_checked(dl).ok());
+        match got {
+            Some(m) if m.first() == Some(&OP_MFT) => {
+                mft = Some(m);
+                break;
+            }
+            _ => {
+                alive[di] = false;
+                stats.failovers += 1;
+            }
+        }
+    }
+    let mft = mft.ok_or("delta rejoin: every donor failed the manifest exchange")?;
+    if mft.len() < 3 {
+        return Err("delta rejoin: short manifest frame".into());
+    }
+    let chunk_elems = mft[1] as usize;
+    let n_layers = mft[2] as usize;
+    if chunk_elems == 0 || n_layers != state.params.len() {
+        return Err(format!(
+            "delta rejoin: manifest shape mismatch ({n_layers} layers at chunk width \
+             {chunk_elems}, local model has {} layers)",
+            state.params.len()
+        ));
+    }
+    let mut want: Vec<Vec<u64>> = Vec::with_capacity(n_layers);
+    let mut pos = 3usize;
+    for li in 0..n_layers {
+        let nc = *mft.get(pos).ok_or("delta rejoin: truncated manifest")? as usize;
+        pos += 1;
+        let expect = chunk::chunk_count(state.params[li].len(), chunk_elems);
+        if nc != expect {
+            return Err(format!(
+                "delta rejoin: layer {li} manifest has {nc} chunks, local shape wants {expect}"
+            ));
+        }
+        let mut digests = Vec::with_capacity(nc);
+        for _ in 0..nc {
+            let lo = *mft.get(pos).ok_or("delta rejoin: truncated manifest")? as u64;
+            let hi = *mft.get(pos + 1).ok_or("delta rejoin: truncated manifest")? as u64;
+            pos += 2;
+            digests.push(lo | (hi << 32));
+        }
+        want.push(digests);
+    }
+
+    // diff: a chunk is satisfied by the stale parameters themselves, by
+    // the local chunk repo, or — last resort — by a donor fetch
+    let mut need: VecDeque<NeedChunk> = VecDeque::new();
+    for (li, digests) in want.iter().enumerate() {
+        for (ci, &dg) in digests.iter().enumerate() {
+            let (a, b) = chunk::chunk_range(state.params[li].len(), chunk_elems, ci);
+            if chunk::digest_f32(&state.params[li][a..b]) == dg {
+                stats.reused_chunks += 1;
+                continue;
+            }
+            match repo.as_deref_mut().and_then(|rp| rp.read_chunk(dg)) {
+                Some(vals) if vals.len() == b - a => {
+                    state.params[li][a..b].copy_from_slice(&vals);
+                    stats.reused_chunks += 1;
+                }
+                _ => need.push_back(NeedChunk { li, ci, digest: dg }),
+            }
+        }
+    }
+
+    let mut round = 0usize;
+    while !need.is_empty() {
+        if round >= MAX_FETCH_ROUNDS {
+            return Err(format!(
+                "delta rejoin: {} chunks still unverified after {MAX_FETCH_ROUNDS} fetch rounds",
+                need.len()
+            ));
+        }
+        if round > 0 {
+            thread::sleep(Duration::from_millis(1u64 << round.min(4)));
+        }
+        let live: Vec<usize> = (0..donors.len()).filter(|&d| alive[d]).collect();
+        if live.is_empty() {
+            return Err("delta rejoin: all donors lost before the fetch completed".into());
+        }
+        // stripe this round's chunks round-robin over the live donors,
+        // send every request up front, then drain each donor's replies
+        let batch: Vec<NeedChunk> = need.drain(..).collect();
+        let mut per: Vec<Vec<NeedChunk>> = (0..live.len()).map(|_| Vec::new()).collect();
+        for (i, c) in batch.into_iter().enumerate() {
+            per[i % live.len()].push(c);
+        }
+        for (slot, chunks) in per.iter().enumerate() {
+            if chunks.is_empty() {
+                continue;
+            }
+            let mut req = Vec::with_capacity(2 + chunks.len() * 2);
+            req.push(OP_REQ);
+            req.push(chunks.len() as u32);
+            for c in chunks {
+                req.push(c.li as u32);
+                req.push(c.ci as u32);
+            }
+            // a failed send surfaces as a failed recv below
+            let _ = ctrl.send_checked(donors[live[slot]], req);
+        }
+        for (slot, chunks) in per.into_iter().enumerate() {
+            if chunks.is_empty() {
+                continue;
+            }
+            let di = live[slot];
+            let mut lost = false;
+            for c in chunks {
+                if lost {
+                    need.push_back(c);
+                    continue;
+                }
+                let frame = match ctrl.recv_checked(donors[di]) {
+                    Ok(f) => f,
+                    Err(_) => {
+                        alive[di] = false;
+                        stats.failovers += 1;
+                        lost = true;
+                        need.push_back(c);
+                        continue;
+                    }
+                };
+                let shaped = frame.len() >= 4
+                    && frame[0] == OP_CHUNK
+                    && frame[1] as usize == c.li
+                    && frame[2] as usize == c.ci
+                    && frame[3] as usize == frame.len() - 4;
+                if !shaped {
+                    alive[di] = false;
+                    stats.failovers += 1;
+                    lost = true;
+                    need.push_back(c);
+                    continue;
+                }
+                let vals = words_to_f32s(&frame[4..]);
+                let (a, b) = chunk::chunk_range(state.params[c.li].len(), chunk_elems, c.ci);
+                if vals.len() == b - a && chunk::digest_f32(&vals) == c.digest {
+                    state.params[c.li][a..b].copy_from_slice(&vals);
+                    stats.fetched_chunks += 1;
+                    stats.verified_chunks += 1;
+                } else {
+                    // corrupted in flight (or a lying donor): bounded
+                    // retry, next round may stripe it to another donor
+                    stats.retries += 1;
+                    need.push_back(c);
+                }
+            }
+        }
+        round += 1;
+    }
+
+    for (di, &dl) in donors.iter().enumerate() {
+        if alive[di] {
+            let _ = ctrl.send_checked(dl, vec![OP_DONE]);
+        }
+    }
+    Ok(())
+}
+
+/// A donor's side of the delta exchange: serve manifest and chunk
+/// requests until the rejoiner signals OP_DONE.  Returns true when this
+/// donor was fault-injected away mid-serve (`join_kill`), at which
+/// point the caller exits the epoch as killed and the rejoiner fails
+/// over to the surviving donors.
+fn join_donate_delta<C: Transport>(
+    ctrl: &C,
+    members: &[usize],
+    my: usize,
+    j: &JoinPlan,
+    state: &TrainState,
+    opts: &ElasticOpts,
+) -> Result<bool, String> {
+    let join_local = members
+        .iter()
+        .position(|&r| r == j.rejoiner)
+        .ok_or_else(|| format!("rejoiner {} not in the view", j.rejoiner))?;
+    let chunk_elems = opts.chunk_elems.max(1);
+    let kill_after_first = opts.join_kill.contains(&my);
+    let mut corrupt_next = opts.join_corrupt.contains(&my);
+    let mut sent = 0usize;
+    loop {
+        let msg = match ctrl.recv_checked(join_local) {
+            Ok(m) => m,
+            // the rejoiner vanished mid-exchange; the membership
+            // machinery (suspects/oob) owns the fault from here
+            Err(_) => return Ok(false),
+        };
+        match msg.first().copied() {
+            Some(OP_MFT_REQ) => {
+                let mut frame = vec![OP_MFT, chunk_elems as u32, state.params.len() as u32];
+                for p in &state.params {
+                    let digests = chunk::section_digests(p, chunk_elems);
+                    frame.push(digests.len() as u32);
+                    for dg in digests {
+                        frame.push((dg & 0xFFFF_FFFF) as u32);
+                        frame.push((dg >> 32) as u32);
+                    }
+                }
+                if ctrl.send_checked(join_local, frame).is_err() {
+                    return Ok(false);
+                }
+            }
+            Some(OP_REQ) => {
+                if msg.len() < 2 || msg.len() != 2 + msg[1] as usize * 2 {
+                    return Err("delta donate: malformed chunk request frame".into());
+                }
+                for i in 0..msg[1] as usize {
+                    if kill_after_first && sent >= 1 {
+                        crate::log_warn!(
+                            "rank {my}: killed by fault injection mid-rejoin \
+                             (after serving {sent} chunks)"
+                        );
+                        return Ok(true);
+                    }
+                    let li = msg[2 + i * 2] as usize;
+                    let ci = msg[3 + i * 2] as usize;
+                    let p = state
+                        .params
+                        .get(li)
+                        .ok_or_else(|| format!("delta donate: layer {li} out of range"))?;
+                    let nc = chunk::chunk_count(p.len(), chunk_elems);
+                    if ci >= nc {
+                        return Err(format!(
+                            "delta donate: chunk {ci} out of range for layer {li} ({nc} chunks)"
+                        ));
+                    }
+                    let (a, b) = chunk::chunk_range(p.len(), chunk_elems, ci);
+                    let mut frame = vec![OP_CHUNK, li as u32, ci as u32, (b - a) as u32];
+                    frame.extend_from_slice(&f32s_to_words(&p[a..b]));
+                    if corrupt_next {
+                        corrupt_next = false;
+                        frame[4] ^= 1;
+                    }
+                    if ctrl.send_checked(join_local, frame).is_err() {
+                        return Ok(false);
+                    }
+                    sent += 1;
+                }
+            }
+            Some(OP_DONE) => return Ok(false),
+            other => return Err(format!("delta donate: unexpected ctrl frame {other:?}")),
+        }
+    }
 }
 
 /// Allgather the FNV parameter hashes across the view and compare.

@@ -25,19 +25,29 @@
 //!   rebuild `Topology`/`ProcessGroup`s, the `Communicator` stack and
 //!   the `SyncEngine` for the shrunken world ([`driver`]).
 //! * **Rejoin** ([`orchestrate`]) — a returning worker restores
-//!   params/residual/momentum from its `RSCK` checkpoint plus a
-//!   survivor-streamed parameter image, re-enters at a step barrier,
+//!   params/residual/momentum from its `RSCK` checkpoint, diffs its
+//!   stale parameter image against the agreed resume manifest and
+//!   fetches only the missing chunks — digest-verified, striped across
+//!   multiple donors with transparent failover ([`repo`], [`chunk`];
+//!   DESIGN.md §Checkpoint-Repository) — re-enters at a step barrier,
 //!   and the data sharder re-keys by `(seed, view_epoch, rank)` so
 //!   shards stay disjoint.
+//! * **Durability** ([`repo`]) — with `--ckpt-repo` every snapshot is
+//!   stored in a chunked, content-addressed repository: unchanged
+//!   chunks are written once and refcounted across the snapshot ring
+//!   and across steps, and evicted manifests garbage-collect their
+//!   zero-ref chunks.
 //!
 //! The driver is generic over a [`driver::Workload`], so the whole
 //! subsystem is exercised artifact-free (`tests/elastic.rs`,
 //! `e2e_throughput --elastic-smoke`) and wired to the real trainer by
 //! `coordinator::worker`.
 
+pub mod chunk;
 pub mod driver;
 pub mod heartbeat;
 pub mod orchestrate;
+pub mod repo;
 pub mod reshape;
 pub mod synthetic;
 
@@ -46,6 +56,7 @@ pub use driver::{
     ShardKey, Workload,
 };
 pub use orchestrate::{run_local_fleet, FleetOutcome};
+pub use repo::{CkptRepo, Manifest};
 pub use reshape::Agreement;
 
 use crate::collectives::group::Topology;

@@ -55,10 +55,14 @@ fn merge(prev: Option<RankOutcome>, next: RankOutcome) -> RankOutcome {
         ctrl_words,
         view,
         epoch,
+        rejoin,
+        repo,
     } = next;
     prev.timer.merge(&timer);
     prev.loss_curve.extend(loss_curve);
     prev.events.extend(events);
+    prev.rejoin.absorb(&rejoin);
+    prev.repo.absorb(&repo);
     RankOutcome {
         status,
         state,
@@ -73,6 +77,8 @@ fn merge(prev: Option<RankOutcome>, next: RankOutcome) -> RankOutcome {
         ctrl_words: prev.ctrl_words + ctrl_words,
         view,
         epoch,
+        rejoin: prev.rejoin,
+        repo: prev.repo,
     }
 }
 
@@ -156,7 +162,9 @@ where
         let paused_ranks: Vec<usize> = (0..world)
             .filter(|&r| merged[r].as_ref().is_some_and(|o| o.status == ElasticStatus::Paused))
             .collect();
-        let donor = *paused_ranks.first().ok_or("no surviving rank can donate state")?;
+        let donors: Vec<usize> =
+            paused_ranks.iter().copied().take(opts.rejoin_donors.max(1)).collect();
+        let donor = *donors.first().ok_or("no surviving rank can donate state")?;
         let donor_state = &merged[donor].as_ref().expect("donor ran").state;
         let resume_step = donor_state.step as usize;
         let epoch_next = paused_ranks
@@ -165,7 +173,7 @@ where
             .max()
             .unwrap_or(0)
             + 1;
-        let plan = JoinPlan { rejoiner, donor, resume_step, epoch: epoch_next };
+        let plan = JoinPlan { rejoiner, donors, resume_step, epoch: epoch_next };
         for r in 0..world {
             let o = merged[r].as_ref().expect("all ranks ran");
             let ck = if r == rejoiner {
@@ -185,7 +193,7 @@ where
                 }
                 o.state.clone()
             };
-            carry[r] = Some((ck, Some(plan)));
+            carry[r] = Some((ck, Some(plan.clone())));
         }
     }
 

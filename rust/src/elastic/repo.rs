@@ -1,0 +1,569 @@
+//! Content-addressed checkpoint repository (DESIGN.md
+//! §Checkpoint-Repository).
+//!
+//! A [`CkptRepo`] stores checkpoints as fixed-size, digest-addressed
+//! chunks plus per-step *manifests* mapping layer → ordered chunk
+//! digests:
+//!
+//! ```text
+//! {root}/chunks/{digest:016x}.chk      raw little-endian f32 payload
+//! {root}/manifests/step{S:020}.rsmf    Manifest (RSMF v1, FNV trailer)
+//! ```
+//!
+//! Identical content is written once and refcounted — across the
+//! 2-deep snapshot ring, across steps, and across sections (an all-zero
+//! residual chunk and an all-zero velocity chunk share one file).  When
+//! a manifest falls out of the retention window its chunk refcounts
+//! drop, and zero-ref chunks are unlinked (garbage collection).  All
+//! writes are atomic (temp file → fsync → rename via
+//! [`checkpoint::write_atomic`]), so a crash mid-put never corrupts the
+//! store; a torn manifest temp is simply skipped and collected on the
+//! next [`CkptRepo::open`].
+//!
+//! The delta-rejoin protocol in [`super::driver`] uses the repository
+//! as the returning rank's local chunk source: any chunk of the agreed
+//! resume image whose digest is already present locally is restored
+//! from disk instead of fetched from a donor.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use super::chunk;
+use crate::coordinator::checkpoint::{write_atomic, Checkpoint};
+use crate::coordinator::metrics::RepoStats;
+
+const MANIFEST_MAGIC: &[u8; 4] = b"RSMF";
+const MANIFEST_VERSION: u32 = 1;
+
+/// One section's chunk listing: element count + ordered chunk digests.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SectionChunks {
+    pub len: u64,
+    pub digests: Vec<u64>,
+}
+
+/// One layer's chunk listings, mirroring
+/// [`LayerState`](crate::coordinator::checkpoint::LayerState)'s shape.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LayerChunks {
+    pub params: SectionChunks,
+    pub residual: Option<(SectionChunks, SectionChunks)>,
+    pub velocity: Option<SectionChunks>,
+}
+
+impl LayerChunks {
+    /// Present sections in serialization order.
+    pub fn sections(&self) -> Vec<&SectionChunks> {
+        let mut out = vec![&self.params];
+        if let Some((v, u)) = &self.residual {
+            out.push(v);
+            out.push(u);
+        }
+        if let Some(vel) = &self.velocity {
+            out.push(vel);
+        }
+        out
+    }
+}
+
+/// A checkpoint's content listing: (step, seed, epoch) identity plus
+/// every layer's ordered chunk digests at a fixed chunk width.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Manifest {
+    pub step: u64,
+    pub seed: u64,
+    pub view_epoch: u64,
+    pub chunk_elems: u32,
+    pub layers: Vec<LayerChunks>,
+}
+
+impl Manifest {
+    /// The manifest of `ck` chunked at `chunk_elems`.
+    pub fn of(ck: &Checkpoint, chunk_elems: usize) -> Manifest {
+        assert!(chunk_elems > 0, "chunk_elems must be positive");
+        let sec = |xs: &[f32]| SectionChunks {
+            len: xs.len() as u64,
+            digests: chunk::section_digests(xs, chunk_elems),
+        };
+        Manifest {
+            step: ck.step,
+            seed: ck.seed,
+            view_epoch: ck.view_epoch,
+            chunk_elems: chunk_elems as u32,
+            layers: ck
+                .layers
+                .iter()
+                .map(|l| LayerChunks {
+                    params: sec(&l.params),
+                    residual: l.residual.as_ref().map(|(v, u)| (sec(v), sec(u))),
+                    velocity: l.velocity.as_ref().map(|v| sec(v)),
+                })
+                .collect(),
+        }
+    }
+
+    /// Every chunk digest, one entry per occurrence (refcount semantics).
+    pub fn digest_occurrences(&self) -> Vec<u64> {
+        let mut out = Vec::new();
+        for l in &self.layers {
+            for s in l.sections() {
+                out.extend_from_slice(&s.digests);
+            }
+        }
+        out
+    }
+
+    /// Serialize (RSMF v1, little-endian, FNV-1a trailer).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MANIFEST_MAGIC);
+        out.extend_from_slice(&MANIFEST_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.step.to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&self.view_epoch.to_le_bytes());
+        out.extend_from_slice(&self.chunk_elems.to_le_bytes());
+        out.extend_from_slice(&(self.layers.len() as u32).to_le_bytes());
+        for l in &self.layers {
+            let flags: u32 = (l.residual.is_some() as u32) | ((l.velocity.is_some() as u32) << 1);
+            out.extend_from_slice(&flags.to_le_bytes());
+            for s in l.sections() {
+                out.extend_from_slice(&s.len.to_le_bytes());
+                out.extend_from_slice(&(s.digests.len() as u32).to_le_bytes());
+                for d in &s.digests {
+                    out.extend_from_slice(&d.to_le_bytes());
+                }
+            }
+        }
+        let mut dg = chunk::Digest::new();
+        dg.update(&out);
+        out.extend_from_slice(&dg.finish().to_le_bytes());
+        out
+    }
+
+    /// Parse and verify an RSMF blob.
+    pub fn from_bytes(buf: &[u8]) -> Result<Manifest, String> {
+        if buf.len() < 4 + 4 + 8 + 8 + 8 + 4 + 4 + 8 {
+            return Err(format!("manifest too short ({} bytes)", buf.len()));
+        }
+        if &buf[..4] != MANIFEST_MAGIC {
+            return Err("not a manifest (bad magic)".into());
+        }
+        let body = &buf[..buf.len() - 8];
+        let mut dg = chunk::Digest::new();
+        dg.update(body);
+        let stored = u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
+        if dg.finish() != stored {
+            return Err(format!(
+                "manifest trailer mismatch ({:#018x} vs stored {stored:#018x})",
+                dg.finish()
+            ));
+        }
+        let mut pos = 4usize;
+        let rd_u32 = |pos: &mut usize| -> Result<u32, String> {
+            if body.len() < *pos + 4 {
+                return Err("manifest truncated".into());
+            }
+            let v = u32::from_le_bytes(body[*pos..*pos + 4].try_into().unwrap());
+            *pos += 4;
+            Ok(v)
+        };
+        let rd_u64 = |pos: &mut usize| -> Result<u64, String> {
+            if body.len() < *pos + 8 {
+                return Err("manifest truncated".into());
+            }
+            let v = u64::from_le_bytes(body[*pos..*pos + 8].try_into().unwrap());
+            *pos += 8;
+            Ok(v)
+        };
+        let version = rd_u32(&mut pos)?;
+        if version != MANIFEST_VERSION {
+            return Err(format!("unsupported manifest version {version}"));
+        }
+        let step = rd_u64(&mut pos)?;
+        let seed = rd_u64(&mut pos)?;
+        let view_epoch = rd_u64(&mut pos)?;
+        let chunk_elems = rd_u32(&mut pos)?;
+        if chunk_elems == 0 {
+            return Err("zero chunk width".into());
+        }
+        let n_layers = rd_u32(&mut pos)? as usize;
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let flags = rd_u32(&mut pos)?;
+            let mut rd_sec = |pos: &mut usize| -> Result<SectionChunks, String> {
+                let len = rd_u64(pos)?;
+                let k = rd_u32(pos)? as usize;
+                if k != chunk::chunk_count(len as usize, chunk_elems as usize) {
+                    return Err(format!(
+                        "section of {len} elems lists {k} chunks at width {chunk_elems}"
+                    ));
+                }
+                let mut digests = Vec::with_capacity(k);
+                for _ in 0..k {
+                    digests.push(rd_u64(pos)?);
+                }
+                Ok(SectionChunks { len, digests })
+            };
+            let params = rd_sec(&mut pos)?;
+            let residual = if flags & 1 != 0 {
+                Some((rd_sec(&mut pos)?, rd_sec(&mut pos)?))
+            } else {
+                None
+            };
+            let velocity = if flags & 2 != 0 { Some(rd_sec(&mut pos)?) } else { None };
+            layers.push(LayerChunks { params, residual, velocity });
+        }
+        if pos != body.len() {
+            return Err("manifest has trailing bytes".into());
+        }
+        Ok(Manifest { step, seed, view_epoch, chunk_elems, layers })
+    }
+}
+
+/// Walk every chunk of `ck` at `chunk_elems` in manifest order.
+fn for_each_chunk<F>(ck: &Checkpoint, chunk_elems: usize, mut f: F) -> Result<(), String>
+where
+    F: FnMut(u64, &[f32]) -> Result<(), String>,
+{
+    for l in &ck.layers {
+        for (_, xs) in l.sections() {
+            for i in 0..chunk::chunk_count(xs.len(), chunk_elems) {
+                let (s, e) = chunk::chunk_range(xs.len(), chunk_elems, i);
+                f(chunk::digest_f32(&xs[s..e]), &xs[s..e])?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The on-disk store: refcounted content-addressed chunks plus a bounded
+/// window of manifests, mirroring the driver's snapshot ring depth.
+pub struct CkptRepo {
+    root: PathBuf,
+    chunk_elems: usize,
+    /// How many manifests to retain (matches the snapshot-ring depth).
+    keep: usize,
+    /// digest → reference count over the retained manifests.
+    refs: HashMap<u64, u32>,
+    /// Retained manifests, oldest insertion first.
+    ring: Vec<Manifest>,
+    stats: RepoStats,
+}
+
+impl CkptRepo {
+    /// Open (or create) a repository at `root`, rebuilding refcounts from
+    /// the surviving manifests and collecting orphaned chunks and torn
+    /// temp files left by a crash.
+    pub fn open(
+        root: impl Into<PathBuf>,
+        chunk_elems: usize,
+        keep: usize,
+    ) -> Result<CkptRepo, String> {
+        assert!(chunk_elems > 0, "chunk_elems must be positive");
+        assert!(keep > 0, "must retain at least one manifest");
+        let root = root.into();
+        let io = |e: std::io::Error| format!("ckpt repo {}: {e}", root.display());
+        std::fs::create_dir_all(root.join("chunks")).map_err(io)?;
+        std::fs::create_dir_all(root.join("manifests")).map_err(io)?;
+
+        let mut repo = CkptRepo {
+            root,
+            chunk_elems,
+            keep,
+            refs: HashMap::new(),
+            ring: Vec::new(),
+            stats: RepoStats::default(),
+        };
+
+        let mut found: Vec<Manifest> = Vec::new();
+        let manifest_dir = repo.root.join("manifests");
+        for entry in std::fs::read_dir(&manifest_dir).map_err(io)? {
+            let path = entry.map_err(io)?.path();
+            let parsed = std::fs::read(&path)
+                .ok()
+                .and_then(|b| Manifest::from_bytes(&b).ok())
+                .filter(|m| m.chunk_elems as usize == repo.chunk_elems);
+            match parsed {
+                Some(m) => found.push(m),
+                // torn temp, corrupt blob or a different chunk width:
+                // not restorable state, collect it
+                None => {
+                    let _ = std::fs::remove_file(&path);
+                }
+            }
+        }
+        found.sort_by_key(|m| m.step);
+        for m in found {
+            for d in m.digest_occurrences() {
+                *repo.refs.entry(d).or_insert(0) += 1;
+            }
+            repo.ring.push(m);
+        }
+        repo.enforce_keep()?;
+
+        // orphaned chunks: on disk but unreferenced by any manifest
+        for entry in std::fs::read_dir(repo.root.join("chunks")).map_err(io)? {
+            let path = entry.map_err(io)?.path();
+            let live = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .and_then(|n| n.strip_suffix(".chk"))
+                .and_then(|n| u64::from_str_radix(n, 16).ok())
+                .is_some_and(|d| repo.refs.contains_key(&d));
+            if !live {
+                let _ = std::fs::remove_file(&path);
+                repo.stats.chunks_collected += 1;
+            }
+        }
+        Ok(repo)
+    }
+
+    fn chunk_path(&self, digest: u64) -> PathBuf {
+        self.root.join("chunks").join(format!("{digest:016x}.chk"))
+    }
+
+    fn manifest_path(&self, step: u64) -> PathBuf {
+        self.root.join("manifests").join(format!("step{step:020}.rsmf"))
+    }
+
+    /// Store a checkpoint: unseen chunks are written once, known chunks
+    /// only bump their refcount, the manifest is persisted atomically and
+    /// the retention window is enforced (evicting + collecting the
+    /// oldest manifest beyond `keep`). Re-putting a step replaces that
+    /// step's manifest (rollback after a reshape re-runs steps).
+    pub fn put_checkpoint(&mut self, ck: &Checkpoint) -> Result<Manifest, String> {
+        let m = Manifest::of(ck, self.chunk_elems);
+        if let Some(i) = self.ring.iter().position(|r| r.step == m.step) {
+            let old = self.ring.remove(i);
+            self.drop_manifest(&old)?;
+        }
+        for_each_chunk(ck, self.chunk_elems, |dg, data| {
+            match self.refs.get_mut(&dg) {
+                Some(c) => {
+                    *c += 1;
+                    self.stats.chunks_deduped += 1;
+                }
+                None => {
+                    let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+                    write_atomic(self.chunk_path(dg), &bytes)
+                        .map_err(|e| format!("chunk {dg:016x}: {e}"))?;
+                    self.refs.insert(dg, 1);
+                    self.stats.chunks_written += 1;
+                }
+            }
+            Ok(())
+        })?;
+        write_atomic(self.manifest_path(m.step), &m.to_bytes())
+            .map_err(|e| format!("manifest step {}: {e}", m.step))?;
+        self.stats.manifests_written += 1;
+        self.ring.push(m.clone());
+        self.enforce_keep()?;
+        Ok(m)
+    }
+
+    fn drop_manifest(&mut self, m: &Manifest) -> Result<(), String> {
+        for d in m.digest_occurrences() {
+            let gone = match self.refs.get_mut(&d) {
+                Some(c) => {
+                    *c -= 1;
+                    *c == 0
+                }
+                None => false,
+            };
+            if gone {
+                self.refs.remove(&d);
+                let _ = std::fs::remove_file(self.chunk_path(d));
+                self.stats.chunks_collected += 1;
+            }
+        }
+        let _ = std::fs::remove_file(self.manifest_path(m.step));
+        Ok(())
+    }
+
+    fn enforce_keep(&mut self) -> Result<(), String> {
+        while self.ring.len() > self.keep {
+            let old = self.ring.remove(0);
+            self.drop_manifest(&old)?;
+        }
+        Ok(())
+    }
+
+    /// Is a chunk with this digest retained?
+    pub fn has_chunk(&self, digest: u64) -> bool {
+        self.refs.contains_key(&digest)
+    }
+
+    /// Read a chunk back, digest-verified: `None` if it is absent *or*
+    /// fails verification (a corrupt chunk is as good as missing).
+    pub fn read_chunk(&self, digest: u64) -> Option<Vec<f32>> {
+        let bytes = std::fs::read(self.chunk_path(digest)).ok()?;
+        if bytes.len() % 4 != 0 {
+            return None;
+        }
+        let vals: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        (chunk::digest_f32(&vals) == digest).then_some(vals)
+    }
+
+    /// The most recently stored manifest, if any.
+    pub fn latest(&self) -> Option<&Manifest> {
+        self.ring.last()
+    }
+
+    /// Running store statistics.
+    pub fn stats(&self) -> RepoStats {
+        self.stats
+    }
+
+    /// The chunk width this repository stores at.
+    pub fn chunk_elems(&self) -> usize {
+        self.chunk_elems
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::checkpoint::LayerState;
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("rs-repo-{}-{tag}", std::process::id()))
+    }
+
+    fn ck(step: u64, fill: f32) -> Checkpoint {
+        Checkpoint {
+            step,
+            seed: 7,
+            view_epoch: 0,
+            layers: vec![
+                LayerState {
+                    params: (0..20).map(|i| fill + i as f32).collect(),
+                    residual: Some((vec![0.0; 20], vec![0.0; 20])),
+                    velocity: None,
+                },
+                LayerState {
+                    params: vec![fill; 5],
+                    residual: None,
+                    velocity: Some(vec![0.25; 5]),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrips_and_rejects_corruption() {
+        let m = Manifest::of(&ck(3, 1.0), 8);
+        let bytes = m.to_bytes();
+        assert_eq!(Manifest::from_bytes(&bytes).unwrap(), m);
+        for i in [0usize, 5, bytes.len() / 2, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[i] ^= 1;
+            assert!(Manifest::from_bytes(&bad).is_err(), "flip at {i}");
+        }
+        assert!(Manifest::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn identical_content_is_stored_once() {
+        let root = tmp_root("dedup");
+        let _ = std::fs::remove_dir_all(&root);
+        let mut repo = CkptRepo::open(&root, 8, 2).unwrap();
+        let m1 = repo.put_checkpoint(&ck(1, 1.0)).unwrap();
+        let w1 = repo.stats().chunks_written;
+        assert!(w1 > 0);
+        // same content at the next step: nothing new hits the disk
+        let m2 = repo.put_checkpoint(&ck(2, 1.0)).unwrap();
+        assert_eq!(repo.stats().chunks_written, w1, "identical step re-wrote chunks");
+        assert_eq!(
+            repo.stats().chunks_deduped,
+            m2.digest_occurrences().len() as u64
+                + (m1.digest_occurrences().len() as u64 - w1),
+            "every occurrence of known content must count as deduped"
+        );
+        assert_eq!(repo.stats().manifests_written, 2);
+        // every digest is readable and verifies
+        for d in m2.digest_occurrences() {
+            assert!(repo.has_chunk(d));
+            assert!(repo.read_chunk(d).is_some());
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn eviction_collects_unreferenced_chunks() {
+        let root = tmp_root("evict");
+        let _ = std::fs::remove_dir_all(&root);
+        let mut repo = CkptRepo::open(&root, 8, 2).unwrap();
+        let m1 = repo.put_checkpoint(&ck(1, 1.0)).unwrap();
+        repo.put_checkpoint(&ck(2, 2.0)).unwrap();
+        let m3 = repo.put_checkpoint(&ck(3, 3.0)).unwrap();
+        assert!(repo.stats().chunks_collected > 0, "step-1-only chunks must be collected");
+        // chunks unique to step 1 (params with fill 1.0) are gone…
+        let unique1 = m1.layers[0].params.digests[0];
+        assert!(!repo.has_chunk(unique1));
+        assert!(repo.read_chunk(unique1).is_none());
+        // …but shared content (all-zero residual) survives in step 3
+        let shared = m3.layers[0].residual.as_ref().unwrap().0.digests[0];
+        assert!(repo.read_chunk(shared).is_some());
+        assert_eq!(repo.latest().map(|m| m.step), Some(3));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn reopen_rebuilds_refcounts_and_collects_orphans() {
+        let root = tmp_root("reopen");
+        let _ = std::fs::remove_dir_all(&root);
+        let live;
+        {
+            let mut repo = CkptRepo::open(&root, 8, 2).unwrap();
+            let m = repo.put_checkpoint(&ck(4, 9.0)).unwrap();
+            live = m.digest_occurrences();
+        }
+        // plant an orphan chunk and a torn manifest temp
+        std::fs::write(root.join("chunks").join("00000000deadbeef.chk"), [1, 2, 3, 4])
+            .unwrap();
+        std::fs::write(root.join("manifests").join("step5.rsmf.tmp.1"), b"torn").unwrap();
+        let repo = CkptRepo::open(&root, 8, 2).unwrap();
+        for d in &live {
+            assert!(repo.has_chunk(*d), "reopen must keep referenced chunk {d:016x}");
+        }
+        assert!(!root.join("chunks").join("00000000deadbeef.chk").exists());
+        assert!(!root.join("manifests").join("step5.rsmf.tmp.1").exists());
+        assert!(repo.stats().chunks_collected >= 1);
+        assert_eq!(repo.latest().map(|m| m.step), Some(4));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn read_chunk_rejects_bit_corruption() {
+        let root = tmp_root("verify");
+        let _ = std::fs::remove_dir_all(&root);
+        let mut repo = CkptRepo::open(&root, 8, 2).unwrap();
+        let m = repo.put_checkpoint(&ck(1, 5.0)).unwrap();
+        let d = m.layers[0].params.digests[0];
+        let path = root.join("chunks").join(format!("{d:016x}.chk"));
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[3] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(repo.read_chunk(d).is_none(), "corrupt chunk must fail verification");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn same_step_re_put_replaces_the_manifest() {
+        let root = tmp_root("replace");
+        let _ = std::fs::remove_dir_all(&root);
+        let mut repo = CkptRepo::open(&root, 8, 2).unwrap();
+        repo.put_checkpoint(&ck(6, 1.0)).unwrap();
+        // rollback re-runs step 6 with different content
+        let m = repo.put_checkpoint(&ck(6, 2.0)).unwrap();
+        assert_eq!(repo.ring.len(), 1, "same step must replace, not accumulate");
+        assert_eq!(repo.latest(), Some(&m));
+        // the replaced step's unique chunks were collected
+        let stale = Manifest::of(&ck(6, 1.0), 8).layers[0].params.digests[0];
+        assert!(!repo.has_chunk(stale));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

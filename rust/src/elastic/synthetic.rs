@@ -93,6 +93,40 @@ impl Workload for SyntheticWorkload {
     }
 }
 
+/// [`SyntheticWorkload`] with some layers frozen (zero gradient).  The
+/// Gaussian workload touches every parameter every step, which makes
+/// any two checkpoints differ in every chunk; freezing layers keeps
+/// their chunks bit-stable across steps, so the checkpoint-repository
+/// tests can observe dedup and a delta rejoin that skips real content.
+pub struct FrozenWorkload {
+    pub seed: u64,
+    /// Layer indices whose gradients are zeroed.
+    pub frozen: Vec<usize>,
+}
+
+impl Workload for FrozenWorkload {
+    fn compute(
+        &mut self,
+        params: &[Vec<f32>],
+        key: &ShardKey,
+    ) -> Result<(f32, Vec<Vec<f32>>), String> {
+        let grads = SIZES
+            .iter()
+            .enumerate()
+            .map(|(li, &n)| {
+                if self.frozen.contains(&li) {
+                    vec![0f32; n]
+                } else {
+                    grad(self.seed, key, li, n)
+                }
+            })
+            .collect();
+        let head = &params[0];
+        let loss = head.iter().map(|v| v.abs()).sum::<f32>() / head.len().max(1) as f32;
+        Ok((loss, grads))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -95,6 +95,8 @@ fn cmd_train(argv: &[String]) -> i32 {
         .opt("ckpt", "", "elastic: RSCK checkpoint path prefix")
         .opt("ckpt-every", "", "elastic: periodic checkpoint cadence in steps (0 = never)")
         .opt("resume", "", "elastic: resume every rank from PREFIX_rank{R}.rsck")
+        .opt("ckpt-repo", "", "elastic: content-addressed chunk repo root (delta rejoin)")
+        .opt("rejoin-donors", "", "elastic: donors serving a delta rejoin in parallel (default 2)")
         .opt("trace-out", "", "write a Chrome trace-event JSON of every rank's spans here")
         .opt("metrics-addr", "", "serve a Prometheus scrape endpoint on this address (rank 0)")
         .opt("obs-every", "", "gather cross-rank step-latency stats every N steps (0 = never)")
@@ -142,6 +144,8 @@ fn cmd_train(argv: &[String]) -> i32 {
         ("ckpt", "ckpt"),
         ("ckpt-every", "ckpt_every"),
         ("resume", "resume"),
+        ("ckpt-repo", "ckpt_repo"),
+        ("rejoin-donors", "rejoin_donors"),
         ("trace-out", "trace_out"),
         ("metrics-addr", "metrics_addr"),
         ("obs-every", "obs_every"),
@@ -331,6 +335,8 @@ fn cmd_launch(argv: &[String]) -> i32 {
         .opt("min-ranks", "", "elastic: minimum surviving view size, forwarded to every rank")
         .opt("kill-rank", "", "fault injection: kill rank R at step S (R@S), forwarded")
         .opt("stall-rank", "", "fault injection: stall rank R at step S for MS ms (R@S:MS), forwarded")
+        .opt("ckpt-repo", "", "elastic: content-addressed chunk repo root, forwarded to every rank")
+        .opt("rejoin-donors", "", "elastic: parallel delta-rejoin donors, forwarded to every rank")
         .opt("trace-out", "", "Chrome trace-event JSON path, forwarded to every rank")
         .opt("metrics-addr", "", "Prometheus scrape address (rank 0 serves it), forwarded")
         .opt("obs-every", "", "cross-rank stats gather cadence in steps, forwarded")
@@ -390,6 +396,8 @@ fn cmd_launch(argv: &[String]) -> i32 {
             ("min-ranks", "min_ranks"),
             ("kill-rank", "kill_rank"),
             ("stall-rank", "stall_rank"),
+            ("ckpt-repo", "ckpt_repo"),
+            ("rejoin-donors", "rejoin_donors"),
             ("trace-out", "trace_out"),
             ("metrics-addr", "metrics_addr"),
             ("obs-every", "obs_every"),

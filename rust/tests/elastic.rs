@@ -16,18 +16,31 @@
 //! `elastic::synthetic::SyntheticWorkload`, whose gradients are pure in
 //! `(seed, view_epoch, rank, world, step, layer)`.
 
-use redsync::collectives::Topology;
+use redsync::collectives::{Topology, Transport};
+use redsync::coordinator::metrics::RejoinStats;
 use redsync::coordinator::Checkpoint;
-use redsync::elastic::synthetic::{self, SyntheticWorkload};
+use redsync::elastic::synthetic::{self, FrozenWorkload, SyntheticWorkload};
 use redsync::elastic::{
     fresh_checkpoint, run_elastic_worker, run_local_fleet, ElasticOpts, ElasticStatus, FaultSpec,
     FleetOutcome, RankOutcome, StallSpec,
 };
-use redsync::net::{free_loopback_addr, TcpOptions, TcpTransport};
+use redsync::net::{
+    free_loopback_addr, MixedFabric, MixedOptions, TcpOptions, TcpTransport, UnixOptions,
+    UnixTransport,
+};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
 
 const SEED: u64 = 0xE1A5;
+
+static NEXT_NS: AtomicU32 = AtomicU32::new(0);
+
+/// Fresh socket-path namespace: unique per process *and* per call.
+fn socket_ns() -> String {
+    format!("/tmp/rs-el-{}-{}", std::process::id(), NEXT_NS.fetch_add(1, Ordering::Relaxed))
+}
 
 fn opts(steps: usize, pipeline: bool) -> ElasticOpts {
     ElasticOpts {
@@ -78,17 +91,21 @@ fn run_local_resumed(
     .expect("fleet")
 }
 
-/// Run every rank of a loopback-TCP fleet in threads (shrink only — the
-/// in-process orchestrator owns rejoin).
-fn run_tcp(world: usize, o: &ElasticOpts) -> Vec<RankOutcome> {
-    let addr = free_loopback_addr();
+/// Run every rank of a socket fleet in threads (shrink only — the
+/// in-process orchestrator owns rejoin), bootstrapping each rank's
+/// endpoint with `connect`.
+fn run_sockets<T, C>(world: usize, o: &ElasticOpts, connect: C) -> Vec<RankOutcome>
+where
+    T: Transport + Sync + Send + 'static,
+    C: Fn(usize) -> T + Send + Sync + 'static,
+{
+    let connect = Arc::new(connect);
     let handles: Vec<_> = (0..world)
         .map(|rank| {
-            let addr = addr.clone();
+            let connect = Arc::clone(&connect);
             let o = o.clone();
             thread::spawn(move || {
-                let t = TcpTransport::connect(&TcpOptions::new(world, rank, addr))
-                    .expect("tcp bootstrap");
+                let t = connect(rank);
                 let specs = synthetic::specs();
                 let init = fresh(&o);
                 let mut w = SyntheticWorkload { seed: SEED };
@@ -98,6 +115,31 @@ fn run_tcp(world: usize, o: &ElasticOpts) -> Vec<RankOutcome> {
         })
         .collect();
     handles.into_iter().map(|h| h.join().expect("rank thread")).collect()
+}
+
+fn run_tcp(world: usize, o: &ElasticOpts) -> Vec<RankOutcome> {
+    let addr = free_loopback_addr();
+    run_sockets(world, o, move |rank| {
+        TcpTransport::connect(&TcpOptions::new(world, rank, addr.clone())).expect("tcp bootstrap")
+    })
+}
+
+fn run_unix(world: usize, o: &ElasticOpts) -> Vec<RankOutcome> {
+    let base = socket_ns();
+    run_sockets(world, o, move |rank| {
+        UnixTransport::connect(&UnixOptions::new(world, rank, base.clone()))
+            .expect("unix bootstrap")
+    })
+}
+
+/// Mixed fabric split as 2 "nodes": Unix sockets intra-node, TCP across.
+fn run_mixed(world: usize, o: &ElasticOpts) -> Vec<RankOutcome> {
+    let addr = free_loopback_addr();
+    let topo = Topology::new(2, world / 2);
+    run_sockets(world, o, move |rank| {
+        MixedFabric::connect(&MixedOptions::new(world, rank, addr.clone(), topo))
+            .expect("mixed bootstrap")
+    })
 }
 
 fn tmp_prefix(tag: &str) -> String {
@@ -158,18 +200,42 @@ fn elastic_traffic_is_fully_multiplexed() {
 // Kill → reshape → bit-identical continuation (the acceptance pin)
 // ---------------------------------------------------------------------
 
+/// Which fabric carries a chaos-matrix case.
+#[derive(Clone, Copy)]
+enum Fabric {
+    Local,
+    Tcp,
+    Unix,
+    Mixed,
+}
+
+impl Fabric {
+    fn label(self) -> &'static str {
+        match self {
+            Fabric::Local => "local",
+            Fabric::Tcp => "tcp",
+            Fabric::Unix => "unix",
+            Fabric::Mixed => "mixed",
+        }
+    }
+}
+
 /// Shared body: 4 ranks, rank 2 killed at step 6 of 12; survivors must
 /// reshape to a 3-rank world and match a fresh 3-rank run resumed from
 /// their reshape checkpoints, bit for bit.
-fn kill_reshape_case(pipeline: bool, tcp: bool) {
+fn kill_reshape_case(pipeline: bool, fabric: Fabric) {
     let world = 4;
-    let prefix = tmp_prefix(&format!("kill_p{}_t{}", pipeline as u8, tcp as u8));
+    let prefix = tmp_prefix(&format!("kill_p{}_{}", pipeline as u8, fabric.label()));
     let mut o = opts(12, pipeline);
     o.kill = vec![FaultSpec { rank: 2, step: 6 }];
     o.ckpt_prefix = Some(prefix.clone());
 
-    let ranks: Vec<RankOutcome> =
-        if tcp { run_tcp(world, &o) } else { run_local(world, &o).ranks };
+    let ranks: Vec<RankOutcome> = match fabric {
+        Fabric::Local => run_local(world, &o).ranks,
+        Fabric::Tcp => run_tcp(world, &o),
+        Fabric::Unix => run_unix(world, &o),
+        Fabric::Mixed => run_mixed(world, &o),
+    };
 
     assert_eq!(ranks[2].status, ElasticStatus::Killed);
     let mut survivor_hash = None;
@@ -227,22 +293,42 @@ fn kill_reshape_case(pipeline: bool, tcp: bool) {
 
 #[test]
 fn kill_reshape_bit_identity_local_sequential() {
-    kill_reshape_case(false, false);
+    kill_reshape_case(false, Fabric::Local);
 }
 
 #[test]
 fn kill_reshape_bit_identity_local_pipelined() {
-    kill_reshape_case(true, false);
+    kill_reshape_case(true, Fabric::Local);
 }
 
 #[test]
 fn kill_reshape_bit_identity_tcp_sequential() {
-    kill_reshape_case(false, true);
+    kill_reshape_case(false, Fabric::Tcp);
 }
 
 #[test]
 fn kill_reshape_bit_identity_tcp_pipelined() {
-    kill_reshape_case(true, true);
+    kill_reshape_case(true, Fabric::Tcp);
+}
+
+#[test]
+fn kill_reshape_bit_identity_unix_sequential() {
+    kill_reshape_case(false, Fabric::Unix);
+}
+
+#[test]
+fn kill_reshape_bit_identity_unix_pipelined() {
+    kill_reshape_case(true, Fabric::Unix);
+}
+
+#[test]
+fn kill_reshape_bit_identity_mixed_sequential() {
+    kill_reshape_case(false, Fabric::Mixed);
+}
+
+#[test]
+fn kill_reshape_bit_identity_mixed_pipelined() {
+    kill_reshape_case(true, Fabric::Mixed);
 }
 
 // ---------------------------------------------------------------------
@@ -398,4 +484,156 @@ fn rejoin_restores_residual_and_momentum_bit_exactly() {
         reference.layers[0].params, joined.layers[0].params,
         "params at step 12 differ from the step-6 checkpoint"
     );
+}
+
+// ---------------------------------------------------------------------
+// Content-addressed checkpoint repository + delta rejoin
+// ---------------------------------------------------------------------
+
+/// Run a fleet whose workload freezes some layers (zero gradients), so
+/// chunks of those layers stay bit-stable across steps and the delta
+/// rejoin has real content to skip.
+fn run_local_frozen(world: usize, o: &ElasticOpts, frozen: &[usize]) -> FleetOutcome {
+    let specs = synthetic::specs();
+    let frozen = frozen.to_vec();
+    run_local_fleet(
+        world,
+        &specs,
+        o,
+        |_r| Ok(fresh(o)),
+        move |_r| Ok(FrozenWorkload { seed: SEED, frozen: frozen.clone() }),
+    )
+    .expect("fleet")
+}
+
+/// Kill rank 2 at step 6, rejoin it at step 12 of 18, checkpointing
+/// every 6 steps into both the RSCK prefix and the chunk repo.
+fn delta_opts(tag: &str) -> (String, ElasticOpts) {
+    let prefix = tmp_prefix(tag);
+    let mut o = opts(18, false);
+    o.kill = vec![FaultSpec { rank: 2, step: 6 }];
+    o.rejoin = vec![FaultSpec { rank: 2, step: 12 }];
+    o.ckpt_prefix = Some(prefix.clone());
+    o.ckpt_every = 6;
+    o.ckpt_repo = Some(format!("{prefix}_repo"));
+    (prefix, o)
+}
+
+fn summed(f: &FleetOutcome, pick: fn(&RejoinStats) -> u64) -> u64 {
+    f.ranks.iter().map(|o| pick(&o.rejoin)).sum()
+}
+
+#[test]
+fn delta_rejoin_moves_fewer_words_than_a_full_image() {
+    let world = 4;
+    // layers 0, 3, 4 (4300 of 6600 params) are frozen: their chunks at
+    // the rejoiner's stale step-6 checkpoint still match the donors'
+    // step-12 manifest, so only the live layers' chunks travel
+    let frozen = [0usize, 3, 4];
+
+    let (a_prefix, o_a) = delta_opts("delta_a");
+    let a = run_local_frozen(world, &o_a, &frozen);
+    let (b_prefix, mut o_b) = delta_opts("delta_b");
+    o_b.rejoin_full_image = true;
+    let b = run_local_frozen(world, &o_b, &frozen);
+
+    for (label, fleet) in [("delta", &a), ("full", &b)] {
+        for (rank, out) in fleet.ranks.iter().enumerate() {
+            assert_eq!(out.status, ElasticStatus::Finished, "{label} rank {rank}");
+            assert!(out.replicas_consistent, "{label} rank {rank}");
+            assert_eq!(out.view, vec![0, 1, 2, 3], "{label} rank {rank}");
+        }
+    }
+    // both rejoin flavors restore the same bytes, so the runs finish
+    // bit-identical — the delta path changes traffic, never state
+    assert_eq!(a.ranks[0].param_hash, b.ranks[0].param_hash);
+    let a_join = Checkpoint::load(format!("{a_prefix}_join_rank2.rsck")).expect("join ckpt");
+    let b_join = Checkpoint::load(format!("{b_prefix}_join_rank2.rsck")).expect("join ckpt");
+    assert_eq!(
+        a_join.to_bytes(),
+        b_join.to_bytes(),
+        "delta and full-image rejoin agree bit-for-bit"
+    );
+
+    // word-exact accounting: the full-image stream is one ctrl message
+    // per layer (its params + the mux tag word), and the delta run's
+    // counterfactual figure prices exactly that
+    let full_words: u64 = synthetic::SIZES.iter().map(|&n| n as u64 + 1).sum();
+    assert_eq!(summed(&b, |r| r.join_words), full_words, "full-image join words");
+    assert_eq!(summed(&a, |r| r.full_image_words), full_words);
+    let delta_words = summed(&a, |r| r.join_words);
+    assert!(
+        delta_words < full_words,
+        "delta rejoin must move strictly fewer words ({delta_words} vs {full_words})"
+    );
+
+    // the frozen layers' chunks were reused, the rest fetched — and
+    // every fetched chunk passed its digest check
+    let rj = &a.ranks[2].rejoin;
+    assert!(rj.reused_chunks > 0, "frozen layers satisfied from the stale checkpoint");
+    assert!(rj.fetched_chunks > 0, "live layers actually travelled");
+    assert_eq!(rj.verified_chunks, rj.fetched_chunks, "every fetched chunk digest-verified");
+    assert_eq!(rj.retries, 0, "clean run needs no retries");
+    assert_eq!(rj.failovers, 0, "clean run needs no failovers");
+
+    // the per-rank chunk repos saw writes, dedup across steps, and
+    // eviction-driven collection under the 2-deep keep policy
+    let rp = &a.ranks[0].repo;
+    assert!(rp.manifests_written > 0, "repo manifests written");
+    assert!(rp.chunks_written > 0, "repo chunks written");
+    assert!(rp.chunks_deduped > 0, "frozen layers dedup across steps");
+    assert!(rp.chunks_collected > 0, "evicted manifests release their chunks");
+}
+
+#[test]
+fn donor_loss_and_corruption_mid_rejoin_fail_over_bit_identically() {
+    let world = 4;
+    let frozen = [0usize, 3, 4];
+
+    // X: the clean three-donor delta rejoin (reference bytes)
+    let (x_prefix, mut o_x) = delta_opts("failover_x");
+    o_x.rejoin_donors = 3;
+    let x = run_local_frozen(world, &o_x, &frozen);
+    for (rank, out) in x.ranks.iter().enumerate() {
+        assert_eq!(out.status, ElasticStatus::Finished, "X rank {rank}");
+    }
+    let x_join = Checkpoint::load(format!("{x_prefix}_join_rank2.rsck")).expect("X join ckpt");
+
+    // Y: donor 0 dies after serving one chunk; the rejoiner's fetch
+    // fails over to donors 1 and 3 and restores the same bytes, then
+    // the view sheds the dead donor and finishes
+    let (y_prefix, mut o_y) = delta_opts("failover_y");
+    o_y.rejoin_donors = 3;
+    o_y.join_kill = vec![0];
+    let y = run_local_frozen(world, &o_y, &frozen);
+    assert_eq!(y.ranks[0].status, ElasticStatus::Killed, "donor 0 died mid-rejoin");
+    for r in [1usize, 2, 3] {
+        assert_eq!(y.ranks[r].status, ElasticStatus::Finished, "Y rank {r}");
+        assert!(y.ranks[r].replicas_consistent, "Y rank {r}");
+        assert_eq!(y.ranks[r].view, vec![1, 2, 3], "Y sheds the dead donor");
+    }
+    assert!(y.ranks[2].rejoin.failovers >= 1, "the rejoiner recorded the failover");
+    let y_join = Checkpoint::load(format!("{y_prefix}_join_rank2.rsck")).expect("Y join ckpt");
+    assert_eq!(
+        x_join.to_bytes(),
+        y_join.to_bytes(),
+        "killing a donor mid-rejoin still converges bit-identically"
+    );
+
+    // Z: a donor flips one bit in the first chunk it serves; the digest
+    // check catches it, a retry round fetches it clean
+    let (z_prefix, mut o_z) = delta_opts("failover_z");
+    o_z.rejoin_donors = 3;
+    o_z.join_corrupt = vec![0];
+    let z = run_local_frozen(world, &o_z, &frozen);
+    for (rank, out) in z.ranks.iter().enumerate() {
+        assert_eq!(out.status, ElasticStatus::Finished, "Z rank {rank}");
+        assert!(out.replicas_consistent, "Z rank {rank}");
+    }
+    let zj = &z.ranks[2].rejoin;
+    assert!(zj.retries >= 1, "the corrupt chunk was detected and retried");
+    assert_eq!(zj.verified_chunks, zj.fetched_chunks, "only verified chunks were applied");
+    let z_join = Checkpoint::load(format!("{z_prefix}_join_rank2.rsck")).expect("Z join ckpt");
+    assert_eq!(x_join.to_bytes(), z_join.to_bytes(), "corruption is repaired bit-identically");
+    assert_eq!(z.ranks[0].param_hash, x.ranks[0].param_hash, "the clean finish is unchanged");
 }
