@@ -38,13 +38,25 @@
 //! detect → reshape → resume — plus the post-reshape consistency
 //! verdict, to `BENCH_elastic.json` (uploaded by CI).
 //!
-//! `--obs-smoke [OUT.json]` is the tracing A/B: the pipelined engine
-//! over loopback TCP with span rings off vs on (min of 3 reps each,
-//! overhead pinned < 2%), a cross-lane overlap check on the drained
-//! timeline (a comm lane's allgather in flight while another lane
-//! selects/packs), and a short elastic kill leg whose detect/reshape
-//! spans must land.  Writes `trace_obs.json` (Chrome/Perfetto) next to
-//! `BENCH_obs.json`; CI uploads both.
+//! `--obs-smoke [FABRIC] [OUT.json]` is the tracing A/B: the pipelined
+//! engine with span rings + the telemetry calibrator off vs on (min of
+//! 3 reps each, overhead pinned < 2%), a cross-lane overlap check on
+//! the drained timeline (a comm lane's allgather in flight while
+//! another lane selects/packs), and a short elastic kill leg whose
+//! detect/reshape spans must land.  FABRIC picks the wire under the
+//! A/B: `local` (in-process), `tcp` (default), `unix` or `mixed`.
+//! Writes `trace_obs.json` (Chrome/Perfetto) next to `BENCH_obs.json`;
+//! CI runs all four fabrics and uploads both files.
+//!
+//! `--calib-smoke [OUT.json]` is the cost-model calibration A/B
+//! (acceptance for `--recalib-every`): pins that the §5.5 picker flips
+//! from hierarchical to flat sparse between the `fatnode` datasheet and
+//! the `fatnode-straggler` preset at 2x4, that a [`Calibrator`] fed one
+//! recalibration window of straggler-truth observations re-plans to the
+//! algorithm the truth machine picks (with the predicted step-time
+//! improvement reported), and that switching algorithms live mid-run
+//! leaves parameters bit-identical to the static target plan over real
+//! loopback TCP.  CI runs this and uploads `BENCH_calib.json`.
 //!
 //! `--fabric-smoke [OUT.json]` is the link-class A/B: the pipelined
 //! engine's small-frame storm over loopback TCP frame-per-write vs TCP
@@ -62,26 +74,31 @@
 //! `BENCH_ckpt.json`.
 
 use redsync::collectives::mux::TagMux;
-use redsync::collectives::{Algo, Gathered, LinkClass, Topology, Transport};
+use redsync::collectives::{Algo, Gathered, LinkClass, LocalFabric, Topology, Transport};
 use redsync::compression::message::{
     merge_plain, pack_plain, pack_plain_into, pack_quant, pack_quant_into, plain_words,
     unpack_plain, unpack_quant,
 };
 use redsync::compression::simd;
 use redsync::compression::{trimmed_topk, Accumulation, CompressorConfig, Method, QuantizedSet};
-use redsync::tensor::SparseTensor;
 use redsync::config::{preset, TrainConfig};
 use redsync::coordinator::metrics::{param_hash, phase};
 use redsync::coordinator::train;
+use redsync::costmodel::{self, BucketCost, PLAIN_WIRE_BYTES};
 use redsync::net::{
-    free_loopback_addr, LinkClassStats, TcpOptions, TcpTransport, UnixOptions, UnixTransport,
+    free_loopback_addr, LinkClassStats, MixedFabric, MixedOptions, TcpOptions, TcpTransport,
+    UnixOptions, UnixTransport,
 };
+use redsync::obs::Calibrator;
 use redsync::pipeline::{
     build_buckets, BucketDone, LayerSpec, Pipelined, Sequential, SyncEngine, BUCKET_TAG_BASE,
 };
 use redsync::simnet::iteration::Strategy;
+use redsync::simnet::{IntraLink, Machine};
+use redsync::tensor::SparseTensor;
 use redsync::util::rng::Pcg32;
 use redsync::util::timer::PhaseTimer;
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
@@ -175,6 +192,22 @@ fn smoke_grad(rank: usize, step: usize, li: usize, n: usize) -> Vec<f32> {
 }
 
 fn smoke_steps(engine: &mut dyn SyncEngine, rank: usize, world: usize) -> u64 {
+    smoke_steps_plan(engine, rank, world, None, None)
+}
+
+/// The smoke schedule with plan control: an optional live algorithm
+/// switch at a step barrier (the worker's `--recalib-every` protocol in
+/// miniature) and an optional telemetry calibrator fed from every
+/// bucket's measured collective, re-planning every 10 steps — the
+/// instrumented leg of the obs A/B prices exactly what a calibrated
+/// rank 0 pays.
+fn smoke_steps_plan(
+    engine: &mut dyn SyncEngine,
+    rank: usize,
+    world: usize,
+    switch: Option<(usize, Algo)>,
+    mut calib: Option<(Calibrator, Vec<BucketCost>)>,
+) -> u64 {
     let mut params: Vec<Vec<f32>> = SMOKE_SIZES
         .iter()
         .enumerate()
@@ -187,14 +220,41 @@ fn smoke_steps(engine: &mut dyn SyncEngine, rank: usize, world: usize) -> u64 {
         .collect();
     let scale = -0.05 / world as f32;
     let mut timer = PhaseTimer::new();
+    // calib attribution only: every smoke schedule starts flat sparse
+    let mut algos = vec![Algo::Sparse; engine.n_buckets()];
+    let track = calib.is_some();
+    let mut comm_obs: Vec<(usize, usize, f64)> = Vec::new();
     for step in 0..SMOKE_STEPS {
+        if let Some((at, algo)) = switch {
+            if step == at {
+                algos = vec![algo; engine.n_buckets()];
+                engine.set_algos(&algos);
+            }
+        }
         let grads: Vec<Vec<f32>> =
             SMOKE_SIZES.iter().enumerate().map(|(i, &n)| smoke_grad(rank, step, i, n)).collect();
+        comm_obs.clear();
+        let obs_buf = &mut comm_obs;
         engine
             .sync_step(&grads, SMOKE_DENSITY, &mut timer, &mut |done: BucketDone| {
+                if track {
+                    obs_buf.push((done.bucket, done.msg_words, done.comm_secs));
+                }
                 done.apply_to(&mut params, scale)
             })
             .expect("sync step");
+        if let Some((c, costs)) = calib.as_mut() {
+            for &(b, words, secs) in comm_obs.iter() {
+                c.observe_bucket(b, algos[b], words, secs);
+            }
+            if (step + 1) % 10 == 0 {
+                // flat world: the picker can only confirm the sparse
+                // plan (dense is never promoted live), so this prices
+                // the re-plan without perturbing the schedule
+                let (_, switches) = c.replan(costs, SMOKE_DENSITY, &algos);
+                assert_eq!(switches, 0, "flat re-plan must keep the sparse schedule");
+            }
+        }
     }
     param_hash(&params)
 }
@@ -495,6 +555,8 @@ fn hotpath_smoke(json_path: Option<&str>) {
             gathered,
             selected: 0,
             elems: 0,
+            msg_words: 0,
+            comm_secs: 0.0,
         }
         .apply_to(&mut view_params, scale)
         .expect("well-formed blob");
@@ -864,27 +926,112 @@ fn has_cross_lane_overlap(dumps: &[redsync::obs::RankDump]) -> bool {
     })
 }
 
-/// The observability A/B: span tracing must cost < 2% wall-clock on the
-/// pipelined engine, the drained timeline must show cross-lane overlap,
-/// and an elastic kill must land detect/reshape spans.
-fn obs_smoke(json_path: Option<&str>) {
+/// Unique Unix namespace per obs leg (the A/B reruns the same fabric
+/// several times in one process).
+static OBS_NS: AtomicU32 = AtomicU32::new(0);
+
+/// Mixed link-class mesh on this host: Unix sockets inside each modeled
+/// node, TCP across nodes (the `--transport auto` wire; see
+/// tests/fabric.rs).
+fn mixed_fabric(world: usize, topo: Topology) -> Vec<MixedFabric> {
+    let addr = free_loopback_addr();
+    let handles: Vec<_> = (0..world)
+        .map(|rank| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                MixedFabric::connect(&MixedOptions::new(world, rank, addr, topo))
+                    .expect("mixed bootstrap")
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Run the pipelined smoke schedule on every rank of `transports`.
+/// When `calib_link` is set, rank 0 also runs the telemetry calibrator
+/// over that link class — per-bucket observe plus a periodic re-plan —
+/// so the traced leg prices exactly what a calibrated trainer pays.
+fn pipelined_run_on<T: Transport + Send + 'static>(
+    transports: Vec<T>,
+    calib_link: Option<IntraLink>,
+) -> (f64, Vec<u64>) {
+    let cc = CompressorConfig { density: SMOKE_DENSITY, ..Default::default() };
+    let acc = smoke_acc();
+    let start = Instant::now();
+    let handles: Vec<_> = transports
+        .into_iter()
+        .map(|t| {
+            thread::spawn(move || {
+                let (rank, world) = (t.rank(), t.world());
+                let buckets = build_buckets(&smoke_specs(), SMOKE_FUSION_CAP, acc);
+                let link = if rank == 0 { calib_link } else { None };
+                let calib = link.map(|l| {
+                    let costs: Vec<BucketCost> = buckets
+                        .iter()
+                        .map(|b| BucketCost {
+                            m_elems: b.specs().map(|s| s.n as f64).sum(),
+                            t_select: 0.0,
+                            wire_bytes: PLAIN_WIRE_BYTES,
+                        })
+                        .collect();
+                    let c = Calibrator::new(Machine::fatnode(), Some(l), 1, world, buckets.len());
+                    (c, costs)
+                });
+                let n = buckets.len() as u32;
+                let mux = Arc::new(TagMux::new(t, BUCKET_TAG_BASE + n));
+                let mut engine = Pipelined::new(mux, buckets, SMOKE_INFLIGHT, cc);
+                smoke_steps_plan(&mut engine, rank, world, None, calib)
+            })
+        })
+        .collect();
+    let hashes: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    (start.elapsed().as_secs_f64(), hashes)
+}
+
+/// One obs A/B leg on the named fabric; `calibrate` adds the rank-0
+/// telemetry calibrator (the instrumented configuration under test).
+fn obs_fabric_run(fabric: &str, calibrate: bool) -> (f64, Vec<u64>) {
+    let link = |l: IntraLink| if calibrate { Some(l) } else { None };
+    match fabric {
+        "local" => {
+            let mut f = LocalFabric::new(SMOKE_WORLD);
+            pipelined_run_on(f.take_all(), link(IntraLink::Smp))
+        }
+        "tcp" => pipelined_run_on(tcp_fabric(SMOKE_WORLD), link(IntraLink::Loopback)),
+        "unix" => {
+            let ns = bench_ns(&format!("obs{}", OBS_NS.fetch_add(1, Ordering::Relaxed)));
+            pipelined_run_on(unix_fabric(SMOKE_WORLD, &ns), link(IntraLink::Unix))
+        }
+        "mixed" => {
+            let topo = Topology { nodes: 2, ranks_per_node: SMOKE_WORLD / 2 };
+            pipelined_run_on(mixed_fabric(SMOKE_WORLD, topo), link(IntraLink::Unix))
+        }
+        other => panic!("unknown obs fabric '{other}' (local|tcp|unix|mixed)"),
+    }
+}
+
+/// The observability A/B: span tracing plus the telemetry calibrator
+/// must cost < 2% wall-clock on the pipelined engine, the drained
+/// timeline must show cross-lane overlap, and an elastic kill must land
+/// detect/reshape spans.
+fn obs_smoke(fabric: &str, json_path: Option<&str>) {
     use redsync::obs::{self, RankDump};
 
     println!(
-        "# obs A/B: {SMOKE_WORLD} ranks x {SMOKE_STEPS} steps, pipelined, \
-         tracing off vs on, min of {OBS_REPS}"
+        "# obs A/B: {SMOKE_WORLD} ranks x {SMOKE_STEPS} steps, pipelined over {fabric}, \
+         spans+calibrator off vs on, min of {OBS_REPS}"
     );
-    let _ = smoke_run(true); // warm-up
+    let _ = obs_fabric_run(fabric, false); // warm-up
     let mut base = f64::MAX;
     for _ in 0..OBS_REPS {
-        base = base.min(smoke_run(true).0);
+        base = base.min(obs_fabric_run(fabric, false).0);
     }
 
     obs::set_enabled(true);
     let mut traced = f64::MAX;
     let mut dumps: Vec<RankDump> = Vec::new();
     for _ in 0..OBS_REPS {
-        traced = traced.min(smoke_run(true).0);
+        traced = traced.min(obs_fabric_run(fabric, true).0);
         // keep the last rep's timeline; draining every rep also keeps
         // the global registry from accumulating one ring set per engine
         dumps = (0..SMOKE_WORLD)
@@ -907,7 +1054,8 @@ fn obs_smoke(json_path: Option<&str>) {
     assert!(overlap, "comm must overlap another lane's select/pack (pipelined engine)");
     assert!(
         overhead < 0.02,
-        "tracing costs {:.2}% (> 2%): {base:.3}s off vs {traced:.3}s on",
+        "tracing+calibration costs {:.2}% (> 2%) over {fabric}: \
+         {base:.3}s off vs {traced:.3}s on",
         100.0 * overhead
     );
 
@@ -960,11 +1108,154 @@ fn obs_smoke(json_path: Option<&str>) {
     assert!(reshapes > 0, "the kill must land at least one reshape span");
 
     let json = format!(
-        "{{\"bench\":\"obs_smoke\",\"world\":{SMOKE_WORLD},\"steps\":{SMOKE_STEPS},\
+        "{{\"bench\":\"obs_smoke\",\"fabric\":\"{fabric}\",\"world\":{SMOKE_WORLD},\
+         \"steps\":{SMOKE_STEPS},\
          \"reps\":{OBS_REPS},\"base_secs\":{base:.6},\"traced_secs\":{traced:.6},\
          \"overhead_pct\":{:.4},\"spans\":{spans},\"cross_lane_overlap\":{overlap},\
          \"detect_spans\":{detects},\"reshape_spans\":{reshapes}}}",
         100.0 * overhead
+    );
+    if let Some(path) = json_path {
+        std::fs::write(path, format!("{json}\n")).expect("write bench json");
+        println!("wrote {path}");
+    }
+    println!("{json}");
+}
+
+// ---------------------------------------------------------------------
+// Calibration smoke: straggler flip + one-window recovery + live switch
+// ---------------------------------------------------------------------
+
+/// Run the smoke schedule over a fresh 8-rank loopback TCP mesh with
+/// the 2x4 topology, starting every bucket on `start` and optionally
+/// switching all buckets live at a step barrier; returns (wall secs,
+/// per-rank param hashes).
+fn topo_run_plan(start: Algo, switch: Option<(usize, Algo)>) -> (f64, Vec<u64>) {
+    let cc = CompressorConfig { density: SMOKE_DENSITY, ..Default::default() };
+    let acc = smoke_acc();
+    let transports = tcp_fabric(TOPO_WORLD);
+    let started = Instant::now();
+    let handles: Vec<_> = transports
+        .into_iter()
+        .map(|t| {
+            thread::spawn(move || {
+                let (rank, world) = (t.rank(), t.world());
+                let mut buckets = build_buckets(&smoke_specs(), SMOKE_FUSION_CAP, acc);
+                for b in &mut buckets {
+                    b.set_algo(start);
+                }
+                let mut engine = Sequential::with_topology(&t, TOPO, None, buckets, cc);
+                smoke_steps_plan(&mut engine, rank, world, switch, None)
+            })
+        })
+        .collect();
+    let hashes: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    (started.elapsed().as_secs_f64(), hashes)
+}
+
+/// The calibration A/B (acceptance for `--recalib-every`): the §5.5
+/// picker must flip between the `fatnode` datasheet and the
+/// `fatnode-straggler` truth, a [`Calibrator`] fed one recalibration
+/// window of straggler-truth observations must re-plan to the truth
+/// machine's choice with a predicted step-time improvement, and a live
+/// mid-run switch must stay bit-identical to the static target plan
+/// over real loopback TCP.
+fn calib_smoke(json_path: Option<&str>) {
+    const CAL_NODES: usize = 2;
+    const CAL_RPN: usize = 4;
+    const CAL_DENSITY: f64 = 1e-3;
+    const CAL_WINDOW: usize = 16;
+    let datasheet = Machine::fatnode();
+    let truth = Machine::fatnode_straggler();
+    println!(
+        "# calib A/B: {CAL_NODES}x{CAL_RPN} picker flip + one-window recovery, \
+         then live switch over {TOPO_WORLD}-rank loopback tcp"
+    );
+
+    // 1. the static datasheet plan is provably wrong on the straggler
+    let grid = [4e6, 16e6, 64e6];
+    for m_elems in grid {
+        let cost = BucketCost { m_elems, t_select: 0.0, wire_bytes: PLAIN_WIRE_BYTES };
+        let (h, _) = costmodel::pick_algo(&datasheet, CAL_NODES, CAL_RPN, &cost, CAL_DENSITY);
+        let (s, _) = costmodel::pick_algo(&truth, CAL_NODES, CAL_RPN, &cost, CAL_DENSITY);
+        println!("  {m_elems:>9.1e} elems: datasheet {h:?}, straggler truth {s:?}");
+        assert_eq!(h, Algo::Hierarchical, "datasheet pick for {m_elems:e} elems");
+        assert_eq!(s, Algo::Sparse, "straggler pick for {m_elems:e} elems");
+    }
+
+    // 2. one recalibration window of straggler-truth observations flips
+    // the calibrated re-plan to the truth machine's choice
+    let costs: Vec<BucketCost> = grid[..2]
+        .iter()
+        .map(|&m| BucketCost { m_elems: m, t_select: 0.0, wire_bytes: PLAIN_WIRE_BYTES })
+        .collect();
+    let current = vec![Algo::Hierarchical; costs.len()];
+    let mut calib = Calibrator::new(datasheet.clone(), None, CAL_NODES, CAL_RPN, costs.len());
+    let coeffs = costmodel::comm_coeffs(Algo::Hierarchical, CAL_NODES, CAL_RPN);
+    for _ in 0..CAL_WINDOW {
+        for (b, cost) in costs.iter().enumerate() {
+            // the packed blob: D·m index/value pairs, two words each
+            let words = (cost.m_elems * CAL_DENSITY * 2.0) as usize;
+            let bytes = 4.0 * words as f64;
+            let secs = coeffs.inter_rounds * truth.alpha
+                + coeffs.inter_bytes * bytes * truth.beta
+                + coeffs.intra_rounds * truth.intra_alpha
+                + coeffs.intra_bytes * bytes * truth.intra_beta;
+            calib.observe_bucket(b, Algo::Hierarchical, words, secs);
+        }
+    }
+    let (next, switches) = calib.replan(&costs, CAL_DENSITY, &current);
+    assert_eq!(next, vec![Algo::Sparse; costs.len()], "calibrated re-plan must flip to sparse");
+    assert_eq!(switches, costs.len() as u64);
+    let s = calib.summary();
+    // the improvement the switch buys, priced on the truth machine:
+    // modeled hierarchical vs flat-sparse step time ([dense, sparse, hier])
+    let (mut t_old, mut t_new) = (0.0f64, 0.0f64);
+    for cost in &costs {
+        let (_, t) = costmodel::pick_algo(&truth, CAL_NODES, CAL_RPN, cost, CAL_DENSITY);
+        t_old += t[2];
+        t_new += t[1];
+    }
+    let improvement = t_old / t_new;
+    println!(
+        "calibrated re-plan: {switches} switches, link α {:.1}µs β {:.2} GB/s, \
+         plan error x{:.2}, predicted step-time improvement {improvement:.2}x",
+        s.alpha_us,
+        s.beta_gbps,
+        s.error_ratio()
+    );
+    assert!(s.error_ratio() > 1.5, "datasheet plan must under-predict: {}", s.error_ratio());
+    assert!(improvement > 1.0, "the flip must be predicted to improve step time");
+
+    // 3. live switch over real wire: static hier, static sparse, and a
+    // mid-run hier->sparse switch must all end bit-identical
+    let _ = topo_run_plan(Algo::Sparse, None); // warm-up
+    let (hier_secs, hier_hashes) = topo_run_plan(Algo::Hierarchical, None);
+    let (sparse_secs, sparse_hashes) = topo_run_plan(Algo::Sparse, None);
+    let (switch_secs, switch_hashes) =
+        topo_run_plan(Algo::Hierarchical, Some((SMOKE_STEPS / 2, Algo::Sparse)));
+    let consistent = [&hier_hashes, &sparse_hashes, &switch_hashes]
+        .iter()
+        .all(|h| h.iter().all(|&x| x == h[0]));
+    let bit_identical =
+        consistent && hier_hashes[0] == sparse_hashes[0] && sparse_hashes[0] == switch_hashes[0];
+    println!("{:>16} {:>10}", "plan", "wall(s)");
+    println!("{:>16} {:>10.3}", "static hier", hier_secs);
+    println!("{:>16} {:>10.3}", "static sparse", sparse_secs);
+    println!("{:>16} {:>10.3}", "hier->sparse", switch_secs);
+    println!("bit_identical: {bit_identical}");
+    assert!(bit_identical, "a live mid-run switch must not perturb the parameters");
+
+    let json = format!(
+        "{{\"bench\":\"calib_smoke\",\"nodes\":{CAL_NODES},\"ranks_per_node\":{CAL_RPN},\
+         \"window\":{CAL_WINDOW},\"switches\":{switches},\"alpha_us\":{:.3},\
+         \"beta_gbps\":{:.3},\"plan_error_ratio\":{:.4},\
+         \"predicted_improvement\":{improvement:.4},\"hier_secs\":{hier_secs:.6},\
+         \"sparse_secs\":{sparse_secs:.6},\"switched_secs\":{switch_secs:.6},\
+         \"bit_identical\":{bit_identical}}}",
+        s.alpha_us,
+        s.beta_gbps,
+        s.error_ratio()
     );
     if let Some(path) = json_path {
         std::fs::write(path, format!("{json}\n")).expect("write bench json");
@@ -1186,7 +1477,22 @@ fn main() {
         return;
     }
     if let Some(pos) = args.iter().position(|a| a == "--obs-smoke") {
-        obs_smoke(args.get(pos + 1).map(String::as_str));
+        let mut fabric = "tcp";
+        let mut json = None;
+        for a in args.iter().skip(pos + 1).take(2) {
+            if a.starts_with("--") {
+                break;
+            } else if a.ends_with(".json") {
+                json = Some(a.as_str());
+            } else {
+                fabric = a.as_str();
+            }
+        }
+        obs_smoke(fabric, json);
+        return;
+    }
+    if let Some(pos) = args.iter().position(|a| a == "--calib-smoke") {
+        calib_smoke(args.get(pos + 1).map(String::as_str));
         return;
     }
     if let Some(pos) = args.iter().position(|a| a == "--fabric-smoke") {

@@ -238,6 +238,11 @@ pub struct TrainConfig {
     /// Gather per-rank step-latency histograms to rank 0 every this
     /// many steps for cross-rank aggregation (p50/p99/skew); 0 = never.
     pub obs_every: usize,
+    /// Re-run the `--algo auto` picker on the telemetry-calibrated cost
+    /// model every this many steps, switching bucket algorithms live at
+    /// the step barrier (0 = plan once at startup).  Requires
+    /// `algo=auto`.
+    pub recalib_every: usize,
     /// Fabric carrying the synchronization traffic.
     pub transport: TransportKind,
     /// This process's rank (TCP transport only; `launch` sets it per
@@ -286,6 +291,7 @@ impl Default for TrainConfig {
             trace_out: None,
             metrics_addr: None,
             obs_every: 0,
+            recalib_every: 0,
             transport: TransportKind::Local,
             rank: 0,
             rendezvous: "127.0.0.1:29500".into(),
@@ -444,6 +450,7 @@ impl TrainConfig {
                 self.metrics_addr = if a.is_empty() { None } else { Some(a) };
             }
             "obs_every" => self.obs_every = as_usize()?,
+            "recalib_every" => self.recalib_every = as_usize()?,
             "transport" => self.transport = parse_transport(as_str()?)?,
             "rank" => self.rank = as_usize()?,
             "rendezvous" => self.rendezvous = as_str()?.to_string(),
@@ -541,6 +548,7 @@ impl TrainConfig {
             ("trace_out", json::s(self.trace_out.clone().unwrap_or_default())),
             ("metrics_addr", json::s(self.metrics_addr.clone().unwrap_or_default())),
             ("obs_every", json::num(self.obs_every as f64)),
+            ("recalib_every", json::num(self.recalib_every as f64)),
             ("transport", json::s(self.transport.label())),
             ("rank", json::num(self.rank as f64)),
             ("rendezvous", json::s(self.rendezvous.clone())),
@@ -666,6 +674,11 @@ impl TrainConfig {
                 "unknown machine preset '{}' for the auto algorithm picker",
                 self.machine
             )));
+        }
+        if self.recalib_every > 0 && self.algo != AlgoMode::Auto {
+            return Err(ConfigError::Invalid(
+                "recalib_every re-runs the cost-model picker and needs --algo auto".into(),
+            ));
         }
         self.validate_elastic()
     }
@@ -920,6 +933,19 @@ mod tests {
         let s = cfg.to_json().to_json();
         assert!(s.contains("\"obs_every\""));
         assert!(s.contains("\"trace_out\""));
+        assert!(s.contains("\"recalib_every\""));
+        // recalibration re-runs the picker: it requires algo=auto
+        cfg.apply_overrides(&["recalib_every=10".into()]).unwrap();
+        assert_eq!(cfg.recalib_every, 10);
+        assert!(cfg.validate().is_err(), "recalib without algo=auto");
+        cfg.apply_overrides(&[
+            "world=8".into(),
+            "topology=2x4".into(),
+            "algo=auto".into(),
+            "machine=fatnode".into(),
+        ])
+        .unwrap();
+        cfg.validate().unwrap();
     }
 
     #[test]

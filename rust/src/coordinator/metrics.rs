@@ -2,6 +2,7 @@
 //! eval curves, traffic accounting and the final run report.
 
 use crate::collectives::transport::LinkTraffic;
+use crate::obs::calib::CalibSummary;
 use crate::util::timer::PhaseTimer;
 
 /// Phase names used by the workers (Fig. 10 vocabulary).
@@ -187,6 +188,12 @@ pub struct WorkerResult {
     /// Checkpoint-repository accounting (runs with `--ckpt-repo`;
     /// all-zero otherwise).
     pub repo: RepoStats,
+    /// Spans dropped by full ring buffers across this worker's lanes —
+    /// nonzero means the exported trace is truncated.
+    pub span_drops: u64,
+    /// Cost-model calibration + plan-audit summary (`--algo auto` with
+    /// telemetry on; all-zero otherwise, rank 0 carries the fleet's).
+    pub calib: CalibSummary,
 }
 
 /// Sum per-worker [`LinkTraffic`] vectors class-by-class, keeping the
@@ -210,6 +217,50 @@ where
     }
     merged.sort_by_key(|m| m.class);
     merged
+}
+
+/// Register the run's fabric and durability counters into an
+/// observability registry so the Prometheus scrape (`--metrics-addr`)
+/// and the JSONL flush expose them next to the step metrics: per-link-
+/// class traffic (`link_<class>_{frames,bytes,writes}_total`) plus the
+/// delta-rejoin and checkpoint-repository totals when nonzero.
+pub fn register_run_counters(
+    reg: &crate::obs::Registry,
+    links: &[LinkTraffic],
+    rejoin: &RejoinStats,
+    repo: &RepoStats,
+) {
+    for l in links {
+        let label = l.class.label();
+        reg.inc(&format!("link_{label}_frames_total"), l.frames);
+        reg.inc(&format!("link_{label}_bytes_total"), l.bytes);
+        if l.writes > 0 {
+            reg.inc(&format!("link_{label}_writes_total"), l.writes);
+        }
+    }
+    let rj: [(&str, u64); 5] = [
+        ("rejoin_fetched_chunks_total", rejoin.fetched_chunks),
+        ("rejoin_reused_chunks_total", rejoin.reused_chunks),
+        ("rejoin_verified_chunks_total", rejoin.verified_chunks),
+        ("rejoin_retries_total", rejoin.retries),
+        ("rejoin_bytes_total", rejoin.join_words * 4),
+    ];
+    for (name, v) in rj {
+        if v > 0 {
+            reg.inc(name, v);
+        }
+    }
+    let rp: [(&str, u64); 4] = [
+        ("repo_chunks_written_total", repo.chunks_written),
+        ("repo_chunks_deduped_total", repo.chunks_deduped),
+        ("repo_chunks_collected_total", repo.chunks_collected),
+        ("repo_manifests_total", repo.manifests_written),
+    ];
+    for (name, v) in rp {
+        if v > 0 {
+            reg.inc(name, v);
+        }
+    }
 }
 
 /// FNV-1a over f32 bit patterns.
@@ -284,6 +335,14 @@ pub struct TrainReport {
     /// Checkpoint-repository accounting summed over the fleet (all-zero
     /// without `--ckpt-repo`). Summary-only, NOT a CSV column.
     pub repo: RepoStats,
+    /// Spans dropped by full trace rings, summed over workers.  Nonzero
+    /// means the Chrome trace is missing intervals — the summary warns.
+    /// Summary-only, NOT a CSV column.
+    pub span_drops: u64,
+    /// Cost-model calibration + plan-audit summary (measured link α/β,
+    /// replans/switches, predicted-vs-measured ledger).  Summary-only,
+    /// NOT a CSV column.
+    pub calib: CalibSummary,
 }
 
 impl TrainReport {
@@ -393,6 +452,32 @@ impl TrainReport {
             for e in &self.membership {
                 let _ = writeln!(s, "    {}", e.describe());
             }
+        }
+        if self.calib.samples > 0 {
+            let _ = writeln!(
+                s,
+                "  calibration: {} obs, {} replans / {} switches, link α {:.1}µs β {:.2} GB/s",
+                self.calib.samples,
+                self.calib.replans,
+                self.calib.switches,
+                self.calib.alpha_us,
+                self.calib.beta_gbps,
+            );
+            let _ = writeln!(
+                s,
+                "  plan audit: predicted {:.3}s vs measured {:.3}s comm ({:.2}x)",
+                self.calib.predicted_secs,
+                self.calib.measured_secs,
+                self.calib.error_ratio(),
+            );
+        }
+        if self.span_drops > 0 {
+            let _ = writeln!(
+                s,
+                "  WARNING: {} spans dropped by full trace rings — the exported timeline is \
+                 truncated (shorten the traced window or raise the ring capacity)",
+                self.span_drops
+            );
         }
         if self.rejoin.join_words > 0 {
             let _ = writeln!(
@@ -517,6 +602,16 @@ mod tests {
                 chunks_collected: 6,
                 manifests_written: 3,
             },
+            span_drops: 7,
+            calib: CalibSummary {
+                samples: 60,
+                replans: 2,
+                switches: 1,
+                alpha_us: 24.0,
+                beta_gbps: 9.5,
+                predicted_secs: 1.0,
+                measured_secs: 1.2,
+            },
         };
         assert!((r.phase_fraction(phase::COMPUTE) - 0.75).abs() < 1e-12);
         assert_eq!(r.bytes_per_step_per_rank(), 4096.0 / 20.0);
@@ -537,6 +632,10 @@ mod tests {
         assert!(s.contains("1 retries, 1 failovers"), "{s}");
         assert!(s.contains("ckpt repo: 3 manifests"), "{s}");
         assert!(s.contains("30 chunks written / 18 deduped / 6 collected"), "{s}");
+        // calibration + plan audit are summary-only lines, not CSV columns
+        assert!(s.contains("calibration: 60 obs, 2 replans / 1 switches"), "{s}");
+        assert!(s.contains("plan audit: predicted 1.000s vs measured 1.200s comm (1.20x)"), "{s}");
+        assert!(s.contains("WARNING: 7 spans dropped"), "{s}");
         // absorb sums field-wise
         let mut rj = r.rejoin;
         rj.absorb(&r.rejoin);
@@ -553,6 +652,31 @@ mod tests {
             "{row}"
         );
         assert!(row.ends_with(",1,1500,4000,1.2500"), "{row}");
+    }
+
+    #[test]
+    fn run_counters_reach_the_prometheus_scrape() {
+        let reg = crate::obs::Registry::new();
+        register_run_counters(
+            &reg,
+            &[
+                LinkTraffic { class: LinkClass::Mem, frames: 10, bytes: 400, writes: 0 },
+                LinkTraffic { class: LinkClass::Unix, frames: 40, bytes: 1600, writes: 10 },
+            ],
+            &RejoinStats { fetched_chunks: 12, join_words: 3300, ..Default::default() },
+            &RepoStats { manifests_written: 3, ..Default::default() },
+        );
+        let text = reg.snapshot().prometheus();
+        assert!(text.contains("link_mem_bytes_total 400"), "{text}");
+        assert!(text.contains("link_unix_frames_total 40"), "{text}");
+        assert!(text.contains("link_unix_writes_total 10"), "{text}");
+        // mem links never enter the kernel: no writes counter at all
+        assert!(!text.contains("link_mem_writes_total"), "{text}");
+        assert!(text.contains("rejoin_fetched_chunks_total 12"), "{text}");
+        assert!(text.contains("rejoin_bytes_total 13200"), "{text}");
+        assert!(text.contains("repo_manifests_total 3"), "{text}");
+        // zero-valued durability counters stay out of the exposition
+        assert!(!text.contains("rejoin_retries_total"), "{text}");
     }
 
     #[test]

@@ -115,6 +115,7 @@ impl Trainer {
         let replicas_consistent = results.iter().all(|r| r.param_hash == h0);
         let link_traffic =
             metrics::merge_link_traffic(results.iter().map(|r| r.link_traffic.clone()));
+        let span_drops: u64 = results.iter().map(|r| r.span_drops).sum();
         let rank0 = results
             .into_iter()
             .find(|r| r.rank == 0)
@@ -147,6 +148,8 @@ impl Trainer {
             link_traffic,
             rejoin: rank0.rejoin,
             repo: rank0.repo,
+            span_drops,
+            calib: rank0.calib,
         })
     }
 
@@ -242,6 +245,8 @@ impl Trainer {
             link_traffic: Vec::new(),
             rejoin,
             repo,
+            span_drops: 0,
+            calib: Default::default(),
         })
     }
 }
@@ -302,6 +307,8 @@ impl Trainer {
             link_traffic: result.link_traffic,
             rejoin: result.rejoin,
             repo: result.repo,
+            span_drops: result.span_drops,
+            calib: result.calib,
         })
     }
 
@@ -359,6 +366,8 @@ impl Trainer {
             link_traffic: result.link_traffic,
             rejoin: result.rejoin,
             repo: result.repo,
+            span_drops: result.span_drops,
+            calib: Default::default(),
         })
     }
 }

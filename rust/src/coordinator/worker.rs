@@ -119,6 +119,10 @@ impl DataSource {
 /// it disjoint from every training shard).
 const EVAL_STEP: usize = 0x7E0A;
 
+/// Slowest/fastest mean-step-latency ratio past which an `--obs-every`
+/// window flags a straggler rank.
+const STRAGGLER_RATIO: f64 = 1.5;
+
 /// Run one worker to completion.  Generic over the fabric: in-process
 /// `LocalTransport` threads under [`super::Trainer::run`], a
 /// `net::TcpTransport` rank under [`super::Trainer::run_rank`].  Called
@@ -188,6 +192,12 @@ pub fn run_worker<T: Transport + Sync>(
     // (or the mux tag space) sees them.  Identical on every rank: the
     // inputs are config + schema, never runtime measurements.
     let topo = cfg.topology.unwrap_or_else(|| Topology::flat(world));
+    // Calibration state (`--algo auto` with telemetry on): rank 0 owns
+    // the estimator + audit ledger and the kept buckets' costs so the
+    // `--recalib-every` barrier can re-run the picker; every rank keeps
+    // the live per-bucket plan to apply broadcast switches to.
+    let mut calibrator: Option<obs::Calibrator> = None;
+    let mut bucket_costs: Vec<costmodel::BucketCost> = Vec::new();
     match cfg.algo {
         AlgoMode::Sparse => {}
         AlgoMode::Hierarchical => {
@@ -211,6 +221,7 @@ pub fn run_worker<T: Transport + Sync>(
                 TransportKind::Unix | TransportKind::Auto => Some(costmodel::IntraLink::Unix),
             };
             let mut kept = Vec::with_capacity(buckets.len());
+            let mut kept_costs = Vec::with_capacity(buckets.len());
             for mut b in buckets {
                 let layers: Vec<(usize, Method, bool)> =
                     b.specs().map(|s| (s.n, s.method, s.quantize)).collect();
@@ -238,12 +249,31 @@ pub fn run_worker<T: Transport + Sync>(
                     }
                 } else {
                     b.set_algo(algo);
+                    kept_costs.push(cost);
                     kept.push(b);
                 }
             }
             buckets = kept;
+            if rank == 0
+                && (cfg.recalib_every > 0
+                    || cfg.obs_every > 0
+                    || cfg.metrics_addr.is_some()
+                    || cfg.trace_out.is_some())
+            {
+                calibrator = Some(obs::Calibrator::new(
+                    machine,
+                    link,
+                    topo.nodes,
+                    topo.ranks_per_node,
+                    buckets.len(),
+                ));
+            }
+            bucket_costs = kept_costs;
         }
     }
+    // the live per-bucket plan, identical on every rank; `--recalib-every`
+    // switches it at step barriers (sparse ↔ hierarchical only)
+    let mut algos: Vec<Algo> = buckets.iter().map(|b| b.algo()).collect();
     let n_buckets = buckets.len();
     let cc =
         CompressorConfig { density: cfg.density, timing: cfg.phase_timing, ..Default::default() };
@@ -293,6 +323,16 @@ pub fn run_worker<T: Transport + Sync>(
     }
     let mut cluster: Option<obs::ClusterStats> = None;
     let mut metrics_lines: Vec<String> = Vec::new();
+
+    // Calibration scratch: per-step (bucket, msg words, comm secs)
+    // observations, plus the predicted/measured/skew counter tracks the
+    // Chrome trace gets one sample per `--obs-every` window.
+    let track_comm = calibrator.is_some();
+    let mut comm_obs: Vec<(usize, usize, f64)> = Vec::new();
+    let mut counter_pred: Vec<(u64, f64)> = Vec::new();
+    let mut counter_meas: Vec<(u64, f64)> = Vec::new();
+    let mut counter_skew: Vec<(u64, f64)> = Vec::new();
+    let (mut last_pred, mut last_meas) = (0.0f64, 0.0f64);
 
     let mut timer = crate::util::timer::PhaseTimer::new();
     let mut loss_curve = Vec::new();
@@ -386,10 +426,14 @@ pub fn run_worker<T: Transport + Sync>(
                 let params = &mut params;
                 let seen = &mut seen;
                 let ring = &ring;
+                let comm_obs = &mut comm_obs;
                 let mut apply = |done: BucketDone| -> Result<(), String> {
                     let _g = ring
                         .as_ref()
                         .map(|r| r.guard(obs::SPAN_UNPACK, step as u32, done.bucket as u32));
+                    if track_comm {
+                        comm_obs.push((done.bucket, done.msg_words, done.comm_secs));
+                    }
                     let t0 = Instant::now();
                     done.apply_to(params, scale)?;
                     unpack_secs += t0.elapsed().as_secs_f64();
@@ -407,6 +451,12 @@ pub fn run_worker<T: Transport + Sync>(
                     .map_err(|e| format!("rank {rank} step {step}: {e}"))?;
             }
             timer.add(phase::UNPACK, unpack_secs);
+            if let Some(c) = calibrator.as_mut() {
+                for &(b, words, secs) in &comm_obs {
+                    c.observe_bucket(b, algos[b], words, secs);
+                }
+            }
+            comm_obs.clear();
         }
 
         final_loss = loss;
@@ -455,7 +505,7 @@ pub fn run_worker<T: Transport + Sync>(
         if cfg.obs_every > 0 && (step + 1) % cfg.obs_every == 0 {
             if let Some(reg) = &reg {
                 let _g = ring.as_ref().map(|r| r.guard(obs::SPAN_GATHER, step as u32, 0));
-                if let Some(stats) = gather_step_hist(rank, world, comm, reg)
+                if let Some((stats, hists)) = gather_step_hist(rank, world, comm, reg)
                     .map_err(|e| format!("rank {rank} step {step}: {e}"))?
                 {
                     crate::log_debug!(
@@ -464,8 +514,92 @@ pub fn run_worker<T: Transport + Sync>(
                         stats.step_p99_us,
                         stats.rank_skew
                     );
+                    if let Some((slow, ratio)) =
+                        obs::detect_straggler(&hists, STRAGGLER_RATIO)
+                    {
+                        crate::log_warn!(
+                            "obs window @{step}: rank {slow} is straggling at {ratio:.2}x \
+                             the fastest rank's mean step latency"
+                        );
+                        reg.gauge("straggler_rank", slow as f64);
+                        reg.gauge("straggler_ratio", ratio);
+                    }
+                    if let Some(c) = &calibrator {
+                        let s = c.summary();
+                        reg.gauge("calib_alpha_us", s.alpha_us);
+                        reg.gauge("calib_beta_gbps", s.beta_gbps);
+                        reg.gauge("plan_predicted_seconds", s.predicted_secs);
+                        reg.gauge("plan_measured_seconds", s.measured_secs);
+                        if cfg.trace_out.is_some() {
+                            let t = obs::now_us();
+                            counter_pred.push((t, (s.predicted_secs - last_pred) * 1e6));
+                            counter_meas.push((t, (s.measured_secs - last_meas) * 1e6));
+                            last_pred = s.predicted_secs;
+                            last_meas = s.measured_secs;
+                        }
+                    }
+                    if cfg.trace_out.is_some() {
+                        counter_skew.push((obs::now_us(), stats.rank_skew));
+                    }
                     metrics_lines.push(reg.snapshot().to_json().to_json());
                     cluster = Some(stats);
+                }
+            }
+        }
+
+        // Recalibration barrier (`--recalib-every`): rank 0 re-runs the
+        // picker on the calibrated machine and broadcasts the next plan
+        // over the control channel; every rank applies it before the
+        // next step's collectives.  Sparse and hierarchical gather
+        // bit-identical blobs, so the switch cannot perturb training —
+        // and the schedule is pure config, so no rank waits on a frame
+        // that never comes.
+        if cfg.recalib_every > 0
+            && (step + 1) % cfg.recalib_every == 0
+            && step + 1 < cfg.steps
+            && !algos.is_empty()
+        {
+            if rank == 0 {
+                let c = calibrator.as_mut().expect("rank 0 owns the calibrator under --recalib");
+                let (next, switches) = c.replan(&bucket_costs, density, &algos);
+                for peer in 1..world {
+                    comm.send(peer, obs::encode_plan((step + 1) as u32, &next));
+                }
+                if switches > 0 {
+                    let s = c.summary();
+                    crate::log_info!(
+                        "recalibration @{}: {switches} bucket switch(es) on measured link \
+                         α {:.1}µs β {:.2} GB/s",
+                        step + 1,
+                        s.alpha_us,
+                        s.beta_gbps
+                    );
+                    algos = next;
+                    engine.set_algos(&algos);
+                } else {
+                    algos = next;
+                }
+            } else {
+                let w = comm
+                    .recv_checked(0)
+                    .map_err(|e| format!("rank {rank} replan @{}: {e}", step + 1))?;
+                let (echo, next) = obs::decode_plan(&w)
+                    .map_err(|e| format!("rank {rank} replan @{}: {e}", step + 1))?;
+                if echo as usize != step + 1 {
+                    return Err(format!(
+                        "rank {rank} replan: step echo {echo} != {}",
+                        step + 1
+                    ));
+                }
+                if next.iter().any(|&a| a == Algo::Dense) {
+                    return Err(format!(
+                        "rank {rank} replan @{}: plan demotes a live bucket to dense",
+                        step + 1
+                    ));
+                }
+                if next != algos {
+                    algos = next;
+                    engine.set_algos(&algos);
                 }
             }
         }
@@ -488,7 +622,7 @@ pub fn run_worker<T: Transport + Sync>(
     // didn't land on the final step.
     if cfg.obs_every > 0 && cfg.steps % cfg.obs_every != 0 {
         if let Some(reg) = &reg {
-            if let Some(stats) = gather_step_hist(rank, world, comm, reg)
+            if let Some((stats, _)) = gather_step_hist(rank, world, comm, reg)
                 .map_err(|e| format!("rank {rank}: {e}"))?
             {
                 cluster = Some(stats);
@@ -509,6 +643,23 @@ pub fn run_worker<T: Transport + Sync>(
                 }
             }
         }
+        super::metrics::register_run_counters(
+            reg,
+            &transport.link_traffic(),
+            &RejoinStats::default(),
+            &RepoStats::default(),
+        );
+        if let Some(c) = &calibrator {
+            let s = c.summary();
+            if s.samples > 0 {
+                reg.gauge("calib_alpha_us", s.alpha_us);
+                reg.gauge("calib_beta_gbps", s.beta_gbps);
+                reg.gauge("plan_predicted_seconds", s.predicted_secs);
+                reg.gauge("plan_measured_seconds", s.measured_secs);
+                reg.inc("calib_replans_total", s.replans);
+                reg.inc("calib_switches_total", s.switches);
+            }
+        }
         if rank == 0 {
             metrics_lines.push(reg.snapshot().to_json().to_json());
             if let Some(stem) = &cfg.trace_out {
@@ -525,8 +676,10 @@ pub fn run_worker<T: Transport + Sync>(
     // Trace export: every rank drains its span rings (worker main lane,
     // engine comm lanes) and ships them to rank 0 over the control
     // channel; rank 0 merges all ranks into one Chrome-trace timeline.
+    let mut span_drops = 0u64;
     if let Some(path) = &cfg.trace_out {
         let dumps = obs::drain_rank(rank);
+        span_drops = dumps.iter().map(|l| l.dropped).sum();
         if rank != 0 {
             comm.send(0, obs::encode_dumps(rank as u32, &dumps));
         } else {
@@ -539,14 +692,31 @@ pub fn run_worker<T: Transport + Sync>(
                     obs::decode_dumps(&w).map_err(|e| format!("trace gather: rank {peer}: {e}"))?;
                 ranks.push(obs::RankDump { rank: r, lanes });
             }
-            match obs::write_chrome_trace(path, &ranks) {
+            let mut counters: Vec<obs::CounterSeries> = Vec::new();
+            for (name, points) in [
+                ("plan_predicted_us", counter_pred),
+                ("plan_measured_us", counter_meas),
+                ("rank_skew", counter_skew),
+            ] {
+                if !points.is_empty() {
+                    counters.push(obs::CounterSeries { name: name.into(), points });
+                }
+            }
+            match obs::write_chrome_trace_with_counters(path, &ranks, &counters) {
                 Ok(()) => crate::log_info!(
-                    "wrote {} spans from {} ranks to {path}",
+                    "wrote {} spans + {} counter tracks from {} ranks to {path}",
                     obs::span_count(&ranks),
+                    counters.len(),
                     ranks.len()
                 ),
                 Err(e) => crate::log_warn!("{e}"),
             }
+        }
+        if span_drops > 0 {
+            crate::log_warn!(
+                "rank {rank}: {span_drops} spans dropped by full trace rings — the exported \
+                 timeline is truncated"
+            );
         }
     }
 
@@ -580,6 +750,8 @@ pub fn run_worker<T: Transport + Sync>(
         link_traffic: transport.link_traffic(),
         rejoin: RejoinStats::default(),
         repo: RepoStats::default(),
+        span_drops,
+        calib: calibrator.as_ref().map(|c| c.summary()).unwrap_or_default(),
     })
 }
 
@@ -591,7 +763,7 @@ fn gather_step_hist(
     world: usize,
     comm: &dyn Transport,
     reg: &obs::Registry,
-) -> Result<Option<obs::ClusterStats>, String> {
+) -> Result<Option<(obs::ClusterStats, Vec<(u32, obs::Hist)>)>, String> {
     let local = reg.hist("step_latency_us").unwrap_or_default();
     if rank != 0 {
         comm.send(0, local.encode(rank as u32));
@@ -604,7 +776,7 @@ fn gather_step_hist(
             .map_err(|e| format!("metrics gather: rank {peer}: {e}"))?;
         hists.push(obs::Hist::decode(&w).map_err(|e| format!("metrics gather: {e}"))?);
     }
-    Ok(Some(obs::aggregate_step_hists(&hists)))
+    Ok(Some((obs::aggregate_step_hists(&hists), hists)))
 }
 
 // ---------------------------------------------------------------------
@@ -742,6 +914,8 @@ pub fn worker_result_from(rank: usize, o: &RankOutcome) -> WorkerResult {
         link_traffic: Vec::new(),
         rejoin: o.rejoin,
         repo: o.repo,
+        span_drops: 0,
+        calib: Default::default(),
     }
 }
 

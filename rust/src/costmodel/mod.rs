@@ -366,6 +366,64 @@ pub fn pick_algo_on(
     (algo, [td, ts, th])
 }
 
+/// Structural round/byte coefficients of one collective schedule — the
+/// cost-model terms with the link parameters factored out.  For a
+/// per-rank serialized message of `B` bytes the schedule costs
+///
+/// ```text
+/// inter_rounds·α + inter_bytes·B·β + intra_rounds·α_i + intra_bytes·B·β_i
+/// ```
+///
+/// which is exactly the transfer part of Eq. 1/2 and the hierarchical
+/// closed form above.  `obs::calib` fits measured collective times
+/// against these coefficients to recover the α/β the fabric actually
+/// delivers; flat schedules report in the `inter` slots (the calibrator
+/// reroutes them to whichever link class the flat collective rode).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CommCoeffs {
+    pub inter_rounds: f64,
+    pub inter_bytes: f64,
+    pub intra_rounds: f64,
+    pub intra_bytes: f64,
+}
+
+/// [`CommCoeffs`] of `algo` on a `nodes × ranks_per_node` topology.
+/// Purely structural: no machine parameters, no message sizes.
+pub fn comm_coeffs(algo: Algo, nodes: usize, ranks_per_node: usize) -> CommCoeffs {
+    let p = nodes * ranks_per_node;
+    if p <= 1 {
+        return CommCoeffs::default();
+    }
+    let pf = p as f64;
+    match algo {
+        Algo::Dense => CommCoeffs {
+            inter_rounds: 2.0 * pf.log2(),
+            inter_bytes: 2.0 * (pf - 1.0) / pf,
+            ..Default::default()
+        },
+        Algo::Sparse => CommCoeffs {
+            inter_rounds: pf.log2(),
+            inter_bytes: pf - 1.0,
+            ..Default::default()
+        },
+        Algo::Hierarchical => {
+            let (n, s) = (nodes as f64, ranks_per_node as f64);
+            let (inter_rounds, inter_bytes) = if nodes > 1 {
+                let rounds = if nodes.is_power_of_two() { n.log2() } else { n - 1.0 };
+                (rounds, (n - 1.0) * s)
+            } else {
+                (0.0, 0.0)
+            };
+            CommCoeffs {
+                inter_rounds,
+                inter_bytes,
+                intra_rounds: 2.0 * (s - 1.0),
+                intra_bytes: (s - 1.0) * (1.0 + pf),
+            }
+        }
+    }
+}
+
 /// Sparse/dense *bandwidth* ratio: `(p-1)·D·w / (2·(p-1)/p · 4)` =
 /// `p·D·w/8`.  The §5.5 "12.8% not 0.1%" observation (the paper quotes
 /// p·D; the factor the two conventions differ by is dense allreduce's
@@ -592,6 +650,51 @@ mod tests {
         let pd = Machine::piz_daint();
         let (a, t) = pick_algo(&pd, 4, 4, &big, 1e-3);
         assert_eq!(a, Algo::Sparse, "{t:?}");
+    }
+
+    #[test]
+    fn comm_coeffs_reproduce_the_closed_forms() {
+        // coefficients × link parameters == the transfer part of every
+        // closed form, on all three schedules and both link routings
+        let m = Machine::fatnode();
+        check(40, |g| {
+            let nodes = g.size(1..9);
+            let s = g.size(1..9);
+            let p = nodes * s;
+            if p <= 1 {
+                return Ok(());
+            }
+            let pf = p as f64;
+            let elems = g.size(10_000..4_000_000) as f64;
+            let d = g.f32(0.0001..0.02) as f64;
+            let msg_bytes = elems * d * PLAIN_WIRE_BYTES;
+
+            let cc = comm_coeffs(Algo::Sparse, nodes, s);
+            let built = cc.inter_rounds * m.alpha
+                + cc.inter_bytes * msg_bytes * m.beta
+                + pf * elems * d * m.gamma_decompress;
+            ensure_close(built, t_sparse(&m, p, elems, d, 0.0, PLAIN_WIRE_BYTES), 1e-9, "sparse")?;
+
+            let cc = comm_coeffs(Algo::Dense, nodes, s);
+            let built = cc.inter_rounds * m.alpha
+                + cc.inter_bytes * (4.0 * elems) * m.beta
+                + (pf - 1.0) / pf * elems * m.gamma_reduce;
+            ensure_close(built, t_dense(&m, p, elems), 1e-9, "dense")?;
+
+            let link = [IntraLink::Smp, IntraLink::Unix, IntraLink::Loopback][g.size(0..3)];
+            let (ia, ib) = m.link_params(link);
+            let cc = comm_coeffs(Algo::Hierarchical, nodes, s);
+            let built = cc.inter_rounds * m.alpha
+                + cc.inter_bytes * msg_bytes * m.beta
+                + cc.intra_rounds * ia
+                + cc.intra_bytes * msg_bytes * ib
+                + pf * elems * d * m.gamma_decompress;
+            let closed = t_hierarchical_on(&m, link, nodes, s, elems, d, 0.0, PLAIN_WIRE_BYTES);
+            ensure_close(built, closed, 1e-9, "hierarchical")
+        });
+        // degenerate worlds carry no transfer terms at all
+        assert_eq!(comm_coeffs(Algo::Sparse, 1, 1), CommCoeffs::default());
+        assert_eq!(comm_coeffs(Algo::Hierarchical, 1, 1), CommCoeffs::default());
     }
 
     #[test]

@@ -59,6 +59,15 @@ SUBCOMMANDS:
   select     micro-benchmark selection algorithms (paper Fig. 3)
   info       list models, artifacts and machine presets
 
+OBSERVABILITY (train/launch):
+  --trace-out PATH      write a Chrome trace-event JSON of every rank's spans
+  --metrics-addr ADDR   rank 0 serves a Prometheus scrape endpoint here
+  --obs-every N         gather cross-rank step-latency stats every N steps
+  --recalib-every N     re-run the auto picker on telemetry-calibrated link
+                        estimates every N steps, switching algorithms live
+                        (requires --algo auto)
+  REDSYNC_LOG           log verbosity for the lines these knobs emit
+
 ENVIRONMENT:
   REDSYNC_LOG       log verbosity: error|warn|info|debug|trace (default info)
   REDSYNC_NO_SIMD   set to 1 to force the scalar select/pack/apply kernels
@@ -100,6 +109,12 @@ fn cmd_train(argv: &[String]) -> i32 {
         .opt("trace-out", "", "write a Chrome trace-event JSON of every rank's spans here")
         .opt("metrics-addr", "", "serve a Prometheus scrape endpoint on this address (rank 0)")
         .opt("obs-every", "", "gather cross-rank step-latency stats every N steps (0 = never)")
+        .opt(
+            "recalib-every",
+            "",
+            "re-run the auto picker on telemetry-calibrated link estimates every N steps \
+             and switch bucket algorithms live (requires --algo auto; 0 = plan once)",
+        )
         .flag("elastic", "survive worker loss: heartbeats, world reshape, rejoin")
         .flag("pipeline", "overlap bucket selection + collectives on a comm thread pool")
         .flag("csv", "print a CSV row instead of the summary");
@@ -149,6 +164,7 @@ fn cmd_train(argv: &[String]) -> i32 {
         ("trace-out", "trace_out"),
         ("metrics-addr", "metrics_addr"),
         ("obs-every", "obs_every"),
+        ("recalib-every", "recalib_every"),
     ] {
         if !parsed.get(flag).is_empty() {
             overrides.push(format!("{key}={}", parsed.get(flag)));
@@ -340,6 +356,7 @@ fn cmd_launch(argv: &[String]) -> i32 {
         .opt("trace-out", "", "Chrome trace-event JSON path, forwarded to every rank")
         .opt("metrics-addr", "", "Prometheus scrape address (rank 0 serves it), forwarded")
         .opt("obs-every", "", "cross-rank stats gather cadence in steps, forwarded")
+        .opt("recalib-every", "", "calibrated re-planning cadence in steps, forwarded")
         .flag("elastic", "every rank survives worker loss (heartbeats + world reshape)")
         .flag("pipeline", "every rank runs the pipelined sync engine")
         .flag("csv", "rank 0 prints a CSV row instead of the summary");
@@ -401,6 +418,7 @@ fn cmd_launch(argv: &[String]) -> i32 {
             ("trace-out", "trace_out"),
             ("metrics-addr", "metrics_addr"),
             ("obs-every", "obs_every"),
+            ("recalib-every", "recalib_every"),
         ] {
             if !parsed.get(flag).is_empty() {
                 set.push_str(&format!(",{key}={}", parsed.get(flag)));

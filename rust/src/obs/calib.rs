@@ -1,0 +1,628 @@
+//! Telemetry-driven cost-model calibration + plan audit (DESIGN.md
+//! §Observability).
+//!
+//! The `--algo auto` picker (`costmodel::pick_algo_on`) is only as good
+//! as the `Machine` parameters behind it, and those are datasheet
+//! numbers.  This module closes the loop: every synchronized bucket
+//! reports its message size and measured collective wall time
+//! ([`Calibrator::observe_bucket`]), an EWMA least-squares estimator
+//! per link class ([`LinkEstimator`]) recovers the α/β the fabric is
+//! *actually* delivering, a per-bucket ledger ([`BucketAudit`]) keeps
+//! the predicted-vs-measured audit of every plan decision, and
+//! [`Calibrator::replan`] re-runs the picker on the calibrated machine
+//! every `--recalib-every` steps — switching sparse ↔ hierarchical live
+//! (both deliver bit-identical gathered blobs, so the switch cannot
+//! perturb training; dense buckets were demoted at plan time and are
+//! never re-promoted mid-run).
+//!
+//! The observation model is the cost model's own structure
+//! (`costmodel::comm_coeffs`): one collective of per-rank message size
+//! `B` bytes costs `rounds·α + coef·B·β` on each link it rides.  Flat
+//! schedules ride one link; the hierarchical schedule is split by
+//! subtracting the current inter-node estimate and fitting the residual
+//! on the intra-node coefficients — which is exactly how a straggling
+//! worker inside a node (slowing every synchronous intra collective)
+//! becomes visible as a degraded intra link.
+
+use crate::collectives::group::Algo;
+use crate::costmodel::{self, BucketCost};
+use crate::obs::metrics::Hist;
+use crate::simnet::{IntraLink, Machine};
+
+/// Default EWMA decay per observation: ~50 observations of memory.
+pub const DEFAULT_DECAY: f64 = 0.98;
+
+/// Bytes are fitted in MB so the 2×2 normal matrix stays
+/// well-conditioned next to round counts of order one.
+const BYTES_SCALE: f64 = 1e-6;
+
+/// Weight of the two datasheet pseudo-observations.  Large enough to
+/// keep the normal matrix invertible when every observation shares one
+/// `(rounds, bytes)` shape, small enough that real data dominates.
+const PRIOR_WEIGHT: f64 = 1e-3;
+
+/// Exponentially-weighted least squares for `T = rounds·α + bytes·β`
+/// over one link class, with datasheet priors as pseudo-observations.
+#[derive(Clone, Debug)]
+pub struct LinkEstimator {
+    decay: f64,
+    srr: f64,
+    srx: f64,
+    sxx: f64,
+    srt: f64,
+    sxt: f64,
+    samples: u64,
+    prior_alpha: f64,
+    prior_beta_mb: f64,
+}
+
+impl LinkEstimator {
+    pub fn new(prior_alpha: f64, prior_beta: f64, decay: f64) -> LinkEstimator {
+        assert!(decay > 0.0 && decay <= 1.0, "decay must be in (0, 1]");
+        LinkEstimator {
+            decay,
+            srr: 0.0,
+            srx: 0.0,
+            sxx: 0.0,
+            srt: 0.0,
+            sxt: 0.0,
+            samples: 0,
+            prior_alpha,
+            prior_beta_mb: prior_beta / BYTES_SCALE,
+        }
+    }
+
+    /// Fold in one measured collective: `rounds` latency units and
+    /// `bytes` serialized payload cost `secs` of wall time.
+    pub fn observe(&mut self, rounds: f64, bytes: f64, secs: f64) {
+        if rounds <= 0.0 && bytes <= 0.0 {
+            return;
+        }
+        let x = bytes * BYTES_SCALE;
+        self.srr = self.srr * self.decay + rounds * rounds;
+        self.srx = self.srx * self.decay + rounds * x;
+        self.sxx = self.sxx * self.decay + x * x;
+        self.srt = self.srt * self.decay + rounds * secs;
+        self.sxt = self.sxt * self.decay + x * secs;
+        self.samples += 1;
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    /// Current `(α seconds, β seconds/byte)` estimate; `None` until the
+    /// first observation, so datasheet values survive an idle link.
+    pub fn estimate(&self) -> Option<(f64, f64)> {
+        if self.samples == 0 {
+            return None;
+        }
+        let srr = self.srr + PRIOR_WEIGHT;
+        let sxx = self.sxx + PRIOR_WEIGHT;
+        let srt = self.srt + PRIOR_WEIGHT * self.prior_alpha;
+        let sxt = self.sxt + PRIOR_WEIGHT * self.prior_beta_mb;
+        let det = srr * sxx - self.srx * self.srx;
+        if det <= 1e-30 {
+            return None;
+        }
+        let alpha = (srt * sxx - sxt * self.srx) / det;
+        let beta_mb = (sxt * srr - srt * self.srx) / det;
+        Some((alpha.max(0.0), beta_mb.max(0.0) * BYTES_SCALE))
+    }
+}
+
+/// Predicted-vs-measured audit of one engine bucket's plan decisions.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BucketAudit {
+    pub bucket: usize,
+    /// Algorithm behind the most recent observation.
+    pub algo: Option<Algo>,
+    /// Observations folded in (one per synchronized step).
+    pub steps: u64,
+    /// Σ cost-model comm seconds under the live plan's machine model.
+    pub predicted_secs: f64,
+    /// Σ measured collective wall seconds.
+    pub measured_secs: f64,
+    /// Live algorithm switches applied by [`Calibrator::replan`].
+    pub switches: u64,
+}
+
+impl BucketAudit {
+    /// Measured / predicted; 0.0 before the first observation.
+    pub fn error_ratio(&self) -> f64 {
+        if self.predicted_secs > 0.0 {
+            self.measured_secs / self.predicted_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// End-of-run calibration summary carried in `TrainReport`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CalibSummary {
+    /// Total link observations across both estimators.
+    pub samples: u64,
+    /// `replan` invocations.
+    pub replans: u64,
+    /// Live algorithm switches applied.
+    pub switches: u64,
+    /// Measured α of the flat-schedule link, microseconds (0 = none).
+    pub alpha_us: f64,
+    /// Measured bandwidth of the flat-schedule link, GB/s (0 = none).
+    pub beta_gbps: f64,
+    /// Σ predicted comm seconds across all bucket audits.
+    pub predicted_secs: f64,
+    /// Σ measured comm seconds across all bucket audits.
+    pub measured_secs: f64,
+}
+
+impl CalibSummary {
+    /// Measured / predicted; 0.0 before the first observation.
+    pub fn error_ratio(&self) -> f64 {
+        if self.predicted_secs > 0.0 {
+            self.measured_secs / self.predicted_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The measurement-and-control loop behind `--recalib-every`: holds the
+/// datasheet machine, the machine model the *live plan* was priced on,
+/// one estimator per link class, and the per-bucket audit ledger.
+pub struct Calibrator {
+    machine: Machine,
+    plan_machine: Machine,
+    link: Option<IntraLink>,
+    nodes: usize,
+    ranks_per_node: usize,
+    inter: LinkEstimator,
+    intra: LinkEstimator,
+    audits: Vec<BucketAudit>,
+    replans: u64,
+}
+
+impl Calibrator {
+    /// `link` mirrors the worker's planning call: `None` plans with
+    /// [`costmodel::pick_algo`] (in-process fabric), `Some` with
+    /// [`costmodel::pick_algo_on`] over that link class.
+    pub fn new(
+        machine: Machine,
+        link: Option<IntraLink>,
+        nodes: usize,
+        ranks_per_node: usize,
+        n_buckets: usize,
+    ) -> Calibrator {
+        let (ia, ib) = Calibrator::intra_params(&machine, link);
+        Calibrator {
+            inter: LinkEstimator::new(machine.alpha, machine.beta, DEFAULT_DECAY),
+            intra: LinkEstimator::new(ia, ib, DEFAULT_DECAY),
+            plan_machine: machine.clone(),
+            machine,
+            link,
+            nodes,
+            ranks_per_node,
+            audits: (0..n_buckets)
+                .map(|b| BucketAudit { bucket: b, ..Default::default() })
+                .collect(),
+            replans: 0,
+        }
+    }
+
+    fn intra_params(m: &Machine, link: Option<IntraLink>) -> (f64, f64) {
+        match link {
+            Some(l) => m.link_params(l),
+            None => (m.intra_alpha, m.intra_beta),
+        }
+    }
+
+    /// Whether flat schedules ride the intra-host link — the exact
+    /// condition under which `pick_algo_on` reprices dense/sparse.
+    fn flat_on_intra(&self) -> bool {
+        self.nodes <= 1 && self.link.is_some()
+    }
+
+    /// Fold in one synchronized bucket: message size in words (the
+    /// packed blob every rank contributes) and the measured collective
+    /// wall seconds.  Updates the link estimators and the audit ledger.
+    pub fn observe_bucket(&mut self, bucket: usize, algo: Algo, msg_words: usize, comm_secs: f64) {
+        let bytes = 4.0 * msg_words as f64;
+        let cc = costmodel::comm_coeffs(algo, self.nodes, self.ranks_per_node);
+        // audit: what the live plan's machine model predicted for this
+        // collective (comm terms only — selection/unpack are device work)
+        let (pia, pib) = Calibrator::intra_params(&self.plan_machine, self.link);
+        let predicted = if algo == Algo::Hierarchical {
+            cc.inter_rounds * self.plan_machine.alpha
+                + cc.inter_bytes * bytes * self.plan_machine.beta
+                + cc.intra_rounds * pia
+                + cc.intra_bytes * bytes * pib
+        } else if self.flat_on_intra() {
+            cc.inter_rounds * pia + cc.inter_bytes * bytes * pib
+        } else {
+            cc.inter_rounds * self.plan_machine.alpha
+                + cc.inter_bytes * bytes * self.plan_machine.beta
+        };
+        // estimator: attribute the measurement to the link(s) it rode
+        if algo == Algo::Hierarchical && (cc.intra_rounds > 0.0 || cc.intra_bytes > 0.0) {
+            let (ea, eb) =
+                self.inter.estimate().unwrap_or((self.machine.alpha, self.machine.beta));
+            let inter_share = cc.inter_rounds * ea + cc.inter_bytes * bytes * eb;
+            let residual = (comm_secs - inter_share).max(0.0);
+            self.intra.observe(cc.intra_rounds, cc.intra_bytes * bytes, residual);
+        } else if self.flat_on_intra() {
+            self.intra.observe(cc.inter_rounds, cc.inter_bytes * bytes, comm_secs);
+        } else {
+            self.inter.observe(cc.inter_rounds, cc.inter_bytes * bytes, comm_secs);
+        }
+        if let Some(a) = self.audits.get_mut(bucket) {
+            a.algo = Some(algo);
+            a.steps += 1;
+            a.predicted_secs += predicted;
+            a.measured_secs += comm_secs;
+        }
+    }
+
+    /// The datasheet machine with every measured link overridden by its
+    /// estimator — what [`replan`](Calibrator::replan) prices against.
+    pub fn calibrated_machine(&self) -> Machine {
+        let mut m = self.machine.clone();
+        if let Some((a, b)) = self.inter.estimate() {
+            m.alpha = a;
+            m.beta = b;
+        }
+        if let Some((a, b)) = self.intra.estimate() {
+            match self.link {
+                None | Some(IntraLink::Smp) => {
+                    m.intra_alpha = a;
+                    m.intra_beta = b;
+                }
+                Some(IntraLink::Unix) => {
+                    m.uds_alpha = a;
+                    m.uds_beta = b;
+                }
+                Some(IntraLink::Loopback) => {
+                    m.lo_alpha = a;
+                    m.lo_beta = b;
+                }
+            }
+        }
+        m
+    }
+
+    /// Re-run the picker on the calibrated machine at bucket
+    /// granularity.  Dense re-picks keep the current algorithm (a live
+    /// bucket can only move within the sparse family — sparse and
+    /// hierarchical deliver bit-identical gathered blobs, dense does
+    /// not).  Returns the next plan and the number of switches; the
+    /// calibrated machine becomes the model future audits predict with.
+    pub fn replan(
+        &mut self,
+        costs: &[BucketCost],
+        density: f64,
+        current: &[Algo],
+    ) -> (Vec<Algo>, u64) {
+        let m = self.calibrated_machine();
+        let mut next = current.to_vec();
+        let mut switches = 0u64;
+        for (i, cost) in costs.iter().enumerate().take(next.len()) {
+            let (pick, _) = match self.link {
+                Some(l) => {
+                    costmodel::pick_algo_on(&m, l, self.nodes, self.ranks_per_node, cost, density)
+                }
+                None => costmodel::pick_algo(&m, self.nodes, self.ranks_per_node, cost, density),
+            };
+            if pick != Algo::Dense && pick != next[i] {
+                next[i] = pick;
+                switches += 1;
+                if let Some(a) = self.audits.get_mut(i) {
+                    a.switches += 1;
+                }
+            }
+        }
+        self.replans += 1;
+        self.plan_machine = m;
+        (next, switches)
+    }
+
+    pub fn audits(&self) -> &[BucketAudit] {
+        &self.audits
+    }
+
+    pub fn summary(&self) -> CalibSummary {
+        let flat = if self.flat_on_intra() { &self.intra } else { &self.inter };
+        let (alpha, beta) = flat.estimate().unwrap_or((0.0, 0.0));
+        let mut s = CalibSummary {
+            samples: self.inter.samples() + self.intra.samples(),
+            replans: self.replans,
+            alpha_us: alpha * 1e6,
+            beta_gbps: if beta > 0.0 { 1.0 / beta / 1e9 } else { 0.0 },
+            ..Default::default()
+        };
+        for a in &self.audits {
+            s.switches += a.switches;
+            s.predicted_secs += a.predicted_secs;
+            s.measured_secs += a.measured_secs;
+        }
+        s
+    }
+}
+
+/// Straggler detection on the gathered per-rank step-latency
+/// histograms: the slowest rank and its mean-latency ratio over the
+/// fastest, when that ratio reaches `min_ratio` (e.g. 1.5).
+pub fn detect_straggler(hists: &[(u32, Hist)], min_ratio: f64) -> Option<(u32, f64)> {
+    let mut slow: Option<(u32, f64)> = None;
+    let mut fast = f64::INFINITY;
+    for (rank, h) in hists {
+        if h.count == 0 {
+            continue;
+        }
+        let mean = h.mean_us();
+        let slower = match slow {
+            Some((_, s)) => mean > s,
+            None => true,
+        };
+        if slower {
+            slow = Some((*rank, mean));
+        }
+        fast = fast.min(mean);
+    }
+    let (rank, slowest) = slow?;
+    if fast > 0.0 && slowest / fast >= min_ratio {
+        Some((rank, slowest / fast))
+    } else {
+        None
+    }
+}
+
+// ------------------------------------------------------------ plan codec
+
+/// Wire magic of a re-plan broadcast frame (`"RPLN"`).
+pub const PLAN_MAGIC: u32 = 0x5250_4C4E;
+
+/// `[MAGIC, step, n, code…]` — rank 0's re-planned per-bucket algorithm
+/// vector, broadcast over the control tag at the recalibration barrier.
+pub fn encode_plan(step: u32, algos: &[Algo]) -> Vec<u32> {
+    let mut w = Vec::with_capacity(3 + algos.len());
+    w.push(PLAN_MAGIC);
+    w.push(step);
+    w.push(algos.len() as u32);
+    for a in algos {
+        w.push(match a {
+            Algo::Dense => 0,
+            Algo::Sparse => 1,
+            Algo::Hierarchical => 2,
+        });
+    }
+    w
+}
+
+pub fn decode_plan(w: &[u32]) -> Result<(u32, Vec<Algo>), String> {
+    if w.len() < 3 {
+        return Err(format!("plan frame has {} words, want >= 3", w.len()));
+    }
+    if w[0] != PLAN_MAGIC {
+        return Err(format!("bad plan magic {:#010x}", w[0]));
+    }
+    let n = w[2] as usize;
+    if w.len() != 3 + n {
+        return Err(format!("plan frame has {} words, want {}", w.len(), 3 + n));
+    }
+    let mut algos = Vec::with_capacity(n);
+    for &c in &w[3..] {
+        algos.push(match c {
+            0 => Algo::Dense,
+            1 => Algo::Sparse,
+            2 => Algo::Hierarchical,
+            _ => return Err(format!("bad algo code {c}")),
+        });
+    }
+    Ok((w[1], algos))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimator_recovers_known_link() {
+        let (alpha, beta) = (20e-6, 8e-10);
+        let mut e = LinkEstimator::new(1e-6, 1e-11, DEFAULT_DECAY);
+        assert!(e.estimate().is_none(), "no estimate before data");
+        for (r, b) in [(3.0, 1e5), (3.0, 4e5), (1.0, 2e5), (2.0, 1.6e6), (3.0, 8e5)] {
+            for _ in 0..10 {
+                e.observe(r, b, r * alpha + b * beta);
+            }
+        }
+        let (ea, eb) = e.estimate().unwrap();
+        assert!((ea - alpha).abs() / alpha < 1e-2, "alpha {ea:e} vs {alpha:e}");
+        assert!((eb - beta).abs() / beta < 1e-2, "beta {eb:e} vs {beta:e}");
+        assert_eq!(e.samples(), 50);
+    }
+
+    #[test]
+    fn estimator_forgets_the_old_regime() {
+        let mut e = LinkEstimator::new(20e-6, 8e-10, 0.9);
+        for (r, b) in [(3.0, 1e5), (1.0, 4e5)] {
+            for _ in 0..25 {
+                e.observe(r, b, r * 20e-6 + b * 8e-10);
+            }
+        }
+        // the link degrades 10x; 200 decayed observations later the old
+        // regime's weight is 0.9^200 ~ 7e-10
+        let (alpha2, beta2) = (200e-6, 8e-9);
+        for _ in 0..100 {
+            for (r, b) in [(3.0, 1e5), (1.0, 4e5)] {
+                e.observe(r, b, r * alpha2 + b * beta2);
+            }
+        }
+        let (ea, eb) = e.estimate().unwrap();
+        assert!((ea - alpha2).abs() / alpha2 < 0.05, "alpha {ea:e} vs {alpha2:e}");
+        assert!((eb - beta2).abs() / beta2 < 0.05, "beta {eb:e} vs {beta2:e}");
+    }
+
+    #[test]
+    fn estimator_survives_degenerate_shapes() {
+        // every observation identical: the prior keeps the matrix
+        // invertible and the fit still reproduces the observed point
+        let mut e = LinkEstimator::new(10e-6, 1e-9, DEFAULT_DECAY);
+        for _ in 0..40 {
+            e.observe(3.0, 2e5, 1e-3);
+        }
+        let (ea, eb) = e.estimate().unwrap();
+        let fit = 3.0 * ea + 2e5 * eb;
+        assert!((fit - 1e-3).abs() / 1e-3 < 1e-3, "fit {fit:e} vs 1e-3");
+    }
+
+    #[test]
+    fn calibrator_learns_flat_link_and_audits() {
+        // fatnode datasheet, but the fabric actually delivers 4x worse
+        // inter α/β; flat sparse observations must recover it
+        let truth = {
+            let mut m = Machine::fatnode();
+            m.alpha *= 4.0;
+            m.beta *= 4.0;
+            m
+        };
+        let mut c = Calibrator::new(Machine::fatnode(), None, 2, 4, 2);
+        let cc = costmodel::comm_coeffs(Algo::Sparse, 2, 4);
+        for _ in 0..30 {
+            for (bucket, words) in [(0usize, 50_000usize), (1, 200_000)] {
+                let bytes = 4.0 * words as f64;
+                let secs = cc.inter_rounds * truth.alpha + cc.inter_bytes * bytes * truth.beta;
+                c.observe_bucket(bucket, Algo::Sparse, words, secs);
+            }
+        }
+        let m = c.calibrated_machine();
+        assert!((m.alpha - truth.alpha).abs() / truth.alpha < 0.02, "{:e}", m.alpha);
+        assert!((m.beta - truth.beta).abs() / truth.beta < 0.02, "{:e}", m.beta);
+        // the datasheet plan under-predicts a 4x-degraded link: the
+        // audit ledger must show measured >> predicted
+        let s = c.summary();
+        assert_eq!(s.samples, 60);
+        assert!(s.error_ratio() > 2.0, "error ratio {}", s.error_ratio());
+        assert!(s.alpha_us > 0.0 && s.beta_gbps > 0.0, "{s:?}");
+        // after replanning, predictions use the calibrated machine and
+        // the ledger error settles to ~1
+        let cost = BucketCost { m_elems: 20e6, t_select: 0.0, wire_bytes: 8.0 };
+        let (_, _) = c.replan(&[cost, cost], 1e-3, &[Algo::Sparse, Algo::Sparse]);
+        let before = c.summary();
+        for _ in 0..30 {
+            for (bucket, words) in [(0usize, 50_000usize), (1, 200_000)] {
+                let bytes = 4.0 * words as f64;
+                let secs = cc.inter_rounds * truth.alpha + cc.inter_bytes * bytes * truth.beta;
+                c.observe_bucket(bucket, Algo::Sparse, words, secs);
+            }
+        }
+        let after = c.summary();
+        let tail_pred = after.predicted_secs - before.predicted_secs;
+        let tail_meas = after.measured_secs - before.measured_secs;
+        assert!(
+            (tail_meas / tail_pred - 1.0).abs() < 0.05,
+            "post-replan audit error {}",
+            tail_meas / tail_pred
+        );
+    }
+
+    #[test]
+    fn ledger_error_is_one_when_the_model_is_right() {
+        let m = Machine::fatnode();
+        let mut c = Calibrator::new(m.clone(), None, 2, 4, 1);
+        let cc = costmodel::comm_coeffs(Algo::Sparse, 2, 4);
+        for _ in 0..10 {
+            let bytes = 4.0 * 100_000.0;
+            let secs = cc.inter_rounds * m.alpha + cc.inter_bytes * bytes * m.beta;
+            c.observe_bucket(0, Algo::Sparse, 100_000, secs);
+        }
+        let a = &c.audits()[0];
+        assert_eq!(a.steps, 10);
+        assert!((a.error_ratio() - 1.0).abs() < 1e-9, "{}", a.error_ratio());
+    }
+
+    #[test]
+    fn hierarchical_observations_calibrate_the_intra_link() {
+        // inter link is healthy (datasheet); a straggler inside each
+        // node degrades every intra collective.  Observations of the
+        // hierarchical schedule must surface as a degraded intra link.
+        let truth = Machine::fatnode_straggler();
+        let mut c = Calibrator::new(Machine::fatnode(), None, 2, 4, 2);
+        let cc = costmodel::comm_coeffs(Algo::Hierarchical, 2, 4);
+        for _ in 0..40 {
+            for (bucket, words) in [(0usize, 40_000usize), (1, 160_000)] {
+                let bytes = 4.0 * words as f64;
+                let secs = cc.inter_rounds * truth.alpha
+                    + cc.inter_bytes * bytes * truth.beta
+                    + cc.intra_rounds * truth.intra_alpha
+                    + cc.intra_bytes * bytes * truth.intra_beta;
+                c.observe_bucket(bucket, Algo::Hierarchical, words, secs);
+            }
+        }
+        let m = c.calibrated_machine();
+        assert!(
+            (m.intra_alpha - truth.intra_alpha).abs() / truth.intra_alpha < 0.05,
+            "intra alpha {:e} vs {:e}",
+            m.intra_alpha,
+            truth.intra_alpha
+        );
+        assert!(
+            (m.intra_beta - truth.intra_beta).abs() / truth.intra_beta < 0.05,
+            "intra beta {:e} vs {:e}",
+            m.intra_beta,
+            truth.intra_beta
+        );
+        // inter link was never directly observed: datasheet survives
+        assert_eq!(m.alpha, Machine::fatnode().alpha);
+    }
+
+    #[test]
+    fn replan_never_promotes_to_dense() {
+        // a bucket so small the calibrated picker would choose dense:
+        // the live plan must keep the current sparse algorithm
+        let mut c = Calibrator::new(Machine::fatnode(), None, 2, 4, 1);
+        c.observe_bucket(0, Algo::Sparse, 64, 1e-4);
+        let tiny = BucketCost { m_elems: 1_000.0, t_select: 1.0, wire_bytes: 8.0 };
+        let (next, switches) = c.replan(&[tiny], 1e-3, &[Algo::Sparse]);
+        assert_eq!(next, vec![Algo::Sparse]);
+        assert_eq!(switches, 0);
+        assert_eq!(c.summary().replans, 1);
+    }
+
+    #[test]
+    fn straggler_detector_flags_the_slow_rank() {
+        let mut fast = Hist::default();
+        let mut slow = Hist::default();
+        for _ in 0..20 {
+            fast.observe(1_000);
+            slow.observe(2_500);
+        }
+        let hists = vec![(0u32, fast.clone()), (1, slow), (2, fast.clone())];
+        let (rank, ratio) = detect_straggler(&hists, 1.5).unwrap();
+        assert_eq!(rank, 1);
+        assert!((ratio - 2.5).abs() < 1e-9, "{ratio}");
+        // below threshold / degenerate inputs: no flag
+        assert!(detect_straggler(&hists, 3.0).is_none());
+        assert!(detect_straggler(&[], 1.5).is_none());
+        assert!(detect_straggler(&[(0, fast)], 1.5).is_none());
+    }
+
+    #[test]
+    fn plan_codec_round_trips_and_rejects() {
+        let algos = vec![Algo::Sparse, Algo::Hierarchical, Algo::Dense, Algo::Sparse];
+        let w = encode_plan(7, &algos);
+        assert_eq!(w.len(), 3 + algos.len());
+        let (step, back) = decode_plan(&w).unwrap();
+        assert_eq!(step, 7);
+        assert_eq!(back, algos);
+        let (_, empty) = decode_plan(&encode_plan(0, &[])).unwrap();
+        assert!(empty.is_empty());
+        assert!(decode_plan(&w[..2]).is_err(), "truncated header");
+        assert!(decode_plan(&w[..5]).is_err(), "truncated body");
+        let mut bad = w.clone();
+        bad[0] ^= 1;
+        assert!(decode_plan(&bad).is_err(), "bad magic");
+        let mut bad = w;
+        bad[3] = 9;
+        assert!(decode_plan(&bad).is_err(), "bad code");
+    }
+}

@@ -12,11 +12,16 @@
 //! text (`--metrics-addr`).  Everything is std-only and adds zero wire
 //! traffic unless explicitly enabled.
 
+pub mod calib;
 pub mod metrics;
 pub mod scrape;
 pub mod span;
 pub mod trace;
 
+pub use calib::{
+    decode_plan, detect_straggler, encode_plan, BucketAudit, CalibSummary, Calibrator,
+    LinkEstimator,
+};
 pub use metrics::{aggregate_step_hists, ClusterStats, Hist, Registry, Snapshot};
 pub use scrape::{serve, Scraper};
 pub use span::{
@@ -26,4 +31,7 @@ pub use span::{
     SPAN_COMM_SPARSE, SPAN_COMPUTE, SPAN_DETECT, SPAN_EVAL, SPAN_GATHER, SPAN_HEARTBEAT,
     SPAN_MASK, SPAN_PACK, SPAN_RESHAPE, SPAN_SELECT, SPAN_STEP, SPAN_UNPACK, SPAN_UPDATE,
 };
-pub use trace::{chrome_trace, span_count, write_chrome_trace, RankDump};
+pub use trace::{
+    chrome_trace, chrome_trace_with_counters, span_count, write_chrome_trace,
+    write_chrome_trace_with_counters, CounterSeries, RankDump,
+};

@@ -101,6 +101,61 @@ pub fn write_chrome_trace(path: &str, dumps: &[RankDump]) -> Result<(), String> 
     std::fs::write(path, chrome_trace(dumps).to_json()).map_err(|e| format!("trace {path}: {e}"))
 }
 
+/// One named counter track: `(timestamp µs, value)` samples in record
+/// order, plotted by the trace viewer as a stacked counter lane.  The
+/// calibration loop emits `plan_predicted_us` / `plan_measured_us` /
+/// `rank_skew` samples at every `--obs-every` window so the
+/// predicted-vs-measured audit is visible *on* the timeline it audits.
+#[derive(Clone, Debug)]
+pub struct CounterSeries {
+    pub name: String,
+    pub points: Vec<(u64, f64)>,
+}
+
+/// [`chrome_trace`] plus `"ph":"C"` counter events, normalized to the
+/// same time base as the span events so the tracks line up.
+pub fn chrome_trace_with_counters(dumps: &[RankDump], counters: &[CounterSeries]) -> Value {
+    let mut min_us = u64::MAX;
+    for d in dumps {
+        for l in &d.lanes {
+            for s in &l.spans {
+                min_us = min_us.min(s.t0_us);
+            }
+        }
+    }
+    if min_us == u64::MAX {
+        min_us = 0;
+    }
+    let base = chrome_trace(dumps);
+    let mut events: Vec<Value> = base
+        .at(&["traceEvents"])
+        .and_then(|e| e.as_arr())
+        .map(|a| a.to_vec())
+        .unwrap_or_default();
+    for c in counters {
+        for &(t_us, v) in &c.points {
+            events.push(json::obj(vec![
+                ("name", json::s(c.name.clone())),
+                ("ph", json::s("C")),
+                ("pid", json::num(0.0)),
+                ("ts", json::num(t_us.saturating_sub(min_us) as f64)),
+                ("args", json::obj(vec![("value", json::num(v))])),
+            ]));
+        }
+    }
+    json::obj(vec![("traceEvents", json::arr(events)), ("displayTimeUnit", json::s("ms"))])
+}
+
+/// Write the merged timeline with counter tracks to `path`.
+pub fn write_chrome_trace_with_counters(
+    path: &str,
+    dumps: &[RankDump],
+    counters: &[CounterSeries],
+) -> Result<(), String> {
+    std::fs::write(path, chrome_trace_with_counters(dumps, counters).to_json())
+        .map_err(|e| format!("trace {path}: {e}"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,5 +230,31 @@ mod tests {
     #[test]
     fn span_count_sums_lanes() {
         assert_eq!(span_count(&dump()), 3);
+    }
+
+    #[test]
+    fn counter_events_ride_the_span_time_base() {
+        let counters = vec![CounterSeries {
+            name: "plan_measured_us".into(),
+            points: vec![(1_100, 420.0), (1_600, 380.0), (900, 7.0)],
+        }];
+        let v = chrome_trace_with_counters(&dump(), &counters);
+        let events = v.at(&["traceEvents"]).and_then(|e| e.as_arr()).unwrap();
+        let cs: Vec<_> = events
+            .iter()
+            .filter(|e| e.at(&["ph"]).and_then(|p| p.as_str()) == Some("C"))
+            .collect();
+        assert_eq!(cs.len(), 3);
+        // span min is t0 = 1_000: counters normalize against it, with
+        // earlier samples clamping to 0 rather than wrapping
+        let ts: Vec<f64> = cs.iter().map(|e| e.at(&["ts"]).unwrap().as_f64().unwrap()).collect();
+        assert_eq!(ts, vec![100.0, 600.0, 0.0]);
+        assert_eq!(cs[0].at(&["args", "value"]).unwrap().as_f64(), Some(420.0));
+        // the span events themselves are untouched
+        let xs = events
+            .iter()
+            .filter(|e| e.at(&["ph"]).and_then(|p| p.as_str()) == Some("X"))
+            .count();
+        assert_eq!(xs, 3);
     }
 }

@@ -62,6 +62,7 @@ pub use bucket::{build_buckets, BucketState, LayerSpec, Produced};
 pub use pipelined::Pipelined;
 pub use sequential::Sequential;
 
+use crate::collectives::group::Algo;
 use crate::collectives::Gathered;
 use crate::compression::message::{view_plain, view_quant};
 use crate::util::timer::PhaseTimer;
@@ -86,6 +87,12 @@ pub struct BucketDone {
     pub selected: usize,
     /// Total elements across the bucket's layers.
     pub elems: usize,
+    /// Words in this rank's packed blob — the per-rank message size the
+    /// cost model prices (`obs::calib` fits α/β against it).
+    pub msg_words: usize,
+    /// Measured wall seconds of this bucket's collective (the
+    /// calibration observation paired with `msg_words`).
+    pub comm_secs: f64,
 }
 
 impl BucketDone {
@@ -159,5 +166,16 @@ pub trait SyncEngine {
     /// own no residual state may return nothing.
     fn export_layer_states(&self) -> Vec<(usize, Vec<f32>, Vec<f32>)> {
         Vec::new()
+    }
+
+    /// Re-plan the per-bucket collective algorithms at a step barrier
+    /// (`--recalib-every`): `algos[b]` becomes bucket `b`'s algorithm
+    /// from the next `sync_step` on.  Sparse and hierarchical deliver
+    /// bit-identical gathered blobs, so a live switch between them
+    /// cannot perturb training; `Dense` is rejected by the bucket state
+    /// (dense buckets are demoted at plan time, never switched to).
+    /// Engines without per-bucket plans ignore the call.
+    fn set_algos(&mut self, algos: &[Algo]) {
+        let _ = algos;
     }
 }

@@ -28,7 +28,7 @@
 
 use super::bucket::BucketState;
 use super::{BucketDone, SyncEngine, BUCKET_TAG_BASE};
-use crate::collectives::group::{Communicator, Topology};
+use crate::collectives::group::{Algo, Communicator, Topology};
 use crate::collectives::mux::{TagChannel, TagMux};
 use crate::collectives::{Gathered, Transport};
 use crate::compression::CompressorConfig;
@@ -56,6 +56,7 @@ struct TaskOut {
     gathered: Gathered,
     selected: usize,
     elems: usize,
+    msg_words: usize,
     mask_secs: f64,
     select_secs: f64,
     pack_secs: f64,
@@ -170,6 +171,14 @@ impl<T: Transport + Send + Sync> SyncEngine for Pipelined<T> {
             .collect()
     }
 
+    fn set_algos(&mut self, algos: &[Algo]) {
+        // only legal between steps, when every bucket state is parked
+        assert_eq!(algos.len(), self.slots.len(), "re-plan must cover every bucket");
+        for (slot, &a) in self.slots.iter_mut().zip(algos) {
+            slot.as_mut().expect("bucket state parked between steps").set_algo(a);
+        }
+    }
+
     fn sync_step(
         &mut self,
         grads: &[Vec<f32>],
@@ -225,6 +234,7 @@ impl<T: Transport + Send + Sync> SyncEngine for Pipelined<T> {
                             let guard = ring
                                 .as_ref()
                                 .map(|r| r.guard(obs::SPAN_COMM_SPARSE, step, task.bucket as u32));
+                            let msg_words = task.state.blob().len();
                             let gathered = comm.allgather(task.state.algo(), task.state.blob());
                             drop(guard);
                             Ok(TaskOut {
@@ -232,6 +242,7 @@ impl<T: Transport + Send + Sync> SyncEngine for Pipelined<T> {
                                 gathered,
                                 selected: p.selected,
                                 elems: p.elems,
+                                msg_words,
                                 mask_secs: p.mask_secs,
                                 select_secs: p.select_secs,
                                 pack_secs: p.pack_secs,
@@ -275,6 +286,8 @@ impl<T: Transport + Send + Sync> SyncEngine for Pipelined<T> {
                     gathered: out.gathered,
                     selected: out.selected,
                     elems: out.elems,
+                    msg_words: out.msg_words,
+                    comm_secs: out.comm_secs,
                 })?;
             }
             Ok(())

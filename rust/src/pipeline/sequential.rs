@@ -3,13 +3,14 @@
 
 use super::bucket::BucketState;
 use super::{BucketDone, SyncEngine};
-use crate::collectives::group::{Communicator, Topology};
+use crate::collectives::group::{Algo, Communicator, Topology};
 use crate::collectives::Transport;
 use crate::compression::CompressorConfig;
 use crate::coordinator::metrics::phase;
 use crate::obs::{self, SpanCtx, SpanRing};
 use crate::runtime::DeviceSelector;
 use crate::util::timer::PhaseTimer;
+use std::time::Instant;
 
 /// Produce + allgather every bucket inline on the calling thread, in
 /// bucket order, dispatching each bucket's planned collective (flat or
@@ -72,6 +73,13 @@ impl<T: Transport> SyncEngine for Sequential<'_, T> {
             .collect()
     }
 
+    fn set_algos(&mut self, algos: &[Algo]) {
+        assert_eq!(algos.len(), self.buckets.len(), "re-plan must cover every bucket");
+        for (state, &a) in self.buckets.iter_mut().zip(algos) {
+            state.set_algo(a);
+        }
+    }
+
     fn sync_step(
         &mut self,
         grads: &[Vec<f32>],
@@ -91,10 +99,13 @@ impl<T: Transport> SyncEngine for Sequential<'_, T> {
             timer.add(phase::SELECT, produced.select_secs);
             timer.add(phase::PACK, produced.pack_secs);
             let algo = state.algo();
+            let msg_words = state.blob().len();
             // the collective borrows the bucket's persistent blob
             let _g = self.ring.as_ref().map(|r| r.guard(obs::SPAN_COMM_SPARSE, step, b as u32));
+            let t0 = Instant::now();
             let gathered =
                 timer.time(phase::COMM_SPARSE, || self.comm.allgather(algo, state.blob()));
+            let comm_secs = t0.elapsed().as_secs_f64();
             drop(_g);
             apply(BucketDone {
                 bucket: b,
@@ -102,6 +113,8 @@ impl<T: Transport> SyncEngine for Sequential<'_, T> {
                 gathered,
                 selected: produced.selected,
                 elems: produced.elems,
+                msg_words,
+                comm_secs,
             })?;
         }
         Ok(())

@@ -190,11 +190,36 @@ impl Machine {
         }
     }
 
+    /// [`Machine::fatnode`] with one straggling worker per node: the
+    /// intra-node collectives are synchronous, so they run at the
+    /// slowest member's pace — the effective intra link degrades ~130×
+    /// in latency and ~80× in bandwidth while the inter-node fabric is
+    /// untouched.  The straggler-heterogeneity scenario where the
+    /// datasheet plan (hierarchical, per
+    /// `hierarchy_beats_flat_on_fat_nodes`) is provably wrong and the
+    /// calibrated picker (`obs::calib`) must fall back to the flat
+    /// sparse schedule.
+    pub fn fatnode_straggler() -> Machine {
+        Machine {
+            name: "fatnode-straggler".into(),
+            intra_alpha: 400e-6,
+            intra_beta: 1.0 / 0.6e9,
+            uds_alpha: 300e-6,
+            uds_beta: 1.0 / 0.5e9,
+            lo_alpha: 500e-6,
+            lo_beta: 1.0 / 0.4e9,
+            ..Machine::fatnode()
+        }
+    }
+
     pub fn by_name(name: &str) -> Option<Machine> {
         match name {
             "muradin" => Some(Machine::muradin()),
             "piz-daint" | "pizdaint" | "piz_daint" => Some(Machine::piz_daint()),
             "fatnode" | "fat-node" | "fat_node" => Some(Machine::fatnode()),
+            "fatnode-straggler" | "fatnode_straggler" | "straggler" => {
+                Some(Machine::fatnode_straggler())
+            }
             _ => None,
         }
     }
@@ -505,6 +530,30 @@ mod tests {
     fn presets_resolve() {
         assert_eq!(Machine::by_name("muradin").unwrap().max_ranks, 8);
         assert_eq!(Machine::by_name("piz-daint").unwrap().max_ranks, 128);
+        assert_eq!(Machine::by_name("fatnode-straggler").unwrap().name, "fatnode-straggler");
         assert!(Machine::by_name("x").is_none());
+    }
+
+    #[test]
+    fn straggler_preset_flips_the_schedule_choice() {
+        // the straggler degrades only the intra-host links; the inter
+        // fabric is untouched, so the flat schedule's cost is unchanged
+        // while the hierarchical schedule's intra phases blow up —
+        // hierarchy wins on the datasheet fatnode and loses on the
+        // straggler, at the same 2x4 topology and message size
+        let m = Machine::fatnode();
+        let s = Machine::fatnode_straggler();
+        assert_eq!(s.alpha, m.alpha);
+        assert_eq!(s.beta, m.beta);
+        assert!(s.intra_alpha > m.intra_alpha && s.intra_beta > m.intra_beta);
+        for bytes in [1e5, 1e6, 8e6] {
+            assert_eq!(allgather_time(&s, 8, bytes), allgather_time(&m, 8, bytes));
+            let (flat, hier) =
+                (allgather_time(&m, 8, bytes), hierarchical_allgather_time(&m, 2, 4, bytes));
+            assert!(hier < flat, "fatnode {bytes}: {hier} !< {flat}");
+            let (flat, hier) =
+                (allgather_time(&s, 8, bytes), hierarchical_allgather_time(&s, 2, 4, bytes));
+            assert!(hier > flat, "straggler {bytes}: {hier} !> {flat}");
+        }
     }
 }

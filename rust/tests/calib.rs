@@ -1,0 +1,273 @@
+//! Calibration + live re-planning pins (DESIGN.md §Observability).
+//!
+//! Three facts keep `--recalib-every` honest, and each gets pinned
+//! here:
+//!
+//! 1. The straggler scenario is real: on the `fatnode` datasheet the
+//!    §5.5 picker chooses the hierarchical schedule at 2x4, and on
+//!    `fatnode-straggler` (one slow worker per node degrading every
+//!    intra-node collective) the same buckets flip to flat sparse — so
+//!    a static plan priced on the datasheet is provably wrong on the
+//!    degraded fabric.
+//! 2. The calibrator recovers: feeding it one recalibration window of
+//!    hierarchical observations synthesized from the straggler's
+//!    closed-form cost makes `replan` switch every bucket to the
+//!    algorithm the truth machine would have picked.
+//! 3. Switching live is safe: sparse and hierarchical deliver the same
+//!    gathered contributions in world-rank order, so a mid-run
+//!    `set_algos` flip leaves the final parameters bit-identical to a
+//!    run that used the target plan from step 0 — on both engines.
+
+use redsync::collectives::mux::TagMux;
+use redsync::collectives::{Algo, LocalFabric, Topology, Transport};
+use redsync::compression::{Accumulation, CompressorConfig, Method};
+use redsync::coordinator::metrics::param_hash;
+use redsync::costmodel::{self, BucketCost, PLAIN_WIRE_BYTES};
+use redsync::obs::Calibrator;
+use redsync::pipeline::{
+    build_buckets, BucketDone, LayerSpec, Pipelined, Sequential, SyncEngine, BUCKET_TAG_BASE,
+};
+use redsync::simnet::Machine;
+use redsync::util::rng::Pcg32;
+use redsync::util::timer::PhaseTimer;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+/// The ISSUE scenario's topology: 2 nodes x 4 ranks.
+const NODES: usize = 2;
+const RPN: usize = 4;
+const PLAN_DENSITY: f64 = 1e-3;
+
+fn cost_of(m_elems: f64) -> BucketCost {
+    BucketCost { m_elems, t_select: 0.0, wire_bytes: PLAIN_WIRE_BYTES }
+}
+
+#[test]
+fn straggler_preset_flips_the_static_plan() {
+    let healthy = Machine::fatnode();
+    let degraded = Machine::fatnode_straggler();
+    for m_elems in [1e6, 4e6, 16e6, 64e6] {
+        let cost = cost_of(m_elems);
+        let (h, _) = costmodel::pick_algo(&healthy, NODES, RPN, &cost, PLAN_DENSITY);
+        let (d, _) = costmodel::pick_algo(&degraded, NODES, RPN, &cost, PLAN_DENSITY);
+        assert_eq!(h, Algo::Hierarchical, "datasheet pick for {m_elems:e} elems");
+        assert_eq!(d, Algo::Sparse, "straggler pick for {m_elems:e} elems");
+    }
+}
+
+#[test]
+fn calibrated_replan_recovers_from_a_straggler_within_one_window() {
+    // one --recalib-every window of observations must be enough
+    const RECALIB_EVERY: usize = 16;
+    let datasheet = Machine::fatnode();
+    let truth = Machine::fatnode_straggler();
+    let costs = [cost_of(4e6), cost_of(16e6)];
+    // static plan on the datasheet: hierarchical everywhere (wrong on
+    // the degraded fabric, per the pin above)
+    let current: Vec<Algo> = costs
+        .iter()
+        .map(|c| costmodel::pick_algo(&datasheet, NODES, RPN, c, PLAN_DENSITY).0)
+        .collect();
+    assert_eq!(current, vec![Algo::Hierarchical; 2]);
+
+    let mut calib = Calibrator::new(datasheet, None, NODES, RPN, costs.len());
+    let cc = costmodel::comm_coeffs(Algo::Hierarchical, NODES, RPN);
+    for _ in 0..RECALIB_EVERY {
+        for (b, cost) in costs.iter().enumerate() {
+            // the packed blob: D·m index/value pairs, two words each
+            let words = (cost.m_elems * PLAN_DENSITY * 2.0) as usize;
+            let bytes = 4.0 * words as f64;
+            let secs = cc.inter_rounds * truth.alpha
+                + cc.inter_bytes * bytes * truth.beta
+                + cc.intra_rounds * truth.intra_alpha
+                + cc.intra_bytes * bytes * truth.intra_beta;
+            calib.observe_bucket(b, Algo::Hierarchical, words, secs);
+        }
+    }
+    let (next, switches) = calib.replan(&costs, PLAN_DENSITY, &current);
+    assert_eq!(next, vec![Algo::Sparse; 2], "calibrated picker must flip to flat sparse");
+    assert_eq!(switches, 2);
+    // the flip matches what pricing on the truth machine would pick,
+    // i.e. measured step time improves under the degraded fabric
+    for cost in &costs {
+        let (want, _) = costmodel::pick_algo(&truth, NODES, RPN, cost, PLAN_DENSITY);
+        assert_eq!(want, Algo::Sparse);
+    }
+    // the under-prediction that triggered the flip is on the ledger
+    let s = calib.summary();
+    assert_eq!(s.replans, 1);
+    assert_eq!(s.switches, 2);
+    assert!(s.error_ratio() > 1.5, "datasheet plan must under-predict: {}", s.error_ratio());
+}
+
+// ------------------------------------------------- live-switch identity
+
+/// Synthetic model shared with tests/pipeline.rs: greedy fusion (cap
+/// 3000) yields four buckets, singleton and fused paths both hit.
+const SIZES: &[usize] = &[2500, 600, 600, 600, 1800, 900, 400, 2200];
+const FUSION_CAP: usize = 3000;
+const WORLD: usize = 4;
+const STEPS: usize = 12;
+const SWITCH_AT: usize = 6;
+const DENSITY: f64 = 0.02;
+const LR: f32 = 0.05;
+
+fn specs() -> Vec<LayerSpec> {
+    SIZES
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| LayerSpec {
+            li: i,
+            n,
+            method: if n >= 1500 { Method::SampledBinarySearch } else { Method::TrimmedTopk },
+            quantize: i % 2 == 0,
+        })
+        .collect()
+}
+
+fn grad(rank: usize, step: usize, li: usize, n: usize) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(((rank as u64) << 32) ^ ((step as u64) << 8) ^ li as u64);
+    let mut g = vec![0f32; n];
+    rng.fill_normal(&mut g, 1.0);
+    g
+}
+
+fn cc() -> CompressorConfig {
+    CompressorConfig { density: DENSITY, ..Default::default() }
+}
+
+fn acc() -> Accumulation {
+    Accumulation::Momentum { momentum: 0.9 }
+}
+
+/// Run STEPS synthetic steps, applying `switch_to` at the SWITCH_AT
+/// step barrier when set — the worker's re-plan protocol in miniature.
+fn run_with_plan(
+    engine: &mut dyn SyncEngine,
+    rank: usize,
+    world: usize,
+    start: Algo,
+    switch_to: Option<Algo>,
+) -> u64 {
+    engine.set_algos(&vec![start; engine.n_buckets()]);
+    let mut params: Vec<Vec<f32>> = SIZES
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| {
+            let mut rng = Pcg32::seeded(0xBEEF ^ i as u64); // identical on every rank
+            let mut p = vec![0f32; n];
+            rng.fill_normal(&mut p, 0.5);
+            p
+        })
+        .collect();
+    let scale = -LR / world as f32;
+    let mut timer = PhaseTimer::new();
+    for step in 0..STEPS {
+        if step == SWITCH_AT {
+            if let Some(a) = switch_to {
+                engine.set_algos(&vec![a; engine.n_buckets()]);
+            }
+        }
+        let grads: Vec<Vec<f32>> =
+            SIZES.iter().enumerate().map(|(i, &n)| grad(rank, step, i, n)).collect();
+        engine
+            .sync_step(&grads, DENSITY, &mut timer, &mut |done: BucketDone| {
+                done.apply_to(&mut params, scale)
+            })
+            .unwrap_or_else(|e| panic!("rank {rank} step {step}: {e}"));
+    }
+    param_hash(&params)
+}
+
+/// One thread per rank, with a deadlock watchdog.
+fn run_ranks<T, F>(transports: Vec<T>, f: F) -> Vec<u64>
+where
+    T: Transport + Send + 'static,
+    F: Fn(T) -> u64 + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let (done_tx, done_rx) = channel();
+    let handles: Vec<_> = transports
+        .into_iter()
+        .map(|t| {
+            let f = Arc::clone(&f);
+            let done = done_tx.clone();
+            thread::spawn(move || {
+                let r = f(t);
+                let _ = done.send(());
+                r
+            })
+        })
+        .collect();
+    drop(done_tx);
+    for _ in 0..handles.len() {
+        done_rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("a rank did not finish within 120s (deadlock or crash)");
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+fn seq_hashes(start: Algo, switch_to: Option<Algo>) -> Vec<u64> {
+    let mut local = LocalFabric::new(WORLD);
+    run_ranks(local.take_all(), move |t| {
+        let topo = Topology::parse("2x2").unwrap();
+        let buckets = build_buckets(&specs(), FUSION_CAP, acc());
+        let mut engine = Sequential::with_topology(&t, topo, None, buckets, cc());
+        run_with_plan(&mut engine, t.rank(), t.world(), start, switch_to)
+    })
+}
+
+fn pipe_hashes(start: Algo, switch_to: Option<Algo>) -> Vec<u64> {
+    let mut local = LocalFabric::new(WORLD);
+    run_ranks(local.take_all(), move |t| {
+        let (rank, world) = (t.rank(), t.world());
+        let topo = Topology::parse("2x2").unwrap();
+        let buckets = build_buckets(&specs(), FUSION_CAP, acc());
+        let n = buckets.len() as u32;
+        let mux = Arc::new(TagMux::new(t, BUCKET_TAG_BASE + n));
+        let mut engine = Pipelined::with_topology(mux, topo, buckets, 2, cc());
+        run_with_plan(&mut engine, rank, world, start, switch_to)
+    })
+}
+
+fn all_equal(hashes: &[u64]) -> bool {
+    hashes.iter().all(|&h| h == hashes[0])
+}
+
+#[test]
+fn mid_run_switch_is_bit_identical_on_the_sequential_engine() {
+    let stat_sparse = seq_hashes(Algo::Sparse, None);
+    let stat_hier = seq_hashes(Algo::Hierarchical, None);
+    assert!(all_equal(&stat_sparse), "sparse replicas drifted: {stat_sparse:x?}");
+    assert!(all_equal(&stat_hier), "hierarchical replicas drifted: {stat_hier:x?}");
+    // the two schedules gather the same contributions in rank order
+    assert_eq!(stat_sparse[0], stat_hier[0], "schedules must agree bit-for-bit");
+
+    for (start, target) in [(Algo::Hierarchical, Algo::Sparse), (Algo::Sparse, Algo::Hierarchical)]
+    {
+        let switched = seq_hashes(start, Some(target));
+        assert!(all_equal(&switched), "switched replicas drifted: {switched:x?}");
+        assert_eq!(
+            switched[0], stat_sparse[0],
+            "mid-run {start:?}->{target:?} switch perturbed the parameters"
+        );
+    }
+}
+
+#[test]
+fn mid_run_switch_is_bit_identical_on_the_pipelined_engine() {
+    let stat_sparse = pipe_hashes(Algo::Sparse, None);
+    assert!(all_equal(&stat_sparse), "sparse replicas drifted: {stat_sparse:x?}");
+    // pipelined agrees with the sequential oracle on the same plan
+    assert_eq!(stat_sparse[0], seq_hashes(Algo::Sparse, None)[0], "engines diverged");
+
+    let switched = pipe_hashes(Algo::Hierarchical, Some(Algo::Sparse));
+    assert!(all_equal(&switched), "switched replicas drifted: {switched:x?}");
+    assert_eq!(
+        switched[0], stat_sparse[0],
+        "mid-run hierarchical->sparse switch perturbed the pipelined engine"
+    );
+}

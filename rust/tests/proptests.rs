@@ -465,6 +465,8 @@ fn prop_view_apply_matches_owned_decode_apply() {
             gathered: Gathered::from_parts(&gathered),
             selected: 0,
             elems: 0,
+            msg_words: 0,
+            comm_secs: 0.0,
         };
         let view_res = done.apply_to(&mut view_params, scale);
 
@@ -507,6 +509,80 @@ fn prop_crossover_density_is_a_boundary() {
                     || dc * 1.5 > 1.0,
                 "above crossover must lose",
             )?;
+        }
+        Ok(())
+    });
+}
+
+/// Step-latency histograms ride the obs gather as fixed-size frames;
+/// the wire form must round-trip every field exactly and reject any
+/// frame of the wrong length (the gather concatenates one frame per
+/// rank, so a length drift would desynchronize the whole decode).
+#[test]
+fn prop_step_hist_wire_roundtrip() {
+    use redsync::obs::Hist;
+    check(40, |g| {
+        let mut h = Hist::default();
+        let n_obs = g.size(0..200);
+        for _ in 0..n_obs {
+            // span the full bucket range, zeros and multi-second outliers
+            let bits = g.size(1..40);
+            h.observe(g.size(0..1usize << bits) as u64);
+        }
+        let rank = g.size(0..1024) as u32;
+        let w = h.encode(rank);
+        let (r2, h2) = Hist::decode(&w).map_err(|e| e.to_string())?;
+        ensure(r2 == rank, "rank must survive the wire")?;
+        ensure(h2.count == h.count, "count must survive the wire")?;
+        ensure(h2.sum_us == h.sum_us, "sum must survive the wire")?;
+        ensure(h2.buckets == h.buckets, "buckets must survive the wire")?;
+        // exact-length contract: anything shorter or longer is rejected
+        let cut = g.size(0..w.len());
+        ensure(Hist::decode(&w[..cut]).is_err(), "truncated frame accepted")?;
+        let mut long = w.clone();
+        long.push(0);
+        ensure(Hist::decode(&long).is_err(), "oversized frame accepted")?;
+        Ok(())
+    });
+}
+
+/// Cross-rank aggregation is a fold over a commutative monoid: the
+/// cluster stats must not depend on gather arrival order, and merging
+/// histograms in any grouping must give the same totals.
+#[test]
+fn prop_step_hist_aggregation_is_order_free() {
+    use redsync::obs::{aggregate_step_hists, Hist};
+    check(30, |g| {
+        let world = g.size(1..9);
+        let mut hists: Vec<(u32, Hist)> = (0..world as u32)
+            .map(|rank| {
+                let mut h = Hist::default();
+                for _ in 0..g.size(0..60) {
+                    h.observe(g.size(0..2_000_000) as u64);
+                }
+                (rank, h)
+            })
+            .collect();
+        let base = aggregate_step_hists(&hists);
+        // commutativity: any permutation of the gathered frames agrees
+        g.rng().shuffle(&mut hists);
+        let perm = aggregate_step_hists(&hists);
+        ensure(perm.step_p50_us == base.step_p50_us, "p50 depends on order")?;
+        ensure(perm.step_p99_us == base.step_p99_us, "p99 depends on order")?;
+        ensure(perm.rank_skew == base.rank_skew, "skew depends on order")?;
+        // associativity: ((a ∪ b) ∪ c) == (a ∪ (b ∪ c)) for the merge
+        if world >= 3 {
+            let (a, b, c) = (&hists[0].1, &hists[1].1, &hists[2].1);
+            let mut left = a.clone();
+            left.merge(b);
+            left.merge(c);
+            let mut bc = b.clone();
+            bc.merge(c);
+            let mut right = a.clone();
+            right.merge(&bc);
+            ensure(left.count == right.count, "merge count not associative")?;
+            ensure(left.sum_us == right.sum_us, "merge sum not associative")?;
+            ensure(left.buckets == right.buckets, "merge buckets not associative")?;
         }
         Ok(())
     });
